@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the BLIS substrate: GEMM vs the naive triple
+//! loop, TRSM, LASWP and packing — the §Perf baseline numbers
+//! (EXPERIMENTS.md).
+
+use malleable_lu::blis::pack::{pack_a, pack_b, PackedA, PackedB};
+use malleable_lu::blis::{gemm, laswp, trsm_llu, BlisParams};
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::Crew;
+use malleable_lu::util::stats::bench_seconds;
+use malleable_lu::util::{gemm_flops, gflops, trsm_flops};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 256 } else { 512 };
+    let params = BlisParams::default();
+    let mut crew = Crew::new();
+
+    // GEMM: blocked vs naive.
+    let a = Matrix::random(n, n, 1);
+    let b = Matrix::random(n, n, 2);
+    let mut c = Matrix::zeros(n, n);
+    let st = bench_seconds(1, 3, || {
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+    });
+    let blis_g = gflops(gemm_flops(n, n, n), st.median);
+    let mut c2 = Matrix::zeros(n, n);
+    let st_naive = bench_seconds(0, 1, || {
+        naive::gemm(1.0, a.view(), b.view(), c2.view_mut());
+    });
+    let naive_g = gflops(gemm_flops(n, n, n), st_naive.median);
+    println!("gemm {n}^3: blis {blis_g:.2} GFLOPS vs naive {naive_g:.2} GFLOPS ({:.1}x)", blis_g / naive_g);
+
+    // GEPP shape (k = 128).
+    let k = 128;
+    let a = Matrix::random(n, k, 3);
+    let b = Matrix::random(k, n, 4);
+    let mut c = Matrix::zeros(n, n);
+    let st = bench_seconds(1, 3, || {
+        gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
+    });
+    println!(
+        "gepp {n}x{n}x{k}: {:.2} GFLOPS",
+        gflops(gemm_flops(n, n, k), st.median)
+    );
+
+    // TRSM.
+    let l = Matrix::random(n, n, 5);
+    let mut x = Matrix::random(n, n, 6);
+    let st = bench_seconds(1, 3, || {
+        trsm_llu(&mut crew, &params, l.view(), x.view_mut());
+    });
+    println!(
+        "trsm {n}x{n}: {:.2} GFLOPS",
+        gflops(trsm_flops(n, n), st.median)
+    );
+
+    // LASWP bandwidth.
+    let mut m = Matrix::random(n, n, 7);
+    let ipiv: Vec<usize> = (0..n / 2).map(|i| n / 2 + i).collect();
+    let st = bench_seconds(1, 5, || {
+        laswp(&mut crew, m.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
+    });
+    let bytes = (ipiv.len() * n * 32) as f64;
+    println!(
+        "laswp {}swaps x {n}cols: {:.2} GB/s",
+        ipiv.len(),
+        bytes / st.median / 1e9
+    );
+
+    // Packing rates.
+    let src = Matrix::random(params.mc, params.kc, 8);
+    let mut pa = PackedA::with_capacity(params.mc, params.kc);
+    let st = bench_seconds(2, 5, || {
+        pack_a(&mut crew, src.view(), &mut pa);
+    });
+    println!(
+        "pack_a {}x{}: {:.2} GB/s",
+        params.mc,
+        params.kc,
+        (params.mc * params.kc * 16) as f64 / st.median / 1e9
+    );
+    let srcb = Matrix::random(params.kc, 1024, 9);
+    let mut pb = PackedB::with_capacity(params.kc, 1024);
+    let st = bench_seconds(2, 5, || {
+        pack_b(&mut crew, srcb.view(), &mut pb);
+    });
+    println!(
+        "pack_b {}x1024: {:.2} GB/s",
+        params.kc,
+        (params.kc * 1024 * 16) as f64 / st.median / 1e9
+    );
+
+    assert!(blis_g > naive_g, "blocked GEMM must beat the naive loop");
+}

@@ -1,0 +1,49 @@
+//! Fig. 16 — GFLOPS of LU / LU_LA / LU_MB / LU_ET at fixed `b_o`.
+//!
+//! Real-mode wall-clock on this host (scaled problem sizes; threads
+//! oversubscribe the single container core, so the *simulated* Fig. 16
+//! from `mlu fig 16` carries the performance claim — this bench proves
+//! the real implementations run end-to-end and reports their wall time
+//! and scheduling statistics side by side).
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::lu::{factorize, residual, LuConfig, Variant};
+use malleable_lu::matrix::Matrix;
+use malleable_lu::util::{gflops, lu_flops, timed};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ns: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024] };
+    let bo = 128;
+    let variants = [
+        Variant::BlockedRl,
+        Variant::LookAhead,
+        Variant::Malleable,
+        Variant::EarlyTerm,
+    ];
+    println!("# Fig16 (real mode, bo={bo}, t=2 on 1-core host)");
+    println!("n,variant,secs,gflops,et_cuts,residual");
+    for &n in ns {
+        let a0 = Matrix::random(n, n, n as u64);
+        for v in variants {
+            let cfg = LuConfig {
+                variant: v,
+                bo,
+                bi: 32,
+                threads: 2,
+                params: BlisParams::default(),
+                ..Default::default()
+            };
+            let mut f = a0.clone();
+            let (secs, out) = timed(|| factorize(&mut f, &cfg, None));
+            let r = residual(&a0, &f, &out.ipiv);
+            let cuts = out.la_stats.as_ref().map(|s| s.et_cuts).unwrap_or(0);
+            println!(
+                "{n},{},{secs:.3},{:.2},{cuts},{r:.2e}",
+                v.name(),
+                gflops(lu_flops(n, n), secs)
+            );
+            assert!(r < 1e-11, "{} residual {r}", v.name());
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Crew dispatch overhead: the cost of publishing a job, the per-chunk
+//! atomics, and the enlist→first-contribution latency (DESIGN.md §9
+//! targets: publication < 5 µs).
+
+use malleable_lu::pool::{Crew, EntryPolicy, Pool};
+use malleable_lu::util::stats::bench_seconds;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn main() {
+    // Leader-only job publication cost.
+    let mut crew = Crew::new();
+    let sink = AtomicUsize::new(0);
+    let st = bench_seconds(100, 10_000, || {
+        crew.parallel(1, |_| {
+            sink.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    println!("publish+run 1 chunk (leader only): {:.2} µs", st.median * 1e6);
+
+    // Per-chunk cost at higher chunk counts.
+    let st64 = bench_seconds(10, 1_000, || {
+        crew.parallel(64, |_| {
+            sink.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    println!(
+        "64-chunk job: {:.2} µs total, {:.3} µs/chunk",
+        st64.median * 1e6,
+        st64.median * 1e6 / 64.0
+    );
+
+    // Enlist latency: publish jobs until a freshly submitted member
+    // executes its first chunk.
+    let pool = Pool::new(1);
+    let mut crew2 = Crew::new();
+    let mut joins = Vec::new();
+    for _ in 0..50 {
+        let shared = crew2.shared();
+        let t0 = std::time::Instant::now();
+        let h = pool.submit(0, move || shared.member_loop(EntryPolicy::Immediate));
+        // Spin jobs until the member contributes.
+        let hit = Arc::new(AtomicUsize::new(0));
+        while crew2.members() == 0 {
+            let hit2 = Arc::clone(&hit);
+            crew2.parallel(4, move |_| {
+                hit2.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        joins.push(t0.elapsed().as_secs_f64());
+        crew2.disband();
+        h.wait();
+        crew2 = Crew::new();
+    }
+    let st = malleable_lu::util::Stats::of(&joins);
+    println!("enlist→active latency: median {:.1} µs (min {:.1} µs)", st.median * 1e6, st.min * 1e6);
+
+    // Throughput sanity: dispatch must be far cheaper than a macro-kernel
+    // job (~100 µs at paper scale).
+    assert!(st64.median / 64.0 < 50e-6, "chunk overhead too high");
+    println!("pool bench OK");
+}

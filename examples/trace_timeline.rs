@@ -1,0 +1,74 @@
+//! Regenerate the paper's trace figures (Figs. 5, 8, 9, 11) as ASCII
+//! Gantt timelines on the simulated 6-core testbed, plus a real-mode
+//! logical trace of a small factorization on this host.
+//!
+//! ```bash
+//! cargo run --release --example trace_timeline
+//! ```
+
+use malleable_lu::sim::{simulate, HwModel, SimVariant};
+use malleable_lu::trace;
+
+fn show(title: &str, v: SimVariant, n: usize) {
+    let hw = HwModel::default();
+    let out = simulate(&hw, v, n, 256, 32, 6, 1, true);
+    println!("\n=== {title} ===");
+    println!(
+        "[sim 6-core Xeon] {} n={n} b_o=256 b_i=32: {:.3}s virtual, {:.1} GFLOPS",
+        v.name(),
+        out.time,
+        out.gflops
+    );
+    // Show roughly the first four iterations like the paper's figures:
+    // clip spans to the leading ~20% of the timeline.
+    let clip = out.time * 0.2;
+    let head: Vec<_> = out
+        .spans
+        .iter()
+        .filter(|s| s.t0 < clip)
+        .cloned()
+        .map(|mut s| {
+            s.t1 = s.t1.min(clip);
+            s
+        })
+        .collect();
+    print!("{}", trace::ascii_gantt(&head, 110));
+}
+
+fn main() {
+    // Fig. 5 — plain blocked RL LU: the PANEL (P) dominates lane 0 while
+    // the other lanes idle.
+    show("Fig. 5: LU (BDP only), n=10000", SimVariant::Lu, 10_000);
+
+    // Fig. 8 — look-ahead, large n: T_PF (lane 0) finishes early and
+    // idles ('.') — the waste WS will reclaim.
+    show("Fig. 8: LU_LA, n=10000 (panel cheaper)", SimVariant::La, 10_000);
+
+    // Fig. 9 — look-ahead, small n: T_PF dominates, the RU lanes idle.
+    show("Fig. 9: LU_LA, n=2000 (panel dominates)", SimVariant::La, 2_000);
+
+    // Fig. 11 — malleable BLIS: after PF3 the panel thread joins RU2's
+    // GEMM (lane 0 shows G where Fig. 8 showed '.').
+    show("Fig. 11: LU_MB, n=10000 (worker sharing)", SimVariant::Mb, 10_000);
+
+    // Real-mode logical trace (1-core host: overlap is logical, not
+    // physical — see DESIGN.md §3).
+    println!("\n=== real-mode logical trace: LU_MB, n=512, 3 threads ===");
+    let rec = trace::start();
+    let mut a = malleable_lu::matrix::Matrix::random(512, 512, 9);
+    let cfg = malleable_lu::lu::LuConfig {
+        variant: malleable_lu::lu::Variant::Malleable,
+        bo: 128,
+        bi: 32,
+        threads: 3,
+        ..Default::default()
+    };
+    let out = malleable_lu::lu::factorize(&mut a, &cfg, None);
+    trace::stop();
+    print!("{}", trace::ascii_gantt(&rec.spans(), 110));
+    let stats = out.la_stats.unwrap();
+    println!(
+        "iters={} ws_forward={} (worker 0 enlisting into the RU crew)",
+        stats.iters, stats.ws_forward
+    );
+}

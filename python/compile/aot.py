@@ -1,0 +1,172 @@
+"""AOT pipeline: lower the L2/L1 computations to HLO **text** and write
+``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (shapes fixed at export; the Rust runtime picks by name):
+- ``gepp_{m}x{n}x{k}``     : (C, A, B) -> (C - A@B,)           [Pallas L1]
+- ``panel_{m}x{b}``        : (P,)      -> (LU_panel, piv_i32)
+- ``trsm_{b}x{n}``         : (A11, A12)-> (TRILU(A11)^-1 A12,)
+- ``laswp_{m}x{n}x{b}``    : (X, piv)  -> (P X,)
+- ``lu_{n}x{b}``           : (A,)      -> (LU, piv_i32)        [full model]
+
+Default shape set serves the ``LU_XLA`` demo at n=512, b_o=128, plus a
+small n=192/b=64 set for fast integration tests.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs(n: int, b: int):
+    """The artifact set for one (n, b_o) factorization configuration."""
+    specs = []
+    # Full-model artifact.
+    specs.append(
+        dict(
+            name=f"lu_{n}x{b}",
+            kind="lu",
+            fn=functools.partial(model.lu_blocked, bo=b),
+            args=[f64(n, n)],
+            outputs=["lu_f64", "piv_i32"],
+        )
+    )
+    # Per-step artifacts for the iteration-driven LU_XLA loop.
+    k = 0
+    seen = set()
+    while k < n:
+        bb = min(b, n - k)
+        m_panel = n - k
+        if ("panel", m_panel, bb) not in seen:
+            seen.add(("panel", m_panel, bb))
+            specs.append(
+                dict(
+                    name=f"panel_{m_panel}x{bb}",
+                    kind="panel",
+                    fn=model.panel_factor,
+                    args=[f64(m_panel, bb)],
+                    outputs=["lu_f64", "piv_i32"],
+                )
+            )
+        rest = n - k - bb
+        if rest + k > 0 and ("laswp", m_panel, rest + k, bb) not in seen:
+            seen.add(("laswp", m_panel, rest + k, bb))
+            specs.append(
+                dict(
+                    name=f"laswp_{m_panel}x{rest + k}x{bb}",
+                    kind="laswp",
+                    fn=model.apply_pivots,
+                    args=[f64(m_panel, rest + k), i32(bb)],
+                    outputs=["x_f64"],
+                )
+            )
+        if rest > 0:
+            if ("trsm", bb, rest) not in seen:
+                seen.add(("trsm", bb, rest))
+                specs.append(
+                    dict(
+                        name=f"trsm_{bb}x{rest}",
+                        kind="trsm",
+                        fn=model.trsm_llu,
+                        args=[f64(bb, bb), f64(bb, rest)],
+                        outputs=["x_f64"],
+                    )
+                )
+            mm = n - k - bb
+            if ("gepp", mm, rest, bb) not in seen:
+                seen.add(("gepp", mm, rest, bb))
+                specs.append(
+                    dict(
+                        name=f"gepp_{mm}x{rest}x{bb}",
+                        kind="gepp",
+                        fn=model.gepp,
+                        args=[f64(mm, rest), f64(mm, bb), f64(bb, rest)],
+                        outputs=["c_f64"],
+                    )
+                )
+        k += bb
+    return specs
+
+
+def export(out_dir: str, configs):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "dtype": "f64", "artifacts": []}
+    done = set()
+    for n, b in configs:
+        for spec in artifact_specs(n, b):
+            if spec["name"] in done:
+                continue
+            done.add(spec["name"])
+            lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+            text = to_hlo_text(lowered)
+            path = f"{spec['name']}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": spec["name"],
+                    "kind": spec["kind"],
+                    "file": path,
+                    "inputs": [
+                        {"shape": list(a.shape), "dtype": a.dtype.name}
+                        for a in spec["args"]
+                    ],
+                    "outputs": spec["outputs"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="192:64,512:128",
+        help="comma-separated n:b pairs to export",
+    )
+    args = ap.parse_args()
+    configs = []
+    for part in args.configs.split(","):
+        n, b = part.split(":")
+        configs.append((int(n), int(b)))
+    export(args.out_dir, configs)
+
+
+if __name__ == "__main__":
+    main()

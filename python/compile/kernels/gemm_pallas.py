@@ -1,0 +1,108 @@
+"""L1 — the Pallas GEPP kernel: the paper's compute hot spot.
+
+The trailing update ``C += alpha * A @ B`` (RL3/RU2, with ``k = b_o``)
+expressed as a tiled Pallas kernel:
+
+- the grid is ``(m/bm, n/bn, k/bk)`` with ``k`` innermost, so each
+  ``(i, j)`` output tile stays resident while the ``k`` axis streams
+  through — the HBM<->VMEM schedule mirrors what BLIS does with the
+  packed ``A_c``/``B_c`` cache buffers (DESIGN.md §Hardware-Adaptation);
+- each grid step multiplies a ``(bm, bk)`` by a ``(bk, bn)`` tile —
+  on a real TPU this feeds the MXU; under ``interpret=True`` (mandatory
+  for CPU-PJRT execution, see /opt/xla-example/README.md) it executes
+  with jnp semantics and bit-matching numerics.
+
+VMEM footprint per step = (bm*bk + bk*bn + 2*bm*bn) * 8 bytes
+(f64; the default 128x128x128 tiles use 512 KiB -- comfortably under a
+TPU core's ~16 MiB VMEM, leaving room for double-buffering).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _gepp_kernel(alpha, c_in_ref, a_ref, b_ref, o_ref):
+    """One grid step: o[i,j] (+)= alpha * a[i,k] @ b[k,j]."""
+    # First k-step seeds the output tile with C's original values.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_in_ref[...]
+
+    o_ref[...] += alpha * jnp.dot(a_ref[...], b_ref[...])
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "bm", "bn", "bk", "interpret")
+)
+def gepp_update(
+    c,
+    a,
+    b,
+    *,
+    alpha=-1.0,
+    bm=DEFAULT_BM,
+    bn=DEFAULT_BN,
+    bk=DEFAULT_BK,
+    interpret=True,
+):
+    """``C + alpha * A @ B`` with ``C: (m,n)``, ``A: (m,k)``, ``B: (k,n)``.
+
+    Shapes need not divide the tile sizes: operands are zero-padded to
+    tile multiples (exact for a linear update) and the result sliced back.
+    """
+    m, n = c.shape
+    k = a.shape[1]
+    assert a.shape[0] == m and b.shape == (k, n), (c.shape, a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    mp = -(-m // bm_) * bm_
+    np_ = -(-n // bn_) * bn_
+    kp = -(-k // bk_) * bk_
+    cp = _pad_to(c, mp, np_)
+    ap = _pad_to(a, mp, kp)
+    bp = _pad_to(b, kp, np_)
+
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_gepp_kernel, alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),  # C (seed)
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),  # A
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),  # B
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), c.dtype),
+        interpret=interpret,
+    )(cp, ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, itemsize=8):
+    """Estimated VMEM working set of one grid step (C-in, A, B, O tiles)."""
+    return (bm * bk + bk * bn + 2 * bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Fraction of MXU-shaped work per step: tiles that are multiples of
+    the 128x128 systolic array run at full occupancy."""
+    eff = 1.0
+    for d in (bm, bn, bk):
+        eff *= min(d, 128) / 128.0 if d < 128 else 1.0
+    return eff

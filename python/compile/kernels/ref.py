@@ -1,0 +1,95 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+These are the build-time analogue of ``rust/src/matrix/naive.rs``: simple,
+auditable definitions that the Pallas kernels and the AOT-exported HLO are
+validated against (pytest + hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gemm_ref(c, a, b, alpha=1.0):
+    """``C + alpha * A @ B`` — the GEPP-shaped trailing update (RU2/RL3)."""
+    return c + alpha * (a @ b)
+
+
+def trsm_llu_ref(a, b):
+    """``TRILU(A)^{-1} @ B``: left solve with the *unit* lower triangle of
+    ``A`` (strictly-lower entries used, diagonal treated as 1)."""
+    l = jnp.tril(a, k=-1) + jnp.eye(a.shape[0], dtype=a.dtype)
+    return jax.scipy.linalg.solve_triangular(l, b, lower=True, unit_diagonal=True)
+
+
+def lu_panel_ref(a):
+    """Unblocked right-looking LU with partial pivoting of an ``m x n``
+    panel. Returns ``(LU_packed, piv)`` with ``piv`` in LAPACK convention
+    (row ``k`` swapped with ``piv[k] >= k``). Mirrors
+    ``rust/src/lu/unblocked.rs`` (reciprocal-multiply scaling)."""
+    m, n = a.shape
+    kmax = min(m, n)
+    a = jnp.asarray(a)
+    piv = []
+    for k in range(kmax):
+        p = k + jnp.argmax(jnp.abs(a[k:, k]))
+        piv.append(p)
+        a = a.at[[k, p], :].set(a[[p, k], :])
+        akk = a[k, k]
+        scale = jnp.where(akk != 0.0, 1.0 / akk, 0.0)
+        a = a.at[k + 1 :, k].multiply(scale)
+        a = a.at[k + 1 :, k + 1 :].add(-jnp.outer(a[k + 1 :, k], a[k, k + 1 :]))
+    return a, jnp.array(piv, dtype=jnp.int32)
+
+
+def apply_pivots_ref(b, piv):
+    """Apply LAPACK-style pivots to the rows of ``b``."""
+    b = jnp.asarray(b)
+    for k in range(piv.shape[0]):
+        p = int(piv[k])
+        b = b.at[[k, p], :].set(b[[p, k], :])
+    return b
+
+
+def lu_blocked_ref(a, bo):
+    """Blocked right-looking LU with partial pivoting (paper Fig. 3 right)
+    — the oracle for the L2 model. Returns ``(LU_packed, piv_absolute)``."""
+    a = jnp.asarray(a)
+    m, n = a.shape
+    kmax = min(m, n)
+    pivs = []
+    k = 0
+    while k < kmax:
+        b = min(bo, kmax - k)
+        panel, piv = lu_panel_ref(a[k:, k : k + b])
+        a = a.at[k:, k : k + b].set(panel)
+        piv = piv + k
+        pivs.append(piv)
+        # Apply interchanges to the left and right of the panel.
+        for i in range(b):
+            p = int(piv[i])
+            r = k + i
+            if p != r:
+                left = a[:, :k]
+                right = a[:, k + b :]
+                left = left.at[[r, p], :].set(left[[p, r], :])
+                right = right.at[[r, p], :].set(right[[p, r], :])
+                a = a.at[:, :k].set(left).at[:, k + b :].set(right)
+        if k + b < n:
+            a12 = trsm_llu_ref(a[k : k + b, k : k + b], a[k : k + b, k + b :])
+            a = a.at[k : k + b, k + b :].set(a12)
+            if k + b < m:
+                a = a.at[k + b :, k + b :].add(-a[k + b :, k : k + b] @ a12)
+        k += b
+    return a, jnp.concatenate(pivs) if pivs else jnp.zeros((0,), jnp.int32)
+
+
+def lu_residual_ref(a0, lu_packed, piv):
+    """Relative residual ||P A - L U||_F / ||A||_F."""
+    m, n = a0.shape
+    kk = min(m, n)
+    l = jnp.tril(lu_packed[:, :kk], k=-1) + jnp.eye(m, kk, dtype=a0.dtype)
+    u = jnp.triu(lu_packed[:kk, :])
+    pa = apply_pivots_ref(a0, piv)
+    return jnp.linalg.norm(pa - l @ u) / jnp.linalg.norm(a0)

@@ -1,0 +1,142 @@
+"""L2 — the JAX compute graph of the blocked LU factorization.
+
+The building blocks of the paper's Fig. 3 (right), written as traceable
+JAX functions over fixed shapes so they AOT-export to single HLO modules:
+
+- :func:`panel_factor` — unblocked RL panel LU with partial pivoting
+  (``lax.fori_loop``; pivot search/swap/scale/rank-1 per column);
+- :func:`apply_pivots` — LAPACK-style row interchanges;
+- :func:`lu_step_update` — swaps + TRSM + the **Pallas** GEPP update of
+  the trailing submatrix (this is where L1 enters the graph);
+- :func:`lu_blocked` — the full factorization (panel loop unrolled at
+  trace time — shapes are static per artifact).
+
+These are the computations the Rust runtime loads as the "rigid vendor
+library" baseline ``LU_XLA`` (DESIGN.md §2): shape-specialized, compiled,
+and **non-malleable**, exactly the kind of black box the paper argues
+malleable libraries should replace.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm_pallas import gepp_update
+
+jax.config.update("jax_enable_x64", True)
+
+
+def panel_factor(a):
+    """Unblocked right-looking LU with partial pivoting of an ``(m, b)``
+    panel. Returns ``(LU_packed, piv)``, ``piv`` int32 LAPACK-style."""
+    m, b = a.shape
+    kmax = min(m, b)
+    rows = jnp.arange(m)
+    cols = jnp.arange(b)
+
+    def body(k, carry):
+        a, piv = carry
+        colk = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)[:, 0]
+        masked = jnp.where(rows >= k, jnp.abs(colk), -jnp.inf)
+        p = jnp.argmax(masked).astype(jnp.int32)
+        piv = piv.at[k].set(p)
+        # Swap rows k and p (gathers happen before either scatter).
+        rk = a[k, :]
+        rp = a[p, :]
+        a = a.at[k, :].set(rp).at[p, :].set(rk)
+        akk = a[k, k]
+        scale = jnp.where(akk != 0.0, 1.0 / akk, 0.0)
+        colk = a[:, k]
+        colk = jnp.where(rows > k, colk * scale, colk)
+        a = a.at[:, k].set(colk)
+        # Rank-1 update of the strictly-trailing block.
+        x = jnp.where(rows > k, a[:, k], 0.0)
+        y = jnp.where(cols > k, a[k, :], 0.0)
+        a = a - jnp.outer(x, y)
+        return a, piv
+
+    piv0 = jnp.zeros((kmax,), jnp.int32)
+    a, piv = jax.lax.fori_loop(0, kmax, body, (a, piv0))
+    return a, piv
+
+
+def apply_pivots(b, piv):
+    """Row interchanges ``b[k] <-> b[piv[k]]`` in order (LASWP)."""
+
+    def body(k, b):
+        p = piv[k]
+        rk = b[k, :]
+        rp = b[p, :]
+        return b.at[k, :].set(rp).at[p, :].set(rk)
+
+    return jax.lax.fori_loop(0, piv.shape[0], body, b)
+
+
+def trsm_llu(a11, a12):
+    """``TRILU(a11)^{-1} @ a12`` (RL2) — forward substitution in pure jnp.
+
+    Deliberately NOT ``jax.scipy.linalg.solve_triangular``: on CPU that
+    lowers to a LAPACK custom-call with API_VERSION_TYPED_FFI, which the
+    runtime's xla_extension 0.5.1 rejects. Row ``i`` of the solution only
+    reads already-final rows ``< i`` (strict lower triangle), so a
+    ``fori_loop`` of mat-vecs is exact."""
+    l_strict = jnp.tril(a11, k=-1)
+
+    def body(i, x):
+        return x.at[i, :].add(-(l_strict[i, :] @ x))
+
+    return jax.lax.fori_loop(0, a11.shape[0], body, a12)
+
+
+def lu_step_update(a11, rest, piv, *, interpret=True):
+    """Everything the trailing matrix needs from one factored panel:
+    ``rest`` is the ``(m, n_rest)`` block right of the panel (rows aligned
+    with the panel top); applies the panel's swaps, the TRSM on the top
+    ``b`` rows, and the Pallas GEPP update below. Returns updated
+    ``rest``."""
+    b = a11.shape[0]
+    rest = apply_pivots(rest, piv)
+    top = trsm_llu(a11, rest[:b, :])
+    return rest.at[:b, :].set(top), top
+
+
+def gepp(c, a, b, *, interpret=True):
+    """Exported alias of the L1 kernel: ``C - A @ B``."""
+    return gepp_update(c, a, b, alpha=-1.0, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "interpret"))
+def lu_blocked(a, *, bo, interpret=True):
+    """Blocked right-looking LU with partial pivoting of a square matrix
+    (paper Fig. 3 right). The panel loop is unrolled at trace time; the
+    trailing update is the Pallas kernel. Returns ``(LU, piv)``."""
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    pivs = []
+    k = 0
+    while k < n:
+        b = min(bo, n - k)
+        panel, piv = panel_factor(a[k:, k : k + b])
+        a = a.at[k:, k : k + b].set(panel)
+        # Interchanges left and right of the panel (absolute row base k).
+        left_right = jnp.concatenate([a[k:, :k], a[k:, k + b :]], axis=1)
+        left_right = apply_pivots(left_right, piv)
+        a = a.at[k:, :k].set(left_right[:, :k])
+        a = a.at[k:, k + b :].set(left_right[:, k:])
+        pivs.append(piv + k)
+        rest = n - k - b
+        if rest > 0:
+            a12 = trsm_llu(a[k : k + b, k : k + b], a[k : k + b, k + b :])
+            a = a.at[k : k + b, k + b :].set(a12)
+            c = gepp_update(
+                a[k + b :, k + b :],
+                a[k + b :, k : k + b],
+                a12,
+                alpha=-1.0,
+                interpret=interpret,
+            )
+            a = a.at[k + b :, k + b :].set(c)
+        k += b
+    piv = jnp.concatenate(pivs) if pivs else jnp.zeros((0,), jnp.int32)
+    return a, piv

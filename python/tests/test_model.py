@@ -1,0 +1,141 @@
+"""L2 correctness: panel factorization, pivot application, TRSM and the
+full blocked LU graph vs the jnp oracles and scipy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(n, m=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(size=(n, m or n)))
+
+
+# ---------- panel_factor ----------
+
+def test_panel_factor_matches_ref():
+    a = rand(24, 8, seed=1)
+    lu, piv = model.panel_factor(a)
+    lu_r, piv_r = ref.lu_panel_ref(a)
+    np.testing.assert_array_equal(np.asarray(piv), np.asarray(piv_r))
+    np.testing.assert_allclose(np.asarray(lu), np.asarray(lu_r), atol=1e-13)
+
+
+def test_panel_factor_matches_scipy_pivots():
+    a = rand(16, 16, seed=2)
+    _, piv = model.panel_factor(a)
+    _, piv_s = scipy.linalg.lu_factor(np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(piv), piv_s)
+
+
+def test_panel_residual():
+    a = rand(40, 16, seed=3)
+    lu, piv = model.panel_factor(a)
+    r = ref.lu_residual_ref(a, lu, piv)
+    assert float(r) < 1e-13
+
+
+def test_panel_growth_bounded():
+    a = rand(32, 12, seed=4)
+    lu, _ = model.panel_factor(a)
+    l_strict = np.tril(np.asarray(lu)[:, :12], k=-1)
+    assert np.abs(l_strict).max() <= 1.0 + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    bw=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_panel(m, bw, seed):
+    b = min(bw, m)
+    a = rand(m, b, seed=seed)
+    lu, piv = model.panel_factor(a)
+    r = ref.lu_residual_ref(a, lu, piv)
+    assert float(r) < 1e-12
+    piv_np = np.asarray(piv)
+    assert (piv_np >= np.arange(len(piv_np))).all()
+
+
+# ---------- apply_pivots / trsm ----------
+
+def test_apply_pivots_matches_ref():
+    a = rand(10, 6, seed=5)
+    piv = jnp.asarray([3, 1, 9, 3], dtype=jnp.int32)
+    got = model.apply_pivots(a, piv)
+    want = ref.apply_pivots_ref(a, piv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_trsm_llu_solves():
+    a11 = rand(12, 12, seed=6)
+    x0 = rand(12, 5, seed=7)
+    l = jnp.tril(a11, k=-1) + jnp.eye(12)
+    b = l @ x0
+    got = model.trsm_llu(a11, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x0), atol=1e-12)
+
+
+# ---------- full blocked LU ----------
+
+def test_lu_blocked_matches_scipy():
+    n, bo = 96, 32
+    a = rand(n, seed=8)
+    lu, piv = model.lu_blocked(a, bo=bo)
+    lu_s, piv_s = scipy.linalg.lu_factor(np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(piv), piv_s)
+    np.testing.assert_allclose(np.asarray(lu), lu_s, atol=1e-11)
+
+
+def test_lu_blocked_residual_various_blocks():
+    n = 64
+    a = rand(n, seed=9)
+    for bo in (8, 16, 64, 100):
+        lu, piv = model.lu_blocked(a, bo=bo)
+        r = ref.lu_residual_ref(a, lu, piv)
+        assert float(r) < 1e-12, f"bo={bo}: {r}"
+
+
+def test_lu_blocked_matches_blocked_ref():
+    n, bo = 48, 16
+    a = rand(n, seed=10)
+    lu, piv = model.lu_blocked(a, bo=bo)
+    lu_r, piv_r = ref.lu_blocked_ref(a, bo)
+    np.testing.assert_array_equal(np.asarray(piv), np.asarray(piv_r))
+    np.testing.assert_allclose(np.asarray(lu), np.asarray(lu_r), atol=1e-12)
+
+
+def test_lu_step_update_consistency():
+    # One manual outer iteration == the blocked reference's first step.
+    n, b = 40, 8
+    a = rand(n, seed=11)
+    panel, piv = model.panel_factor(a[:, :b])
+    rest, _top = model.lu_step_update(panel[:b, :b], a[:, b:], piv)
+    c = model.gepp(rest[b:, :], panel[b:, :b], rest[:b, :])
+    # Compare against the oracle's state after its first iteration.
+    lu_r, piv_r = ref.lu_blocked_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(piv), np.asarray(piv_r[:b]))
+    np.testing.assert_allclose(
+        np.asarray(rest[:b, :]), np.asarray(lu_r[:b, b:]), atol=1e-12
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(4, 72),
+    bo=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_lu_blocked(n, bo, seed):
+    a = rand(n, seed=seed)
+    lu, piv = model.lu_blocked(a, bo=bo)
+    r = ref.lu_residual_ref(a, lu, piv)
+    assert float(r) < 1e-11

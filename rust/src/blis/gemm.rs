@@ -1,0 +1,282 @@
+//! The malleable five-loop GEMM (paper Figs. 1, 2 and 10).
+//!
+//! `C += alpha · A · B`, blocked exactly as BLIS does, executed by a
+//! [`Crew`]. Every Loop-3 iteration publishes two crew jobs — "pack
+//! `A_c`" and "run the macro-kernel" — so the team roster is effectively
+//! re-read at each `i_c` boundary: this is where threads freed from the
+//! panel factorization merge into an in-flight update (Worker Sharing).
+//!
+//! Within a macro-kernel job, one chunk = one `NR`-column micro-panel of
+//! `B_c` (Loop 4 is what gets parallelized, matching the paper's BLIS
+//! configuration: "BDP parallelism is extracted only from Loop 4"),
+//! self-scheduled so the split adapts to however many workers are
+//! present.
+
+use super::micro::micro_kernel;
+use super::pack::{pack_a, pack_b, PackedA, PackedB};
+use super::params::{BlisParams, MR, NR};
+use crate::matrix::{MatMut, MatRef};
+use crate::pool::Crew;
+use crate::trace::{span, Kind};
+
+/// `C += alpha · A · B` on the given crew.
+///
+/// Dimensions: `A` is `m × k`, `B` is `k × n`, `C` is `m × n`.
+/// The result is bitwise independent of the crew size (the `k` reduction
+/// is never split).
+pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "gemm: inner dimensions disagree");
+    assert_eq!(c.rows(), m, "gemm: C row count");
+    assert_eq!(c.cols(), n, "gemm: C column count");
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Size the packed buffers to the *actual* problem (bounded by the
+    // cache-block capacities): a small GEMM must not pay for an
+    // nc=4096-column buffer it never uses (§Perf).
+    let mut pa = PackedA::with_capacity(
+        params.mc.min(crate::util::round_up(m, MR)),
+        params.kc.min(k),
+    );
+    let mut pb = PackedB::with_capacity(
+        params.kc.min(k),
+        params.nc.min(crate::util::round_up(n, NR)),
+    );
+
+    // Loop 1: columns of C/B in blocks of n_c.
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = params.nc.min(n - jc);
+        // Loop 2: the k dimension in blocks of k_c (sequential: this is
+        // the reduction dimension — splitting it would break determinism).
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = params.kc.min(k - pc);
+            span(Kind::Pack, "pack_b", || {
+                pack_b(crew, b.sub(pc, jc, kc_eff, nc_eff), &mut pb);
+            });
+            // Loop 3: rows of C/A in blocks of m_c. ENTRY POINT: each
+            // iteration publishes fresh crew jobs, so joiners take effect
+            // here (paper Fig. 10).
+            let mut ic = 0;
+            while ic < m {
+                let mc_eff = params.mc.min(m - ic);
+                span(Kind::Pack, "pack_a", || {
+                    pack_a(crew, a.sub(ic, pc, mc_eff, kc_eff), &mut pa);
+                });
+                macro_kernel(
+                    crew,
+                    alpha,
+                    &pa,
+                    &pb,
+                    c.sub(ic, jc, mc_eff, nc_eff),
+                );
+                ic += mc_eff;
+            }
+            pc += kc_eff;
+        }
+        jc += nc_eff;
+    }
+}
+
+/// Loops 4+5: sweep the packed `B_c` micro-panels (Loop 4, parallelized)
+/// against all packed `A_c` micro-panels (Loop 5, sequential per chunk).
+fn macro_kernel(crew: &mut Crew, alpha: f64, pa: &PackedA, pb: &PackedB, c: MatMut) {
+    let (m, n) = (c.rows(), c.cols());
+    debug_assert_eq!(pa.m, m);
+    debug_assert_eq!(pb.n, n);
+    debug_assert_eq!(pa.k, pb.k);
+    let kc = pa.k;
+    let n_jr = pb.n_panels();
+    let n_ir = pa.n_panels();
+
+    crew.parallel(n_jr, |jr| {
+        let j0 = jr * NR;
+        let n_eff = NR.min(n - j0);
+        let b_panel = pb.panel(jr);
+        // Loop 5 over the rows of the macro-block.
+        for ir in 0..n_ir {
+            let i0 = ir * MR;
+            let m_eff = MR.min(m - i0);
+            micro_kernel(
+                kc,
+                alpha,
+                pa.panel(ir),
+                b_panel,
+                c.sub(i0, j0, m_eff, n_eff),
+                m_eff,
+                n_eff,
+            );
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+    use crate::pool::EntryPolicy;
+    use crate::util::quickcheck_lite::{forall_res, Gen};
+
+    fn check(m: usize, n: usize, k: usize, alpha: f64, params: &BlisParams, seed: u64) {
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1);
+        let mut c = Matrix::random(m, n, seed + 2);
+        let mut c_ref = c.clone();
+        let mut crew = Crew::new();
+        gemm(&mut crew, params, alpha, a.view(), b.view(), c.view_mut());
+        naive::gemm(alpha, a.view(), b.view(), c_ref.view_mut());
+        let d = c.max_abs_diff(&c_ref);
+        let scale = (k as f64).max(1.0);
+        assert!(
+            d < 1e-12 * scale,
+            "m={m} n={n} k={k} alpha={alpha} diff={d}"
+        );
+    }
+
+    #[test]
+    fn matches_naive_across_shapes() {
+        let tiny = BlisParams::tiny();
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (MR, NR, 8),
+            (MR - 1, NR - 1, 3),
+            (MR + 1, NR + 1, 9),
+            (2 * MR + 3, 3 * NR + 1, 17),
+            (40, 40, 40),
+            (5, 64, 2),
+            (64, 5, 33),
+        ] {
+            check(m, n, k, 1.0, &tiny, (m * 10000 + n * 100 + k) as u64);
+            check(m, n, k, -1.0, &tiny, (m * 10000 + n * 100 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn matches_naive_with_default_params() {
+        check(150, 130, 70, 1.0, &BlisParams::default(), 99);
+        check(97, 301, 256 + 5, -1.0, &BlisParams::default(), 98);
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::zeros(0, 0);
+        let b = Matrix::zeros(0, 5);
+        let mut c = Matrix::zeros(0, 5);
+        gemm(
+            &mut crew,
+            &params,
+            1.0,
+            a.view(),
+            b.view(),
+            c.view_mut(),
+        );
+        // alpha == 0 early-out leaves C untouched:
+        let a = Matrix::random(3, 3, 1);
+        let b = Matrix::random(3, 3, 2);
+        let mut c = Matrix::random(3, 3, 3);
+        let before = c.clone();
+        gemm(&mut crew, &params, 0.0, a.view(), b.view(), c.view_mut());
+        assert_eq!(c, before);
+    }
+
+    #[test]
+    fn operates_on_subviews() {
+        // C embedded in a larger matrix; only the target block changes.
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::random(12, 7, 11);
+        let b = Matrix::random(7, 9, 12);
+        let mut big = Matrix::from_fn(20, 20, |_, _| 1.25);
+        let mut big_ref = big.clone();
+        gemm(
+            &mut crew,
+            &params,
+            1.0,
+            a.view(),
+            b.view(),
+            big.view_mut().sub(4, 6, 12, 9),
+        );
+        naive::gemm(
+            1.0,
+            a.view(),
+            b.view(),
+            big_ref.view_mut().sub(4, 6, 12, 9),
+        );
+        assert!(big.max_abs_diff(&big_ref) < 1e-12);
+        assert_eq!(big[(0, 0)], 1.25);
+        assert_eq!(big[(19, 19)], 1.25);
+        assert_eq!(big[(3, 6)], 1.25);
+    }
+
+    #[test]
+    fn bitwise_identical_with_and_without_members() {
+        // The determinism invariant that makes WS safe (DESIGN.md §8).
+        let a = Matrix::random(67, 45, 21);
+        let b = Matrix::random(45, 53, 22);
+        let params = BlisParams::tiny();
+
+        let mut c1 = Matrix::zeros(67, 53);
+        let mut crew1 = Crew::new();
+        gemm(&mut crew1, &params, 1.0, a.view(), b.view(), c1.view_mut());
+
+        let mut c2 = Matrix::zeros(67, 53);
+        let mut crew2 = Crew::new();
+        let shared = crew2.shared();
+        let hs: Vec<_> = (0..3)
+            .map(|i| {
+                let s = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    s.member_loop(if i == 0 {
+                        EntryPolicy::JobBoundary
+                    } else {
+                        EntryPolicy::Immediate
+                    })
+                })
+            })
+            .collect();
+        gemm(&mut crew2, &params, 1.0, a.view(), b.view(), c2.view_mut());
+        crew2.disband();
+        for h in hs {
+            h.join().unwrap();
+        }
+
+        assert_eq!(c1.data().len(), c2.data().len());
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bitwise mismatch");
+        }
+    }
+
+    #[test]
+    fn property_random_shapes_match_naive() {
+        forall_res("gemm == naive gemm", 25, |g: &mut Gen| {
+            let m = g.usize_in(1, 70);
+            let n = g.usize_in(1, 70);
+            let k = g.usize_in(1, 40);
+            let alpha = g.choose(&[1.0, -1.0, 0.5]);
+            let seed = g.seed();
+            g.label(format!("m={m} n={n} k={k} alpha={alpha}"));
+            let params = if g.bool_with(0.5) {
+                BlisParams::tiny()
+            } else {
+                BlisParams::default()
+            };
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(k, n, seed ^ 1);
+            let mut c = Matrix::random(m, n, seed ^ 2);
+            let mut c_ref = c.clone();
+            let mut crew = Crew::new();
+            gemm(&mut crew, &params, alpha, a.view(), b.view(), c.view_mut());
+            naive::gemm(alpha, a.view(), b.view(), c_ref.view_mut());
+            let d = c.max_abs_diff(&c_ref);
+            if d > 1e-12 * k as f64 {
+                return Err(format!("diff {d}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! LASWP — apply a sequence of row interchanges.
+//!
+//! The paper notes (§3.1) that LAPACK's legacy LASWP is sequential and
+//! visibly expensive in the traces (Fig. 5), but embarrassingly parallel
+//! over columns: "its execution time can be expected to decrease linearly
+//! with the number of cores". Our implementation splits the column range
+//! into crew chunks; each chunk applies the whole pivot sequence to its
+//! columns (the swaps are ordered in the row dimension, which is not
+//! split, so parallelism over columns is exact).
+
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+use crate::trace::{span, Kind};
+
+/// Apply pivots `ipiv[k0..k1]` to `a`: for `k` in `k0..k1` (in order),
+/// swap rows `k` and `ipiv[k]`. Pivot indices are absolute row indices of
+/// `a` (LAPACK convention with zero-based rows). Only columns
+/// `jlo..jhi` are touched.
+pub fn laswp(crew: &mut Crew, a: MatMut, ipiv: &[usize], k0: usize, k1: usize, jlo: usize, jhi: usize) {
+    debug_assert!(k1 <= ipiv.len());
+    debug_assert!(jhi <= a.cols());
+    if k0 >= k1 || jlo >= jhi {
+        return;
+    }
+    span(Kind::Swap, "laswp", || {
+        crew.parallel_ranges(jhi - jlo, 16, |cols| {
+            for k in k0..k1 {
+                let p = ipiv[k];
+                if p != k {
+                    a.swap_rows(k, p, jlo + cols.start, jlo + cols.end);
+                }
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+    use crate::pool::EntryPolicy;
+
+    #[test]
+    fn matches_sequential_reference() {
+        let m = 20;
+        let n = 13;
+        let a0 = Matrix::random(m, n, 1);
+        let ipiv: Vec<usize> = vec![5, 1, 7, 3, 19, 5, 6, 12, 8, 9];
+
+        let mut a1 = a0.clone();
+        let mut crew = Crew::new();
+        laswp(&mut crew, a1.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
+
+        let mut a2 = a0.clone();
+        naive::apply_pivots(a2.view_mut(), &ipiv);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn column_range_restriction() {
+        let m = 10;
+        let n = 8;
+        let a0 = Matrix::random(m, n, 2);
+        let ipiv = vec![3usize, 4, 2];
+        let mut a = a0.clone();
+        let mut crew = Crew::new();
+        laswp(&mut crew, a.view_mut(), &ipiv, 0, 3, 2, 5);
+        // Columns outside [2,5) untouched.
+        for j in [0usize, 1, 5, 6, 7] {
+            for i in 0..m {
+                assert_eq!(a[(i, j)], a0[(i, j)], "col {j}");
+            }
+        }
+        // Columns inside match the reference.
+        let mut r = a0.clone();
+        naive::apply_pivots(r.view_mut(), &ipiv);
+        for j in 2..5 {
+            for i in 0..m {
+                assert_eq!(a[(i, j)], r[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn pivot_subrange() {
+        // Applying ipiv[1..3] only.
+        let m = 6;
+        let a0 = Matrix::from_fn(m, 2, |i, j| (i * 10 + j) as f64);
+        let ipiv = vec![5usize, 3, 4];
+        let mut a = a0.clone();
+        let mut crew = Crew::new();
+        laswp(&mut crew, a.view_mut(), &ipiv, 1, 3, 0, 2);
+        let mut r = a0.clone();
+        r.view_mut().swap_rows(1, 3, 0, 2);
+        r.view_mut().swap_rows(2, 4, 0, 2);
+        assert_eq!(a, r);
+    }
+
+    #[test]
+    fn parallel_matches_solo() {
+        let m = 64;
+        let n = 100;
+        let a0 = Matrix::random(m, n, 5);
+        let mut rng = crate::util::Prng::new(77);
+        let ipiv: Vec<usize> = (0..m / 2).map(|k| rng.range(k, m - 1)).collect();
+
+        let mut a1 = a0.clone();
+        let mut crew1 = Crew::new();
+        laswp(&mut crew1, a1.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
+
+        let mut a2 = a0.clone();
+        let mut crew2 = Crew::new();
+        let shared = crew2.shared();
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                let s = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+            })
+            .collect();
+        laswp(&mut crew2, a2.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
+        crew2.disband();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn empty_ranges_are_noops() {
+        let mut a = Matrix::random(4, 4, 9);
+        let before = a.clone();
+        let mut crew = Crew::new();
+        laswp(&mut crew, a.view_mut(), &[1, 2], 1, 1, 0, 4);
+        laswp(&mut crew, a.view_mut(), &[1, 2], 0, 2, 3, 3);
+        assert_eq!(a, before);
+    }
+}

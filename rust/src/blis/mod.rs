@@ -1,0 +1,37 @@
+//! A BLIS-style, cache-blocked, **malleable** BLAS substrate.
+//!
+//! This is the paper's §2 (the GotoBLAS/BLIS five-loop GEMM with packing
+//! and a micro-kernel) plus the paper's §4 modification: the thread team
+//! executing a kernel is a [`crate::pool::Crew`], and the kernel re-reads
+//! the team roster at every Loop-3 (`i_c`) iteration — each packing job
+//! and each macro-kernel sweep is published as a fresh crew job, so
+//! workers enlisted mid-kernel start contributing at the next `i_c`
+//! boundary ("entry points", paper Fig. 10).
+//!
+//! Layout of the five loops (paper Fig. 1):
+//!
+//! ```text
+//! Loop 1  j_c over n in steps of n_c
+//! Loop 2    p_c over k in steps of k_c     -> pack B_c (k_c × n_c)
+//! Loop 3      i_c over m in steps of m_c   -> pack A_c (m_c × k_c)   [ENTRY POINT]
+//! Loop 4        j_r over n_c in steps of NR     \  macro-kernel,
+//! Loop 5          i_r over m_c in steps of MR   /  micro-kernel inside
+//! ```
+//!
+//! Determinism invariant: the `k` dimension is never split across
+//! workers (Loop 2 and the micro-kernel's `p` loop are sequential), so
+//! results are **bitwise identical** for any crew size and any join
+//! timing — malleability cannot perturb numerics (tested).
+
+pub mod gemm;
+pub mod laswp;
+pub mod micro;
+pub mod pack;
+pub mod params;
+pub mod small;
+pub mod trsm;
+
+pub use gemm::gemm;
+pub use laswp::laswp;
+pub use params::BlisParams;
+pub use trsm::trsm_llu;

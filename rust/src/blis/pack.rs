@@ -1,0 +1,249 @@
+//! Packing routines.
+//!
+//! GotoBLAS/BLIS copy the current `A` and `B` blocks into contiguous
+//! buffers laid out exactly in the order the micro-kernel consumes them
+//! (paper §2):
+//!
+//! - `A_c` (`m_c × k_c`) is stored as a sequence of `MR`-row micro-panels;
+//!   within a micro-panel, element `(i, p)` lives at `p·MR + i`.
+//! - `B_c` (`k_c × n_c`) is stored as a sequence of `NR`-column
+//!   micro-panels; within a micro-panel, element `(p, j)` lives at
+//!   `p·NR + j`.
+//!
+//! Edges are zero-padded to the full `MR`/`NR` so the micro-kernel never
+//! branches on the panel interior.
+//!
+//! Packing is itself parallel (paper §2: "all t threads collaborate to
+//! copy and re-organize"): each micro-panel is one crew chunk.
+
+use super::params::{MR, NR};
+use crate::matrix::MatRef;
+use crate::pool::Crew;
+
+/// Packed buffer for `A_c`: `ceil(m/MR)` micro-panels of `MR × k` each.
+pub struct PackedA {
+    pub buf: Vec<f64>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl PackedA {
+    /// Allocate for up to `mc × kc`.
+    pub fn with_capacity(mc: usize, kc: usize) -> Self {
+        Self {
+            buf: vec![0.0; mc.div_ceil(MR) * MR * kc],
+            m: 0,
+            k: 0,
+        }
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.m.div_ceil(MR)
+    }
+
+    /// Slice holding micro-panel `i` (rows `i*MR .. i*MR+MR`).
+    #[inline]
+    pub fn panel(&self, i: usize) -> &[f64] {
+        let sz = MR * self.k;
+        &self.buf[i * sz..(i + 1) * sz]
+    }
+}
+
+/// Packed buffer for `B_c`: `ceil(n/NR)` micro-panels of `k × NR` each.
+pub struct PackedB {
+    pub buf: Vec<f64>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl PackedB {
+    pub fn with_capacity(kc: usize, nc: usize) -> Self {
+        Self {
+            buf: vec![0.0; nc.div_ceil(NR) * NR * kc],
+            k: 0,
+            n: 0,
+        }
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Slice holding micro-panel `j` (columns `j*NR .. j*NR+NR`).
+    #[inline]
+    pub fn panel(&self, j: usize) -> &[f64] {
+        let sz = NR * self.k;
+        &self.buf[j * sz..(j + 1) * sz]
+    }
+}
+
+/// Pack `a` (`m × k`, `m ≤` capacity) into `pa`, cooperatively on `crew`
+/// (one chunk per micro-panel). Published as a single crew job, i.e. one
+/// "entry point" (paper Fig. 10: the packing of `A_c` is the first thing
+/// a newly merged team collaborates on).
+pub fn pack_a(crew: &mut Crew, a: MatRef, pa: &mut PackedA) {
+    let (m, k) = (a.rows(), a.cols());
+    pa.m = m;
+    pa.k = k;
+    let n_panels = m.div_ceil(MR);
+    let panel_sz = MR * k;
+    debug_assert!(n_panels * panel_sz <= pa.buf.len(), "PackedA too small");
+    // Hand each chunk a disjoint &mut of the buffer via raw parts: the
+    // crew closure must be Fn (shared), so we split the buffer up front.
+    let base = pa.buf.as_mut_ptr() as usize;
+    crew.parallel(n_panels, |ip| {
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut((base + ip * panel_sz * 8) as *mut f64, panel_sz) };
+        let i0 = ip * MR;
+        let rows = MR.min(m - i0);
+        for p in 0..k {
+            let col = a.col_ptr(p);
+            for i in 0..rows {
+                dst[p * MR + i] = unsafe { *col.add(i0 + i) };
+            }
+            for i in rows..MR {
+                dst[p * MR + i] = 0.0; // zero-pad edge
+            }
+        }
+    });
+}
+
+/// Pack `b` (`k × n`) into `pb`, cooperatively on `crew` (one chunk per
+/// `NR`-column micro-panel).
+pub fn pack_b(crew: &mut Crew, b: MatRef, pb: &mut PackedB) {
+    let (k, n) = (b.rows(), b.cols());
+    pb.k = k;
+    pb.n = n;
+    let n_panels = n.div_ceil(NR);
+    let panel_sz = NR * k;
+    debug_assert!(n_panels * panel_sz <= pb.buf.len(), "PackedB too small");
+    let base = pb.buf.as_mut_ptr() as usize;
+    crew.parallel(n_panels, |jp| {
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut((base + jp * panel_sz * 8) as *mut f64, panel_sz) };
+        let j0 = jp * NR;
+        let cols = NR.min(n - j0);
+        for (jj, dst_col) in (0..cols).map(|jj| (jj, j0 + jj)) {
+            let col = b.col_ptr(dst_col);
+            for p in 0..k {
+                dst[p * NR + jj] = unsafe { *col.add(p) };
+            }
+        }
+        for jj in cols..NR {
+            for p in 0..k {
+                dst[p * NR + jj] = 0.0;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+
+    #[test]
+    fn pack_a_layout_exact_multiple() {
+        let m = 2 * MR;
+        let k = 3;
+        let a = Matrix::from_fn(m, k, |i, p| (i * 100 + p) as f64);
+        let mut pa = PackedA::with_capacity(m, k);
+        let mut crew = Crew::new();
+        pack_a(&mut crew, a.view(), &mut pa);
+        assert_eq!(pa.n_panels(), 2);
+        for ip in 0..2 {
+            let panel = pa.panel(ip);
+            for p in 0..k {
+                for i in 0..MR {
+                    assert_eq!(panel[p * MR + i], a[(ip * MR + i, p)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_zero_pads_edge_rows() {
+        let m = MR + 3;
+        let k = 2;
+        let a = Matrix::from_fn(m, k, |i, p| 1.0 + (i + p) as f64);
+        let mut pa = PackedA::with_capacity(m, k);
+        let mut crew = Crew::new();
+        pack_a(&mut crew, a.view(), &mut pa);
+        let last = pa.panel(1);
+        for p in 0..k {
+            for i in 0..3 {
+                assert_eq!(last[p * MR + i], a[(MR + i, p)]);
+            }
+            for i in 3..MR {
+                assert_eq!(last[p * MR + i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        let k = 5;
+        let n = NR + 1;
+        let b = Matrix::from_fn(k, n, |p, j| (p * 10 + j) as f64 + 0.5);
+        let mut pb = PackedB::with_capacity(k, crate::util::round_up(n, NR));
+        let mut crew = Crew::new();
+        pack_b(&mut crew, b.view(), &mut pb);
+        assert_eq!(pb.n_panels(), 2);
+        let p0 = pb.panel(0);
+        for p in 0..k {
+            for j in 0..NR {
+                assert_eq!(p0[p * NR + j], b[(p, j)]);
+            }
+        }
+        let p1 = pb.panel(1);
+        for p in 0..k {
+            assert_eq!(p1[p * NR], b[(p, NR)]);
+            for j in 1..NR {
+                assert_eq!(p1[p * NR + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_of_subview_respects_stride() {
+        let big = Matrix::from_fn(20, 20, |i, j| (i * 20 + j) as f64);
+        let v = big.view().sub(3, 4, MR, 6);
+        let mut pa = PackedA::with_capacity(MR, 6);
+        let mut crew = Crew::new();
+        pack_a(&mut crew, v, &mut pa);
+        let panel = pa.panel(0);
+        for p in 0..6 {
+            for i in 0..MR {
+                assert_eq!(panel[p * MR + i], big[(3 + i, 4 + p)]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_with_members_matches_solo() {
+        use crate::pool::EntryPolicy;
+        let m = 7 * MR + 2;
+        let k = 33;
+        let a = Matrix::random(m, k, 5);
+
+        let mut pa1 = PackedA::with_capacity(crate::util::round_up(m, MR), k);
+        let mut crew1 = Crew::new();
+        pack_a(&mut crew1, a.view(), &mut pa1);
+
+        let mut pa2 = PackedA::with_capacity(crate::util::round_up(m, MR), k);
+        let mut crew2 = Crew::new();
+        let shared = crew2.shared();
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                let s = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+            })
+            .collect();
+        pack_a(&mut crew2, a.view(), &mut pa2);
+        crew2.disband();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(pa1.buf, pa2.buf);
+    }
+}

@@ -1,0 +1,112 @@
+//! BLIS cache-blocking configuration.
+//!
+//! `m_c, k_c, n_c` are the cache-blocking parameters of the three outer
+//! loops; `MR × NR` is the register-block shape of the micro-kernel
+//! (compile-time constants so the inner loops fully unroll and
+//! auto-vectorize). Defaults follow the shapes BLIS uses for Haswell-class
+//! double precision (paper §2: "`m_r, n_r` in the range 4–16; `m_c, k_c`
+//! in the order of a few hundreds; `n_c` up to a few thousands").
+
+/// Micro-kernel rows (register block height).
+pub const MR: usize = 8;
+/// Micro-kernel columns (register block width).
+pub const NR: usize = 6;
+
+/// Cache-blocking parameters for the five-loop GEMM.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BlisParams {
+    /// Loop-3 block (rows of `A_c`, sized for L2 residency).
+    pub mc: usize,
+    /// Loop-2 block (the shared `k` dimension, sized for L1/L2 residency).
+    pub kc: usize,
+    /// Loop-1 block (columns of `B_c`, sized for L3 residency).
+    pub nc: usize,
+}
+
+impl Default for BlisParams {
+    fn default() -> Self {
+        // Tuned for ~Haswell L2 (256 KiB): m_c·k_c·8B ≈ 96·256·8 = 192 KiB.
+        Self {
+            mc: 96,
+            kc: 256,
+            nc: 4092,
+        }
+    }
+}
+
+impl BlisParams {
+    /// Parameters scaled down for small unit-test problems (exercises all
+    /// edge paths with multiple blocks on tiny matrices).
+    pub fn tiny() -> Self {
+        Self {
+            mc: 2 * MR,
+            kc: 8,
+            nc: 3 * NR,
+        }
+    }
+
+    /// Validate invariants (all blocks nonzero; `mc` multiple of `MR` and
+    /// `nc` multiple of `NR` keep packing edge-free except at matrix
+    /// borders).
+    pub fn validated(self) -> Result<Self, String> {
+        if self.mc == 0 || self.kc == 0 || self.nc == 0 {
+            return Err(format!("BlisParams must be nonzero: {self:?}"));
+        }
+        if self.mc % MR != 0 {
+            return Err(format!("mc={} not a multiple of MR={MR}", self.mc));
+        }
+        if self.nc % NR != 0 {
+            return Err(format!("nc={} not a multiple of NR={NR}", self.nc));
+        }
+        Ok(self)
+    }
+
+    /// Working-set of the packed buffers in bytes (`A_c` + `B_c`).
+    pub fn packed_bytes(&self) -> usize {
+        (self.mc * self.kc + self.kc * self.nc) * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        BlisParams::default().validated().unwrap();
+        BlisParams::tiny().validated().unwrap();
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(BlisParams {
+            mc: 0,
+            kc: 1,
+            nc: NR
+        }
+        .validated()
+        .is_err());
+        assert!(BlisParams {
+            mc: MR + 1,
+            kc: 1,
+            nc: NR
+        }
+        .validated()
+        .is_err());
+        assert!(BlisParams {
+            mc: MR,
+            kc: 1,
+            nc: NR + 1
+        }
+        .validated()
+        .is_err());
+    }
+
+    #[test]
+    fn packed_bytes_sane() {
+        let p = BlisParams::default();
+        // A_c ≈ 192 KiB, B_c ≈ 8 MiB for the default config.
+        assert_eq!(p.packed_bytes(), (p.mc * p.kc + p.kc * p.nc) * 8);
+        assert!(p.packed_bytes() > 8 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,123 @@
+//! Small BLAS-1/2 kernels used by the unblocked LU panel factorization:
+//! `idamax` (pivot search), `dscal` (column scaling), `dger` (rank-1
+//! update). The panel lies on the critical path with little concurrency
+//! (paper §3.1), so these are sequential except for an optional crew
+//! variant of `ger` used when the panel team has more than one thread.
+
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+
+/// Index of the entry of maximum absolute value in `x[lo..hi]` of column
+/// `j` of `a` (returns an absolute row index). Ties resolve to the lowest
+/// index, matching LAPACK's IDAMAX.
+pub fn iamax_col(a: MatMut, j: usize, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo < hi && hi <= a.rows());
+    let mut best_i = lo;
+    let mut best = a.at(lo, j).abs();
+    for i in lo + 1..hi {
+        let v = a.at(i, j).abs();
+        if v > best {
+            best = v;
+            best_i = i;
+        }
+    }
+    best_i
+}
+
+/// Scale `a[lo..hi, j] *= s`.
+pub fn scal_col(a: MatMut, j: usize, lo: usize, hi: usize, s: f64) {
+    for i in lo..hi {
+        a.update(i, j, |x| x * s);
+    }
+}
+
+/// Rank-1 update `A[rlo..rhi, clo..chi] -= x[rlo..rhi] · yᵀ[clo..chi]`
+/// where `x` is column `xcol` of `a` and `y` is row `yrow` of `a`
+/// (exactly the GER shape appearing in the unblocked LU inner loop).
+pub fn ger_update(a: MatMut, rlo: usize, rhi: usize, clo: usize, chi: usize, xcol: usize, yrow: usize) {
+    for j in clo..chi {
+        let yj = a.at(yrow, j);
+        if yj == 0.0 {
+            continue;
+        }
+        for i in rlo..rhi {
+            let xi = a.at(i, xcol);
+            a.update(i, j, |v| v - xi * yj);
+        }
+    }
+}
+
+/// Crew-parallel version of [`ger_update`] (columns split across the
+/// crew). Used when the panel team has more than one thread.
+pub fn ger_update_par(
+    crew: &mut Crew,
+    a: MatMut,
+    rlo: usize,
+    rhi: usize,
+    clo: usize,
+    chi: usize,
+    xcol: usize,
+    yrow: usize,
+) {
+    if chi <= clo {
+        return;
+    }
+    crew.parallel_ranges(chi - clo, 8, |cols| {
+        ger_update(a, rlo, rhi, clo + cols.start, clo + cols.end, xcol, yrow);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+
+    #[test]
+    fn iamax_finds_largest_and_breaks_ties_low() {
+        let mut a = Matrix::from_rows(5, 1, &[1.0, -3.0, 2.0, 3.0, 0.0]);
+        let v = a.view_mut();
+        assert_eq!(iamax_col(v, 0, 0, 5), 1); // |-3| first among ties
+        assert_eq!(iamax_col(v, 0, 2, 5), 3);
+        assert_eq!(iamax_col(v, 0, 4, 5), 4);
+    }
+
+    #[test]
+    fn scal_scales_range_only() {
+        let mut a = Matrix::from_rows(4, 1, &[1.0, 2.0, 3.0, 4.0]);
+        scal_col(a.view_mut(), 0, 1, 3, 10.0);
+        assert_eq!(a.data(), &[1.0, 20.0, 30.0, 4.0]);
+    }
+
+    #[test]
+    fn ger_matches_manual() {
+        // A = 4x4; update rows 1..4, cols 2..4 with x=col0, y=row0.
+        let mut a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let a0 = a.clone();
+        ger_update(a.view_mut(), 1, 4, 2, 4, 0, 0);
+        for i in 1..4 {
+            for j in 2..4 {
+                let expect = a0[(i, j)] - a0[(i, 0)] * a0[(0, j)];
+                assert_eq!(a[(i, j)], expect);
+            }
+        }
+        // Untouched regions:
+        for j in 0..2 {
+            for i in 0..4 {
+                assert_eq!(a[(i, j)], a0[(i, j)]);
+            }
+        }
+        for j in 2..4 {
+            assert_eq!(a[(0, j)], a0[(0, j)]);
+        }
+    }
+
+    #[test]
+    fn ger_par_matches_seq() {
+        let mut a1 = Matrix::random(30, 25, 1);
+        let mut a2 = a1.clone();
+        ger_update(a1.view_mut(), 5, 30, 6, 25, 5, 4);
+        let mut crew = Crew::new();
+        ger_update_par(&mut crew, a2.view_mut(), 5, 30, 6, 25, 5, 4);
+        assert_eq!(a1, a2);
+    }
+}

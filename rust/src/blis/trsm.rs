@@ -1,0 +1,169 @@
+//! Blocked triangular solve with multiple right-hand sides.
+//!
+//! The LU loop body needs `B := TRILU(A)⁻¹ · B` (left side, lower
+//! triangular, unit diagonal — RL2/LL1 in the paper's Fig. 3/6). The
+//! blocked algorithm walks diagonal blocks of `A`: a small triangular
+//! solve on the current block row of `B` (parallel over columns of `B`),
+//! then a malleable [`gemm`] rank-`db` update of the remaining block rows.
+//! Casting the bulk of TRSM into GEMM is the standard BLAS-3 construction
+//! and inherits GEMM's malleability entry points.
+
+use super::gemm::gemm;
+use super::params::BlisParams;
+use crate::matrix::{MatMut, MatRef};
+use crate::pool::Crew;
+use crate::trace::{span, Kind};
+
+/// Diagonal block size of the blocked TRSM.
+const DB: usize = 32;
+
+/// `B := TRILU(A)⁻¹ · B` — `A` is `m × m` (only its strict lower triangle
+/// is read; the diagonal is taken as ones), `B` is `m × n`.
+pub fn trsm_llu(crew: &mut Crew, params: &BlisParams, a: MatRef, b: MatMut) {
+    let m = b.rows();
+    assert_eq!(a.rows(), m, "trsm: A rows");
+    assert_eq!(a.cols(), m, "trsm: A cols");
+    let n = b.cols();
+    if m == 0 || n == 0 {
+        return;
+    }
+
+    let mut k = 0;
+    while k < m {
+        let db = DB.min(m - k);
+        // Small triangular solve on the diagonal block, parallel over the
+        // columns of B (each column is independent).
+        let akk = a.sub(k, k, db, db);
+        let bk = b.sub(k, 0, db, n);
+        span(Kind::Trsm, "trsm_diag", || {
+            crew.parallel_ranges(n, 8, |cols| {
+                for j in cols {
+                    for i in 0..db {
+                        let mut s = bk.at(i, j);
+                        for p in 0..i {
+                            s -= akk.at(i, p) * bk.at(p, j);
+                        }
+                        bk.set(i, j, s);
+                    }
+                }
+            });
+        });
+        // Update the block rows below: B[k+db.., :] -= A[k+db.., k..k+db] · B[k.., :]
+        let rem = m - k - db;
+        if rem > 0 {
+            gemm(
+                crew,
+                params,
+                -1.0,
+                a.sub(k + db, k, rem, db),
+                bk.as_ref(),
+                b.sub(k + db, 0, rem, n),
+            );
+        }
+        k += db;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+    use crate::util::quickcheck_lite::{forall_res, Gen};
+
+    fn unit_lower(n: usize, seed: u64) -> Matrix {
+        let r = Matrix::random(n, n, seed);
+        Matrix::from_fn(n, n, |i, j| {
+            use std::cmp::Ordering::*;
+            match i.cmp(&j) {
+                Greater => r[(i, j)] - 0.5,
+                Equal => 1.0,
+                Less => 0.0,
+            }
+        })
+    }
+
+    #[test]
+    fn matches_naive_small_and_blocked_sizes() {
+        let params = BlisParams::tiny();
+        for &(m, n) in &[
+            (1usize, 1usize),
+            (5, 3),
+            (DB, 10),
+            (DB + 1, 4),
+            (2 * DB + 7, 33),
+            (70, 70),
+        ] {
+            let a = unit_lower(m, (m * 100 + n) as u64);
+            let mut b1 = Matrix::random(m, n, 7);
+            let mut b2 = b1.clone();
+            let mut crew = Crew::new();
+            trsm_llu(&mut crew, &params, a.view(), b1.view_mut());
+            naive::trsm_llu(a.view(), b2.view_mut());
+            let d = b1.max_abs_diff(&b2);
+            assert!(d < 1e-11, "m={m} n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn solves_the_system() {
+        // TRILU(A)·X0 = B  =>  trsm returns X0
+        let params = BlisParams::tiny();
+        let m = 50;
+        let a = unit_lower(m, 3);
+        let x0 = Matrix::random(m, 6, 4);
+        let mut b = naive::matmul(&a, &x0);
+        let mut crew = Crew::new();
+        trsm_llu(&mut crew, &params, a.view(), b.view_mut());
+        assert!(b.max_abs_diff(&x0) < 1e-10);
+    }
+
+    #[test]
+    fn reads_only_strict_lower_triangle() {
+        let params = BlisParams::tiny();
+        let m = DB + 5;
+        let mut a = unit_lower(m, 8);
+        let b0 = Matrix::random(m, 3, 9);
+        let mut b1 = b0.clone();
+        let mut crew = Crew::new();
+        trsm_llu(&mut crew, &params, a.view(), b1.view_mut());
+        // Poison everything on/above the diagonal; result must not change.
+        for j in 0..m {
+            for i in 0..=j {
+                a[(i, j)] = f64::NAN;
+            }
+        }
+        let mut b2 = b0.clone();
+        trsm_llu(&mut crew, &params, a.view(), b2.view_mut());
+        assert!(b1.max_abs_diff(&b2) == 0.0);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::zeros(0, 0);
+        let mut b = Matrix::zeros(0, 4);
+        trsm_llu(&mut crew, &params, a.view(), b.view_mut());
+    }
+
+    #[test]
+    fn property_matches_naive() {
+        forall_res("blocked trsm == naive trsm", 20, |g: &mut Gen| {
+            let m = g.usize_in(1, 80);
+            let n = g.usize_in(1, 40);
+            let seed = g.seed();
+            g.label(format!("m={m} n={n}"));
+            let a = unit_lower(m, seed);
+            let mut b1 = Matrix::random(m, n, seed ^ 3);
+            let mut b2 = b1.clone();
+            let mut crew = Crew::new();
+            trsm_llu(&mut crew, &BlisParams::tiny(), a.view(), b1.view_mut());
+            naive::trsm_llu(a.view(), b2.view_mut());
+            let d = b1.max_abs_diff(&b2);
+            if d > 1e-10 {
+                return Err(format!("diff {d}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny command-line argument parser (no `clap` in the offline registry —
+//! DESIGN.md §3) plus shared helpers for the `mlu` binary, the examples
+//! and the bench harnesses.
+
+use std::collections::HashMap;
+
+/// Parsed `--key value` / `--flag` / positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut items = items.into_iter().peekable();
+        while let Some(item) = items.next() {
+            if let Some(key) = item.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if items
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = items.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), String::from("true"));
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: bad value for --{key}: {s:?}; using default");
+                default
+            }),
+        }
+    }
+
+    /// String flag.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Render a [`crate::sim::figures::Table`] for terminal display.
+pub fn render_table(t: &crate::sim::figures::Table) -> String {
+    let mut s = format!("{}\n", t.title);
+    let widths: Vec<usize> = t.columns.iter().map(|c| c.len().max(9)).collect();
+    for (c, w) in t.columns.iter().zip(&widths) {
+        s.push_str(&format!("{c:>w$} "));
+    }
+    s.push('\n');
+    for row in &t.rows {
+        for (v, w) in row.iter().zip(&widths) {
+            if v.fract() == 0.0 && v.abs() < 1e9 {
+                s.push_str(&format!("{:>w$} ", *v as i64));
+            } else {
+                s.push_str(&format!("{v:>w$.2} "));
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_kv_and_bools_and_positionals() {
+        let a = parse("fig 16 --n 2000 --check --bo=256 --variant et");
+        assert_eq!(a.positional, vec!["fig", "16"]);
+        assert_eq!(a.get("n", 0usize), 2000);
+        assert_eq!(a.get("bo", 0usize), 256);
+        assert!(a.has("check"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.get_str("variant", "lu"), "et");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get("threads", 6usize), 6);
+        assert_eq!(a.get_str("out", "-"), "-");
+    }
+
+    #[test]
+    fn bad_value_falls_back() {
+        let a = parse("--n banana");
+        assert_eq!(a.get("n", 7usize), 7);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("--alpha=-1.5");
+        assert_eq!(a.get("alpha", 0.0f64), -1.5);
+    }
+
+    #[test]
+    fn render_table_formats() {
+        let t = crate::sim::figures::Table {
+            title: "T".into(),
+            columns: vec!["n".into(), "gflops".into()],
+            rows: vec![vec![1000.0, 55.5]],
+        };
+        let s = render_table(&t);
+        assert!(s.contains("gflops"));
+        assert!(s.contains("1000"));
+        assert!(s.contains("55.50"));
+    }
+}

@@ -1,0 +1,44 @@
+//! # malleable-lu
+//!
+//! A malleable thread-level linear-algebra library and LU factorization
+//! suite, reproducing:
+//!
+//! > Catalán, Herrero, Quintana-Ortí, Rodríguez-Sánchez, van de Geijn.
+//! > *A Case for Malleable Thread-Level Linear Algebra Libraries: The LU
+//! > Factorization with Partial Pivoting*, 2016.
+//!
+//! The crate is organized in layers (see `DESIGN.md`):
+//!
+//! - [`util`] — PRNG, stats, a small property-testing harness.
+//! - [`matrix`] — column-major dense matrices, views, norms, naive
+//!   reference kernels.
+//! - [`pool`] — the **malleable worker pool**: persistent worker threads
+//!   organized into [`pool::Crew`]s whose membership can grow *while a
+//!   kernel is executing* (the paper's Worker-Sharing mechanism).
+//! - [`blis`] — a BLIS-style blocked BLAS substrate (five-loop GEMM with
+//!   packing and a micro-kernel, blocked TRSM, LASWP) with malleability
+//!   entry points at each Loop-3 iteration.
+//! - [`lu`] — the LU-with-partial-pivoting algorithm family: unblocked,
+//!   blocked right-looking (`LU`), blocked left-looking, look-ahead
+//!   (`LU_LA`), malleable look-ahead (`LU_MB`), and early-termination
+//!   (`LU_ET`).
+//! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
+//!   `LU_OS` baseline.
+//! - [`trace`] — an Extrae-like execution tracer (ASCII Gantt + Chrome
+//!   JSON) used to regenerate the paper's trace figures.
+//! - [`sim`] — a discrete-event simulator of the paper's 6-core Xeon
+//!   E5-2603 v3 testbed, used to regenerate the performance figures on
+//!   hardware we do not have (see DESIGN.md §3).
+//! - [`runtime`] — a PJRT/XLA runtime that loads AOT-compiled Pallas/JAX
+//!   artifacts (the "rigid vendor BLAS" baseline `LU_XLA`).
+
+pub mod blis;
+pub mod cli;
+pub mod lu;
+pub mod matrix;
+pub mod pool;
+pub mod runtime;
+pub mod sim;
+pub mod taskrt;
+pub mod trace;
+pub mod util;

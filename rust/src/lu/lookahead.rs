@@ -1,0 +1,564 @@
+//! Blocked right-looking LU with **static look-ahead** (paper Fig. 6) and
+//! its malleable (WS, §4.1) and early-termination (ET, §4.2) refinements.
+//!
+//! Per iteration the trailing submatrix is split column-wise into `P`
+//! (the *next* panel, width `b_n`) and `R` (the remainder):
+//!
+//! ```text
+//!        f      f+bc     f+bc+bn          n
+//!        |  cur  |    P    |       R      |
+//! ```
+//!
+//! Team `T_PF` (pool workers `0..t_pf`, worker 0 leading) applies the
+//! current panel's transformations to `P` (PF1: swaps + TRSM, PF2: GEMM)
+//! and factorizes it (PF3). Team `T_RU` (the calling thread leading pool
+//! workers `t_pf..`) does the same for `R` (RU1, RU2) — concurrently,
+//! since the two branches touch disjoint columns.
+//!
+//! - **WS** (`malleable`): when `T_PF` finishes first, its workers enlist
+//!   into `T_RU`'s crew and join the in-flight RU2 GEMM at the next
+//!   Loop-3 entry point. When `R` is empty (tail of the factorization)
+//!   the *reverse* sharing happens: `T_RU` enlists into `T_PF`'s crew.
+//! - **ET** (`early_term`): when `T_RU` finishes first it raises
+//!   `ru_done`; the left-looking inner LU polls the flag after each `b_i`
+//!   block and aborts, returning `k_done < b_n`. The next iteration's
+//!   "current panel" is then only `k_done` wide — the block size
+//!   self-adjusts (paper §4.2, §5.3).
+//!
+//! The ET flag is a plain `AtomicBool` with one writer and one reader —
+//! the paper's race-free synchronization — and the factors produced are
+//! identical (to roundoff) to the plain blocked algorithm for any flag
+//! timing, because the LL inner leaves aborted columns untouched.
+
+use super::panel::{panel_ll, panel_rl, PanelOutcome};
+use crate::blis::{gemm, trsm_llu, BlisParams};
+use crate::matrix::{MatMut, Matrix};
+use crate::pool::{Crew, EntryPolicy, Pool};
+use crate::trace::{span, Kind};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which look-ahead refinements are active.
+#[derive(Copy, Clone, Debug)]
+pub struct LaOpts {
+    /// Worker Sharing via the malleable BLAS (LU_MB, LU_ET).
+    pub malleable: bool,
+    /// Early termination of the panel factorization (LU_ET). Implies the
+    /// left-looking inner LU.
+    pub early_term: bool,
+    /// How joining workers enter an in-flight kernel.
+    pub entry: EntryPolicy,
+    /// Threads dedicated to the panel branch (the paper uses 1).
+    pub t_pf: usize,
+}
+
+impl Default for LaOpts {
+    fn default() -> Self {
+        Self {
+            malleable: false,
+            early_term: false,
+            entry: EntryPolicy::JobBoundary,
+            t_pf: 1,
+        }
+    }
+}
+
+/// Execution statistics for the look-ahead driver.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaStats {
+    /// Outer iterations executed.
+    pub iters: usize,
+    /// Iterations whose panel factorization was cut short by ET.
+    pub et_cuts: usize,
+    /// Iterations in which at least one PF worker joined the RU crew
+    /// (forward worker sharing).
+    pub ws_forward: usize,
+    /// Iterations in which RU workers joined the PF crew (reverse WS;
+    /// only when `R` was empty).
+    pub ws_reverse: usize,
+    /// Effective width of each factorized panel (shrinks under ET).
+    pub panel_widths: Vec<usize>,
+}
+
+/// Factorize `a` in place with look-ahead. `pool` supplies the worker
+/// threads (total team = `pool.workers() + 1` counting the caller).
+/// Returns absolute pivots and statistics.
+pub fn lu_lookahead(
+    pool: &Pool,
+    params: &BlisParams,
+    a: &mut Matrix,
+    bo: usize,
+    bi: usize,
+    opts: &LaOpts,
+) -> (Vec<usize>, LaStats) {
+    let av = a.view_mut();
+    let (m, n) = (av.rows(), av.cols());
+    let kmax = m.min(n);
+    let bo = bo.max(1).min(kmax.max(1));
+    let mut stats = LaStats::default();
+    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
+    if kmax == 0 {
+        return (ipiv, stats);
+    }
+    if pool.workers() == 0 {
+        // A single thread cannot run two branches: degrade to the plain
+        // blocked RL algorithm (same factorization, no TP).
+        let mut crew = Crew::new();
+        let ipiv = super::blocked::lu_blocked_rl(&mut crew, params, av, bo, bi);
+        stats.panel_widths = vec![bo.min(kmax); kmax.div_ceil(bo.max(1))];
+        return (ipiv, stats);
+    }
+    let t_pf = opts.t_pf.max(1).min(pool.workers());
+
+    // ---- Prologue: factorize the first panel with the full team. ----
+    let b0 = bo.min(kmax);
+    let mut crew_all = Crew::new();
+    let all_members: Vec<_> = (0..pool.workers())
+        .map(|w| {
+            let s = crew_all.shared();
+            let e = opts.entry;
+            pool.submit(w, move || s.member_loop(e))
+        })
+        .collect();
+    let first = span(Kind::Panel, "panel[0]", || {
+        panel_rl(&mut crew_all, params, av.sub(0, 0, m, b0), bi)
+    });
+    crew_all.disband();
+    for h in all_members {
+        h.wait();
+    }
+
+    // `cur`: the factorized-but-not-yet-applied panel [f, f+bc).
+    let mut f = 0usize;
+    let mut bc = first.k_done;
+    let mut piv_cur: Vec<usize> = first.ipiv; // absolute (f == 0)
+    // ET's adaptive block size (paper §4.2: a too-large b_o "will be
+    // adjusted for the current (and, possibly, subsequent) iterations").
+    // On a cut the attempted width shrinks to what proved sustainable; it
+    // regrows by b_i per uncut iteration, bounded by b_o.
+    let mut attempt = bo;
+
+    loop {
+        let right0 = f + bc;
+        stats.panel_widths.push(bc);
+
+        if right0 >= kmax {
+            // ---- Epilogue: no panels left to factor. Apply the current
+            // panel's transformations to any remaining right columns
+            // (wide matrices) and the lazy left swaps, then finish.
+            let mut crew = Crew::new();
+            let members: Vec<_> = (0..pool.workers())
+                .map(|w| {
+                    let s = crew.shared();
+                    let e = opts.entry;
+                    pool.submit(w, move || s.member_loop(e))
+                })
+                .collect();
+            if right0 < n {
+                let rest = n - right0;
+                laswp_abs(&mut crew, av, &piv_cur, f, right0, n);
+                trsm_llu(
+                    &mut crew,
+                    params,
+                    av.sub(f, f, bc, bc).as_ref(),
+                    av.sub(f, right0, bc, rest),
+                );
+                if m > right0 {
+                    gemm(
+                        &mut crew,
+                        params,
+                        -1.0,
+                        av.sub(right0, f, m - right0, bc).as_ref(),
+                        av.sub(f, right0, bc, rest).as_ref(),
+                        av.sub(right0, right0, m - right0, rest),
+                    );
+                }
+            }
+            laswp_abs(&mut crew, av, &piv_cur, f, 0, f);
+            ipiv.extend_from_slice(&piv_cur);
+            crew.disband();
+            for h in members {
+                h.wait();
+            }
+            break;
+        }
+
+        stats.iters += 1;
+        let bn = attempt.min(kmax - right0);
+        let r0 = right0 + bn; // first column of R
+        let r_cols = n - r0;
+
+        // Per-iteration shared state.
+        let ru_done = Arc::new(AtomicBool::new(false));
+        let pf_work_done = Arc::new(AtomicBool::new(false));
+        let outcome: Arc<Mutex<Option<PanelOutcome>>> = Arc::new(Mutex::new(None));
+
+        let mut crew_ru = Crew::new();
+        let ru_shared = crew_ru.shared();
+        let crew_pf = Crew::new();
+        let pf_shared = crew_pf.shared();
+
+        // RU members: workers t_pf.. join RU's crew — unless R is empty,
+        // in which case they help the panel branch instead (reverse WS).
+        let r_empty = r_cols == 0;
+        let join_pf_first = r_empty && opts.malleable;
+        let mut handles = Vec::new();
+        for w in t_pf..pool.workers() {
+            let rs = Arc::clone(&ru_shared);
+            let ps = Arc::clone(&pf_shared);
+            let e = opts.entry;
+            let jp = join_pf_first;
+            handles.push(pool.submit(w, move || {
+                if jp {
+                    ps.member_loop(e);
+                }
+                rs.member_loop(e);
+            }));
+        }
+        // PF members: workers 1..t_pf, chained into RU on WS.
+        for w in 1..t_pf {
+            let ps = Arc::clone(&pf_shared);
+            let rs = Arc::clone(&ru_shared);
+            let e = opts.entry;
+            let mall = opts.malleable;
+            handles.push(pool.submit(w, move || {
+                ps.member_loop(e);
+                if mall {
+                    rs.member_loop(e);
+                }
+            }));
+        }
+
+        // ---- PF branch on worker 0. ----
+        let pf_task = {
+            let piv = piv_cur.clone();
+            let params = *params;
+            let early = opts.early_term;
+            let mall = opts.malleable;
+            let entry = opts.entry;
+            let ru_done = Arc::clone(&ru_done);
+            let pf_work_done = Arc::clone(&pf_work_done);
+            let outcome = Arc::clone(&outcome);
+            let rs = Arc::clone(&ru_shared);
+            // Move the crew (leader handle) into the worker task.
+            let mut crew_pf = crew_pf;
+            let arm_et = early && !r_empty;
+            pool.submit(0, move || {
+                // PF1: current panel's swaps + TRSM on P.
+                span(Kind::Swap, "PF1.swap", || {
+                    laswp_abs(&mut crew_pf, av, &piv, f, right0, r0);
+                });
+                span(Kind::Trsm, "PF1.trsm", || {
+                    trsm_llu(
+                        &mut crew_pf,
+                        &params,
+                        av.sub(f, f, bc, bc).as_ref(),
+                        av.sub(f, right0, bc, bn),
+                    );
+                });
+                // PF2: GEMM update of P below the current panel row-block.
+                span(Kind::Gemm, "PF2.gemm", || {
+                    gemm(
+                        &mut crew_pf,
+                        &params,
+                        -1.0,
+                        av.sub(right0, f, m - right0, bc).as_ref(),
+                        av.sub(f, right0, bc, bn).as_ref(),
+                        av.sub(right0, right0, m - right0, bn),
+                    );
+                });
+                // PF3: factorize the next panel.
+                let p = av.sub(right0, right0, m - right0, bn);
+                let out = span(Kind::Panel, "PF3.panel", || {
+                    if early {
+                        panel_ll(
+                            &mut crew_pf,
+                            &params,
+                            p,
+                            bi,
+                            if arm_et { Some(&ru_done) } else { None },
+                        )
+                    } else {
+                        panel_rl(&mut crew_pf, &params, p, bi)
+                    }
+                });
+                *outcome.lock().unwrap() = Some(out);
+                pf_work_done.store(true, Ordering::Release);
+                crew_pf.disband();
+                // Worker Sharing: join the remainder update in flight.
+                if mall {
+                    rs.member_loop(entry);
+                }
+            })
+        };
+
+        // ---- RU branch on the calling thread. ----
+        if r_cols > 0 {
+            span(Kind::Swap, "RU1.swap", || {
+                laswp_abs(&mut crew_ru, av, &piv_cur, f, r0, n);
+            });
+            span(Kind::Trsm, "RU1.trsm", || {
+                trsm_llu(
+                    &mut crew_ru,
+                    params,
+                    av.sub(f, f, bc, bc).as_ref(),
+                    av.sub(f, r0, bc, r_cols),
+                );
+            });
+            span(Kind::Gemm, "RU2.gemm", || {
+                gemm(
+                    &mut crew_ru,
+                    params,
+                    -1.0,
+                    av.sub(right0, f, m - right0, bc).as_ref(),
+                    av.sub(f, r0, bc, r_cols).as_ref(),
+                    av.sub(right0, r0, m - right0, r_cols),
+                );
+            });
+        }
+        // Lazy left swaps of the current panel (disjoint from P and R).
+        span(Kind::Swap, "RU.left_swap", || {
+            laswp_abs(&mut crew_ru, av, &piv_cur, f, 0, f);
+        });
+        // ET: tell the panel branch the update is finished.
+        ru_done.store(true, Ordering::Release);
+
+        // Reverse WS: if R was empty, the leader helps the panel team.
+        if join_pf_first {
+            stats.ws_reverse += 1;
+            pf_shared.member_loop(opts.entry);
+        }
+
+        // Wait for the panel result (the PF worker may still be enlisted
+        // in our crew afterwards — that is fine, it parks on job waits).
+        let backoff = crossbeam_utils::Backoff::new();
+        while !pf_work_done.load(Ordering::Acquire) {
+            backoff.snooze();
+        }
+        if opts.malleable && crew_ru.stats().max_members > (pool.workers() - t_pf) {
+            stats.ws_forward += 1;
+        }
+        crew_ru.disband();
+        for h in handles {
+            h.wait();
+        }
+        pf_task.wait();
+
+        let out = outcome.lock().unwrap().take().expect("panel outcome");
+        if out.terminated_early {
+            stats.et_cuts += 1;
+            attempt = out.k_done.max(bi.max(1));
+        } else {
+            attempt = (attempt + bi.max(1)).min(bo);
+        }
+
+        // Commit the current panel and adopt the next.
+        ipiv.extend_from_slice(&piv_cur);
+        f = right0;
+        bc = out.k_done;
+        piv_cur = out.ipiv.iter().map(|p| p + f).collect();
+    }
+
+    debug_assert_eq!(ipiv.len(), kmax);
+    (ipiv, stats)
+}
+
+/// `laswp` with pivot indices relative to row `base` (the panel top):
+/// swap rows `base+k` and `piv[k]` (absolute) for columns `jlo..jhi`.
+fn laswp_abs(crew: &mut Crew, a: MatMut, piv: &[usize], base: usize, jlo: usize, jhi: usize) {
+    if piv.is_empty() || jlo >= jhi {
+        return;
+    }
+    // Reuse the blis::laswp chunking by building absolute (k, piv) pairs.
+    crew.parallel_ranges(jhi - jlo, 16, |cols| {
+        for (k, &p) in piv.iter().enumerate() {
+            let row = base + k;
+            if p != row {
+                a.swap_rows(row, p, jlo + cols.start, jlo + cols.end);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::naive;
+    use crate::util::quickcheck_lite::{forall_res, Gen};
+
+    fn run(
+        a0: &Matrix,
+        bo: usize,
+        bi: usize,
+        workers: usize,
+        opts: &LaOpts,
+    ) -> (Matrix, Vec<usize>, LaStats) {
+        let pool = Pool::new(workers);
+        let mut f = a0.clone();
+        let (ipiv, stats) =
+            lu_lookahead(&pool, &BlisParams::tiny(), &mut f, bo, bi, opts);
+        (f, ipiv, stats)
+    }
+
+    #[test]
+    fn la_matches_reference() {
+        for &(m, n) in &[(48usize, 48usize), (64, 40), (40, 64), (33, 33)] {
+            let a0 = Matrix::random(m, n, (m * 5 + n) as u64);
+            let (f, ipiv, stats) = run(&a0, 8, 4, 2, &LaOpts::default());
+            assert_eq!(ipiv.len(), m.min(n));
+            let r = naive::lu_residual(&a0, &f, &ipiv);
+            assert!(r < 1e-12, "m={m} n={n} r={r}");
+            assert!(stats.iters > 0);
+            // Pivots identical to the unblocked reference.
+            let mut g = a0.clone();
+            let piv_ref = naive::lu(g.view_mut());
+            assert_eq!(ipiv, piv_ref, "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn la_bitwise_equals_plain_blocked() {
+        // LU_LA reorganizes the schedule but performs the exact same
+        // floating-point operations per element => bitwise equality with
+        // the plain blocked RL code.
+        let a0 = Matrix::random(64, 64, 77);
+        let (f_la, p_la, _) = run(&a0, 16, 4, 2, &LaOpts::default());
+        let mut f_rl = a0.clone();
+        let mut crew = Crew::new();
+        let p_rl = super::super::blocked::lu_blocked_rl(
+            &mut crew,
+            &BlisParams::tiny(),
+            f_rl.view_mut(),
+            16,
+            4,
+        );
+        assert_eq!(p_la, p_rl);
+        for (x, y) in f_la.data().iter().zip(f_rl.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn mb_matches_and_reports_ws() {
+        let a0 = Matrix::random(96, 96, 3);
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let (f, ipiv, stats) = run(&a0, 16, 4, 3, &opts);
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-12, "r={r}");
+        // WS must not change the numbers — bitwise vs LU_LA.
+        let (f_la, p_la, _) = run(&a0, 16, 4, 3, &LaOpts::default());
+        assert_eq!(ipiv, p_la);
+        for (x, y) in f.data().iter().zip(f_la.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let _ = stats; // ws_forward is timing-dependent; just ensure it ran.
+    }
+
+    #[test]
+    fn et_matches_numerically_and_adapts_block() {
+        // Small matrix, large block: T_PF >> T_RU, so ET must kick in and
+        // shrink the effective panel width.
+        let a0 = Matrix::random(72, 72, 9);
+        let opts = LaOpts {
+            malleable: true,
+            early_term: true,
+            ..Default::default()
+        };
+        let (f, ipiv, stats) = run(&a0, 24, 4, 2, &opts);
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-11, "r={r}");
+        assert!(naive::growth_bounded(&f));
+        // All columns factorized exactly once.
+        assert_eq!(ipiv.len(), 72);
+        assert_eq!(stats.panel_widths.iter().sum::<usize>(), 72);
+        // Pivot choice must equal the reference (ET changes the schedule,
+        // not the math).
+        let mut g = a0.clone();
+        let piv_ref = naive::lu(g.view_mut());
+        assert_eq!(ipiv, piv_ref);
+    }
+
+    #[test]
+    fn works_with_zero_workers_pool() {
+        // Degenerate: everything on the calling thread (t_pf clamps to
+        // pool size... pool of 1 => worker 0 is the PF branch).
+        let a0 = Matrix::random(32, 32, 4);
+        let (f, ipiv, _) = run(&a0, 8, 4, 1, &LaOpts::default());
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-12);
+    }
+
+    #[test]
+    fn tiny_matrices() {
+        for n in [1usize, 2, 3, 7] {
+            let a0 = Matrix::random(n, n, n as u64);
+            let (f, ipiv, _) = run(&a0, 4, 2, 2, &LaOpts::default());
+            let r = naive::lu_residual(&a0, &f, &ipiv);
+            assert!(r < 1e-13, "n={n} r={r}");
+        }
+    }
+
+    #[test]
+    fn et_with_immediate_entry() {
+        let a0 = Matrix::random(60, 60, 5);
+        let opts = LaOpts {
+            malleable: true,
+            early_term: true,
+            entry: EntryPolicy::Immediate,
+            t_pf: 1,
+        };
+        let (f, ipiv, _) = run(&a0, 16, 4, 3, &opts);
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-11, "r={r}");
+    }
+
+    #[test]
+    fn t_pf_two_threads() {
+        let a0 = Matrix::random(64, 64, 6);
+        let opts = LaOpts {
+            malleable: true,
+            t_pf: 2,
+            ..Default::default()
+        };
+        let (f, ipiv, _) = run(&a0, 16, 4, 4, &opts);
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-12, "r={r}");
+    }
+
+    #[test]
+    fn property_all_variants_agree() {
+        forall_res("LA/MB/ET produce valid identical-pivot LUs", 8, |g: &mut Gen| {
+            let n = g.usize_in(10, 70);
+            let bo = g.choose(&[4usize, 8, 16]);
+            let bi = g.choose(&[2usize, 4]);
+            let seed = g.seed();
+            g.label(format!("n={n} bo={bo} bi={bi}"));
+            let a0 = Matrix::random(n, n, seed);
+            let mut piv_ref = None;
+            for (mall, et) in [(false, false), (true, false), (true, true)] {
+                let opts = LaOpts {
+                    malleable: mall,
+                    early_term: et,
+                    ..Default::default()
+                };
+                let (f, ipiv, _) = run(&a0, bo, bi, 2, &opts);
+                let r = naive::lu_residual(&a0, &f, &ipiv);
+                if r > 1e-11 {
+                    return Err(format!("mall={mall} et={et}: residual {r}"));
+                }
+                match &piv_ref {
+                    None => piv_ref = Some(ipiv),
+                    Some(p) => {
+                        if *p != ipiv {
+                            return Err(format!("mall={mall} et={et}: pivots differ"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,271 @@
+//! The LU-with-partial-pivoting algorithm family (paper §3–§5).
+//!
+//! | Variant | Paper name | Parallelism |
+//! |---|---|---|
+//! | [`Variant::Unblocked`] | Fig. 3 left | none (reference) |
+//! | [`Variant::BlockedRl`] | `LU` | BDP only (one crew) |
+//! | [`Variant::BlockedLl`] | §4.2 LL | BDP only (one crew) |
+//! | [`Variant::LookAhead`] | `LU_LA` | TP+BDP, static teams |
+//! | [`Variant::Malleable`] | `LU_MB` | TP+BDP + Worker Sharing |
+//! | [`Variant::EarlyTerm`] | `LU_ET` | TP+BDP + WS + ET |
+//! | [`Variant::OmpSs`] | `LU_OS` | task runtime (see [`crate::taskrt`]) |
+//!
+//! All variants compute the same factorization `P·A = L·U` and return
+//! pivots in LAPACK convention.
+
+pub mod blocked;
+pub mod lookahead;
+pub mod panel;
+pub mod unblocked;
+
+pub use blocked::{lu_blocked_ll, lu_blocked_rl};
+pub use lookahead::{lu_lookahead, LaOpts, LaStats};
+pub use panel::{panel_ll, panel_rl, PanelOutcome};
+pub use unblocked::lu_unblocked;
+
+use crate::blis::BlisParams;
+use crate::matrix::{naive, Matrix};
+use crate::pool::{Crew, EntryPolicy, Pool};
+
+/// Algorithm selector (see module docs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Unblocked,
+    BlockedRl,
+    BlockedLl,
+    LookAhead,
+    Malleable,
+    EarlyTerm,
+    OmpSs,
+}
+
+impl Variant {
+    /// Parse the paper's names: `lu`, `ll`, `la`, `mb`, `et`, `os`,
+    /// `unblocked`.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "unblocked" | "unb" => Variant::Unblocked,
+            "lu" | "rl" | "blocked" => Variant::BlockedRl,
+            "ll" => Variant::BlockedLl,
+            "la" | "lu_la" => Variant::LookAhead,
+            "mb" | "lu_mb" => Variant::Malleable,
+            "et" | "lu_et" => Variant::EarlyTerm,
+            "os" | "lu_os" | "ompss" => Variant::OmpSs,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Unblocked => "unblocked",
+            Variant::BlockedRl => "LU",
+            Variant::BlockedLl => "LU_LL",
+            Variant::LookAhead => "LU_LA",
+            Variant::Malleable => "LU_MB",
+            Variant::EarlyTerm => "LU_ET",
+            Variant::OmpSs => "LU_OS",
+        }
+    }
+
+    /// All benchmarkable variants in the paper's presentation order.
+    pub fn all() -> &'static [Variant] {
+        &[
+            Variant::BlockedRl,
+            Variant::LookAhead,
+            Variant::Malleable,
+            Variant::EarlyTerm,
+            Variant::OmpSs,
+        ]
+    }
+}
+
+/// Factorization configuration.
+#[derive(Copy, Clone, Debug)]
+pub struct LuConfig {
+    pub variant: Variant,
+    /// Outer block size `b_o` (paper default for Fig. 16: 256).
+    pub bo: usize,
+    /// Inner (panel) block size `b_i` (paper: 16 or 32).
+    pub bi: usize,
+    /// Total threads `t` = pool workers + the calling thread.
+    pub threads: usize,
+    /// Threads in the panel team (paper: 1).
+    pub t_pf: usize,
+    pub params: BlisParams,
+    pub entry: EntryPolicy,
+}
+
+impl Default for LuConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::EarlyTerm,
+            bo: 256,
+            bi: 32,
+            threads: 6,
+            t_pf: 1,
+            params: BlisParams::default(),
+            entry: EntryPolicy::JobBoundary,
+        }
+    }
+}
+
+/// Result of a factorization.
+#[derive(Debug, Clone, Default)]
+pub struct LuResult {
+    /// Pivot rows (LAPACK convention, absolute indices).
+    pub ipiv: Vec<usize>,
+    /// Look-ahead statistics (empty for non-look-ahead variants).
+    pub la_stats: Option<LaStats>,
+}
+
+/// Factorize `a` in place with the configured variant. The pool must have
+/// `threads - 1` workers (a fresh one is created if `pool` is `None`).
+pub fn factorize(a: &mut Matrix, cfg: &LuConfig, pool: Option<&Pool>) -> LuResult {
+    let owned_pool;
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            owned_pool = Pool::new(cfg.threads.saturating_sub(1));
+            &owned_pool
+        }
+    };
+    match cfg.variant {
+        Variant::Unblocked => LuResult {
+            ipiv: lu_unblocked(a.view_mut()),
+            la_stats: None,
+        },
+        Variant::BlockedRl | Variant::BlockedLl => {
+            // One crew spanning the whole team (BDP only).
+            let mut crew = Crew::new();
+            let members: Vec<_> = (0..pool.workers())
+                .map(|w| {
+                    let s = crew.shared();
+                    let e = cfg.entry;
+                    pool.submit(w, move || s.member_loop(e))
+                })
+                .collect();
+            let ipiv = if cfg.variant == Variant::BlockedRl {
+                lu_blocked_rl(&mut crew, &cfg.params, a.view_mut(), cfg.bo, cfg.bi)
+            } else {
+                lu_blocked_ll(&mut crew, &cfg.params, a.view_mut(), cfg.bo, cfg.bi)
+            };
+            crew.disband();
+            for h in members {
+                h.wait();
+            }
+            LuResult {
+                ipiv,
+                la_stats: None,
+            }
+        }
+        Variant::LookAhead | Variant::Malleable | Variant::EarlyTerm => {
+            let opts = LaOpts {
+                malleable: cfg.variant != Variant::LookAhead,
+                early_term: cfg.variant == Variant::EarlyTerm,
+                entry: cfg.entry,
+                t_pf: cfg.t_pf,
+            };
+            let (ipiv, stats) = lu_lookahead(pool, &cfg.params, a, cfg.bo, cfg.bi, &opts);
+            LuResult {
+                ipiv,
+                la_stats: Some(stats),
+            }
+        }
+        Variant::OmpSs => crate::taskrt::lu_os::factorize_os(pool, a, cfg),
+    }
+}
+
+/// Relative residual `‖P·A − L·U‖_F / ‖A‖_F` (delegates to the naive
+/// oracle; intended for verification, not benchmarking).
+pub fn residual(a_original: &Matrix, factored: &Matrix, ipiv: &[usize]) -> f64 {
+    naive::lu_residual(a_original, factored, ipiv)
+}
+
+/// Solve `A·x = b` from a factorization.
+pub fn solve(factored: &Matrix, ipiv: &[usize], b: &[f64]) -> Vec<f64> {
+    naive::lu_solve(factored, ipiv, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(variant: Variant) -> LuConfig {
+        LuConfig {
+            variant,
+            bo: 16,
+            bi: 4,
+            threads: 3,
+            params: BlisParams::tiny(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dispatch_all_direct_variants() {
+        let a0 = Matrix::random(50, 50, 1);
+        let mut piv_ref: Option<Vec<usize>> = None;
+        for v in [
+            Variant::Unblocked,
+            Variant::BlockedRl,
+            Variant::BlockedLl,
+            Variant::LookAhead,
+            Variant::Malleable,
+            Variant::EarlyTerm,
+        ] {
+            let mut f = a0.clone();
+            let out = factorize(&mut f, &cfg(v), None);
+            let r = residual(&a0, &f, &out.ipiv);
+            assert!(r < 1e-11, "{}: residual {r}", v.name());
+            match &piv_ref {
+                None => piv_ref = Some(out.ipiv),
+                Some(p) => assert_eq!(*p, out.ipiv, "{} pivots", v.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for (s, v) in [
+            ("lu", Variant::BlockedRl),
+            ("LA", Variant::LookAhead),
+            ("mb", Variant::Malleable),
+            ("et", Variant::EarlyTerm),
+            ("ompss", Variant::OmpSs),
+            ("unb", Variant::Unblocked),
+            ("ll", Variant::BlockedLl),
+        ] {
+            assert_eq!(Variant::parse(s), Some(v));
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn solve_through_public_api() {
+        let n = 24;
+        let a0 = Matrix::random_dd(n, 8);
+        let x_true: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let mut b = vec![0.0; n];
+        for j in 0..n {
+            for i in 0..n {
+                b[i] += a0[(i, j)] * x_true[j];
+            }
+        }
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &cfg(Variant::EarlyTerm), None);
+        let x = solve(&f, &out.ipiv, &b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-9, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn lookahead_stats_populated() {
+        let a0 = Matrix::random(64, 64, 2);
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &cfg(Variant::Malleable), None);
+        let stats = out.la_stats.expect("stats for look-ahead variant");
+        assert!(stats.iters >= 2);
+        assert_eq!(stats.panel_widths.iter().sum::<usize>(), 64);
+    }
+}

@@ -1,0 +1,346 @@
+//! Panel factorizations: the *inner LU* of the paper (§4.2, Fig. 12).
+//!
+//! The outer factorization hands an `m × b` panel to one of these
+//! routines, which factorize it with inner block size `b_i`:
+//!
+//! - [`panel_rl`] — blocked right-looking (eager): each step factorizes a
+//!   `b_i`-column sub-panel and immediately updates everything to its
+//!   right inside the panel.
+//! - [`panel_ll`] — blocked left-looking (lazy): each step first brings
+//!   the current `b_i` columns up to date (swaps + TRSM + GEMM of all
+//!   previous steps) and then factorizes them; columns to the right are
+//!   **never touched early**. This makes Early Termination delay-free: an
+//!   abort between steps leaves a clean prefix of fully-factorized
+//!   columns and a suffix in the original (un-permuted, un-updated)
+//!   state — paper §4.2 and footnote 3.
+//!
+//! Both return pivots *relative to the panel* and apply row swaps across
+//! the full panel width (RL) / the already-factored prefix (LL).
+
+use super::unblocked::lu_unblocked;
+use crate::blis::{gemm, laswp, trsm_llu, BlisParams};
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Outcome of a panel factorization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanelOutcome {
+    /// Pivot rows relative to the panel (length = columns factorized).
+    pub ipiv: Vec<usize>,
+    /// Number of columns actually factorized (`< n` only after an early
+    /// termination).
+    pub k_done: usize,
+    /// Whether an ET signal cut the factorization short.
+    pub terminated_early: bool,
+}
+
+/// Blocked right-looking panel factorization with inner block `bi`
+/// (`bi <= 1` or `bi >= n` degrades to the unblocked algorithm).
+/// BDP within the panel comes from the crew (paper: the PANEL "also
+/// extracts BDP from the same two kernels").
+pub fn panel_rl(crew: &mut Crew, params: &BlisParams, a: MatMut, bi: usize) -> PanelOutcome {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    if bi <= 1 || bi >= kmax {
+        let ipiv = lu_unblocked(a);
+        let k_done = ipiv.len();
+        return PanelOutcome {
+            ipiv,
+            k_done,
+            terminated_early: false,
+        };
+    }
+    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
+    let mut k = 0;
+    while k < kmax {
+        let b = bi.min(kmax - k);
+        // Factorize the current sub-panel (rows k.., cols k..k+b).
+        let sub = a.sub(k, k, m - k, b);
+        let piv_local = lu_unblocked(sub);
+        // Absolute (panel-relative) pivots; swap the rest of the panel:
+        // left of the sub-panel and right of it.
+        let lo = ipiv.len();
+        ipiv.extend(piv_local.iter().map(|p| p + k));
+        laswp(crew, a, &ipiv, lo, lo + b, 0, k);
+        laswp(crew, a, &ipiv, lo, lo + b, k + b, n);
+        // Eager (right-looking) update of the trailing panel columns.
+        let rest = n - k - b;
+        if rest > 0 {
+            trsm_llu(
+                crew,
+                params,
+                a.sub(k, k, b, b).as_ref(),
+                a.sub(k, k + b, b, rest),
+            );
+            if m - k - b > 0 {
+                gemm(
+                    crew,
+                    params,
+                    -1.0,
+                    a.sub(k + b, k, m - k - b, b).as_ref(),
+                    a.sub(k, k + b, b, rest).as_ref(),
+                    a.sub(k + b, k + b, m - k - b, rest),
+                );
+            }
+        }
+        k += b;
+    }
+    PanelOutcome {
+        ipiv,
+        k_done: kmax,
+        terminated_early: false,
+    }
+}
+
+/// Blocked left-looking panel factorization with inner block `bi`,
+/// supporting Early Termination.
+///
+/// `stop` is the ET flag (paper §4.2): set by the remainder-update team
+/// when its work is done; polled here *at the end of every inner
+/// iteration*. On observing it, the routine returns immediately with
+/// `k_done < n`. At least one inner block is always completed (forward
+/// progress). Per the paper, no lock is needed: the flag has a single
+/// writer and a single reader, and the reader tolerates staleness.
+///
+/// Post-conditions on early termination at `k_done`:
+/// - columns `0..k_done` hold the final `L\U` factors of the panel's
+///   leading `k_done` columns, with all swaps applied within `0..k_done`;
+/// - columns `k_done..n` are **exactly as on entry** (no swaps, no
+///   updates) — they rejoin the trailing submatrix of the outer
+///   factorization.
+pub fn panel_ll(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: MatMut,
+    bi: usize,
+    stop: Option<&AtomicBool>,
+) -> PanelOutcome {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    let bi = bi.max(1);
+    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
+    let mut k = 0;
+    let mut terminated_early = false;
+    while k < kmax {
+        let b = bi.min(kmax - k);
+        // Bring columns k..k+b up to date (left-looking):
+        // 1. previous swaps,
+        let cur = a.sub(0, k, m, b);
+        laswp(crew, cur, &ipiv, 0, k, 0, b);
+        if k > 0 {
+            // 2. TRSM with the already-factored TRILU(A[0..k, 0..k]),
+            trsm_llu(
+                crew,
+                params,
+                a.sub(0, 0, k, k).as_ref(),
+                a.sub(0, k, k, b),
+            );
+            // 3. GEMM with the factored block column below it.
+            gemm(
+                crew,
+                params,
+                -1.0,
+                a.sub(k, 0, m - k, k).as_ref(),
+                a.sub(0, k, k, b).as_ref(),
+                a.sub(k, k, m - k, b),
+            );
+        }
+        // 4. factorize the diagonal block + below.
+        let piv_local = lu_unblocked(a.sub(k, k, m - k, b));
+        let lo = ipiv.len();
+        ipiv.extend(piv_local.iter().map(|p| p + k));
+        // 5. apply this block's swaps to the factored prefix only
+        //    (columns to the right stay untouched — the LL property).
+        laswp(crew, a, &ipiv, lo, lo + b, 0, k);
+        k += b;
+        // ET poll — end of the inner iteration (paper Fig. 13).
+        if k < kmax {
+            if let Some(flag) = stop {
+                if flag.load(Ordering::Acquire) {
+                    terminated_early = true;
+                    break;
+                }
+            }
+        }
+    }
+    PanelOutcome {
+        ipiv,
+        k_done: k,
+        terminated_early,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+    use crate::util::quickcheck_lite::{forall_res, Gen};
+
+    fn residual_of_prefix(a0: &Matrix, f: &Matrix, ipiv: &[usize], k_done: usize) -> f64 {
+        // Check PA = LU on the leading k_done columns.
+        let m = a0.rows();
+        let lead0 = Matrix::from_fn(m, k_done, |i, j| a0[(i, j)]);
+        let leadf = Matrix::from_fn(m, k_done, |i, j| f[(i, j)]);
+        naive::lu_residual(&lead0, &leadf, ipiv)
+    }
+
+    #[test]
+    fn panel_rl_matches_unblocked_numerically() {
+        let params = BlisParams::tiny();
+        for &(m, n, bi) in &[(40usize, 16usize, 4usize), (33, 12, 5), (16, 16, 8), (9, 9, 2)] {
+            let a0 = Matrix::random(m, n, (m + n + bi) as u64);
+            let mut f1 = a0.clone();
+            let mut crew = Crew::new();
+            let out = panel_rl(&mut crew, &params, f1.view_mut(), bi);
+            assert_eq!(out.k_done, m.min(n));
+            assert!(!out.terminated_early);
+            let r = naive::lu_residual(&a0, &f1, &out.ipiv);
+            assert!(r < 1e-12, "m={m} n={n} bi={bi} r={r}");
+            assert!(naive::growth_bounded(&f1));
+        }
+    }
+
+    #[test]
+    fn panel_rl_unblocked_fallback_is_bitwise_exact() {
+        let a0 = Matrix::random(30, 8, 3);
+        let mut f1 = a0.clone();
+        let mut f2 = a0.clone();
+        let mut crew = Crew::new();
+        let out = panel_rl(&mut crew, &BlisParams::tiny(), f1.view_mut(), 0);
+        let piv2 = lu_unblocked(f2.view_mut());
+        assert_eq!(out.ipiv, piv2);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn panel_ll_full_run_matches_rl_numerically() {
+        let params = BlisParams::tiny();
+        for &(m, n, bi) in &[(48usize, 24usize, 8usize), (21, 21, 4), (64, 16, 16)] {
+            let a0 = Matrix::random(m, n, (m * 3 + n + bi) as u64);
+            let mut f_ll = a0.clone();
+            let mut f_rl = a0.clone();
+            let mut crew = Crew::new();
+            let out_ll = panel_ll(&mut crew, &params, f_ll.view_mut(), bi, None);
+            let out_rl = panel_rl(&mut crew, &params, f_rl.view_mut(), bi);
+            assert_eq!(out_ll.k_done, m.min(n));
+            let r = naive::lu_residual(&a0, &f_ll, &out_ll.ipiv);
+            assert!(r < 1e-12, "LL residual {r}");
+            // Same pivots (generic matrices; FP ties are measure-zero).
+            assert_eq!(out_ll.ipiv, out_rl.ipiv);
+            let d = f_ll.max_abs_diff(&f_rl);
+            assert!(d < 1e-10, "LL vs RL factors diff {d}");
+        }
+    }
+
+    #[test]
+    fn panel_ll_early_termination_leaves_clean_state() {
+        let params = BlisParams::tiny();
+        let (m, n, bi) = (40usize, 24usize, 4usize);
+        let a0 = Matrix::random(m, n, 17);
+        let mut f = a0.clone();
+        let stop = AtomicBool::new(true); // already set: cut after first block
+        let mut crew = Crew::new();
+        let out = panel_ll(&mut crew, &params, f.view_mut(), bi, Some(&stop));
+        assert!(out.terminated_early);
+        assert_eq!(out.k_done, bi, "stops after exactly one inner block");
+        assert_eq!(out.ipiv.len(), bi);
+        // Prefix is a valid LU of the first k_done columns...
+        let r = residual_of_prefix(&a0, &f, &out.ipiv, out.k_done);
+        assert!(r < 1e-12, "prefix residual {r}");
+        // ...and the suffix columns are EXACTLY as on entry.
+        for j in out.k_done..n {
+            for i in 0..m {
+                assert_eq!(f[(i, j)], a0[(i, j)], "suffix touched at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_ll_stop_mid_way() {
+        // Set the flag from another thread while factorization runs;
+        // whatever prefix is factored must be valid and the suffix
+        // untouched.
+        let params = BlisParams::tiny();
+        let (m, n, bi) = (96usize, 64usize, 8usize);
+        let a0 = Matrix::random(m, n, 23);
+        let mut f = a0.clone();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let s2 = std::sync::Arc::clone(&stop);
+        let setter = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            s2.store(true, Ordering::Release);
+        });
+        let mut crew = Crew::new();
+        let out = panel_ll(&mut crew, &params, f.view_mut(), bi, Some(&stop));
+        setter.join().unwrap();
+        assert!(out.k_done >= bi && out.k_done <= n);
+        assert_eq!(out.k_done % bi, 0);
+        let r = residual_of_prefix(&a0, &f, &out.ipiv, out.k_done);
+        assert!(r < 1e-12, "prefix residual {r}");
+        for j in out.k_done..n {
+            for i in 0..m {
+                assert_eq!(f[(i, j)], a0[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn panel_ll_never_stops_at_zero() {
+        let params = BlisParams::tiny();
+        let a0 = Matrix::random(16, 8, 31);
+        let mut f = a0.clone();
+        let stop = AtomicBool::new(true);
+        let mut crew = Crew::new();
+        let out = panel_ll(&mut crew, &params, f.view_mut(), 4, Some(&stop));
+        assert!(out.k_done >= 4, "must complete at least one block");
+    }
+
+    #[test]
+    fn property_panel_ll_prefix_valid_any_cut() {
+        forall_res("panel_ll ET prefix is a valid LU", 15, |g: &mut Gen| {
+            let m = g.usize_in(8, 60);
+            let n = g.usize_in(4, 32).min(m);
+            let bi = g.choose(&[2usize, 4, 8]);
+            let seed = g.seed();
+            g.label(format!("m={m} n={n} bi={bi}"));
+            let a0 = Matrix::random(m, n, seed);
+            let mut f = a0.clone();
+            let stop = AtomicBool::new(g.bool_with(0.7));
+            let mut crew = Crew::new();
+            let out = panel_ll(
+                &mut crew,
+                &BlisParams::tiny(),
+                f.view_mut(),
+                bi,
+                Some(&stop),
+            );
+            if out.k_done == 0 {
+                return Err("no progress".into());
+            }
+            let r = residual_of_prefix(&a0, &f, &out.ipiv, out.k_done);
+            if r > 1e-11 {
+                return Err(format!("prefix residual {r}"));
+            }
+            for j in out.k_done..n {
+                for i in 0..m {
+                    if f[(i, j)] != a0[(i, j)] {
+                        return Err(format!("suffix touched at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ll_is_lazier_than_rl_flop_accounting() {
+        // Paper footnote 3: when stopped at column k of an m×n panel, LL
+        // has performed ~m·k² − k³/3 flops vs RL's additional
+        // 2(n−k)(mk − k²/2). Sanity-check the formulas' ordering.
+        let (m, n, k) = (1000.0f64, 256.0f64, 64.0f64);
+        let ll = m * k * k - k * k * k / 3.0;
+        let rl = ll + 2.0 * (n - k) * (m * k - k * k / 2.0);
+        assert!(rl > ll * 2.0, "RL does much more eager work");
+    }
+}

@@ -1,0 +1,70 @@
+//! Unblocked right-looking LU with partial pivoting (paper Fig. 3, left)
+//! — the leaf of every panel factorization.
+//!
+//! Operates on a (typically tall, narrow) panel `A` of shape `m × n`:
+//! at step `k` it searches the pivot in column `k`, swaps rows across the
+//! *whole panel width*, scales the subdiagonal and applies a rank-1
+//! update to the trailing columns. Returns pivots as row indices
+//! *relative to the panel* (LAPACK convention, `ipiv[k] >= k`).
+
+use crate::blis::small::{ger_update, iamax_col, scal_col};
+use crate::matrix::MatMut;
+
+/// Factorize `a` in place; returns local pivots. Exactly singular columns
+/// (pivot == 0) are tolerated LAPACK-style: the column is skipped and the
+/// zero stays on the diagonal.
+pub fn lu_unblocked(a: MatMut) -> Vec<usize> {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    let mut ipiv = Vec::with_capacity(kmax);
+    for k in 0..kmax {
+        let piv = iamax_col(a, k, k, m);
+        ipiv.push(piv);
+        a.swap_rows(k, piv, 0, n);
+        let akk = a.at(k, k);
+        if akk != 0.0 {
+            scal_col(a, k, k + 1, m, 1.0 / akk);
+            ger_update(a, k + 1, m, k + 1, n, k, k);
+        }
+    }
+    ipiv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+
+    #[test]
+    fn matches_naive_reference_bitwise() {
+        for &(m, n) in &[(1usize, 1usize), (6, 6), (20, 4), (4, 20), (13, 13)] {
+            let a0 = Matrix::random(m, n, (m * 31 + n) as u64);
+            let mut a1 = a0.clone();
+            let mut a2 = a0.clone();
+            let p1 = lu_unblocked(a1.view_mut());
+            let p2 = naive::lu(a2.view_mut());
+            assert_eq!(p1, p2, "pivots m={m} n={n}");
+            assert_eq!(a1, a2, "factors m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn residual_is_tiny() {
+        let a0 = Matrix::random(40, 24, 5);
+        let mut f = a0.clone();
+        let ipiv = lu_unblocked(f.view_mut());
+        let r = naive::lu_residual(&a0, &f, &ipiv);
+        assert!(r < 1e-13, "residual {r}");
+        assert!(naive::growth_bounded(&f));
+    }
+
+    #[test]
+    fn zero_pivot_column_is_skipped() {
+        let mut a = Matrix::zeros(3, 3);
+        a[(0, 1)] = 1.0;
+        a[(1, 2)] = 2.0;
+        let ipiv = lu_unblocked(a.view_mut());
+        assert_eq!(ipiv.len(), 3);
+        assert!(a.data().iter().all(|x| x.is_finite()));
+    }
+}

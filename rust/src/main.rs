@@ -1,0 +1,304 @@
+//! `mlu` — the malleable-LU coordinator CLI.
+//!
+//! ```text
+//! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
+//! mlu solve     --n 512  --variant mb            # factor + solve + residual
+//! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
+//! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
+//! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
+//! mlu xla       --n 192 --bo 64 [--stepped]      # PJRT artifact demo
+//! mlu info
+//! ```
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::cli::{render_table, Args};
+use malleable_lu::lu::{self, LuConfig, Variant};
+use malleable_lu::matrix::Matrix;
+use malleable_lu::pool::Pool;
+use malleable_lu::sim::{self, figures, HwModel};
+use malleable_lu::util::{gflops, lu_flops, timed};
+use malleable_lu::{runtime, trace};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "factorize" => cmd_factorize(&args),
+        "solve" => cmd_solve(&args),
+        "trace" => cmd_trace(&args),
+        "fig" => cmd_fig(&args),
+        "gepp" => cmd_gepp(&args),
+        "xla" => cmd_xla(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!("{}", HELP);
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "mlu — malleable thread-level LU (see README.md)
+commands: factorize | solve | trace | fig {14,15,16,17} | gepp | xla | info";
+
+fn lu_config(args: &Args) -> LuConfig {
+    LuConfig {
+        variant: Variant::parse(&args.get_str("variant", "et")).unwrap_or_else(|| {
+            eprintln!("unknown variant; using et");
+            Variant::EarlyTerm
+        }),
+        bo: args.get("bo", 256),
+        bi: args.get("bi", 32),
+        threads: args.get("threads", 6),
+        t_pf: args.get("t-pf", 1),
+        params: BlisParams::default(),
+        entry: if args.has("immediate") {
+            malleable_lu::pool::EntryPolicy::Immediate
+        } else {
+            malleable_lu::pool::EntryPolicy::JobBoundary
+        },
+    }
+}
+
+fn cmd_factorize(args: &Args) -> i32 {
+    let n = args.get("n", 1024usize);
+    let cfg = lu_config(args);
+    let seed = args.get("seed", 42u64);
+    let a0 = Matrix::random(n, n, seed);
+    let mut f = a0.clone();
+    let (secs, out) = timed(|| lu::factorize(&mut f, &cfg, None));
+    println!(
+        "{} n={n} bo={} bi={} t={}: {:.3}s  {:.2} GFLOPS",
+        cfg.variant.name(),
+        cfg.bo,
+        cfg.bi,
+        cfg.threads,
+        secs,
+        gflops(lu_flops(n, n), secs)
+    );
+    if let Some(stats) = &out.la_stats {
+        println!(
+            "  iters={} et_cuts={} ws_fwd={} ws_rev={} panel_widths[..8]={:?}",
+            stats.iters,
+            stats.et_cuts,
+            stats.ws_forward,
+            stats.ws_reverse,
+            &stats.panel_widths[..stats.panel_widths.len().min(8)]
+        );
+    }
+    if args.has("check") {
+        let r = lu::residual(&a0, &f, &out.ipiv);
+        println!("  residual ‖PA−LU‖/‖A‖ = {r:.3e}");
+        if r > 1e-10 {
+            eprintln!("RESIDUAL TOO LARGE");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let n = args.get("n", 512usize);
+    let cfg = lu_config(args);
+    let a0 = Matrix::random_dd(n, args.get("seed", 7u64));
+    let x_true: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
+    let mut b = vec![0.0; n];
+    for j in 0..n {
+        for i in 0..n {
+            b[i] += a0[(i, j)] * x_true[j];
+        }
+    }
+    let mut f = a0.clone();
+    let (secs, out) = timed(|| lu::factorize(&mut f, &cfg, None));
+    let x = lu::solve(&f, &out.ipiv, &b);
+    let err = x
+        .iter()
+        .zip(&x_true)
+        .fold(0.0f64, |acc, (a, b)| acc.max((a - b).abs()));
+    println!(
+        "solved {n}x{n} via {} in {:.3}s ({:.2} GFLOPS); max |x−x*| = {err:.3e}",
+        cfg.variant.name(),
+        secs,
+        gflops(lu_flops(n, n), secs)
+    );
+    i32::from(err > 1e-8)
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let n = args.get("n", 2000usize);
+    let cfg = lu_config(args);
+    let width = args.get("width", 100usize);
+    let spans = if args.has("sim") || args.get("n", 0usize) > 4000 {
+        // Virtual-time trace on the simulated 6-core testbed.
+        let v = sim::SimVariant::parse(&args.get_str("variant", "mb"))
+            .unwrap_or(sim::SimVariant::Mb);
+        let out = sim::simulate(
+            &HwModel::default(),
+            v,
+            n,
+            cfg.bo,
+            cfg.bi,
+            cfg.threads,
+            cfg.t_pf,
+            true,
+        );
+        println!(
+            "[sim] {} n={n} bo={}: {:.3}s virtual, {:.1} GFLOPS, {} iters, {} cuts",
+            v.name(),
+            cfg.bo,
+            out.time,
+            out.gflops,
+            out.iters,
+            out.et_cuts
+        );
+        out.spans
+    } else {
+        let rec = trace::start();
+        let mut a = Matrix::random(n, n, 1);
+        let (secs, _) = timed(|| lu::factorize(&mut a, &cfg, None));
+        trace::stop();
+        println!(
+            "[real] {} n={n}: {:.3}s wall ({} threads, 1-core host: overlap is logical)",
+            cfg.variant.name(),
+            secs,
+            cfg.threads
+        );
+        rec.spans()
+    };
+    print!("{}", trace::ascii_gantt(&spans, width));
+    let out_path = args.get_str("out", "");
+    if !out_path.is_empty() {
+        std::fs::write(&out_path, trace::chrome_json(&spans)).expect("write trace");
+        println!("wrote {out_path} (open in chrome://tracing or Perfetto)");
+    }
+    0
+}
+
+fn cmd_fig(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("16");
+    let hw = HwModel::default();
+    let grids = if args.has("paper") {
+        figures::Grids::paper()
+    } else {
+        figures::Grids::quick()
+    };
+    let t = args.get("threads", 6usize);
+    let table = match which {
+        "14" => {
+            let left = figures::fig14_gepp(&hw, &grids);
+            let right = figures::fig14_ratio(&hw, &grids);
+            print!("{}", render_table(&left));
+            print!("{}", render_table(&right));
+            let out = args.get_str("out", "");
+            if !out.is_empty() {
+                std::fs::write(&out, format!("{}{}", left.to_csv(), right.to_csv()))
+                    .expect("write csv");
+            }
+            return 0;
+        }
+        "15" => figures::fig15_optimal_b(&hw, &grids, t),
+        "16" => figures::fig16_variants(&hw, &grids, t),
+        "17" => figures::fig17_et_vs_os(&hw, &grids, t),
+        _ => {
+            eprintln!("unknown figure {which}; expected 14|15|16|17");
+            return 1;
+        }
+    };
+    print!("{}", render_table(&table));
+    let out = args.get_str("out", "");
+    if !out.is_empty() {
+        std::fs::write(&out, table.to_csv()).expect("write csv");
+        println!("wrote {out}");
+    }
+    0
+}
+
+fn cmd_gepp(args: &Args) -> i32 {
+    // Real-mode GEPP curve on this host (absolute numbers are 1-core
+    // container numbers; the paper-scale curve comes from `fig 14`).
+    let m = args.get("m", 768usize);
+    let n = args.get("n", m);
+    let kmax = args.get("kmax", 256usize);
+    let step = args.get("step", 32usize);
+    let reps = args.get("reps", 3usize);
+    let params = BlisParams::default();
+    println!("k,gflops (real 1-thread GEPP, m={m} n={n})");
+    let mut k = step;
+    while k <= kmax {
+        let a = Matrix::random(m, k, 1);
+        let b = Matrix::random(k, n, 2);
+        let mut c = Matrix::zeros(m, n);
+        let mut crew = malleable_lu::pool::Crew::new();
+        let stats = malleable_lu::util::stats::bench_seconds(1, reps, || {
+            malleable_lu::blis::gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+        });
+        println!(
+            "{k},{:.2}",
+            gflops(malleable_lu::util::gemm_flops(m, n, k), stats.median)
+        );
+        k += step;
+    }
+    0
+}
+
+fn cmd_xla(args: &Args) -> i32 {
+    let dir = args.get_str("artifacts", "artifacts");
+    let n = args.get("n", 192usize);
+    let bo = args.get("bo", 64usize);
+    let rt = match runtime::Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e:#}");
+            return 1;
+        }
+    };
+    println!("artifacts: {}", rt.available().join(", "));
+    let a = Matrix::random(n, n, 5);
+    let run = if args.has("stepped") {
+        runtime::xla_lu::factorize_stepped(&rt, &a, bo)
+    } else {
+        runtime::xla_lu::factorize_full(&rt, &a, bo)
+    };
+    match run {
+        Ok((f, piv)) => {
+            let r = malleable_lu::matrix::naive::lu_residual(&a, &f, &piv);
+            println!("LU_XLA n={n} bo={bo}: residual {r:.3e}");
+            match runtime::xla_lu::cross_validate(&rt, &a, bo, 16) {
+                Ok((diff, piv_eq)) => {
+                    println!(
+                        "cross-check vs rust BLIS: max|Δ|={diff:.3e} pivots_equal={piv_eq}"
+                    );
+                    i32::from(r > 1e-10 || diff > 1e-9 || !piv_eq)
+                }
+                Err(e) => {
+                    eprintln!("cross-validate failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("LU_XLA failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    let hw = HwModel::default();
+    println!("malleable-lu {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "simulated testbed: {} cores, DGEMM peak {:.1} GFLOPS, GEPP(256) {:.1} GFLOPS",
+        hw.cores,
+        hw.machine_peak(),
+        hw.gepp_gflops(256, hw.cores)
+    );
+    println!(
+        "BLIS params: {:?} (MR={} NR={})",
+        BlisParams::default(),
+        malleable_lu::blis::params::MR,
+        malleable_lu::blis::params::NR
+    );
+    let pool = Pool::new(2);
+    println!("pool smoke: {} workers ok", pool.workers());
+    0
+}

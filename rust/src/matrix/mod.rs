@@ -1,0 +1,463 @@
+//! Column-major dense matrices and views.
+//!
+//! Storage follows BLAS/LAPACK conventions: column-major with a leading
+//! dimension (`ld`), so every submatrix of a [`Matrix`] is itself
+//! addressable as a strided view. Parallel kernels operate on [`MatMut`]
+//! raw views; the safety discipline is the classic BLAS one — concurrent
+//! writers always target disjoint blocks, enforced structurally by the
+//! algorithms (each thread owns a distinct column/row range).
+
+pub mod naive;
+
+use crate::util::Prng;
+
+/// Owned column-major `f64` matrix (`ld == rows`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix with entries drawn uniformly from `(0,1)` — the paper's
+    /// experimental workload (§5).
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut m = Self::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.next_f64();
+        }
+        m
+    }
+
+    /// Diagonally dominant random matrix (well conditioned; handy for
+    /// tests that want tiny residuals).
+    pub fn random_dd(n: usize, seed: u64) -> Self {
+        let mut m = Self::random(n, n, seed);
+        for i in 0..n {
+            m[(i, i)] += n as f64;
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from row-major slice (convenient for literals in tests).
+    pub fn from_rows(rows: usize, cols: usize, vals: &[f64]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        Self::from_fn(rows, cols, |i, j| vals[i * cols + j])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw column-major data (length `rows*cols`).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Full-matrix mutable raw view.
+    pub fn view_mut(&mut self) -> MatMut {
+        MatMut {
+            ptr: self.data.as_mut_ptr(),
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.rows,
+        }
+    }
+
+    /// Full-matrix shared raw view.
+    pub fn view(&self) -> MatRef {
+        MatRef {
+            ptr: self.data.as_ptr(),
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.rows,
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm_f(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn norm_max(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise maximum absolute difference.
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0, |a, (x, y)| a.max((x - y).abs()))
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Self {
+        Self::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Copy entries to row-major order (for XLA literal interchange).
+    pub fn to_row_major(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.push(self[(i, j)]);
+            }
+        }
+        out
+    }
+
+    /// Build from row-major data (for XLA literal interchange).
+    pub fn from_row_major(rows: usize, cols: usize, vals: &[f64]) -> Self {
+        Self::from_rows(rows, cols, vals)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+/// Shared (read-only) strided view.
+#[derive(Copy, Clone, Debug)]
+pub struct MatRef {
+    ptr: *const f64,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+// SAFETY: MatRef is a read-only view; the owning Matrix outlives all uses
+// by construction of the kernels (scoped threads / crew jobs joined before
+// the borrow ends).
+unsafe impl Send for MatRef {}
+unsafe impl Sync for MatRef {}
+
+impl MatRef {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(i + j * self.ld) }
+    }
+
+    /// Pointer to the start of column `j`.
+    #[inline(always)]
+    pub fn col_ptr(&self, j: usize) -> *const f64 {
+        debug_assert!(j <= self.cols);
+        unsafe { self.ptr.add(j * self.ld) }
+    }
+
+    /// Subview at `(i, j)` of shape `m × n`.
+    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatRef {
+        debug_assert!(i + m <= self.rows && j + n <= self.cols);
+        MatRef {
+            ptr: unsafe { self.ptr.add(i + j * self.ld) },
+            rows: m,
+            cols: n,
+            ld: self.ld,
+        }
+    }
+
+    /// Copy into an owned matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    }
+}
+
+/// Mutable strided view used by the parallel kernels.
+///
+/// `Copy` on purpose: kernels hand disjoint-block aliases to worker
+/// threads. All element access is bounds-debug-checked; disjointness of
+/// concurrent writes is an algorithmic invariant (see module docs).
+#[derive(Copy, Clone, Debug)]
+pub struct MatMut {
+    ptr: *mut f64,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+// SAFETY: see module docs — concurrent writers always own disjoint blocks.
+unsafe impl Send for MatMut {}
+unsafe impl Sync for MatMut {}
+
+impl MatMut {
+    /// Construct from raw parts (used by packing buffers).
+    ///
+    /// # Safety
+    /// `ptr` must be valid for `ld*(cols-1)+rows` reads/writes for the
+    /// lifetime of all uses of the view.
+    pub unsafe fn from_raw(ptr: *mut f64, rows: usize, cols: usize, ld: usize) -> Self {
+        Self {
+            ptr,
+            rows,
+            cols,
+            ld,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(i + j * self.ld) }
+    }
+
+    #[inline(always)]
+    pub fn set(&self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(i + j * self.ld) = v }
+    }
+
+    #[inline(always)]
+    pub fn update(&self, i: usize, j: usize, f: impl FnOnce(f64) -> f64) {
+        self.set(i, j, f(self.at(i, j)));
+    }
+
+    /// Pointer to the start of column `j`.
+    #[inline(always)]
+    pub fn col_ptr(&self, j: usize) -> *mut f64 {
+        debug_assert!(j <= self.cols);
+        unsafe { self.ptr.add(j * self.ld) }
+    }
+
+    /// Mutable column slice.
+    #[inline(always)]
+    pub fn col_mut(&self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(j * self.ld), self.rows) }
+    }
+
+    /// Subview at `(i, j)` of shape `m × n`.
+    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatMut {
+        debug_assert!(
+            i + m <= self.rows && j + n <= self.cols,
+            "sub({i},{j},{m},{n}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
+        MatMut {
+            ptr: unsafe { self.ptr.add(i + j * self.ld) },
+            rows: m,
+            cols: n,
+            ld: self.ld,
+        }
+    }
+
+    /// Read-only alias of this view.
+    pub fn as_ref(&self) -> MatRef {
+        MatRef {
+            ptr: self.ptr,
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.ld,
+        }
+    }
+
+    /// Swap rows `r1` and `r2` across columns `jlo..jhi`.
+    pub fn swap_rows(&self, r1: usize, r2: usize, jlo: usize, jhi: usize) {
+        debug_assert!(r1 < self.rows && r2 < self.rows && jhi <= self.cols);
+        if r1 == r2 {
+            return;
+        }
+        for j in jlo..jhi {
+            unsafe {
+                let p1 = self.ptr.add(r1 + j * self.ld);
+                let p2 = self.ptr.add(r2 + j * self.ld);
+                std::ptr::swap(p1, p2);
+            }
+        }
+    }
+
+    /// Copy into an owned matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        self.as_ref().to_matrix()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_indexing() {
+        let mut m = Matrix::zeros(3, 2);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 2);
+        m[(2, 1)] = 5.0;
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.data()[2 + 3], 5.0); // col-major position
+
+        let e = Matrix::eye(3);
+        assert_eq!(e[(1, 1)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn from_rows_is_row_major() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn row_major_roundtrip() {
+        let m = Matrix::random(4, 7, 3);
+        let rm = m.to_row_major();
+        let back = Matrix::from_row_major(4, 7, &rm);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_unit_interval() {
+        let a = Matrix::random(5, 5, 42);
+        let b = Matrix::random(5, 5, 42);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|&x| (0.0..1.0).contains(&x)));
+        let c = Matrix::random(5, 5, 43);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn views_address_submatrices() {
+        let mut m = Matrix::from_fn(6, 6, |i, j| (10 * i + j) as f64);
+        let v = m.view_mut();
+        let s = v.sub(2, 3, 3, 2);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.at(0, 0), 23.0);
+        assert_eq!(s.at(2, 1), 44.0);
+        s.set(1, 0, -1.0);
+        assert_eq!(m[(3, 3)], -1.0);
+    }
+
+    #[test]
+    fn nested_sub_composes() {
+        let mut m = Matrix::from_fn(8, 8, |i, j| (i * 8 + j) as f64);
+        let v = m.view_mut();
+        let s1 = v.sub(1, 1, 6, 6);
+        let s2 = s1.sub(2, 3, 2, 2);
+        assert_eq!(s2.at(0, 0), m[(3, 4)]);
+        assert_eq!(s2.at(1, 1), m[(4, 5)]);
+    }
+
+    #[test]
+    fn swap_rows_partial_columns() {
+        let mut m = Matrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let v = m.view_mut();
+        v.swap_rows(0, 2, 1, 3);
+        assert_eq!(m[(0, 0)], 0.0); // untouched column
+        assert_eq!(m[(0, 1)], 21.0);
+        assert_eq!(m[(2, 1)], 1.0);
+        assert_eq!(m[(0, 2)], 22.0);
+        assert_eq!(m[(0, 3)], 3.0); // untouched column
+    }
+
+    #[test]
+    fn swap_same_row_is_noop() {
+        let mut m = Matrix::random(4, 4, 1);
+        let before = m.clone();
+        m.view_mut().swap_rows(2, 2, 0, 4);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_rows(2, 2, &[3.0, 0.0, 0.0, -4.0]);
+        assert!((m.norm_f() - 5.0).abs() < 1e-15);
+        assert_eq!(m.norm_max(), 4.0);
+    }
+
+    #[test]
+    fn transpose() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let t = m.transposed();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t.transposed(), m);
+    }
+
+    #[test]
+    fn col_mut_is_column() {
+        let mut m = Matrix::from_fn(3, 2, |i, j| (i + 10 * j) as f64);
+        let v = m.view_mut();
+        let c1 = v.col_mut(1);
+        assert_eq!(c1, &[10.0, 11.0, 12.0]);
+        c1[0] = 99.0;
+        assert_eq!(m[(0, 1)], 99.0);
+    }
+}

@@ -1,0 +1,403 @@
+//! Naive reference kernels — the correctness oracles for the BLIS
+//! substrate and the LU variants. Triple loops, no blocking, no
+//! parallelism; trivially auditable.
+
+use super::{MatMut, MatRef, Matrix};
+
+/// `C += alpha * A * B` (naive triple loop).
+pub fn gemm(alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "gemm: inner dims");
+    assert_eq!(c.rows(), m, "gemm: C rows");
+    assert_eq!(c.cols(), n, "gemm: C cols");
+    for j in 0..n {
+        for p in 0..k {
+            let bpj = alpha * b.at(p, j);
+            if bpj == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                c.update(i, j, |x| x + a.at(i, p) * bpj);
+            }
+        }
+    }
+}
+
+/// Owned-output convenience: `A·B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(1.0, a.view(), b.view(), c.view_mut());
+    c
+}
+
+/// `B := TRILU(A)⁻¹ · B` — left solve with the *unit* lower triangle of
+/// `A` (diagonal treated as ones, strictly-upper part ignored). This is
+/// the TRSM case appearing in the LU loop body (RL2/LL1).
+pub fn trsm_llu(a: MatRef, b: MatMut) {
+    let m = b.rows();
+    assert_eq!(a.rows(), m);
+    assert_eq!(a.cols(), m);
+    for j in 0..b.cols() {
+        for i in 0..m {
+            let mut s = b.at(i, j);
+            for p in 0..i {
+                s -= a.at(i, p) * b.at(p, j);
+            }
+            b.set(i, j, s);
+        }
+    }
+}
+
+/// `B := A⁻¹ · B` with `A` upper triangular (non-unit diagonal) — used by
+/// the linear-system solver after factorization.
+pub fn trsm_upper(a: MatRef, b: MatMut) {
+    let m = b.rows();
+    assert_eq!(a.rows(), m);
+    assert_eq!(a.cols(), m);
+    for j in 0..b.cols() {
+        for i in (0..m).rev() {
+            let mut s = b.at(i, j);
+            for p in i + 1..m {
+                s -= a.at(i, p) * b.at(p, j);
+            }
+            b.set(i, j, s / a.at(i, i));
+        }
+    }
+}
+
+/// Unblocked right-looking LU with partial pivoting (reference).
+///
+/// Overwrites `a` with the packed `L\U` factors and returns `ipiv` in
+/// LAPACK convention: row `i` was swapped with row `ipiv[i]` (`ipiv[i] >=
+/// i`). Panics on an exactly singular pivot only if `strict`.
+pub fn lu(a: MatMut) -> Vec<usize> {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    let mut ipiv = Vec::with_capacity(kmax);
+    for k in 0..kmax {
+        // Pivot search: argmax |A(k..m, k)|.
+        let mut piv = k;
+        let mut best = a.at(k, k).abs();
+        for i in k + 1..m {
+            let v = a.at(i, k).abs();
+            if v > best {
+                best = v;
+                piv = i;
+            }
+        }
+        ipiv.push(piv);
+        a.swap_rows(k, piv, 0, n);
+        let akk = a.at(k, k);
+        if akk != 0.0 {
+            // Scale the subdiagonal of column k. LAPACK-style reciprocal
+            // multiply (not division) so the blocked kernels can match
+            // this reference bitwise.
+            let rakk = 1.0 / akk;
+            for i in k + 1..m {
+                a.update(i, k, |x| x * rakk);
+            }
+            // Rank-1 update of the trailing submatrix.
+            for j in k + 1..n {
+                let akj = a.at(k, j);
+                if akj == 0.0 {
+                    continue;
+                }
+                for i in k + 1..m {
+                    a.update(i, j, |x| x - a.at(i, k) * akj);
+                }
+            }
+        }
+    }
+    ipiv
+}
+
+/// Apply the pivots produced by [`lu`] to a matrix: `B := P·B` where `P`
+/// is the permutation the factorization applied to `A`'s rows.
+pub fn apply_pivots(b: MatMut, ipiv: &[usize]) {
+    for (k, &p) in ipiv.iter().enumerate() {
+        b.swap_rows(k, p, 0, b.cols());
+    }
+}
+
+/// Extract `L` (unit lower trapezoidal, `m × min(m,n)`) from packed
+/// factors.
+pub fn extract_l(lu: &Matrix) -> Matrix {
+    let (m, n) = (lu.rows(), lu.cols());
+    let k = m.min(n);
+    Matrix::from_fn(m, k, |i, j| {
+        use std::cmp::Ordering::*;
+        match i.cmp(&j) {
+            Greater => lu[(i, j)],
+            Equal => 1.0,
+            Less => 0.0,
+        }
+    })
+}
+
+/// Extract `U` (upper trapezoidal, `min(m,n) × n`) from packed factors.
+pub fn extract_u(lu: &Matrix) -> Matrix {
+    let (m, n) = (lu.rows(), lu.cols());
+    let k = m.min(n);
+    Matrix::from_fn(k, n, |i, j| if j >= i { lu[(i, j)] } else { 0.0 })
+}
+
+/// Relative residual ‖P·A − L·U‖_F / ‖A‖_F of a factorization of `a`.
+pub fn lu_residual(a: &Matrix, lu_packed: &Matrix, ipiv: &[usize]) -> f64 {
+    let mut pa = a.clone();
+    apply_pivots(pa.view_mut(), ipiv);
+    let l = extract_l(lu_packed);
+    let u = extract_u(lu_packed);
+    let prod = matmul(&l, &u);
+    let mut diff = 0.0f64;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            let d = pa[(i, j)] - prod[(i, j)];
+            diff += d * d;
+        }
+    }
+    diff.sqrt() / a.norm_f().max(f64::MIN_POSITIVE)
+}
+
+/// Check |L| entries are ≤ 1 (guaranteed by partial pivoting).
+pub fn growth_bounded(lu_packed: &Matrix) -> bool {
+    let (m, n) = (lu_packed.rows(), lu_packed.cols());
+    for j in 0..m.min(n) {
+        for i in j + 1..m {
+            if lu_packed[(i, j)].abs() > 1.0 + 1e-12 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Solve `A·x = b` given packed LU factors and pivots (single RHS).
+pub fn lu_solve(lu_packed: &Matrix, ipiv: &[usize], b: &[f64]) -> Vec<f64> {
+    let n = lu_packed.rows();
+    assert_eq!(lu_packed.cols(), n, "lu_solve: square only");
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    // P·b
+    for (k, &p) in ipiv.iter().enumerate() {
+        x.swap(k, p);
+    }
+    // Forward substitution with unit L.
+    for i in 0..n {
+        let mut s = x[i];
+        for p in 0..i {
+            s -= lu_packed[(i, p)] * x[p];
+        }
+        x[i] = s;
+    }
+    // Back substitution with U.
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for p in i + 1..n {
+            s -= lu_packed[(i, p)] * x[p];
+        }
+        x[i] = s / lu_packed[(i, i)];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck_lite::{forall_res, Gen};
+
+    #[test]
+    fn gemm_small_known() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let b = Matrix::from_rows(2, 2, &[5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, Matrix::from_rows(2, 2, &[19., 22., 43., 50.]));
+    }
+
+    #[test]
+    fn gemm_accumulates_and_scales() {
+        let a = Matrix::from_rows(2, 1, &[1., 2.]);
+        let b = Matrix::from_rows(1, 2, &[3., 4.]);
+        let mut c = Matrix::eye(2);
+        gemm(2.0, a.view(), b.view(), c.view_mut());
+        assert_eq!(c, Matrix::from_rows(2, 2, &[7., 8., 12., 17.]));
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let a = Matrix::random(5, 5, 1);
+        let i5 = Matrix::eye(5);
+        let c = matmul(&a, &i5);
+        assert!(a.max_abs_diff(&c) < 1e-15);
+        let c2 = matmul(&i5, &a);
+        assert!(a.max_abs_diff(&c2) < 1e-15);
+    }
+
+    #[test]
+    fn trsm_llu_inverts_gemm() {
+        // B0 random; B := TRILU(L)·B0 then solve back.
+        let n = 8;
+        let l = Matrix::from_fn(n, n, |i, j| {
+            use std::cmp::Ordering::*;
+            match i.cmp(&j) {
+                Greater => 0.3 * ((i * 7 + j * 3) % 5) as f64 - 0.5,
+                Equal => 1.0,
+                Less => 0.0,
+            }
+        });
+        let b0 = Matrix::random(n, 4, 2);
+        let mut b = matmul(&l, &b0);
+        trsm_llu(l.view(), b.view_mut());
+        assert!(b.max_abs_diff(&b0) < 1e-12);
+    }
+
+    #[test]
+    fn trsm_llu_ignores_strict_upper_and_diagonal() {
+        let n = 6;
+        // A has garbage in the upper triangle and diagonal; only the strict
+        // lower triangle may be read.
+        let mut a = Matrix::random(n, n, 3);
+        for i in 0..n {
+            a[(i, i)] = 1e30; // must be ignored (unit diag assumed)
+        }
+        let mut clean = a.clone();
+        for j in 0..n {
+            for i in 0..=j {
+                clean[(i, j)] = if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let b0 = Matrix::random(n, 3, 4);
+        let mut b1 = b0.clone();
+        let mut b2 = b0.clone();
+        trsm_llu(a.view(), b1.view_mut());
+        trsm_llu(clean.view(), b2.view_mut());
+        assert!(b1.max_abs_diff(&b2) < 1e-12);
+    }
+
+    #[test]
+    fn trsm_upper_solves() {
+        let n = 7;
+        let u = Matrix::from_fn(n, n, |i, j| {
+            if j > i {
+                0.1 * ((i + 2 * j) % 7) as f64
+            } else if j == i {
+                2.0 + i as f64
+            } else {
+                0.0
+            }
+        });
+        let x0 = Matrix::random(n, 2, 5);
+        let mut b = matmul(&u, &x0);
+        trsm_upper(u.view(), b.view_mut());
+        assert!(b.max_abs_diff(&x0) < 1e-12);
+    }
+
+    #[test]
+    fn lu_2x2_known() {
+        // A = [[0, 1], [2, 3]] -> pivot swaps rows; L=[[1,0],[0,1]] ...
+        let mut a = Matrix::from_rows(2, 2, &[0., 1., 2., 3.]);
+        let ipiv = lu(a.view_mut());
+        assert_eq!(ipiv, vec![1, 1]);
+        // After swap: [[2,3],[0,1]]; l21 = 0/2 = 0; u = [[2,3],[0,1]].
+        assert_eq!(a, Matrix::from_rows(2, 2, &[2., 3., 0., 1.]));
+    }
+
+    #[test]
+    fn lu_residual_small_square() {
+        for n in [1usize, 2, 3, 5, 8, 17, 33] {
+            let a = Matrix::random(n, n, 7 + n as u64);
+            let mut f = a.clone();
+            let ipiv = lu(f.view_mut());
+            let r = lu_residual(&a, &f, &ipiv);
+            assert!(r < 1e-13, "n={n} residual={r}");
+            assert!(growth_bounded(&f));
+        }
+    }
+
+    #[test]
+    fn lu_rectangular_tall_and_wide() {
+        for (m, n) in [(9usize, 5usize), (5, 9), (12, 3), (3, 12)] {
+            let a = Matrix::random(m, n, (m * 100 + n) as u64);
+            let mut f = a.clone();
+            let ipiv = lu(f.view_mut());
+            assert_eq!(ipiv.len(), m.min(n));
+            let r = lu_residual(&a, &f, &ipiv);
+            assert!(r < 1e-13, "m={m} n={n} residual={r}");
+        }
+    }
+
+    #[test]
+    fn lu_singular_matrix_does_not_panic() {
+        let mut a = Matrix::zeros(4, 4);
+        let ipiv = lu(a.view_mut());
+        assert_eq!(ipiv.len(), 4);
+        assert_eq!(a, Matrix::zeros(4, 4));
+    }
+
+    #[test]
+    fn lu_pivots_pick_largest_magnitude() {
+        let mut a = Matrix::from_rows(3, 3, &[1., 0., 0., 4., 1., 0., -9., 0., 1.]);
+        let ipiv = lu(a.view_mut());
+        assert_eq!(ipiv[0], 2); // row 2 has |−9|
+        assert!(growth_bounded(&a));
+    }
+
+    #[test]
+    fn lu_solve_roundtrip() {
+        let n = 12;
+        let a = Matrix::random_dd(n, 9);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 - 3.0) * 0.5).collect();
+        let mut b = vec![0.0; n];
+        for j in 0..n {
+            for i in 0..n {
+                b[i] += a[(i, j)] * x_true[j];
+            }
+        }
+        let mut f = a.clone();
+        let ipiv = lu(f.view_mut());
+        let x = lu_solve(&f, &ipiv, &b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-10, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn apply_pivots_matches_permutation_matrix() {
+        let n = 6;
+        let a = Matrix::random(n, n, 10);
+        let mut f = a.clone();
+        let ipiv = lu(f.view_mut());
+        // Build P explicitly by applying pivots to the identity.
+        let mut p = Matrix::eye(n);
+        apply_pivots(p.view_mut(), &ipiv);
+        let pa = matmul(&p, &a);
+        let mut pa2 = a.clone();
+        apply_pivots(pa2.view_mut(), &ipiv);
+        assert!(pa.max_abs_diff(&pa2) < 1e-15);
+    }
+
+    #[test]
+    fn property_lu_residual_and_growth() {
+        forall_res("naive lu: residual tiny, |L|<=1", 30, |g: &mut Gen| {
+            let m = g.usize_in(1, 24);
+            let n = g.usize_in(1, 24);
+            let seed = g.seed();
+            g.label(format!("m={m} n={n} seed={seed:#x}"));
+            let a = Matrix::random(m, n, seed);
+            let mut f = a.clone();
+            let ipiv = lu(f.view_mut());
+            for (k, &p) in ipiv.iter().enumerate() {
+                if p < k || p >= m {
+                    return Err(format!("bad pivot ipiv[{k}]={p}"));
+                }
+            }
+            let r = lu_residual(&a, &f, &ipiv);
+            if r > 1e-12 {
+                return Err(format!("residual {r}"));
+            }
+            if !growth_bounded(&f) {
+                return Err("|L| entry > 1".into());
+            }
+            Ok(())
+        });
+    }
+}

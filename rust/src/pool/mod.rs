@@ -1,0 +1,28 @@
+//! The **malleable worker pool** — the paper's Worker-Sharing substrate.
+//!
+//! Conventional multi-threaded BLAS fixes the number of threads *before* a
+//! kernel starts (paper §1). This module instead treats threads as a pool
+//! of workers that can be (re)assigned to a kernel **already in
+//! execution**:
+//!
+//! - [`Pool`] owns persistent worker threads, each with a command mailbox.
+//! - [`Crew`] is a *malleable team*: one leader (the thread that publishes
+//!   SPMD jobs via [`Crew::parallel`]) plus any number of members that
+//!   [`CrewShared::member_loop`] into it. Members self-schedule chunks of
+//!   each published job, so a worker that enlists between jobs simply
+//!   starts contributing at the next job — exactly the "entry point"
+//!   semantics of the paper's Fig. 10 (one job is published per iteration
+//!   of GEMM's Loop 3, so joins take effect at `i_c` boundaries).
+//! - [`EntryPolicy::Immediate`] additionally lets a joining worker steal
+//!   chunks of the job in flight (an ablation the paper could not express
+//!   with its static round-robin Loop-4 partitioning).
+//!
+//! The chunk-grab protocol packs `(epoch, next_chunk)` into one atomic so
+//! a stale member can never execute a chunk of a later job with an earlier
+//! job's function (see `crew::Ticket`).
+
+pub mod crew;
+pub mod worker;
+
+pub use crew::{Crew, CrewShared, CrewStats, EntryPolicy};
+pub use worker::{current_worker, Pool, TaskHandle};

@@ -1,0 +1,330 @@
+//! Persistent worker threads with command mailboxes.
+//!
+//! A [`Pool`] spawns `n` workers once; the LU drivers then submit one-shot
+//! tasks to specific workers (e.g. "worker 0: run the panel branch") and
+//! enlist workers into [`super::Crew`]s. Keeping the threads alive across
+//! iterations mirrors how a real threaded BLAS pins a team of threads to
+//! cores for the duration of a factorization.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type BoxTask = Box<dyn FnOnce() + Send + 'static>;
+
+std::thread_local! {
+    static WORKER_ID: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// The pool worker index of the current thread (`None` on non-pool
+/// threads, e.g. the main thread). Used by the tracer to attribute spans.
+pub fn current_worker() -> Option<usize> {
+    WORKER_ID.with(|w| w.get())
+}
+
+struct Mailbox {
+    queue: Mutex<VecDeque<BoxTask>>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, t: BoxTask) {
+        self.queue.lock().unwrap().push_back(t);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self, shutdown: &AtomicBool) -> Option<BoxTask> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return Some(t);
+            }
+            if shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum TaskState {
+    Pending,
+    Done,
+    Panicked(String),
+}
+
+/// Completion handle for a submitted task.
+pub struct TaskHandle {
+    state: Arc<(Mutex<TaskState>, Condvar)>,
+}
+
+impl TaskHandle {
+    fn new() -> (Self, Arc<(Mutex<TaskState>, Condvar)>) {
+        let state = Arc::new((Mutex::new(TaskState::Pending), Condvar::new()));
+        (
+            Self {
+                state: Arc::clone(&state),
+            },
+            state,
+        )
+    }
+
+    /// Block until the task finishes. Panics (on the *caller*) if the task
+    /// panicked, propagating the message — failure injection tests rely on
+    /// this.
+    pub fn wait(self) {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        while *st == TaskState::Pending {
+            st = cv.wait(st).unwrap();
+        }
+        if let TaskState::Panicked(msg) = &*st {
+            panic!("pool task panicked: {msg}");
+        }
+    }
+
+    /// Non-blocking completion check (does not consume the handle).
+    pub fn is_done(&self) -> bool {
+        *self.state.0.lock().unwrap() != TaskState::Pending
+    }
+}
+
+/// A fixed set of persistent worker threads.
+pub struct Pool {
+    mailboxes: Vec<Arc<Mailbox>>,
+    shutdown: Arc<AtomicBool>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn `n_workers` threads (ids `0..n_workers`).
+    pub fn new(n_workers: usize) -> Self {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mailboxes: Vec<Arc<Mailbox>> =
+            (0..n_workers).map(|_| Arc::new(Mailbox::new())).collect();
+        let threads = mailboxes
+            .iter()
+            .enumerate()
+            .map(|(id, mb)| {
+                let mb = Arc::clone(mb);
+                let sd = Arc::clone(&shutdown);
+                std::thread::Builder::new()
+                    .name(format!("mlu-worker-{id}"))
+                    .spawn(move || {
+                        WORKER_ID.with(|w| w.set(Some(id)));
+                        while let Some(task) = mb.pop(&sd) {
+                            task();
+                        }
+                    })
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Self {
+            mailboxes,
+            shutdown,
+            threads: Mutex::new(threads),
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    /// Submit a one-shot task to a specific worker. Tasks submitted to the
+    /// same worker run in submission order.
+    pub fn submit(&self, worker: usize, f: impl FnOnce() + Send + 'static) -> TaskHandle {
+        assert!(worker < self.workers(), "no such worker {worker}");
+        let (handle, state) = TaskHandle::new();
+        self.mailboxes[worker].push(Box::new(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let (lock, cv) = &*state;
+            let mut st = lock.lock().unwrap();
+            *st = match result {
+                Ok(()) => TaskState::Done,
+                Err(e) => TaskState::Panicked(panic_message(e.as_ref())),
+            };
+            cv.notify_all();
+        }));
+        handle
+    }
+
+    /// Stop all workers after their queued tasks drain. Called on `Drop`.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for mb in &self.mailboxes {
+            // Wake idle workers so they observe the flag.
+            mb.ready.notify_all();
+        }
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::{Crew, EntryPolicy};
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn submit_runs_on_the_right_worker() {
+        let pool = Pool::new(3);
+        let ids: Vec<Arc<Mutex<Option<usize>>>> =
+            (0..3).map(|_| Arc::new(Mutex::new(None))).collect();
+        let handles: Vec<_> = (0..3)
+            .map(|w| {
+                let slot = Arc::clone(&ids[w]);
+                pool.submit(w, move || {
+                    *slot.lock().unwrap() = current_worker();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+        for (w, slot) in ids.iter().enumerate() {
+            assert_eq!(*slot.lock().unwrap(), Some(w));
+        }
+    }
+
+    #[test]
+    fn tasks_on_same_worker_run_in_order() {
+        let pool = Pool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let hs: Vec<_> = (0..10)
+            .map(|i| {
+                let log = Arc::clone(&log);
+                pool.submit(0, move || log.lock().unwrap().push(i))
+            })
+            .collect();
+        for h in hs {
+            h.wait();
+        }
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn main_thread_has_no_worker_id() {
+        assert_eq!(current_worker(), None);
+    }
+
+    #[test]
+    fn panicking_task_propagates_to_waiter() {
+        let pool = Pool::new(1);
+        let h = pool.submit(0, || panic!("injected failure"));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.wait()))
+            .expect_err("wait should panic");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("injected failure"), "{msg}");
+        // Pool still functional after a task panic.
+        let ok = Arc::new(AtomicUsize::new(0));
+        let ok2 = Arc::clone(&ok);
+        pool.submit(0, move || {
+            ok2.store(1, Ordering::Release);
+        })
+        .wait();
+        assert_eq!(ok.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn is_done_transitions() {
+        let pool = Pool::new(1);
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let h = pool.submit(0, move || {
+            while !g.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+        });
+        assert!(!h.is_done());
+        gate.store(true, Ordering::Release);
+        h.wait();
+    }
+
+    #[test]
+    fn workers_can_enlist_in_crews_via_submit() {
+        // The WS wiring used by LU_MB: worker 0 finishes its own task and
+        // then enlists into the leader's crew.
+        let pool = Pool::new(2);
+        let mut crew = Crew::new();
+        let shared = crew.shared();
+
+        let pf_done = Arc::new(AtomicBool::new(false));
+        let pf_done2 = Arc::clone(&pf_done);
+        let h = pool.submit(0, move || {
+            // "panel factorization" stand-in
+            pf_done2.store(true, Ordering::Release);
+            // Worker-sharing: join the update crew.
+            shared.member_loop(EntryPolicy::JobBoundary);
+        });
+
+        // Leader publishes jobs until the worker has joined, then one more
+        // round that the member co-executes.
+        let count = AtomicUsize::new(0);
+        while crew.members() == 0 {
+            crew.parallel(4, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        crew.parallel(100, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(pf_done.load(Ordering::Acquire));
+        crew.disband();
+        h.wait();
+        assert_eq!(count.load(Ordering::Relaxed) % 4, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_tasks() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = Pool::new(2);
+            for w in 0..2 {
+                for _ in 0..50 {
+                    let c = Arc::clone(&count);
+                    pool.submit(w, move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }
+            // Drop triggers shutdown; queued tasks must still run.
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "no such worker")]
+    fn submit_to_missing_worker_panics() {
+        let pool = Pool::new(1);
+        let _ = pool.submit(5, || {});
+    }
+}

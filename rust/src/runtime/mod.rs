@@ -1,0 +1,277 @@
+//! PJRT/XLA runtime — loads the AOT-compiled Pallas/JAX artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by
+//! `make artifacts`) lowers the L2 model + L1 Pallas kernel to **HLO
+//! text**; this module loads the text through
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client
+//! and executes it from Rust — Python is never on the request path.
+//!
+//! In the reproduction's terms (DESIGN.md §2), an artifact is a *rigid
+//! vendor BLAS*: shape-specialized, black-box, non-malleable. The
+//! [`xla_lu`] module builds the `LU_XLA` baseline from these, and the
+//! integration tests cross-validate the Rust BLIS substrate against the
+//! XLA numerics.
+
+pub mod xla_lu;
+
+use crate::matrix::Matrix;
+use crate::util::json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One entry of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// Input shapes (row-major, as exported by jax).
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Artifact store + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if doc.get("format").and_then(|v| v.as_str()) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let mut artifacts = HashMap::new();
+        for a in doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: no artifacts array"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                kind: a
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} without file"))?
+                    .to_string(),
+                input_shapes: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        i.get("shape")
+                            .and_then(|v| v.as_arr())
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect()
+                    })
+                    .collect(),
+                input_dtypes: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        i.get("dtype")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("float64")
+                            .to_string()
+                    })
+                    .collect(),
+                outputs: a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|o| o.as_str().map(str::to_string))
+                    .collect(),
+            };
+            artifacts.insert(name, meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Names of all loadable artifacts.
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Metadata for one artifact.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// Does an artifact exist?
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let meta = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact. Inputs/outputs are [`xla::Literal`]s; the
+    /// exported computations return a tuple, which is flattened here.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Convert a column-major [`Matrix`] to a row-major f64 literal of shape
+/// `[rows, cols]` (jax's layout).
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let rm = m.to_row_major();
+    xla::Literal::vec1(&rm)
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Convert a row-major f64 literal back to a [`Matrix`].
+pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = l
+        .to_vec::<f64>()
+        .map_err(|e| anyhow!("literal to_vec<f64>: {e:?}"))?;
+    if v.len() != rows * cols {
+        bail!("literal has {} elements, expected {rows}x{cols}", v.len());
+    }
+    Ok(Matrix::from_row_major(rows, cols, &v))
+}
+
+/// Convert an i32 pivot literal to `Vec<usize>`.
+pub fn literal_to_pivots(l: &xla::Literal) -> Result<Vec<usize>> {
+    let v = l
+        .to_vec::<i32>()
+        .map_err(|e| anyhow!("literal to_vec<i32>: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as usize).collect())
+}
+
+/// Build an i32 literal from pivots.
+pub fn pivots_to_literal(piv: &[usize]) -> xla::Literal {
+    let v: Vec<i32> = piv.iter().map(|&p| p as i32).collect();
+    xla::Literal::vec1(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tests needing real artifacts live in rust/tests/ and skip
+    // when artifacts/ is absent. Here: pure conversion + manifest logic.
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::random(5, 7, 3);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 5, 7).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn pivot_literal_roundtrip() {
+        let piv = vec![3usize, 1, 4, 1, 5];
+        let lit = pivots_to_literal(&piv);
+        assert_eq!(literal_to_pivots(&lit).unwrap(), piv);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_is_error() {
+        let m = Matrix::random(2, 2, 1);
+        let lit = matrix_to_literal(&m).unwrap();
+        assert!(literal_to_matrix(&lit, 3, 3).is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_fails_with_hint() {
+        let msg = match Runtime::open("/nonexistent-artifacts") {
+            Ok(_) => panic!("open should fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_parsing_via_tempdir() {
+        let dir = std::env::temp_dir().join(format!("mlu-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "artifacts": [
+                {"name": "x", "kind": "gepp", "file": "x.hlo.txt",
+                 "inputs": [{"shape": [2, 3], "dtype": "float64"}],
+                 "outputs": ["c_f64"]}]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.has("x"));
+        assert_eq!(rt.meta("x").unwrap().input_shapes[0], vec![2, 3]);
+        assert_eq!(rt.available(), vec!["x".to_string()]);
+        assert_eq!(rt.cached(), 0);
+        // Running a missing-file artifact errors cleanly.
+        assert!(rt.run("x", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,196 @@
+//! `LU_XLA` — blocked right-looking LU whose every building block is an
+//! AOT-compiled XLA executable (the "rigid vendor library" baseline,
+//! DESIGN.md §2/§3).
+//!
+//! Two modes:
+//! - [`factorize_full`] runs the single `lu_{n}x{b}` artifact (the whole
+//!   L2 model, Pallas GEPP inside, as one compiled graph);
+//! - [`factorize_stepped`] drives the factorization iteration by
+//!   iteration from Rust (panel → laswp → trsm → gepp executables),
+//!   mirroring how a coordinator would call into a vendor BLAS — and
+//!   illustrating exactly why such a library is *non-malleable*: each
+//!   call's thread mapping is frozen inside the compiled executable.
+
+use super::{literal_to_matrix, literal_to_pivots, matrix_to_literal, pivots_to_literal, Runtime};
+use crate::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Run the one-shot full-factorization artifact `lu_{n}x{bo}`.
+/// Returns `(LU_packed, absolute pivots)`.
+pub fn factorize_full(rt: &Runtime, a: &Matrix, bo: usize) -> Result<(Matrix, Vec<usize>)> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("LU_XLA full artifact requires a square matrix");
+    }
+    let name = format!("lu_{n}x{bo}");
+    if !rt.has(&name) {
+        bail!(
+            "no artifact {name}; re-run `make artifacts` with --configs including {n}:{bo}"
+        );
+    }
+    let outs = rt.run(&name, &[matrix_to_literal(a)?])?;
+    if outs.len() != 2 {
+        bail!("{name}: expected (lu, piv), got {} outputs", outs.len());
+    }
+    let lu = literal_to_matrix(&outs[0], n, n)?;
+    let piv = literal_to_pivots(&outs[1])?;
+    Ok((lu, piv))
+}
+
+/// Drive the blocked RL factorization from Rust, one artifact call per
+/// kernel (panel / laswp / trsm / gepp). Returns `(LU, pivots)`.
+pub fn factorize_stepped(rt: &Runtime, a: &Matrix, bo: usize) -> Result<(Matrix, Vec<usize>)> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("LU_XLA requires a square matrix");
+    }
+    let mut work = a.clone();
+    let mut ipiv: Vec<usize> = Vec::with_capacity(n);
+    let mut k = 0;
+    while k < n {
+        let b = bo.min(n - k);
+        let m_panel = n - k;
+        // Panel factorization.
+        let panel = submatrix(&work, k, k, m_panel, b);
+        let outs = rt.run(&format!("panel_{m_panel}x{b}"), &[matrix_to_literal(&panel)?])?;
+        let panel_lu = literal_to_matrix(&outs[0], m_panel, b)?;
+        let piv_local = literal_to_pivots(&outs[1])?;
+        copy_into(&mut work, &panel_lu, k, k);
+        // Interchanges on the left+right columns via the laswp artifact
+        // (exported over the concatenated non-panel columns).
+        let rest = n - k - b;
+        if rest + k > 0 {
+            let lr = concat_lr(&work, k, b, m_panel);
+            let name = format!("laswp_{m_panel}x{}x{b}", rest + k);
+            let outs = rt.run(
+                &name,
+                &[matrix_to_literal(&lr)?, pivots_to_literal(&piv_local)],
+            )?;
+            let swapped = literal_to_matrix(&outs[0], m_panel, rest + k)?;
+            split_lr(&mut work, &swapped, k, b);
+        }
+        for (i, p) in piv_local.iter().enumerate() {
+            ipiv.push(k + p);
+            debug_assert!(k + p >= k + i);
+        }
+        if rest > 0 {
+            // TRSM on A12.
+            let a11 = submatrix(&work, k, k, b, b);
+            let a12 = submatrix(&work, k, k + b, b, rest);
+            let outs = rt.run(
+                &format!("trsm_{b}x{rest}"),
+                &[matrix_to_literal(&a11)?, matrix_to_literal(&a12)?],
+            )?;
+            let a12 = literal_to_matrix(&outs[0], b, rest)?;
+            copy_into(&mut work, &a12, k, k + b);
+            // GEPP update of A22 (the Pallas kernel).
+            let mm = n - k - b;
+            let c = submatrix(&work, k + b, k + b, mm, rest);
+            let a21 = submatrix(&work, k + b, k, mm, b);
+            let outs = rt.run(
+                &format!("gepp_{mm}x{rest}x{b}"),
+                &[
+                    matrix_to_literal(&c)?,
+                    matrix_to_literal(&a21)?,
+                    matrix_to_literal(&a12)?,
+                ],
+            )?;
+            let c = literal_to_matrix(&outs[0], mm, rest)?;
+            copy_into(&mut work, &c, k + b, k + b);
+        }
+        k += b;
+    }
+    Ok((work, ipiv))
+}
+
+/// Cross-validate the Rust BLIS LU against the XLA full-model artifact:
+/// returns `(max |LU_rust − LU_xla|, pivots_equal)`.
+pub fn cross_validate(rt: &Runtime, a: &Matrix, bo: usize, bi: usize) -> Result<(f64, bool)> {
+    let (lu_xla, piv_xla) = factorize_full(rt, a, bo)?;
+    let mut lu_rust = a.clone();
+    let mut crew = crate::pool::Crew::new();
+    let piv_rust = crate::lu::lu_blocked_rl(
+        &mut crew,
+        &crate::blis::BlisParams::default(),
+        lu_rust.view_mut(),
+        bo,
+        bi,
+    );
+    let diff = lu_rust.max_abs_diff(&lu_xla);
+    Ok((diff, piv_rust == piv_xla))
+}
+
+fn submatrix(a: &Matrix, i: usize, j: usize, m: usize, n: usize) -> Matrix {
+    Matrix::from_fn(m, n, |r, c| a[(i + r, j + c)])
+}
+
+fn copy_into(dst: &mut Matrix, src: &Matrix, i: usize, j: usize) {
+    for c in 0..src.cols() {
+        for r in 0..src.rows() {
+            dst[(i + r, j + c)] = src[(r, c)];
+        }
+    }
+}
+
+/// Columns `[0,k) ++ [k+b, n)` over rows `k..n` (the laswp artifact's
+/// operand layout: right block first? No — left then right, matching
+/// `model.lu_blocked`'s concatenation order `[left | right]`).
+fn concat_lr(a: &Matrix, k: usize, b: usize, m_panel: usize) -> Matrix {
+    let n = a.cols();
+    let rest = n - k - b;
+    Matrix::from_fn(m_panel, k + rest, |r, c| {
+        if c < k {
+            a[(k + r, c)]
+        } else {
+            a[(k + r, k + b + (c - k))]
+        }
+    })
+}
+
+fn split_lr(a: &mut Matrix, lr: &Matrix, k: usize, b: usize) {
+    let n = a.cols();
+    let rest = n - k - b;
+    for c in 0..k {
+        for r in 0..lr.rows() {
+            a[(k + r, c)] = lr[(r, c)];
+        }
+    }
+    for c in 0..rest {
+        for r in 0..lr.rows() {
+            a[(k + r, k + b + c)] = lr[(r, k + c)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helpers_roundtrip() {
+        let a = Matrix::from_fn(6, 6, |i, j| (i * 10 + j) as f64);
+        let s = submatrix(&a, 1, 2, 3, 2);
+        assert_eq!(s[(0, 0)], 12.0);
+        let mut b = Matrix::zeros(6, 6);
+        copy_into(&mut b, &s, 1, 2);
+        assert_eq!(b[(1, 2)], 12.0);
+        assert_eq!(b[(3, 3)], 33.0);
+    }
+
+    #[test]
+    fn concat_split_are_inverses() {
+        let a0 = Matrix::from_fn(8, 8, |i, j| (i * 8 + j) as f64);
+        let (k, b) = (2usize, 3usize);
+        let m_panel = 8 - k;
+        let lr = concat_lr(&a0, k, b, m_panel);
+        assert_eq!(lr.cols(), 8 - b);
+        assert_eq!(lr.rows(), m_panel);
+        // Identity roundtrip.
+        let mut a = a0.clone();
+        split_lr(&mut a, &lr, k, b);
+        assert_eq!(a, a0);
+        // Check addressing: lr col 0 = a col 0 (rows k..), lr col k = a col k+b.
+        assert_eq!(lr[(0, 0)], a0[(k, 0)]);
+        assert_eq!(lr[(0, k)], a0[(k, k + b)]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Generators for every figure of the paper's evaluation (§5), in
+//! simulated virtual time. Each returns a structured table plus a CSV
+//! rendering, and is exposed through `mlu fig <N>` and the bench harness.
+
+use super::costmodel::HwModel;
+use super::lu_sim::{simulate, SimVariant};
+
+/// A generic series table: named columns, numeric rows.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("# {}\n{}\n", self.title, self.columns.join(","));
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v:.4}")).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Column index by name (panics if missing — generator bug).
+    pub fn col(&self, name: &str) -> usize {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("no column {name}"))
+    }
+}
+
+/// The sweep grids of the paper (§5: n = 500..12000 step 500;
+/// b_o = 32..512 step 32). `scale < 1.0` shrinks the grids for quick
+/// runs.
+pub struct Grids {
+    pub ns: Vec<usize>,
+    pub bos: Vec<usize>,
+}
+
+impl Grids {
+    pub fn paper() -> Self {
+        Self {
+            ns: (1..=24).map(|i| i * 500).collect(),
+            bos: (1..=16).map(|i| i * 32).collect(),
+        }
+    }
+
+    /// Coarser grid for fast CI runs.
+    pub fn quick() -> Self {
+        Self {
+            ns: vec![500, 1000, 2000, 4000, 6000, 8000, 10000, 12000],
+            bos: vec![32, 64, 96, 128, 192, 256, 320, 384, 448, 512],
+        }
+    }
+}
+
+/// Fig. 14 (left): GEPP GFLOPS as a function of `k = b_o`, 6 threads.
+pub fn fig14_gepp(hw: &HwModel, grids: &Grids) -> Table {
+    let mut rows = Vec::new();
+    for &k in &grids.bos {
+        rows.push(vec![k as f64, hw.gepp_gflops(k, hw.cores)]);
+    }
+    Table {
+        title: "Fig14-left: GEPP GFLOPS vs k (6 threads)".into(),
+        columns: vec!["k".into(), "gflops".into()],
+        rows,
+    }
+}
+
+/// Fig. 14 (right): ratio of panel flops to total flops vs `n`, one
+/// series per `b_o` in {32, 128, 256, 512}.
+pub fn fig14_ratio(_hw: &HwModel, grids: &Grids) -> Table {
+    let bos = [32usize, 128, 256, 512];
+    let mut rows = Vec::new();
+    for &n in &grids.ns {
+        let mut row = vec![n as f64];
+        for &b in &bos {
+            row.push(super::flops::panel_ratio(n, b));
+        }
+        rows.push(row);
+    }
+    Table {
+        title: "Fig14-right: panel flops / total flops".into(),
+        columns: std::iter::once("n".to_string())
+            .chain(bos.iter().map(|b| format!("b{b}")))
+            .collect(),
+        rows,
+    }
+}
+
+/// Fig. 15: optimal `b_o` per variant per problem size.
+pub fn fig15_optimal_b(hw: &HwModel, grids: &Grids, t: usize) -> Table {
+    let variants = [
+        SimVariant::Lu,
+        SimVariant::La,
+        SimVariant::Mb,
+        SimVariant::Et,
+        SimVariant::Os,
+    ];
+    let mut rows = Vec::new();
+    for &n in &grids.ns {
+        let mut row = vec![n as f64];
+        for v in variants {
+            let (best_b, _) = optimal_block(hw, v, n, &grids.bos, t);
+            row.push(best_b as f64);
+        }
+        rows.push(row);
+    }
+    Table {
+        title: "Fig15: optimal b_o per variant".into(),
+        columns: vec![
+            "n".into(),
+            "LU".into(),
+            "LU_LA".into(),
+            "LU_MB".into(),
+            "LU_ET".into(),
+            "LU_OS".into(),
+        ],
+        rows,
+    }
+}
+
+/// Best `(b_o, gflops)` over the block grid for one variant/size.
+pub fn optimal_block(
+    hw: &HwModel,
+    v: SimVariant,
+    n: usize,
+    bos: &[usize],
+    t: usize,
+) -> (usize, f64) {
+    let mut best = (bos[0], f64::MIN);
+    for &b in bos {
+        let g = simulate(hw, v, n, b, 32, t, 1, false).gflops;
+        if g > best.1 {
+            best = (b, g);
+        }
+    }
+    best
+}
+
+/// Fig. 16: GFLOPS of LU / LU_LA / LU_MB / LU_ET at fixed `b_o = 256`.
+pub fn fig16_variants(hw: &HwModel, grids: &Grids, t: usize) -> Table {
+    let variants = [
+        SimVariant::Lu,
+        SimVariant::La,
+        SimVariant::Mb,
+        SimVariant::Et,
+    ];
+    let mut rows = Vec::new();
+    for &n in &grids.ns {
+        let mut row = vec![n as f64];
+        for v in variants {
+            row.push(simulate(hw, v, n, 256, 32, t, 1, false).gflops);
+        }
+        rows.push(row);
+    }
+    Table {
+        title: "Fig16: GFLOPS, static look-ahead variants, b_o=256".into(),
+        columns: vec![
+            "n".into(),
+            "LU".into(),
+            "LU_LA".into(),
+            "LU_MB".into(),
+            "LU_ET".into(),
+        ],
+        rows,
+    }
+}
+
+/// Fig. 17: LU_ET vs LU_OS — per-size optimal blocks and fixed blocks
+/// (192 for ET, 256 for OS), as in the paper.
+pub fn fig17_et_vs_os(hw: &HwModel, grids: &Grids, t: usize) -> Table {
+    let mut rows = Vec::new();
+    for &n in &grids.ns {
+        let (_, et_opt) = optimal_block(hw, SimVariant::Et, n, &grids.bos, t);
+        let (_, os_opt) = optimal_block(hw, SimVariant::Os, n, &grids.bos, t);
+        let et_fixed = simulate(hw, SimVariant::Et, n, 192, 32, t, 1, false).gflops;
+        let os_fixed = simulate(hw, SimVariant::Os, n, 256, 32, t, 1, false).gflops;
+        rows.push(vec![n as f64, et_opt, os_opt, et_fixed, os_fixed]);
+    }
+    Table {
+        title: "Fig17: LU_ET vs LU_OS (b_opt and fixed b)".into(),
+        columns: vec![
+            "n".into(),
+            "ET(b_opt)".into(),
+            "OS(b_opt)".into(),
+            "ET(b=192)".into(),
+            "OS(b=256)".into(),
+        ],
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwModel {
+        HwModel::default()
+    }
+
+    #[test]
+    fn fig14_left_monotone_then_flat() {
+        let t = fig14_gepp(&hw(), &Grids::quick());
+        let g = t.col("gflops");
+        // Strictly increasing up to 192.
+        for w in t.rows.windows(2) {
+            if w[1][0] <= 192.0 {
+                assert!(w[1][g] > w[0][g]);
+            }
+        }
+        assert_eq!(t.columns.len(), 2);
+        assert!(t.to_csv().contains("gflops"));
+    }
+
+    #[test]
+    fn fig14_right_series_ordering() {
+        let t = fig14_ratio(&hw(), &Grids::quick());
+        // Larger b ⇒ larger panel share, every n.
+        for r in &t.rows {
+            assert!(r[1] < r[2] && r[2] < r[3] && r[3] < r[4], "row {r:?}");
+        }
+    }
+
+    #[test]
+    fn fig15_trends() {
+        let grids = Grids {
+            ns: vec![2000, 6000, 10000],
+            bos: vec![32, 64, 96, 128, 160, 192, 256, 320, 384, 448, 512],
+        };
+        let t = fig15_optimal_b(&hw(), &grids, 6);
+        let (lu, mb) = (t.col("LU"), t.col("LU_MB"));
+        // Paper Fig. 15: LU prefers larger blocks than LU_MB for all
+        // problem dimensions shown.
+        for r in &t.rows {
+            assert!(r[lu] >= r[mb], "n={}: LU {} < MB {}", r[0], r[lu], r[mb]);
+        }
+    }
+
+    #[test]
+    fn fig16_orderings() {
+        let grids = Grids {
+            ns: vec![1000, 4000, 6000, 10000, 12000],
+            bos: vec![256],
+        };
+        let t = fig16_variants(&hw(), &grids, 6);
+        let (lu, la, mb, et) = (t.col("LU"), t.col("LU_LA"), t.col("LU_MB"), t.col("LU_ET"));
+        for r in &t.rows {
+            let n = r[0] as usize;
+            if (4000..=10000).contains(&n) {
+                assert!(r[la] > r[lu], "n={n}: LA !> LU");
+            } else if n > 10000 {
+                // The curves converge at the top end (paper Fig. 16:
+                // LU keeps rising while LU_LA flattens).
+                assert!(r[la] > 0.97 * r[lu], "n={n}: LA ≪ LU");
+            }
+            if n >= 6000 {
+                assert!(r[mb] >= r[la], "n={n}: MB !>= LA");
+            }
+            // ET never loses to MB (it only cuts when beneficial).
+            assert!(r[et] >= r[mb] * 0.995, "n={n}: ET ≪ MB");
+        }
+        // ET's edge is at the small end.
+        let small = &t.rows[0];
+        assert!(small[et] > small[la], "small-n: ET !> LA");
+    }
+
+    #[test]
+    fn fig17_et_robust_to_block_choice() {
+        let grids = Grids {
+            ns: vec![1500, 3000, 6000, 9000, 12000],
+            bos: vec![64, 128, 192, 256, 320, 384],
+        };
+        let t = fig17_et_vs_os(&hw(), &grids, 6);
+        let (eo, oo, ef, of) = (
+            t.col("ET(b_opt)"),
+            t.col("OS(b_opt)"),
+            t.col("ET(b=192)"),
+            t.col("OS(b=256)"),
+        );
+        let mut et_wins = 0;
+        for r in &t.rows {
+            // Fixed-block ET stays close to its optimum...
+            assert!(r[ef] / r[eo] > 0.90, "n={}: ET fixed/opt {}", r[0], r[ef] / r[eo]);
+            if r[eo] > r[oo] {
+                et_wins += 1;
+            }
+            // ...and the fixed-block penalty hits OS harder (paper §5.3).
+            let et_pen = 1.0 - r[ef] / r[eo];
+            let os_pen = 1.0 - r[of] / r[oo];
+            assert!(os_pen >= et_pen - 0.02, "n={}", r[0]);
+        }
+        assert!(et_wins * 2 > t.rows.len(), "ET wins most: {et_wins}/{}", t.rows.len());
+    }
+}

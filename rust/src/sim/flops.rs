@@ -1,0 +1,95 @@
+//! Analytic flop accounting used by the figures and the cost model —
+//! the formulas quoted throughout the paper's §3 and §5.
+
+/// Total flops of the LU factorization of a square matrix of order `n`
+/// (`2n³/3`, paper §3.1).
+pub fn lu_total(n: usize) -> f64 {
+    crate::util::lu_flops(n, n)
+}
+
+/// Flops spent in panel factorizations for a square LU of order `n` with
+/// block size `bo`, summed exactly over iterations: each panel is
+/// `(n − k) × b` costing `(n−k)·b² − b³/3`.
+pub fn panel_total(n: usize, bo: usize) -> f64 {
+    let bo = bo.max(1);
+    let mut total = 0.0;
+    let mut k = 0;
+    while k < n {
+        let b = bo.min(n - k) as f64;
+        let m = (n - k) as f64;
+        total += m * b * b - b * b * b / 3.0;
+        k += bo.min(n - k);
+    }
+    total
+}
+
+/// Ratio of panel flops to total flops — the paper's Fig. 14 (right)
+/// series; `≈ b·n²/2 / (2n³/3)` for `n ≫ b`.
+pub fn panel_ratio(n: usize, bo: usize) -> f64 {
+    panel_total(n, bo) / lu_total(n)
+}
+
+/// Fraction of total flops performed by the leading `frac` of iterations
+/// (paper §3.1: 25 % → ~58 %, 50 % → 87.5 %, 75 % → >98 %).
+pub fn leading_fraction(frac: f64) -> f64 {
+    1.0 - (1.0 - frac).powi(3)
+}
+
+/// Paper footnote 3: flops performed when the factorization of an
+/// `m × n` panel is stopped at column `k` — left-looking variant.
+pub fn ll_flops_at_cut(m: usize, k: usize) -> f64 {
+    let (m, k) = (m as f64, k as f64);
+    m * k * k - k * k * k / 3.0
+}
+
+/// Paper footnote 3: same, right-looking variant (the eager extra work).
+pub fn rl_flops_at_cut(m: usize, n: usize, k: usize) -> f64 {
+    let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+    ll_flops_at_cut(m, k) + 2.0 * (nf - kf) * (mf * kf - kf * kf / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_ratio_matches_asymptotic_formula() {
+        // n ≫ b: ratio ≈ (n²b/2)/(2n³/3) = 3b/(4n).
+        let (n, b) = (10_000, 256);
+        let exact = panel_ratio(n, b);
+        let asym = 3.0 * b as f64 / (4.0 * n as f64);
+        assert!((exact - asym).abs() / asym < 0.05, "{exact} vs {asym}");
+    }
+
+    #[test]
+    fn paper_config_panel_share_is_under_2_percent() {
+        // Paper §3.1: n=10000, b_o=256 → "less than 2% of the flops".
+        assert!(panel_ratio(10_000, 256) < 0.02);
+    }
+
+    #[test]
+    fn leading_fraction_matches_paper() {
+        assert!((leading_fraction(0.25) - 0.578125).abs() < 1e-12);
+        assert!((leading_fraction(0.5) - 0.875).abs() < 1e-12);
+        assert!(leading_fraction(0.75) > 0.98);
+    }
+
+    #[test]
+    fn footnote3_rl_exceeds_ll() {
+        let (m, n, k) = (5000, 256, 64);
+        assert!(rl_flops_at_cut(m, n, k) > ll_flops_at_cut(m, k));
+    }
+
+    #[test]
+    fn panel_total_single_block() {
+        // bo >= n: one panel, full LU cost.
+        let n = 100;
+        assert!((panel_total(n, 200) - lu_total(n)).abs() / lu_total(n) < 1e-12);
+    }
+
+    #[test]
+    fn ratio_decreases_with_n_increases_with_b() {
+        assert!(panel_ratio(2000, 256) > panel_ratio(8000, 256));
+        assert!(panel_ratio(4000, 384) > panel_ratio(4000, 128));
+    }
+}

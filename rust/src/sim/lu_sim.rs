@@ -1,0 +1,409 @@
+//! Virtual-time simulation of the LU variants.
+//!
+//! Each simulator replays the *same* control flow as its real
+//! counterpart in [`crate::lu`] — iteration structure, team split,
+//! WS merge points, ET polls at inner-block boundaries — pricing each
+//! building block with the [`HwModel`]. Only square matrices are
+//! simulated (the paper's workload).
+
+use super::costmodel::HwModel;
+use crate::trace::{Kind, Span};
+
+/// Simulated algorithm.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimVariant {
+    /// Blocked RL, BDP only (`LU`).
+    Lu,
+    /// Static look-ahead (`LU_LA`).
+    La,
+    /// Look-ahead + malleable BLAS (`LU_MB`).
+    Mb,
+    /// Look-ahead + malleable BLAS + early termination (`LU_ET`).
+    Et,
+    /// Task-runtime baseline (`LU_OS`) — see [`super::os_sim`].
+    Os,
+}
+
+impl SimVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimVariant::Lu => "LU",
+            SimVariant::La => "LU_LA",
+            SimVariant::Mb => "LU_MB",
+            SimVariant::Et => "LU_ET",
+            SimVariant::Os => "LU_OS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lu" => SimVariant::Lu,
+            "la" | "lu_la" => SimVariant::La,
+            "mb" | "lu_mb" => SimVariant::Mb,
+            "et" | "lu_et" => SimVariant::Et,
+            "os" | "lu_os" => SimVariant::Os,
+            _ => return None,
+        })
+    }
+}
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Virtual makespan in seconds.
+    pub time: f64,
+    /// `2n³/3 / time` in GFLOPS (the paper's metric).
+    pub gflops: f64,
+    /// Outer iterations simulated.
+    pub iters: usize,
+    /// ET cuts (Et variant only).
+    pub et_cuts: usize,
+    /// Virtual-time trace spans (populated when `with_trace`).
+    pub spans: Vec<Span>,
+}
+
+/// Simulate a variant on an `n × n` matrix. `t` = total threads,
+/// `t_pf` of which form the panel team for the look-ahead variants.
+pub fn simulate(
+    hw: &HwModel,
+    v: SimVariant,
+    n: usize,
+    bo: usize,
+    bi: usize,
+    t: usize,
+    t_pf: usize,
+    with_trace: bool,
+) -> SimOutcome {
+    match v {
+        SimVariant::Lu => sim_lu(hw, n, bo, bi, t, with_trace),
+        SimVariant::La => sim_la(hw, n, bo, bi, t, t_pf, false, false, with_trace),
+        SimVariant::Mb => sim_la(hw, n, bo, bi, t, t_pf, true, false, with_trace),
+        SimVariant::Et => sim_la(hw, n, bo, bi, t, t_pf, true, true, with_trace),
+        SimVariant::Os => super::os_sim::sim_os(hw, n, bo, bi, t, with_trace),
+    }
+}
+
+fn outcome(n: usize, time: f64, iters: usize, et_cuts: usize, spans: Vec<Span>) -> SimOutcome {
+    SimOutcome {
+        time,
+        gflops: crate::util::gflops(super::flops::lu_total(n), time),
+        iters,
+        et_cuts,
+        spans,
+    }
+}
+
+/// Push a span across lanes `[l0, l1)`.
+fn push_span(spans: &mut Vec<Span>, on: bool, l0: usize, l1: usize, kind: Kind, label: &str, t0: f64, t1: f64) {
+    if !on || t1 <= t0 {
+        return;
+    }
+    for lane in l0..l1 {
+        spans.push(Span {
+            lane,
+            kind,
+            label: label.to_string(),
+            t0,
+            t1,
+        });
+    }
+}
+
+/// Plain blocked RL (`LU`): every kernel runs with the full team; the
+/// panel sits on the critical path (paper Figs. 4–5).
+fn sim_lu(hw: &HwModel, n: usize, bo: usize, bi: usize, t: usize, tr: bool) -> SimOutcome {
+    let bo = bo.max(1);
+    let mut time = 0.0;
+    let mut iters = 0;
+    let mut spans = Vec::new();
+    let mut k = 0;
+    while k < n {
+        let b = bo.min(n - k);
+        let rows = n - k;
+        let rest = n - k - b;
+        iters += 1;
+        // Panel: the unblocked leaf limits concurrency to ~1 thread; the
+        // inner TRSM/GEMM use the team.
+        let tp = hw.panel_time(rows, b, bi, t);
+        push_span(&mut spans, tr, 0, 1, Kind::Panel, "PANEL", time, time + tp);
+        push_span(&mut spans, tr, 1, t, Kind::Wait, "idle", time, time + tp);
+        time += tp;
+        let ts = hw.laswp_time(b, n - b, t);
+        push_span(&mut spans, tr, 0, t, Kind::Swap, "LASWP", time, time + ts);
+        time += ts;
+        if rest > 0 {
+            let tt = hw.trsm_time(b, rest, t);
+            push_span(&mut spans, tr, 0, t, Kind::Trsm, "TRSM", time, time + tt);
+            time += tt;
+            let tg = hw.gemm_time(rows - b, rest, b, t);
+            push_span(&mut spans, tr, 0, t, Kind::Gemm, "GEMM", time, time + tg);
+            time += tg;
+        }
+        k += b;
+    }
+    outcome(n, time, iters, 0, spans)
+}
+
+/// Look-ahead family. Replicates `lu::lookahead::lu_lookahead`'s state
+/// machine: current panel `[f, f+bc)`, next panel `P`, remainder `R`.
+#[allow(clippy::too_many_arguments)]
+fn sim_la(
+    hw: &HwModel,
+    n: usize,
+    bo: usize,
+    bi: usize,
+    t: usize,
+    t_pf: usize,
+    malleable: bool,
+    early_term: bool,
+    tr: bool,
+) -> SimOutcome {
+    let bo = bo.max(1).min(n.max(1));
+    let t_pf = t_pf.max(1).min(t.saturating_sub(1).max(1));
+    let t_ru = t - t_pf;
+    let mut spans = Vec::new();
+    let mut iters = 0;
+    let mut et_cuts = 0;
+
+    // Prologue: first panel with the full team.
+    let b0 = bo.min(n);
+    let mut time = hw.panel_time(n, b0, bi, t);
+    push_span(&mut spans, tr, 0, t, Kind::Panel, "panel[0]", 0.0, time);
+
+    let mut f = 0usize;
+    let mut bc = b0;
+    // ET's adaptive attempted width (mirrors lu::lookahead).
+    let mut attempt = bo;
+
+    loop {
+        let right0 = f + bc;
+        if right0 >= n {
+            // Epilogue: lazy left swaps of the last panel.
+            time += hw.laswp_time(bc, f, t);
+            break;
+        }
+        iters += 1;
+        let bn = attempt.min(n - right0);
+        let r_cols = n - right0 - bn;
+        let rows_below = n - right0;
+
+        // ---- T_PF timeline (t_pf threads) ----
+        let pf_swap = hw.laswp_time(bc, bn, t_pf.min(2));
+        let pf_trsm = hw.trsm_time(bc, bn, t_pf);
+        let pf_gemm = hw.gemm_time(rows_below, bn, bc, t_pf);
+        let pf_pre = pf_swap + pf_trsm + pf_gemm;
+
+        // ---- T_RU timeline (t_ru threads) ----
+        let ru_swap = hw.laswp_time(bc, r_cols, t_ru.min(hw.bw_cores))
+            + hw.laswp_time(bc, f, t_ru.min(hw.bw_cores)); // lazy left swaps
+        let ru_trsm = hw.trsm_time(bc, r_cols, t_ru);
+        let ru_gemm = hw.gemm_time(rows_below, r_cols, bc, t_ru);
+        let ru_total = ru_swap + ru_trsm + ru_gemm;
+
+        // Panel factorization of P.
+        let (pf_total, k_done, cut) = if early_term && r_cols > 0 {
+            // LL inner; walk the per-block costs and poll the flag
+            // (raised at ru_total) at each block boundary.
+            let steps = hw.panel_ll_steps(rows_below, bn, bi, t_pf);
+            let mut acc = pf_pre;
+            let mut done_cols = 0usize;
+            let mut cut = false;
+            for (s, dt) in steps.iter().enumerate() {
+                acc += dt;
+                done_cols = ((s + 1) * bi.max(1)).min(bn);
+                // Poll: flag set and at least one block done and blocks
+                // remain => abort (mirrors `panel_ll`).
+                if done_cols < bn && acc >= ru_total {
+                    cut = true;
+                    break;
+                }
+            }
+            (acc, done_cols, cut)
+        } else {
+            (pf_pre + hw.panel_time(rows_below, bn, bi, t_pf), bn, false)
+        };
+        if cut {
+            et_cuts += 1;
+            attempt = k_done.max(bi.max(1));
+        } else if early_term {
+            attempt = (attempt + bi.max(1)).min(bo);
+        }
+
+        // ---- Merge semantics ----
+        let iter_time = if pf_total <= ru_total && malleable {
+            // WS: PF threads join RU's GEMM at the next Loop-3 entry.
+            // Remaining RU-GEMM work (1-thread-seconds) at join time:
+            let g_start = ru_swap + ru_trsm;
+            if pf_total <= g_start {
+                // Whole GEMM runs with the merged team.
+                let merged = hw.gemm_time(rows_below, r_cols, bc, t);
+                g_start.max(pf_total) + merged
+            } else {
+                let g_len = ru_gemm;
+                let frac_left = ((ru_total - pf_total) / g_len.max(1e-30)).clamp(0.0, 1.0);
+                // Work left, re-rated from t_ru to t threads:
+                let left_merged =
+                    hw.gemm_time(rows_below, r_cols, bc, t) * frac_left;
+                // Entry-point quantization: joiners wait for the next
+                // i_c iteration (≈ one mc-row slice of the GEMM).
+                let entry_lag = hw.gemm_time(96, r_cols.min(4096), bc, t_ru) * 0.5;
+                pf_total + entry_lag.min(ru_total - pf_total) + left_merged
+            }
+        } else if pf_total <= ru_total {
+            // LU_LA: PF team idles until RU completes.
+            ru_total
+        } else {
+            // PF is slower. LA/MB: RU idles (paper Fig. 9). ET: the cut
+            // already bounded pf_total near ru_total.
+            pf_total
+        };
+
+        // Trace spans for this iteration.
+        push_span(&mut spans, tr, 0, 1, Kind::Swap, "PF1.swap", time, time + pf_swap);
+        push_span(&mut spans, tr, 0, 1, Kind::Trsm, "PF1.trsm", time + pf_swap, time + pf_swap + pf_trsm);
+        push_span(&mut spans, tr, 0, 1, Kind::Gemm, "PF2.gemm", time + pf_swap + pf_trsm, time + pf_pre);
+        push_span(&mut spans, tr, 0, 1, Kind::Panel, "PF3.panel", time + pf_pre, time + pf_total);
+        push_span(&mut spans, tr, t_pf, t, Kind::Swap, "RU1.swap", time, time + ru_swap);
+        push_span(&mut spans, tr, t_pf, t, Kind::Trsm, "RU1.trsm", time + ru_swap, time + ru_swap + ru_trsm);
+        push_span(&mut spans, tr, t_pf, t, Kind::Gemm, "RU2.gemm", time + ru_swap + ru_trsm, time + ru_total.min(iter_time));
+        if malleable && pf_total < iter_time {
+            push_span(&mut spans, tr, 0, 1, Kind::Gemm, "WS:RU2.gemm", time + pf_total, time + iter_time);
+        } else if pf_total < iter_time {
+            push_span(&mut spans, tr, 0, 1, Kind::Wait, "idle", time + pf_total, time + iter_time);
+        }
+        if ru_total < iter_time {
+            push_span(&mut spans, tr, t_pf, t, Kind::Wait, "idle", time + ru_total, time + iter_time);
+        }
+
+        time += iter_time;
+        f = right0;
+        bc = k_done;
+    }
+
+    outcome(n, time, iters, et_cuts, spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwModel {
+        HwModel::default()
+    }
+
+    fn gf(v: SimVariant, n: usize, bo: usize) -> f64 {
+        simulate(&hw(), v, n, bo, 32, 6, 1, false).gflops
+    }
+
+    #[test]
+    fn lookahead_beats_plain_lu_midrange() {
+        // Paper Fig. 16: "except for the smallest problems, integrating
+        // look-ahead clearly improves performance" (and for the smallest,
+        // plain LU wins — also asserted).
+        assert!(gf(SimVariant::Lu, 1000, 256) > gf(SimVariant::La, 1000, 256));
+        for n in [4000usize, 6000, 8000, 10000] {
+            assert!(
+                gf(SimVariant::La, n, 256) > gf(SimVariant::Lu, n, 256),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn malleable_beats_la_for_large_problems() {
+        // Paper Fig. 16: LU_MB > LU_LA for larger problems (T_RU grows
+        // cubically vs the panel's quadratic cost).
+        for n in [6000usize, 8000, 10000, 12000] {
+            assert!(
+                gf(SimVariant::Mb, n, 256) > gf(SimVariant::La, n, 256),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn et_wins_small_problems_ties_large() {
+        // Paper Fig. 16: LU_ET outperforms the other static variants for
+        // small problems and matches LU_MB for large ones.
+        for n in [1000usize, 1500, 2000] {
+            assert!(
+                gf(SimVariant::Et, n, 256) >= gf(SimVariant::Mb, n, 256) * 0.999,
+                "n={n}: {} vs {}",
+                gf(SimVariant::Et, n, 256),
+                gf(SimVariant::Mb, n, 256)
+            );
+        }
+        let large = 12000;
+        let et = gf(SimVariant::Et, large, 256);
+        let mb = gf(SimVariant::Mb, large, 256);
+        assert!((et - mb).abs() / mb < 0.05, "et={et} mb={mb}");
+    }
+
+    #[test]
+    fn et_cuts_happen_when_panel_dominates() {
+        // Small matrix + big block: T_PF >> T_RU (paper Fig. 9 regime).
+        let out = simulate(&hw(), SimVariant::Et, 2000, 256, 32, 6, 1, false);
+        assert!(out.et_cuts > 0, "expected ET cuts, got none");
+        // And for huge problems at the same block size, cuts fade away.
+        let out_big = simulate(&hw(), SimVariant::Et, 12000, 256, 32, 6, 1, false);
+        assert!(out_big.et_cuts <= out.et_cuts);
+    }
+
+    #[test]
+    fn gflops_below_machine_peak_and_positive() {
+        for v in [SimVariant::Lu, SimVariant::La, SimVariant::Mb, SimVariant::Et] {
+            let g = gf(v, 8000, 256);
+            assert!(g > 10.0 && g < hw().machine_peak(), "{}: {g}", v.name());
+        }
+    }
+
+    #[test]
+    fn more_threads_help() {
+        let g1 = simulate(&hw(), SimVariant::Mb, 8000, 256, 32, 2, 1, false).gflops;
+        let g6 = simulate(&hw(), SimVariant::Mb, 8000, 256, 32, 6, 1, false).gflops;
+        assert!(g6 > 2.0 * g1, "g1={g1} g6={g6}");
+    }
+
+    #[test]
+    fn trace_spans_cover_all_lanes() {
+        let out = simulate(&hw(), SimVariant::Mb, 4000, 256, 32, 6, 1, true);
+        assert!(!out.spans.is_empty());
+        let lanes: std::collections::HashSet<usize> =
+            out.spans.iter().map(|s| s.lane).collect();
+        assert!(lanes.len() >= 6);
+        // Spans must be within [0, makespan].
+        for s in &out.spans {
+            assert!(s.t0 >= -1e-9 && s.t1 <= out.time + 1e-9);
+        }
+    }
+
+    #[test]
+    fn et_panel_widths_shrink_effective_iterations() {
+        // With ET the same problem takes more (narrower) iterations.
+        let et = simulate(&hw(), SimVariant::Et, 2000, 256, 32, 6, 1, false);
+        let mb = simulate(&hw(), SimVariant::Mb, 2000, 256, 32, 6, 1, false);
+        assert!(et.iters >= mb.iters);
+    }
+
+    #[test]
+    fn optimal_block_ordering_matches_paper_fig15() {
+        // Paper Fig. 15 trends at n = 10000: LU prefers larger b_o than
+        // LU_MB; LU_MB's optimum sits near the GEPP saturation point.
+        let sweep = |v: SimVariant| -> usize {
+            let mut best = (0usize, 0.0f64);
+            let mut b = 32;
+            while b <= 512 {
+                let g = gf(v, 10000, b);
+                if g > best.1 {
+                    best = (b, g);
+                }
+                b += 32;
+            }
+            best.0
+        };
+        let lu_opt = sweep(SimVariant::Lu);
+        let mb_opt = sweep(SimVariant::Mb);
+        assert!(lu_opt >= mb_opt, "lu_opt={lu_opt} mb_opt={mb_opt}");
+        assert!((96..=288).contains(&mb_opt), "mb_opt={mb_opt}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Discrete-event simulation of the paper's testbed.
+//!
+//! **Why this exists** (DESIGN.md §3): the paper's evaluation ran on a
+//! 6-core Intel Xeon E5-2603 v3; this container has a single vCPU, so
+//! wall-clock multithreaded measurements cannot reproduce the paper's
+//! performance figures. Following the substitution rule, this module
+//! simulates that testbed: a calibrated [`costmodel::HwModel`] prices
+//! every building block (GEPP-shaped GEMM, panel factorization, TRSM,
+//! LASWP), and per-variant simulators replay the *exact same scheduling
+//! state machines* as the real code in `lu/` and `taskrt/` — team split,
+//! WS merges at Loop-3 entry points, ET polls at inner-block boundaries,
+//! priority-driven task graphs — over virtual time.
+//!
+//! The simulators regenerate every performance figure of the paper
+//! (Figs. 14–17) and virtual-time versions of the trace figures
+//! (Figs. 5, 8, 9, 11). Absolute GFLOPS are model outputs; the claims
+//! under reproduction are the *shapes*: orderings, crossovers, and
+//! optimal block sizes.
+
+pub mod costmodel;
+pub mod figures;
+pub mod flops;
+pub mod lu_sim;
+pub mod os_sim;
+
+pub use costmodel::HwModel;
+pub use lu_sim::{simulate, SimOutcome, SimVariant};

@@ -1,0 +1,249 @@
+//! Virtual-time simulation of the task-runtime baseline (`LU_OS`).
+//!
+//! A list-scheduling DES over the same task graph `taskrt::lu_os`
+//! builds: `P(k)` (panel, priority) and `U(k,j)` (swap+TRSM+GEMM of panel
+//! `j` w.r.t. panel `k`). Tasks run *sequential* kernels (the paper links
+//! LU_OS with single-threaded BLIS) and each task pays the runtime's
+//! bookkeeping overhead. Adaptive-depth look-ahead emerges from the
+//! dependency structure, exactly as in OmpSs.
+
+use super::costmodel::HwModel;
+use crate::trace::{Kind, Span};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Debug)]
+struct SimTask {
+    cost: f64,
+    priority: i32,
+    kind: Kind,
+    label: String,
+    deps_left: usize,
+    dependents: Vec<usize>,
+}
+
+/// Simulate `LU_OS` on an `n × n` matrix with `t` workers.
+pub fn sim_os(hw: &HwModel, n: usize, bo: usize, bi: usize, t: usize, tr: bool) -> super::SimOutcome {
+    let bo = bo.max(1);
+    let n_panels = n.div_ceil(bo);
+    let mut tasks: Vec<SimTask> = Vec::new();
+    let mut u_prev: Vec<Option<usize>> = vec![None; n_panels];
+
+    let width = |p: usize| (p * bo + bo).min(n) - p * bo;
+    for k in 0..n_panels {
+        let b = width(k);
+        let diag = k * bo;
+        let rows = n - diag;
+        // P(k)
+        let deps: Vec<usize> = u_prev[k].into_iter().collect();
+        let pid = tasks.len();
+        tasks.push(SimTask {
+            cost: hw.panel_time(rows, b, bi, 1) + hw.task_overhead,
+            priority: 1,
+            kind: Kind::Panel,
+            label: format!("P({k})"),
+            deps_left: deps.len(),
+            dependents: Vec::new(),
+        });
+        for d in deps {
+            tasks[d].dependents.push(pid);
+        }
+        // U(k, j)
+        for j in k + 1..n_panels {
+            let w = width(j);
+            let id = tasks.len();
+            let deps: Vec<usize> = [Some(pid), u_prev[j]].into_iter().flatten().collect();
+            tasks.push(SimTask {
+                cost: hw.laswp_time(b, w, 1)
+                    + hw.trsm_time(b, w, 1)
+                    + hw.gemm_time(rows - b, w, b, 1)
+                    + hw.task_overhead,
+                priority: 0,
+                kind: Kind::Gemm,
+                label: format!("U({k},{j})"),
+                deps_left: deps.len(),
+                dependents: Vec::new(),
+            });
+            for d in deps {
+                tasks[d].dependents.push(id);
+            }
+            u_prev[j] = Some(id);
+        }
+    }
+
+    // ---- List-scheduling DES over t identical workers. ----
+    let mut ready: BinaryHeap<(i32, Reverse<usize>)> = BinaryHeap::new();
+    for (id, task) in tasks.iter().enumerate() {
+        if task.deps_left == 0 {
+            ready.push((task.priority, Reverse(id)));
+        }
+    }
+    // Completion events: (finish_time, task, lane).
+    let mut events: BinaryHeap<(Reverse<OrdF64>, usize, usize)> = BinaryHeap::new();
+    let mut free_lanes: BinaryHeap<Reverse<usize>> = (0..t.max(1)).map(Reverse).collect();
+    let mut now = 0.0f64;
+    let mut makespan = 0.0f64;
+    let mut done = 0usize;
+    let mut spans = Vec::new();
+    let mut deps_left: Vec<usize> = tasks.iter().map(|t| t.deps_left).collect();
+
+    while done < tasks.len() {
+        // Dispatch while workers and ready tasks are available.
+        while !free_lanes.is_empty() && !ready.is_empty() {
+            let (_, Reverse(id)) = ready.pop().unwrap();
+            let Reverse(lane) = free_lanes.pop().unwrap();
+            let fin = now + tasks[id].cost;
+            if tr {
+                spans.push(Span {
+                    lane,
+                    kind: tasks[id].kind,
+                    label: tasks[id].label.clone(),
+                    t0: now,
+                    t1: fin,
+                });
+            }
+            events.push((Reverse(OrdF64(fin)), id, lane));
+        }
+        // Advance to the next completion.
+        let Some((Reverse(OrdF64(fin)), id, lane)) = events.pop() else {
+            panic!("LU_OS sim stalled: {} of {} tasks done", done, tasks.len());
+        };
+        now = fin;
+        makespan = makespan.max(fin);
+        free_lanes.push(Reverse(lane));
+        done += 1;
+        let deps = tasks[id].dependents.clone();
+        for d in deps {
+            deps_left[d] -= 1;
+            if deps_left[d] == 0 {
+                ready.push((tasks[d].priority, Reverse(d)));
+            }
+        }
+    }
+
+    // Deferred left-pivot application (sequential tail, cheap).
+    let mut k = 0;
+    while k < n {
+        let b = bo.min(n - k);
+        makespan += hw.laswp_time(b, k, t.min(hw.bw_cores));
+        k += b;
+    }
+
+    super::SimOutcome {
+        time: makespan,
+        gflops: crate::util::gflops(super::flops::lu_total(n), makespan),
+        iters: n_panels,
+        et_cuts: 0,
+        spans,
+    }
+}
+
+/// Total-ordered f64 for the event queue (no NaNs by construction).
+#[derive(Copy, Clone, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN in event queue")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimVariant};
+
+    fn hw() -> HwModel {
+        HwModel::default()
+    }
+
+    #[test]
+    fn runs_and_produces_plausible_gflops() {
+        let out = sim_os(&hw(), 8000, 256, 32, 6, false);
+        assert!(out.gflops > 20.0 && out.gflops < hw().machine_peak());
+    }
+
+    #[test]
+    fn os_beats_plain_lu() {
+        // Dynamic look-ahead amortizes the panel cost: LU_OS must beat
+        // the BDP-only baseline for midsize problems.
+        for n in [4000usize, 8000] {
+            let os = sim_os(&hw(), n, 256, 32, 6, false).gflops;
+            let lu = simulate(&hw(), SimVariant::Lu, n, 256, 32, 6, 1, false).gflops;
+            assert!(os > lu, "n={n}: os={os} lu={lu}");
+        }
+    }
+
+    #[test]
+    fn et_beats_os_for_most_sizes_fixed_blocks() {
+        // Paper Fig. 17 (fixed blocks b=192 for ET, b=256 for OS): ET
+        // wins for most problem dimensions.
+        let mut et_wins = 0;
+        let mut total = 0;
+        let mut n = 1000;
+        while n <= 10000 {
+            let et = simulate(&hw(), SimVariant::Et, n, 192, 32, 6, 1, false).gflops;
+            let os = sim_os(&hw(), n, 256, 32, 6, false).gflops;
+            if et > os {
+                et_wins += 1;
+            }
+            total += 1;
+            n += 1500;
+        }
+        assert!(
+            et_wins * 2 > total,
+            "ET should win most sizes: {et_wins}/{total}"
+        );
+    }
+
+    #[test]
+    fn os_more_sensitive_to_block_size_than_et() {
+        // Paper Fig. 17: a suboptimal b_o hurts LU_OS visibly more than
+        // LU_ET (whose ET mechanism adapts on the fly).
+        let n = 3000;
+        let sens = |f: &dyn Fn(usize) -> f64| {
+            let at = |b: usize| f(b);
+            let best = (1..=16)
+                .map(|i| at(32 * i))
+                .fold(0.0f64, f64::max);
+            (best - at(448)) / best
+        };
+        let et_sens = sens(&|b| simulate(&hw(), SimVariant::Et, n, b, 32, 6, 1, false).gflops);
+        let os_sens = sens(&|b| sim_os(&hw(), n, b, 32, 6, false).gflops);
+        assert!(
+            os_sens > et_sens,
+            "os_sens={os_sens:.3} et_sens={et_sens:.3}"
+        );
+    }
+
+    #[test]
+    fn trace_spans_one_task_per_slot() {
+        let out = sim_os(&hw(), 2000, 256, 32, 6, true);
+        assert!(!out.spans.is_empty());
+        // No two spans overlap on the same lane.
+        let mut by_lane: std::collections::HashMap<usize, Vec<(f64, f64)>> =
+            std::collections::HashMap::new();
+        for s in &out.spans {
+            by_lane.entry(s.lane).or_default().push((s.t0, s.t1));
+        }
+        for (lane, mut iv) in by_lane {
+            iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in iv.windows(2) {
+                assert!(w[0].1 <= w[1].0 + 1e-12, "overlap on lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_degrades_gracefully() {
+        let out = sim_os(&hw(), 2000, 256, 32, 1, false);
+        assert!(out.gflops > 1.0);
+        let out6 = sim_os(&hw(), 2000, 256, 32, 6, false);
+        assert!(out6.gflops > out.gflops);
+    }
+}

@@ -1,0 +1,248 @@
+//! `LU_OS` — blocked right-looking LU with *adaptive* look-ahead
+//! extracted by the task runtime (the paper's OmpSs baseline, §5).
+//!
+//! Decomposition (paper §5, LU_OS bullet): the matrix is divided into
+//! column panels of fixed width `b_o`. All operations performed during
+//! iteration `k` on panel `j` — row permutation, triangular solve and
+//! matrix multiplication — form one task `U(k,j)`; the factorization of
+//! panel `k` is the task `P(k)`, given elevated **priority** so the
+//! runtime advances the critical path (look-ahead of dynamic depth
+//! emerges from the dependency structure, not from code structure).
+//!
+//! Dependencies:
+//! - `P(k)`   after `U(k-1, k)`
+//! - `U(k,j)` after `P(k)` and `U(k-1, j)`     (for `j > k`)
+//!
+//! Tasks run sequential kernels (single-thread crews): the runtime
+//! exploits TP only, matching the paper's "calls to a sequential instance
+//! of BLIS". Panels factorize with the **left-looking** inner variant,
+//! like the paper's LU_OS configuration ("we integrated the LL variant as
+//! well to favor a fair comparison").
+//!
+//! Pivot application to the *left* of each panel happens after the graph
+//! drains (it touches finished columns only, is O(n²) data movement, and
+//! keeping it out of the graph spares n² extra edges; LAPACK semantics
+//! are preserved).
+
+use super::{run, GraphBuilder};
+use crate::blis::{gemm, trsm_llu};
+use crate::lu::panel::panel_ll;
+use crate::lu::{LuConfig, LuResult};
+use crate::matrix::Matrix;
+use crate::pool::{Crew, Pool};
+use crate::trace::{span, Kind};
+use std::sync::{Arc, Mutex};
+
+/// Factorize `a` in place via the task runtime. Total team =
+/// `pool.workers() + 1` (the caller executes tasks too).
+pub fn factorize_os(pool: &Pool, a: &mut Matrix, cfg: &LuConfig) -> LuResult {
+    let av = a.view_mut();
+    let (m, n) = (av.rows(), av.cols());
+    let kmax = m.min(n);
+    if kmax == 0 {
+        return LuResult::default();
+    }
+    let bo = cfg.bo.max(1);
+    let bi = cfg.bi.max(1);
+    let params = cfg.params;
+    // Panel column ranges.
+    let n_panels = n.div_ceil(bo);
+    let n_fact = kmax.div_ceil(bo); // panels that get a P(k) task
+    let col0 = |p: usize| p * bo;
+    let cols_of = |p: usize| (col0(p), (col0(p) + bo).min(n));
+
+    // Per-panel pivot storage (absolute row indices), filled by P(k).
+    let pivots: Arc<Vec<Mutex<Vec<usize>>>> =
+        Arc::new((0..n_fact).map(|_| Mutex::new(Vec::new())).collect());
+
+    let mut gb = GraphBuilder::new();
+    // task ids of the previous iteration per panel: u_prev[j]
+    let mut u_prev: Vec<Option<usize>> = vec![None; n_panels];
+    let mut p_task: Vec<usize> = Vec::with_capacity(n_fact);
+
+    for k in 0..n_fact {
+        let (jl, jr) = cols_of(k);
+        let diag = jl; // first row of the panel's diagonal block
+        // P(k): factorize panel k (rows diag.., cols jl..jr).
+        let deps: Vec<usize> = u_prev[k].into_iter().collect();
+        let pv = Arc::clone(&pivots);
+        let pid = gb.add(format!("P({k})"), 1, &deps, move || {
+            let mut crew = Crew::new(); // sequential kernels (TP only)
+            let sub = av.sub(diag, jl, m - diag, jr - jl);
+            let out = span(Kind::Panel, "P", || {
+                panel_ll(&mut crew, &params, sub, bi, None)
+            });
+            *pv[k].lock().unwrap() = out.ipiv.iter().map(|p| p + diag).collect();
+        });
+        p_task.push(pid);
+
+        // U(k, j) for every panel to the right.
+        for j in k + 1..n_panels {
+            let (ul, ur) = cols_of(j);
+            let deps: Vec<usize> = [Some(pid), u_prev[j]].into_iter().flatten().collect();
+            let pv = Arc::clone(&pivots);
+            let id = gb.add(format!("U({k},{j})"), 0, &deps, move || {
+                let mut crew = Crew::new();
+                let piv = pv[k].lock().unwrap().clone();
+                let b = piv.len(); // panel width (kmax-clamped on the last)
+                // Row permutation of this panel's column range.
+                span(Kind::Swap, "U.swap", || {
+                    laswp_abs(&mut crew, av, &piv, diag, ul, ur);
+                });
+                // Triangular solve against the panel's diagonal block.
+                span(Kind::Trsm, "U.trsm", || {
+                    trsm_llu(
+                        &mut crew,
+                        &params,
+                        av.sub(diag, jl, b, b).as_ref(),
+                        av.sub(diag, ul, b, ur - ul),
+                    );
+                });
+                // Trailing GEMM of this panel's column range.
+                if m > diag + b {
+                    span(Kind::Gemm, "U.gemm", || {
+                        gemm(
+                            &mut crew,
+                            &params,
+                            -1.0,
+                            av.sub(diag + b, jl, m - diag - b, b).as_ref(),
+                            av.sub(diag, ul, b, ur - ul).as_ref(),
+                            av.sub(diag + b, ul, m - diag - b, ur - ul),
+                        );
+                    });
+                }
+            });
+            u_prev[j] = Some(id);
+        }
+    }
+
+    run(gb.build(), pool);
+
+    // Deferred left-of-panel pivot application + pivot vector assembly.
+    let mut crew = Crew::new();
+    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
+    for k in 0..n_fact {
+        let (jl, _) = cols_of(k);
+        let piv = pivots[k].lock().unwrap().clone();
+        laswp_abs(&mut crew, av, &piv, jl, 0, jl);
+        ipiv.extend_from_slice(&piv);
+    }
+    debug_assert_eq!(ipiv.len(), kmax);
+    LuResult {
+        ipiv,
+        la_stats: None,
+    }
+}
+
+/// Swap rows `base+i` ↔ `piv[i]` over columns `jlo..jhi` (same convention
+/// as [`crate::lu::lookahead`]'s helper; duplicated to keep the task
+/// closures self-contained).
+fn laswp_abs(
+    crew: &mut Crew,
+    a: crate::matrix::MatMut,
+    piv: &[usize],
+    base: usize,
+    jlo: usize,
+    jhi: usize,
+) {
+    if piv.is_empty() || jlo >= jhi {
+        return;
+    }
+    let ipiv_abs: Vec<usize> = piv.to_vec();
+    crew.parallel_ranges(jhi - jlo, 16, |cols| {
+        for (i, &p) in ipiv_abs.iter().enumerate() {
+            let row = base + i;
+            if p != row {
+                a.swap_rows(row, p, jlo + cols.start, jlo + cols.end);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::BlisParams;
+    use crate::lu::{residual, Variant};
+    use crate::matrix::naive;
+
+    fn cfg(bo: usize, bi: usize) -> LuConfig {
+        LuConfig {
+            variant: Variant::OmpSs,
+            bo,
+            bi,
+            threads: 3,
+            params: BlisParams::tiny(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn factorizes_square_matrices() {
+        for &(n, bo, bi) in &[(24usize, 8usize, 4usize), (50, 16, 4), (33, 8, 2), (16, 16, 4)] {
+            let a0 = Matrix::random(n, n, (n + bo) as u64);
+            let mut f = a0.clone();
+            let pool = Pool::new(2);
+            let out = factorize_os(&pool, &mut f, &cfg(bo, bi));
+            assert_eq!(out.ipiv.len(), n);
+            let r = residual(&a0, &f, &out.ipiv);
+            assert!(r < 1e-11, "n={n} bo={bo}: residual {r}");
+            assert!(naive::growth_bounded(&f));
+        }
+    }
+
+    #[test]
+    fn rectangular_matrices() {
+        for &(m, n) in &[(40usize, 24usize), (24, 40)] {
+            let a0 = Matrix::random(m, n, (m * 2 + n) as u64);
+            let mut f = a0.clone();
+            let pool = Pool::new(2);
+            let out = factorize_os(&pool, &mut f, &cfg(8, 4));
+            let r = residual(&a0, &f, &out.ipiv);
+            assert!(r < 1e-11, "m={m} n={n}: residual {r}");
+        }
+    }
+
+    #[test]
+    fn matches_direct_variants_pivots() {
+        let n = 48;
+        let a0 = Matrix::random(n, n, 9);
+        let pool = Pool::new(2);
+        let mut f_os = a0.clone();
+        let out_os = factorize_os(&pool, &mut f_os, &cfg(8, 4));
+        let mut f_ref = a0.clone();
+        let piv_ref = naive::lu(f_ref.view_mut());
+        assert_eq!(out_os.ipiv, piv_ref);
+        let d = f_os.max_abs_diff(&f_ref);
+        assert!(d < 1e-10, "factors diff {d}");
+    }
+
+    #[test]
+    fn single_worker_pool() {
+        let a0 = Matrix::random(30, 30, 11);
+        let mut f = a0.clone();
+        let pool = Pool::new(0); // caller-only execution
+        let out = factorize_os(&pool, &mut f, &cfg(8, 4));
+        let r = residual(&a0, &f, &out.ipiv);
+        assert!(r < 1e-11, "residual {r}");
+    }
+
+    #[test]
+    fn through_public_dispatch() {
+        let a0 = Matrix::random(40, 40, 13);
+        let mut f = a0.clone();
+        let out = crate::lu::factorize(&mut f, &cfg(8, 4), None);
+        let r = residual(&a0, &f, &out.ipiv);
+        assert!(r < 1e-11, "residual {r}");
+    }
+
+    #[test]
+    fn bo_larger_than_matrix() {
+        let a0 = Matrix::random(10, 10, 14);
+        let mut f = a0.clone();
+        let pool = Pool::new(1);
+        let out = factorize_os(&pool, &mut f, &cfg(64, 4));
+        let r = residual(&a0, &f, &out.ipiv);
+        assert!(r < 1e-12, "residual {r}");
+    }
+}

@@ -1,0 +1,376 @@
+//! An OmpSs-like dependency-driven task runtime (the paper's §4.3/§5
+//! baseline, `LU_OS`, used OmpSs 16.06).
+//!
+//! The runtime executes a static task graph: each [`Task`] carries a
+//! priority and a closure; edges are data dependencies declared at build
+//! time. Ready tasks go into a priority queue (higher priority first, FIFO
+//! within a priority level — the paper's OmpSs configuration prioritizes
+//! panel-factorization tasks to advance the critical path). Workers (pool
+//! threads plus the caller) pull from the queue until the graph drains.
+//!
+//! Tasks run *sequential* kernels (the paper links LU_OS against
+//! single-threaded BLIS): TP only, no nested BDP — that contrast with the
+//! crew-based variants is exactly the comparison of Fig. 17.
+
+pub mod lu_os;
+
+use crate::pool::Pool;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Task priority: larger runs earlier among ready tasks.
+pub type Priority = i32;
+
+type TaskFn = Box<dyn FnOnce() + Send>;
+
+/// A node of the task graph (builder view).
+pub struct Task {
+    pub name: String,
+    pub priority: Priority,
+    run: Option<TaskFn>,
+    /// Indices of tasks that must finish first.
+    deps: Vec<usize>,
+}
+
+/// Static task graph builder.
+#[derive(Default)]
+pub struct GraphBuilder {
+    tasks: Vec<Task>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a task; returns its id. `deps` are ids of prerequisite tasks
+    /// (must already exist — the graph is built in topological order,
+    /// which the LU decomposition naturally provides).
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        priority: Priority,
+        deps: &[usize],
+        run: impl FnOnce() + Send + 'static,
+    ) -> usize {
+        for &d in deps {
+            assert!(d < self.tasks.len(), "dependency on future task {d}");
+        }
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            name: name.into(),
+            priority,
+            run: Some(Box::new(run)),
+            deps: deps.to_vec(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Finalize into an executable graph.
+    pub fn build(self) -> Graph {
+        let n = self.tasks.len();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut missing: Vec<AtomicUsize> = Vec::with_capacity(n);
+        for (id, t) in self.tasks.iter().enumerate() {
+            missing.push(AtomicUsize::new(t.deps.len()));
+            for &d in &t.deps {
+                dependents[d].push(id);
+            }
+        }
+        Graph {
+            tasks: self
+                .tasks
+                .into_iter()
+                .map(|t| TaskSlot {
+                    name: t.name,
+                    priority: t.priority,
+                    run: Mutex::new(t.run),
+                })
+                .collect(),
+            dependents,
+            missing,
+        }
+    }
+}
+
+struct TaskSlot {
+    name: String,
+    priority: Priority,
+    run: Mutex<Option<TaskFn>>,
+}
+
+/// An executable task graph.
+pub struct Graph {
+    tasks: Vec<TaskSlot>,
+    dependents: Vec<Vec<usize>>,
+    missing: Vec<AtomicUsize>,
+}
+
+/// Ready-queue entry ordered by (priority, FIFO id).
+#[derive(PartialEq, Eq)]
+struct Ready {
+    priority: Priority,
+    id: usize,
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher priority first; among equals, lower id first.
+        self.priority
+            .cmp(&other.priority)
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct SchedState {
+    queue: Mutex<BinaryHeap<Ready>>,
+    ready_cv: Condvar,
+    remaining: AtomicUsize,
+}
+
+/// Execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Tasks executed by each participant (index 0 = caller, then pool
+    /// workers in order).
+    pub per_worker: Vec<usize>,
+    /// Order in which task ids were *started* (for schedule tests; only
+    /// meaningful with one worker).
+    pub start_order: Vec<usize>,
+}
+
+/// Execute the graph on `pool`'s workers plus the calling thread.
+/// Returns when every task has run. Panics if the graph has a cycle
+/// (detected as a stall) or if a task panics.
+pub fn run(graph: Graph, pool: &Pool) -> RunStats {
+    let n = graph.tasks.len();
+    let stats = Arc::new(Mutex::new(RunStats {
+        per_worker: vec![0; pool.workers() + 1],
+        start_order: Vec::with_capacity(n),
+    }));
+    if n == 0 {
+        return Arc::try_unwrap(stats).unwrap().into_inner().unwrap();
+    }
+    let graph = Arc::new(graph);
+    let sched = Arc::new(SchedState {
+        queue: Mutex::new(BinaryHeap::new()),
+        ready_cv: Condvar::new(),
+        remaining: AtomicUsize::new(n),
+    });
+    // Seed the queue with dependency-free tasks.
+    {
+        let mut q = sched.queue.lock().unwrap();
+        for id in 0..n {
+            if graph.missing[id].load(Ordering::Relaxed) == 0 {
+                q.push(Ready {
+                    priority: graph.tasks[id].priority,
+                    id,
+                });
+            }
+        }
+        assert!(!q.is_empty(), "task graph has no entry tasks (cycle?)");
+    }
+
+    let handles: Vec<_> = (0..pool.workers())
+        .map(|w| {
+            let g = Arc::clone(&graph);
+            let s = Arc::clone(&sched);
+            let st = Arc::clone(&stats);
+            pool.submit(w, move || executor_loop(&g, &s, &st, w + 1))
+        })
+        .collect();
+    executor_loop(&graph, &sched, &stats, 0);
+    for h in handles {
+        h.wait();
+    }
+    assert_eq!(
+        sched.remaining.load(Ordering::Acquire),
+        0,
+        "task graph stalled (cycle or missing notify)"
+    );
+    Arc::try_unwrap(stats).unwrap().into_inner().unwrap()
+}
+
+fn executor_loop(graph: &Graph, sched: &SchedState, stats: &Mutex<RunStats>, me: usize) {
+    loop {
+        // Grab the highest-priority ready task, or leave when drained.
+        let id = {
+            let mut q = sched.queue.lock().unwrap();
+            loop {
+                if sched.remaining.load(Ordering::Acquire) == 0 {
+                    return;
+                }
+                if let Some(r) = q.pop() {
+                    break r.id;
+                }
+                q = sched.ready_cv.wait(q).unwrap();
+            }
+        };
+        {
+            let mut st = stats.lock().unwrap();
+            st.per_worker[me] += 1;
+            st.start_order.push(id);
+        }
+        let f = graph.tasks[id]
+            .run
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| panic!("task {} ({}) ran twice", id, graph.tasks[id].name));
+        f();
+        // Release dependents.
+        let mut newly_ready = Vec::new();
+        for &dep in &graph.dependents[id] {
+            if graph.missing[dep].fetch_sub(1, Ordering::AcqRel) == 1 {
+                newly_ready.push(dep);
+            }
+        }
+        let finished = sched.remaining.fetch_sub(1, Ordering::AcqRel) == 1;
+        if !newly_ready.is_empty() || finished {
+            let mut q = sched.queue.lock().unwrap();
+            for id in newly_ready {
+                q.push(Ready {
+                    priority: graph.tasks[id].priority,
+                    id,
+                });
+            }
+            drop(q);
+            sched.ready_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn empty_graph_runs() {
+        let pool = Pool::new(1);
+        let stats = run(GraphBuilder::new().build(), &pool);
+        assert!(stats.start_order.is_empty());
+    }
+
+    #[test]
+    fn chain_executes_in_order() {
+        let pool = Pool::new(2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut gb = GraphBuilder::new();
+        let mut prev: Option<usize> = None;
+        for i in 0..10 {
+            let log = Arc::clone(&log);
+            let deps: Vec<usize> = prev.into_iter().collect();
+            prev = Some(gb.add(format!("t{i}"), 0, &deps, move || {
+                log.lock().unwrap().push(i)
+            }));
+        }
+        run(gb.build(), &pool);
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn diamond_respects_dependencies() {
+        let pool = Pool::new(3);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut gb = GraphBuilder::new();
+        let mk = |seen: &Arc<Mutex<Vec<&'static str>>>, tag: &'static str| {
+            let s = Arc::clone(seen);
+            move || s.lock().unwrap().push(tag)
+        };
+        let a = gb.add("a", 0, &[], mk(&seen, "a"));
+        let b = gb.add("b", 0, &[a], mk(&seen, "b"));
+        let c = gb.add("c", 0, &[a], mk(&seen, "c"));
+        let _d = gb.add("d", 0, &[b, c], mk(&seen, "d"));
+        run(gb.build(), &pool);
+        let order = seen.lock().unwrap().clone();
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], "a");
+        assert_eq!(order[3], "d");
+    }
+
+    #[test]
+    fn priority_wins_among_ready() {
+        // Single participant (pool of 0 workers): start order is exactly
+        // queue-pop order.
+        let pool = Pool::new(0);
+        let mut gb = GraphBuilder::new();
+        let noop = || {};
+        let _low1 = gb.add("low1", 0, &[], noop);
+        let _high = gb.add("high", 10, &[], noop);
+        let _low2 = gb.add("low2", 0, &[], noop);
+        let _mid = gb.add("mid", 5, &[], noop);
+        let stats = run(gb.build(), &pool);
+        assert_eq!(stats.start_order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let pool = Pool::new(0);
+        let mut gb = GraphBuilder::new();
+        for i in 0..5 {
+            gb.add(format!("t{i}"), 7, &[], || {});
+        }
+        let stats = run(gb.build(), &pool);
+        assert_eq!(stats.start_order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wide_fanout_all_run_once() {
+        let pool = Pool::new(3);
+        let count = Arc::new(AtomicU64::new(0));
+        let mut gb = GraphBuilder::new();
+        let root = gb.add("root", 0, &[], || {});
+        let mids: Vec<usize> = (0..50)
+            .map(|i| {
+                let c = Arc::clone(&count);
+                gb.add(format!("m{i}"), 0, &[root], move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        let c2 = Arc::clone(&count);
+        gb.add("sink", 0, &mids, move || {
+            assert_eq!(c2.load(Ordering::Acquire), 50);
+        });
+        let stats = run(gb.build(), &pool);
+        assert_eq!(stats.start_order.len(), 52);
+        assert_eq!(stats.per_worker.iter().sum::<usize>(), 52);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency on future task")]
+    fn forward_dependency_rejected() {
+        let mut gb = GraphBuilder::new();
+        gb.add("bad", 0, &[3], || {});
+    }
+
+    #[test]
+    fn stats_track_participants() {
+        let pool = Pool::new(2);
+        let mut gb = GraphBuilder::new();
+        for i in 0..30 {
+            gb.add(format!("t{i}"), 0, &[], || {
+                std::thread::sleep(std::time::Duration::from_micros(20));
+            });
+        }
+        let stats = run(gb.build(), &pool);
+        assert_eq!(stats.per_worker.len(), 3);
+        assert_eq!(stats.per_worker.iter().sum::<usize>(), 30);
+    }
+}

@@ -1,0 +1,360 @@
+//! Extrae-like execution tracer.
+//!
+//! The paper's trace figures (Figs. 5, 8, 9, 11) were produced with
+//! Extrae + Paraver. This module reproduces the workflow: kernels wrap
+//! their work in [`span`]s tagged with a [`Kind`]; a [`Recorder`]
+//! (globally installed for the duration of a traced run) collects
+//! `(worker, kind, label, t0, t1)` tuples; renderers emit an ASCII Gantt
+//! chart (one lane per worker, like a Paraver timeline) or Chrome
+//! `trace_event` JSON for `chrome://tracing` / Perfetto.
+//!
+//! Tracing is strictly opt-in: with no recorder installed, [`span`] costs
+//! one relaxed atomic load.
+
+use crate::pool::current_worker;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Task classes, colored distinctly in the Gantt rendering — mirroring the
+/// paper's trace legend (panel factorization, row permutation, triangular
+/// solve, matrix multiplication, idle).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Panel factorization (paper: PANEL / PF3).
+    Panel,
+    /// Row interchanges (paper: LASWP).
+    Swap,
+    /// Triangular solve (paper: TRSM / RL2).
+    Trsm,
+    /// Matrix multiply (paper: GEMM / RL3 / RU2).
+    Gemm,
+    /// Packing of `A_c`/`B_c` buffers.
+    Pack,
+    /// Synchronization / waiting.
+    Wait,
+    /// Anything else (task runtime bookkeeping etc.).
+    Other,
+}
+
+impl Kind {
+    /// Single-character cell used in the ASCII Gantt.
+    pub fn glyph(self) -> char {
+        match self {
+            Kind::Panel => 'P',
+            Kind::Swap => 's',
+            Kind::Trsm => 't',
+            Kind::Gemm => 'G',
+            Kind::Pack => 'k',
+            Kind::Wait => '.',
+            Kind::Other => 'o',
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Panel => "panel",
+            Kind::Swap => "swap",
+            Kind::Trsm => "trsm",
+            Kind::Gemm => "gemm",
+            Kind::Pack => "pack",
+            Kind::Wait => "wait",
+            Kind::Other => "other",
+        }
+    }
+}
+
+/// One recorded span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Worker lane: pool worker id + 1, or 0 for the main thread.
+    pub lane: usize,
+    pub kind: Kind,
+    pub label: String,
+    /// Seconds since the recorder's origin.
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// Collects spans from all threads.
+pub struct Recorder {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn record(&self, lane: usize, kind: Kind, label: &str, t0: Instant, t1: Instant) {
+        let s = Span {
+            lane,
+            kind,
+            label: label.to_string(),
+            t0: t0.duration_since(self.origin).as_secs_f64(),
+            t1: t1.duration_since(self.origin).as_secs_f64(),
+        };
+        self.spans.lock().unwrap().push(s);
+    }
+
+    /// Snapshot of all spans recorded so far, sorted by start time.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut v = self.spans.lock().unwrap().clone();
+        v.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        v
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<Mutex<Option<Arc<Recorder>>>> = OnceLock::new();
+
+fn slot() -> &'static Mutex<Option<Arc<Recorder>>> {
+    RECORDER.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a fresh global recorder and return it. Replaces any previous
+/// one. (Tests that trace must not run concurrently with each other; the
+/// library itself never installs a recorder.)
+pub fn start() -> Arc<Recorder> {
+    let rec = Arc::new(Recorder::new());
+    *slot().lock().unwrap() = Some(Arc::clone(&rec));
+    ENABLED.store(true, Ordering::Release);
+    rec
+}
+
+/// Uninstall the global recorder.
+pub fn stop() {
+    ENABLED.store(false, Ordering::Release);
+    *slot().lock().unwrap() = None;
+}
+
+fn current() -> Option<Arc<Recorder>> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    slot().lock().unwrap().clone()
+}
+
+/// Lane index of the calling thread (main thread = 0, worker `w` = `w+1`).
+pub fn lane() -> usize {
+    current_worker().map(|w| w + 1).unwrap_or(0)
+}
+
+/// Run `f`, recording it as a span if a recorder is installed.
+pub fn span<T>(kind: Kind, label: &str, f: impl FnOnce() -> T) -> T {
+    match current() {
+        None => f(),
+        Some(rec) => {
+            let t0 = Instant::now();
+            let out = f();
+            rec.record(lane(), kind, label, t0, Instant::now());
+            out
+        }
+    }
+}
+
+/// Render spans as an ASCII Gantt chart: one lane per worker, `width`
+/// character cells across the full time range. Overlapping spans within a
+/// lane keep the later glyph (lanes are effectively serial per worker, so
+/// this only matters at cell granularity).
+pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
+    if spans.is_empty() {
+        return String::from("(no spans)\n");
+    }
+    let tmax = spans.iter().map(|s| s.t1).fold(0.0f64, f64::max);
+    let tmin = spans.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+    let range = (tmax - tmin).max(1e-12);
+    let n_lanes = spans.iter().map(|s| s.lane).max().unwrap() + 1;
+    let mut rows = vec![vec![' '; width]; n_lanes];
+    for s in spans {
+        let c0 = (((s.t0 - tmin) / range) * width as f64).floor() as usize;
+        let c1 = (((s.t1 - tmin) / range) * width as f64).ceil() as usize;
+        let c1 = c1.clamp(c0 + 1, width);
+        for cell in &mut rows[s.lane][c0.min(width - 1)..c1] {
+            *cell = s.kind.glyph();
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time range: {:.6}s .. {:.6}s  ({} spans)\n",
+        tmin,
+        tmax,
+        spans.len()
+    ));
+    for (lane, row) in rows.iter().enumerate() {
+        let name = if lane == 0 {
+            "main ".to_string()
+        } else {
+            format!("wk{:<3}", lane - 1)
+        };
+        out.push_str(&name);
+        out.push('|');
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out.push_str("legend: P=panel s=swap t=trsm G=gemm k=pack .=wait\n");
+    out
+}
+
+/// Render spans as Chrome `trace_event` JSON (open in Perfetto or
+/// `chrome://tracing`).
+pub fn chrome_json(spans: &[Span]) -> String {
+    let mut out = String::from("[\n");
+    for (i, s) in spans.iter().enumerate() {
+        let comma = if i + 1 == spans.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {:.3}, \"dur\": {:.3}, \"pid\": 1, \"tid\": {}}}{}\n",
+            escape(&s.label),
+            s.kind.name(),
+            s.t0 * 1e6,
+            (s.t1 - s.t0) * 1e6,
+            s.lane,
+            comma
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Per-kind busy time (seconds) per lane — the quantitative counterpart of
+/// the trace figures (e.g. "panel time dominates lane 1").
+pub fn busy_by_kind(spans: &[Span]) -> Vec<(usize, Kind, f64)> {
+    use std::collections::HashMap;
+    let mut acc: HashMap<(usize, Kind), f64> = HashMap::new();
+    for s in spans {
+        *acc.entry((s.lane, s.kind)).or_insert(0.0) += s.t1 - s.t0;
+    }
+    let mut v: Vec<_> = acc.into_iter().map(|((l, k), t)| (l, k, t)).collect();
+    v.sort_by(|a, b| (a.0, a.1.glyph()).cmp(&(b.0, b.1.glyph())));
+    v
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests share the global recorder; run serially via the
+    // lock below.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn span_without_recorder_is_passthrough() {
+        let _g = TEST_LOCK.lock().unwrap();
+        stop();
+        let v = span(Kind::Gemm, "x", || 42);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn recorder_collects_spans_with_lanes() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let rec = start();
+        span(Kind::Panel, "p0", || {
+            std::thread::sleep(std::time::Duration::from_micros(100))
+        });
+        span(Kind::Gemm, "g0", || {});
+        let pool = crate::pool::Pool::new(2);
+        pool.submit(1, || {
+            span(Kind::Trsm, "t0", || {});
+        })
+        .wait();
+        stop();
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().any(|s| s.kind == Kind::Panel && s.lane == 0));
+        assert!(spans.iter().any(|s| s.kind == Kind::Trsm && s.lane == 2));
+        let p = spans.iter().find(|s| s.kind == Kind::Panel).unwrap();
+        assert!(p.t1 >= p.t0 + 50e-6);
+    }
+
+    #[test]
+    fn gantt_renders_all_lanes() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let spans = vec![
+            Span {
+                lane: 0,
+                kind: Kind::Gemm,
+                label: "g".into(),
+                t0: 0.0,
+                t1: 1.0,
+            },
+            Span {
+                lane: 2,
+                kind: Kind::Panel,
+                label: "p".into(),
+                t0: 0.5,
+                t1: 1.0,
+            },
+        ];
+        let g = ascii_gantt(&spans, 40);
+        assert!(g.contains("main |GGG"), "{g}");
+        assert!(g.contains("wk1  |"), "{g}");
+        assert!(g.contains('P'), "{g}");
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(lines.len(), 1 + 3 + 1); // header + 3 lanes + legend
+    }
+
+    #[test]
+    fn gantt_empty() {
+        assert_eq!(ascii_gantt(&[], 10), "(no spans)\n");
+    }
+
+    #[test]
+    fn chrome_json_is_wellformed_enough() {
+        let spans = vec![Span {
+            lane: 1,
+            kind: Kind::Pack,
+            label: "pack \"A_c\"".into(),
+            t0: 0.001,
+            t1: 0.002,
+        }];
+        let j = chrome_json(&spans);
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\"cat\": \"pack\""));
+        assert!(j.contains("\\\"A_c\\\"")); // quotes escaped
+        assert!(j.contains("\"ts\": 1000.000"));
+    }
+
+    #[test]
+    fn busy_by_kind_accumulates() {
+        let spans = vec![
+            Span {
+                lane: 0,
+                kind: Kind::Gemm,
+                label: String::new(),
+                t0: 0.0,
+                t1: 1.0,
+            },
+            Span {
+                lane: 0,
+                kind: Kind::Gemm,
+                label: String::new(),
+                t0: 2.0,
+                t1: 2.5,
+            },
+            Span {
+                lane: 1,
+                kind: Kind::Panel,
+                label: String::new(),
+                t0: 0.0,
+                t1: 0.25,
+            },
+        ];
+        let b = busy_by_kind(&spans);
+        assert!(b
+            .iter()
+            .any(|&(l, k, t)| l == 0 && k == Kind::Gemm && (t - 1.5).abs() < 1e-12));
+        assert!(b
+            .iter()
+            .any(|&(l, k, t)| l == 1 && k == Kind::Panel && (t - 0.25).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,145 @@
+//! Small self-contained utilities: PRNG, statistics, timing helpers and a
+//! miniature property-testing harness.
+//!
+//! The offline build environment has no `rand`, `criterion` or `proptest`
+//! crates available, so this module provides the minimal replacements the
+//! rest of the crate needs (documented as a substitution in DESIGN.md §3).
+
+pub mod json;
+pub mod prng;
+pub mod quickcheck_lite;
+pub mod stats;
+
+pub use prng::Prng;
+pub use stats::Stats;
+
+use std::time::Instant;
+
+/// Wall-clock duration of `f` in seconds, together with its result.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Flop count of an `m × n` LU factorization with partial pivoting
+/// (`mn² − n³/3`; pivoting's O(n²) comparisons are not counted, matching
+/// the paper's convention).
+pub fn lu_flops(m: usize, n: usize) -> f64 {
+    let (m, n) = (m as f64, n as f64);
+    m * n * n - n * n * n / 3.0
+}
+
+/// Flop count of `C += A·B` with `A` `m×k`, `B` `k×n`.
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// Flop count of a unit-lower-triangular left solve `TRILU(A)⁻¹ B` with
+/// `A` `m×m`, `B` `m×n`.
+pub fn trsm_flops(m: usize, n: usize) -> f64 {
+    m as f64 * m as f64 * n as f64
+}
+
+/// GFLOPS given a flop count and elapsed seconds.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    flops / secs / 1e9
+}
+
+/// Round `x` up to the next multiple of `q` (`q > 0`).
+pub fn round_up(x: usize, q: usize) -> usize {
+    x.div_ceil(q) * q
+}
+
+/// Split `n` items into `parts` contiguous ranges, as evenly as possible.
+/// The first `n % parts` ranges get one extra item. Empty ranges are
+/// returned when `parts > n`.
+pub fn even_split(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts > 0, "even_split: parts must be > 0");
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lu_flops_square_matches_two_thirds_cubed() {
+        let n = 1200usize;
+        let exact = lu_flops(n, n);
+        let approx = 2.0 * (n as f64).powi(3) / 3.0;
+        assert!((exact - approx).abs() / approx < 1e-12);
+    }
+
+    #[test]
+    fn lu_flops_front_loading_matches_paper_claims() {
+        // Paper §3.1: for the RL variant, the first 25% of iterations
+        // account for ~58% of the flops, the first half for 87.5%, the
+        // first 75% for >98%. Work in iteration k is ~2(n-k)² per unit
+        // column. Integrate flops of the leading fraction f:
+        // 1 - (1-f)³.
+        let frac = |f: f64| 1.0 - (1.0 - f).powi(3);
+        assert!((frac(0.25) - 0.578125).abs() < 1e-9); // ≈ 58%
+        assert!((frac(0.50) - 0.875).abs() < 1e-12); // 87.5%
+        assert!(frac(0.75) > 0.98);
+    }
+
+    #[test]
+    fn gemm_trsm_flops() {
+        assert_eq!(gemm_flops(2, 3, 4) as u64, 48);
+        assert_eq!(trsm_flops(3, 5) as u64, 45);
+    }
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn even_split_covers_everything_contiguously() {
+        for n in [0usize, 1, 5, 17, 100] {
+            for parts in [1usize, 2, 3, 7, 16] {
+                let ranges = even_split(n, parts);
+                assert_eq!(ranges.len(), parts);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let max = *lens.iter().max().unwrap();
+                let min = *lens.iter().min().unwrap();
+                assert!(max - min <= 1, "uneven split: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (secs, v) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn gflops_handles_zero_time() {
+        assert_eq!(gflops(1e9, 0.0), 0.0);
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,200 @@
+//! A miniature property-testing harness (the offline registry has no
+//! `proptest`; DESIGN.md §3 documents the substitution).
+//!
+//! Usage:
+//!
+//! ```
+//! use malleable_lu::util::quickcheck_lite::{forall, Gen};
+//!
+//! forall("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     g.label(format!("a={a} b={b}"));
+//!     a + b == b + a
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing case with a fixed seed and
+//! panics with the case label, so failures are reproducible (`QC_SEED`
+//! environment variable overrides the base seed).
+
+use super::prng::Prng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Prng,
+    label: String,
+    pub case_index: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case_index: usize) -> Self {
+        Self {
+            rng: Prng::new(seed),
+            label: String::new(),
+            case_index,
+        }
+    }
+
+    /// Attach a human-readable description of the generated case; shown on
+    /// failure.
+    pub fn label(&mut self, s: impl Into<String>) {
+        self.label = s.into();
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Uniform f64 in `[0,1)`.
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Biased coin.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one of the provided values.
+    pub fn choose<T: Clone>(&mut self, xs: &[T]) -> T {
+        self.rng.pick(xs).clone()
+    }
+
+    /// A fresh seed derived from this case (for seeding nested structures
+    /// deterministically).
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Vector of `len` values built by `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut xs: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut xs);
+        xs
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00_D15E_A5E5)
+}
+
+/// Run `prop` on `cases` generated cases; panic (with the case label and a
+/// reproduction hint) on the first failing case.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> bool) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, i);
+        let ok = prop(&mut g);
+        if !ok {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}); \
+                 label: {}; rerun with QC_SEED={base}",
+                if g.label.is_empty() { "<none>" } else { &g.label }
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so it can
+/// report rich failure diagnostics.
+pub fn forall_res(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, i);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}): {msg}; \
+                 label: {}; rerun with QC_SEED={base}",
+                if g.label.is_empty() { "<none>" } else { &g.label }
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivially true", 25, |_g| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed at case 0")]
+    fn failing_property_panics_with_name() {
+        forall("always false", 10, |g| {
+            g.label("the case");
+            false
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut first: Vec<usize> = Vec::new();
+        forall("collect", 5, |g| {
+            first.push(g.usize_in(0, 1_000_000));
+            true
+        });
+        let mut second: Vec<usize> = Vec::new();
+        forall("collect", 5, |g| {
+            second.push(g.usize_in(0, 1_000_000));
+            true
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        forall("perm valid", 20, |g| {
+            let n = g.usize_in(0, 32);
+            let p = g.permutation(n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            sorted == (0..n).collect::<Vec<_>>()
+        });
+    }
+
+    #[test]
+    fn forall_res_reports_message() {
+        let result = std::panic::catch_unwind(|| {
+            forall_res("resprop", 3, |g| {
+                if g.case_index == 2 {
+                    Err("boom".to_string())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("case 2"), "{msg}");
+    }
+}

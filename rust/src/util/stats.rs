@@ -1,0 +1,122 @@
+//! Summary statistics for the hand-rolled benchmark harness (criterion is
+//! not available offline — DESIGN.md §3).
+
+/// Summary of a sample of measurements (e.g. seconds per repetition).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    /// Compute summary statistics of a non-empty sample.
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Stats::of: empty sample");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let min = sorted[0];
+        let max = sorted[n - 1];
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            n,
+            min,
+            max,
+            mean,
+            median,
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// Relative spread, `(max-min)/median`; a quick noise indicator.
+    pub fn spread(&self) -> f64 {
+        if self.median == 0.0 {
+            0.0
+        } else {
+            (self.max - self.min) / self.median
+        }
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} min={:.3e} med={:.3e} mean={:.3e} max={:.3e} sd={:.1e}",
+            self.n, self.min, self.median, self.mean, self.max, self.stddev
+        )
+    }
+}
+
+/// Run `f` for `warmup` un-measured and `reps` measured repetitions and
+/// return timing statistics in seconds.
+pub fn bench_seconds(warmup: usize, reps: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_sample() {
+        let s = Stats::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-15);
+        assert!((s.stddev - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_even_sample_median_interpolates() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 10.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let s = Stats::of(&[5.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.spread(), 0.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_times() {
+        let mut count = 0usize;
+        let s = bench_seconds(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn stats_empty_panics() {
+        let _ = Stats::of(&[]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration tests over the AOT artifacts: HLO text → PJRT compile →
+//! execute, cross-validated against the Rust-native substrate.
+//!
+//! Skipped (with a message) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::lu;
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::Crew;
+use malleable_lu::runtime::{self, xla_lu, Runtime};
+
+fn open_runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("artifact store opens"))
+}
+
+#[test]
+fn gepp_artifact_matches_rust_blis() {
+    let Some(rt) = open_runtime() else { return };
+    // gepp_128x128x64 exists in the default artifact set (n=192, b=64).
+    let (m, n, k) = (128usize, 128usize, 64usize);
+    let name = format!("gepp_{m}x{n}x{k}");
+    assert!(rt.has(&name), "missing {name}");
+    let c0 = Matrix::random(m, n, 1);
+    let a = Matrix::random(m, k, 2);
+    let b = Matrix::random(k, n, 3);
+
+    let outs = rt
+        .run(
+            &name,
+            &[
+                runtime::matrix_to_literal(&c0).unwrap(),
+                runtime::matrix_to_literal(&a).unwrap(),
+                runtime::matrix_to_literal(&b).unwrap(),
+            ],
+        )
+        .unwrap();
+    let c_xla = runtime::literal_to_matrix(&outs[0], m, n).unwrap();
+
+    let mut c_rust = c0.clone();
+    let mut crew = Crew::new();
+    malleable_lu::blis::gemm(
+        &mut crew,
+        &BlisParams::default(),
+        -1.0,
+        a.view(),
+        b.view(),
+        c_rust.view_mut(),
+    );
+    let d = c_rust.max_abs_diff(&c_xla);
+    assert!(d < 1e-10 * k as f64, "GEPP mismatch: {d}");
+}
+
+#[test]
+fn panel_artifact_matches_rust_unblocked() {
+    let Some(rt) = open_runtime() else { return };
+    let (m, b) = (192usize, 64usize);
+    let a = Matrix::random(m, b, 7);
+    let outs = rt
+        .run(
+            &format!("panel_{m}x{b}"),
+            &[runtime::matrix_to_literal(&a).unwrap()],
+        )
+        .unwrap();
+    let lu_xla = runtime::literal_to_matrix(&outs[0], m, b).unwrap();
+    let piv_xla = runtime::literal_to_pivots(&outs[1]).unwrap();
+
+    let mut lu_rust = a.clone();
+    let piv_rust = lu::lu_unblocked(lu_rust.view_mut());
+    assert_eq!(piv_rust, piv_xla, "pivot sequences differ");
+    let d = lu_rust.max_abs_diff(&lu_xla);
+    assert!(d < 1e-11, "panel factors differ by {d}");
+}
+
+#[test]
+fn full_lu_artifact_valid_factorization() {
+    let Some(rt) = open_runtime() else { return };
+    let n = 192;
+    let a = Matrix::random(n, n, 11);
+    let (lu_xla, piv) = xla_lu::factorize_full(&rt, &a, 64).unwrap();
+    assert_eq!(piv.len(), n);
+    let r = naive::lu_residual(&a, &lu_xla, &piv);
+    assert!(r < 1e-12, "residual {r}");
+    assert!(naive::growth_bounded(&lu_xla));
+}
+
+#[test]
+fn stepped_lu_xla_matches_full_artifact() {
+    let Some(rt) = open_runtime() else { return };
+    let n = 192;
+    let a = Matrix::random(n, n, 13);
+    let (lu_full, piv_full) = xla_lu::factorize_full(&rt, &a, 64).unwrap();
+    let (lu_step, piv_step) = xla_lu::factorize_stepped(&rt, &a, 64).unwrap();
+    assert_eq!(piv_full, piv_step);
+    let d = lu_full.max_abs_diff(&lu_step);
+    assert!(d < 1e-11, "stepped vs full differ by {d}");
+}
+
+#[test]
+fn cross_validation_rust_vs_xla() {
+    let Some(rt) = open_runtime() else { return };
+    let n = 192;
+    let a = Matrix::random(n, n, 17);
+    let (diff, pivots_equal) = xla_lu::cross_validate(&rt, &a, 64, 16).unwrap();
+    assert!(pivots_equal, "Rust and XLA pivot sequences differ");
+    assert!(diff < 1e-10, "factor mismatch {diff}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = open_runtime() else { return };
+    let n = 192;
+    let a = Matrix::random(n, n, 19);
+    assert_eq!(rt.cached(), 0);
+    let _ = xla_lu::factorize_full(&rt, &a, 64).unwrap();
+    let after_first = rt.cached();
+    assert_eq!(after_first, 1);
+    let _ = xla_lu::factorize_full(&rt, &a, 64).unwrap();
+    assert_eq!(rt.cached(), after_first, "second run must hit the cache");
+}
+
+#[test]
+fn solve_system_through_xla_factors() {
+    let Some(rt) = open_runtime() else { return };
+    let n = 192;
+    let a = Matrix::random_dd(n, 23);
+    let x_true: Vec<f64> = (0..n).map(|i| (i % 17) as f64 - 8.0).collect();
+    let mut b = vec![0.0; n];
+    for j in 0..n {
+        for i in 0..n {
+            b[i] += a[(i, j)] * x_true[j];
+        }
+    }
+    let (lu_xla, piv) = xla_lu::factorize_full(&rt, &a, 64).unwrap();
+    let x = lu::solve(&lu_xla, &piv, &b);
+    for i in 0..n {
+        assert!((x[i] - x_true[i]).abs() < 1e-8, "x[{i}] off");
+    }
+}

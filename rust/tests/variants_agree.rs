@@ -1,0 +1,185 @@
+//! Cross-variant integration: every coordinator computes the *same*
+//! factorization, under thread-count, block-size and entry-policy
+//! variation, including failure-injection and adversarial inputs.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::lu::{factorize, residual, solve, LuConfig, Variant};
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::{EntryPolicy, Pool};
+use malleable_lu::util::quickcheck_lite::{forall_res, Gen};
+
+fn cfg(v: Variant, bo: usize, bi: usize, threads: usize) -> LuConfig {
+    LuConfig {
+        variant: v,
+        bo,
+        bi,
+        threads,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_variants_same_pivots_same_solution() {
+    let n = 96;
+    let a0 = Matrix::random(n, n, 1);
+    let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+    let mut reference: Option<(Vec<usize>, Vec<f64>)> = None;
+    for &v in Variant::all() {
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &cfg(v, 16, 4, 3), None);
+        let r = residual(&a0, &f, &out.ipiv);
+        assert!(r < 1e-11, "{}: residual {r}", v.name());
+        let x = solve(&f, &out.ipiv, &b);
+        match &reference {
+            None => reference = Some((out.ipiv, x)),
+            Some((piv0, x0)) => {
+                assert_eq!(*piv0, out.ipiv, "{} pivots", v.name());
+                for i in 0..n {
+                    assert!((x[i] - x0[i]).abs() < 1e-9, "{} x[{i}]", v.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    let n = 64;
+    let a0 = Matrix::random(n, n, 2);
+    for v in [Variant::Malleable, Variant::EarlyTerm, Variant::OmpSs] {
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut f = a0.clone();
+            let out = factorize(&mut f, &cfg(v, 16, 4, threads), None);
+            results.push((out.ipiv, f));
+        }
+        for w in results.windows(2) {
+            assert_eq!(w[0].0, w[1].0, "{} pivots vs thread count", v.name());
+            let d = w[0].1.max_abs_diff(&w[1].1);
+            assert!(d < 1e-10, "{} factors vs thread count: {d}", v.name());
+        }
+    }
+}
+
+#[test]
+fn entry_policy_is_scheduling_only() {
+    let n = 80;
+    let a0 = Matrix::random(n, n, 3);
+    let mut outs = Vec::new();
+    for entry in [EntryPolicy::JobBoundary, EntryPolicy::Immediate] {
+        let mut c = cfg(Variant::EarlyTerm, 16, 4, 3);
+        c.entry = entry;
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &c, None);
+        assert!(residual(&a0, &f, &out.ipiv) < 1e-11);
+        outs.push((out.ipiv, f));
+    }
+    assert_eq!(outs[0].0, outs[1].0);
+    // ET cut points are timing-dependent, so operation *grouping* (and
+    // hence last-ulp rounding) may differ between entry policies; the
+    // factorization itself must agree to tolerance with equal pivots.
+    let d = outs[0].1.max_abs_diff(&outs[1].1);
+    assert!(d < 1e-10, "entry policies diverged: {d}");
+}
+
+#[test]
+fn shared_pool_reused_across_factorizations() {
+    // The pool survives many factorizations (no worker leakage/deadlock).
+    let pool = Pool::new(2);
+    for round in 0..5 {
+        let n = 32 + round * 8;
+        let a0 = Matrix::random(n, n, round as u64);
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &cfg(Variant::EarlyTerm, 8, 4, 3), Some(&pool));
+        assert!(residual(&a0, &f, &out.ipiv) < 1e-11, "round {round}");
+    }
+}
+
+#[test]
+fn adversarial_matrices() {
+    // Singular, identity, rank-1, constant, and near-tie pivot matrices.
+    let cases: Vec<(&str, Matrix)> = vec![
+        ("zero", Matrix::zeros(24, 24)),
+        ("identity", Matrix::eye(24)),
+        ("rank1", {
+            let mut m = Matrix::zeros(24, 24);
+            for j in 0..24 {
+                for i in 0..24 {
+                    m[(i, j)] = (i + 1) as f64 * (j + 1) as f64;
+                }
+            }
+            m
+        }),
+        ("constant", Matrix::from_fn(24, 24, |_, _| 3.25)),
+        ("negated-ties", Matrix::from_fn(24, 24, |i, j| {
+            if (i + j) % 2 == 0 { 1.0 } else { -1.0 }
+        })),
+    ];
+    for (name, a0) in cases {
+        for v in [Variant::BlockedRl, Variant::EarlyTerm, Variant::OmpSs] {
+            let mut f = a0.clone();
+            let out = factorize(&mut f, &cfg(v, 8, 4, 2), None);
+            assert!(
+                f.data().iter().all(|x| x.is_finite()),
+                "{name}/{}: non-finite factor",
+                v.name()
+            );
+            assert_eq!(out.ipiv.len(), 24, "{name}/{}", v.name());
+            // For the nonsingular cases, check the residual too.
+            if matches!(name, "identity" | "negated-ties") {
+                let r = residual(&a0, &f, &out.ipiv);
+                assert!(r < 1e-12, "{name}/{}: {r}", v.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn et_adaptive_width_converges_not_collapses() {
+    // ET must adapt the block size without collapsing to bi forever:
+    // with a benign large problem the attempted width regrows.
+    let n = 160;
+    let a0 = Matrix::random(n, n, 9);
+    let mut f = a0.clone();
+    let out = factorize(&mut f, &cfg(Variant::EarlyTerm, 32, 4, 3), None);
+    let stats = out.la_stats.unwrap();
+    assert_eq!(stats.panel_widths.iter().sum::<usize>(), n);
+    assert!(
+        stats.panel_widths.iter().any(|&w| w > 4),
+        "ET collapsed to the minimum width: {:?}",
+        stats.panel_widths
+    );
+    assert!(residual(&a0, &f, &out.ipiv) < 1e-11);
+}
+
+#[test]
+fn property_random_configs_all_valid() {
+    forall_res("any (variant, bo, bi, t, n) factorizes", 12, |g: &mut Gen| {
+        let n = g.usize_in(8, 72);
+        let bo = g.choose(&[4usize, 8, 16, 32, 64]);
+        let bi = g.choose(&[1usize, 2, 4, 8]);
+        let threads = g.usize_in(1, 4);
+        let v = g.choose(&[
+            Variant::BlockedRl,
+            Variant::BlockedLl,
+            Variant::LookAhead,
+            Variant::Malleable,
+            Variant::EarlyTerm,
+            Variant::OmpSs,
+        ]);
+        let seed = g.seed();
+        g.label(format!("{} n={n} bo={bo} bi={bi} t={threads}", v.name()));
+        let a0 = Matrix::random(n, n, seed);
+        let mut f = a0.clone();
+        let out = factorize(&mut f, &cfg(v, bo, bi, threads), None);
+        let r = residual(&a0, &f, &out.ipiv);
+        if r > 1e-10 {
+            return Err(format!("residual {r}"));
+        }
+        if !naive::growth_bounded(&f) {
+            return Err("|L| > 1".into());
+        }
+        Ok(())
+    });
+}
