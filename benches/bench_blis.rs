@@ -28,7 +28,10 @@ fn main() {
         naive::gemm(1.0, a.view(), b.view(), c2.view_mut());
     });
     let naive_g = gflops(gemm_flops(n, n, n), st_naive.median);
-    println!("gemm {n}^3: blis {blis_g:.2} GFLOPS vs naive {naive_g:.2} GFLOPS ({:.1}x)", blis_g / naive_g);
+    println!(
+        "gemm {n}^3: blis {blis_g:.2} GFLOPS vs naive {naive_g:.2} GFLOPS ({:.1}x)",
+        blis_g / naive_g
+    );
 
     // GEPP shape (k = 128).
     let k = 128;

@@ -53,7 +53,11 @@ fn main() {
         crew2 = Crew::new();
     }
     let st = malleable_lu::util::Stats::of(&joins);
-    println!("enlist→active latency: median {:.1} µs (min {:.1} µs)", st.median * 1e6, st.min * 1e6);
+    println!(
+        "enlist→active latency: median {:.1} µs (min {:.1} µs)",
+        st.median * 1e6,
+        st.min * 1e6
+    );
 
     // Throughput sanity: dispatch must be far cheaper than a macro-kernel
     // job (~100 µs at paper scale).

@@ -30,7 +30,10 @@ fn main() {
     }
 
     println!("solving {n}x{n} diag-dominant system with every variant (bo={bo}):");
-    println!("{:>10} {:>9} {:>9} {:>12} {:>12}", "variant", "secs", "GFLOPS", "residual", "max|x-x*|");
+    println!(
+        "{:>10} {:>9} {:>9} {:>12} {:>12}",
+        "variant", "secs", "GFLOPS", "residual", "max|x-x*|"
+    );
 
     for &v in Variant::all() {
         let cfg = LuConfig {
@@ -81,7 +84,7 @@ fn main() {
             );
             assert!(r < 1e-12 && err < 1e-9, "LU_XLA failed");
         }
-        Ok(_) => println!("(skipping LU_XLA: no lu_{n}x{bo} artifact — adjust `make artifacts` configs)"),
+        Ok(_) => println!("(skipping LU_XLA: no lu_{n}x{bo} artifact — rerun `make artifacts`)"),
         Err(_) => println!("(skipping LU_XLA: run `make artifacts` first)"),
     }
     println!("all variants agree: OK");

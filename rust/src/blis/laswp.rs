@@ -16,7 +16,15 @@ use crate::trace::{span, Kind};
 /// swap rows `k` and `ipiv[k]`. Pivot indices are absolute row indices of
 /// `a` (LAPACK convention with zero-based rows). Only columns
 /// `jlo..jhi` are touched.
-pub fn laswp(crew: &mut Crew, a: MatMut, ipiv: &[usize], k0: usize, k1: usize, jlo: usize, jhi: usize) {
+pub fn laswp(
+    crew: &mut Crew,
+    a: MatMut,
+    ipiv: &[usize],
+    k0: usize,
+    k1: usize,
+    jlo: usize,
+    jhi: usize,
+) {
     debug_assert!(k1 <= ipiv.len());
     debug_assert!(jhi <= a.cols());
     if k0 >= k1 || jlo >= jhi {

@@ -92,8 +92,9 @@ pub fn pack_a(crew: &mut Crew, a: MatRef, pa: &mut PackedA) {
     // crew closure must be Fn (shared), so we split the buffer up front.
     let base = pa.buf.as_mut_ptr() as usize;
     crew.parallel(n_panels, |ip| {
-        let dst =
-            unsafe { std::slice::from_raw_parts_mut((base + ip * panel_sz * 8) as *mut f64, panel_sz) };
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut((base + ip * panel_sz * 8) as *mut f64, panel_sz)
+        };
         let i0 = ip * MR;
         let rows = MR.min(m - i0);
         for p in 0..k {
@@ -119,8 +120,9 @@ pub fn pack_b(crew: &mut Crew, b: MatRef, pb: &mut PackedB) {
     debug_assert!(n_panels * panel_sz <= pb.buf.len(), "PackedB too small");
     let base = pb.buf.as_mut_ptr() as usize;
     crew.parallel(n_panels, |jp| {
-        let dst =
-            unsafe { std::slice::from_raw_parts_mut((base + jp * panel_sz * 8) as *mut f64, panel_sz) };
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut((base + jp * panel_sz * 8) as *mut f64, panel_sz)
+        };
         let j0 = jp * NR;
         let cols = NR.min(n - j0);
         for (jj, dst_col) in (0..cols).map(|jj| (jj, j0 + jj)) {

@@ -34,7 +34,15 @@ pub fn scal_col(a: MatMut, j: usize, lo: usize, hi: usize, s: f64) {
 /// Rank-1 update `A[rlo..rhi, clo..chi] -= x[rlo..rhi] · yᵀ[clo..chi]`
 /// where `x` is column `xcol` of `a` and `y` is row `yrow` of `a`
 /// (exactly the GER shape appearing in the unblocked LU inner loop).
-pub fn ger_update(a: MatMut, rlo: usize, rhi: usize, clo: usize, chi: usize, xcol: usize, yrow: usize) {
+pub fn ger_update(
+    a: MatMut,
+    rlo: usize,
+    rhi: usize,
+    clo: usize,
+    chi: usize,
+    xcol: usize,
+    yrow: usize,
+) {
     for j in clo..chi {
         let yj = a.at(yrow, j);
         if yj == 0.0 {

@@ -22,6 +22,11 @@
 //!   blocked right-looking (`LU`), blocked left-looking, look-ahead
 //!   (`LU_LA`), malleable look-ahead (`LU_MB`), and early-termination
 //!   (`LU_ET`).
+//! - [`serve`] — the **batched multi-problem LU scheduler**: an
+//!   [`serve::LuServer`] multiplexes a queue of factorization requests
+//!   over one shared pool, generalizing Worker Sharing ("donate idle
+//!   threads to whichever problem is behind") and Early Termination
+//!   (cancel superseded or deadline-expired requests) across problems.
 //! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
 //!   `LU_OS` baseline.
 //! - [`trace`] — an Extrae-like execution tracer (ASCII Gantt + Chrome
@@ -38,6 +43,7 @@ pub mod lu;
 pub mod matrix;
 pub mod pool;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod taskrt;
 pub mod trace;

@@ -8,6 +8,36 @@ use crate::blis::{gemm, laswp, trsm_llu, BlisParams};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
 use crate::trace::{span, Kind};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Cooperative control for a checkpointed blocked factorization — the
+/// serve layer's generalization of the paper's ET flag from "cut one
+/// iteration's panel" to "cut the whole request". The driver polls
+/// `cancel` between outer panel steps, reports committed columns through
+/// `on_checkpoint`, and tags trace spans with `tag` so multi-problem
+/// traces can tell requests apart.
+#[derive(Default)]
+pub struct BlockedCtl<'a> {
+    /// Polled between panel steps; when set the factorization stops
+    /// before the next step, leaving a clean factored prefix and an
+    /// eagerly-updated (but unfactored) trailing block.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Trace label prefix (e.g. `req3`); empty keeps the plain labels.
+    pub tag: Option<&'a str>,
+    /// Called with the number of committed columns after every step.
+    pub on_checkpoint: Option<&'a (dyn Fn(usize) + Sync)>,
+}
+
+/// Outcome of a checkpointed blocked factorization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockedOutcome {
+    /// Absolute pivots for the committed columns (length `cols_done`).
+    pub ipiv: Vec<usize>,
+    /// Columns fully factorized (`min(m, n)` unless cancelled early).
+    pub cols_done: usize,
+    /// Whether the run was cut short by [`BlockedCtl::cancel`].
+    pub cancelled: bool,
+}
 
 /// Blocked right-looking LU with partial pivoting (`LU` in the paper's
 /// evaluation). `bo` = outer block size, `bi` = inner (panel) block size.
@@ -19,15 +49,44 @@ pub fn lu_blocked_rl(
     bo: usize,
     bi: usize,
 ) -> Vec<usize> {
+    lu_blocked_rl_ctl(crew, params, a, bo, bi, &BlockedCtl::default()).ipiv
+}
+
+/// [`lu_blocked_rl`] with cooperative checkpoints between panel steps.
+///
+/// After `cols_done` committed columns the matrix holds a consistent
+/// partial factorization: columns `0..cols_done` carry their final `L`/`U`
+/// entries, the trailing block is fully permuted and updated, and the
+/// factorization can be completed later by factorizing only the trailing
+/// block (tested in `tests/serve_stress.rs`).
+pub fn lu_blocked_rl_ctl(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: MatMut,
+    bo: usize,
+    bi: usize,
+    ctl: &BlockedCtl,
+) -> BlockedOutcome {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     let bo = bo.max(1);
     let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
+    let mut cancelled = false;
     let mut k = 0;
     while k < kmax {
+        if let Some(c) = ctl.cancel {
+            if c.load(Ordering::Acquire) {
+                cancelled = true;
+                break;
+            }
+        }
         let b = bo.min(kmax - k);
+        let plabel = match ctl.tag {
+            None => String::from("panel"),
+            Some(tag) => format!("{tag}.panel[{k}]"),
+        };
         // RL1: factorize the current panel (rows k.., cols k..k+b).
-        let out = span(Kind::Panel, "panel", || {
+        let out = span(Kind::Panel, &plabel, || {
             panel_rl(crew, params, a.sub(k, k, m - k, b), bi)
         });
         let lo = ipiv.len();
@@ -37,28 +96,41 @@ pub fn lu_blocked_rl(
         laswp(crew, a, &ipiv, lo, lo + b, k + b, n);
         let rest = n - k - b;
         if rest > 0 {
-            // RL2: A12 := TRILU(A11)^{-1} A12.
-            trsm_llu(
-                crew,
-                params,
-                a.sub(k, k, b, b).as_ref(),
-                a.sub(k, k + b, b, rest),
-            );
-            // RL3: A22 -= A21 · A12.
-            if m - k - b > 0 {
-                gemm(
+            let ulabel = match ctl.tag {
+                None => String::from("update"),
+                Some(tag) => format!("{tag}.update[{k}]"),
+            };
+            span(Kind::Gemm, &ulabel, || {
+                // RL2: A12 := TRILU(A11)^{-1} A12.
+                trsm_llu(
                     crew,
                     params,
-                    -1.0,
-                    a.sub(k + b, k, m - k - b, b).as_ref(),
-                    a.sub(k, k + b, b, rest).as_ref(),
-                    a.sub(k + b, k + b, m - k - b, rest),
+                    a.sub(k, k, b, b).as_ref(),
+                    a.sub(k, k + b, b, rest),
                 );
-            }
+                // RL3: A22 -= A21 · A12.
+                if m - k - b > 0 {
+                    gemm(
+                        crew,
+                        params,
+                        -1.0,
+                        a.sub(k + b, k, m - k - b, b).as_ref(),
+                        a.sub(k, k + b, b, rest).as_ref(),
+                        a.sub(k + b, k + b, m - k - b, rest),
+                    );
+                }
+            });
         }
         k += b;
+        if let Some(cb) = ctl.on_checkpoint {
+            cb(k);
+        }
     }
-    ipiv
+    BlockedOutcome {
+        ipiv,
+        cols_done: k,
+        cancelled,
+    }
 }
 
 /// Blocked left-looking LU with partial pivoting (paper §4.2, operations
@@ -118,7 +190,6 @@ pub fn lu_blocked_ll(
     }
     ipiv
 }
-
 
 #[cfg(test)]
 mod tests {

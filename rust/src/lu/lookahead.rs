@@ -35,7 +35,7 @@ use crate::blis::{gemm, trsm_llu, BlisParams};
 use crate::matrix::{MatMut, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool};
 use crate::trace::{span, Kind};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Which look-ahead refinements are active.
@@ -78,6 +78,43 @@ pub struct LaStats {
     pub ws_reverse: usize,
     /// Effective width of each factorized panel (shrinks under ET).
     pub panel_widths: Vec<usize>,
+    /// Whether the run was cut short through [`LaCtl`] (request-level ET).
+    pub cancelled: bool,
+}
+
+/// Cooperative control threaded through a look-ahead factorization by
+/// callers that may cancel it mid-flight — the serve layer's
+/// generalization of the paper's ET flag from "cut one iteration's
+/// panel" to "cut the whole request". Polled between outer panel steps.
+#[derive(Debug, Default)]
+pub struct LaCtl {
+    pub(crate) cancel: AtomicBool,
+    pub(crate) cols_done: AtomicUsize,
+}
+
+impl LaCtl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ask the factorization to stop at the next outer checkpoint. The
+    /// already-factorized current panel is still committed, so the
+    /// matrix is left with a clean factored prefix of `cols_done()`
+    /// columns; the trailing columns still owe that panel's
+    /// transformations (swaps + TRSM + GEMM).
+    pub fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// Columns factorized and committed so far (monotone; reaches
+    /// `min(m, n)` on an uncancelled run).
+    pub fn cols_done(&self) -> usize {
+        self.cols_done.load(Ordering::Acquire)
+    }
 }
 
 /// Factorize `a` in place with look-ahead. `pool` supplies the worker
@@ -90,6 +127,20 @@ pub fn lu_lookahead(
     bo: usize,
     bi: usize,
     opts: &LaOpts,
+) -> (Vec<usize>, LaStats) {
+    lu_lookahead_ctl(pool, params, a, bo, bi, opts, None)
+}
+
+/// [`lu_lookahead`] with a cooperative cancellation checkpoint between
+/// outer panel steps (see [`LaCtl`]).
+pub fn lu_lookahead_ctl(
+    pool: &Pool,
+    params: &BlisParams,
+    a: &mut Matrix,
+    bo: usize,
+    bi: usize,
+    opts: &LaOpts,
+    ctl: Option<&LaCtl>,
 ) -> (Vec<usize>, LaStats) {
     let av = a.view_mut();
     let (m, n) = (av.rows(), av.cols());
@@ -104,9 +155,17 @@ pub fn lu_lookahead(
         // A single thread cannot run two branches: degrade to the plain
         // blocked RL algorithm (same factorization, no TP).
         let mut crew = Crew::new();
-        let ipiv = super::blocked::lu_blocked_rl(&mut crew, params, av, bo, bi);
-        stats.panel_widths = vec![bo.min(kmax); kmax.div_ceil(bo.max(1))];
-        return (ipiv, stats);
+        let bctl = super::blocked::BlockedCtl {
+            cancel: ctl.map(|c| &c.cancel),
+            ..Default::default()
+        };
+        let out = super::blocked::lu_blocked_rl_ctl(&mut crew, params, av, bo, bi, &bctl);
+        stats.cancelled = out.cancelled;
+        stats.panel_widths = vec![bo.min(kmax); out.cols_done.div_ceil(bo.max(1))];
+        if let Some(c) = ctl {
+            c.cols_done.store(out.cols_done, Ordering::Release);
+        }
+        return (out.ipiv, stats);
     }
     let t_pf = opts.t_pf.max(1).min(pool.workers());
 
@@ -140,6 +199,21 @@ pub fn lu_lookahead(
 
     loop {
         let right0 = f + bc;
+        if let Some(c) = ctl {
+            if c.is_cancelled() {
+                // Request-level ET: commit the already-factorized current
+                // panel (its pivots and lazy left swaps) and stop. The
+                // trailing columns keep their pre-update values; see
+                // [`LaCtl::request_cancel`] for the resume contract.
+                stats.cancelled = true;
+                stats.panel_widths.push(bc);
+                let mut crew = Crew::new();
+                laswp_abs(&mut crew, av, &piv_cur, f, 0, f);
+                ipiv.extend_from_slice(&piv_cur);
+                c.cols_done.store(ipiv.len(), Ordering::Release);
+                break;
+            }
+        }
         stats.panel_widths.push(bc);
 
         if right0 >= kmax {
@@ -357,9 +431,15 @@ pub fn lu_lookahead(
         f = right0;
         bc = out.k_done;
         piv_cur = out.ipiv.iter().map(|p| p + f).collect();
+        if let Some(c) = ctl {
+            c.cols_done.store(ipiv.len(), Ordering::Release);
+        }
     }
 
-    debug_assert_eq!(ipiv.len(), kmax);
+    if let Some(c) = ctl {
+        c.cols_done.store(ipiv.len(), Ordering::Release);
+    }
+    debug_assert!(stats.cancelled || ipiv.len() == kmax);
     (ipiv, stats)
 }
 
@@ -395,8 +475,7 @@ mod tests {
     ) -> (Matrix, Vec<usize>, LaStats) {
         let pool = Pool::new(workers);
         let mut f = a0.clone();
-        let (ipiv, stats) =
-            lu_lookahead(&pool, &BlisParams::tiny(), &mut f, bo, bi, opts);
+        let (ipiv, stats) = lu_lookahead(&pool, &BlisParams::tiny(), &mut f, bo, bi, opts);
         (f, ipiv, stats)
     }
 
@@ -526,6 +605,49 @@ mod tests {
         let (f, ipiv, _) = run(&a0, 16, 4, 4, &opts);
         let r = naive::lu_residual(&a0, &f, &ipiv);
         assert!(r < 1e-12, "r={r}");
+    }
+
+    #[test]
+    fn ctl_cancel_commits_a_clean_prefix() {
+        let a0 = Matrix::random(80, 80, 11);
+        let pool = Pool::new(2);
+        let mut f = a0.clone();
+        let ctl = LaCtl::new();
+        ctl.request_cancel(); // cancel before the first outer step
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let (ipiv, stats) =
+            lu_lookahead_ctl(&pool, &BlisParams::tiny(), &mut f, 16, 4, &opts, Some(&ctl));
+        assert!(stats.cancelled);
+        let done = ctl.cols_done();
+        assert_eq!(done, ipiv.len());
+        assert!(done > 0 && done < 80);
+        assert_eq!(done, stats.panel_widths.iter().sum::<usize>());
+        // The committed pivots are the exact prefix of the reference's.
+        let mut g = a0.clone();
+        let piv_ref = naive::lu(g.view_mut());
+        assert_eq!(ipiv[..], piv_ref[..done]);
+    }
+
+    #[test]
+    fn ctl_uncancelled_matches_plain_lookahead() {
+        let a0 = Matrix::random(64, 64, 12);
+        let pool = Pool::new(2);
+        let ctl = LaCtl::new();
+        let opts = LaOpts::default();
+        let mut f1 = a0.clone();
+        let (p1, s1) =
+            lu_lookahead_ctl(&pool, &BlisParams::tiny(), &mut f1, 16, 4, &opts, Some(&ctl));
+        assert!(!s1.cancelled);
+        assert_eq!(ctl.cols_done(), 64);
+        let mut f2 = a0.clone();
+        let (p2, _) = lu_lookahead(&pool, &BlisParams::tiny(), &mut f2, 16, 4, &LaOpts::default());
+        assert_eq!(p1, p2);
+        for (x, y) in f1.data().iter().zip(f2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod lookahead;
 pub mod panel;
 pub mod unblocked;
 
-pub use blocked::{lu_blocked_ll, lu_blocked_rl};
-pub use lookahead::{lu_lookahead, LaOpts, LaStats};
+pub use blocked::{lu_blocked_ll, lu_blocked_rl, lu_blocked_rl_ctl, BlockedCtl, BlockedOutcome};
+pub use lookahead::{lu_lookahead, lu_lookahead_ctl, LaCtl, LaOpts, LaStats};
 pub use panel::{panel_ll, panel_rl, PanelOutcome};
 pub use unblocked::lu_unblocked;
 
@@ -175,6 +175,92 @@ pub fn factorize(a: &mut Matrix, cfg: &LuConfig, pool: Option<&Pool>) -> LuResul
     }
 }
 
+/// Outcome of a cancellable factorization (see [`factorize_cancellable`]).
+#[derive(Debug, Clone, Default)]
+pub struct CancelOutcome {
+    pub result: LuResult,
+    /// Columns fully factorized and committed.
+    pub cols_done: usize,
+    /// Whether the run was cut short by the control's cancel flag.
+    pub cancelled: bool,
+}
+
+/// [`factorize`] with a cooperative cancellation checkpoint between outer
+/// panel steps — the request-level generalization of the paper's ET
+/// mechanism, used by [`crate::serve`] to abandon superseded or
+/// deadline-expired requests. Variants without checkpoint support
+/// (`Unblocked`, `BlockedLl`, `OmpSs`) run to completion and report
+/// `cancelled = false`.
+pub fn factorize_cancellable(
+    a: &mut Matrix,
+    cfg: &LuConfig,
+    pool: Option<&Pool>,
+    ctl: &LaCtl,
+) -> CancelOutcome {
+    let owned_pool;
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            owned_pool = Pool::new(cfg.threads.saturating_sub(1));
+            &owned_pool
+        }
+    };
+    let kmax = a.rows().min(a.cols());
+    match cfg.variant {
+        Variant::BlockedRl => {
+            let mut crew = Crew::new();
+            let members = pool.broadcast(|_w| {
+                let s = crew.shared();
+                let e = cfg.entry;
+                move || s.member_loop(e)
+            });
+            let bctl = BlockedCtl {
+                cancel: Some(&ctl.cancel),
+                ..Default::default()
+            };
+            let out =
+                lu_blocked_rl_ctl(&mut crew, &cfg.params, a.view_mut(), cfg.bo, cfg.bi, &bctl);
+            crew.disband();
+            for h in members {
+                h.wait();
+            }
+            ctl.cols_done
+                .store(out.cols_done, std::sync::atomic::Ordering::Release);
+            CancelOutcome {
+                result: LuResult {
+                    ipiv: out.ipiv,
+                    la_stats: None,
+                },
+                cols_done: out.cols_done,
+                cancelled: out.cancelled,
+            }
+        }
+        Variant::LookAhead | Variant::Malleable | Variant::EarlyTerm => {
+            let opts = LaOpts {
+                malleable: cfg.variant != Variant::LookAhead,
+                early_term: cfg.variant == Variant::EarlyTerm,
+                entry: cfg.entry,
+                t_pf: cfg.t_pf,
+            };
+            let (ipiv, stats) =
+                lu_lookahead_ctl(pool, &cfg.params, a, cfg.bo, cfg.bi, &opts, Some(ctl));
+            CancelOutcome {
+                cols_done: ipiv.len(),
+                cancelled: stats.cancelled,
+                result: LuResult {
+                    ipiv,
+                    la_stats: Some(stats),
+                },
+            }
+        }
+        _ => CancelOutcome {
+            result: factorize(a, cfg, Some(pool)),
+            cols_done: kmax,
+            cancelled: false,
+        },
+    }
+}
+
 /// Relative residual `‖P·A − L·U‖_F / ‖A‖_F` (delegates to the naive
 /// oracle; intended for verification, not benchmarking).
 pub fn residual(a_original: &Matrix, factored: &Matrix, ipiv: &[usize]) -> f64 {
@@ -222,6 +308,34 @@ mod tests {
                 Some(p) => assert_eq!(*p, out.ipiv, "{} pivots", v.name()),
             }
         }
+    }
+
+    #[test]
+    fn cancellable_without_cancel_matches_plain() {
+        let a0 = Matrix::random(40, 40, 3);
+        for v in [Variant::BlockedRl, Variant::Malleable, Variant::OmpSs] {
+            let mut f = a0.clone();
+            let ctl = LaCtl::new();
+            let out = factorize_cancellable(&mut f, &cfg(v), None, &ctl);
+            assert!(!out.cancelled, "{}", v.name());
+            assert_eq!(out.cols_done, 40, "{}", v.name());
+            let r = residual(&a0, &f, &out.result.ipiv);
+            assert!(r < 1e-11, "{}: residual {r}", v.name());
+        }
+    }
+
+    #[test]
+    fn cancellable_blocked_stops_at_checkpoint() {
+        let a0 = Matrix::random(48, 48, 4);
+        let mut f = a0.clone();
+        let ctl = LaCtl::new();
+        ctl.request_cancel();
+        let out = factorize_cancellable(&mut f, &cfg(Variant::BlockedRl), None, &ctl);
+        assert!(out.cancelled);
+        assert_eq!(out.cols_done, 0);
+        assert_eq!(out.result.ipiv.len(), 0);
+        // Matrix untouched: no step ever committed.
+        assert_eq!(f, a0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
 //! mlu solve     --n 512  --variant mb            # factor + solve + residual
+//! mlu batch     --sizes 256,192,320 --workers 4 [--check --compare --trace t.json]
 //! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
 //! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
 //! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
@@ -17,7 +18,7 @@ use malleable_lu::matrix::Matrix;
 use malleable_lu::pool::Pool;
 use malleable_lu::sim::{self, figures, HwModel};
 use malleable_lu::util::{gflops, lu_flops, timed};
-use malleable_lu::{runtime, trace};
+use malleable_lu::{runtime, serve, trace};
 
 fn main() {
     let args = Args::from_env();
@@ -25,6 +26,7 @@ fn main() {
     let code = match cmd {
         "factorize" => cmd_factorize(&args),
         "solve" => cmd_solve(&args),
+        "batch" | "serve" => cmd_batch(&args),
         "trace" => cmd_trace(&args),
         "fig" => cmd_fig(&args),
         "gepp" => cmd_gepp(&args),
@@ -39,7 +41,7 @@ fn main() {
 }
 
 const HELP: &str = "mlu — malleable thread-level LU (see README.md)
-commands: factorize | solve | trace | fig {14,15,16,17} | gepp | xla | info";
+commands: factorize | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info";
 
 fn lu_config(args: &Args) -> LuConfig {
     LuConfig {
@@ -122,6 +124,104 @@ fn cmd_solve(args: &Args) -> i32 {
         gflops(lu_flops(n, n), secs)
     );
     i32::from(err > 1e-8)
+}
+
+fn cmd_batch(args: &Args) -> i32 {
+    let sizes_s = args.get_str("sizes", "256,192,320,224,160,288,208,256");
+    let sizes: Vec<usize> = sizes_s
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    if sizes.is_empty() {
+        eprintln!("--sizes must be a comma-separated list of matrix orders");
+        return 1;
+    }
+    let cfg = serve::ServeConfig {
+        workers: args.get("workers", 4usize),
+        bo: args.get("bo", 64),
+        bi: args.get("bi", 16),
+        ..Default::default()
+    };
+    let total_flops: f64 = sizes.iter().map(|&n| lu_flops(n, n)).sum();
+    let mats: Vec<Matrix> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Matrix::random(n, n, i as u64 + 1))
+        .collect();
+    let originals = if args.has("check") {
+        Some(mats.clone())
+    } else {
+        None
+    };
+
+    let trace_out = args.get_str("trace", "");
+    let rec = if trace_out.is_empty() {
+        None
+    } else {
+        Some(trace::start())
+    };
+    let (secs, results) = timed(|| serve::factorize_batch(mats, &cfg));
+    if rec.is_some() {
+        trace::stop();
+    }
+    let batched_g = gflops(total_flops, secs);
+    println!(
+        "batched {} problems (n={sizes:?}) on {} workers: {secs:.3}s, {batched_g:.2} aggregate GFLOPS",
+        results.len(),
+        cfg.workers
+    );
+    for r in &results {
+        println!(
+            "  req{} n={} cols_done={} cancelled={} {:.3}s",
+            r.id,
+            r.a.rows(),
+            r.cols_done,
+            r.cancelled,
+            r.secs
+        );
+    }
+    if let Some(origs) = &originals {
+        for (r, a0) in results.iter().zip(origs) {
+            let res = lu::residual(a0, &r.a, &r.ipiv);
+            if res > 1e-10 {
+                eprintln!("req{}: residual {res:.3e} too large", r.id);
+                return 1;
+            }
+        }
+        println!("  all residuals OK");
+    }
+    if let Some(rec) = rec {
+        let spans = rec.spans();
+        print!("{}", trace::ascii_gantt_requests(&spans, args.get("width", 100)));
+        if trace_out != "-" {
+            std::fs::write(&trace_out, trace::chrome_json(&spans)).expect("write trace");
+            println!("wrote {trace_out} (open in chrome://tracing or Perfetto)");
+        }
+    }
+    if args.has("compare") {
+        // Sequential baseline: same problems one at a time, each with the
+        // full team (pool workers + this thread).
+        let pool = Pool::new(cfg.workers.saturating_sub(1));
+        let lcfg = LuConfig {
+            variant: Variant::BlockedRl,
+            bo: cfg.bo,
+            bi: cfg.bi,
+            threads: cfg.workers,
+            ..Default::default()
+        };
+        let (ssecs, _) = timed(|| {
+            for (i, &n) in sizes.iter().enumerate() {
+                let mut a = Matrix::random(n, n, i as u64 + 1);
+                let _ = lu::factorize(&mut a, &lcfg, Some(&pool));
+            }
+        });
+        let seq_g = gflops(total_flops, ssecs);
+        println!(
+            "sequential (full pool per problem): {ssecs:.3}s, {seq_g:.2} GFLOPS → batched speedup {:.2}x",
+            ssecs / secs
+        );
+    }
+    0
 }
 
 fn cmd_trace(args: &Args) -> i32 {

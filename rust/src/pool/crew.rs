@@ -123,6 +123,18 @@ impl CrewShared {
     /// is the call a freed `T_PF` worker makes to join `T_RU`'s update
     /// (Worker Sharing).
     pub fn member_loop(self: &Arc<Self>, policy: EntryPolicy) {
+        self.member_loop_while(policy, || true);
+    }
+
+    /// Like [`CrewShared::member_loop`], but additionally returns when
+    /// `lease` reports `false`. The lease is polled only *between* jobs —
+    /// a member never abandons chunks mid-job, so revocation takes effect
+    /// at job boundaries exactly like enlistment does (no chunk can be
+    /// lost or double-executed by a departure). This is the primitive
+    /// behind [`crate::serve`]'s crew leases: a floating worker enlists
+    /// with a lease that turns false when the registry wants it on a more
+    /// starved problem.
+    pub fn member_loop_while(self: &Arc<Self>, policy: EntryPolicy, lease: impl Fn() -> bool) {
         self.members.fetch_add(1, Ordering::AcqRel);
         self.max_members
             .fetch_max(self.members.load(Ordering::Acquire), Ordering::AcqRel);
@@ -139,7 +151,7 @@ impl CrewShared {
 
         let backoff = Backoff::new();
         loop {
-            if self.is_disbanded() {
+            if self.is_disbanded() || !lease() {
                 break;
             }
             let e = Ticket(self.ticket.load(Ordering::Acquire)).epoch();
@@ -251,6 +263,7 @@ impl Crew {
         let f_obj: &(dyn Fn(usize) + Sync) = &f;
         // Erase the lifetime: members only call through this pointer while
         // we are inside this function (see `pull_chunks` SAFETY note).
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
         let f_raw = JobFn(unsafe {
             std::mem::transmute::<*const (dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
                 f_obj as *const _,
@@ -524,10 +537,7 @@ mod tests {
             }
         }
         let s = crew.stats();
-        assert_eq!(
-            s.leader_chunks + s.member_chunks,
-            (JOBS * CHUNKS) as u64
-        );
+        assert_eq!(s.leader_chunks + s.member_chunks, (JOBS * CHUNKS) as u64);
     }
 
     #[test]
@@ -562,6 +572,39 @@ mod tests {
         h.join().unwrap();
         assert_eq!(crew.members(), 0);
         assert!(shared.is_disbanded());
+    }
+
+    #[test]
+    fn member_loop_while_leaves_at_job_boundary_without_disband() {
+        let mut crew = Crew::new();
+        let shared = crew.shared();
+        let lease = Arc::new(AtomicUsize::new(1));
+        let l = Arc::clone(&lease);
+        let s = Arc::clone(&shared);
+        let h = std::thread::spawn(move || {
+            s.member_loop_while(EntryPolicy::Immediate, || l.load(Ordering::Acquire) == 1)
+        });
+        while crew.members() != 1 {
+            std::thread::yield_now();
+        }
+        // The member works while the lease holds...
+        let counter = AtomicUsize::new(0);
+        for _ in 0..5 {
+            crew.parallel(64, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 320);
+        // ...and leaves when it is revoked, with the crew still live.
+        lease.store(0, Ordering::Release);
+        h.join().unwrap();
+        assert_eq!(crew.members(), 0);
+        assert!(!shared.is_disbanded());
+        // The crew remains usable after the departure.
+        crew.parallel(8, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 328);
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //! - [`EntryPolicy::Immediate`] additionally lets a joining worker steal
 //!   chunks of the job in flight (an ablation the paper could not express
 //!   with its static round-robin Loop-4 partitioning).
+//! - [`CrewShared::member_loop_while`] makes membership *revocable*: a
+//!   worker enlists under a lease and leaves at the next job boundary
+//!   once the lease is revoked — the primitive the [`crate::serve`]
+//!   registry uses to float workers between concurrent problems.
 //!
 //! The chunk-grab protocol packs `(epoch, next_chunk)` into one atomic so
 //! a stale member can never execute a chunk of a later job with an earlier

@@ -158,6 +158,16 @@ impl Pool {
         handle
     }
 
+    /// Submit one task per worker, built by `make(worker_id)` — the way
+    /// the serve layer installs its per-worker scheduling loops. Handles
+    /// are returned in worker order.
+    pub fn broadcast<T: FnOnce() + Send + 'static>(
+        &self,
+        mut make: impl FnMut(usize) -> T,
+    ) -> Vec<TaskHandle> {
+        (0..self.workers()).map(|w| self.submit(w, make(w))).collect()
+    }
+
     /// Stop all workers after their queued tasks drain. Called on `Drop`.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
@@ -234,6 +244,25 @@ mod tests {
     #[test]
     fn main_thread_has_no_worker_id() {
         assert_eq!(current_worker(), None);
+    }
+
+    #[test]
+    fn broadcast_reaches_every_worker() {
+        let pool = Pool::new(3);
+        let hits: Vec<Arc<AtomicUsize>> = (0..3).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let handles = pool.broadcast(|w| {
+            let h = Arc::clone(&hits[w]);
+            move || {
+                h.store(current_worker().unwrap() + 1, Ordering::Release);
+            }
+        });
+        assert_eq!(handles.len(), 3);
+        for h in handles {
+            h.wait();
+        }
+        for (w, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Acquire), w + 1);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! integration tests cross-validate the Rust BLIS substrate against the
 //! XLA numerics.
 
+pub mod xla;
 pub mod xla_lu;
 
 use crate::matrix::Matrix;

@@ -1,0 +1,223 @@
+//! Minimal in-crate stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment carries no XLA/PJRT native bindings
+//! (DESIGN.md §3), so this module provides the small API surface the
+//! [`super`] runtime uses: fully functional, pure-Rust data-carrying
+//! [`Literal`]s (the conversion helpers and their tests work unchanged)
+//! plus client/executable types whose compile/execute paths return a
+//! clear "PJRT unavailable" error. Swapping the real bindings back in is
+//! a matter of replacing this module with the external crate; every
+//! signature matches the subset of the bindings' API we call.
+
+use std::fmt;
+use std::path::Path;
+
+/// Debug-printable error mirroring the bindings' error type (the runtime
+/// formats these with `{e:?}`).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type XlaResult<T> = Result<T, XlaError>;
+
+fn err<T>(msg: impl Into<String>) -> XlaResult<T> {
+    Err(XlaError(msg.into()))
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F64(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Host-side typed array with a shape — the only part of the bindings
+/// that must actually *work* offline (matrix/pivot interchange).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Element types a stub [`Literal`] can carry (the artifacts use f64
+/// data and i32 pivots).
+pub trait NativeElem: Sized + Copy {
+    fn into_literal(v: Vec<Self>) -> Literal;
+    fn extract(lit: &Literal) -> XlaResult<Vec<Self>>;
+}
+
+impl NativeElem for f64 {
+    fn into_literal(v: Vec<Self>) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            payload: Payload::F64(v),
+        }
+    }
+
+    fn extract(lit: &Literal) -> XlaResult<Vec<Self>> {
+        match &lit.payload {
+            Payload::F64(v) => Ok(v.clone()),
+            Payload::I32(_) => err("literal holds i32, asked for f64"),
+        }
+    }
+}
+
+impl NativeElem for i32 {
+    fn into_literal(v: Vec<Self>) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            payload: Payload::I32(v),
+        }
+    }
+
+    fn extract(lit: &Literal) -> XlaResult<Vec<Self>> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            Payload::F64(_) => err("literal holds f64, asked for i32"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeElem>(v: &[T]) -> Literal {
+        T::into_literal(v.to_vec())
+    }
+
+    /// Same data, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.payload.len() as i64 {
+            return err(format!(
+                "reshape to {dims:?} incompatible with {} elements",
+                self.payload.len()
+            ));
+        }
+        Ok(Literal {
+            payload: self.payload.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Flattened element vector.
+    pub fn to_vec<T: NativeElem>(&self) -> XlaResult<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Stub literals are never tuples (tuples only come back from a real
+    /// PJRT execution).
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        err("stub literal is not a tuple (PJRT backend unavailable)")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO text (held verbatim; only a real backend can compile it).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> XlaResult<Self> {
+        match std::fs::read_to_string(path.as_ref()) {
+            Ok(text) => Ok(Self { text }),
+            Err(e) => err(format!("read {:?}: {e}", path.as_ref())),
+        }
+    }
+}
+
+pub struct XlaComputation {
+    hlo_bytes: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self {
+            hlo_bytes: proto.text.len(),
+        }
+    }
+}
+
+/// Stand-in PJRT client: constructible (so artifact stores open and
+/// manifests parse offline), but compilation reports the missing
+/// backend.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<Self> {
+        Ok(Self)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        err(format!(
+            "PJRT backend not linked in this offline build; cannot compile {} bytes of HLO",
+            comp.hlo_bytes
+        ))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        err("PJRT backend not linked in this offline build")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        err("PJRT backend not linked in this offline build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.dims(), &[6]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_opens_but_compile_reports_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto {
+            text: "HloModule m".into(),
+        };
+        let comp = XlaComputation::from_proto(&proto);
+        let e = client.compile(&comp).err().unwrap();
+        assert!(format!("{e}").contains("PJRT backend"), "{e}");
+    }
+
+    #[test]
+    fn missing_hlo_file_is_a_clean_error() {
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Leader-side request driver: runs one problem's factorization on a
+//! pool worker, with per-request trace tags, cost-model progress
+//! accounting, deadline enforcement, and cancellation checkpoints.
+
+use super::registry::Lease;
+use crate::blis::BlisParams;
+use crate::lu::{lu_blocked_rl_ctl, BlockedCtl, BlockedOutcome};
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+use crate::sim::HwModel;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Cost-model estimate of the single-core seconds left in an `m × n` LU
+/// after `k` committed columns — the sum of every remaining step's panel,
+/// LASWP, TRSM, and GEMM times under `hw`. This is the remaining-FLOPs
+/// half of the reallocation policy (the other half is priority).
+pub fn remaining_cost(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
+    let kmax = m.min(n);
+    let bo = bo.max(1);
+    let mut total = 0.0;
+    let mut kk = k.min(kmax);
+    while kk < kmax {
+        let b = bo.min(kmax - kk);
+        total += hw.panel_time(m - kk, b, bi, 1);
+        let rest = n - kk - b;
+        if rest > 0 {
+            total += hw.laswp_time(b, n, 1);
+            total += hw.trsm_time(b, rest, 1);
+            total += hw.gemm_time(m - kk - b, rest, b, 1);
+        }
+        kk += b;
+    }
+    total
+}
+
+/// Everything a leader needs to drive one request.
+pub struct DriveCfg<'a> {
+    pub params: &'a BlisParams,
+    pub hw: &'a HwModel,
+    pub bo: usize,
+    pub bi: usize,
+    /// The request's registry entry; its remaining-work estimate is
+    /// refreshed at every panel checkpoint.
+    pub lease: &'a Lease,
+    /// Cancel flag shared with the request's [`crate::serve::JobHandle`].
+    pub cancel: &'a AtomicBool,
+    /// Absolute deadline, folded into `cancel` at every checkpoint.
+    pub deadline: Option<Instant>,
+}
+
+/// Factorize `a` on the calling thread, leading `crew`. Trace spans are
+/// tagged `req{id}` so multi-problem traces can tell requests apart.
+pub fn drive(crew: &mut Crew, a: MatMut, cfg: &DriveCfg) -> BlockedOutcome {
+    let (m, n) = (a.rows(), a.cols());
+    let tag = format!("req{}", cfg.lease.id);
+    let checkpoint = |k: usize| {
+        cfg.lease
+            .set_remaining(remaining_cost(cfg.hw, m, n, k, cfg.bo, cfg.bi));
+        if let Some(d) = cfg.deadline {
+            if Instant::now() >= d {
+                cfg.cancel.store(true, Ordering::Release);
+            }
+        }
+    };
+    let ctl = BlockedCtl {
+        cancel: Some(cfg.cancel),
+        tag: Some(&tag),
+        on_checkpoint: Some(&checkpoint),
+    };
+    lu_blocked_rl_ctl(crew, cfg.params, a, cfg.bo, cfg.bi, &ctl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+    use std::sync::Arc;
+
+    #[test]
+    fn remaining_cost_is_monotone_in_progress() {
+        let hw = HwModel::default();
+        let full = remaining_cost(&hw, 512, 512, 0, 64, 16);
+        let half = remaining_cost(&hw, 512, 512, 256, 64, 16);
+        let done = remaining_cost(&hw, 512, 512, 512, 64, 16);
+        assert!(full > half, "full={full} half={half}");
+        assert!(half > 0.0);
+        assert_eq!(done, 0.0);
+        // Front-loading (paper §3.1): the first half of the columns
+        // carries well over half of the work.
+        assert!(half < 0.4 * full, "half={half} full={full}");
+    }
+
+    #[test]
+    fn drive_factorizes_and_reports_progress() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let a0 = Matrix::random(48, 48, 21);
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let lease = Arc::new(Lease::new(
+            3,
+            0,
+            crew.shared(),
+            remaining_cost(&hw, 48, 48, 0, 8, 4),
+        ));
+        let cancel = AtomicBool::new(false);
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(!out.cancelled);
+        assert_eq!(out.cols_done, 48);
+        assert_eq!(lease.remaining(), 0.0);
+        let r = naive::lu_residual(&a0, &f, &out.ipiv);
+        assert!(r < 1e-12, "residual {r}");
+    }
+
+    #[test]
+    fn expired_deadline_cancels_at_first_checkpoint() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let mut f = Matrix::random(64, 64, 22);
+        let mut crew = Crew::new();
+        let lease = Arc::new(Lease::new(4, 0, crew.shared(), 1.0));
+        let cancel = AtomicBool::new(false);
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: Some(Instant::now()),
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(out.cancelled);
+        // One step commits before the first checkpoint notices.
+        assert_eq!(out.cols_done, 8);
+        assert!(cancel.load(Ordering::Acquire));
+    }
+}

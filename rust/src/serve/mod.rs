@@ -1,0 +1,622 @@
+//! §serve — the **batched multi-problem LU scheduler** (DESIGN.md §10).
+//!
+//! The paper's Worker-Sharing and Early-Termination mechanisms move
+//! threads between the two branches of *one* look-ahead factorization.
+//! This layer generalizes both across *problems*: an [`LuServer`] accepts
+//! a queue of factorization requests (mixed sizes, priorities, optional
+//! deadlines) and multiplexes them over a single [`Pool`].
+//!
+//! Scheduling model — every pool worker runs the same [`serve_loop`]:
+//!
+//! 1. **Lead.** Pop the highest-priority queued request and drive its
+//!    factorization to completion ([`driver::drive`]), leading a
+//!    malleable [`Crew`] registered in the [`CrewRegistry`].
+//! 2. **Float.** If the queue is empty, enlist as a member of the most
+//!    starved in-flight crew (priority- and remaining-FLOPs-aware, using
+//!    [`crate::sim::costmodel`] estimates) under a revocable lease
+//!    ([`crate::pool::CrewShared::member_loop_while`]). The lease is
+//!    revoked — at a job boundary, so no chunk is lost or re-run — when
+//!    the registry's picture changes or new work is queued.
+//!
+//! Thus any finished or blocked problem's workers flow to whichever
+//! problem is furthest behind: the WS rule lifted from two branches to N
+//! problems. Early Termination generalizes too: [`JobHandle::cancel`]
+//! (or an expired deadline) stops a request at its next panel
+//! checkpoint, leaving a clean factored prefix and returning its crew to
+//! the pool.
+//!
+//! Every kernel span a leader emits is tagged `req{id}`, so
+//! [`crate::trace::ascii_gantt_requests`] can render one Gantt lane per
+//! problem.
+
+pub mod driver;
+pub mod registry;
+
+pub use registry::{CrewRegistry, Lease};
+
+use crate::blis::BlisParams;
+use crate::matrix::Matrix;
+use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
+use crate::sim::HwModel;
+use crossbeam_utils::Backoff;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Copy, Clone, Debug)]
+pub struct ServeConfig {
+    /// Pool workers serving the queue (each alternates between leading a
+    /// request and floating into starved crews).
+    pub workers: usize,
+    /// Default outer block size for requests that don't override it.
+    pub bo: usize,
+    /// Default inner (panel) block size.
+    pub bi: usize,
+    pub params: BlisParams,
+    /// How floating workers enter an in-flight kernel.
+    pub entry: EntryPolicy,
+    /// Cost model used for remaining-work estimates.
+    pub hw: HwModel,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            bo: 64,
+            bi: 16,
+            params: BlisParams::default(),
+            entry: EntryPolicy::JobBoundary,
+            hw: HwModel::default(),
+        }
+    }
+}
+
+/// One factorization request.
+pub struct LuRequest {
+    pub a: Matrix,
+    /// Higher runs first and attracts floaters more strongly.
+    pub priority: u8,
+    /// Budget after which the request is ET-cancelled.
+    pub deadline: Option<Duration>,
+    /// Outer block-size override (server default when `None`).
+    pub bo: Option<usize>,
+    /// Inner block-size override.
+    pub bi: Option<usize>,
+}
+
+impl LuRequest {
+    pub fn new(a: Matrix) -> Self {
+        Self {
+            a,
+            priority: 0,
+            deadline: None,
+            bo: None,
+            bi: None,
+        }
+    }
+
+    pub fn with_priority(mut self, p: u8) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_blocks(mut self, bo: usize, bi: usize) -> Self {
+        self.bo = Some(bo);
+        self.bi = Some(bi);
+        self
+    }
+}
+
+/// Completed (or cancelled) request.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// The matrix, now holding the factors (a clean factored prefix of
+    /// `cols_done` columns if the request was cancelled).
+    pub a: Matrix,
+    /// Absolute pivots for the committed columns.
+    pub ipiv: Vec<usize>,
+    pub cols_done: usize,
+    pub cancelled: bool,
+    /// Wall seconds from submission to completion.
+    pub secs: f64,
+}
+
+struct JobState {
+    done: Mutex<Option<JobResult>>,
+    cv: Condvar,
+    cancel: AtomicBool,
+}
+
+/// Handle returned by [`LuServer::submit`].
+pub struct JobHandle {
+    id: u64,
+    state: Arc<JobState>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request-level early termination: drop the job if still queued, or
+    /// stop it at its next panel checkpoint. The crew it occupied
+    /// returns to the pool either way.
+    pub fn cancel(&self) {
+        self.state.cancel.store(true, Ordering::Release);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state.done.lock().unwrap().is_some()
+    }
+
+    /// Block until the request completes (or is cancelled) and take the
+    /// result.
+    pub fn wait(self) -> JobResult {
+        let mut slot = self.state.done.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.state.cv.wait(slot).unwrap();
+        }
+    }
+}
+
+struct QueuedJob {
+    id: u64,
+    seq: u64,
+    priority: u8,
+    a: Matrix,
+    bo: usize,
+    bi: usize,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    state: Arc<JobState>,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedJob {}
+
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedJob {
+    /// Max-heap key: priority first, then FIFO within a priority class.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct ServerState {
+    queue: Mutex<BinaryHeap<QueuedJob>>,
+    /// Mirror of `queue.len()` readable without the lock (floaters poll
+    /// it from inside crew job waits).
+    queued: AtomicUsize,
+    registry: CrewRegistry,
+    stop: AtomicBool,
+    cfg: ServeConfig,
+}
+
+impl ServerState {
+    fn pop(&self) -> Option<QueuedJob> {
+        let mut q = self.queue.lock().unwrap();
+        let job = q.pop();
+        self.queued.store(q.len(), Ordering::Release);
+        job
+    }
+}
+
+/// The batched multi-problem LU server (module docs above).
+pub struct LuServer {
+    pool: Pool,
+    state: Arc<ServerState>,
+    loops: Mutex<Vec<TaskHandle>>,
+    next_id: AtomicU64,
+}
+
+impl LuServer {
+    /// Spawn `cfg.workers` pool workers, each running a serve loop.
+    pub fn new(cfg: ServeConfig) -> Self {
+        let pool = Pool::new(cfg.workers.max(1));
+        let state = Arc::new(ServerState {
+            queue: Mutex::new(BinaryHeap::new()),
+            queued: AtomicUsize::new(0),
+            registry: CrewRegistry::new(),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+        let loops = pool.broadcast(|_w| {
+            let st = Arc::clone(&state);
+            move || serve_loop(&st)
+        });
+        Self {
+            pool,
+            state,
+            loops: Mutex::new(loops),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of pool workers serving requests.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// In-flight problem registry (exposed for tests and introspection).
+    pub fn registry(&self) -> &CrewRegistry {
+        &self.state.registry
+    }
+
+    /// Enqueue a request; returns immediately with a handle.
+    pub fn submit(&self, req: LuRequest) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let state = Arc::new(JobState {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
+        });
+        let now = Instant::now();
+        let job = QueuedJob {
+            id,
+            seq: id,
+            priority: req.priority,
+            a: req.a,
+            bo: req.bo.unwrap_or(self.state.cfg.bo),
+            bi: req.bi.unwrap_or(self.state.cfg.bi),
+            deadline: req.deadline.map(|d| now + d),
+            submitted: now,
+            state: Arc::clone(&state),
+        };
+        {
+            // Stop-check and push under one lock: shutdown() also sets
+            // `stop` under this lock, so a job can never slip into the
+            // queue after the serve loops were told to drain and exit
+            // (its waiter would hang forever).
+            let mut q = self.state.queue.lock().unwrap();
+            assert!(
+                !self.state.stop.load(Ordering::Acquire),
+                "LuServer::submit after shutdown"
+            );
+            q.push(job);
+            self.state.queued.store(q.len(), Ordering::Release);
+        }
+        JobHandle { id, state }
+    }
+
+    /// Submit a whole batch and wait for every result (returned in
+    /// submission order).
+    pub fn factorize_batch(&self, reqs: Vec<LuRequest>) -> Vec<JobResult> {
+        let handles: Vec<JobHandle> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    /// Stop accepting work, drain already-queued requests, and join the
+    /// serve loops. Called automatically on drop.
+    pub fn shutdown(&self) {
+        {
+            // Under the queue lock — see the pairing note in `submit`.
+            let _q = self.state.queue.lock().unwrap();
+            self.state.stop.store(true, Ordering::Release);
+        }
+        for h in self.loops.lock().unwrap().drain(..) {
+            h.wait();
+        }
+    }
+}
+
+impl Drop for LuServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One-call batch entry point: factorize all matrices on a fresh server,
+/// returning results in input order.
+pub fn factorize_batch(mats: Vec<Matrix>, cfg: &ServeConfig) -> Vec<JobResult> {
+    let server = LuServer::new(*cfg);
+    let reqs: Vec<LuRequest> = mats.into_iter().map(LuRequest::new).collect();
+    let out = server.factorize_batch(reqs);
+    server.shutdown();
+    out
+}
+
+/// One pool worker's scheduling loop: lead the highest-priority queued
+/// request, else float into the most starved in-flight crew, else wait.
+fn serve_loop(state: &ServerState) {
+    let backoff = Backoff::new();
+    loop {
+        if let Some(job) = state.pop() {
+            let jstate = Arc::clone(&job.state);
+            let id = job.id;
+            // A panicking request must not wedge its waiter or leak its
+            // registry entry (that would strand floaters on a dead crew).
+            let led =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| lead_job(state, job)));
+            if led.is_err() {
+                state.registry.unregister(id);
+                eprintln!("serve: request {id} panicked; reported as cancelled");
+                complete(
+                    &jstate,
+                    JobResult {
+                        id,
+                        a: Matrix::zeros(0, 0),
+                        ipiv: Vec::new(),
+                        cols_done: 0,
+                        cancelled: true,
+                        secs: 0.0,
+                    },
+                );
+            }
+            backoff.reset();
+            continue;
+        }
+        if state.stop.load(Ordering::Acquire) && state.queued.load(Ordering::Acquire) == 0 {
+            break;
+        }
+        let e0 = state.registry.epoch();
+        if let Some(lease) = state.registry.most_starved() {
+            // Donate this worker until the picture changes: the crew
+            // closes, a problem arrives or finishes, queued work appears,
+            // or the server stops.
+            lease.shared.member_loop_while(state.cfg.entry, || {
+                state.registry.epoch() == e0
+                    && state.queued.load(Ordering::Acquire) == 0
+                    && !state.stop.load(Ordering::Acquire)
+            });
+            backoff.reset();
+        } else if backoff.is_completed() {
+            // Fully idle (no queue, no crews): sleep instead of burning
+            // the core — a long-lived server spends most of its life
+            // here. 200 µs keeps dispatch latency negligible next to a
+            // factorization.
+            std::thread::sleep(Duration::from_micros(200));
+        } else {
+            backoff.snooze();
+        }
+    }
+}
+
+/// Lead one request: register its crew, drive the factorization, fulfill
+/// the handle.
+fn lead_job(state: &ServerState, job: QueuedJob) {
+    let QueuedJob {
+        id,
+        mut a,
+        bo,
+        bi,
+        deadline,
+        submitted,
+        priority,
+        state: jstate,
+        ..
+    } = job;
+    // A request cancelled (or expired) while still queued costs nothing;
+    // the pool stays fully available to the rest of the batch.
+    let dead_on_arrival = jstate.cancel.load(Ordering::Acquire)
+        || deadline.is_some_and(|d| Instant::now() >= d);
+    if dead_on_arrival {
+        let secs = submitted.elapsed().as_secs_f64();
+        complete(
+            &jstate,
+            JobResult {
+                id,
+                a,
+                ipiv: Vec::new(),
+                cols_done: 0,
+                cancelled: true,
+                secs,
+            },
+        );
+        return;
+    }
+    let (m, n) = (a.rows(), a.cols());
+    let mut crew = Crew::new();
+    let lease = Arc::new(Lease::new(
+        id,
+        priority,
+        crew.shared(),
+        driver::remaining_cost(&state.cfg.hw, m, n, 0, bo, bi),
+    ));
+    state.registry.register(Arc::clone(&lease));
+    let dcfg = driver::DriveCfg {
+        params: &state.cfg.params,
+        hw: &state.cfg.hw,
+        bo,
+        bi,
+        lease: &lease,
+        cancel: &jstate.cancel,
+        deadline,
+    };
+    let out = driver::drive(&mut crew, a.view_mut(), &dcfg);
+    // Withdraw before disbanding: floaters leave at the epoch bump, and
+    // disband waits for the stragglers, so the crew's workers are back
+    // in their serve loops before the result is published.
+    state.registry.unregister(id);
+    crew.disband();
+    let secs = submitted.elapsed().as_secs_f64();
+    complete(
+        &jstate,
+        JobResult {
+            id,
+            a,
+            ipiv: out.ipiv,
+            cols_done: out.cols_done,
+            cancelled: out.cancelled,
+            secs,
+        },
+    );
+}
+
+fn complete(jstate: &JobState, result: JobResult) {
+    *jstate.done.lock().unwrap() = Some(result);
+    jstate.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::naive;
+
+    fn tiny_cfg(workers: usize) -> ServeConfig {
+        ServeConfig {
+            workers,
+            bo: 16,
+            bi: 4,
+            params: BlisParams::tiny(),
+            ..Default::default()
+        }
+    }
+
+    fn qj(id: u64, priority: u8) -> QueuedJob {
+        QueuedJob {
+            id,
+            seq: id,
+            priority,
+            a: Matrix::zeros(1, 1),
+            bo: 4,
+            bi: 2,
+            deadline: None,
+            submitted: Instant::now(),
+            state: Arc::new(JobState {
+                done: Mutex::new(None),
+                cv: Condvar::new(),
+                cancel: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        let mut heap = BinaryHeap::new();
+        heap.push(qj(0, 1));
+        heap.push(qj(1, 3));
+        heap.push(qj(2, 1));
+        heap.push(qj(3, 3));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|j| j.id)).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn single_worker_batch_completes_in_priority_order_of_results() {
+        let server = LuServer::new(tiny_cfg(1));
+        let mats: Vec<Matrix> = (0..3)
+            .map(|i| Matrix::random(24 + 8 * i, 24 + 8 * i, i as u64))
+            .collect();
+        let originals = mats.clone();
+        let reqs: Vec<LuRequest> = mats.into_iter().map(LuRequest::new).collect();
+        let results = server.factorize_batch(reqs);
+        assert_eq!(results.len(), 3);
+        for (res, a0) in results.iter().zip(&originals) {
+            assert!(!res.cancelled);
+            assert_eq!(res.cols_done, a0.rows());
+            let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+            assert!(r < 1e-11, "req{}: residual {r}", res.id);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_mixed_batch_matches_reference_pivots() {
+        let server = LuServer::new(tiny_cfg(3));
+        let sizes = [40usize, 64, 32, 56, 48];
+        let originals: Vec<Matrix> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| Matrix::random(n, n, 100 + i as u64))
+            .collect();
+        let reqs: Vec<LuRequest> = originals
+            .iter()
+            .enumerate()
+            .map(|(i, a)| LuRequest::new(a.clone()).with_priority((i % 3) as u8))
+            .collect();
+        let results = server.factorize_batch(reqs);
+        for (res, a0) in results.iter().zip(&originals) {
+            assert!(!res.cancelled, "req{} cancelled", res.id);
+            let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+            assert!(r < 1e-11, "req{}: residual {r}", res.id);
+            // Scheduling must not change the math: pivots match the
+            // sequential reference exactly.
+            let mut g = a0.clone();
+            let piv_ref = naive::lu(g.view_mut());
+            assert_eq!(res.ipiv, piv_ref, "req{} pivots", res.id);
+        }
+        assert!(server.registry().is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancelled_queued_request_costs_nothing_and_pool_stays_usable() {
+        let server = LuServer::new(tiny_cfg(2));
+        // Cancel before any worker can finish it; whether it was popped
+        // already or not, the result must come back flagged or complete —
+        // and the server must keep serving afterwards.
+        let victim = server.submit(LuRequest::new(Matrix::random(64, 64, 5)));
+        victim.cancel();
+        let res = victim.wait();
+        assert!(res.cancelled || res.cols_done == 64);
+
+        let a0 = Matrix::random(48, 48, 6);
+        let ok = server.submit(LuRequest::new(a0.clone())).wait();
+        assert!(!ok.cancelled);
+        let r = naive::lu_residual(&a0, &ok.a, &ok.ipiv);
+        assert!(r < 1e-11, "residual {r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_yields_partial_result() {
+        let server = LuServer::new(tiny_cfg(2));
+        let h = server.submit(
+            LuRequest::new(Matrix::random(64, 64, 7)).with_deadline(Duration::from_secs(0)),
+        );
+        let res = h.wait();
+        assert!(res.cancelled);
+        assert!(res.cols_done < 64);
+        server.shutdown();
+    }
+
+    #[test]
+    fn convenience_batch_entry_point() {
+        let mats: Vec<Matrix> = (0..4).map(|i| Matrix::random(32, 32, 50 + i)).collect();
+        let originals = mats.clone();
+        let results = factorize_batch(mats, &tiny_cfg(2));
+        assert_eq!(results.len(), 4);
+        for (res, a0) in results.iter().zip(&originals) {
+            let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+            assert!(r < 1e-11, "req{}: residual {r}", res.id);
+        }
+    }
+
+    #[test]
+    fn results_return_in_submission_order() {
+        let server = LuServer::new(tiny_cfg(2));
+        let reqs: Vec<LuRequest> = (0..4)
+            .map(|i| LuRequest::new(Matrix::random(24, 24, i)).with_priority((3 - i) as u8))
+            .collect();
+        let results = server.factorize_batch(reqs);
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,183 @@
+//! Crew-lease registry: which problems are in flight, how starved each
+//! one is, and where a floating worker should go next.
+//!
+//! The paper's Worker-Sharing rule is "the branch that finishes first
+//! donates its threads to the branch that is behind". Lifted to many
+//! concurrent problems, "behind" needs a number: every in-flight
+//! factorization registers a [`Lease`] carrying its crew handle, its
+//! priority, and a cost-model estimate of the work it has left
+//! ([`crate::serve::driver::remaining_cost`]). Idle workers consult
+//! [`CrewRegistry::most_starved`] and enlist where the priority-weighted
+//! remaining work per enlisted worker is highest.
+
+use crate::pool::CrewShared;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One in-flight problem's entry: its crew plus the scheduling signals
+/// the reallocation policy reads.
+pub struct Lease {
+    /// Request id (matches the trace span tag `req{id}`).
+    pub id: u64,
+    /// Scheduling priority (higher = more urgent).
+    pub priority: u8,
+    /// The problem's crew, open for members.
+    pub shared: Arc<CrewShared>,
+    /// Modeled single-core seconds of work left, stored as `f64` bits.
+    /// Updated by the leader at every panel checkpoint.
+    remaining: AtomicU64,
+}
+
+impl Lease {
+    pub fn new(id: u64, priority: u8, shared: Arc<CrewShared>, remaining: f64) -> Self {
+        Self {
+            id,
+            priority,
+            shared,
+            remaining: AtomicU64::new(remaining.to_bits()),
+        }
+    }
+
+    /// Cost-model estimate of the problem's remaining work (modeled
+    /// single-core seconds).
+    pub fn remaining(&self) -> f64 {
+        f64::from_bits(self.remaining.load(Ordering::Relaxed))
+    }
+
+    pub fn set_remaining(&self, secs: f64) {
+        self.remaining.store(secs.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Work-conserving starvation score: priority-weighted remaining
+    /// work divided by the team already on the problem. The floater
+    /// policy sends idle workers to the highest score — the paper's WS
+    /// rule ("donate to whoever is behind") generalized from two
+    /// branches to N problems.
+    pub fn starvation(&self) -> f64 {
+        let team = self.shared.members() + 1; // members + the leader
+        (self.priority as f64 + 1.0) * self.remaining() / team as f64
+    }
+}
+
+/// Registry of all in-flight problems. Registration changes bump an
+/// epoch; floating workers watch it to know when the picture changed and
+/// the pick policy should re-run.
+pub struct CrewRegistry {
+    slots: Mutex<Vec<Arc<Lease>>>,
+    epoch: AtomicU64,
+}
+
+impl Default for CrewRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CrewRegistry {
+    pub fn new() -> Self {
+        Self {
+            slots: Mutex::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Monotone counter bumped on every register/unregister.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Number of in-flight problems.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Announce a problem as open for donated workers.
+    pub fn register(&self, lease: Arc<Lease>) {
+        self.slots.lock().unwrap().push(lease);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Withdraw a finished (or cancelled) problem. Floaters enlisted in
+    /// its crew leave at the next job boundary (epoch change), before
+    /// the leader disbands it.
+    pub fn unregister(&self, id: u64) {
+        self.slots.lock().unwrap().retain(|l| l.id != id);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// The lease with the highest starvation score, if any problem is in
+    /// flight. Concurrent callers may briefly herd onto the same lease;
+    /// the score self-corrects as each enlistment raises the team count.
+    pub fn most_starved(&self) -> Option<Arc<Lease>> {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .iter()
+            .max_by(|a, b| {
+                a.starvation()
+                    .partial_cmp(&b.starvation())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Crew;
+
+    fn lease(id: u64, priority: u8, remaining: f64) -> (Crew, Arc<Lease>) {
+        let crew = Crew::new();
+        let l = Arc::new(Lease::new(id, priority, crew.shared(), remaining));
+        (crew, l)
+    }
+
+    #[test]
+    fn register_unregister_bumps_epoch() {
+        let reg = CrewRegistry::new();
+        assert!(reg.is_empty());
+        let e0 = reg.epoch();
+        let (_c, l) = lease(7, 0, 1.0);
+        reg.register(Arc::clone(&l));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.epoch() > e0);
+        let e1 = reg.epoch();
+        reg.unregister(7);
+        assert!(reg.is_empty());
+        assert!(reg.epoch() > e1);
+    }
+
+    #[test]
+    fn most_starved_prefers_more_remaining_work() {
+        let reg = CrewRegistry::new();
+        let (_c1, l1) = lease(1, 0, 1.0);
+        let (_c2, l2) = lease(2, 0, 5.0);
+        reg.register(l1);
+        reg.register(Arc::clone(&l2));
+        assert_eq!(reg.most_starved().unwrap().id, 2);
+        // Progress on problem 2 flips the pick.
+        l2.set_remaining(0.1);
+        assert_eq!(reg.most_starved().unwrap().id, 1);
+    }
+
+    #[test]
+    fn most_starved_weighs_priority() {
+        let reg = CrewRegistry::new();
+        let (_c1, l1) = lease(1, 0, 1.0);
+        let (_c2, l2) = lease(2, 3, 0.5);
+        reg.register(l1);
+        reg.register(l2);
+        // 0.5 × (3+1) = 2.0 beats 1.0 × 1.
+        assert_eq!(reg.most_starved().unwrap().id, 2);
+    }
+
+    #[test]
+    fn most_starved_empty_is_none() {
+        let reg = CrewRegistry::new();
+        assert!(reg.most_starved().is_none());
+    }
+}

@@ -94,7 +94,17 @@ fn outcome(n: usize, time: f64, iters: usize, et_cuts: usize, spans: Vec<Span>) 
 }
 
 /// Push a span across lanes `[l0, l1)`.
-fn push_span(spans: &mut Vec<Span>, on: bool, l0: usize, l1: usize, kind: Kind, label: &str, t0: f64, t1: f64) {
+#[allow(clippy::too_many_arguments)]
+fn push_span(
+    spans: &mut Vec<Span>,
+    on: bool,
+    l0: usize,
+    l1: usize,
+    kind: Kind,
+    label: &str,
+    t0: f64,
+    t1: f64,
+) {
     if !on || t1 <= t0 {
         return;
     }
@@ -242,8 +252,7 @@ fn sim_la(
                 let g_len = ru_gemm;
                 let frac_left = ((ru_total - pf_total) / g_len.max(1e-30)).clamp(0.0, 1.0);
                 // Work left, re-rated from t_ru to t threads:
-                let left_merged =
-                    hw.gemm_time(rows_below, r_cols, bc, t) * frac_left;
+                let left_merged = hw.gemm_time(rows_below, r_cols, bc, t) * frac_left;
                 // Entry-point quantization: joiners wait for the next
                 // i_c iteration (≈ one mc-row slice of the GEMM).
                 let entry_lag = hw.gemm_time(96, r_cols.min(4096), bc, t_ru) * 0.5;
@@ -260,19 +269,24 @@ fn sim_la(
 
         // Trace spans for this iteration.
         push_span(&mut spans, tr, 0, 1, Kind::Swap, "PF1.swap", time, time + pf_swap);
-        push_span(&mut spans, tr, 0, 1, Kind::Trsm, "PF1.trsm", time + pf_swap, time + pf_swap + pf_trsm);
-        push_span(&mut spans, tr, 0, 1, Kind::Gemm, "PF2.gemm", time + pf_swap + pf_trsm, time + pf_pre);
+        let t_pf_trsm = time + pf_swap + pf_trsm;
+        push_span(&mut spans, tr, 0, 1, Kind::Trsm, "PF1.trsm", time + pf_swap, t_pf_trsm);
+        push_span(&mut spans, tr, 0, 1, Kind::Gemm, "PF2.gemm", t_pf_trsm, time + pf_pre);
         push_span(&mut spans, tr, 0, 1, Kind::Panel, "PF3.panel", time + pf_pre, time + pf_total);
         push_span(&mut spans, tr, t_pf, t, Kind::Swap, "RU1.swap", time, time + ru_swap);
-        push_span(&mut spans, tr, t_pf, t, Kind::Trsm, "RU1.trsm", time + ru_swap, time + ru_swap + ru_trsm);
-        push_span(&mut spans, tr, t_pf, t, Kind::Gemm, "RU2.gemm", time + ru_swap + ru_trsm, time + ru_total.min(iter_time));
+        let t_ru_trsm = time + ru_swap + ru_trsm;
+        push_span(&mut spans, tr, t_pf, t, Kind::Trsm, "RU1.trsm", time + ru_swap, t_ru_trsm);
+        let ru_end = time + ru_total.min(iter_time);
+        push_span(&mut spans, tr, t_pf, t, Kind::Gemm, "RU2.gemm", t_ru_trsm, ru_end);
         if malleable && pf_total < iter_time {
-            push_span(&mut spans, tr, 0, 1, Kind::Gemm, "WS:RU2.gemm", time + pf_total, time + iter_time);
+            let (a, b) = (time + pf_total, time + iter_time);
+            push_span(&mut spans, tr, 0, 1, Kind::Gemm, "WS:RU2.gemm", a, b);
         } else if pf_total < iter_time {
             push_span(&mut spans, tr, 0, 1, Kind::Wait, "idle", time + pf_total, time + iter_time);
         }
         if ru_total < iter_time {
-            push_span(&mut spans, tr, t_pf, t, Kind::Wait, "idle", time + ru_total, time + iter_time);
+            let (a, b) = (time + ru_total, time + iter_time);
+            push_span(&mut spans, tr, t_pf, t, Kind::Wait, "idle", a, b);
         }
 
         time += iter_time;
@@ -368,8 +382,7 @@ mod tests {
     fn trace_spans_cover_all_lanes() {
         let out = simulate(&hw(), SimVariant::Mb, 4000, 256, 32, 6, 1, true);
         assert!(!out.spans.is_empty());
-        let lanes: std::collections::HashSet<usize> =
-            out.spans.iter().map(|s| s.lane).collect();
+        let lanes: std::collections::HashSet<usize> = out.spans.iter().map(|s| s.lane).collect();
         assert!(lanes.len() >= 6);
         // Spans must be within [0, makespan].
         for s in &out.spans {

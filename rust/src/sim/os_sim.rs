@@ -23,7 +23,14 @@ struct SimTask {
 }
 
 /// Simulate `LU_OS` on an `n × n` matrix with `t` workers.
-pub fn sim_os(hw: &HwModel, n: usize, bo: usize, bi: usize, t: usize, tr: bool) -> super::SimOutcome {
+pub fn sim_os(
+    hw: &HwModel,
+    n: usize,
+    bo: usize,
+    bi: usize,
+    t: usize,
+    tr: bool,
+) -> super::SimOutcome {
     let bo = bo.max(1);
     let n_panels = n.div_ceil(bo);
     let mut tasks: Vec<SimTask> = Vec::new();

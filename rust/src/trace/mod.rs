@@ -171,10 +171,13 @@ pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
     let n_lanes = spans.iter().map(|s| s.lane).max().unwrap() + 1;
     let mut rows = vec![vec![' '; width]; n_lanes];
     for s in spans {
+        // A span starting at tmax (zero-duration last event) would map
+        // to column `width`; clamp before widening so c0 < c1 <= width.
         let c0 = (((s.t0 - tmin) / range) * width as f64).floor() as usize;
+        let c0 = c0.min(width - 1);
         let c1 = (((s.t1 - tmin) / range) * width as f64).ceil() as usize;
         let c1 = c1.clamp(c0 + 1, width);
-        for cell in &mut rows[s.lane][c0.min(width - 1)..c1] {
+        for cell in &mut rows[s.lane][c0..c1] {
             *cell = s.kind.glyph();
         }
     }
@@ -192,6 +195,64 @@ pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
             format!("wk{:<3}", lane - 1)
         };
         out.push_str(&name);
+        out.push('|');
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out.push_str("legend: P=panel s=swap t=trsm G=gemm k=pack .=wait\n");
+    out
+}
+
+/// Render spans as a multi-problem Gantt: one lane per *request*, keyed
+/// by the label prefix up to the first `.` when it is a request tag
+/// (`req<id>`, as emitted by the serve layer's drivers); untagged spans
+/// share an `(other)` lane. Where [`ascii_gantt`] answers "what was each
+/// worker doing", this view answers "how did each problem's lifetime
+/// overlap the others' on the shared pool".
+pub fn ascii_gantt_requests(spans: &[Span], width: usize) -> String {
+    if spans.is_empty() {
+        return String::from("(no spans)\n");
+    }
+    let key_of = |label: &str| -> String {
+        match label.split_once('.') {
+            Some((head, _)) if head.starts_with("req") => head.to_string(),
+            _ => String::from("(other)"),
+        }
+    };
+    let tmax = spans.iter().map(|s| s.t1).fold(0.0f64, f64::max);
+    let tmin = spans.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+    let range = (tmax - tmin).max(1e-12);
+    let mut keys: Vec<String> = Vec::new();
+    for s in spans {
+        let k = key_of(&s.label);
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    let mut rows = vec![vec![' '; width]; keys.len()];
+    for s in spans {
+        let lane = keys.iter().position(|k| *k == key_of(&s.label)).unwrap();
+        // Same column clamp as [`ascii_gantt`]: a span at t == tmax must
+        // not index past the last cell.
+        let c0 = (((s.t0 - tmin) / range) * width as f64).floor() as usize;
+        let c0 = c0.min(width - 1);
+        let c1 = (((s.t1 - tmin) / range) * width as f64).ceil() as usize;
+        let c1 = c1.clamp(c0 + 1, width);
+        for cell in &mut rows[lane][c0..c1] {
+            *cell = s.kind.glyph();
+        }
+    }
+    let name_w = keys.iter().map(|k| k.len()).max().unwrap().max(5);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time range: {:.6}s .. {:.6}s  ({} spans, {} requests)\n",
+        tmin,
+        tmax,
+        spans.len(),
+        keys.iter().filter(|k| k.as_str() != "(other)").count()
+    ));
+    for (key, row) in keys.iter().zip(&rows) {
+        out.push_str(&format!("{key:<name_w$}"));
         out.push('|');
         out.extend(row.iter());
         out.push_str("|\n");
@@ -305,6 +366,78 @@ mod tests {
     #[test]
     fn gantt_empty() {
         assert_eq!(ascii_gantt(&[], 10), "(no spans)\n");
+        assert_eq!(ascii_gantt_requests(&[], 10), "(no spans)\n");
+    }
+
+    #[test]
+    fn gantt_handles_zero_duration_span_at_end() {
+        // A zero-duration span exactly at tmax maps to the last column
+        // instead of panicking in the clamp.
+        let spans = vec![
+            Span {
+                lane: 0,
+                kind: Kind::Gemm,
+                label: "g".into(),
+                t0: 0.0,
+                t1: 1.0,
+            },
+            Span {
+                lane: 1,
+                kind: Kind::Other,
+                label: "end".into(),
+                t0: 1.0,
+                t1: 1.0,
+            },
+        ];
+        let g = ascii_gantt(&spans, 20);
+        assert!(g.contains('o'), "{g}");
+        let gr = ascii_gantt_requests(&spans, 20);
+        assert!(gr.contains("(other)"), "{gr}");
+    }
+
+    #[test]
+    fn request_gantt_groups_by_tag() {
+        let spans = vec![
+            Span {
+                lane: 1,
+                kind: Kind::Panel,
+                label: "req0.panel[0]".into(),
+                t0: 0.0,
+                t1: 0.5,
+            },
+            Span {
+                lane: 2,
+                kind: Kind::Gemm,
+                label: "req1.update[0]".into(),
+                t0: 0.25,
+                t1: 1.0,
+            },
+            Span {
+                lane: 1,
+                kind: Kind::Gemm,
+                label: "req0.update[0]".into(),
+                t0: 0.5,
+                t1: 0.75,
+            },
+            Span {
+                lane: 0,
+                kind: Kind::Swap,
+                label: "laswp".into(),
+                t0: 0.0,
+                t1: 0.1,
+            },
+        ];
+        let g = ascii_gantt_requests(&spans, 40);
+        assert!(g.contains("2 requests"), "{g}");
+        assert!(g.contains("req0"), "{g}");
+        assert!(g.contains("req1"), "{g}");
+        assert!(g.contains("(other)"), "{g}");
+        // req0's lane starts with panel glyphs, then gemm.
+        let req0_line = g.lines().find(|l| l.starts_with("req0")).unwrap();
+        assert!(req0_line.contains('P'), "{req0_line}");
+        assert!(req0_line.contains('G'), "{req0_line}");
+        // 1 header + 3 lanes + legend.
+        assert_eq!(g.lines().count(), 5);
     }
 
     #[test]

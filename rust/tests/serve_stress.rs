@@ -1,0 +1,175 @@
+//! Malleability-race and serve-layer stress tests: crews that grow *and
+//! shrink* mid-kernel must neither lose nor double-execute a chunk, a
+//! cancelled request must leave a resumable partial factorization, and a
+//! cancelled request's pool must remain fully reusable.
+
+use malleable_lu::blis::{gemm, BlisParams};
+use malleable_lu::lu::{lu_blocked_rl_ctl, lu_unblocked, BlockedCtl};
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::{Crew, EntryPolicy};
+use malleable_lu::serve::{factorize_batch, LuRequest, LuServer, ServeConfig};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Determinism invariant under *churn*: members joining and leaving
+/// (via revocable leases) mid-GEMM never change the result — bitwise —
+/// because chunks are claimed exactly once and leases are only revoked
+/// at job boundaries.
+#[test]
+fn gemm_is_bitwise_stable_under_member_churn() {
+    let params = BlisParams::tiny();
+    let (m, n, k) = (96, 80, 64);
+    let a = Matrix::random(m, k, 1);
+    let b = Matrix::random(k, n, 2);
+
+    // Reference: leader alone.
+    let mut c_ref = Matrix::random(m, n, 3);
+    {
+        let mut crew = Crew::new();
+        gemm(&mut crew, &params, -1.0, a.view(), b.view(), c_ref.view_mut());
+    }
+
+    // Churn: members that repeatedly enlist under a short lease, leave,
+    // and re-enlist while the leader runs the same GEMM over and over.
+    let mut crew = Crew::new();
+    let shared = crew.shared();
+    let stop = Arc::new(AtomicBool::new(false));
+    let joiners: Vec<_> = (0..3)
+        .map(|i| {
+            let s = Arc::clone(&shared);
+            let st = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rejoins = 0u64;
+                while !st.load(Ordering::Acquire) {
+                    let quota = AtomicUsize::new(0);
+                    let st2 = Arc::clone(&st);
+                    let policy = if i % 2 == 0 {
+                        EntryPolicy::Immediate
+                    } else {
+                        EntryPolicy::JobBoundary
+                    };
+                    s.member_loop_while(policy, move || {
+                        quota.fetch_add(1, Ordering::Relaxed) < 400
+                            && !st2.load(Ordering::Acquire)
+                    });
+                    rejoins += 1;
+                }
+                rejoins
+            })
+        })
+        .collect();
+
+    for rep in 0..20 {
+        let mut c = Matrix::random(m, n, 3);
+        gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
+        for (x, y) in c.data().iter().zip(c_ref.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "rep {rep}");
+        }
+    }
+    stop.store(true, Ordering::Release);
+    crew.disband();
+    // (rejoin counts are timing-dependent; correctness above is the
+    // invariant under test)
+    let total_rejoins: u64 = joiners.into_iter().map(|j| j.join().unwrap()).sum();
+    let _ = total_rejoins;
+}
+
+/// A request cancelled between panel steps leaves an eagerly-updated
+/// trailing block: completing it with the unblocked reference (plus the
+/// tail's left swaps) must reproduce the full factorization exactly.
+#[test]
+fn cancelled_blocked_lu_is_resumable() {
+    let n = 64;
+    let a0 = Matrix::random(n, n, 9);
+    let mut f = a0.clone();
+    let cancel = AtomicBool::new(false);
+    let steps = AtomicUsize::new(0);
+    let checkpoint = |_k: usize| {
+        // Cancel after the second committed panel step.
+        if steps.fetch_add(1, Ordering::Relaxed) == 1 {
+            cancel.store(true, Ordering::Release);
+        }
+    };
+    let mut crew = Crew::new();
+    let ctl = BlockedCtl {
+        cancel: Some(&cancel),
+        tag: None,
+        on_checkpoint: Some(&checkpoint),
+    };
+    let out = lu_blocked_rl_ctl(&mut crew, &BlisParams::tiny(), f.view_mut(), 16, 4, &ctl);
+    assert!(out.cancelled);
+    assert_eq!(out.cols_done, 32);
+    assert_eq!(out.ipiv.len(), 32);
+
+    // Resume: factorize the trailing block, apply its swaps to the
+    // committed left columns, and splice the pivots.
+    let k = out.cols_done;
+    let mut ipiv = out.ipiv.clone();
+    let tail = lu_unblocked(f.view_mut().sub(k, k, n - k, n - k));
+    for (i, &p) in tail.iter().enumerate() {
+        if p != i {
+            f.view_mut().swap_rows(k + i, k + p, 0, k);
+        }
+    }
+    ipiv.extend(tail.iter().map(|p| p + k));
+    let r = naive::lu_residual(&a0, &f, &ipiv);
+    assert!(r < 1e-11, "resumed residual {r}");
+    let mut g = a0.clone();
+    assert_eq!(ipiv, naive::lu(g.view_mut()), "resumed pivots");
+}
+
+/// ET at the request level: cancelling one job must leave the server's
+/// pool fully reusable for later work.
+#[test]
+fn cancelled_request_leaves_server_reusable() {
+    let cfg = ServeConfig {
+        workers: 2,
+        bo: 16,
+        bi: 4,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    };
+    let server = LuServer::new(cfg);
+    let h = server.submit(LuRequest::new(Matrix::random(128, 128, 1)));
+    h.cancel();
+    let res = h.wait();
+    assert!(res.cancelled || res.cols_done == 128);
+    assert!(server.registry().is_empty());
+    for round in 0..2u64 {
+        let a0 = Matrix::random(48, 48, 10 + round);
+        let out = server.submit(LuRequest::new(a0.clone())).wait();
+        assert!(!out.cancelled);
+        let r = naive::lu_residual(&a0, &out.a, &out.ipiv);
+        assert!(r < 1e-11, "round {round}: residual {r}");
+    }
+    server.shutdown();
+}
+
+/// The acceptance-shaped workload: 8 mixed-size problems on a shared
+/// pool, every result numerically correct with reference pivots.
+#[test]
+fn batch_of_eight_mixed_sizes_all_correct() {
+    let cfg = ServeConfig {
+        workers: 3,
+        bo: 16,
+        bi: 4,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    };
+    let sizes = [32usize, 48, 24, 64, 40, 56, 16, 72];
+    let originals: Vec<Matrix> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Matrix::random(n, n, 40 + i as u64))
+        .collect();
+    let results = factorize_batch(originals.clone(), &cfg);
+    assert_eq!(results.len(), sizes.len());
+    for (res, a0) in results.iter().zip(&originals) {
+        assert!(!res.cancelled, "req{} cancelled", res.id);
+        assert_eq!(res.cols_done, a0.rows());
+        let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+        assert!(r < 1e-11, "req{}: residual {r}", res.id);
+        let mut g = a0.clone();
+        assert_eq!(res.ipiv, naive::lu(g.view_mut()), "req{} pivots", res.id);
+    }
+}
