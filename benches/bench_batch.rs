@@ -8,14 +8,24 @@
 //! while the batched scheduler overlaps problems so an idle worker
 //! always has a starved factorization to join.
 
+use malleable_lu::cli::Args;
 use malleable_lu::lu::{self, LuConfig, Variant};
 use malleable_lu::matrix::Matrix;
 use malleable_lu::pool::Pool;
 use malleable_lu::serve::{self, ServeConfig};
+use malleable_lu::util::json::Value;
 use malleable_lu::util::{gflops, lu_flops, timed};
 
 fn main() {
-    let sizes = [192usize, 256, 160, 288, 224, 320, 208, 256];
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_batch.json");
+    let sizes: Vec<usize> = if quick {
+        vec![96, 128, 80, 112]
+    } else {
+        vec![192, 256, 160, 288, 224, 320, 208, 256]
+    };
+    let reps = if quick { 1 } else { 3 };
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -39,7 +49,7 @@ fn main() {
         ..Default::default()
     };
     let mut batched = f64::INFINITY;
-    for _ in 0..3 {
+    for _ in 0..reps {
         let (secs, results) = timed(|| serve::factorize_batch(mats(), &cfg));
         assert_eq!(results.len(), sizes.len());
         assert!(results.iter().all(|r| !r.cancelled && r.cols_done == r.a.rows()));
@@ -56,7 +66,7 @@ fn main() {
         ..Default::default()
     };
     let mut seq = f64::INFINITY;
-    for _ in 0..3 {
+    for _ in 0..reps {
         let (secs, _) = timed(|| {
             for mut a in mats() {
                 let _ = lu::factorize(&mut a, &lcfg, Some(&pool));
@@ -73,12 +83,49 @@ fn main() {
     );
     println!("sequential: {seq:.3}s  {sg:.2} aggregate GFLOPS (full pool per problem)");
     println!("speedup   : {:.2}x (batched vs sequential)", seq / batched);
+
+    if out_path != "-" {
+        let doc = Value::obj([
+            ("bench", Value::Str("batch".into())),
+            ("quick", Value::Bool(quick)),
+            (
+                "shape",
+                Value::Arr(sizes.iter().map(|&n| Value::Num(n as f64)).collect()),
+            ),
+            ("threads", Value::Num(workers as f64)),
+            (
+                "records",
+                Value::Arr(vec![
+                    Value::obj([
+                        ("name", Value::Str("batched".into())),
+                        ("variant", Value::Str("serve".into())),
+                        ("gflops", Value::Num(bg)),
+                        ("secs", Value::Num(batched)),
+                    ]),
+                    Value::obj([
+                        ("name", Value::Str("sequential".into())),
+                        ("variant", Value::Str("full-pool".into())),
+                        ("gflops", Value::Num(sg)),
+                        ("secs", Value::Num(seq)),
+                    ]),
+                ]),
+            ),
+            ("speedup", Value::Num(seq / batched)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+
     // Regression floor: batched scheduling must never lose meaningfully
     // to sequential; on multi-core hosts it should win outright (the
-    // acceptance target of the serve layer).
-    assert!(
-        bg > 0.8 * sg,
-        "batched scheduling lost >20% vs sequential: {bg:.2} vs {sg:.2} GFLOPS"
-    );
+    // acceptance target of the serve layer). Quick mode (CI smoke on
+    // noisy shared runners, reps=1, tiny problems) asserts completion
+    // only — single-rep timing there is not a regression signal.
+    if !quick {
+        assert!(
+            bg > 0.8 * sg,
+            "batched scheduling lost >20% vs sequential: {bg:.2} vs {sg:.2} GFLOPS"
+        );
+    }
     println!("bench_batch OK");
 }

@@ -1,28 +1,98 @@
-//! Micro-benchmarks of the BLIS substrate: GEMM vs the naive triple
-//! loop, TRSM, LASWP and packing — the §Perf baseline numbers
-//! (EXPERIMENTS.md).
+//! Micro-benchmarks of the BLIS substrate: GEMM (SIMD vs portable vs the
+//! naive triple loop), TRSM, LASWP and packing — the §Perf baseline
+//! numbers, emitted both human-readable and as machine-readable
+//! `BENCH_blis.json` so the perf trajectory is tracked PR over PR.
+//!
+//! Usage: `cargo bench --bench bench_blis -- [--quick] [--out FILE]`
+//! (`--quick` shrinks sizes for CI smoke; `--out` defaults to
+//! `BENCH_blis.json`, `--out -` skips the file).
 
+use malleable_lu::blis::micro::{active_kernel_name, set_kernel, simd_available, Kernel};
 use malleable_lu::blis::pack::{pack_a, pack_b, PackedA, PackedB};
 use malleable_lu::blis::{gemm, laswp, trsm_llu, BlisParams};
+use malleable_lu::cli::Args;
 use malleable_lu::matrix::{naive, Matrix};
 use malleable_lu::pool::Crew;
+use malleable_lu::util::json::Value;
 use malleable_lu::util::stats::bench_seconds;
 use malleable_lu::util::{gemm_flops, gflops, trsm_flops};
 
-fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let n = if quick { 256 } else { 512 };
-    let params = BlisParams::default();
-    let mut crew = Crew::new();
+/// One measurement, printed and accumulated for the JSON report.
+struct Report {
+    records: Vec<Value>,
+}
 
-    // GEMM: blocked vs naive.
+impl Report {
+    fn push(&mut self, name: &str, shape: &[usize], threads: usize, variant: &str, gf: f64) {
+        self.records.push(Value::obj([
+            ("name", Value::Str(name.to_string())),
+            (
+                "shape",
+                Value::Arr(shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+            ),
+            ("threads", Value::Num(threads as f64)),
+            ("variant", Value::Str(variant.to_string())),
+            ("gflops", Value::Num(gf)),
+        ]));
+    }
+}
+
+fn bench_gemm_kernel(
+    report: &mut Report,
+    crew: &mut Crew,
+    params: &BlisParams,
+    n: usize,
+    kernel: Kernel,
+    label: &str,
+) -> f64 {
+    set_kernel(kernel);
     let a = Matrix::random(n, n, 1);
     let b = Matrix::random(n, n, 2);
     let mut c = Matrix::zeros(n, n);
     let st = bench_seconds(1, 3, || {
-        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+        gemm(crew, params, 1.0, a.view(), b.view(), c.view_mut());
     });
-    let blis_g = gflops(gemm_flops(n, n, n), st.median);
+    set_kernel(Kernel::Auto);
+    let gf = gflops(gemm_flops(n, n, n), st.median);
+    println!("gemm {n}^3 [{label}]: {gf:.2} GFLOPS");
+    report.push("gemm", &[n, n, n], 1, label, gf);
+    gf
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_blis.json");
+    let n = if quick { 256 } else { 512 };
+    let params = BlisParams::auto();
+    let mut crew = Crew::new();
+    let mut report = Report {
+        records: Vec::new(),
+    };
+    println!(
+        "bench_blis: params={params:?} kernel={} (simd available: {})",
+        active_kernel_name(),
+        simd_available()
+    );
+
+    // GEMM: SIMD (when available) vs portable vs naive.
+    let blis_g = bench_gemm_kernel(&mut report, &mut crew, &params, n, Kernel::Auto, "auto");
+    if simd_available() {
+        bench_gemm_kernel(
+            &mut report,
+            &mut crew,
+            &params,
+            n,
+            Kernel::Portable,
+            "portable",
+        );
+    }
+    // The acceptance shape: single-thread 1024^3 (skipped in quick mode).
+    if !quick {
+        bench_gemm_kernel(&mut report, &mut crew, &params, 1024, Kernel::Auto, "auto");
+    }
+    let a = Matrix::random(n, n, 1);
+    let b = Matrix::random(n, n, 2);
     let mut c2 = Matrix::zeros(n, n);
     let st_naive = bench_seconds(0, 1, || {
         naive::gemm(1.0, a.view(), b.view(), c2.view_mut());
@@ -32,8 +102,9 @@ fn main() {
         "gemm {n}^3: blis {blis_g:.2} GFLOPS vs naive {naive_g:.2} GFLOPS ({:.1}x)",
         blis_g / naive_g
     );
+    report.push("gemm_naive", &[n, n, n], 1, "naive", naive_g);
 
-    // GEPP shape (k = 128).
+    // GEPP shape (k = 128) — the LU trailing-update workload.
     let k = 128;
     let a = Matrix::random(n, k, 3);
     let b = Matrix::random(k, n, 4);
@@ -41,10 +112,21 @@ fn main() {
     let st = bench_seconds(1, 3, || {
         gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
     });
-    println!(
-        "gepp {n}x{n}x{k}: {:.2} GFLOPS",
-        gflops(gemm_flops(n, n, k), st.median)
-    );
+    let gepp_g = gflops(gemm_flops(n, n, k), st.median);
+    println!("gepp {n}x{n}x{k}: {gepp_g:.2} GFLOPS");
+    report.push("gepp", &[n, n, k], 1, "auto", gepp_g);
+
+    // Wide-and-short GEMM: the shape the Loop-5 chunking targets.
+    let (wm, wn, wk) = (8 * n, 24, 64);
+    let a = Matrix::random(wm, wk, 13);
+    let b = Matrix::random(wk, wn, 14);
+    let mut c = Matrix::zeros(wm, wn);
+    let st = bench_seconds(1, 3, || {
+        gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
+    });
+    let ws_g = gflops(gemm_flops(wm, wn, wk), st.median);
+    println!("gemm wide-short {wm}x{wn}x{wk}: {ws_g:.2} GFLOPS");
+    report.push("gemm_wide_short", &[wm, wn, wk], 1, "auto", ws_g);
 
     // TRSM.
     let l = Matrix::random(n, n, 5);
@@ -52,46 +134,57 @@ fn main() {
     let st = bench_seconds(1, 3, || {
         trsm_llu(&mut crew, &params, l.view(), x.view_mut());
     });
-    println!(
-        "trsm {n}x{n}: {:.2} GFLOPS",
-        gflops(trsm_flops(n, n), st.median)
-    );
+    let trsm_g = gflops(trsm_flops(n, n), st.median);
+    println!("trsm {n}x{n}: {trsm_g:.2} GFLOPS");
+    report.push("trsm", &[n, n], 1, "auto", trsm_g);
 
-    // LASWP bandwidth.
+    // LASWP bandwidth (column-strip blocked).
     let mut m = Matrix::random(n, n, 7);
     let ipiv: Vec<usize> = (0..n / 2).map(|i| n / 2 + i).collect();
     let st = bench_seconds(1, 5, || {
         laswp(&mut crew, m.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
     });
     let bytes = (ipiv.len() * n * 32) as f64;
-    println!(
-        "laswp {}swaps x {n}cols: {:.2} GB/s",
-        ipiv.len(),
-        bytes / st.median / 1e9
-    );
+    let laswp_gbs = bytes / st.median / 1e9;
+    println!("laswp {}swaps x {n}cols: {laswp_gbs:.2} GB/s", ipiv.len());
+    report.push("laswp_gbs", &[ipiv.len(), n], 1, "auto", laswp_gbs);
 
-    // Packing rates.
+    // Packing rates (arena-leased in the GEMM hot path; here we time the
+    // copy itself on pre-allocated buffers).
     let src = Matrix::random(params.mc, params.kc, 8);
     let mut pa = PackedA::with_capacity(params.mc, params.kc);
     let st = bench_seconds(2, 5, || {
         pack_a(&mut crew, src.view(), &mut pa);
     });
-    println!(
-        "pack_a {}x{}: {:.2} GB/s",
-        params.mc,
-        params.kc,
-        (params.mc * params.kc * 16) as f64 / st.median / 1e9
-    );
+    let packa_gbs = (params.mc * params.kc * 16) as f64 / st.median / 1e9;
+    println!("pack_a {}x{}: {packa_gbs:.2} GB/s", params.mc, params.kc);
+    report.push("pack_a_gbs", &[params.mc, params.kc], 1, "auto", packa_gbs);
     let srcb = Matrix::random(params.kc, 1024, 9);
     let mut pb = PackedB::with_capacity(params.kc, 1024);
     let st = bench_seconds(2, 5, || {
         pack_b(&mut crew, srcb.view(), &mut pb);
     });
-    println!(
-        "pack_b {}x1024: {:.2} GB/s",
-        params.kc,
-        (params.kc * 1024 * 16) as f64 / st.median / 1e9
-    );
+    let packb_gbs = (params.kc * 1024 * 16) as f64 / st.median / 1e9;
+    println!("pack_b {}x1024: {packb_gbs:.2} GB/s", params.kc);
+    report.push("pack_b_gbs", &[params.kc, 1024], 1, "auto", packb_gbs);
 
-    assert!(blis_g > naive_g, "blocked GEMM must beat the naive loop");
+    if out_path != "-" {
+        let doc = Value::obj([
+            ("bench", Value::Str("blis".into())),
+            ("quick", Value::Bool(quick)),
+            ("simd_available", Value::Bool(simd_available())),
+            ("records", Value::Arr(report.records)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+
+    // On FMA-less x86 the portable kernel pays a software fma() per
+    // multiply-accumulate to keep the cross-kernel bitwise contract
+    // (DESIGN.md §9) — no perf floor is claimed for such hosts.
+    if simd_available() {
+        assert!(blis_g > naive_g, "blocked GEMM must beat the naive loop");
+    } else {
+        println!("note: no AVX2+FMA — fused portable fallback; blis>naive floor not asserted");
+    }
 }

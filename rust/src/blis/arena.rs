@@ -1,0 +1,327 @@
+//! The crew-owned **packing arena** (DESIGN.md §9).
+//!
+//! The five-loop GEMM packs `A_c`/`B_c` into contiguous buffers on every
+//! call, and a blocked LU calls GEMM hundreds of times — before this
+//! arena existed each call paid a heap allocation (and a page-fault walk
+//! on first touch) for both buffers. The arena turns that into a lease:
+//!
+//! - every [`crate::pool::Crew`] carries an `Arc<PackArena>` (a fresh one
+//!   by default, or a shared one via [`crate::pool::Crew::with_arena`],
+//!   which the look-ahead and serve drivers use so that *all* crews of a
+//!   factorization — and all requests of a server — draw from one pool);
+//! - [`PackArena::lease`] hands out the smallest free buffer that fits,
+//!   allocating only when nothing fits; [`PackArena::give_back`] returns
+//!   it. Steady-state factorization therefore performs **zero** packed
+//!   buffer allocations after the first (largest) trailing update has
+//!   been packed once (proven by `tests/perf_invariants.rs`);
+//! - buffers are **64-byte aligned** (cache line / full AVX2 vector) and
+//!   **size-classed**: requested capacities are rounded up to 64 KiB
+//!   multiples so that the shrinking trailing updates of an LU re-use the
+//!   same few buffers instead of fragmenting into per-size allocations.
+//!
+//! Lease discipline (the rules the BLAS layer follows):
+//!
+//! 1. a lease is taken at kernel entry and returned before the kernel
+//!    returns — buffers never outlive the `gemm` call that leased them;
+//! 2. leases are per-thread-of-control: concurrent crews (the look-ahead
+//!    PF/RU branches, parallel serve leaders) may share one arena because
+//!    lease/give-back are `Mutex`-serialized and each branch holds its
+//!    own buffers;
+//! 3. a leased buffer's contents are unspecified — the packing routines
+//!    overwrite every element they later read (edges are zero-padded
+//!    explicitly), so no stale data can leak between problems.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Alignment of every arena buffer: one cache line, which is also two
+/// AVX2 `f64x4` vectors.
+pub const BUF_ALIGN: usize = 64;
+
+/// Size-class granule in elements (64 KiB of `f64`): lease requests are
+/// rounded up to a multiple of this, so nearby capacities share buffers.
+pub const CLASS_ELEMS: usize = 8 * 1024;
+
+/// A 64-byte-aligned heap buffer of `f64`, the unit the arena leases.
+///
+/// Deliberately *not* `Clone`: each buffer has exactly one holder (the
+/// arena free list or one kernel invocation).
+pub struct AlignedBuf {
+    ptr: NonNull<f64>,
+    len: usize,
+}
+
+// SAFETY: the buffer is an owned heap allocation of plain `f64`; sending
+// or sharing it moves/shares ordinary memory. Concurrent &mut access is
+// prevented by ownership, same as Vec<f64>.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Allocate a zero-initialized buffer of `len` elements, 64-byte
+    /// aligned. `len == 0` performs no allocation.
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return Self {
+                ptr: NonNull::dangling(),
+                len: 0,
+            };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0).
+        let raw = unsafe { alloc_zeroed(layout) } as *mut f64;
+        let Some(ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout);
+        };
+        Self { ptr, len }
+    }
+
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f64>(), BUF_ALIGN)
+            .expect("AlignedBuf layout overflow")
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_ptr(&self) -> *const f64 {
+        self.ptr.as_ptr()
+    }
+
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut f64 {
+        self.ptr.as_ptr()
+    }
+}
+
+impl std::ops::Deref for AlignedBuf {
+    type Target = [f64];
+    #[inline]
+    fn deref(&self) -> &[f64] {
+        // SAFETY: ptr/len describe our own allocation (or are dangling
+        // with len == 0, for which from_raw_parts is defined).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f64] {
+        // SAFETY: as Deref, plus &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len != 0 {
+            // SAFETY: allocated in `zeroed` with the identical layout.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf({} elems)", self.len)
+    }
+}
+
+/// Counters exposed for the zero-allocation steady-state test and for
+/// `mlu info`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers ever allocated (the number that must stop growing once a
+    /// factorization reaches steady state).
+    pub allocations: u64,
+    /// Leases served (allocating or not).
+    pub leases: u64,
+    /// Total bytes currently owned by the arena (free + leased).
+    pub bytes_allocated: usize,
+    /// Buffers currently parked on the free list.
+    pub free_buffers: usize,
+}
+
+/// A pool of size-classed [`AlignedBuf`]s (module docs above).
+#[derive(Default)]
+pub struct PackArena {
+    free: Mutex<Vec<AlignedBuf>>,
+    allocations: AtomicU64,
+    leases: AtomicU64,
+    bytes_allocated: AtomicUsize,
+}
+
+impl PackArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Smallest size class holding at least `elems` elements.
+    pub fn class_of(elems: usize) -> usize {
+        elems.div_ceil(CLASS_ELEMS).max(1) * CLASS_ELEMS
+    }
+
+    /// Lease a buffer of at least `min_elems` elements: the smallest free
+    /// buffer that fits, or a freshly allocated one of `class_of(min_elems)`
+    /// elements when nothing fits.
+    pub fn lease(&self, min_elems: usize) -> AlignedBuf {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut free = self.free.lock().unwrap();
+            let best = free
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.len() >= min_elems)
+                .min_by_key(|(_, b)| b.len())
+                .map(|(i, _)| i);
+            if let Some(i) = best {
+                return free.swap_remove(i);
+            }
+        }
+        let class = Self::class_of(min_elems);
+        self.allocations.fetch_add(1, Ordering::Relaxed);
+        self.bytes_allocated
+            .fetch_add(class * std::mem::size_of::<f64>(), Ordering::Relaxed);
+        AlignedBuf::zeroed(class)
+    }
+
+    /// Return a leased buffer to the free list. Foreign buffers (built
+    /// with [`AlignedBuf::zeroed`] directly) are adopted, which is why
+    /// `bytes_allocated` only ever counts arena-made allocations.
+    pub fn give_back(&self, buf: AlignedBuf) {
+        if buf.is_empty() {
+            return;
+        }
+        self.free.lock().unwrap().push(buf);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            allocations: self.allocations.load(Ordering::Relaxed),
+            leases: self.leases.load(Ordering::Relaxed),
+            bytes_allocated: self.bytes_allocated.load(Ordering::Relaxed),
+            free_buffers: self.free.lock().unwrap().len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_cache_aligned_and_zeroed() {
+        let b = AlignedBuf::zeroed(1000);
+        assert_eq!(b.as_ptr() as usize % BUF_ALIGN, 0);
+        assert_eq!(b.len(), 1000);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_buffer_is_fine() {
+        let mut b = AlignedBuf::zeroed(0);
+        assert!(b.is_empty());
+        assert_eq!(&b[..], &[] as &[f64]);
+        assert_eq!(&mut b[..], &mut [] as &mut [f64]);
+    }
+
+    #[test]
+    fn writes_persist_through_deref() {
+        let mut b = AlignedBuf::zeroed(16);
+        b[3] = 2.5;
+        b[15] = -1.0;
+        assert_eq!(b[3], 2.5);
+        assert_eq!(b[15], -1.0);
+    }
+
+    #[test]
+    fn size_classes_round_up() {
+        assert_eq!(PackArena::class_of(1), CLASS_ELEMS);
+        assert_eq!(PackArena::class_of(CLASS_ELEMS), CLASS_ELEMS);
+        assert_eq!(PackArena::class_of(CLASS_ELEMS + 1), 2 * CLASS_ELEMS);
+        assert_eq!(PackArena::class_of(0), CLASS_ELEMS);
+    }
+
+    #[test]
+    fn lease_reuses_returned_buffers() {
+        let arena = PackArena::new();
+        let b1 = arena.lease(100);
+        let cap = b1.len();
+        arena.give_back(b1);
+        // Same class, and anything smaller, re-uses the same buffer.
+        for req in [100usize, 50, cap] {
+            let b = arena.lease(req);
+            assert_eq!(b.len(), cap, "req={req}");
+            arena.give_back(b);
+        }
+        let s = arena.stats();
+        assert_eq!(s.allocations, 1, "only the first lease allocates");
+        assert_eq!(s.leases, 4);
+        assert_eq!(s.free_buffers, 1);
+    }
+
+    #[test]
+    fn lease_picks_smallest_fitting_buffer() {
+        let arena = PackArena::new();
+        let small = arena.lease(1); // 1 class
+        let big = arena.lease(3 * CLASS_ELEMS); // 3 classes
+        let (small_len, big_len) = (small.len(), big.len());
+        assert!(big_len > small_len);
+        arena.give_back(big);
+        arena.give_back(small);
+        // A small request must take the small buffer, not waste the big one.
+        let got = arena.lease(10);
+        assert_eq!(got.len(), small_len);
+        // The next big request still finds the big one.
+        let got2 = arena.lease(2 * CLASS_ELEMS);
+        assert_eq!(got2.len(), big_len);
+        arena.give_back(got);
+        arena.give_back(got2);
+        assert_eq!(arena.stats().allocations, 2);
+    }
+
+    #[test]
+    fn oversized_request_allocates_anew() {
+        let arena = PackArena::new();
+        let b = arena.lease(100);
+        arena.give_back(b);
+        let big = arena.lease(10 * CLASS_ELEMS);
+        assert!(big.len() >= 10 * CLASS_ELEMS);
+        assert_eq!(arena.stats().allocations, 2);
+        arena.give_back(big);
+    }
+
+    #[test]
+    fn concurrent_leases_are_distinct_buffers() {
+        use std::sync::Arc;
+        let arena = Arc::new(PackArena::new());
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let a = Arc::clone(&arena);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let mut b = a.lease(256);
+                        b[0] = t as f64;
+                        assert_eq!(b[0], t as f64);
+                        a.give_back(b);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = arena.stats();
+        assert_eq!(s.leases, 200);
+        // At most one buffer per concurrently live lease.
+        assert!(s.allocations <= 4, "allocations={}", s.allocations);
+    }
+}

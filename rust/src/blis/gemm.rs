@@ -6,11 +6,20 @@
 //! re-read at each `i_c` boundary: this is where threads freed from the
 //! panel factorization merge into an in-flight update (Worker Sharing).
 //!
-//! Within a macro-kernel job, one chunk = one `NR`-column micro-panel of
-//! `B_c` (Loop 4 is what gets parallelized, matching the paper's BLIS
-//! configuration: "BDP parallelism is extracted only from Loop 4"),
-//! self-scheduled so the split adapts to however many workers are
-//! present.
+//! Within a macro-kernel job, a chunk is one `NR`-column micro-panel of
+//! `B_c` (Loop 4, the paper's BLIS configuration) — *subdivided along
+//! Loop 5's `i_r` direction whenever Loop 4 alone cannot feed the team*:
+//! a wide-and-short trailing update (the shape the look-ahead driver
+//! produces once the panel narrows) would otherwise publish fewer chunks
+//! than there are workers. Chunks are disjoint `C` tiles and each tile's
+//! `k`-reduction stays sequential inside one chunk, so the subdivision
+//! cannot perturb the bits. Self-scheduling still adapts the split to
+//! however many workers are present, and the WS join point stays at the
+//! Loop-3 (`i_c`) job boundary.
+//!
+//! Packed `A_c`/`B_c` buffers are leased from the crew's
+//! [`super::arena::PackArena`] (and returned before `gemm` exits), so the
+//! steady-state factorization stream performs no heap allocation here.
 
 use super::micro::micro_kernel;
 use super::pack::{pack_a, pack_b, PackedA, PackedB};
@@ -35,15 +44,18 @@ pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatR
 
     // Size the packed buffers to the *actual* problem (bounded by the
     // cache-block capacities): a small GEMM must not pay for an
-    // nc=4096-column buffer it never uses (§Perf).
-    let mut pa = PackedA::with_capacity(
+    // nc=4096-column buffer it never uses (§Perf). The buffers are
+    // leased from the crew's arena — zero allocations in steady state —
+    // and handed back below before returning.
+    let arena = std::sync::Arc::clone(crew.arena());
+    let mut pa = PackedA::from_buf(arena.lease(PackedA::required_elems(
         params.mc.min(crate::util::round_up(m, MR)),
         params.kc.min(k),
-    );
-    let mut pb = PackedB::with_capacity(
+    )));
+    let mut pb = PackedB::from_buf(arena.lease(PackedB::required_elems(
         params.kc.min(k),
         params.nc.min(crate::util::round_up(n, NR)),
-    );
+    )));
 
     // Loop 1: columns of C/B in blocks of n_c.
     let mut jc = 0;
@@ -79,10 +91,14 @@ pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatR
         }
         jc += nc_eff;
     }
+
+    arena.give_back(pa.into_buf());
+    arena.give_back(pb.into_buf());
 }
 
 /// Loops 4+5: sweep the packed `B_c` micro-panels (Loop 4, parallelized)
-/// against all packed `A_c` micro-panels (Loop 5, sequential per chunk).
+/// against the packed `A_c` micro-panels (Loop 5, split into blocks when
+/// Loop 4 alone has fewer chunks than the team wants — see module docs).
 fn macro_kernel(crew: &mut Crew, alpha: f64, pa: &PackedA, pb: &PackedB, c: MatMut) {
     let (m, n) = (c.rows(), c.cols());
     debug_assert_eq!(pa.m, m);
@@ -92,12 +108,26 @@ fn macro_kernel(crew: &mut Crew, alpha: f64, pa: &PackedA, pb: &PackedB, c: MatM
     let n_jr = pb.n_panels();
     let n_ir = pa.n_panels();
 
-    crew.parallel(n_jr, |jr| {
+    // Oversplit to ~4 chunks per current worker so self-scheduling can
+    // absorb mid-job joiners; only subdivide Loop 5 when Loop 4 is too
+    // narrow, and never below one micro-panel row per chunk.
+    let target = 4 * (crew.members() + 1);
+    let ir_splits = if n_jr >= target {
+        1
+    } else {
+        target.div_ceil(n_jr).min(n_ir)
+    };
+    let ir_block = n_ir.div_ceil(ir_splits);
+    let n_ib = n_ir.div_ceil(ir_block);
+
+    crew.parallel(n_jr * n_ib, |chunk| {
+        let jr = chunk / n_ib;
+        let ib = chunk % n_ib;
         let j0 = jr * NR;
         let n_eff = NR.min(n - j0);
         let b_panel = pb.panel(jr);
-        // Loop 5 over the rows of the macro-block.
-        for ir in 0..n_ir {
+        // Loop 5 over this chunk's block of macro-block rows.
+        for ir in ib * ir_block..((ib + 1) * ir_block).min(n_ir) {
             let i0 = ir * MR;
             let m_eff = MR.min(m - i0);
             micro_kernel(
@@ -247,6 +277,67 @@ mod tests {
 
         assert_eq!(c1.data().len(), c2.data().len());
         for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bitwise mismatch");
+        }
+    }
+
+    #[test]
+    fn wide_and_short_shapes_use_loop5_splitting() {
+        // Shapes where Loop 4 alone yields fewer chunks than the team
+        // wants (n_jr small, n_ir large) — the look-ahead trailing-update
+        // shape this PR's macro-kernel chunking exists for.
+        let params = BlisParams::default();
+        for &(m, n, k) in &[(300usize, 5usize, 40usize), (257, NR, 13), (512, 1, 7)] {
+            check(m, n, k, -1.0, &params, (m + n + k) as u64);
+        }
+    }
+
+    #[test]
+    fn steady_state_gemm_leases_do_not_allocate() {
+        // Two identical GEMMs on one crew: the second must be served
+        // entirely from the arena free list.
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::random(60, 30, 1);
+        let b = Matrix::random(30, 50, 2);
+        let mut c = Matrix::zeros(60, 50);
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+        let after_first = crew.arena().stats();
+        assert!(after_first.allocations >= 2, "A and B buffers were leased");
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+        let after_second = crew.arena().stats();
+        assert_eq!(
+            after_first.allocations, after_second.allocations,
+            "warm gemm allocated"
+        );
+        assert_eq!(after_second.free_buffers, after_first.free_buffers);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_and_portable_gemm_are_bitwise_identical() {
+        use crate::blis::micro::{set_kernel, simd_available, Kernel};
+        if !simd_available() {
+            eprintln!("skipping: host has no AVX2+FMA");
+            return;
+        }
+        let _g = crate::blis::micro::KERNEL_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let a = Matrix::random(67, 45, 31);
+        let b = Matrix::random(45, 53, 32);
+        let params = BlisParams::tiny();
+        let run = |kernel: Kernel| {
+            set_kernel(kernel);
+            let mut c = Matrix::random(67, 53, 33);
+            let mut crew = Crew::new();
+            gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
+            set_kernel(Kernel::Auto);
+            c
+        };
+        let c_simd = run(Kernel::Simd);
+        let c_port = run(Kernel::Portable);
+        for (x, y) in c_simd.data().iter().zip(c_port.data()) {
             assert_eq!(x.to_bits(), y.to_bits(), "bitwise mismatch");
         }
     }

@@ -4,13 +4,47 @@
 //! visibly expensive in the traces (Fig. 5), but embarrassingly parallel
 //! over columns: "its execution time can be expected to decrease linearly
 //! with the number of cores". Our implementation splits the column range
-//! into crew chunks; each chunk applies the whole pivot sequence to its
-//! columns (the swaps are ordered in the row dimension, which is not
-//! split, so parallelism over columns is exact).
+//! into fixed-width strips of [`COL_STRIP`] columns, one crew chunk per
+//! strip; each strip applies the *whole* pivot sequence before the next
+//! strip is touched (the swaps are ordered in the row dimension, which is
+//! not split, so parallelism over columns is exact).
+//!
+//! The strip blocking is a cache fix, not just a parallelization choice:
+//! applying one swap across the full width of a wide trailing matrix
+//! streams `2·n` cache lines per pivot and evicts everything before the
+//! next pivot re-walks the same rows. Within a narrow strip, successive
+//! pivots hit rows that are column-major-adjacent (the panel's row block),
+//! so the strip's working set stays resident across the entire pivot
+//! sequence.
 
 use crate::matrix::MatMut;
 use crate::pool::Crew;
 use crate::trace::{span, Kind};
+
+/// Columns per swap strip: a few micro-panels wide — small enough that
+/// `b_o` pivot rows × strip stays cache-resident, large enough to
+/// amortize the per-strip pivot-sequence walk.
+pub const COL_STRIP: usize = 32;
+
+/// Run `f(lo, hi)` over each [`COL_STRIP`]-column strip of `jlo..jhi`,
+/// one crew chunk per strip — the chunking shared by [`laswp`] and the
+/// look-ahead driver's base-relative swap variant.
+pub fn for_each_col_strip(
+    crew: &mut Crew,
+    jlo: usize,
+    jhi: usize,
+    f: impl Fn(usize, usize) + Sync,
+) {
+    if jlo >= jhi {
+        return;
+    }
+    let n_strips = (jhi - jlo).div_ceil(COL_STRIP);
+    crew.parallel(n_strips, |s| {
+        let lo = jlo + s * COL_STRIP;
+        let hi = (lo + COL_STRIP).min(jhi);
+        f(lo, hi);
+    });
+}
 
 /// Apply pivots `ipiv[k0..k1]` to `a`: for `k` in `k0..k1` (in order),
 /// swap rows `k` and `ipiv[k]`. Pivot indices are absolute row indices of
@@ -31,11 +65,11 @@ pub fn laswp(
         return;
     }
     span(Kind::Swap, "laswp", || {
-        crew.parallel_ranges(jhi - jlo, 16, |cols| {
+        for_each_col_strip(crew, jlo, jhi, |lo, hi| {
             for k in k0..k1 {
                 let p = ipiv[k];
                 if p != k {
-                    a.swap_rows(k, p, jlo + cols.start, jlo + cols.end);
+                    a.swap_rows(k, p, lo, hi);
                 }
             }
         });
@@ -131,6 +165,40 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn strip_boundaries_cover_every_column() {
+        // Widths around the strip size, including ragged last strips and
+        // a jlo offset that is not strip-aligned.
+        let m = 40;
+        let mut rng = crate::util::Prng::new(9);
+        let ipiv: Vec<usize> = (0..m / 2).map(|k| rng.range(k, m - 1)).collect();
+        for w in [
+            COL_STRIP - 1,
+            COL_STRIP,
+            COL_STRIP + 1,
+            3 * COL_STRIP + 7,
+            1,
+        ] {
+            let n = w + 5;
+            let a0 = Matrix::random(m, n, w as u64);
+            let mut a = a0.clone();
+            let mut crew = Crew::new();
+            laswp(&mut crew, a.view_mut(), &ipiv, 0, ipiv.len(), 3, 3 + w);
+            let mut r = a0.clone();
+            naive::apply_pivots(r.view_mut(), &ipiv);
+            for j in 0..n {
+                for i in 0..m {
+                    let want = if (3..3 + w).contains(&j) {
+                        r[(i, j)]
+                    } else {
+                        a0[(i, j)]
+                    };
+                    assert_eq!(a[(i, j)], want, "w={w} ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

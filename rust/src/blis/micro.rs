@@ -1,10 +1,26 @@
 //! The register-blocked micro-kernel (paper Fig. 1, Loop 5 body).
 //!
 //! Computes `C(0..MR, 0..NR) += Σ_p a_panel(:,p) · b_panel(p,:)` over the
-//! packed micro-panels produced by [`super::pack`]. The accumulator lives
-//! in a fixed-size local array so LLVM keeps it in registers and
-//! vectorizes the `MR × NR` rank-1 updates (with `-C target-cpu=native`
-//! this compiles to FMA on AVX2 hosts).
+//! packed micro-panels produced by [`super::pack`]. Two implementations
+//! share one contract (the **SIMD dispatch contract**, DESIGN.md §9):
+//!
+//! - [`micro_kernel_avx2`] — explicit AVX2+FMA `std::arch` kernel holding
+//!   the full `MR × NR = 8 × 6` accumulator in twelve `__m256d`
+//!   registers, one `vfmadd` rank-1 update per `p`;
+//! - [`micro_kernel_portable`] — scalar fallback performing the *same*
+//!   reduction in the same order, with `f64::mul_add` as the
+//!   multiply-accumulate.
+//!
+//! Both perform, per output element, the identical chain of IEEE-754
+//! correctly-rounded fused multiply-adds followed by one `alpha·acc`
+//! multiply and one add at store time — so their results are **bitwise
+//! identical**, and the repo-wide determinism invariant (DESIGN.md §8)
+//! extends across kernels: a factorization gives the same bits whether
+//! it ran SIMD, portable, or a mix.
+//!
+//! [`micro_kernel`] dispatches at runtime: AVX2+FMA when the CPU has it
+//! (detected once, cached), portable otherwise; [`set_kernel`] forces a
+//! choice (benchmarking, tests, `mlu --kernel`).
 //!
 //! Edge tiles (fewer than `MR` rows / `NR` columns of real `C`) use the
 //! same full-size computation — the packed operands are zero-padded — and
@@ -12,10 +28,79 @@
 
 use super::params::{MR, NR};
 use crate::matrix::MatMut;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Micro-kernel selection (see [`set_kernel`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Runtime feature detection (the default): SIMD where available.
+    Auto,
+    /// Force the scalar fallback.
+    Portable,
+    /// Prefer SIMD; silently degrades to portable on CPUs without
+    /// AVX2+FMA (the results are bitwise identical either way).
+    Simd,
+}
+
+/// 0 = Auto, 1 = Portable, 2 = Simd.
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Serializes tests that flip [`set_kernel`] and then assert on the
+/// dispatch state (the override is process-global; without the lock a
+/// concurrent test could flip it between set and assert). Flipping the
+/// kernel mid-computation is *correct* — the kernels are bitwise
+/// identical — so only the asserting tests need this.
+#[cfg(test)]
+pub(crate) static KERNEL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Force a micro-kernel choice process-wide (benches, bitwise tests,
+/// `mlu --kernel portable`). Safe to flip at any time: both kernels
+/// produce identical bits, so in-flight work is unaffected.
+pub fn set_kernel(k: Kernel) {
+    let v = match k {
+        Kernel::Auto => 0,
+        Kernel::Portable => 1,
+        Kernel::Simd => 2,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Is the AVX2+FMA kernel available on this host?
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static CACHE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *CACHE.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Name of the kernel [`micro_kernel`] will dispatch to right now.
+pub fn active_kernel_name() -> &'static str {
+    if use_simd() {
+        "avx2+fma"
+    } else {
+        "portable"
+    }
+}
+
+#[inline]
+fn use_simd() -> bool {
+    match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        _ => simd_available(),
+    }
+}
 
 /// `C_tile += alpha * A_panel · B_panel`, where `a_panel`/`b_panel` are
 /// `k`-deep packed micro-panels and the live tile is `m_eff × n_eff`
-/// (`≤ MR × NR`) at `c`'s origin.
+/// (`≤ MR × NR`) at `c`'s origin. Dispatches per the module docs.
 #[inline]
 pub fn micro_kernel(
     k: usize,
@@ -30,6 +115,37 @@ pub fn micro_kernel(
     debug_assert!(b_panel.len() >= k * NR);
     debug_assert!(m_eff <= MR && n_eff <= NR);
 
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: AVX2+FMA presence was verified by `use_simd`.
+        unsafe { micro_kernel_avx2(k, alpha, a_panel, b_panel, c, m_eff, n_eff) };
+        return;
+    }
+    micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
+}
+
+/// Masked store for edge tiles (shared by both kernels so the rounding
+/// of the `alpha`-scaling is identical: one multiply, one add).
+#[inline]
+fn store_edge(alpha: f64, acc: &[f64; MR * NR], c: MatMut, m_eff: usize, n_eff: usize) {
+    for j in 0..n_eff {
+        for i in 0..m_eff {
+            c.update(i, j, |x| x + alpha * acc[j * MR + i]);
+        }
+    }
+}
+
+/// Scalar reference kernel: one correctly-rounded `mul_add` per
+/// multiply-accumulate (the contract the SIMD kernel reproduces).
+pub fn micro_kernel_portable(
+    k: usize,
+    alpha: f64,
+    a_panel: &[f64],
+    b_panel: &[f64],
+    c: MatMut,
+    m_eff: usize,
+    n_eff: usize,
+) {
     let mut acc = [0.0f64; MR * NR];
     // The hot loop: one rank-1 update of the register block per p.
     for p in 0..k {
@@ -38,7 +154,7 @@ pub fn micro_kernel(
         for j in 0..NR {
             let bj = b[j];
             for i in 0..MR {
-                acc[j * MR + i] += a[i] * bj;
+                acc[j * MR + i] = a[i].mul_add(bj, acc[j * MR + i]);
             }
         }
     }
@@ -52,11 +168,70 @@ pub fn micro_kernel(
             }
         }
     } else {
-        for j in 0..n_eff {
-            for i in 0..m_eff {
-                c.update(i, j, |x| x + alpha * acc[j * MR + i]);
-            }
+        store_edge(alpha, &acc, c, m_eff, n_eff);
+    }
+}
+
+// The AVX2 kernel hardcodes the 8×6 register block (two f64x4 vectors
+// per column, twelve accumulators + two A vectors + one B broadcast =
+// fifteen of the sixteen ymm registers).
+#[cfg(target_arch = "x86_64")]
+const _: () = assert!(MR == 8 && NR == 6, "micro_kernel_avx2 assumes MR=8, NR=6");
+
+/// AVX2+FMA micro-kernel.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (`simd_available()`), and the
+/// packed panels must hold at least `k` full micro-panels (zero-padded
+/// at the edges) exactly as [`micro_kernel`]'s debug assertions state.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn micro_kernel_avx2(
+    k: usize,
+    alpha: f64,
+    a_panel: &[f64],
+    b_panel: &[f64],
+    c: MatMut,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    use std::arch::x86_64::*;
+
+    let mut acc = [[_mm256_setzero_pd(); 2]; NR];
+    let mut ap = a_panel.as_ptr();
+    let mut bp = b_panel.as_ptr();
+    for _ in 0..k {
+        let a0 = _mm256_loadu_pd(ap);
+        let a1 = _mm256_loadu_pd(ap.add(4));
+        for (j, acc_j) in acc.iter_mut().enumerate() {
+            let bj = _mm256_set1_pd(*bp.add(j));
+            acc_j[0] = _mm256_fmadd_pd(a0, bj, acc_j[0]);
+            acc_j[1] = _mm256_fmadd_pd(a1, bj, acc_j[1]);
         }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+
+    if m_eff == MR && n_eff == NR {
+        // Full tile: vector store. mul + add (not fmadd) to match the
+        // portable store's two-rounding `c + alpha*v` exactly.
+        let av = _mm256_set1_pd(alpha);
+        for (j, acc_j) in acc.iter().enumerate() {
+            let colp = c.col_ptr(j);
+            let c0 = _mm256_loadu_pd(colp);
+            let c1 = _mm256_loadu_pd(colp.add(4));
+            _mm256_storeu_pd(colp, _mm256_add_pd(c0, _mm256_mul_pd(av, acc_j[0])));
+            _mm256_storeu_pd(colp.add(4), _mm256_add_pd(c1, _mm256_mul_pd(av, acc_j[1])));
+        }
+    } else {
+        // Edge tile: spill the accumulator and reuse the scalar masked
+        // store (identical rounding by construction).
+        let mut tmp = [0.0f64; MR * NR];
+        for (j, acc_j) in acc.iter().enumerate() {
+            _mm256_storeu_pd(tmp.as_mut_ptr().add(j * MR), acc_j[0]);
+            _mm256_storeu_pd(tmp.as_mut_ptr().add(j * MR + 4), acc_j[1]);
+        }
+        store_edge(alpha, &tmp, c, m_eff, n_eff);
     }
 }
 
@@ -66,7 +241,7 @@ mod tests {
     use crate::matrix::{naive, Matrix};
 
     fn pack_cols(a: &Matrix) -> Vec<f64> {
-        // pack a (MR x k) into column-major-by-p layout
+        // pack a (m x k, m <= MR) into column-major-by-p layout, zero-padded
         let k = a.cols();
         let mut v = vec![0.0; k * MR];
         for p in 0..k {
@@ -112,25 +287,11 @@ mod tests {
         let mut big = Matrix::from_fn(MR + 2, NR + 2, |_, _| -7.0);
         let mut big_ref = big.clone();
 
-        // zero-padded packs
-        let mut ap = vec![0.0; k * MR];
-        for p in 0..k {
-            for i in 0..m_eff {
-                ap[p * MR + i] = a[(i, p)];
-            }
-        }
-        let mut bp = vec![0.0; k * NR];
-        for p in 0..k {
-            for j in 0..n_eff {
-                bp[p * NR + j] = b[(p, j)];
-            }
-        }
-
         micro_kernel(
             k,
             2.0,
-            &ap,
-            &bp,
+            &pack_cols(&a),
+            &pack_rows(&b),
             big.view_mut().sub(1, 1, m_eff, n_eff),
             m_eff,
             n_eff,
@@ -168,6 +329,140 @@ mod tests {
             for i in 0..MR {
                 assert!((c2[(i, j)] + 2.5 * c1[(i, j)]).abs() < 1e-12);
             }
+        }
+    }
+
+    /// Run one kernel flavor on an edge tile embedded in a sentinel
+    /// matrix; checks the live region against naive and the fringe for
+    /// pollution. `which`: 0 = dispatch, 1 = portable, 2 = avx2.
+    fn check_edge_tile(m_eff: usize, n_eff: usize, k: usize, which: u8) {
+        let seed = (m_eff * 1000 + n_eff * 10 + k) as u64;
+        let a = Matrix::random(m_eff, k, seed);
+        let b = Matrix::random(k, n_eff, seed + 1);
+        let mut big = Matrix::from_fn(MR + 3, NR + 3, |i, j| (i * 31 + j) as f64 * 0.25 - 3.0);
+        let mut big_ref = big.clone();
+        let tile = big.view_mut().sub(2, 1, m_eff, n_eff);
+        let (ap, bp) = (pack_cols(&a), pack_rows(&b));
+        match which {
+            1 => micro_kernel_portable(k, -1.0, &ap, &bp, tile, m_eff, n_eff),
+            #[cfg(target_arch = "x86_64")]
+            2 => unsafe { micro_kernel_avx2(k, -1.0, &ap, &bp, tile, m_eff, n_eff) },
+            _ => micro_kernel(k, -1.0, &ap, &bp, tile, m_eff, n_eff),
+        }
+        naive::gemm(
+            -1.0,
+            a.view(),
+            b.view(),
+            big_ref.view_mut().sub(2, 1, m_eff, n_eff),
+        );
+        let d = big.max_abs_diff(&big_ref);
+        assert!(
+            d < 1e-12,
+            "which={which} m_eff={m_eff} n_eff={n_eff} k={k}: diff {d}"
+        );
+    }
+
+    #[test]
+    fn exhaustive_edge_tile_sweep_portable() {
+        for m_eff in 1..=MR {
+            for n_eff in 1..=NR {
+                for k in [1usize, 2, 7] {
+                    check_edge_tile(m_eff, n_eff, k, 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_edge_tile_sweep_dispatch() {
+        for m_eff in 1..=MR {
+            for n_eff in 1..=NR {
+                for k in [1usize, 3, 9] {
+                    check_edge_tile(m_eff, n_eff, k, 0);
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn exhaustive_edge_tile_sweep_avx2() {
+        if !simd_available() {
+            eprintln!("skipping: host has no AVX2+FMA");
+            return;
+        }
+        for m_eff in 1..=MR {
+            for n_eff in 1..=NR {
+                for k in [1usize, 4, 11] {
+                    check_edge_tile(m_eff, n_eff, k, 2);
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_and_portable_are_bitwise_identical() {
+        if !simd_available() {
+            eprintln!("skipping: host has no AVX2+FMA");
+            return;
+        }
+        for (m_eff, n_eff, k, alpha) in [
+            (MR, NR, 64, 1.0),
+            (MR, NR, 1, -1.0),
+            (MR - 1, NR, 33, -1.0),
+            (MR, NR - 2, 17, 0.5),
+            (3, 2, 25, -2.5),
+            (1, 1, 9, 1.0),
+        ] {
+            let seed = (m_eff * 100 + n_eff * 10 + k) as u64;
+            let a = Matrix::random(m_eff, k, seed);
+            let b = Matrix::random(k, n_eff, seed + 1);
+            let c0 = Matrix::random(MR, NR, seed + 2);
+            let (ap, bp) = (pack_cols(&a), pack_rows(&b));
+
+            let mut c_simd = c0.clone();
+            unsafe {
+                micro_kernel_avx2(
+                    k,
+                    alpha,
+                    &ap,
+                    &bp,
+                    c_simd.view_mut().sub(0, 0, m_eff, n_eff),
+                    m_eff,
+                    n_eff,
+                )
+            };
+            let mut c_port = c0.clone();
+            micro_kernel_portable(
+                k,
+                alpha,
+                &ap,
+                &bp,
+                c_port.view_mut().sub(0, 0, m_eff, n_eff),
+                m_eff,
+                n_eff,
+            );
+            for (x, y) in c_simd.data().iter().zip(c_port.data()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "bitwise mismatch at m_eff={m_eff} n_eff={n_eff} k={k} alpha={alpha}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_override_controls_dispatch() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_kernel(Kernel::Portable);
+        assert_eq!(active_kernel_name(), "portable");
+        set_kernel(Kernel::Auto);
+        if simd_available() {
+            assert_eq!(active_kernel_name(), "avx2+fma");
+        } else {
+            assert_eq!(active_kernel_name(), "portable");
         }
     }
 }

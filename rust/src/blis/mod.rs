@@ -21,8 +21,16 @@
 //! Determinism invariant: the `k` dimension is never split across
 //! workers (Loop 2 and the micro-kernel's `p` loop are sequential), so
 //! results are **bitwise identical** for any crew size and any join
-//! timing — malleability cannot perturb numerics (tested).
+//! timing — malleability cannot perturb numerics (tested). Since PR 2
+//! the invariant also spans kernel implementations: the AVX2+FMA and
+//! portable micro-kernels share one fused-multiply-add reduction
+//! contract ([`micro`]), packed buffers come from a crew-owned arena
+//! ([`arena`]) so the steady-state BLAS allocates nothing, the
+//! macro-kernel subdivides Loop 5 when Loop 4 is too narrow to feed the
+//! team ([`gemm`]), and the blocking parameters are derived from the
+//! host cache topology ([`params`]).
 
+pub mod arena;
 pub mod gemm;
 pub mod laswp;
 pub mod micro;
@@ -31,7 +39,9 @@ pub mod params;
 pub mod small;
 pub mod trsm;
 
+pub use arena::{AlignedBuf, ArenaStats, PackArena};
 pub use gemm::gemm;
 pub use laswp::laswp;
-pub use params::BlisParams;
+pub use micro::{set_kernel, Kernel};
+pub use params::{BlisParams, CacheInfo};
 pub use trsm::trsm_llu;

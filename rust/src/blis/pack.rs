@@ -15,26 +15,46 @@
 //!
 //! Packing is itself parallel (paper §2: "all t threads collaborate to
 //! copy and re-organize"): each micro-panel is one crew chunk.
+//!
+//! Since PR 2 the buffers are 64-byte-aligned [`AlignedBuf`]s leased from
+//! the crew's packing arena (see [`super::arena`]) rather than fresh
+//! `Vec`s, so the steady-state GEMM stream allocates nothing.
 
+use super::arena::AlignedBuf;
 use super::params::{MR, NR};
 use crate::matrix::MatRef;
 use crate::pool::Crew;
 
 /// Packed buffer for `A_c`: `ceil(m/MR)` micro-panels of `MR × k` each.
+/// Backed by a 64-byte-aligned [`AlignedBuf`], usually leased from the
+/// crew's [`super::arena::PackArena`] (see [`PackedA::from_buf`]).
 pub struct PackedA {
-    pub buf: Vec<f64>,
+    pub buf: AlignedBuf,
     pub m: usize,
     pub k: usize,
 }
 
 impl PackedA {
-    /// Allocate for up to `mc × kc`.
+    /// Elements needed to pack an `mc × kc` block.
+    pub fn required_elems(mc: usize, kc: usize) -> usize {
+        mc.div_ceil(MR) * MR * kc
+    }
+
+    /// Allocate a private buffer for up to `mc × kc` (benches/tests; the
+    /// GEMM hot path leases from the arena instead).
     pub fn with_capacity(mc: usize, kc: usize) -> Self {
-        Self {
-            buf: vec![0.0; mc.div_ceil(MR) * MR * kc],
-            m: 0,
-            k: 0,
-        }
+        Self::from_buf(AlignedBuf::zeroed(Self::required_elems(mc, kc)))
+    }
+
+    /// Wrap a leased buffer (contents unspecified; `pack_a` overwrites
+    /// every element it later reads).
+    pub fn from_buf(buf: AlignedBuf) -> Self {
+        Self { buf, m: 0, k: 0 }
+    }
+
+    /// Release the backing buffer (for [`super::arena::PackArena::give_back`]).
+    pub fn into_buf(self) -> AlignedBuf {
+        self.buf
     }
 
     pub fn n_panels(&self) -> usize {
@@ -50,19 +70,34 @@ impl PackedA {
 }
 
 /// Packed buffer for `B_c`: `ceil(n/NR)` micro-panels of `k × NR` each.
+/// Backing storage as [`PackedA`].
 pub struct PackedB {
-    pub buf: Vec<f64>,
+    pub buf: AlignedBuf,
     pub k: usize,
     pub n: usize,
 }
 
 impl PackedB {
+    /// Elements needed to pack a `kc × nc` block.
+    pub fn required_elems(kc: usize, nc: usize) -> usize {
+        nc.div_ceil(NR) * NR * kc
+    }
+
+    /// Allocate a private buffer for up to `kc × nc` (benches/tests; the
+    /// GEMM hot path leases from the arena instead).
     pub fn with_capacity(kc: usize, nc: usize) -> Self {
-        Self {
-            buf: vec![0.0; nc.div_ceil(NR) * NR * kc],
-            k: 0,
-            n: 0,
-        }
+        Self::from_buf(AlignedBuf::zeroed(Self::required_elems(kc, nc)))
+    }
+
+    /// Wrap a leased buffer (contents unspecified; `pack_b` overwrites
+    /// every element it later reads).
+    pub fn from_buf(buf: AlignedBuf) -> Self {
+        Self { buf, k: 0, n: 0 }
+    }
+
+    /// Release the backing buffer (for [`super::arena::PackArena::give_back`]).
+    pub fn into_buf(self) -> AlignedBuf {
+        self.buf
     }
 
     pub fn n_panels(&self) -> usize {
@@ -246,6 +281,23 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
-        assert_eq!(pa1.buf, pa2.buf);
+        assert_eq!(&pa1.buf[..], &pa2.buf[..]);
+    }
+
+    #[test]
+    fn packed_buffers_roundtrip_through_the_arena() {
+        use crate::blis::arena::PackArena;
+        let arena = PackArena::new();
+        let a = Matrix::random(MR + 2, 5, 44);
+        let mut crew = Crew::new();
+
+        let mut pa = PackedA::from_buf(arena.lease(PackedA::required_elems(MR + 2, 5)));
+        pack_a(&mut crew, a.view(), &mut pa);
+        let mut reference = PackedA::with_capacity(MR + 2, 5);
+        pack_a(&mut crew, a.view(), &mut reference);
+        let used = reference.n_panels() * MR * reference.k;
+        assert_eq!(&pa.buf[..used], &reference.buf[..used]);
+        arena.give_back(pa.into_buf());
+        assert_eq!(arena.stats().free_buffers, 1);
     }
 }

@@ -6,6 +6,11 @@
 //! auto-vectorize). Defaults follow the shapes BLIS uses for Haswell-class
 //! double precision (paper §2: "`m_r, n_r` in the range 4–16; `m_c, k_c`
 //! in the order of a few hundreds; `n_c` up to a few thousands").
+//!
+//! [`BlisParams::auto`] derives the parameters from the host's cache
+//! topology at startup (Linux sysfs; BLIS's analytical model in
+//! simplified form), falling back to the Haswell defaults when the
+//! topology is unreadable. `mlu --params mc,kc,nc` overrides both.
 
 /// Micro-kernel rows (register block height).
 pub const MR: usize = 8;
@@ -65,6 +70,108 @@ impl BlisParams {
     pub fn packed_bytes(&self) -> usize {
         (self.mc * self.kc + self.kc * self.nc) * std::mem::size_of::<f64>()
     }
+
+    /// Parse a `mc,kc,nc` override string (the `mlu --params` syntax).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != 3 {
+            return Err(format!("expected mc,kc,nc — got {s:?}"));
+        }
+        let num = |p: &str| -> Result<usize, String> {
+            p.parse().map_err(|_| format!("bad block size {p:?}"))
+        };
+        Self {
+            mc: num(parts[0])?,
+            kc: num(parts[1])?,
+            nc: num(parts[2])?,
+        }
+        .validated()
+    }
+
+    /// Cache-topology-derived parameters for this host, computed once at
+    /// first use (BLIS's analytical sizing, simplified):
+    ///
+    /// - `k_c`: an `MR`-row `A` micro-panel plus an `NR`-column `B`
+    ///   micro-panel, both `k_c` deep, fill the L1 data cache;
+    /// - `m_c`: `A_c` (`m_c × k_c`) occupies ~¾ of L2 (leaving room for
+    ///   the streaming `B` micro-panel and `C` tile);
+    /// - `n_c`: `B_c` (`k_c × n_c`) occupies ~half of L3.
+    ///
+    /// Falls back to [`BlisParams::default`] when the topology cannot be
+    /// read (non-Linux hosts, containers hiding sysfs).
+    pub fn auto() -> Self {
+        static AUTO: std::sync::OnceLock<BlisParams> = std::sync::OnceLock::new();
+        *AUTO.get_or_init(|| match CacheInfo::detect() {
+            Some(info) => Self::from_cache_info(&info),
+            None => Self::default(),
+        })
+    }
+
+    /// Derive parameters from explicit cache sizes (see [`BlisParams::auto`]).
+    pub fn from_cache_info(info: &CacheInfo) -> Self {
+        const F: usize = std::mem::size_of::<f64>();
+        let kc = (info.l1d / (F * (MR + NR))).clamp(64, 1024) / 8 * 8;
+        let mc = (info.l2 * 3 / 4 / (F * kc)).clamp(2 * MR, 4096) / MR * MR;
+        let nc = (info.l3 / 2 / (F * kc)).clamp(8 * NR, 16384) / NR * NR;
+        Self { mc, kc, nc }
+            .validated()
+            .unwrap_or_else(|_| Self::default())
+    }
+}
+
+/// Host cache sizes in bytes (per core for L1/L2, package for L3).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct CacheInfo {
+    pub l1d: usize,
+    pub l2: usize,
+    pub l3: usize,
+}
+
+impl CacheInfo {
+    /// Read cpu0's cache hierarchy from Linux sysfs. Returns `None` when
+    /// the information is unavailable; a missing L3 falls back to 4× L2
+    /// (small VMs often hide it).
+    pub fn detect() -> Option<Self> {
+        let base = "/sys/devices/system/cpu/cpu0/cache";
+        let mut l1d = None;
+        let mut l2 = None;
+        let mut l3 = None;
+        for idx in 0..8 {
+            let dir = format!("{base}/index{idx}");
+            let read = |f: &str| std::fs::read_to_string(format!("{dir}/{f}")).ok();
+            let Some(level) = read("level").and_then(|s| s.trim().parse::<u32>().ok()) else {
+                continue;
+            };
+            let ty = read("type").map(|s| s.trim().to_string()).unwrap_or_default();
+            let Some(size) = read("size").and_then(|s| parse_cache_size(s.trim())) else {
+                continue;
+            };
+            match (level, ty.as_str()) {
+                (1, "Data" | "Unified") => l1d = Some(size),
+                (2, _) if ty != "Instruction" => l2 = Some(size),
+                (3, _) if ty != "Instruction" => l3 = Some(size),
+                _ => {}
+            }
+        }
+        let l1d = l1d?;
+        let l2 = l2?;
+        Some(Self {
+            l1d,
+            l2,
+            l3: l3.unwrap_or(4 * l2),
+        })
+    }
+}
+
+/// Parse sysfs cache-size strings: `"32K"`, `"1024K"`, `"8M"`, `"32768"`.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.trim().parse::<usize>().ok().map(|v| v * mult)
 }
 
 #[cfg(test)]
@@ -100,6 +207,74 @@ mod tests {
         }
         .validated()
         .is_err());
+    }
+
+    #[test]
+    fn parse_override_string() {
+        assert_eq!(
+            BlisParams::parse("96,256,4092").unwrap(),
+            BlisParams {
+                mc: 96,
+                kc: 256,
+                nc: 4092
+            }
+        );
+        assert_eq!(
+            BlisParams::parse(" 16 , 8 , 12 ").unwrap(),
+            BlisParams {
+                mc: 16,
+                kc: 8,
+                nc: 12
+            }
+        );
+        assert!(BlisParams::parse("96,256").is_err());
+        assert!(BlisParams::parse("a,b,c").is_err());
+        assert!(BlisParams::parse("97,256,4092").is_err(), "mc % MR");
+    }
+
+    #[test]
+    fn cache_sizes_parse() {
+        assert_eq!(parse_cache_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_cache_size("32768"), Some(32768));
+        assert_eq!(parse_cache_size("junk"), None);
+    }
+
+    #[test]
+    fn derived_params_are_valid_for_plausible_topologies() {
+        for info in [
+            // Haswell-ish, a big server part, and a tiny VM.
+            CacheInfo {
+                l1d: 32 * 1024,
+                l2: 256 * 1024,
+                l3: 8 * 1024 * 1024,
+            },
+            CacheInfo {
+                l1d: 48 * 1024,
+                l2: 2 * 1024 * 1024,
+                l3: 64 * 1024 * 1024,
+            },
+            CacheInfo {
+                l1d: 16 * 1024,
+                l2: 128 * 1024,
+                l3: 512 * 1024,
+            },
+        ] {
+            let p = BlisParams::from_cache_info(&info);
+            p.validated().unwrap();
+            assert!(p.kc >= 64 && p.kc <= 1024, "{info:?} -> {p:?}");
+            assert!(p.mc >= 2 * MR, "{info:?} -> {p:?}");
+            assert!(p.nc >= 8 * NR, "{info:?} -> {p:?}");
+        }
+    }
+
+    #[test]
+    fn auto_params_always_usable() {
+        // Whatever the host (or lack of sysfs), auto() must give valid
+        // parameters, and be stable across calls.
+        let p = BlisParams::auto();
+        p.validated().unwrap();
+        assert_eq!(p, BlisParams::auto());
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! left-looking variant of §4.2) — BDP-only parallelism: one crew
 //! executes every kernel, the panel factorization sits on the critical
 //! path (this is the `LU` baseline of the evaluation, Fig. 4).
+//!
+//! Every GEMM/TRSM below runs on the caller's crew and therefore leases
+//! its packed buffers from that crew's arena: after the first (largest)
+//! trailing update, a factorization performs zero packed-buffer
+//! allocations (`tests/perf_invariants.rs`).
 
 use super::panel::panel_rl;
 use crate::blis::{gemm, laswp, trsm_llu, BlisParams};

@@ -31,7 +31,7 @@
 //! timing, because the LL inner leaves aborted columns untouched.
 
 use super::panel::{panel_ll, panel_rl, PanelOutcome};
-use crate::blis::{gemm, trsm_llu, BlisParams};
+use crate::blis::{gemm, trsm_llu, BlisParams, PackArena};
 use crate::matrix::{MatMut, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool};
 use crate::trace::{span, Kind};
@@ -151,10 +151,15 @@ pub fn lu_lookahead_ctl(
     if kmax == 0 {
         return (ipiv, stats);
     }
+    // One packing arena for every crew this factorization creates (the
+    // per-iteration PF/RU crews, prologue, epilogue): packed-buffer
+    // leases reach steady state after the first trailing update and
+    // allocate nothing thereafter (DESIGN.md §9).
+    let arena = Arc::new(PackArena::new());
     if pool.workers() == 0 {
         // A single thread cannot run two branches: degrade to the plain
         // blocked RL algorithm (same factorization, no TP).
-        let mut crew = Crew::new();
+        let mut crew = Crew::with_arena(Arc::clone(&arena));
         let bctl = super::blocked::BlockedCtl {
             cancel: ctl.map(|c| &c.cancel),
             ..Default::default()
@@ -171,7 +176,7 @@ pub fn lu_lookahead_ctl(
 
     // ---- Prologue: factorize the first panel with the full team. ----
     let b0 = bo.min(kmax);
-    let mut crew_all = Crew::new();
+    let mut crew_all = Crew::with_arena(Arc::clone(&arena));
     let all_members: Vec<_> = (0..pool.workers())
         .map(|w| {
             let s = crew_all.shared();
@@ -207,7 +212,7 @@ pub fn lu_lookahead_ctl(
                 // [`LaCtl::request_cancel`] for the resume contract.
                 stats.cancelled = true;
                 stats.panel_widths.push(bc);
-                let mut crew = Crew::new();
+                let mut crew = Crew::with_arena(Arc::clone(&arena));
                 laswp_abs(&mut crew, av, &piv_cur, f, 0, f);
                 ipiv.extend_from_slice(&piv_cur);
                 c.cols_done.store(ipiv.len(), Ordering::Release);
@@ -220,7 +225,7 @@ pub fn lu_lookahead_ctl(
             // ---- Epilogue: no panels left to factor. Apply the current
             // panel's transformations to any remaining right columns
             // (wide matrices) and the lazy left swaps, then finish.
-            let mut crew = Crew::new();
+            let mut crew = Crew::with_arena(Arc::clone(&arena));
             let members: Vec<_> = (0..pool.workers())
                 .map(|w| {
                     let s = crew.shared();
@@ -267,9 +272,9 @@ pub fn lu_lookahead_ctl(
         let pf_work_done = Arc::new(AtomicBool::new(false));
         let outcome: Arc<Mutex<Option<PanelOutcome>>> = Arc::new(Mutex::new(None));
 
-        let mut crew_ru = Crew::new();
+        let mut crew_ru = Crew::with_arena(Arc::clone(&arena));
         let ru_shared = crew_ru.shared();
-        let crew_pf = Crew::new();
+        let crew_pf = Crew::with_arena(Arc::clone(&arena));
         let pf_shared = crew_pf.shared();
 
         // RU members: workers t_pf.. join RU's crew — unless R is empty,
@@ -445,16 +450,17 @@ pub fn lu_lookahead_ctl(
 
 /// `laswp` with pivot indices relative to row `base` (the panel top):
 /// swap rows `base+k` and `piv[k]` (absolute) for columns `jlo..jhi`.
+/// Reuses [`crate::blis::laswp`]'s column-strip chunking: each strip
+/// applies the whole pivot sequence while its rows are cache-resident.
 fn laswp_abs(crew: &mut Crew, a: MatMut, piv: &[usize], base: usize, jlo: usize, jhi: usize) {
-    if piv.is_empty() || jlo >= jhi {
+    if piv.is_empty() {
         return;
     }
-    // Reuse the blis::laswp chunking by building absolute (k, piv) pairs.
-    crew.parallel_ranges(jhi - jlo, 16, |cols| {
+    crate::blis::laswp::for_each_col_strip(crew, jlo, jhi, |lo, hi| {
         for (k, &p) in piv.iter().enumerate() {
             let row = base + k;
             if p != row {
-                a.swap_rows(row, p, jlo + cols.start, jlo + cols.end);
+                a.swap_rows(row, p, lo, hi);
             }
         }
     });

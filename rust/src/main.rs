@@ -4,6 +4,10 @@
 //! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
 //! mlu solve     --n 512  --variant mb            # factor + solve + residual
 //! mlu batch     --sizes 256,192,320 --workers 4 [--check --compare --trace t.json]
+//!
+//! Global flags: `--params mc,kc,nc` overrides the cache-topology-derived
+//! BLIS blocking; `--kernel auto|simd|portable` forces a micro-kernel
+//! (results are bitwise identical either way).
 //! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
 //! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
 //! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
@@ -22,6 +26,7 @@ use malleable_lu::{runtime, serve, trace};
 
 fn main() {
     let args = Args::from_env();
+    apply_kernel_flag(&args);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "factorize" => cmd_factorize(&args),
@@ -41,7 +46,41 @@ fn main() {
 }
 
 const HELP: &str = "mlu — malleable thread-level LU (see README.md)
-commands: factorize | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info";
+commands: factorize | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
+global flags: --params mc,kc,nc | --kernel auto|simd|portable";
+
+/// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
+/// cache-topology-derived defaults. A malformed override is a hard
+/// error — silently measuring under different blocking than requested
+/// would corrupt perf experiments.
+fn resolve_params(args: &Args) -> BlisParams {
+    let s = args.get_str("params", "");
+    if s.is_empty() {
+        return BlisParams::auto();
+    }
+    match BlisParams::parse(&s) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad --params: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Apply `--kernel auto|simd|portable` process-wide. An unknown value
+/// is a hard error (see [`resolve_params`]).
+fn apply_kernel_flag(args: &Args) {
+    use malleable_lu::blis::{set_kernel, Kernel};
+    match args.get_str("kernel", "auto").as_str() {
+        "portable" => set_kernel(Kernel::Portable),
+        "simd" => set_kernel(Kernel::Simd),
+        "auto" => set_kernel(Kernel::Auto),
+        other => {
+            eprintln!("unknown --kernel {other:?} (expected auto|simd|portable)");
+            std::process::exit(2);
+        }
+    }
+}
 
 fn lu_config(args: &Args) -> LuConfig {
     LuConfig {
@@ -53,7 +92,7 @@ fn lu_config(args: &Args) -> LuConfig {
         bi: args.get("bi", 32),
         threads: args.get("threads", 6),
         t_pf: args.get("t-pf", 1),
-        params: BlisParams::default(),
+        params: resolve_params(args),
         entry: if args.has("immediate") {
             malleable_lu::pool::EntryPolicy::Immediate
         } else {
@@ -140,6 +179,7 @@ fn cmd_batch(args: &Args) -> i32 {
         workers: args.get("workers", 4usize),
         bo: args.get("bo", 64),
         bi: args.get("bi", 16),
+        params: resolve_params(args),
         ..Default::default()
     };
     let total_flops: f64 = sizes.iter().map(|&n| lu_flops(n, n)).sum();
@@ -321,7 +361,7 @@ fn cmd_gepp(args: &Args) -> i32 {
     let kmax = args.get("kmax", 256usize);
     let step = args.get("step", 32usize);
     let reps = args.get("reps", 3usize);
-    let params = BlisParams::default();
+    let params = resolve_params(args);
     println!("k,gflops (real 1-thread GEPP, m={m} n={n})");
     let mut k = step;
     while k <= kmax {
@@ -392,11 +432,25 @@ fn cmd_info() -> i32 {
         hw.machine_peak(),
         hw.gepp_gflops(256, hw.cores)
     );
+    match malleable_lu::blis::CacheInfo::detect() {
+        Some(c) => println!(
+            "cache topology: L1d {} KiB, L2 {} KiB, L3 {} KiB",
+            c.l1d / 1024,
+            c.l2 / 1024,
+            c.l3 / 1024
+        ),
+        None => println!("cache topology: unavailable (using Haswell-class defaults)"),
+    }
     println!(
-        "BLIS params: {:?} (MR={} NR={})",
-        BlisParams::default(),
+        "BLIS params (auto): {:?} (MR={} NR={}); override with --params mc,kc,nc",
+        BlisParams::auto(),
         malleable_lu::blis::params::MR,
         malleable_lu::blis::params::NR
+    );
+    println!(
+        "micro-kernel: {} (simd available: {})",
+        malleable_lu::blis::micro::active_kernel_name(),
+        malleable_lu::blis::micro::simd_available()
     );
     let pool = Pool::new(2);
     println!("pool smoke: {} workers ok", pool.workers());

@@ -8,6 +8,7 @@
 //! distribution automatically adapts to however many workers are enlisted
 //! at the moment — this is what makes the team *malleable*.
 
+use crate::blis::arena::PackArena;
 use crossbeam_utils::{Backoff, CachePadded};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -212,6 +213,11 @@ pub struct Crew {
     epoch: u32,
     jobs: u64,
     leader_chunks: u64,
+    /// Packing arena the BLAS kernels lease their `A_c`/`B_c` buffers
+    /// from (DESIGN.md §9). Fresh per crew by default; drivers that run
+    /// many crews (look-ahead iterations, serve leaders) share one via
+    /// [`Crew::with_arena`] so steady-state packing never allocates.
+    arena: Arc<PackArena>,
 }
 
 impl Default for Crew {
@@ -222,14 +228,26 @@ impl Default for Crew {
 
 impl Crew {
     /// Create a crew with no members (the leader alone executes jobs until
-    /// someone enlists).
+    /// someone enlists) and a private packing arena.
     pub fn new() -> Self {
+        Self::with_arena(Arc::new(PackArena::new()))
+    }
+
+    /// Create a crew drawing packed-buffer leases from a shared arena.
+    pub fn with_arena(arena: Arc<PackArena>) -> Self {
         Self {
             shared: Arc::new(CrewShared::new()),
             epoch: 0,
             jobs: 0,
             leader_chunks: 0,
+            arena,
         }
+    }
+
+    /// The crew's packing arena (clone the `Arc` to hold leases across
+    /// `parallel` calls).
+    pub fn arena(&self) -> &Arc<PackArena> {
+        &self.arena
     }
 
     /// Handle that members use to enlist (clone freely across threads).

@@ -34,7 +34,7 @@ pub mod registry;
 
 pub use registry::{CrewRegistry, Lease};
 
-use crate::blis::BlisParams;
+use crate::blis::{BlisParams, PackArena};
 use crate::matrix::Matrix;
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
 use crate::sim::HwModel;
@@ -214,6 +214,10 @@ struct ServerState {
     registry: CrewRegistry,
     stop: AtomicBool,
     cfg: ServeConfig,
+    /// Packing arena shared by every request's crew: once the largest
+    /// request shape has been served, later factorizations lease their
+    /// packed buffers without allocating (DESIGN.md §9).
+    arena: Arc<PackArena>,
 }
 
 impl ServerState {
@@ -243,6 +247,7 @@ impl LuServer {
             registry: CrewRegistry::new(),
             stop: AtomicBool::new(false),
             cfg,
+            arena: Arc::new(PackArena::new()),
         });
         let loops = pool.broadcast(|_w| {
             let st = Arc::clone(&state);
@@ -264,6 +269,12 @@ impl LuServer {
     /// In-flight problem registry (exposed for tests and introspection).
     pub fn registry(&self) -> &CrewRegistry {
         &self.state.registry
+    }
+
+    /// Statistics of the packing arena shared by all requests' crews
+    /// (steady-state serving must stop allocating — DESIGN.md §9).
+    pub fn arena_stats(&self) -> crate::blis::ArenaStats {
+        self.state.arena.stats()
     }
 
     /// Enqueue a request; returns immediately with a handle.
@@ -429,7 +440,7 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         return;
     }
     let (m, n) = (a.rows(), a.cols());
-    let mut crew = Crew::new();
+    let mut crew = Crew::with_arena(Arc::clone(&state.arena));
     let lease = Arc::new(Lease::new(
         id,
         priority,
@@ -604,6 +615,32 @@ mod tests {
             let r = naive::lu_residual(a0, &res.a, &res.ipiv);
             assert!(r < 1e-11, "req{}: residual {r}", res.id);
         }
+    }
+
+    #[test]
+    fn repeated_batches_reach_zero_allocation_steady_state() {
+        // One worker => one leader at a time => deterministic lease
+        // pattern: after the first batch has warmed the shared arena, a
+        // second batch of identical shapes must not allocate.
+        let server = LuServer::new(tiny_cfg(1));
+        let batch = |seed: u64| -> Vec<LuRequest> {
+            (0..3)
+                .map(|i| LuRequest::new(Matrix::random(40, 40, seed + i)))
+                .collect()
+        };
+        let first = server.factorize_batch(batch(1));
+        assert!(first.iter().all(|r| !r.cancelled));
+        let warm = server.arena_stats();
+        assert!(warm.allocations > 0);
+        let second = server.factorize_batch(batch(100));
+        assert!(second.iter().all(|r| !r.cancelled));
+        let steady = server.arena_stats();
+        assert_eq!(
+            warm.allocations, steady.allocations,
+            "steady-state serving allocated packed buffers"
+        );
+        assert!(steady.leases > warm.leases);
+        server.shutdown();
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Minimal JSON parser (objects, arrays, strings, numbers, booleans,
-//! null) — just enough to read `artifacts/manifest.json`. No `serde` in
+//! Minimal JSON parser and serializer (objects, arrays, strings,
+//! numbers, booleans, null) — enough to read `artifacts/manifest.json`
+//! and to emit the machine-readable `BENCH_*.json` files. No `serde` in
 //! the offline registry (DESIGN.md §3).
 
 use std::collections::BTreeMap;
@@ -45,6 +46,78 @@ impl Value {
         match self {
             Value::Arr(v) => Some(v),
             _ => None,
+        }
+    }
+
+    /// Build an object from key/value pairs (bench-record convenience).
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Value)>) -> Value {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Serialize to a compact JSON string. Non-finite numbers become
+    /// `null` (JSON has no NaN/inf).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(x) => {
+                if x.is_finite() {
+                    // `{}` on f64 round-trips and never emits NaN/inf here.
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Value::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Value::Str(k.clone()).dump_into(out);
+                    out.push(':');
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
         }
     }
 }
@@ -294,5 +367,27 @@ mod tests {
         let v = parse(r#"[[1,2],[3,[4]]]"#).unwrap();
         let a = v.as_arr().unwrap();
         assert_eq!(a[1].as_arr().unwrap()[1].as_arr().unwrap()[0].as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let v = Value::obj([
+            ("name", Value::Str("gemm 512".into())),
+            ("gflops", Value::Num(12.25)),
+            ("threads", Value::Num(4.0)),
+            ("shape", Value::Arr(vec![Value::Num(512.0), Value::Num(512.0)])),
+            ("quick", Value::Bool(false)),
+            ("note", Value::Str("line1\nline\"2\"".into())),
+        ]);
+        let s = v.dump();
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_handles_non_finite_and_empty() {
+        assert_eq!(Value::Num(f64::NAN).dump(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Value::Arr(vec![]).dump(), "[]");
+        assert_eq!(Value::Obj(Default::default()).dump(), "{}");
     }
 }
