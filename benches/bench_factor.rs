@@ -1,0 +1,92 @@
+//! Factorization-family throughput: LU, Cholesky, and QR driven through
+//! the *same* generic WS+ET look-ahead driver, measured per kind and
+//! emitted as machine-readable `BENCH_factor.json` so the trajectory is
+//! tracked PR over PR (the factorization-family counterpart of
+//! `bench_lu_variants`).
+//!
+//! Absolute numbers on the CI container are 1-core numbers; what this
+//! harness guards is (a) all three kinds complete through one driver,
+//! (b) their relative throughput stays in the right ballpark (Cholesky
+//! does half the flops of LU, QR twice), and (c) the JSON artifact keeps
+//! flowing for the perf-smoke trend.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::cli::Args;
+use malleable_lu::factor::{factorize_lookahead, FactorKind, LaOpts};
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::Pool;
+use malleable_lu::util::json::Value;
+use malleable_lu::util::{gflops, timed};
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_factor.json");
+    let sizes: Vec<usize> = if quick { vec![96] } else { vec![256, 384] };
+    let reps = if quick { 1 } else { 3 };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+    let (bo, bi) = if quick { (32, 8) } else { (64, 16) };
+    let pool = Pool::new(threads - 1);
+    let params = BlisParams::auto();
+    let opts = LaOpts {
+        malleable: true,
+        early_term: true,
+        ..Default::default()
+    };
+
+    let mut records = Vec::new();
+    for &n in &sizes {
+        for &kind in FactorKind::all() {
+            let a0 = match kind {
+                FactorKind::Chol => Matrix::random_spd(n, n as u64),
+                _ => Matrix::random(n, n, n as u64),
+            };
+            let mut best = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..reps {
+                let mut f = a0.clone();
+                let (secs, out) = timed(|| {
+                    factorize_lookahead(kind, &pool, &params, &mut f, bo, bi, &opts, None)
+                });
+                assert!(!out.cancelled);
+                assert_eq!(out.cols_done, n, "{} n={n}", kind.name());
+                best = best.min(secs);
+                last = Some((f, out));
+            }
+            // Correctness gate: a bench that factorizes garbage measures
+            // nothing.
+            let (f, out) = last.unwrap();
+            let r = match kind {
+                FactorKind::Lu => naive::lu_residual(&a0, &f, &out.ipiv),
+                FactorKind::Chol => naive::chol_residual(&a0, &f),
+                FactorKind::Qr => naive::qr_residual(&a0, &f, &out.tau),
+            };
+            assert!(r < 1e-10, "{} n={n}: residual {r}", kind.name());
+            let g = gflops(kind.flops(n, n), best);
+            println!("{:<5} n={n:<5} {best:.4}s  {g:.2} GFLOPS", kind.name());
+            records.push(Value::obj([
+                ("kind", Value::Str(kind.name().into())),
+                ("n", Value::Num(n as f64)),
+                ("secs", Value::Num(best)),
+                ("gflops", Value::Num(g)),
+            ]));
+        }
+    }
+
+    if out_path != "-" {
+        let doc = Value::obj([
+            ("bench", Value::Str("factor".into())),
+            ("quick", Value::Bool(quick)),
+            ("threads", Value::Num(threads as f64)),
+            ("bo", Value::Num(bo as f64)),
+            ("bi", Value::Num(bi as f64)),
+            ("records", Value::Arr(records)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+    println!("bench_factor OK");
+}

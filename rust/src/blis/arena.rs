@@ -83,19 +83,23 @@ impl AlignedBuf {
             .expect("AlignedBuf layout overflow")
     }
 
+    /// Capacity in elements.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the buffer holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Read pointer to the first element.
     #[inline]
     pub fn as_ptr(&self) -> *const f64 {
         self.ptr.as_ptr()
     }
 
+    /// Write pointer to the first element.
     #[inline]
     pub fn as_mut_ptr(&mut self) -> *mut f64 {
         self.ptr.as_ptr()
@@ -160,6 +164,7 @@ pub struct PackArena {
 }
 
 impl PackArena {
+    /// Empty arena (no buffers, zeroed counters).
     pub fn new() -> Self {
         Self::default()
     }
@@ -203,6 +208,7 @@ impl PackArena {
         self.free.lock().unwrap().push(buf);
     }
 
+    /// Snapshot of the arena counters.
     pub fn stats(&self) -> ArenaStats {
         ArenaStats {
             allocations: self.allocations.load(Ordering::Relaxed),

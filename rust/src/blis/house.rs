@@ -1,0 +1,318 @@
+//! Householder reflector helpers — the building blocks of the blocked QR
+//! factorization (`geqrf`-style panel + `larfb`-style trailing update).
+//!
+//! A reflector `H = I − τ·v·vᵀ` (with `v[0] = 1` implicit) annihilates a
+//! column below its diagonal. The panel factorization generates and
+//! applies reflectors one at a time ([`reflector`], [`apply_reflector`] —
+//! level-2, crew-parallel over columns); the trailing update groups a
+//! panel's reflectors into the compact WY form `Q = I − V·T·Vᵀ`
+//! ([`larft`]) and applies `Qᵀ` to a block of columns with two malleable
+//! [`gemm`]s plus one small triangular multiply ([`apply_block_qt`]) —
+//! inheriting GEMM's Loop-3 Worker-Sharing entry points for the bulk of
+//! the flops.
+//!
+//! Determinism: every element's reduction (the `vᵀ·c` dot products, the
+//! `k` dimension of both GEMMs, the triangular multiply) is sequential,
+//! so all of these kernels are bitwise identical for any crew size and
+//! any join timing (DESIGN.md §8).
+
+use super::gemm::gemm;
+use super::params::BlisParams;
+use crate::matrix::{MatMut, MatRef, Matrix};
+use crate::pool::Crew;
+use crate::trace::{span, Kind};
+
+/// Generate a Householder reflector from column `j` of `a` (rows `j..m`),
+/// LAPACK `dlarfg` style.
+///
+/// On return `a[j, j]` holds `beta` (the resulting `R` diagonal entry),
+/// `a[j+1.., j]` holds the reflector tail `v[1..]` (with `v[0] = 1`
+/// implicit), and the returned `tau` satisfies `H = I − τ·v·vᵀ`. A column
+/// that is already zero below the diagonal yields `tau = 0` (`H = I`).
+pub fn reflector(a: MatMut, j: usize) -> f64 {
+    let m = a.rows();
+    let alpha = a.at(j, j);
+    let mut xnorm2 = 0.0;
+    for i in j + 1..m {
+        let x = a.at(i, j);
+        xnorm2 += x * x;
+    }
+    if xnorm2 == 0.0 {
+        return 0.0;
+    }
+    let norm = (alpha * alpha + xnorm2).sqrt();
+    let beta = if alpha >= 0.0 { -norm } else { norm };
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    for i in j + 1..m {
+        a.update(i, j, |x| x * scale);
+    }
+    a.set(j, j, beta);
+    tau
+}
+
+/// Apply `H = I − τ·v·vᵀ` to columns `jlo..jhi` of `a`, where `v` is the
+/// reflector stored in column `v_col` with pivot row `row0` (so `v[0] = 1`
+/// at row `row0` and the tail sits in `a[row0+1.., v_col]`). Rows above
+/// `row0` are untouched. Crew-parallel over the target columns; each
+/// column's `vᵀ·c` reduction is sequential (bitwise crew-independent).
+pub fn apply_reflector(
+    crew: &mut Crew,
+    a: MatMut,
+    v_col: usize,
+    row0: usize,
+    tau: f64,
+    jlo: usize,
+    jhi: usize,
+) {
+    if tau == 0.0 || jlo >= jhi {
+        return;
+    }
+    let m = a.rows();
+    crew.parallel_ranges(jhi - jlo, 4, |cols| {
+        for jj in cols {
+            let j = jlo + jj;
+            let mut w = a.at(row0, j);
+            for i in row0 + 1..m {
+                w += a.at(i, v_col) * a.at(i, j);
+            }
+            w *= tau;
+            a.update(row0, j, |x| x - w);
+            for i in row0 + 1..m {
+                let vi = a.at(i, v_col);
+                a.update(i, j, |x| x - vi * w);
+            }
+        }
+    });
+}
+
+/// Build the upper-triangular block-reflector factor `T` (LAPACK `dlarft`,
+/// forward/columnwise) for the `k = tau.len()` reflectors stored in the
+/// columns of `v` (unit lower trapezoidal, diagonal implicit):
+/// `H_0·H_1⋯H_{k−1} = I − V·T·Vᵀ`.
+pub fn larft(v: MatRef, tau: &[f64]) -> Matrix {
+    let k = tau.len();
+    let m = v.rows();
+    let mut t = Matrix::zeros(k, k);
+    let mut w = vec![0.0; k];
+    for j in 0..k {
+        t[(j, j)] = tau[j];
+        if tau[j] == 0.0 {
+            continue;
+        }
+        // w = V[:, 0..j]ᵀ · v_j (unit diagonal of v_j handled explicitly).
+        for (i, wi) in w.iter_mut().enumerate().take(j) {
+            let mut s = v.at(j, i);
+            for r in j + 1..m {
+                s += v.at(r, i) * v.at(r, j);
+            }
+            *wi = s;
+        }
+        // T[0..j, j] = −τ_j · T[0..j, 0..j] · w  (T is upper triangular).
+        for i in 0..j {
+            let mut s = 0.0;
+            for p in i..j {
+                s += t[(i, p)] * w[p];
+            }
+            t[(i, j)] = -tau[j] * s;
+        }
+    }
+    t
+}
+
+/// Apply `Qᵀ = I − V·Tᵀ·Vᵀ` to `c` (LAPACK `dlarfb`, left side,
+/// transpose): `C := C − V·(Tᵀ·(Vᵀ·C))`.
+///
+/// `v` is the clean `m × k` reflector block (unit diagonal explicit,
+/// zeros above), `vt` its `k × m` transpose, `t` the `k × k` factor from
+/// [`larft`]. Both rank-`k` products run on the malleable [`gemm`]; the
+/// small `Tᵀ·W` multiply is crew-parallel over `W`'s columns with a
+/// sequential per-element reduction.
+pub fn apply_block_qt(
+    crew: &mut Crew,
+    params: &BlisParams,
+    v: MatRef,
+    vt: MatRef,
+    t: MatRef,
+    c: MatMut,
+) {
+    let k = t.rows();
+    let nc = c.cols();
+    if k == 0 || nc == 0 {
+        return;
+    }
+    debug_assert_eq!(v.cols(), k);
+    debug_assert_eq!(vt.rows(), k);
+    debug_assert_eq!(v.rows(), c.rows());
+    // W := Vᵀ · C  (k × nc).
+    let mut w = Matrix::zeros(k, nc);
+    gemm(crew, params, 1.0, vt, c.as_ref(), w.view_mut());
+    // W := Tᵀ · W, in place. Descending row order: row i only reads rows
+    // `<= i`, which are still original when `i` is processed last-to-first.
+    let wv = w.view_mut();
+    span(Kind::Trsm, "larfb_tmul", || {
+        crew.parallel_ranges(nc, 8, |cols| {
+            for j in cols {
+                for i in (0..k).rev() {
+                    let mut s = 0.0;
+                    for p in 0..=i {
+                        s += t.at(p, i) * wv.at(p, j);
+                    }
+                    wv.set(i, j, s);
+                }
+            }
+        });
+    });
+    // C := C − V · W.
+    gemm(crew, params, -1.0, v, w.view(), c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::naive;
+
+    /// Apply the stored reflectors one by one (reference path).
+    fn apply_seq(a: &Matrix, tau: &[f64], c: &mut Matrix) {
+        let m = a.rows();
+        for (j, &tj) in tau.iter().enumerate() {
+            if tj == 0.0 {
+                continue;
+            }
+            for col in 0..c.cols() {
+                let mut w = c[(j, col)];
+                for i in j + 1..m {
+                    w += a[(i, j)] * c[(i, col)];
+                }
+                w *= tj;
+                c[(j, col)] -= w;
+                for i in j + 1..m {
+                    c[(i, col)] -= a[(i, j)] * w;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reflector_annihilates_below_diagonal() {
+        let mut a = Matrix::random(10, 3, 1);
+        let a0 = a.clone();
+        let tau = reflector(a.view_mut(), 0);
+        assert!(tau > 0.0 && tau < 2.0, "tau={tau}");
+        // Applying H to the original column reproduces (beta, 0, ..., 0).
+        let mut c = Matrix::from_fn(10, 1, |i, _| a0[(i, 0)]);
+        // Column 0 of `a` now stores v; apply H to c.
+        apply_seq(&a, &[tau], &mut c);
+        assert!((c[(0, 0)] - a[(0, 0)]).abs() < 1e-12);
+        for i in 1..10 {
+            assert!(c[(i, 0)].abs() < 1e-12, "row {i} not annihilated");
+        }
+    }
+
+    #[test]
+    fn reflector_zero_tail_is_identity() {
+        let mut a = Matrix::zeros(5, 1);
+        a[(0, 0)] = 3.0;
+        let tau = reflector(a.view_mut(), 0);
+        assert_eq!(tau, 0.0);
+        assert_eq!(a[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn apply_reflector_matches_sequential_reference() {
+        let m = 16;
+        let mut panel = Matrix::random(m, 1, 2);
+        let tau = reflector(panel.view_mut(), 0);
+        let c0 = Matrix::random(m, 5, 3);
+
+        let mut c1 = c0.clone();
+        apply_seq(&panel, &[tau], &mut c1);
+
+        // Stage panel and c side by side in one matrix so apply_reflector
+        // can address both (v_col 0, targets 1..6).
+        let mut both = Matrix::zeros(m, 6);
+        for i in 0..m {
+            both[(i, 0)] = panel[(i, 0)];
+            for j in 0..5 {
+                both[(i, j + 1)] = c0[(i, j)];
+            }
+        }
+        let mut crew = Crew::new();
+        apply_reflector(&mut crew, both.view_mut(), 0, 0, tau, 1, 6);
+        for j in 0..5 {
+            for i in 0..m {
+                assert!(
+                    (both[(i, j + 1)] - c1[(i, j)]).abs() < 1e-13,
+                    "({i},{j}) differs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_apply_matches_one_by_one() {
+        // Factorize a small panel with raw reflectors, then check that the
+        // compact WY form applies the same transformation as the
+        // reflector-by-reflector reference.
+        let (m, k, nc) = (20usize, 4usize, 7usize);
+        let mut panel = Matrix::random(m, k, 4);
+        let mut tau = Vec::new();
+        let mut crew = Crew::new();
+        for j in 0..k {
+            let tj = reflector(panel.view_mut(), j);
+            if j + 1 < k {
+                apply_reflector(&mut crew, panel.view_mut(), j, j, tj, j + 1, k);
+            }
+            tau.push(tj);
+        }
+
+        let c0 = Matrix::random(m, nc, 5);
+        let mut c_ref = c0.clone();
+        apply_seq(&panel, &tau, &mut c_ref);
+
+        // Clean V (unit diagonal, zeros above) + transpose + T.
+        let mut v = Matrix::zeros(m, k);
+        for j in 0..k {
+            v[(j, j)] = 1.0;
+            for i in j + 1..m {
+                v[(i, j)] = panel[(i, j)];
+            }
+        }
+        let vt = v.transposed();
+        let t = larft(v.view(), &tau);
+        let mut c = c0.clone();
+        let params = BlisParams::tiny();
+        apply_block_qt(
+            &mut crew,
+            &params,
+            v.view(),
+            vt.view(),
+            t.view(),
+            c.view_mut(),
+        );
+        let d = c.max_abs_diff(&c_ref);
+        assert!(d < 1e-11, "block vs sequential diff {d}");
+    }
+
+    #[test]
+    fn full_panel_qr_reconstructs() {
+        // Reflector-by-reflector QR of a tall panel; Q·R must equal A.
+        let (m, n) = (12usize, 5usize);
+        let a0 = Matrix::random(m, n, 6);
+        let mut f = a0.clone();
+        let mut tau = Vec::new();
+        let mut crew = Crew::new();
+        for j in 0..n {
+            let tj = reflector(f.view_mut(), j);
+            if j + 1 < n {
+                apply_reflector(&mut crew, f.view_mut(), j, j, tj, j + 1, n);
+            }
+            tau.push(tj);
+        }
+        let r = naive::qr_residual(&a0, &f, &tau);
+        assert!(r < 1e-13, "residual {r}");
+        let q = naive::qr_q(&f, &tau);
+        let o = naive::orthogonality(&q);
+        assert!(o < 1e-13, "orthogonality {o}");
+    }
+}

@@ -27,16 +27,22 @@
 //! contract ([`micro`]), packed buffers come from a crew-owned arena
 //! ([`arena`]) so the steady-state BLAS allocates nothing, the
 //! macro-kernel subdivides Loop 5 when Loop 4 is too narrow to feed the
-//! team ([`gemm`]), and the blocking parameters are derived from the
-//! host cache topology ([`params`]).
+//! team ([`gemm()`]), and the blocking parameters are derived from the
+//! host cache topology ([`params`]). The factorization-family refactor
+//! added the non-LU kernels: a lower-trapezoid SYRK cast into the packed
+//! GEMM ([`syrk`]), a right-side transposed TRSM ([`trsm_rltn`]), and
+//! Householder reflector / compact-WY helpers ([`house`]) — all obeying
+//! the same determinism invariant.
 
 pub mod arena;
 pub mod gemm;
+pub mod house;
 pub mod laswp;
 pub mod micro;
 pub mod pack;
 pub mod params;
 pub mod small;
+pub mod syrk;
 pub mod trsm;
 
 pub use arena::{AlignedBuf, ArenaStats, PackArena};
@@ -44,4 +50,5 @@ pub use gemm::gemm;
 pub use laswp::laswp;
 pub use micro::{set_kernel, Kernel};
 pub use params::{BlisParams, CacheInfo};
-pub use trsm::trsm_llu;
+pub use syrk::syrk_ln;
+pub use trsm::{trsm_llu, trsm_rltn};

@@ -29,8 +29,11 @@ use crate::pool::Crew;
 /// Backed by a 64-byte-aligned [`AlignedBuf`], usually leased from the
 /// crew's [`super::arena::PackArena`] (see [`PackedA::from_buf`]).
 pub struct PackedA {
+    /// Backing storage (`n_panels() * MR * k` elements used).
     pub buf: AlignedBuf,
+    /// Rows packed by the last `pack_a` call.
     pub m: usize,
+    /// Depth (columns of `A_c`) packed by the last `pack_a` call.
     pub k: usize,
 }
 
@@ -57,6 +60,7 @@ impl PackedA {
         self.buf
     }
 
+    /// Number of `MR`-row micro-panels currently packed.
     pub fn n_panels(&self) -> usize {
         self.m.div_ceil(MR)
     }
@@ -72,8 +76,11 @@ impl PackedA {
 /// Packed buffer for `B_c`: `ceil(n/NR)` micro-panels of `k × NR` each.
 /// Backing storage as [`PackedA`].
 pub struct PackedB {
+    /// Backing storage (`n_panels() * NR * k` elements used).
     pub buf: AlignedBuf,
+    /// Depth (rows of `B_c`) packed by the last `pack_b` call.
     pub k: usize,
+    /// Columns packed by the last `pack_b` call.
     pub n: usize,
 }
 
@@ -100,6 +107,7 @@ impl PackedB {
         self.buf
     }
 
+    /// Number of `NR`-column micro-panels currently packed.
     pub fn n_panels(&self) -> usize {
         self.n.div_ceil(NR)
     }

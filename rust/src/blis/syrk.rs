@@ -1,0 +1,249 @@
+//! SYRK — symmetric rank-`k` update, the trailing-update kernel of the
+//! right-looking Cholesky factorization.
+//!
+//! `C := C + α·A·Aᵀ`, writing only the lower trapezoid of `C` (the strict
+//! upper triangle of the leading square is never touched, so a symmetric
+//! matrix that stores valid data there keeps it). All of the arithmetic
+//! is cast into the malleable [`gemm`]: the update is blocked into
+//! [`DB`]-column strips; each strip's rectangular part runs `gemm`
+//! directly against an explicitly transposed copy of the strip's rows,
+//! and the strip's diagonal square is computed by the *same* `gemm` into
+//! a scratch square whose lower triangle is then copied back.
+//!
+//! Routing every element through `gemm` is what makes the kernel
+//! **split-invariant**: per output element the floating-point chain is
+//! GEMM's (sequential fused multiply-adds over `p`, one `α·acc` fold per
+//! `k_c` block), independent of where the caller's column split or the
+//! strip boundaries fall. The look-ahead driver relies on this — its `P`/
+//! `R` column split must produce bitwise the same trailing matrix as the
+//! blocked driver's full-width update (DESIGN.md §8, §11). Malleability
+//! comes along for free: the bulk of the flops inherit GEMM's Loop-3
+//! Worker-Sharing entry points.
+
+use super::gemm::gemm;
+use super::params::BlisParams;
+use crate::matrix::{MatMut, MatRef, Matrix};
+use crate::pool::Crew;
+use crate::trace::{span, Kind};
+
+/// Column-strip width of the blocked SYRK (mirrors the TRSM diagonal
+/// block: big enough to amortize the transpose copy, small enough that
+/// the scratch square stays cache-resident).
+pub const DB: usize = 32;
+
+/// Lower-trapezoid symmetric rank-`k` update.
+///
+/// `A` is `m × k`; `C` is `m × w` with `w <= m`, its row `i` aligned with
+/// `A`'s row `i`. For every column `j < w` and row `i` in `j..m`:
+///
+/// ```text
+/// C[i, j] += alpha · Σ_p A[i, p] · A[j, p]
+/// ```
+///
+/// Entries above the diagonal of the leading `w × w` square are left
+/// untouched. With `w == m` this is the classic `syrk` on the lower
+/// triangle; the Cholesky drivers also use the trapezoidal form to update
+/// a block column (`w < m`). The result is bitwise identical for any crew
+/// size *and* for any column split of the same update (see module docs).
+pub fn syrk_ln(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, c: MatMut) {
+    let m = a.rows();
+    let k = a.cols();
+    let w = c.cols();
+    assert_eq!(c.rows(), m, "syrk: C rows must match A rows");
+    assert!(w <= m, "syrk: C must be a lower trapezoid (cols <= rows)");
+    if m == 0 || w == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    // Scratch reused by every strip: the transposed strip rows and the
+    // diagonal square.
+    let jb_max = DB.min(w);
+    let mut at = Matrix::zeros(k, jb_max);
+    let mut sq = Matrix::zeros(jb_max, jb_max);
+    let mut j = 0;
+    while j < w {
+        let jb = DB.min(w - j);
+        // Transposed copy of the strip's rows: Aᵀ[0..k, j..j+jb].
+        span(Kind::Pack, "syrk_transpose", || {
+            for p in 0..k {
+                for jj in 0..jb {
+                    at[(p, jj)] = a.at(j + jj, p);
+                }
+            }
+        });
+        let at_v = at.view().sub(0, 0, k, jb);
+        // Diagonal square via gemm into scratch, lower triangle copied
+        // back (the strict upper of C's square is never written).
+        let tri = c.sub(j, j, jb, jb);
+        span(Kind::Gemm, "syrk_diag", || {
+            // Stage the square's lower triangle; the strict upper part of
+            // the scratch is written by gemm but never copied back, so
+            // whatever it holds (zeros, stale strips) is irrelevant.
+            for jj in 0..jb {
+                for i in jj..jb {
+                    sq[(i, jj)] = tri.at(i, jj);
+                }
+            }
+            gemm(
+                crew,
+                params,
+                alpha,
+                a.sub(j, 0, jb, k),
+                at_v,
+                sq.view_mut().sub(0, 0, jb, jb),
+            );
+            for jj in 0..jb {
+                for i in jj..jb {
+                    tri.set(i, jj, sq[(i, jj)]);
+                }
+            }
+        });
+        // Rectangle below the square: a plain (malleable) GEMM.
+        if j + jb < m {
+            gemm(
+                crew,
+                params,
+                alpha,
+                a.sub(j + jb, 0, m - j - jb, k),
+                at_v,
+                c.sub(j + jb, j, m - j - jb, jb),
+            );
+        }
+        j += jb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::EntryPolicy;
+
+    /// Naive full-trapezoid reference.
+    fn reference(alpha: f64, a: &Matrix, c0: &Matrix, w: usize) -> Matrix {
+        let (m, k) = (a.rows(), a.cols());
+        let mut c = c0.clone();
+        for j in 0..w {
+            for i in j..m {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[(i, p)] * a[(j, p)];
+                }
+                c[(i, j)] += alpha * s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_reference_various_shapes() {
+        let params = BlisParams::tiny();
+        for &(m, k, w) in &[
+            (1usize, 1usize, 1usize),
+            (8, 4, 8),
+            (40, 12, 40),
+            (DB + 7, 5, DB + 7),
+            (50, 16, 20),
+            (2 * DB + 3, 9, DB + 1),
+        ] {
+            let a = Matrix::random(m, k, (m * 31 + k * 7 + w) as u64);
+            let c0 = Matrix::random(m, w, (m + k + w) as u64);
+            let mut c = c0.clone();
+            let mut crew = Crew::new();
+            syrk_ln(&mut crew, &params, -1.0, a.view(), c.view_mut());
+            let want = reference(-1.0, &a, &c0, w);
+            let d = c.max_abs_diff(&want);
+            assert!(d < 1e-11, "m={m} k={k} w={w} diff={d}");
+        }
+    }
+
+    #[test]
+    fn strict_upper_of_leading_square_untouched() {
+        let params = BlisParams::tiny();
+        let (m, k) = (30usize, 8usize);
+        let a = Matrix::random(m, k, 3);
+        let c0 = Matrix::random(m, m, 4);
+        let mut c = c0.clone();
+        let mut crew = Crew::new();
+        syrk_ln(&mut crew, &params, 1.0, a.view(), c.view_mut());
+        for j in 0..m {
+            for i in 0..j {
+                assert_eq!(c[(i, j)], c0[(i, j)], "upper entry ({i},{j}) touched");
+            }
+        }
+    }
+
+    #[test]
+    fn column_split_does_not_change_bits() {
+        // The look-ahead driver applies one panel's SYRK as two disjoint
+        // column ranges; the result must be bitwise identical to the
+        // full-width update.
+        let params = BlisParams::tiny();
+        let (m, k) = (77usize, 11usize);
+        let a = Matrix::random(m, k, 21);
+        let c0 = Matrix::random(m, m, 22);
+
+        let mut c1 = c0.clone();
+        let mut crew = Crew::new();
+        syrk_ln(&mut crew, &params, -1.0, a.view(), c1.view_mut());
+
+        for split in [1usize, 7, DB - 1, DB, DB + 5, 40] {
+            let mut c2 = c0.clone();
+            let v = c2.view_mut();
+            // Left block: columns 0..split (trapezoid of the same rows).
+            syrk_ln(&mut crew, &params, -1.0, a.view(), v.sub(0, 0, m, split));
+            // Right block: columns split..m, rows split..m.
+            syrk_ln(
+                &mut crew,
+                &params,
+                -1.0,
+                a.view().sub(split, 0, m - split, k),
+                v.sub(split, split, m - split, m - split),
+            );
+            for (x, y) in c1.data().iter().zip(c2.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn crew_size_does_not_change_bits() {
+        let params = BlisParams::tiny();
+        let a = Matrix::random(70, 13, 9);
+        let c0 = Matrix::random(70, 70, 10);
+
+        let mut c1 = c0.clone();
+        let mut crew1 = Crew::new();
+        syrk_ln(&mut crew1, &params, -1.0, a.view(), c1.view_mut());
+
+        let mut c2 = c0.clone();
+        let mut crew2 = Crew::new();
+        let shared = crew2.shared();
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                let s = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+            })
+            .collect();
+        syrk_ln(&mut crew2, &params, -1.0, a.view(), c2.view_mut());
+        crew2.disband();
+        for h in hs {
+            h.join().unwrap();
+        }
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_alpha_are_noops() {
+        let params = BlisParams::tiny();
+        let a = Matrix::random(6, 3, 1);
+        let c0 = Matrix::random(6, 6, 2);
+        let mut c = c0.clone();
+        let mut crew = Crew::new();
+        syrk_ln(&mut crew, &params, 0.0, a.view(), c.view_mut());
+        assert_eq!(c, c0);
+        let empty = Matrix::zeros(6, 0);
+        syrk_ln(&mut crew, &params, 1.0, empty.view(), c.view_mut());
+        assert_eq!(c, c0);
+    }
+}

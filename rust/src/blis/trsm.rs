@@ -64,6 +64,39 @@ pub fn trsm_llu(crew: &mut Crew, params: &BlisParams, a: MatRef, b: MatMut) {
     }
 }
 
+/// `B := B · TRIL(A)⁻ᵀ` — right side, lower triangular, **transposed**,
+/// non-unit diagonal. `A` is `n × n` (only its lower triangle, including
+/// the diagonal, is read), `B` is `m × n`.
+///
+/// This is the Cholesky panel step `L21 := A21 · L11⁻ᵀ`. Each row of `B`
+/// is an independent forward substitution (the solve couples columns, not
+/// rows), so the crew parallelizes over row blocks while every element's
+/// reduction stays sequential — the result is bitwise identical for any
+/// crew size, matching the determinism invariant of the rest of the
+/// substrate (DESIGN.md §8).
+pub fn trsm_rltn(crew: &mut Crew, a: MatRef, b: MatMut) {
+    let n = b.cols();
+    assert_eq!(a.rows(), n, "trsm_rltn: A rows");
+    assert_eq!(a.cols(), n, "trsm_rltn: A cols");
+    let m = b.rows();
+    if m == 0 || n == 0 {
+        return;
+    }
+    span(Kind::Trsm, "trsm_rltn", || {
+        crew.parallel_ranges(m, 8, |rows| {
+            for i in rows {
+                for j in 0..n {
+                    let mut s = b.at(i, j);
+                    for p in 0..j {
+                        s -= a.at(j, p) * b.at(i, p);
+                    }
+                    b.set(i, j, s / a.at(j, j));
+                }
+            }
+        });
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +167,52 @@ mod tests {
         }
         let mut b2 = b0.clone();
         trsm_llu(&mut crew, &params, a.view(), b2.view_mut());
+        assert!(b1.max_abs_diff(&b2) == 0.0);
+    }
+
+    fn lower_nonunit(n: usize, seed: u64) -> Matrix {
+        let r = Matrix::random(n, n, seed);
+        Matrix::from_fn(n, n, |i, j| {
+            use std::cmp::Ordering::*;
+            match i.cmp(&j) {
+                Greater => r[(i, j)] - 0.5,
+                Equal => 2.0 + r[(i, j)],
+                Less => 0.0,
+            }
+        })
+    }
+
+    #[test]
+    fn rltn_solves_right_transposed_system() {
+        // X0 random; B := X0 · Lᵀ, then trsm_rltn must recover X0.
+        for &(m, n) in &[(1usize, 1usize), (7, 4), (40, 13), (65, 32)] {
+            let l = lower_nonunit(n, (m * 10 + n) as u64);
+            let x0 = Matrix::random(m, n, 5);
+            let lt = l.transposed();
+            let mut b = naive::matmul(&x0, &lt);
+            let mut crew = Crew::new();
+            trsm_rltn(&mut crew, l.view(), b.view_mut());
+            let d = b.max_abs_diff(&x0);
+            assert!(d < 1e-10, "m={m} n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn rltn_reads_only_lower_triangle() {
+        let n = 9;
+        let mut l = lower_nonunit(n, 8);
+        let b0 = Matrix::random(6, n, 9);
+        let mut b1 = b0.clone();
+        let mut crew = Crew::new();
+        trsm_rltn(&mut crew, l.view(), b1.view_mut());
+        // Poison the strict upper triangle; result must not change.
+        for j in 1..n {
+            for i in 0..j {
+                l[(i, j)] = f64::NAN;
+            }
+        }
+        let mut b2 = b0.clone();
+        trsm_rltn(&mut crew, l.view(), b2.view_mut());
         assert!(b1.max_abs_diff(&b2) == 0.0);
     }
 

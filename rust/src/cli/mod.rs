@@ -7,6 +7,7 @@ use std::collections::HashMap;
 /// Parsed `--key value` / `--flag` / positional arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments in order of appearance.
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
 }

@@ -1,0 +1,243 @@
+//! Right-looking Cholesky (`A = L·Lᵀ`, lower triangle) as a
+//! [`Factorization`] instance.
+//!
+//! The panel step factorizes a diagonal block with the unblocked
+//! [`chol_unblocked`] and solves the block column below it with the
+//! malleable right-side TRSM ([`trsm_rltn`]); the trailing update is the
+//! lower-trapezoid SYRK ([`syrk_ln`]), whose bulk runs on the packed
+//! malleable GEMM and therefore carries the Worker-Sharing entry points.
+//! There is no pivot step (`apply_left` is the default no-op) and no
+//! per-panel state: applying a committed panel only reads the factored
+//! columns themselves.
+//!
+//! ET contract: the panel is blocked left-looking over `b_i`-column inner
+//! blocks — each inner block is first brought up to date with a
+//! trapezoidal SYRK against the panel's factored prefix, then factorized
+//! — so an ET cut between inner blocks leaves the suffix columns bitwise
+//! untouched, exactly like the LU panel (DESIGN.md §11).
+//!
+//! The input must be symmetric positive definite; only the lower triangle
+//! (and the diagonal) is ever read or written, so whatever the caller
+//! stores above the diagonal survives the factorization.
+
+use super::{FactorKind, Factorization, PanelStep};
+use crate::blis::{syrk_ln, trsm_rltn, BlisParams};
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+use crate::sim::HwModel;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// The Cholesky kind (zero-sized dispatch token).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct CholFactor;
+
+/// Unblocked lower Cholesky of the square block `a` (LAPACK `potf2`,
+/// reciprocal-multiply scaling like the LU reference so blocked and
+/// unblocked paths share per-element operation chains). Reads and writes
+/// the lower triangle only. The block must be SPD after the caller's
+/// left-looking updates — a non-positive diagonal yields NaNs, which the
+/// residual checks catch (no pivoting, matching LAPACK semantics).
+pub fn chol_unblocked(a: MatMut) {
+    let n = a.rows();
+    debug_assert_eq!(a.cols(), n);
+    for k in 0..n {
+        let dk = a.at(k, k).sqrt();
+        a.set(k, k, dk);
+        if dk != 0.0 {
+            let r = 1.0 / dk;
+            for i in k + 1..n {
+                a.update(i, k, |x| x * r);
+            }
+        }
+        for j in k + 1..n {
+            let ajk = a.at(j, k);
+            if ajk == 0.0 {
+                continue;
+            }
+            for i in j..n {
+                a.update(i, j, |x| x - a.at(i, k) * ajk);
+            }
+        }
+    }
+}
+
+impl Factorization for CholFactor {
+    type State = ();
+    type Acc = usize;
+
+    fn kind(&self) -> FactorKind {
+        FactorKind::Chol
+    }
+
+    fn panel(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        b: usize,
+        bi: usize,
+        _ll: bool,
+        stop: Option<&AtomicBool>,
+    ) -> PanelStep<()> {
+        let m = a.rows();
+        let p = a.sub(f, f, m - f, b); // rows f..m, cols f..f+b
+        let mp = p.rows();
+        let kmax = mp.min(b);
+        let bi = bi.max(1);
+        let mut kk = 0;
+        let mut terminated_early = false;
+        while kk < kmax {
+            let bb = bi.min(kmax - kk);
+            if kk > 0 {
+                // Left-looking: bring columns kk..kk+bb up to date with
+                // the panel's factored prefix (trapezoidal SYRK; columns
+                // to the right stay untouched — the ET property).
+                syrk_ln(
+                    crew,
+                    params,
+                    -1.0,
+                    p.sub(kk, 0, mp - kk, kk).as_ref(),
+                    p.sub(kk, kk, mp - kk, bb),
+                );
+            }
+            // Factorize the diagonal block, then the rows below via the
+            // malleable right-side TRSM.
+            chol_unblocked(p.sub(kk, kk, bb, bb));
+            if kk + bb < mp {
+                trsm_rltn(
+                    crew,
+                    p.sub(kk, kk, bb, bb).as_ref(),
+                    p.sub(kk + bb, kk, mp - kk - bb, bb),
+                );
+            }
+            kk += bb;
+            // ET poll — end of the inner iteration.
+            if kk < kmax {
+                if let Some(flag) = stop {
+                    if flag.load(Ordering::Acquire) {
+                        terminated_early = true;
+                        break;
+                    }
+                }
+            }
+        }
+        PanelStep {
+            state: (),
+            k_done: kk,
+            terminated_early,
+        }
+    }
+
+    fn apply(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        bc: usize,
+        _st: &(),
+        j0: usize,
+        j1: usize,
+    ) {
+        if j0 >= j1 {
+            return;
+        }
+        let m = a.rows();
+        // A[j0.., j0..j1] -= L[j0.., f..f+bc] · L[j0..j1, f..f+bc]ᵀ
+        // (lower trapezoid only — the strict upper triangle of the
+        // leading square keeps the caller's symmetric data).
+        syrk_ln(
+            crew,
+            params,
+            -1.0,
+            a.sub(j0, f, m - j0, bc).as_ref(),
+            a.sub(j0, j0, m - j0, j1 - j0),
+        );
+    }
+
+    fn commit(&self, acc: &mut usize, _st: &(), k_done: usize) {
+        *acc += k_done;
+    }
+}
+
+/// Cost-model estimate of the single-core seconds left in an `n × n`
+/// Cholesky after `k` committed columns: per remaining step, a panel
+/// (priced as the unblocked trapezoid) plus a SYRK trailing update
+/// (priced as half the equivalent GEMM — only the lower trapezoid is
+/// computed).
+pub fn remaining_cost_chol(hw: &HwModel, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
+    let bo = bo.max(1);
+    let mut total = 0.0;
+    let mut kk = k.min(n);
+    while kk < n {
+        let b = bo.min(n - kk);
+        total += hw.panel_time(n - kk, b, bi, 1) * 0.5;
+        let rest = n - kk - b;
+        if rest > 0 {
+            total += hw.trsm_time(b, rest, 1);
+            total += hw.gemm_time(rest, rest, b, 1) * 0.5;
+        }
+        kk += b;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{naive, Matrix};
+
+    #[test]
+    fn unblocked_matches_naive_reference() {
+        for n in [1usize, 2, 7, 16, 33] {
+            let a0 = Matrix::random_spd(n, n as u64 + 1);
+            let mut f1 = a0.clone();
+            chol_unblocked(f1.view_mut());
+            let r = naive::chol_residual(&a0, &f1);
+            assert!(r < 1e-13, "n={n} residual={r}");
+        }
+    }
+
+    #[test]
+    fn panel_full_width_matches_unblocked_numerically() {
+        let params = BlisParams::tiny();
+        let n = 24;
+        let a0 = Matrix::random_spd(n, 3);
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let out = CholFactor.panel(&mut crew, &params, f.view_mut(), 0, n, 4, true, None);
+        assert_eq!(out.k_done, n);
+        assert!(!out.terminated_early);
+        let r = naive::chol_residual(&a0, &f);
+        assert!(r < 1e-12, "residual {r}");
+    }
+
+    #[test]
+    fn panel_et_cut_leaves_suffix_untouched() {
+        let params = BlisParams::tiny();
+        let n = 32;
+        let bi = 4;
+        let a0 = Matrix::random_spd(n, 9);
+        let mut f = a0.clone();
+        let stop = AtomicBool::new(true); // already set: cut after one block
+        let mut crew = Crew::new();
+        let out = CholFactor.panel(
+            &mut crew,
+            &params,
+            f.view_mut(),
+            0,
+            n,
+            bi,
+            true,
+            Some(&stop),
+        );
+        assert!(out.terminated_early);
+        assert_eq!(out.k_done, bi);
+        for j in out.k_done..n {
+            for i in 0..n {
+                assert_eq!(f[(i, j)], a0[(i, j)], "suffix touched at ({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,565 @@
+//! The generic factorization drivers: one blocked right-looking driver
+//! with request-level checkpoints, and **one** look-ahead driver carrying
+//! the paper's Worker-Sharing and Early-Termination mechanisms — shared
+//! by every [`Factorization`] kind (LU, Cholesky, QR). There are no
+//! per-kind copies of the scheduling machinery; a kind only supplies its
+//! panel and trailing-update kernels through the trait.
+//!
+//! Per look-ahead iteration the trailing submatrix is split column-wise
+//! into `P` (the *next* panel, width `b_n`) and `R` (the remainder):
+//!
+//! ```text
+//!        f      f+bc     f+bc+bn          n
+//!        |  cur  |    P    |       R      |
+//! ```
+//!
+//! Team `T_PF` (pool workers `0..t_pf`, worker 0 leading) applies the
+//! current panel's transformation to `P` and factorizes it. Team `T_RU`
+//! (the calling thread leading workers `t_pf..`) applies it to `R` —
+//! concurrently, since the branches touch disjoint columns.
+//!
+//! - **WS** (`malleable`): when `T_PF` finishes first, its workers enlist
+//!   into `T_RU`'s crew and join the in-flight trailing update at the
+//!   next Loop-3 entry point. When `R` is empty (tail of the
+//!   factorization) the *reverse* sharing happens: `T_RU` enlists into
+//!   `T_PF`'s crew.
+//! - **ET** (`early_term`): when `T_RU` finishes first it raises
+//!   `ru_done`; the left-looking inner panel polls the flag after each
+//!   `b_i` block and aborts, returning `k_done < b_n`. The next
+//!   iteration's "current panel" is then only `k_done` wide — the block
+//!   size self-adjusts (paper §4.2, §5.3).
+//!
+//! The ET flag is a plain `AtomicBool` with one writer and one reader —
+//! the paper's race-free synchronization — and the factors produced are
+//! identical (to roundoff) to the plain blocked algorithm for any flag
+//! timing, because the left-looking panels leave aborted columns
+//! untouched (the per-kind ET contract, DESIGN.md §11).
+
+use super::{FactorCtl, Factorization, LaCtl, LaOpts, LaStats, PanelStep};
+use crate::blis::{BlisParams, PackArena};
+use crate::matrix::{MatMut, Matrix};
+use crate::pool::{Crew, Pool};
+use crate::trace::{span, Kind};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Blocked right-looking factorization with cooperative checkpoints
+/// between panel steps (the serve layer's per-request driver).
+///
+/// Returns the accumulated kind output, the committed column count, and
+/// whether a cancel flag cut the run short. After `cols_done` committed
+/// columns the matrix holds a consistent partial factorization: columns
+/// `0..cols_done` carry their final factor entries and the trailing block
+/// is fully updated.
+pub fn blocked_ctl<F: Factorization>(
+    fk: &F,
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: MatMut,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+) -> (F::Acc, usize, bool) {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    let bo = bo.max(1);
+    let mut acc = F::Acc::default();
+    let mut cancelled = false;
+    let mut k = 0;
+    while k < kmax {
+        if let Some(c) = ctl.cancel {
+            if c.load(Ordering::Acquire) {
+                cancelled = true;
+                break;
+            }
+        }
+        let b = bo.min(kmax - k);
+        let plabel = match ctl.tag {
+            None => String::from("panel"),
+            Some(tag) => format!("{tag}.panel[{k}]"),
+        };
+        let st = span(Kind::Panel, &plabel, || {
+            fk.panel(crew, params, a, k, b, bi, false, None)
+        });
+        debug_assert_eq!(st.k_done, b);
+        fk.apply_left(crew, params, a, k, b, &st.state);
+        if n > k + b {
+            let ulabel = match ctl.tag {
+                None => String::from("update"),
+                Some(tag) => format!("{tag}.update[{k}]"),
+            };
+            span(Kind::Gemm, &ulabel, || {
+                fk.apply(crew, params, a, k, b, &st.state, k + b, n);
+            });
+        }
+        fk.commit(&mut acc, &st.state, st.k_done);
+        k += b;
+        if let Some(cb) = ctl.on_checkpoint {
+            cb(k);
+        }
+    }
+    (acc, k, cancelled)
+}
+
+/// The generic look-ahead driver with Worker Sharing and Early
+/// Termination (module docs above) and a cooperative cancellation
+/// checkpoint between outer panel steps (see [`LaCtl`]).
+#[allow(clippy::too_many_arguments)]
+pub fn lookahead_ctl<F: Factorization>(
+    fk: &F,
+    pool: &Pool,
+    params: &BlisParams,
+    a: &mut Matrix,
+    bo: usize,
+    bi: usize,
+    opts: &LaOpts,
+    ctl: Option<&LaCtl>,
+) -> (F::Acc, LaStats) {
+    let av = a.view_mut();
+    let (m, n) = (av.rows(), av.cols());
+    let kmax = m.min(n);
+    let bo = bo.max(1).min(kmax.max(1));
+    let mut stats = LaStats::default();
+    let mut acc = F::Acc::default();
+    let mut committed = 0usize;
+    if kmax == 0 {
+        return (acc, stats);
+    }
+    // One packing arena for every crew this factorization creates (the
+    // per-iteration PF/RU crews, prologue, epilogue): packed-buffer
+    // leases reach steady state after the first trailing update and
+    // allocate nothing thereafter (DESIGN.md §9).
+    let arena = Arc::new(PackArena::new());
+    if pool.workers() == 0 {
+        // A single thread cannot run two branches: degrade to the plain
+        // blocked RL algorithm (same factorization, no TP).
+        let mut crew = Crew::with_arena(Arc::clone(&arena));
+        let fctl = FactorCtl {
+            cancel: ctl.map(|c| &c.cancel),
+            ..Default::default()
+        };
+        let (out, cols_done, cancelled) = blocked_ctl(fk, &mut crew, params, av, bo, bi, &fctl);
+        stats.cancelled = cancelled;
+        stats.panel_widths = vec![bo.min(kmax); cols_done.div_ceil(bo.max(1))];
+        if let Some(c) = ctl {
+            c.cols_done.store(cols_done, Ordering::Release);
+        }
+        return (out, stats);
+    }
+    let t_pf = opts.t_pf.max(1).min(pool.workers());
+
+    // ---- Prologue: factorize the first panel with the full team. ----
+    let b0 = bo.min(kmax);
+    let mut crew_all = Crew::with_arena(Arc::clone(&arena));
+    let all_members: Vec<_> = (0..pool.workers())
+        .map(|w| {
+            let s = crew_all.shared();
+            let e = opts.entry;
+            pool.submit(w, move || s.member_loop(e))
+        })
+        .collect();
+    let first = span(Kind::Panel, "panel[0]", || {
+        fk.panel(&mut crew_all, params, av, 0, b0, bi, false, None)
+    });
+    crew_all.disband();
+    for h in all_members {
+        h.wait();
+    }
+
+    // `cur`: the factorized-but-not-yet-applied panel [f, f+bc). Its
+    // state is shared read-only between the PF and RU branches.
+    let mut f = 0usize;
+    let mut bc = first.k_done;
+    let mut st_cur: Arc<F::State> = Arc::new(first.state);
+    // ET's adaptive block size (paper §4.2: a too-large b_o "will be
+    // adjusted for the current (and, possibly, subsequent) iterations").
+    // On a cut the attempted width shrinks to what proved sustainable; it
+    // regrows by b_i per uncut iteration, bounded by b_o.
+    let mut attempt = bo;
+
+    loop {
+        let right0 = f + bc;
+        if let Some(c) = ctl {
+            if c.is_cancelled() {
+                // Request-level ET: commit the already-factorized current
+                // panel (including anything it owes the left block) and
+                // stop. The trailing columns keep their pre-update
+                // values; see [`LaCtl::request_cancel`].
+                stats.cancelled = true;
+                stats.panel_widths.push(bc);
+                let mut crew = Crew::with_arena(Arc::clone(&arena));
+                fk.apply_left(&mut crew, params, av, f, bc, &st_cur);
+                fk.commit(&mut acc, &st_cur, bc);
+                committed += bc;
+                c.cols_done.store(committed, Ordering::Release);
+                break;
+            }
+        }
+        stats.panel_widths.push(bc);
+
+        if right0 >= kmax {
+            // ---- Epilogue: no panels left to factor. Apply the current
+            // panel's transformation to any remaining right columns
+            // (wide matrices) and whatever it owes the left block, then
+            // finish.
+            let mut crew = Crew::with_arena(Arc::clone(&arena));
+            let members: Vec<_> = (0..pool.workers())
+                .map(|w| {
+                    let s = crew.shared();
+                    let e = opts.entry;
+                    pool.submit(w, move || s.member_loop(e))
+                })
+                .collect();
+            if right0 < n {
+                fk.apply(&mut crew, params, av, f, bc, &st_cur, right0, n);
+            }
+            fk.apply_left(&mut crew, params, av, f, bc, &st_cur);
+            fk.commit(&mut acc, &st_cur, bc);
+            committed += bc;
+            crew.disband();
+            for h in members {
+                h.wait();
+            }
+            break;
+        }
+
+        stats.iters += 1;
+        let bn = attempt.min(kmax - right0);
+        let r0 = right0 + bn; // first column of R
+        let r_cols = n - r0;
+
+        // Per-iteration shared state.
+        let ru_done = Arc::new(AtomicBool::new(false));
+        let pf_work_done = Arc::new(AtomicBool::new(false));
+        let outcome: Arc<Mutex<Option<PanelStep<F::State>>>> = Arc::new(Mutex::new(None));
+
+        let mut crew_ru = Crew::with_arena(Arc::clone(&arena));
+        let ru_shared = crew_ru.shared();
+        let crew_pf = Crew::with_arena(Arc::clone(&arena));
+        let pf_shared = crew_pf.shared();
+
+        // RU members: workers t_pf.. join RU's crew — unless R is empty,
+        // in which case they help the panel branch instead (reverse WS).
+        let r_empty = r_cols == 0;
+        let join_pf_first = r_empty && opts.malleable;
+        let mut handles = Vec::new();
+        for w in t_pf..pool.workers() {
+            let rs = Arc::clone(&ru_shared);
+            let ps = Arc::clone(&pf_shared);
+            let e = opts.entry;
+            let jp = join_pf_first;
+            handles.push(pool.submit(w, move || {
+                if jp {
+                    ps.member_loop(e);
+                }
+                rs.member_loop(e);
+            }));
+        }
+        // PF members: workers 1..t_pf, chained into RU on WS.
+        for w in 1..t_pf {
+            let ps = Arc::clone(&pf_shared);
+            let rs = Arc::clone(&ru_shared);
+            let e = opts.entry;
+            let mall = opts.malleable;
+            handles.push(pool.submit(w, move || {
+                ps.member_loop(e);
+                if mall {
+                    rs.member_loop(e);
+                }
+            }));
+        }
+
+        // ---- PF branch on worker 0. ----
+        let pf_task = {
+            let st = Arc::clone(&st_cur);
+            let params = *params;
+            let fk2 = fk.clone();
+            let early = opts.early_term;
+            let mall = opts.malleable;
+            let entry = opts.entry;
+            let ru_done = Arc::clone(&ru_done);
+            let pf_work_done = Arc::clone(&pf_work_done);
+            let outcome = Arc::clone(&outcome);
+            let rs = Arc::clone(&ru_shared);
+            // Move the crew (leader handle) into the worker task.
+            let mut crew_pf = crew_pf;
+            let arm_et = early && !r_empty;
+            pool.submit(0, move || {
+                // PF1+PF2: current panel's transformation applied to P.
+                span(Kind::Gemm, "PF.update", || {
+                    fk2.apply(&mut crew_pf, &params, av, f, bc, &st, right0, r0);
+                });
+                // PF3: factorize the next panel.
+                let out = span(Kind::Panel, "PF.panel", || {
+                    fk2.panel(
+                        &mut crew_pf,
+                        &params,
+                        av,
+                        right0,
+                        bn,
+                        bi,
+                        early,
+                        if arm_et { Some(&ru_done) } else { None },
+                    )
+                });
+                *outcome.lock().unwrap() = Some(out);
+                pf_work_done.store(true, Ordering::Release);
+                crew_pf.disband();
+                // Worker Sharing: join the remainder update in flight.
+                if mall {
+                    rs.member_loop(entry);
+                }
+            })
+        };
+
+        // ---- RU branch on the calling thread. ----
+        if r_cols > 0 {
+            span(Kind::Gemm, "RU.update", || {
+                fk.apply(&mut crew_ru, params, av, f, bc, &st_cur, r0, n);
+            });
+        }
+        // Whatever the current panel owes the left block (disjoint from
+        // P and R; LU's lazy left swaps).
+        span(Kind::Swap, "RU.left", || {
+            fk.apply_left(&mut crew_ru, params, av, f, bc, &st_cur);
+        });
+        // ET: tell the panel branch the update is finished.
+        ru_done.store(true, Ordering::Release);
+
+        // Reverse WS: if R was empty, the leader helps the panel team.
+        if join_pf_first {
+            stats.ws_reverse += 1;
+            pf_shared.member_loop(opts.entry);
+        }
+
+        // Wait for the panel result (the PF worker may still be enlisted
+        // in our crew afterwards — that is fine, it parks on job waits).
+        let backoff = crossbeam_utils::Backoff::new();
+        while !pf_work_done.load(Ordering::Acquire) {
+            backoff.snooze();
+        }
+        if opts.malleable && crew_ru.stats().max_members > (pool.workers() - t_pf) {
+            stats.ws_forward += 1;
+        }
+        crew_ru.disband();
+        for h in handles {
+            h.wait();
+        }
+        pf_task.wait();
+
+        let out = outcome.lock().unwrap().take().expect("panel outcome");
+        if out.terminated_early {
+            stats.et_cuts += 1;
+            attempt = out.k_done.max(bi.max(1));
+        } else {
+            attempt = (attempt + bi.max(1)).min(bo);
+        }
+
+        // Commit the current panel and adopt the next.
+        fk.commit(&mut acc, &st_cur, bc);
+        committed += bc;
+        f = right0;
+        bc = out.k_done;
+        st_cur = Arc::new(out.state);
+        if let Some(c) = ctl {
+            c.cols_done.store(committed, Ordering::Release);
+        }
+    }
+
+    if let Some(c) = ctl {
+        c.cols_done.store(committed, Ordering::Release);
+    }
+    debug_assert!(stats.cancelled || committed == kmax);
+    (acc, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{CholFactor, FactorKind, LuFactor, QrFactor};
+    use crate::matrix::naive;
+
+    #[test]
+    fn blocked_lu_matches_lu_blocked_rl_bitwise() {
+        // The generic blocked driver must perform the exact operation
+        // sequence of the LU-specific one it generalizes.
+        let a0 = Matrix::random(60, 60, 41);
+        let params = BlisParams::tiny();
+
+        let mut f1 = a0.clone();
+        let mut crew1 = Crew::new();
+        let p1 = crate::lu::lu_blocked_rl(&mut crew1, &params, f1.view_mut(), 16, 4);
+
+        let mut f2 = a0.clone();
+        let mut crew2 = Crew::new();
+        let (p2, done, cancelled) = blocked_ctl(
+            &LuFactor,
+            &mut crew2,
+            &params,
+            f2.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert!(!cancelled);
+        assert_eq!(done, 60);
+        assert_eq!(p1, p2);
+        for (x, y) in f1.data().iter().zip(f2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn blocked_chol_and_qr_reconstruct() {
+        let params = BlisParams::tiny();
+        let n = 48;
+
+        let a0 = Matrix::random_spd(n, 5);
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let (_, done, cancelled) = blocked_ctl(
+            &CholFactor,
+            &mut crew,
+            &params,
+            f.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert!(!cancelled);
+        assert_eq!(done, n);
+        let r = naive::chol_residual(&a0, &f);
+        assert!(r < 1e-12, "chol residual {r}");
+
+        let a0 = Matrix::random(n, n, 6);
+        let mut f = a0.clone();
+        let (tau, done, _) = blocked_ctl(
+            &QrFactor,
+            &mut crew,
+            &params,
+            f.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(done, n);
+        assert_eq!(tau.len(), n);
+        let r = naive::qr_residual(&a0, &f, &tau);
+        assert!(r < 1e-11, "qr residual {r}");
+    }
+
+    #[test]
+    fn lookahead_chol_matches_blocked_bitwise() {
+        // Like LU: the look-ahead schedule reorganizes who computes what
+        // when, but performs the same per-element operation chains.
+        let n = 64;
+        let a0 = Matrix::random_spd(n, 7);
+        let params = BlisParams::tiny();
+
+        let mut f1 = a0.clone();
+        let mut crew = Crew::new();
+        let (_, d1, _) = blocked_ctl(
+            &CholFactor,
+            &mut crew,
+            &params,
+            f1.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(d1, n);
+
+        let pool = Pool::new(2);
+        let mut f2 = a0.clone();
+        let (_, stats) = lookahead_ctl(
+            &CholFactor,
+            &pool,
+            &params,
+            &mut f2,
+            16,
+            4,
+            &LaOpts::default(),
+            None,
+        );
+        assert!(stats.iters > 0);
+        // Only the lower triangle is meaningful; the LA driver never
+        // touches the upper one either, so full bitwise equality holds.
+        for (x, y) in f1.data().iter().zip(f2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn lookahead_qr_matches_blocked_bitwise() {
+        let n = 56;
+        let a0 = Matrix::random(n, n, 8);
+        let params = BlisParams::tiny();
+
+        let mut f1 = a0.clone();
+        let mut crew = Crew::new();
+        let (t1, d1, _) = blocked_ctl(
+            &QrFactor,
+            &mut crew,
+            &params,
+            f1.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(d1, n);
+
+        let pool = Pool::new(2);
+        let mut f2 = a0.clone();
+        let (t2, _) = lookahead_ctl(
+            &QrFactor,
+            &pool,
+            &params,
+            &mut f2,
+            16,
+            4,
+            &LaOpts::default(),
+            None,
+        );
+        assert_eq!(t1.len(), t2.len());
+        for (x, y) in t1.iter().zip(&t2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in f1.data().iter().zip(f2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn cancel_leaves_clean_prefix_for_every_kind() {
+        let n = 64;
+        let pool = Pool::new(2);
+        let params = BlisParams::tiny();
+        for &kind in FactorKind::all() {
+            let a0 = match kind {
+                FactorKind::Chol => Matrix::random_spd(n, 11),
+                _ => Matrix::random(n, n, 11),
+            };
+            let mut f = a0.clone();
+            let ctl = LaCtl::new();
+            ctl.request_cancel(); // cancel before the first outer step
+            let opts = LaOpts {
+                malleable: true,
+                ..Default::default()
+            };
+            let out = crate::factor::factorize_lookahead(
+                kind,
+                &pool,
+                &params,
+                &mut f,
+                16,
+                4,
+                &opts,
+                Some(&ctl),
+            );
+            assert!(out.cancelled, "{}", kind.name());
+            let done = ctl.cols_done();
+            assert_eq!(done, out.cols_done, "{}", kind.name());
+            assert!(done > 0 && done < n, "{}: done={done}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! LU with partial pivoting as a [`Factorization`] instance — the
+//! paper's original workload, now one kind among three under the generic
+//! drivers.
+//!
+//! The panel kernels are the existing [`crate::lu::panel`] pair
+//! (right-looking eager, left-looking lazy with the ET poll); the
+//! trailing update is LASWP + TRSM + GEMM; the pivot step is the lazy
+//! left row swap. Pivots are absolutized against the panel's top row as
+//! soon as the panel returns, so the state shared between the look-ahead
+//! branches is a plain `Vec<usize>` of absolute pivot rows.
+
+use super::{FactorKind, Factorization, PanelStep};
+use crate::blis::{gemm, trsm_llu, BlisParams};
+use crate::lu::panel::{panel_ll, panel_rl};
+use crate::matrix::MatMut;
+use crate::pool::Crew;
+use crate::sim::HwModel;
+use std::sync::atomic::AtomicBool;
+
+/// The LU-with-partial-pivoting kind (zero-sized dispatch token).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct LuFactor;
+
+/// `laswp` with pivot indices relative to row `base` (the panel top):
+/// swap rows `base+k` and `piv[k]` (absolute) for columns `jlo..jhi`.
+/// Reuses [`crate::blis::laswp::for_each_col_strip`]'s chunking: each strip
+/// applies the whole pivot sequence while its rows are cache-resident.
+pub(crate) fn laswp_abs(
+    crew: &mut Crew,
+    a: MatMut,
+    piv: &[usize],
+    base: usize,
+    jlo: usize,
+    jhi: usize,
+) {
+    if piv.is_empty() || jlo >= jhi {
+        return;
+    }
+    crate::trace::span(crate::trace::Kind::Swap, "laswp", || {
+        crate::blis::laswp::for_each_col_strip(crew, jlo, jhi, |lo, hi| {
+            for (k, &p) in piv.iter().enumerate() {
+                let row = base + k;
+                if p != row {
+                    a.swap_rows(row, p, lo, hi);
+                }
+            }
+        });
+    });
+}
+
+impl Factorization for LuFactor {
+    type State = Vec<usize>;
+    type Acc = Vec<usize>;
+
+    fn kind(&self) -> FactorKind {
+        FactorKind::Lu
+    }
+
+    fn panel(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        b: usize,
+        bi: usize,
+        ll: bool,
+        stop: Option<&AtomicBool>,
+    ) -> PanelStep<Vec<usize>> {
+        let m = a.rows();
+        let p = a.sub(f, f, m - f, b);
+        let out = if ll {
+            panel_ll(crew, params, p, bi, stop)
+        } else {
+            debug_assert!(stop.is_none());
+            panel_rl(crew, params, p, bi)
+        };
+        PanelStep {
+            state: out.ipiv.iter().map(|q| q + f).collect(),
+            k_done: out.k_done,
+            terminated_early: out.terminated_early,
+        }
+    }
+
+    fn apply(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        bc: usize,
+        st: &Vec<usize>,
+        j0: usize,
+        j1: usize,
+    ) {
+        if j0 >= j1 {
+            return;
+        }
+        let m = a.rows();
+        let w = j1 - j0;
+        laswp_abs(crew, a, st, f, j0, j1);
+        trsm_llu(
+            crew,
+            params,
+            a.sub(f, f, bc, bc).as_ref(),
+            a.sub(f, j0, bc, w),
+        );
+        let below = f + bc;
+        if m > below {
+            gemm(
+                crew,
+                params,
+                -1.0,
+                a.sub(below, f, m - below, bc).as_ref(),
+                a.sub(f, j0, bc, w).as_ref(),
+                a.sub(below, j0, m - below, w),
+            );
+        }
+    }
+
+    fn apply_left(
+        &self,
+        crew: &mut Crew,
+        _params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        _bc: usize,
+        st: &Vec<usize>,
+    ) {
+        laswp_abs(crew, a, st, f, 0, f);
+    }
+
+    fn commit(&self, acc: &mut Vec<usize>, st: &Vec<usize>, k_done: usize) {
+        debug_assert_eq!(st.len(), k_done);
+        acc.extend_from_slice(st);
+    }
+}
+
+/// Cost-model estimate of the single-core seconds left in an `m × n` LU
+/// after `k` committed columns — the sum of every remaining step's panel,
+/// LASWP, TRSM, and GEMM times under `hw`.
+pub fn remaining_cost_lu(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
+    let kmax = m.min(n);
+    let bo = bo.max(1);
+    let mut total = 0.0;
+    let mut kk = k.min(kmax);
+    while kk < kmax {
+        let b = bo.min(kmax - kk);
+        total += hw.panel_time(m - kk, b, bi, 1);
+        let rest = n - kk - b;
+        if rest > 0 {
+            total += hw.laswp_time(b, n, 1);
+            total += hw.trsm_time(b, rest, 1);
+            total += hw.gemm_time(m - kk - b, rest, b, 1);
+        }
+        kk += b;
+    }
+    total
+}

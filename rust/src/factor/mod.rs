@@ -1,0 +1,477 @@
+//! §factor — the **malleable factorization family** (DESIGN.md §11).
+//!
+//! The paper presents Worker Sharing and Early Termination through LU
+//! with partial pivoting, but both are properties of the *malleable BLAS*
+//! underneath, applicable to any factorization with a panel / trailing-
+//! update structure (the follow-up "Programming Parallel Dense Matrix
+//! Factorizations with Look-Ahead and OpenMP", Catalán et al. 2018,
+//! demonstrates exactly that across Cholesky, LU, and QR). This module
+//! factors the scheduling machinery out of the LU driver into a
+//! [`Factorization`] trait and keeps **one** generic look-ahead driver
+//! ([`driver::lookahead_ctl`], with WS and ET) plus **one** generic
+//! blocked driver ([`driver::blocked_ctl`], with request-level
+//! checkpoints) shared by all kinds:
+//!
+//! | Kind | Panel kernel | Trailing update | Pivot/ordering step |
+//! |---|---|---|---|
+//! | [`FactorKind::Lu`] | blocked LU (`lu::panel`) | LASWP + TRSM + GEMM | partial-pivot row swaps |
+//! | [`FactorKind::Chol`] | `potf2` + [`crate::blis::trsm_rltn`] | [`crate::blis::syrk_ln`] | none |
+//! | [`FactorKind::Qr`] | Householder `geqr2` | compact-WY [`crate::blis::house::apply_block_qt`] | none |
+//!
+//! The trait contract (which steps may be worker-shared, where the ET
+//! checkpoints sit, and the per-kind determinism invariant) is documented
+//! in DESIGN.md §11.
+
+pub mod chol;
+pub mod driver;
+pub mod lu;
+pub mod qr;
+
+pub use chol::CholFactor;
+pub use lu::LuFactor;
+pub use qr::QrFactor;
+
+use crate::blis::BlisParams;
+use crate::matrix::{MatMut, Matrix};
+use crate::pool::{Crew, EntryPolicy, Pool};
+use crate::sim::HwModel;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Which factorization a request or driver runs — the runtime-dispatch
+/// counterpart of the [`Factorization`] trait.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum FactorKind {
+    /// LU with partial pivoting (`P·A = L·U`).
+    Lu,
+    /// Cholesky (`A = L·Lᵀ`, symmetric positive definite input).
+    Chol,
+    /// Blocked Householder QR (`A = Q·R`).
+    Qr,
+}
+
+impl FactorKind {
+    /// Parse a kind name: `lu`, `chol`/`cholesky`/`llt`, `qr`.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lu" => FactorKind::Lu,
+            "chol" | "cholesky" | "llt" => FactorKind::Chol,
+            "qr" => FactorKind::Qr,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (used in trace tags and bench records).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactorKind::Lu => "lu",
+            FactorKind::Chol => "chol",
+            FactorKind::Qr => "qr",
+        }
+    }
+
+    /// All kinds, in presentation order.
+    pub fn all() -> &'static [FactorKind] {
+        &[FactorKind::Lu, FactorKind::Chol, FactorKind::Qr]
+    }
+
+    /// Flop count of a full `m × n` factorization of this kind.
+    pub fn flops(&self, m: usize, n: usize) -> f64 {
+        match self {
+            FactorKind::Lu => crate::util::lu_flops(m, n),
+            FactorKind::Chol => {
+                let n = n.min(m) as f64;
+                n * n * n / 3.0
+            }
+            FactorKind::Qr => {
+                let (m, n) = (m as f64, n as f64);
+                let k = m.min(n);
+                2.0 * k * k * (m.max(n) - k / 3.0)
+            }
+        }
+    }
+
+    /// Cost-model estimate of the single-core seconds left after `k`
+    /// committed columns — the remaining-work half of the serve layer's
+    /// reallocation policy (DESIGN.md §10).
+    pub fn remaining_cost(
+        &self,
+        hw: &HwModel,
+        m: usize,
+        n: usize,
+        k: usize,
+        bo: usize,
+        bi: usize,
+    ) -> f64 {
+        match self {
+            FactorKind::Lu => lu::remaining_cost_lu(hw, m, n, k, bo, bi),
+            FactorKind::Chol => chol::remaining_cost_chol(hw, m, k, bo, bi),
+            FactorKind::Qr => qr::remaining_cost_qr(hw, m, n, k, bo, bi),
+        }
+    }
+
+    /// Check that an `m × n` problem is well-formed for this kind
+    /// (Cholesky requires a square matrix).
+    pub fn validate(&self, m: usize, n: usize) -> Result<(), String> {
+        if *self == FactorKind::Chol && m != n {
+            return Err(format!("cholesky requires a square matrix, got {m}x{n}"));
+        }
+        Ok(())
+    }
+}
+
+/// One committed panel step: the kind-specific state needed to apply the
+/// panel's transformation ([`Factorization::State`]) plus how far the
+/// panel factorization got before an Early-Termination cut.
+pub struct PanelStep<S> {
+    /// Whatever [`Factorization::apply`] needs (pivots, reflector block,
+    /// nothing for Cholesky).
+    pub state: S,
+    /// Columns actually factorized (`< b` only after an ET cut).
+    pub k_done: usize,
+    /// Whether an ET signal cut the panel short.
+    pub terminated_early: bool,
+}
+
+/// The panel / trailing-update contract the generic drivers schedule.
+///
+/// Implementations describe *what* one factorization step computes; the
+/// drivers in [`driver`] own *when and by whom* it runs (team split,
+/// Worker Sharing, Early Termination, cancellation checkpoints). Every
+/// method must be bitwise deterministic with respect to crew size — the
+/// trailing reductions it performs must be sequential per output element
+/// (DESIGN.md §8, §11).
+pub trait Factorization: Clone + Send + Sync + 'static {
+    /// Per-panel state handed from [`Self::panel`] to [`Self::apply`]
+    /// (absolute pivot rows for LU, the compact-WY reflector block for
+    /// QR, nothing for Cholesky). Shared read-only across the two
+    /// look-ahead branches.
+    type State: Send + Sync + 'static;
+    /// Accumulated output of a whole factorization (all pivots, all
+    /// `tau`s, or a committed-column count).
+    type Acc: Default + Send;
+
+    /// The runtime tag of this implementation.
+    fn kind(&self) -> FactorKind;
+
+    /// Factorize the panel of width `b` whose top-left corner is
+    /// `(f, f)` of the full matrix `a` (rows `f..m`), with inner block
+    /// size `bi`.
+    ///
+    /// With `ll` set the panel must run its **left-looking** (lazy)
+    /// variant so that `stop` — the Early-Termination flag, polled
+    /// between inner blocks — can cut it short leaving a clean prefix of
+    /// `k_done` factorized columns and a suffix that is bitwise exactly
+    /// as on entry. `stop` is only ever `Some` when `ll` is set.
+    #[allow(clippy::too_many_arguments)]
+    fn panel(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        b: usize,
+        bi: usize,
+        ll: bool,
+        stop: Option<&AtomicBool>,
+    ) -> PanelStep<Self::State>;
+
+    /// Apply the committed panel (corner `(f, f)`, width `bc`, state
+    /// `st`) to columns `j0..j1` of the trailing matrix. The drivers call
+    /// this concurrently for disjoint column ranges (the look-ahead `P` /
+    /// `R` split), so implementations must write only within rows `f..m`
+    /// of columns `j0..j1` and read the panel columns immutably.
+    #[allow(clippy::too_many_arguments)]
+    fn apply(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        bc: usize,
+        st: &Self::State,
+        j0: usize,
+        j1: usize,
+    );
+
+    /// Apply whatever the committed panel owes the already-factored
+    /// columns `0..f` — LU's lazy left row swaps. A no-op for kinds
+    /// without a pivoting step.
+    fn apply_left(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        bc: usize,
+        st: &Self::State,
+    ) {
+        let _ = (crew, params, a, f, bc, st);
+    }
+
+    /// Fold a committed panel's state into the factorization's output.
+    fn commit(&self, acc: &mut Self::Acc, st: &Self::State, k_done: usize);
+}
+
+/// Which look-ahead refinements are active (shared by every
+/// [`Factorization`] kind; the paper's `LU_LA` / `LU_MB` / `LU_ET`
+/// ladder).
+#[derive(Copy, Clone, Debug)]
+pub struct LaOpts {
+    /// Worker Sharing via the malleable BLAS (paper §4.1).
+    pub malleable: bool,
+    /// Early termination of the panel factorization (paper §4.2).
+    /// Implies the left-looking inner panel.
+    pub early_term: bool,
+    /// How joining workers enter an in-flight kernel.
+    pub entry: EntryPolicy,
+    /// Threads dedicated to the panel branch (the paper uses 1).
+    pub t_pf: usize,
+}
+
+impl Default for LaOpts {
+    fn default() -> Self {
+        Self {
+            malleable: false,
+            early_term: false,
+            entry: EntryPolicy::JobBoundary,
+            t_pf: 1,
+        }
+    }
+}
+
+/// Execution statistics for the look-ahead driver.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaStats {
+    /// Outer iterations executed.
+    pub iters: usize,
+    /// Iterations whose panel factorization was cut short by ET.
+    pub et_cuts: usize,
+    /// Iterations in which at least one PF worker joined the RU crew
+    /// (forward worker sharing).
+    pub ws_forward: usize,
+    /// Iterations in which RU workers joined the PF crew (reverse WS;
+    /// only when `R` was empty).
+    pub ws_reverse: usize,
+    /// Effective width of each factorized panel (shrinks under ET).
+    pub panel_widths: Vec<usize>,
+    /// Whether the run was cut short through [`LaCtl`] (request-level ET).
+    pub cancelled: bool,
+}
+
+/// Cooperative control threaded through a look-ahead factorization by
+/// callers that may cancel it mid-flight — the serve layer's
+/// generalization of the paper's ET flag from "cut one iteration's
+/// panel" to "cut the whole request". Polled between outer panel steps.
+#[derive(Debug, Default)]
+pub struct LaCtl {
+    pub(crate) cancel: AtomicBool,
+    pub(crate) cols_done: AtomicUsize,
+}
+
+impl LaCtl {
+    /// Fresh control with nothing cancelled and no progress recorded.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ask the factorization to stop at the next outer checkpoint. The
+    /// already-factorized current panel is still committed, so the
+    /// matrix is left with a clean factored prefix of `cols_done()`
+    /// columns; the trailing columns still owe that panel's
+    /// transformations.
+    pub fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    /// Whether [`Self::request_cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// Columns factorized and committed so far (monotone; reaches
+    /// `min(m, n)` on an uncancelled run).
+    pub fn cols_done(&self) -> usize {
+        self.cols_done.load(Ordering::Acquire)
+    }
+}
+
+/// Cooperative control for the generic blocked driver
+/// ([`driver::blocked_ctl`]) — cancellation polled between panel steps,
+/// per-request trace tags, and a committed-columns callback. The
+/// kind-generic counterpart of [`crate::lu::BlockedCtl`].
+#[derive(Default)]
+pub struct FactorCtl<'a> {
+    /// Polled between panel steps; when set the factorization stops
+    /// before the next step, leaving a clean factored prefix.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Trace label prefix (e.g. `req3:qr`); `None` keeps plain labels.
+    pub tag: Option<&'a str>,
+    /// Called with the number of committed columns after every step.
+    pub on_checkpoint: Option<&'a (dyn Fn(usize) + Sync)>,
+}
+
+/// Type-erased result of a factorization of any [`FactorKind`].
+#[derive(Debug, Clone, Default)]
+pub struct FactorOutcome {
+    /// Absolute pivot rows (LU only; empty for Cholesky/QR).
+    pub ipiv: Vec<usize>,
+    /// Householder scalar factors (QR only; empty otherwise).
+    pub tau: Vec<f64>,
+    /// Columns fully factorized and committed.
+    pub cols_done: usize,
+    /// Whether the run was cut short by a cancel flag.
+    pub cancelled: bool,
+    /// Look-ahead statistics (`None` for the blocked driver).
+    pub la_stats: Option<LaStats>,
+}
+
+/// Factorize `a` in place with the generic WS+ET look-ahead driver,
+/// dispatching on `kind`. `pool` supplies the workers (total team =
+/// `pool.workers() + 1` counting the caller); `ctl` adds request-level
+/// cancellation checkpoints.
+#[allow(clippy::too_many_arguments)]
+pub fn factorize_lookahead(
+    kind: FactorKind,
+    pool: &Pool,
+    params: &BlisParams,
+    a: &mut Matrix,
+    bo: usize,
+    bi: usize,
+    opts: &LaOpts,
+    ctl: Option<&LaCtl>,
+) -> FactorOutcome {
+    match kind {
+        FactorKind::Lu => {
+            let (ipiv, stats) =
+                driver::lookahead_ctl(&LuFactor, pool, params, a, bo, bi, opts, ctl);
+            FactorOutcome {
+                cols_done: ipiv.len(),
+                cancelled: stats.cancelled,
+                ipiv,
+                tau: Vec::new(),
+                la_stats: Some(stats),
+            }
+        }
+        FactorKind::Chol => {
+            let (done, stats) =
+                driver::lookahead_ctl(&CholFactor, pool, params, a, bo, bi, opts, ctl);
+            FactorOutcome {
+                cols_done: done,
+                cancelled: stats.cancelled,
+                ipiv: Vec::new(),
+                tau: Vec::new(),
+                la_stats: Some(stats),
+            }
+        }
+        FactorKind::Qr => {
+            let (tau, stats) = driver::lookahead_ctl(&QrFactor, pool, params, a, bo, bi, opts, ctl);
+            FactorOutcome {
+                cols_done: tau.len(),
+                cancelled: stats.cancelled,
+                ipiv: Vec::new(),
+                tau,
+                la_stats: Some(stats),
+            }
+        }
+    }
+}
+
+/// Factorize `a` in place with the generic blocked right-looking driver
+/// (panel on the critical path, request-level checkpoints), dispatching
+/// on `kind`. This is the serve layer's per-request driver.
+pub fn factorize_blocked(
+    kind: FactorKind,
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: MatMut,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+) -> FactorOutcome {
+    match kind {
+        FactorKind::Lu => {
+            let (ipiv, cols_done, cancelled) =
+                driver::blocked_ctl(&LuFactor, crew, params, a, bo, bi, ctl);
+            FactorOutcome {
+                ipiv,
+                tau: Vec::new(),
+                cols_done,
+                cancelled,
+                la_stats: None,
+            }
+        }
+        FactorKind::Chol => {
+            let (_, cols_done, cancelled) =
+                driver::blocked_ctl(&CholFactor, crew, params, a, bo, bi, ctl);
+            FactorOutcome {
+                ipiv: Vec::new(),
+                tau: Vec::new(),
+                cols_done,
+                cancelled,
+                la_stats: None,
+            }
+        }
+        FactorKind::Qr => {
+            let (tau, cols_done, cancelled) =
+                driver::blocked_ctl(&QrFactor, crew, params, a, bo, bi, ctl);
+            FactorOutcome {
+                ipiv: Vec::new(),
+                tau,
+                cols_done,
+                cancelled,
+                la_stats: None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, k) in [
+            ("lu", FactorKind::Lu),
+            ("CHOL", FactorKind::Chol),
+            ("cholesky", FactorKind::Chol),
+            ("qr", FactorKind::Qr),
+        ] {
+            assert_eq!(FactorKind::parse(s), Some(k));
+            assert_eq!(FactorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FactorKind::parse("svd"), None);
+    }
+
+    #[test]
+    fn flop_counts_have_the_right_ratios() {
+        let n = 512;
+        let lu = FactorKind::Lu.flops(n, n);
+        let ch = FactorKind::Chol.flops(n, n);
+        let qr = FactorKind::Qr.flops(n, n);
+        // Chol ≈ LU/2, QR ≈ 2·LU for square matrices.
+        assert!((ch / lu - 0.5).abs() < 0.02, "chol/lu = {}", ch / lu);
+        assert!((qr / lu - 2.0).abs() < 0.05, "qr/lu = {}", qr / lu);
+    }
+
+    #[test]
+    fn validate_rejects_rectangular_cholesky() {
+        assert!(FactorKind::Chol.validate(8, 8).is_ok());
+        assert!(FactorKind::Chol.validate(8, 9).is_err());
+        assert!(FactorKind::Lu.validate(8, 9).is_ok());
+        assert!(FactorKind::Qr.validate(9, 8).is_ok());
+    }
+
+    #[test]
+    fn remaining_cost_monotone_for_all_kinds() {
+        let hw = HwModel::default();
+        for &k in FactorKind::all() {
+            let full = k.remaining_cost(&hw, 256, 256, 0, 32, 8);
+            let half = k.remaining_cost(&hw, 256, 256, 128, 32, 8);
+            let done = k.remaining_cost(&hw, 256, 256, 256, 32, 8);
+            assert!(full > half, "{}: full={full} half={half}", k.name());
+            assert!(half > 0.0, "{}", k.name());
+            assert_eq!(done, 0.0, "{}", k.name());
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Blocked Householder QR (`A = Q·R`) as a [`Factorization`] instance.
+//!
+//! The panel step is a left-looking `geqr2`: reflectors are generated
+//! column by column ([`crate::blis::house::reflector`]) and previous
+//! reflectors are applied lazily, one inner `b_i` block at a time, so the
+//! ET flag can cut the panel leaving untouched suffix columns — the same
+//! contract as the LU and Cholesky panels (DESIGN.md §11). When a panel
+//! commits, its reflectors are condensed into the compact WY form
+//! `Q = I − V·T·Vᵀ` ([`crate::blis::house::larft`]): the panel state
+//! carries `tau`, `T`, and clean `V`/`Vᵀ` copies, shared read-only by the
+//! two look-ahead branches.
+//!
+//! The trailing update applies `Qᵀ` with two malleable packed `gemm`s
+//! plus a small triangular multiply
+//! ([`crate::blis::house::apply_block_qt`]) — per-column arithmetic, so
+//! the look-ahead `P`/`R` column split is bitwise invisible, and the bulk
+//! of the flops inherit GEMM's Worker-Sharing entry points.
+
+use super::{FactorKind, Factorization, PanelStep};
+use crate::blis::house::{apply_block_qt, apply_reflector, larft, reflector};
+use crate::blis::BlisParams;
+use crate::matrix::{MatMut, Matrix};
+use crate::pool::Crew;
+use crate::sim::HwModel;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// The blocked Householder QR kind (zero-sized dispatch token).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct QrFactor;
+
+/// Committed-panel state: everything [`apply_block_qt`] needs to apply
+/// `Qᵀ` of one panel to a block of trailing columns.
+pub struct QrPanel {
+    /// Householder scalar factors, one per committed column.
+    pub tau: Vec<f64>,
+    /// The `k × k` upper-triangular block-reflector factor.
+    t: Matrix,
+    /// Clean `m_p × k` reflector block (unit diagonal, zeros above).
+    v: Matrix,
+    /// Transpose of `v` (`k × m_p`), precomputed once per panel so both
+    /// look-ahead branches share it read-only.
+    vt: Matrix,
+}
+
+impl Factorization for QrFactor {
+    type State = QrPanel;
+    type Acc = Vec<f64>;
+
+    fn kind(&self) -> FactorKind {
+        FactorKind::Qr
+    }
+
+    fn panel(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        b: usize,
+        bi: usize,
+        _ll: bool,
+        stop: Option<&AtomicBool>,
+    ) -> PanelStep<QrPanel> {
+        let m = a.rows();
+        let p = a.sub(f, f, m - f, b); // rows f..m, cols f..f+b
+        let mp = p.rows();
+        let kmax = mp.min(b);
+        let bi = bi.max(1);
+        let mut tau: Vec<f64> = Vec::with_capacity(kmax);
+        let mut kk = 0;
+        let mut terminated_early = false;
+        while kk < kmax {
+            let bb = bi.min(kmax - kk);
+            // Left-looking: bring columns kk..kk+bb up to date with every
+            // previously generated reflector (columns to the right stay
+            // untouched — the ET property).
+            for (j, &tj) in tau.iter().enumerate() {
+                apply_reflector(crew, p, j, j, tj, kk, kk + bb);
+            }
+            // Factorize the inner block eagerly.
+            for j in kk..kk + bb {
+                let tj = reflector(p, j);
+                if j + 1 < kk + bb {
+                    apply_reflector(crew, p, j, j, tj, j + 1, kk + bb);
+                }
+                tau.push(tj);
+            }
+            kk += bb;
+            // ET poll — end of the inner iteration.
+            if kk < kmax {
+                if let Some(flag) = stop {
+                    if flag.load(Ordering::Acquire) {
+                        terminated_early = true;
+                        break;
+                    }
+                }
+            }
+        }
+        let _ = params;
+        // Condense the committed reflectors into compact WY form.
+        let k = kk;
+        let mut v = Matrix::zeros(mp, k);
+        for j in 0..k {
+            v[(j, j)] = 1.0;
+            for i in j + 1..mp {
+                v[(i, j)] = p.at(i, j);
+            }
+        }
+        let vt = v.transposed();
+        let t = larft(v.view(), &tau);
+        PanelStep {
+            state: QrPanel { tau, t, v, vt },
+            k_done: k,
+            terminated_early,
+        }
+    }
+
+    fn apply(
+        &self,
+        crew: &mut Crew,
+        params: &BlisParams,
+        a: MatMut,
+        f: usize,
+        _bc: usize,
+        st: &QrPanel,
+        j0: usize,
+        j1: usize,
+    ) {
+        if j0 >= j1 {
+            return;
+        }
+        let m = a.rows();
+        apply_block_qt(
+            crew,
+            params,
+            st.v.view(),
+            st.vt.view(),
+            st.t.view(),
+            a.sub(f, j0, m - f, j1 - j0),
+        );
+    }
+
+    fn commit(&self, acc: &mut Vec<f64>, st: &QrPanel, k_done: usize) {
+        debug_assert_eq!(st.tau.len(), k_done);
+        acc.extend_from_slice(&st.tau);
+    }
+}
+
+/// Cost-model estimate of the single-core seconds left in an `m × n` QR
+/// after `k` committed columns: per remaining step, a panel (priced at
+/// twice the LU panel — reflector generation and application do roughly
+/// double the flops) plus the two rank-`b` GEMMs of the block update.
+pub fn remaining_cost_qr(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
+    let kmax = m.min(n);
+    let bo = bo.max(1);
+    let mut total = 0.0;
+    let mut kk = k.min(kmax);
+    while kk < kmax {
+        let b = bo.min(kmax - kk);
+        total += hw.panel_time(m - kk, b, bi, 1) * 2.0;
+        let rest = n - kk - b;
+        if rest > 0 {
+            total += hw.gemm_time(b, rest, m - kk, 1);
+            total += hw.gemm_time(m - kk, rest, b, 1);
+        }
+        kk += b;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::naive;
+
+    #[test]
+    fn panel_full_width_is_a_valid_qr() {
+        let params = BlisParams::tiny();
+        for &(m, b, bi) in &[(24usize, 8usize, 4usize), (40, 12, 4), (16, 16, 8)] {
+            let a0 = Matrix::random(m, b, (m + b) as u64);
+            let mut f = a0.clone();
+            let mut crew = Crew::new();
+            let out = QrFactor.panel(&mut crew, &params, f.view_mut(), 0, b, bi, true, None);
+            assert_eq!(out.k_done, b.min(m));
+            assert!(!out.terminated_early);
+            let r = naive::qr_residual(&a0, &f, &out.state.tau);
+            assert!(r < 1e-12, "m={m} b={b} residual {r}");
+        }
+    }
+
+    #[test]
+    fn panel_et_cut_leaves_suffix_untouched() {
+        let params = BlisParams::tiny();
+        let (m, b, bi) = (30usize, 16usize, 4usize);
+        let a0 = Matrix::random(m, b, 13);
+        let mut f = a0.clone();
+        let stop = AtomicBool::new(true); // cut after the first inner block
+        let mut crew = Crew::new();
+        let out = QrFactor.panel(
+            &mut crew,
+            &params,
+            f.view_mut(),
+            0,
+            b,
+            bi,
+            true,
+            Some(&stop),
+        );
+        assert!(out.terminated_early);
+        assert_eq!(out.k_done, bi);
+        assert_eq!(out.state.tau.len(), bi);
+        for j in out.k_done..b {
+            for i in 0..m {
+                assert_eq!(f[(i, j)], a0[(i, j)], "suffix touched at ({i},{j})");
+            }
+        }
+        // The committed prefix is a valid QR of the leading columns.
+        let lead0 = Matrix::from_fn(m, out.k_done, |i, j| a0[(i, j)]);
+        let leadf = Matrix::from_fn(m, out.k_done, |i, j| f[(i, j)]);
+        let r = naive::qr_residual(&lead0, &leadf, &out.state.tau);
+        assert!(r < 1e-12, "prefix residual {r}");
+    }
+
+    #[test]
+    fn panel_state_applies_like_reference() {
+        // apply() with the condensed panel state must transform trailing
+        // columns exactly as factorizing the wider matrix would.
+        let params = BlisParams::tiny();
+        let (m, n, b) = (20usize, 14usize, 6usize);
+        let a0 = Matrix::random(m, n, 17);
+
+        // Reference: factorize all n columns unblocked (bi >= n).
+        let mut whole = a0.clone();
+        let mut crew = Crew::new();
+        let full = QrFactor.panel(&mut crew, &params, whole.view_mut(), 0, n, 1, true, None);
+
+        // Panel of width b + apply to the rest + factor the rest.
+        let mut split = a0.clone();
+        let st = QrFactor.panel(&mut crew, &params, split.view_mut(), 0, b, 1, true, None);
+        QrFactor.apply(&mut crew, &params, split.view_mut(), 0, b, &st.state, b, n);
+        let tail = QrFactor.panel(
+            &mut crew,
+            &params,
+            split.view_mut(),
+            b,
+            n - b,
+            1,
+            true,
+            None,
+        );
+
+        let mut tau = st.state.tau.clone();
+        tau.extend_from_slice(&tail.state.tau);
+        assert_eq!(tau.len(), full.state.tau.len());
+        let r = naive::qr_residual(&a0, &split, &tau);
+        assert!(r < 1e-11, "split residual {r}");
+        let q = naive::qr_q(&split, &tau);
+        assert!(naive::orthogonality(&q) < 1e-12);
+        // And numerically close to the unblocked reference.
+        let d = whole.max_abs_diff(&split);
+        assert!(d < 1e-10, "blocked vs unblocked diff {d}");
+    }
+}

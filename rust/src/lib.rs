@@ -18,10 +18,15 @@
 //! - [`blis`] — a BLIS-style blocked BLAS substrate (five-loop GEMM with
 //!   packing and a micro-kernel, blocked TRSM, LASWP) with malleability
 //!   entry points at each Loop-3 iteration.
+//! - [`factor`] — the **malleable factorization family**: a
+//!   [`factor::Factorization`] trait (panel kernel, trailing update,
+//!   pivot step, cost hooks) with one generic blocked driver and one
+//!   generic WS+ET look-ahead driver shared by LU, Cholesky, and QR.
 //! - [`lu`] — the LU-with-partial-pivoting algorithm family: unblocked,
 //!   blocked right-looking (`LU`), blocked left-looking, look-ahead
 //!   (`LU_LA`), malleable look-ahead (`LU_MB`), and early-termination
-//!   (`LU_ET`).
+//!   (`LU_ET`) — the look-ahead variants now instantiate the generic
+//!   [`factor`] driver.
 //! - [`serve`] — the **batched multi-problem LU scheduler**: an
 //!   [`serve::LuServer`] multiplexes a queue of factorization requests
 //!   over one shared pool, generalizing Worker Sharing ("donate idle
@@ -37,8 +42,11 @@
 //! - [`runtime`] — a PJRT/XLA runtime that loads AOT-compiled Pallas/JAX
 //!   artifacts (the "rigid vendor BLAS" baseline `LU_XLA`).
 
+#![warn(missing_docs)]
+
 pub mod blis;
 pub mod cli;
+pub mod factor;
 pub mod lu;
 pub mod matrix;
 pub mod pool;

@@ -13,7 +13,7 @@ use crate::blis::{gemm, laswp, trsm_llu, BlisParams};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
 use crate::trace::{span, Kind};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 
 /// Cooperative control for a checkpointed blocked factorization — the
 /// serve layer's generalization of the paper's ET flag from "cut one
@@ -64,6 +64,12 @@ pub fn lu_blocked_rl(
 /// entries, the trailing block is fully permuted and updated, and the
 /// factorization can be completed later by factorizing only the trailing
 /// block (tested in `tests/serve_stress.rs`).
+///
+/// Since the factorization-family refactor this delegates to the
+/// **generic** blocked driver ([`crate::factor::driver::blocked_ctl`])
+/// instantiated with [`crate::factor::LuFactor`] — the scheduling loop
+/// (panel / left swaps / right swaps+TRSM+GEMM, checkpoints, trace tags)
+/// exists exactly once, shared with Cholesky and QR.
 pub fn lu_blocked_rl_ctl(
     crew: &mut Crew,
     params: &BlisParams,
@@ -72,68 +78,23 @@ pub fn lu_blocked_rl_ctl(
     bi: usize,
     ctl: &BlockedCtl,
 ) -> BlockedOutcome {
-    let (m, n) = (a.rows(), a.cols());
-    let kmax = m.min(n);
-    let bo = bo.max(1);
-    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
-    let mut cancelled = false;
-    let mut k = 0;
-    while k < kmax {
-        if let Some(c) = ctl.cancel {
-            if c.load(Ordering::Acquire) {
-                cancelled = true;
-                break;
-            }
-        }
-        let b = bo.min(kmax - k);
-        let plabel = match ctl.tag {
-            None => String::from("panel"),
-            Some(tag) => format!("{tag}.panel[{k}]"),
-        };
-        // RL1: factorize the current panel (rows k.., cols k..k+b).
-        let out = span(Kind::Panel, &plabel, || {
-            panel_rl(crew, params, a.sub(k, k, m - k, b), bi)
-        });
-        let lo = ipiv.len();
-        ipiv.extend(out.ipiv.iter().map(|p| p + k));
-        // Apply the panel's interchanges to the left and right of it.
-        laswp(crew, a, &ipiv, lo, lo + b, 0, k);
-        laswp(crew, a, &ipiv, lo, lo + b, k + b, n);
-        let rest = n - k - b;
-        if rest > 0 {
-            let ulabel = match ctl.tag {
-                None => String::from("update"),
-                Some(tag) => format!("{tag}.update[{k}]"),
-            };
-            span(Kind::Gemm, &ulabel, || {
-                // RL2: A12 := TRILU(A11)^{-1} A12.
-                trsm_llu(
-                    crew,
-                    params,
-                    a.sub(k, k, b, b).as_ref(),
-                    a.sub(k, k + b, b, rest),
-                );
-                // RL3: A22 -= A21 · A12.
-                if m - k - b > 0 {
-                    gemm(
-                        crew,
-                        params,
-                        -1.0,
-                        a.sub(k + b, k, m - k - b, b).as_ref(),
-                        a.sub(k, k + b, b, rest).as_ref(),
-                        a.sub(k + b, k + b, m - k - b, rest),
-                    );
-                }
-            });
-        }
-        k += b;
-        if let Some(cb) = ctl.on_checkpoint {
-            cb(k);
-        }
-    }
+    let fctl = crate::factor::FactorCtl {
+        cancel: ctl.cancel,
+        tag: ctl.tag,
+        on_checkpoint: ctl.on_checkpoint,
+    };
+    let (ipiv, cols_done, cancelled) = crate::factor::driver::blocked_ctl(
+        &crate::factor::LuFactor,
+        crew,
+        params,
+        a,
+        bo,
+        bi,
+        &fctl,
+    );
     BlockedOutcome {
         ipiv,
-        cols_done: k,
+        cols_done,
         cancelled,
     }
 }

@@ -1,121 +1,28 @@
 //! Blocked right-looking LU with **static look-ahead** (paper Fig. 6) and
 //! its malleable (WS, §4.1) and early-termination (ET, §4.2) refinements.
 //!
-//! Per iteration the trailing submatrix is split column-wise into `P`
-//! (the *next* panel, width `b_n`) and `R` (the remainder):
+//! Since the factorization-family refactor this module is a thin LU
+//! veneer over the **generic** look-ahead driver
+//! ([`crate::factor::driver::lookahead_ctl`]), which owns the team split,
+//! Worker Sharing, and Early Termination for every
+//! [`crate::factor::Factorization`] kind (LU, Cholesky, QR). The LU
+//! specifics — panel kernels, LASWP/TRSM/GEMM trailing update, lazy left
+//! pivot swaps — live in [`crate::factor::LuFactor`]; the scheduling
+//! machinery exists exactly once. The control/statistics types
+//! ([`LaOpts`], [`LaStats`], [`LaCtl`]) moved to [`crate::factor`] and
+//! are re-exported here unchanged.
 //!
-//! ```text
-//!        f      f+bc     f+bc+bn          n
-//!        |  cur  |    P    |       R      |
-//! ```
-//!
-//! Team `T_PF` (pool workers `0..t_pf`, worker 0 leading) applies the
-//! current panel's transformations to `P` (PF1: swaps + TRSM, PF2: GEMM)
-//! and factorizes it (PF3). Team `T_RU` (the calling thread leading pool
-//! workers `t_pf..`) does the same for `R` (RU1, RU2) — concurrently,
-//! since the two branches touch disjoint columns.
-//!
-//! - **WS** (`malleable`): when `T_PF` finishes first, its workers enlist
-//!   into `T_RU`'s crew and join the in-flight RU2 GEMM at the next
-//!   Loop-3 entry point. When `R` is empty (tail of the factorization)
-//!   the *reverse* sharing happens: `T_RU` enlists into `T_PF`'s crew.
-//! - **ET** (`early_term`): when `T_RU` finishes first it raises
-//!   `ru_done`; the left-looking inner LU polls the flag after each `b_i`
-//!   block and aborts, returning `k_done < b_n`. The next iteration's
-//!   "current panel" is then only `k_done` wide — the block size
-//!   self-adjusts (paper §4.2, §5.3).
-//!
-//! The ET flag is a plain `AtomicBool` with one writer and one reader —
-//! the paper's race-free synchronization — and the factors produced are
-//! identical (to roundoff) to the plain blocked algorithm for any flag
-//! timing, because the LL inner leaves aborted columns untouched.
+//! The factors produced are identical (to roundoff) to the plain blocked
+//! algorithm for any ET flag timing, and **bitwise** identical for any
+//! crew size — see the determinism notes in `factor/driver.rs` and
+//! DESIGN.md §8/§11.
 
-use super::panel::{panel_ll, panel_rl, PanelOutcome};
-use crate::blis::{gemm, trsm_llu, BlisParams, PackArena};
-use crate::matrix::{MatMut, Matrix};
-use crate::pool::{Crew, EntryPolicy, Pool};
-use crate::trace::{span, Kind};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+pub use crate::factor::{LaCtl, LaOpts, LaStats};
 
-/// Which look-ahead refinements are active.
-#[derive(Copy, Clone, Debug)]
-pub struct LaOpts {
-    /// Worker Sharing via the malleable BLAS (LU_MB, LU_ET).
-    pub malleable: bool,
-    /// Early termination of the panel factorization (LU_ET). Implies the
-    /// left-looking inner LU.
-    pub early_term: bool,
-    /// How joining workers enter an in-flight kernel.
-    pub entry: EntryPolicy,
-    /// Threads dedicated to the panel branch (the paper uses 1).
-    pub t_pf: usize,
-}
-
-impl Default for LaOpts {
-    fn default() -> Self {
-        Self {
-            malleable: false,
-            early_term: false,
-            entry: EntryPolicy::JobBoundary,
-            t_pf: 1,
-        }
-    }
-}
-
-/// Execution statistics for the look-ahead driver.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct LaStats {
-    /// Outer iterations executed.
-    pub iters: usize,
-    /// Iterations whose panel factorization was cut short by ET.
-    pub et_cuts: usize,
-    /// Iterations in which at least one PF worker joined the RU crew
-    /// (forward worker sharing).
-    pub ws_forward: usize,
-    /// Iterations in which RU workers joined the PF crew (reverse WS;
-    /// only when `R` was empty).
-    pub ws_reverse: usize,
-    /// Effective width of each factorized panel (shrinks under ET).
-    pub panel_widths: Vec<usize>,
-    /// Whether the run was cut short through [`LaCtl`] (request-level ET).
-    pub cancelled: bool,
-}
-
-/// Cooperative control threaded through a look-ahead factorization by
-/// callers that may cancel it mid-flight — the serve layer's
-/// generalization of the paper's ET flag from "cut one iteration's
-/// panel" to "cut the whole request". Polled between outer panel steps.
-#[derive(Debug, Default)]
-pub struct LaCtl {
-    pub(crate) cancel: AtomicBool,
-    pub(crate) cols_done: AtomicUsize,
-}
-
-impl LaCtl {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Ask the factorization to stop at the next outer checkpoint. The
-    /// already-factorized current panel is still committed, so the
-    /// matrix is left with a clean factored prefix of `cols_done()`
-    /// columns; the trailing columns still owe that panel's
-    /// transformations (swaps + TRSM + GEMM).
-    pub fn request_cancel(&self) {
-        self.cancel.store(true, Ordering::Release);
-    }
-
-    pub fn is_cancelled(&self) -> bool {
-        self.cancel.load(Ordering::Acquire)
-    }
-
-    /// Columns factorized and committed so far (monotone; reaches
-    /// `min(m, n)` on an uncancelled run).
-    pub fn cols_done(&self) -> usize {
-        self.cols_done.load(Ordering::Acquire)
-    }
-}
+use crate::blis::BlisParams;
+use crate::factor::{driver, LuFactor};
+use crate::matrix::Matrix;
+use crate::pool::Pool;
 
 /// Factorize `a` in place with look-ahead. `pool` supplies the worker
 /// threads (total team = `pool.workers() + 1` counting the caller).
@@ -142,334 +49,14 @@ pub fn lu_lookahead_ctl(
     opts: &LaOpts,
     ctl: Option<&LaCtl>,
 ) -> (Vec<usize>, LaStats) {
-    let av = a.view_mut();
-    let (m, n) = (av.rows(), av.cols());
-    let kmax = m.min(n);
-    let bo = bo.max(1).min(kmax.max(1));
-    let mut stats = LaStats::default();
-    let mut ipiv: Vec<usize> = Vec::with_capacity(kmax);
-    if kmax == 0 {
-        return (ipiv, stats);
-    }
-    // One packing arena for every crew this factorization creates (the
-    // per-iteration PF/RU crews, prologue, epilogue): packed-buffer
-    // leases reach steady state after the first trailing update and
-    // allocate nothing thereafter (DESIGN.md §9).
-    let arena = Arc::new(PackArena::new());
-    if pool.workers() == 0 {
-        // A single thread cannot run two branches: degrade to the plain
-        // blocked RL algorithm (same factorization, no TP).
-        let mut crew = Crew::with_arena(Arc::clone(&arena));
-        let bctl = super::blocked::BlockedCtl {
-            cancel: ctl.map(|c| &c.cancel),
-            ..Default::default()
-        };
-        let out = super::blocked::lu_blocked_rl_ctl(&mut crew, params, av, bo, bi, &bctl);
-        stats.cancelled = out.cancelled;
-        stats.panel_widths = vec![bo.min(kmax); out.cols_done.div_ceil(bo.max(1))];
-        if let Some(c) = ctl {
-            c.cols_done.store(out.cols_done, Ordering::Release);
-        }
-        return (out.ipiv, stats);
-    }
-    let t_pf = opts.t_pf.max(1).min(pool.workers());
-
-    // ---- Prologue: factorize the first panel with the full team. ----
-    let b0 = bo.min(kmax);
-    let mut crew_all = Crew::with_arena(Arc::clone(&arena));
-    let all_members: Vec<_> = (0..pool.workers())
-        .map(|w| {
-            let s = crew_all.shared();
-            let e = opts.entry;
-            pool.submit(w, move || s.member_loop(e))
-        })
-        .collect();
-    let first = span(Kind::Panel, "panel[0]", || {
-        panel_rl(&mut crew_all, params, av.sub(0, 0, m, b0), bi)
-    });
-    crew_all.disband();
-    for h in all_members {
-        h.wait();
-    }
-
-    // `cur`: the factorized-but-not-yet-applied panel [f, f+bc).
-    let mut f = 0usize;
-    let mut bc = first.k_done;
-    let mut piv_cur: Vec<usize> = first.ipiv; // absolute (f == 0)
-    // ET's adaptive block size (paper §4.2: a too-large b_o "will be
-    // adjusted for the current (and, possibly, subsequent) iterations").
-    // On a cut the attempted width shrinks to what proved sustainable; it
-    // regrows by b_i per uncut iteration, bounded by b_o.
-    let mut attempt = bo;
-
-    loop {
-        let right0 = f + bc;
-        if let Some(c) = ctl {
-            if c.is_cancelled() {
-                // Request-level ET: commit the already-factorized current
-                // panel (its pivots and lazy left swaps) and stop. The
-                // trailing columns keep their pre-update values; see
-                // [`LaCtl::request_cancel`] for the resume contract.
-                stats.cancelled = true;
-                stats.panel_widths.push(bc);
-                let mut crew = Crew::with_arena(Arc::clone(&arena));
-                laswp_abs(&mut crew, av, &piv_cur, f, 0, f);
-                ipiv.extend_from_slice(&piv_cur);
-                c.cols_done.store(ipiv.len(), Ordering::Release);
-                break;
-            }
-        }
-        stats.panel_widths.push(bc);
-
-        if right0 >= kmax {
-            // ---- Epilogue: no panels left to factor. Apply the current
-            // panel's transformations to any remaining right columns
-            // (wide matrices) and the lazy left swaps, then finish.
-            let mut crew = Crew::with_arena(Arc::clone(&arena));
-            let members: Vec<_> = (0..pool.workers())
-                .map(|w| {
-                    let s = crew.shared();
-                    let e = opts.entry;
-                    pool.submit(w, move || s.member_loop(e))
-                })
-                .collect();
-            if right0 < n {
-                let rest = n - right0;
-                laswp_abs(&mut crew, av, &piv_cur, f, right0, n);
-                trsm_llu(
-                    &mut crew,
-                    params,
-                    av.sub(f, f, bc, bc).as_ref(),
-                    av.sub(f, right0, bc, rest),
-                );
-                if m > right0 {
-                    gemm(
-                        &mut crew,
-                        params,
-                        -1.0,
-                        av.sub(right0, f, m - right0, bc).as_ref(),
-                        av.sub(f, right0, bc, rest).as_ref(),
-                        av.sub(right0, right0, m - right0, rest),
-                    );
-                }
-            }
-            laswp_abs(&mut crew, av, &piv_cur, f, 0, f);
-            ipiv.extend_from_slice(&piv_cur);
-            crew.disband();
-            for h in members {
-                h.wait();
-            }
-            break;
-        }
-
-        stats.iters += 1;
-        let bn = attempt.min(kmax - right0);
-        let r0 = right0 + bn; // first column of R
-        let r_cols = n - r0;
-
-        // Per-iteration shared state.
-        let ru_done = Arc::new(AtomicBool::new(false));
-        let pf_work_done = Arc::new(AtomicBool::new(false));
-        let outcome: Arc<Mutex<Option<PanelOutcome>>> = Arc::new(Mutex::new(None));
-
-        let mut crew_ru = Crew::with_arena(Arc::clone(&arena));
-        let ru_shared = crew_ru.shared();
-        let crew_pf = Crew::with_arena(Arc::clone(&arena));
-        let pf_shared = crew_pf.shared();
-
-        // RU members: workers t_pf.. join RU's crew — unless R is empty,
-        // in which case they help the panel branch instead (reverse WS).
-        let r_empty = r_cols == 0;
-        let join_pf_first = r_empty && opts.malleable;
-        let mut handles = Vec::new();
-        for w in t_pf..pool.workers() {
-            let rs = Arc::clone(&ru_shared);
-            let ps = Arc::clone(&pf_shared);
-            let e = opts.entry;
-            let jp = join_pf_first;
-            handles.push(pool.submit(w, move || {
-                if jp {
-                    ps.member_loop(e);
-                }
-                rs.member_loop(e);
-            }));
-        }
-        // PF members: workers 1..t_pf, chained into RU on WS.
-        for w in 1..t_pf {
-            let ps = Arc::clone(&pf_shared);
-            let rs = Arc::clone(&ru_shared);
-            let e = opts.entry;
-            let mall = opts.malleable;
-            handles.push(pool.submit(w, move || {
-                ps.member_loop(e);
-                if mall {
-                    rs.member_loop(e);
-                }
-            }));
-        }
-
-        // ---- PF branch on worker 0. ----
-        let pf_task = {
-            let piv = piv_cur.clone();
-            let params = *params;
-            let early = opts.early_term;
-            let mall = opts.malleable;
-            let entry = opts.entry;
-            let ru_done = Arc::clone(&ru_done);
-            let pf_work_done = Arc::clone(&pf_work_done);
-            let outcome = Arc::clone(&outcome);
-            let rs = Arc::clone(&ru_shared);
-            // Move the crew (leader handle) into the worker task.
-            let mut crew_pf = crew_pf;
-            let arm_et = early && !r_empty;
-            pool.submit(0, move || {
-                // PF1: current panel's swaps + TRSM on P.
-                span(Kind::Swap, "PF1.swap", || {
-                    laswp_abs(&mut crew_pf, av, &piv, f, right0, r0);
-                });
-                span(Kind::Trsm, "PF1.trsm", || {
-                    trsm_llu(
-                        &mut crew_pf,
-                        &params,
-                        av.sub(f, f, bc, bc).as_ref(),
-                        av.sub(f, right0, bc, bn),
-                    );
-                });
-                // PF2: GEMM update of P below the current panel row-block.
-                span(Kind::Gemm, "PF2.gemm", || {
-                    gemm(
-                        &mut crew_pf,
-                        &params,
-                        -1.0,
-                        av.sub(right0, f, m - right0, bc).as_ref(),
-                        av.sub(f, right0, bc, bn).as_ref(),
-                        av.sub(right0, right0, m - right0, bn),
-                    );
-                });
-                // PF3: factorize the next panel.
-                let p = av.sub(right0, right0, m - right0, bn);
-                let out = span(Kind::Panel, "PF3.panel", || {
-                    if early {
-                        panel_ll(
-                            &mut crew_pf,
-                            &params,
-                            p,
-                            bi,
-                            if arm_et { Some(&ru_done) } else { None },
-                        )
-                    } else {
-                        panel_rl(&mut crew_pf, &params, p, bi)
-                    }
-                });
-                *outcome.lock().unwrap() = Some(out);
-                pf_work_done.store(true, Ordering::Release);
-                crew_pf.disband();
-                // Worker Sharing: join the remainder update in flight.
-                if mall {
-                    rs.member_loop(entry);
-                }
-            })
-        };
-
-        // ---- RU branch on the calling thread. ----
-        if r_cols > 0 {
-            span(Kind::Swap, "RU1.swap", || {
-                laswp_abs(&mut crew_ru, av, &piv_cur, f, r0, n);
-            });
-            span(Kind::Trsm, "RU1.trsm", || {
-                trsm_llu(
-                    &mut crew_ru,
-                    params,
-                    av.sub(f, f, bc, bc).as_ref(),
-                    av.sub(f, r0, bc, r_cols),
-                );
-            });
-            span(Kind::Gemm, "RU2.gemm", || {
-                gemm(
-                    &mut crew_ru,
-                    params,
-                    -1.0,
-                    av.sub(right0, f, m - right0, bc).as_ref(),
-                    av.sub(f, r0, bc, r_cols).as_ref(),
-                    av.sub(right0, r0, m - right0, r_cols),
-                );
-            });
-        }
-        // Lazy left swaps of the current panel (disjoint from P and R).
-        span(Kind::Swap, "RU.left_swap", || {
-            laswp_abs(&mut crew_ru, av, &piv_cur, f, 0, f);
-        });
-        // ET: tell the panel branch the update is finished.
-        ru_done.store(true, Ordering::Release);
-
-        // Reverse WS: if R was empty, the leader helps the panel team.
-        if join_pf_first {
-            stats.ws_reverse += 1;
-            pf_shared.member_loop(opts.entry);
-        }
-
-        // Wait for the panel result (the PF worker may still be enlisted
-        // in our crew afterwards — that is fine, it parks on job waits).
-        let backoff = crossbeam_utils::Backoff::new();
-        while !pf_work_done.load(Ordering::Acquire) {
-            backoff.snooze();
-        }
-        if opts.malleable && crew_ru.stats().max_members > (pool.workers() - t_pf) {
-            stats.ws_forward += 1;
-        }
-        crew_ru.disband();
-        for h in handles {
-            h.wait();
-        }
-        pf_task.wait();
-
-        let out = outcome.lock().unwrap().take().expect("panel outcome");
-        if out.terminated_early {
-            stats.et_cuts += 1;
-            attempt = out.k_done.max(bi.max(1));
-        } else {
-            attempt = (attempt + bi.max(1)).min(bo);
-        }
-
-        // Commit the current panel and adopt the next.
-        ipiv.extend_from_slice(&piv_cur);
-        f = right0;
-        bc = out.k_done;
-        piv_cur = out.ipiv.iter().map(|p| p + f).collect();
-        if let Some(c) = ctl {
-            c.cols_done.store(ipiv.len(), Ordering::Release);
-        }
-    }
-
-    if let Some(c) = ctl {
-        c.cols_done.store(ipiv.len(), Ordering::Release);
-    }
-    debug_assert!(stats.cancelled || ipiv.len() == kmax);
-    (ipiv, stats)
-}
-
-/// `laswp` with pivot indices relative to row `base` (the panel top):
-/// swap rows `base+k` and `piv[k]` (absolute) for columns `jlo..jhi`.
-/// Reuses [`crate::blis::laswp`]'s column-strip chunking: each strip
-/// applies the whole pivot sequence while its rows are cache-resident.
-fn laswp_abs(crew: &mut Crew, a: MatMut, piv: &[usize], base: usize, jlo: usize, jhi: usize) {
-    if piv.is_empty() {
-        return;
-    }
-    crate::blis::laswp::for_each_col_strip(crew, jlo, jhi, |lo, hi| {
-        for (k, &p) in piv.iter().enumerate() {
-            let row = base + k;
-            if p != row {
-                a.swap_rows(row, p, lo, hi);
-            }
-        }
-    });
+    driver::lookahead_ctl(&LuFactor, pool, params, a, bo, bi, opts, ctl)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::matrix::naive;
+    use crate::pool::{Crew, EntryPolicy};
     use crate::util::quickcheck_lite::{forall_res, Gen};
 
     fn run(

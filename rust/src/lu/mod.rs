@@ -30,12 +30,19 @@ use crate::pool::{Crew, EntryPolicy, Pool};
 /// Algorithm selector (see module docs).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Variant {
+    /// Unblocked reference (paper Fig. 3 left).
     Unblocked,
+    /// Blocked right-looking, BDP only (`LU`).
     BlockedRl,
+    /// Blocked left-looking, BDP only (§4.2 LL).
     BlockedLl,
+    /// Static look-ahead (`LU_LA`).
     LookAhead,
+    /// Look-ahead + Worker Sharing (`LU_MB`).
     Malleable,
+    /// Look-ahead + WS + Early Termination (`LU_ET`).
     EarlyTerm,
+    /// Task-runtime baseline (`LU_OS`).
     OmpSs,
 }
 
@@ -55,6 +62,7 @@ impl Variant {
         })
     }
 
+    /// Paper-style display name (`LU`, `LU_LA`, ...).
     pub fn name(&self) -> &'static str {
         match self {
             Variant::Unblocked => "unblocked",
@@ -82,6 +90,7 @@ impl Variant {
 /// Factorization configuration.
 #[derive(Copy, Clone, Debug)]
 pub struct LuConfig {
+    /// Algorithm to run.
     pub variant: Variant,
     /// Outer block size `b_o` (paper default for Fig. 16: 256).
     pub bo: usize,
@@ -91,7 +100,9 @@ pub struct LuConfig {
     pub threads: usize,
     /// Threads in the panel team (paper: 1).
     pub t_pf: usize,
+    /// BLIS blocking parameters for every kernel.
     pub params: BlisParams,
+    /// How joining workers enter an in-flight kernel.
     pub entry: EntryPolicy,
 }
 
@@ -178,6 +189,7 @@ pub fn factorize(a: &mut Matrix, cfg: &LuConfig, pool: Option<&Pool>) -> LuResul
 /// Outcome of a cancellable factorization (see [`factorize_cancellable`]).
 #[derive(Debug, Clone, Default)]
 pub struct CancelOutcome {
+    /// The (possibly partial) factorization output.
     pub result: LuResult,
     /// Columns fully factorized and committed.
     pub cols_done: usize,

@@ -2,8 +2,11 @@
 //!
 //! ```text
 //! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
+//! mlu chol      --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
+//! mlu qr        --n 1024 [--m 2048] --variant et [--bo --bi --threads --check]
 //! mlu solve     --n 512  --variant mb            # factor + solve + residual
-//! mlu batch     --sizes 256,192,320 --workers 4 [--check --compare --trace t.json]
+//! mlu batch     --sizes 256,192,320 --workers 4 [--kind lu|chol|qr|mix]
+//!               [--check --compare --trace t.json]
 //!
 //! Global flags: `--params mc,kc,nc` overrides the cache-topology-derived
 //! BLIS blocking; `--kernel auto|simd|portable` forces a micro-kernel
@@ -14,11 +17,16 @@
 //! mlu xla       --n 192 --bo 64 [--stepped]      # PJRT artifact demo
 //! mlu info
 //! ```
+//!
+//! `mlu chol` and `mlu qr` run Cholesky / Householder QR through the
+//! *same* generic WS+ET look-ahead driver as the LU variants — the
+//! factorization-family generalization (DESIGN.md §11).
 
 use malleable_lu::blis::BlisParams;
 use malleable_lu::cli::{render_table, Args};
+use malleable_lu::factor::{self, FactorKind, LaOpts};
 use malleable_lu::lu::{self, LuConfig, Variant};
-use malleable_lu::matrix::Matrix;
+use malleable_lu::matrix::{naive, Matrix};
 use malleable_lu::pool::Pool;
 use malleable_lu::sim::{self, figures, HwModel};
 use malleable_lu::util::{gflops, lu_flops, timed};
@@ -30,6 +38,8 @@ fn main() {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "factorize" => cmd_factorize(&args),
+        "chol" => cmd_factor_kind(FactorKind::Chol, &args),
+        "qr" => cmd_factor_kind(FactorKind::Qr, &args),
         "solve" => cmd_solve(&args),
         "batch" | "serve" => cmd_batch(&args),
         "trace" => cmd_trace(&args),
@@ -45,8 +55,8 @@ fn main() {
     std::process::exit(code);
 }
 
-const HELP: &str = "mlu — malleable thread-level LU (see README.md)
-commands: factorize | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
+const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
+commands: factorize | chol | qr | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
 global flags: --params mc,kc,nc | --kernel auto|simd|portable";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
@@ -138,6 +148,85 @@ fn cmd_factorize(args: &Args) -> i32 {
     0
 }
 
+/// Map `--variant la|mb|et` (default `et`) onto the generic look-ahead
+/// options shared by every factorization kind.
+fn la_opts(args: &Args) -> LaOpts {
+    let (malleable, early_term) =
+        match args.get_str("variant", "et").to_ascii_lowercase().as_str() {
+            "la" => (false, false),
+            "mb" => (true, false),
+            "et" => (true, true),
+            other => {
+                eprintln!("unknown look-ahead variant {other:?}; using et");
+                (true, true)
+            }
+        };
+    LaOpts {
+        malleable,
+        early_term,
+        entry: if args.has("immediate") {
+            malleable_lu::pool::EntryPolicy::Immediate
+        } else {
+            malleable_lu::pool::EntryPolicy::JobBoundary
+        },
+        t_pf: args.get("t-pf", 1),
+    }
+}
+
+/// `mlu chol` / `mlu qr`: run a non-LU kind through the generic WS+ET
+/// look-ahead driver.
+fn cmd_factor_kind(kind: FactorKind, args: &Args) -> i32 {
+    let n = args.get("n", 1024usize);
+    let m = if kind == FactorKind::Qr {
+        args.get("m", n)
+    } else {
+        n
+    };
+    let bo = args.get("bo", 256usize);
+    let bi = args.get("bi", 32usize);
+    let threads = args.get("threads", 6usize);
+    let seed = args.get("seed", 42u64);
+    let opts = la_opts(args);
+    let params = resolve_params(args);
+    let a0 = match kind {
+        FactorKind::Chol => Matrix::random_spd(n, seed),
+        _ => Matrix::random(m, n, seed),
+    };
+    let mut f = a0.clone();
+    let pool = Pool::new(threads.saturating_sub(1));
+    let (secs, out) = timed(|| {
+        factor::factorize_lookahead(kind, &pool, &params, &mut f, bo, bi, &opts, None)
+    });
+    println!(
+        "{} m={m} n={n} bo={bo} bi={bi} t={threads}: {secs:.3}s  {:.2} GFLOPS",
+        kind.name(),
+        gflops(kind.flops(m, n), secs)
+    );
+    if let Some(stats) = &out.la_stats {
+        println!(
+            "  iters={} et_cuts={} ws_fwd={} ws_rev={} panel_widths[..8]={:?}",
+            stats.iters,
+            stats.et_cuts,
+            stats.ws_forward,
+            stats.ws_reverse,
+            &stats.panel_widths[..stats.panel_widths.len().min(8)]
+        );
+    }
+    if args.has("check") {
+        let r = match kind {
+            FactorKind::Lu => naive::lu_residual(&a0, &f, &out.ipiv),
+            FactorKind::Chol => naive::chol_residual(&a0, &f),
+            FactorKind::Qr => naive::qr_residual(&a0, &f, &out.tau),
+        };
+        println!("  residual = {r:.3e}");
+        if r > 1e-10 {
+            eprintln!("RESIDUAL TOO LARGE");
+            return 1;
+        }
+    }
+    0
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let n = args.get("n", 512usize);
     let cfg = lu_config(args);
@@ -175,6 +264,20 @@ fn cmd_batch(args: &Args) -> i32 {
         eprintln!("--sizes must be a comma-separated list of matrix orders");
         return 1;
     }
+    let kind_s = args.get_str("kind", "lu");
+    let kinds: Vec<FactorKind> = if kind_s == "mix" {
+        (0..sizes.len())
+            .map(|i| FactorKind::all()[i % FactorKind::all().len()])
+            .collect()
+    } else {
+        match FactorKind::parse(&kind_s) {
+            Some(k) => vec![k; sizes.len()],
+            None => {
+                eprintln!("unknown --kind {kind_s:?} (expected lu|chol|qr|mix)");
+                return 1;
+            }
+        }
+    };
     let cfg = serve::ServeConfig {
         workers: args.get("workers", 4usize),
         bo: args.get("bo", 64),
@@ -182,11 +285,19 @@ fn cmd_batch(args: &Args) -> i32 {
         params: resolve_params(args),
         ..Default::default()
     };
-    let total_flops: f64 = sizes.iter().map(|&n| lu_flops(n, n)).sum();
+    let total_flops: f64 = sizes
+        .iter()
+        .zip(&kinds)
+        .map(|(&n, k)| k.flops(n, n))
+        .sum();
     let mats: Vec<Matrix> = sizes
         .iter()
+        .zip(&kinds)
         .enumerate()
-        .map(|(i, &n)| Matrix::random(n, n, i as u64 + 1))
+        .map(|(i, (&n, &k))| match k {
+            FactorKind::Chol => Matrix::random_spd(n, i as u64 + 1),
+            _ => Matrix::random(n, n, i as u64 + 1),
+        })
         .collect();
     let originals = if args.has("check") {
         Some(mats.clone())
@@ -200,7 +311,14 @@ fn cmd_batch(args: &Args) -> i32 {
     } else {
         Some(trace::start())
     };
-    let (secs, results) = timed(|| serve::factorize_batch(mats, &cfg));
+    let server = serve::LuServer::new(cfg);
+    let reqs: Vec<serve::LuRequest> = mats
+        .into_iter()
+        .zip(&kinds)
+        .map(|(a, &k)| serve::LuRequest::new(a).with_kind(k))
+        .collect();
+    let (secs, results) = timed(|| server.factorize_batch(reqs));
+    server.shutdown();
     if rec.is_some() {
         trace::stop();
     }
@@ -212,8 +330,9 @@ fn cmd_batch(args: &Args) -> i32 {
     );
     for r in &results {
         println!(
-            "  req{} n={} cols_done={} cancelled={} {:.3}s",
+            "  req{} {} n={} cols_done={} cancelled={} {:.3}s",
             r.id,
+            r.kind.name(),
             r.a.rows(),
             r.cols_done,
             r.cancelled,
@@ -222,7 +341,11 @@ fn cmd_batch(args: &Args) -> i32 {
     }
     if let Some(origs) = &originals {
         for (r, a0) in results.iter().zip(origs) {
-            let res = lu::residual(a0, &r.a, &r.ipiv);
+            let res = match r.kind {
+                FactorKind::Lu => lu::residual(a0, &r.a, &r.ipiv),
+                FactorKind::Chol => naive::chol_residual(a0, &r.a),
+                FactorKind::Qr => naive::qr_residual(a0, &r.a, &r.tau),
+            };
             if res > 1e-10 {
                 eprintln!("req{}: residual {res:.3e} too large", r.id);
                 return 1;
@@ -238,7 +361,9 @@ fn cmd_batch(args: &Args) -> i32 {
             println!("wrote {trace_out} (open in chrome://tracing or Perfetto)");
         }
     }
-    if args.has("compare") {
+    if args.has("compare") && kinds.iter().any(|k| *k != FactorKind::Lu) {
+        eprintln!("--compare is only meaningful with --kind lu; skipping baseline");
+    } else if args.has("compare") {
         // Sequential baseline: same problems one at a time, each with the
         // full team (pool workers + this thread).
         let pool = Pool::new(cfg.workers.saturating_sub(1));
@@ -247,6 +372,9 @@ fn cmd_batch(args: &Args) -> i32 {
             bo: cfg.bo,
             bi: cfg.bi,
             threads: cfg.workers,
+            // Same blocking as the batched run — the speedup must measure
+            // scheduling, not a BLIS-parameter difference.
+            params: cfg.params,
             ..Default::default()
         };
         let (ssecs, _) = timed(|| {

@@ -59,6 +59,17 @@ impl Matrix {
         m
     }
 
+    /// Symmetric positive-definite random matrix `B·Bᵀ + n·I` — the
+    /// well-conditioned workload for the Cholesky factorization.
+    pub fn random_spd(n: usize, seed: u64) -> Self {
+        let b = Self::random(n, n, seed);
+        let mut m = naive::matmul(&b, &b.transposed());
+        for j in 0..n {
+            m[(j, j)] += n as f64;
+        }
+        m
+    }
+
     /// Build from a closure `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
         let mut m = Self::zeros(rows, cols);
@@ -76,10 +87,12 @@ impl Matrix {
         Self::from_fn(rows, cols, |i, j| vals[i * cols + j])
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
@@ -89,6 +102,7 @@ impl Matrix {
         &self.data
     }
 
+    /// Mutable raw column-major data.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
@@ -187,16 +201,20 @@ unsafe impl Send for MatRef {}
 unsafe impl Sync for MatRef {}
 
 impl MatRef {
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// Leading dimension (column stride).
     pub fn ld(&self) -> usize {
         self.ld
     }
 
+    /// Element at `(i, j)`.
     #[inline(always)]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
@@ -259,28 +277,34 @@ impl MatMut {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// Leading dimension (column stride).
     pub fn ld(&self) -> usize {
         self.ld
     }
 
+    /// Element at `(i, j)`.
     #[inline(always)]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(i + j * self.ld) }
     }
 
+    /// Store `v` at `(i, j)`.
     #[inline(always)]
     pub fn set(&self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(i + j * self.ld) = v }
     }
 
+    /// Read-modify-write the element at `(i, j)`.
     #[inline(always)]
     pub fn update(&self, i: usize, j: usize, f: impl FnOnce(f64) -> f64) {
         self.set(i, j, f(self.at(i, j)));

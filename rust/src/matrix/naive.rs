@@ -200,6 +200,118 @@ pub fn lu_solve(lu_packed: &Matrix, ipiv: &[usize], b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Unblocked Cholesky factorization `A = L·Lᵀ` (lower, left-looking
+/// reference). Overwrites the lower triangle of `a` with `L`; the strict
+/// upper triangle is neither read nor written. The input must be
+/// symmetric positive definite — a non-SPD matrix yields NaNs (no pivoting
+/// is performed, matching LAPACK `potf2` semantics).
+pub fn cholesky(a: MatMut) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky: square only");
+    for j in 0..n {
+        let mut d = a.at(j, j);
+        for p in 0..j {
+            let l = a.at(j, p);
+            d -= l * l;
+        }
+        let dj = d.sqrt();
+        a.set(j, j, dj);
+        for i in j + 1..n {
+            let mut s = a.at(i, j);
+            for p in 0..j {
+                s -= a.at(i, p) * a.at(j, p);
+            }
+            a.set(i, j, s / dj);
+        }
+    }
+}
+
+/// Relative residual `‖A − L·Lᵀ‖_F / ‖A‖_F` of a Cholesky factorization;
+/// only the lower triangle of `l_packed` is read.
+pub fn chol_residual(a: &Matrix, l_packed: &Matrix) -> f64 {
+    let n = a.rows();
+    let l = Matrix::from_fn(n, n, |i, j| if i >= j { l_packed[(i, j)] } else { 0.0 });
+    let lt = l.transposed();
+    let prod = matmul(&l, &lt);
+    let mut diff = 0.0f64;
+    for j in 0..n {
+        for i in 0..n {
+            let d = a[(i, j)] - prod[(i, j)];
+            diff += d * d;
+        }
+    }
+    diff.sqrt() / a.norm_f().max(f64::MIN_POSITIVE)
+}
+
+/// Accumulate the explicit `m × m` orthogonal factor `Q = H_0·H_1⋯H_{k−1}`
+/// from packed QR factors (reflector tails below the diagonal of
+/// `factored`, scalar factors in `tau`). Test oracle — O(m²·k), applies
+/// the reflectors to the identity in reverse order.
+pub fn qr_q(factored: &Matrix, tau: &[f64]) -> Matrix {
+    let m = factored.rows();
+    let mut q = Matrix::eye(m);
+    for j in (0..tau.len()).rev() {
+        if tau[j] == 0.0 {
+            continue;
+        }
+        for c in 0..m {
+            let mut w = q[(j, c)];
+            for i in j + 1..m {
+                w += factored[(i, j)] * q[(i, c)];
+            }
+            w *= tau[j];
+            q[(j, c)] -= w;
+            for i in j + 1..m {
+                q[(i, c)] -= factored[(i, j)] * w;
+            }
+        }
+    }
+    q
+}
+
+/// Extract `R` (upper trapezoidal, `m × n` with zeros below the diagonal)
+/// from packed QR factors.
+pub fn extract_r(factored: &Matrix) -> Matrix {
+    Matrix::from_fn(factored.rows(), factored.cols(), |i, j| {
+        if j >= i {
+            factored[(i, j)]
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Relative residual `‖A − Q·R‖_F / ‖A‖_F` of a QR factorization.
+pub fn qr_residual(a: &Matrix, factored: &Matrix, tau: &[f64]) -> f64 {
+    let q = qr_q(factored, tau);
+    let r = extract_r(factored);
+    let prod = matmul(&q, &r);
+    let mut diff = 0.0f64;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            let d = a[(i, j)] - prod[(i, j)];
+            diff += d * d;
+        }
+    }
+    diff.sqrt() / a.norm_f().max(f64::MIN_POSITIVE)
+}
+
+/// Max-abs entry of `QᵀQ − I` — the orthogonality defect of an explicit
+/// `Q` factor.
+pub fn orthogonality(q: &Matrix) -> f64 {
+    let qt = q.transposed();
+    let prod = matmul(&qt, q);
+    let n = q.cols();
+    let mut worst = 0.0f64;
+    for j in 0..n {
+        for i in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((prod[(i, j)] - want).abs());
+        }
+    }
+    worst
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,6 +485,38 @@ mod tests {
         let mut pa2 = a.clone();
         apply_pivots(pa2.view_mut(), &ipiv);
         assert!(pa.max_abs_diff(&pa2) < 1e-15);
+    }
+
+    #[test]
+    fn cholesky_reconstructs_spd() {
+        for n in [1usize, 2, 5, 12, 24] {
+            let a = Matrix::random_spd(n, 7 + n as u64);
+            let mut f = a.clone();
+            cholesky(f.view_mut());
+            let r = chol_residual(&a, &f);
+            assert!(r < 1e-13, "n={n} residual={r}");
+            // Diagonal of L is positive.
+            for i in 0..n {
+                assert!(f[(i, i)] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_known_2x2() {
+        // A = [[4, 2], [2, 5]] => L = [[2, 0], [1, 2]].
+        let mut a = Matrix::from_rows(2, 2, &[4., 2., 2., 5.]);
+        cholesky(a.view_mut());
+        assert!((a[(0, 0)] - 2.0).abs() < 1e-15);
+        assert!((a[(1, 0)] - 1.0).abs() < 1e-15);
+        assert!((a[(1, 1)] - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn qr_q_identity_when_no_reflectors() {
+        let f = Matrix::random(5, 3, 1);
+        let q = qr_q(&f, &[]);
+        assert!(q.max_abs_diff(&Matrix::eye(5)) == 0.0);
     }
 
     #[test]

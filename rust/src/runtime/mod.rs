@@ -25,12 +25,17 @@ use std::sync::Mutex;
 /// One entry of `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Artifact name (the manifest key).
     pub name: String,
+    /// Artifact class (e.g. `lu_full`, `lu_step`).
     pub kind: String,
+    /// HLO text file, relative to the store directory.
     pub file: String,
     /// Input shapes (row-major, as exported by jax).
     pub input_shapes: Vec<Vec<usize>>,
+    /// Input element types (as exported by jax).
     pub input_dtypes: Vec<String>,
+    /// Output names, in tuple order.
     pub outputs: Vec<String>,
 }
 

@@ -25,6 +25,7 @@ impl fmt::Display for XlaError {
 
 impl std::error::Error for XlaError {}
 
+/// Result alias mirroring the bindings' convention.
 pub type XlaResult<T> = Result<T, XlaError>;
 
 fn err<T>(msg: impl Into<String>) -> XlaResult<T> {
@@ -57,7 +58,9 @@ pub struct Literal {
 /// Element types a stub [`Literal`] can carry (the artifacts use f64
 /// data and i32 pivots).
 pub trait NativeElem: Sized + Copy {
+    /// Wrap a host vector as a rank-1 literal.
     fn into_literal(v: Vec<Self>) -> Literal;
+    /// Extract the flattened elements (type-checked).
     fn extract(lit: &Literal) -> XlaResult<Vec<Self>>;
 }
 
@@ -125,6 +128,7 @@ impl Literal {
         err("stub literal is not a tuple (PJRT backend unavailable)")
     }
 
+    /// Shape of the literal.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
@@ -136,6 +140,7 @@ pub struct HloModuleProto {
 }
 
 impl HloModuleProto {
+    /// Load HLO text from a file.
     pub fn from_text_file(path: impl AsRef<Path>) -> XlaResult<Self> {
         match std::fs::read_to_string(path.as_ref()) {
             Ok(text) => Ok(Self { text }),
@@ -144,11 +149,13 @@ impl HloModuleProto {
     }
 }
 
+/// A computation wrapping parsed HLO, ready to hand to a client.
 pub struct XlaComputation {
     hlo_bytes: usize,
 }
 
 impl XlaComputation {
+    /// Wrap a parsed HLO module.
     pub fn from_proto(proto: &HloModuleProto) -> Self {
         Self {
             hlo_bytes: proto.text.len(),
@@ -162,10 +169,12 @@ impl XlaComputation {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Construct the (stub) CPU client.
     pub fn cpu() -> XlaResult<Self> {
         Ok(Self)
     }
 
+    /// Compile HLO — always reports the missing backend offline.
     pub fn compile(&self, comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
         err(format!(
             "PJRT backend not linked in this offline build; cannot compile {} bytes of HLO",
@@ -174,17 +183,21 @@ impl PjRtClient {
     }
 }
 
+/// Stand-in compiled executable (never actually constructible offline).
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Execute — always reports the missing backend offline.
     pub fn execute<T>(&self, _inputs: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
         err("PJRT backend not linked in this offline build")
     }
 }
 
+/// Stand-in device buffer.
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy back to host — always reports the missing backend offline.
     pub fn to_literal_sync(&self) -> XlaResult<Literal> {
         err("PJRT backend not linked in this offline build")
     }

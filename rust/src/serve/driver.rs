@@ -1,10 +1,17 @@
 //! Leader-side request driver: runs one problem's factorization on a
 //! pool worker, with per-request trace tags, cost-model progress
 //! accounting, deadline enforcement, and cancellation checkpoints.
+//!
+//! Since the factorization-family refactor the driver is kind-generic:
+//! it dispatches through [`crate::factor::factorize_blocked`], so LU,
+//! Cholesky, and QR requests all flow through the same queue, crew
+//! leases, and checkpoints. Trace spans are tagged `req{id}:{kind}` so
+//! the per-request Gantt lanes show what each problem was
+//! ([`crate::trace::ascii_gantt_requests`]).
 
 use super::registry::Lease;
 use crate::blis::BlisParams;
-use crate::lu::{lu_blocked_rl_ctl, BlockedCtl, BlockedOutcome};
+use crate::factor::{factorize_blocked, FactorCtl, FactorKind, FactorOutcome};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
 use crate::sim::HwModel;
@@ -12,34 +19,25 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 /// Cost-model estimate of the single-core seconds left in an `m × n` LU
-/// after `k` committed columns — the sum of every remaining step's panel,
-/// LASWP, TRSM, and GEMM times under `hw`. This is the remaining-FLOPs
-/// half of the reallocation policy (the other half is priority).
+/// after `k` committed columns. Kept as the LU-specialized shorthand of
+/// [`FactorKind::remaining_cost`], which the scheduler now uses for all
+/// kinds.
 pub fn remaining_cost(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
-    let kmax = m.min(n);
-    let bo = bo.max(1);
-    let mut total = 0.0;
-    let mut kk = k.min(kmax);
-    while kk < kmax {
-        let b = bo.min(kmax - kk);
-        total += hw.panel_time(m - kk, b, bi, 1);
-        let rest = n - kk - b;
-        if rest > 0 {
-            total += hw.laswp_time(b, n, 1);
-            total += hw.trsm_time(b, rest, 1);
-            total += hw.gemm_time(m - kk - b, rest, b, 1);
-        }
-        kk += b;
-    }
-    total
+    FactorKind::Lu.remaining_cost(hw, m, n, k, bo, bi)
 }
 
 /// Everything a leader needs to drive one request.
 pub struct DriveCfg<'a> {
+    /// BLIS blocking parameters for every kernel of the request.
     pub params: &'a BlisParams,
+    /// Cost model pricing the remaining work.
     pub hw: &'a HwModel,
+    /// Outer block size.
     pub bo: usize,
+    /// Inner (panel) block size.
     pub bi: usize,
+    /// Which factorization to run.
+    pub kind: FactorKind,
     /// The request's registry entry; its remaining-work estimate is
     /// refreshed at every panel checkpoint.
     pub lease: &'a Lease,
@@ -50,25 +48,26 @@ pub struct DriveCfg<'a> {
 }
 
 /// Factorize `a` on the calling thread, leading `crew`. Trace spans are
-/// tagged `req{id}` so multi-problem traces can tell requests apart.
-pub fn drive(crew: &mut Crew, a: MatMut, cfg: &DriveCfg) -> BlockedOutcome {
+/// tagged `req{id}:{kind}` so multi-problem traces can tell requests (and
+/// their kinds) apart.
+pub fn drive(crew: &mut Crew, a: MatMut, cfg: &DriveCfg) -> FactorOutcome {
     let (m, n) = (a.rows(), a.cols());
-    let tag = format!("req{}", cfg.lease.id);
+    let tag = format!("req{}:{}", cfg.lease.id, cfg.kind.name());
     let checkpoint = |k: usize| {
         cfg.lease
-            .set_remaining(remaining_cost(cfg.hw, m, n, k, cfg.bo, cfg.bi));
+            .set_remaining(cfg.kind.remaining_cost(cfg.hw, m, n, k, cfg.bo, cfg.bi));
         if let Some(d) = cfg.deadline {
             if Instant::now() >= d {
                 cfg.cancel.store(true, Ordering::Release);
             }
         }
     };
-    let ctl = BlockedCtl {
+    let ctl = FactorCtl {
         cancel: Some(cfg.cancel),
         tag: Some(&tag),
         on_checkpoint: Some(&checkpoint),
     };
-    lu_blocked_rl_ctl(crew, cfg.params, a, cfg.bo, cfg.bi, &ctl)
+    factorize_blocked(cfg.kind, crew, cfg.params, a, cfg.bo, cfg.bi, &ctl)
 }
 
 #[cfg(test)]
@@ -110,6 +109,7 @@ mod tests {
             hw: &hw,
             bo: 8,
             bi: 4,
+            kind: FactorKind::Lu,
             lease: &lease,
             cancel: &cancel,
             deadline: None,
@@ -120,6 +120,42 @@ mod tests {
         assert_eq!(lease.remaining(), 0.0);
         let r = naive::lu_residual(&a0, &f, &out.ipiv);
         assert!(r < 1e-12, "residual {r}");
+    }
+
+    #[test]
+    fn drive_runs_every_kind_through_one_driver() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        for &kind in FactorKind::all() {
+            let n = 40;
+            let a0 = match kind {
+                FactorKind::Chol => Matrix::random_spd(n, 31),
+                _ => Matrix::random(n, n, 31),
+            };
+            let mut f = a0.clone();
+            let lease = Arc::new(Lease::new(7, 0, crew.shared(), 1.0));
+            let cancel = AtomicBool::new(false);
+            let cfg = DriveCfg {
+                params: &params,
+                hw: &hw,
+                bo: 8,
+                bi: 4,
+                kind,
+                lease: &lease,
+                cancel: &cancel,
+                deadline: None,
+            };
+            let out = drive(&mut crew, f.view_mut(), &cfg);
+            assert!(!out.cancelled, "{}", kind.name());
+            assert_eq!(out.cols_done, n, "{}", kind.name());
+            let r = match kind {
+                FactorKind::Lu => naive::lu_residual(&a0, &f, &out.ipiv),
+                FactorKind::Chol => naive::chol_residual(&a0, &f),
+                FactorKind::Qr => naive::qr_residual(&a0, &f, &out.tau),
+            };
+            assert!(r < 1e-11, "{}: residual {r}", kind.name());
+        }
     }
 
     #[test]
@@ -135,6 +171,7 @@ mod tests {
             hw: &hw,
             bo: 8,
             bi: 4,
+            kind: FactorKind::Lu,
             lease: &lease,
             cancel: &cancel,
             deadline: Some(Instant::now()),

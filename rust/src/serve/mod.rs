@@ -1,12 +1,16 @@
-//! §serve — the **batched multi-problem LU scheduler** (DESIGN.md §10).
+//! §serve — the **batched multi-problem factorization scheduler**
+//! (DESIGN.md §10).
 //!
 //! The paper's Worker-Sharing and Early-Termination mechanisms move
 //! threads between the two branches of *one* look-ahead factorization.
 //! This layer generalizes both across *problems*: an [`LuServer`] accepts
 //! a queue of factorization requests (mixed sizes, priorities, optional
-//! deadlines) and multiplexes them over a single [`Pool`].
+//! deadlines — and since the factorization-family refactor, mixed
+//! [`FactorKind`]s: `Lu | Chol | Qr` share one priority queue, one crew
+//! registry, and one cost model) and multiplexes them over a single
+//! [`Pool`].
 //!
-//! Scheduling model — every pool worker runs the same [`serve_loop`]:
+//! Scheduling model — every pool worker runs the same `serve_loop`:
 //!
 //! 1. **Lead.** Pop the highest-priority queued request and drive its
 //!    factorization to completion ([`driver::drive`]), leading a
@@ -25,9 +29,9 @@
 //! checkpoint, leaving a clean factored prefix and returning its crew to
 //! the pool.
 //!
-//! Every kernel span a leader emits is tagged `req{id}`, so
+//! Every kernel span a leader emits is tagged `req{id}:{kind}`, so
 //! [`crate::trace::ascii_gantt_requests`] can render one Gantt lane per
-//! problem.
+//! problem, labeled with its factorization kind.
 
 pub mod driver;
 pub mod registry;
@@ -35,6 +39,7 @@ pub mod registry;
 pub use registry::{CrewRegistry, Lease};
 
 use crate::blis::{BlisParams, PackArena};
+use crate::factor::FactorKind;
 use crate::matrix::Matrix;
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
 use crate::sim::HwModel;
@@ -54,6 +59,7 @@ pub struct ServeConfig {
     pub bo: usize,
     /// Default inner (panel) block size.
     pub bi: usize,
+    /// BLIS blocking parameters shared by every request's kernels.
     pub params: BlisParams,
     /// How floating workers enter an in-flight kernel.
     pub entry: EntryPolicy,
@@ -74,9 +80,13 @@ impl Default for ServeConfig {
     }
 }
 
-/// One factorization request.
+/// One factorization request (of any [`FactorKind`] — the name predates
+/// the factorization-family refactor).
 pub struct LuRequest {
+    /// The matrix to factorize (consumed; returned in the result).
     pub a: Matrix,
+    /// Which factorization to run (`Lu` by default).
+    pub kind: FactorKind,
     /// Higher runs first and attracts floaters more strongly.
     pub priority: u8,
     /// Budget after which the request is ET-cancelled.
@@ -88,9 +98,11 @@ pub struct LuRequest {
 }
 
 impl LuRequest {
+    /// A default-priority LU request with server-default block sizes.
     pub fn new(a: Matrix) -> Self {
         Self {
             a,
+            kind: FactorKind::Lu,
             priority: 0,
             deadline: None,
             bo: None,
@@ -98,16 +110,27 @@ impl LuRequest {
         }
     }
 
+    /// Select the factorization kind (Cholesky requests must carry a
+    /// square SPD matrix; a rectangular one is rejected at lead time and
+    /// comes back `cancelled`).
+    pub fn with_kind(mut self, kind: FactorKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Set the scheduling priority (higher runs first).
     pub fn with_priority(mut self, p: u8) -> Self {
         self.priority = p;
         self
     }
 
+    /// Set the wall-clock budget after which the request is cancelled.
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
         self
     }
 
+    /// Override the server's default outer/inner block sizes.
     pub fn with_blocks(mut self, bo: usize, bi: usize) -> Self {
         self.bo = Some(bo);
         self.bi = Some(bi);
@@ -118,13 +141,21 @@ impl LuRequest {
 /// Completed (or cancelled) request.
 #[derive(Debug)]
 pub struct JobResult {
+    /// Request id assigned at submission.
     pub id: u64,
+    /// The factorization that ran.
+    pub kind: FactorKind,
     /// The matrix, now holding the factors (a clean factored prefix of
     /// `cols_done` columns if the request was cancelled).
     pub a: Matrix,
-    /// Absolute pivots for the committed columns.
+    /// Absolute pivots for the committed columns (LU only).
     pub ipiv: Vec<usize>,
+    /// Householder scalar factors for the committed columns (QR only).
+    pub tau: Vec<f64>,
+    /// Columns fully factorized and committed.
     pub cols_done: usize,
+    /// Whether the request was cancelled (by handle, deadline, or a
+    /// malformed problem, e.g. a rectangular Cholesky).
     pub cancelled: bool,
     /// Wall seconds from submission to completion.
     pub secs: f64,
@@ -143,6 +174,7 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
+    /// The request id (matches [`JobResult::id`] and trace tags).
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -154,6 +186,7 @@ impl JobHandle {
         self.state.cancel.store(true, Ordering::Release);
     }
 
+    /// Whether the result is ready (non-blocking).
     pub fn is_done(&self) -> bool {
         self.state.done.lock().unwrap().is_some()
     }
@@ -175,6 +208,7 @@ struct QueuedJob {
     id: u64,
     seq: u64,
     priority: u8,
+    kind: FactorKind,
     a: Matrix,
     bo: usize,
     bi: usize,
@@ -290,6 +324,7 @@ impl LuServer {
             id,
             seq: id,
             priority: req.priority,
+            kind: req.kind,
             a: req.a,
             bo: req.bo.unwrap_or(self.state.cfg.bo),
             bi: req.bi.unwrap_or(self.state.cfg.bi),
@@ -358,6 +393,7 @@ fn serve_loop(state: &ServerState) {
         if let Some(job) = state.pop() {
             let jstate = Arc::clone(&job.state);
             let id = job.id;
+            let kind = job.kind;
             // A panicking request must not wedge its waiter or leak its
             // registry entry (that would strand floaters on a dead crew).
             let led =
@@ -369,8 +405,10 @@ fn serve_loop(state: &ServerState) {
                     &jstate,
                     JobResult {
                         id,
+                        kind,
                         a: Matrix::zeros(0, 0),
                         ipiv: Vec::new(),
+                        tau: Vec::new(),
                         cols_done: 0,
                         cancelled: true,
                         secs: 0.0,
@@ -411,6 +449,7 @@ fn serve_loop(state: &ServerState) {
 fn lead_job(state: &ServerState, job: QueuedJob) {
     let QueuedJob {
         id,
+        kind,
         mut a,
         bo,
         bi,
@@ -421,17 +460,26 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         ..
     } = job;
     // A request cancelled (or expired) while still queued costs nothing;
-    // the pool stays fully available to the rest of the batch.
+    // the pool stays fully available to the rest of the batch. A
+    // malformed problem (rectangular Cholesky) is rejected the same way
+    // rather than poisoning a crew.
+    let shape_check = kind.validate(a.rows(), a.cols());
     let dead_on_arrival = jstate.cancel.load(Ordering::Acquire)
-        || deadline.is_some_and(|d| Instant::now() >= d);
+        || deadline.is_some_and(|d| Instant::now() >= d)
+        || shape_check.is_err();
     if dead_on_arrival {
+        if let Err(e) = shape_check {
+            eprintln!("serve: request {id} rejected: {e}");
+        }
         let secs = submitted.elapsed().as_secs_f64();
         complete(
             &jstate,
             JobResult {
                 id,
+                kind,
                 a,
                 ipiv: Vec::new(),
+                tau: Vec::new(),
                 cols_done: 0,
                 cancelled: true,
                 secs,
@@ -445,7 +493,7 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         id,
         priority,
         crew.shared(),
-        driver::remaining_cost(&state.cfg.hw, m, n, 0, bo, bi),
+        kind.remaining_cost(&state.cfg.hw, m, n, 0, bo, bi),
     ));
     state.registry.register(Arc::clone(&lease));
     let dcfg = driver::DriveCfg {
@@ -453,6 +501,7 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         hw: &state.cfg.hw,
         bo,
         bi,
+        kind,
         lease: &lease,
         cancel: &jstate.cancel,
         deadline,
@@ -468,8 +517,10 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         &jstate,
         JobResult {
             id,
+            kind,
             a,
             ipiv: out.ipiv,
+            tau: out.tau,
             cols_done: out.cols_done,
             cancelled: out.cancelled,
             secs,
@@ -502,6 +553,7 @@ mod tests {
             id,
             seq: id,
             priority,
+            kind: FactorKind::Lu,
             a: Matrix::zeros(1, 1),
             bo: 4,
             bi: 2,
@@ -640,6 +692,50 @@ mod tests {
             "steady-state serving allocated packed buffers"
         );
         assert!(steady.leases > warm.leases);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_kind_batch_shares_one_queue() {
+        let server = LuServer::new(tiny_cfg(2));
+        let n = 40;
+        let a_lu = Matrix::random(n, n, 71);
+        let a_ch = Matrix::random_spd(n, 72);
+        let a_qr = Matrix::random(n + 8, n, 73);
+        let handles = vec![
+            server.submit(LuRequest::new(a_lu.clone())),
+            server.submit(LuRequest::new(a_ch.clone()).with_kind(FactorKind::Chol)),
+            server.submit(LuRequest::new(a_qr.clone()).with_kind(FactorKind::Qr)),
+        ];
+        let results: Vec<JobResult> = handles.into_iter().map(|h| h.wait()).collect();
+        for r in &results {
+            assert!(!r.cancelled, "req{} ({}) cancelled", r.id, r.kind.name());
+            assert_eq!(r.cols_done, n, "req{}", r.id);
+        }
+        assert_eq!(results[0].kind, FactorKind::Lu);
+        let r_lu = crate::matrix::naive::lu_residual(&a_lu, &results[0].a, &results[0].ipiv);
+        assert!(r_lu < 1e-11, "lu residual {r_lu}");
+        assert_eq!(results[1].kind, FactorKind::Chol);
+        let r_ch = crate::matrix::naive::chol_residual(&a_ch, &results[1].a);
+        assert!(r_ch < 1e-11, "chol residual {r_ch}");
+        assert_eq!(results[2].kind, FactorKind::Qr);
+        let r_qr = crate::matrix::naive::qr_residual(&a_qr, &results[2].a, &results[2].tau);
+        assert!(r_qr < 1e-11, "qr residual {r_qr}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn rectangular_cholesky_request_is_rejected_cleanly() {
+        let server = LuServer::new(tiny_cfg(1));
+        let h =
+            server.submit(LuRequest::new(Matrix::random(16, 24, 1)).with_kind(FactorKind::Chol));
+        let res = h.wait();
+        assert!(res.cancelled);
+        assert_eq!(res.cols_done, 0);
+        // The server keeps serving after the rejection.
+        let a0 = Matrix::random(24, 24, 2);
+        let ok = server.submit(LuRequest::new(a0.clone())).wait();
+        assert!(!ok.cancelled);
         server.shutdown();
     }
 

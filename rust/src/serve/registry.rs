@@ -29,6 +29,7 @@ pub struct Lease {
 }
 
 impl Lease {
+    /// New lease with an initial remaining-work estimate.
     pub fn new(id: u64, priority: u8, shared: Arc<CrewShared>, remaining: f64) -> Self {
         Self {
             id,
@@ -44,6 +45,7 @@ impl Lease {
         f64::from_bits(self.remaining.load(Ordering::Relaxed))
     }
 
+    /// Refresh the remaining-work estimate (leader, at checkpoints).
     pub fn set_remaining(&self, secs: f64) {
         self.remaining.store(secs.to_bits(), Ordering::Relaxed);
     }
@@ -74,6 +76,7 @@ impl Default for CrewRegistry {
 }
 
 impl CrewRegistry {
+    /// Empty registry at epoch 0.
     pub fn new() -> Self {
         Self {
             slots: Mutex::new(Vec::new()),
@@ -91,6 +94,7 @@ impl CrewRegistry {
         self.slots.lock().unwrap().len()
     }
 
+    /// Whether no problem is in flight.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

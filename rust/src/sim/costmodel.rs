@@ -35,6 +35,7 @@ pub struct HwModel {
     /// Memory bandwidth per core for row swaps (GB/s), saturating at
     /// `bw_cores` cores.
     pub bw_core: f64,
+    /// Core count at which the swap bandwidth saturates.
     pub bw_cores: usize,
     /// Parallelization efficiency loss per extra thread (synchronization,
     /// packing imbalance).

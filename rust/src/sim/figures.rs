@@ -8,12 +8,16 @@ use super::lu_sim::{simulate, SimVariant};
 /// A generic series table: named columns, numeric rows.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Human-readable caption (figure number + axes).
     pub title: String,
+    /// Column names, one per entry of each row.
     pub columns: Vec<String>,
+    /// Numeric data rows.
     pub rows: Vec<Vec<f64>>,
 }
 
 impl Table {
+    /// Render as CSV with a `# title` header line.
     pub fn to_csv(&self) -> String {
         let mut s = format!("# {}\n{}\n", self.title, self.columns.join(","));
         for r in &self.rows {
@@ -37,11 +41,14 @@ impl Table {
 /// b_o = 32..512 step 32). `scale < 1.0` shrinks the grids for quick
 /// runs.
 pub struct Grids {
+    /// Problem sizes `n` to sweep.
     pub ns: Vec<usize>,
+    /// Outer block sizes `b_o` to sweep.
     pub bos: Vec<usize>,
 }
 
 impl Grids {
+    /// The full grids of the paper's evaluation.
     pub fn paper() -> Self {
         Self {
             ns: (1..=24).map(|i| i * 500).collect(),

@@ -25,6 +25,7 @@ pub enum SimVariant {
 }
 
 impl SimVariant {
+    /// Paper-style display name (`LU`, `LU_LA`, ...).
     pub fn name(&self) -> &'static str {
         match self {
             SimVariant::Lu => "LU",
@@ -35,6 +36,7 @@ impl SimVariant {
         }
     }
 
+    /// Parse a variant name (`lu`, `la`, `mb`, `et`, `os`).
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s.to_ascii_lowercase().as_str() {
             "lu" => SimVariant::Lu,

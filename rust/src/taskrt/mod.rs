@@ -26,7 +26,9 @@ type TaskFn = Box<dyn FnOnce() + Send>;
 
 /// A node of the task graph (builder view).
 pub struct Task {
+    /// Debug label (e.g. `panel[k]`).
     pub name: String,
+    /// Scheduling priority (larger runs earlier).
     pub priority: Priority,
     run: Option<TaskFn>,
     /// Indices of tasks that must finish first.
@@ -40,6 +42,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Empty graph.
     pub fn new() -> Self {
         Self::default()
     }
@@ -67,10 +70,12 @@ impl GraphBuilder {
         id
     }
 
+    /// Number of tasks added so far.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Whether no task has been added.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }

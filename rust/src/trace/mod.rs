@@ -51,6 +51,7 @@ impl Kind {
         }
     }
 
+    /// Lowercase kind name (used as the Chrome-trace category).
     pub fn name(self) -> &'static str {
         match self {
             Kind::Panel => "panel",
@@ -69,10 +70,13 @@ impl Kind {
 pub struct Span {
     /// Worker lane: pool worker id + 1, or 0 for the main thread.
     pub lane: usize,
+    /// Task class (panel, swap, trsm, gemm, ...).
     pub kind: Kind,
+    /// Free-form label; serve drivers prefix it with `req<id>:<kind>.`.
     pub label: String,
     /// Seconds since the recorder's origin.
     pub t0: f64,
+    /// End time, seconds since the recorder's origin.
     pub t1: f64,
 }
 
@@ -205,10 +209,12 @@ pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
 
 /// Render spans as a multi-problem Gantt: one lane per *request*, keyed
 /// by the label prefix up to the first `.` when it is a request tag
-/// (`req<id>`, as emitted by the serve layer's drivers); untagged spans
-/// share an `(other)` lane. Where [`ascii_gantt`] answers "what was each
-/// worker doing", this view answers "how did each problem's lifetime
-/// overlap the others' on the shared pool".
+/// (`req<id>:<kind>`, as emitted by the serve layer's drivers — the lane
+/// label therefore names the factorization kind, e.g. `req3:qr`, instead
+/// of implying every lane is an LU); untagged spans share an `(other)`
+/// lane. Where [`ascii_gantt`] answers "what was each worker doing", this
+/// view answers "how did each problem's lifetime overlap the others' on
+/// the shared pool".
 pub fn ascii_gantt_requests(spans: &[Span], width: usize) -> String {
     if spans.is_empty() {
         return String::from("(no spans)\n");
@@ -438,6 +444,40 @@ mod tests {
         assert!(req0_line.contains('G'), "{req0_line}");
         // 1 header + 3 lanes + legend.
         assert_eq!(g.lines().count(), 5);
+    }
+
+    #[test]
+    fn request_gantt_lane_labels_carry_the_kind() {
+        // The serve drivers tag spans `req<id>:<kind>`; each lane label
+        // must surface the kind instead of hardcoding one workload.
+        let spans = vec![
+            Span {
+                lane: 0,
+                kind: Kind::Panel,
+                label: "req0:lu.panel[0]".into(),
+                t0: 0.0,
+                t1: 0.4,
+            },
+            Span {
+                lane: 1,
+                kind: Kind::Gemm,
+                label: "req1:chol.update[0]".into(),
+                t0: 0.2,
+                t1: 0.9,
+            },
+            Span {
+                lane: 2,
+                kind: Kind::Gemm,
+                label: "req2:qr.update[8]".into(),
+                t0: 0.5,
+                t1: 1.0,
+            },
+        ];
+        let g = ascii_gantt_requests(&spans, 30);
+        assert!(g.contains("3 requests"), "{g}");
+        assert!(g.lines().any(|l| l.starts_with("req0:lu")), "{g}");
+        assert!(g.lines().any(|l| l.starts_with("req1:chol")), "{g}");
+        assert!(g.lines().any(|l| l.starts_with("req2:qr")), "{g}");
     }
 
     #[test]

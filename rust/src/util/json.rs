@@ -8,15 +8,22 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always carried as `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -24,6 +31,7 @@ impl Value {
         }
     }
 
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -31,6 +39,7 @@ impl Value {
         }
     }
 
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
@@ -38,10 +47,12 @@ impl Value {
         }
     }
 
+    /// Numeric payload truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Array payload, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),

@@ -24,6 +24,7 @@ use super::prng::Prng;
 pub struct Gen {
     rng: Prng,
     label: String,
+    /// Zero-based index of the case being generated.
     pub case_index: usize,
 }
 

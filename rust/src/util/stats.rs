@@ -4,11 +4,17 @@
 /// Summary of a sample of measurements (e.g. seconds per repetition).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Stats {
+    /// Sample count.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median (midpoint of the two central samples when `n` is even).
     pub median: f64,
+    /// Sample standard deviation (0 for a single sample).
     pub stddev: f64,
 }
 

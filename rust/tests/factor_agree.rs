@@ -1,0 +1,190 @@
+//! Factorization-family integration: Cholesky and QR run through the
+//! *same* generic WS+ET look-ahead driver as LU, validated against the
+//! naive oracles and checked for bitwise cross-crew-size agreement —
+//! mirroring `variants_agree.rs` for the two new kinds.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::factor::{factorize_lookahead, FactorKind, FactorOutcome, LaOpts};
+use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::pool::Pool;
+use malleable_lu::serve::{LuRequest, LuServer, ServeConfig};
+
+fn input_for(kind: FactorKind, m: usize, n: usize, seed: u64) -> Matrix {
+    match kind {
+        FactorKind::Chol => Matrix::random_spd(n, seed),
+        _ => Matrix::random(m, n, seed),
+    }
+}
+
+fn run(
+    kind: FactorKind,
+    a0: &Matrix,
+    bo: usize,
+    bi: usize,
+    workers: usize,
+    opts: &LaOpts,
+) -> (Matrix, FactorOutcome) {
+    let pool = Pool::new(workers);
+    let mut f = a0.clone();
+    let out = factorize_lookahead(kind, &pool, &BlisParams::tiny(), &mut f, bo, bi, opts, None);
+    (f, out)
+}
+
+fn residual(kind: FactorKind, a0: &Matrix, f: &Matrix, out: &FactorOutcome) -> f64 {
+    match kind {
+        FactorKind::Lu => naive::lu_residual(a0, f, &out.ipiv),
+        FactorKind::Chol => naive::chol_residual(a0, f),
+        FactorKind::Qr => naive::qr_residual(a0, f, &out.tau),
+    }
+}
+
+#[test]
+fn cholesky_reconstructs_through_lookahead_driver() {
+    for &(n, bo, bi) in &[(48usize, 8usize, 4usize), (64, 16, 4), (33, 16, 8)] {
+        let a0 = Matrix::random_spd(n, (n + bo) as u64);
+        let opts = LaOpts {
+            malleable: true,
+            early_term: true,
+            ..Default::default()
+        };
+        let (f, out) = run(FactorKind::Chol, &a0, bo, bi, 2, &opts);
+        assert!(!out.cancelled);
+        assert_eq!(out.cols_done, n);
+        let r = naive::chol_residual(&a0, &f);
+        assert!(r < 1e-11, "n={n} bo={bo} residual {r}");
+        // The factorization also matches the naive oracle numerically.
+        let mut g = a0.clone();
+        naive::cholesky(g.view_mut());
+        let mut worst = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                worst = worst.max((f[(i, j)] - g[(i, j)]).abs());
+            }
+        }
+        assert!(worst < 1e-9, "n={n}: lower-triangle diff {worst}");
+        // The upper triangle is exactly as on entry (never touched).
+        for j in 1..n {
+            for i in 0..j {
+                assert_eq!(f[(i, j)], a0[(i, j)], "upper entry ({i},{j}) touched");
+            }
+        }
+    }
+}
+
+#[test]
+fn qr_is_orthogonal_and_reconstructs() {
+    // Square, tall, and wide problems through the look-ahead driver.
+    for &(m, n) in &[(48usize, 48usize), (64, 40), (40, 64)] {
+        let a0 = Matrix::random(m, n, (m * 3 + n) as u64);
+        let opts = LaOpts {
+            malleable: true,
+            early_term: true,
+            ..Default::default()
+        };
+        let (f, out) = run(FactorKind::Qr, &a0, 16, 4, 2, &opts);
+        assert!(!out.cancelled);
+        assert_eq!(out.cols_done, m.min(n));
+        assert_eq!(out.tau.len(), m.min(n));
+        let r = naive::qr_residual(&a0, &f, &out.tau);
+        assert!(r < 1e-11, "m={m} n={n}: ‖A − QR‖/‖A‖ = {r}");
+        let q = naive::qr_q(&f, &out.tau);
+        let o = naive::orthogonality(&q);
+        assert!(o < 1e-12, "m={m} n={n}: ‖QᵀQ − I‖ = {o}");
+    }
+}
+
+#[test]
+fn crew_size_never_changes_bits_for_any_kind() {
+    // The acceptance gate of the factorization family: for a fixed
+    // schedule (WS on, ET off — ET cut points are timing-dependent),
+    // the factors of every kind are bitwise identical for any crew size.
+    let n = 64;
+    for &kind in FactorKind::all() {
+        let a0 = input_for(kind, n, n, 5);
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let mut reference: Option<(Matrix, FactorOutcome)> = None;
+        for workers in [1usize, 2, 4] {
+            let (f, out) = run(kind, &a0, 16, 4, workers, &opts);
+            assert_eq!(out.cols_done, n, "{} w={workers}", kind.name());
+            match &reference {
+                None => reference = Some((f, out)),
+                Some((f0, o0)) => {
+                    assert_eq!(o0.ipiv, out.ipiv, "{} pivots w={workers}", kind.name());
+                    for (x, y) in o0.tau.iter().zip(&out.tau) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{} tau w={workers}", kind.name());
+                    }
+                    for (x, y) in f0.data().iter().zip(f.data()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{} w={workers}", kind.name());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn et_schedule_changes_not_the_math() {
+    // With ET on, cut points (and thus rounding groupings) are timing-
+    // dependent, but every kind must still produce a valid factorization
+    // of full rank.
+    let n = 72;
+    for &kind in FactorKind::all() {
+        let a0 = input_for(kind, n, n, 9);
+        let opts = LaOpts {
+            malleable: true,
+            early_term: true,
+            ..Default::default()
+        };
+        let (f, out) = run(kind, &a0, 24, 4, 2, &opts);
+        assert_eq!(out.cols_done, n, "{}", kind.name());
+        let stats = out.la_stats.as_ref().expect("look-ahead stats");
+        assert_eq!(
+            stats.panel_widths.iter().sum::<usize>(),
+            n,
+            "{}: every column factorized exactly once",
+            kind.name()
+        );
+        let r = residual(kind, &a0, &f, &out);
+        assert!(r < 1e-10, "{}: residual {r}", kind.name());
+    }
+}
+
+#[test]
+fn lookahead_equals_blocked_serve_path_bitwise() {
+    // One driver, two schedules: the generic look-ahead (WS on) and the
+    // serve layer's blocked driver must produce bitwise-identical
+    // factors for every kind — the per-element operation chains are
+    // split-invariant by construction.
+    let n = 56;
+    let server = LuServer::new(ServeConfig {
+        workers: 2,
+        bo: 16,
+        bi: 4,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    });
+    for &kind in FactorKind::all() {
+        let a0 = input_for(kind, n, n, 13);
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let (f_la, out_la) = run(kind, &a0, 16, 4, 2, &opts);
+        let res = server
+            .submit(LuRequest::new(a0.clone()).with_kind(kind).with_blocks(16, 4))
+            .wait();
+        assert!(!res.cancelled, "{}", kind.name());
+        assert_eq!(res.cols_done, n, "{}", kind.name());
+        assert_eq!(out_la.ipiv, res.ipiv, "{} pivots", kind.name());
+        for (x, y) in out_la.tau.iter().zip(&res.tau) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} tau", kind.name());
+        }
+        for (x, y) in f_la.data().iter().zip(res.a.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}", kind.name());
+        }
+    }
+    server.shutdown();
+}
