@@ -1,7 +1,11 @@
 //! Micro-benchmarks of the BLIS substrate: GEMM (SIMD vs portable vs the
-//! naive triple loop), TRSM, LASWP and packing — the §Perf baseline
-//! numbers, emitted both human-readable and as machine-readable
-//! `BENCH_blis.json` so the perf trajectory is tracked PR over PR.
+//! naive triple loop, in **both sealed precisions**), TRSM, LASWP and
+//! packing — the §Perf baseline numbers, emitted both human-readable and
+//! as machine-readable `BENCH_blis.json` so the perf trajectory is
+//! tracked PR over PR. Every record carries a `prec` field (`f32` |
+//! `f64`); the headline precision comparison is the `gemm` lane pair —
+//! on AVX2 the `f32` kernel's doubled lane width should deliver ≥ 1.5×
+//! the `f64` GFLOPS (ISSUE 4 acceptance).
 //!
 //! Usage: `cargo bench --bench bench_blis -- [--quick] [--out FILE]`
 //! (`--quick` shrinks sizes for CI smoke; `--out` defaults to
@@ -11,8 +15,9 @@ use malleable_lu::blis::micro::{active_kernel_name, set_kernel, simd_available, 
 use malleable_lu::blis::pack::{pack_a, pack_b, PackedA, PackedB};
 use malleable_lu::blis::{gemm, laswp, trsm_llu, BlisParams};
 use malleable_lu::cli::Args;
-use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::matrix::{naive, Mat, Matrix};
 use malleable_lu::pool::Crew;
+use malleable_lu::scalar::Scalar;
 use malleable_lu::util::json::Value;
 use malleable_lu::util::stats::bench_seconds;
 use malleable_lu::util::{gemm_flops, gflops, trsm_flops};
@@ -23,7 +28,15 @@ struct Report {
 }
 
 impl Report {
-    fn push(&mut self, name: &str, shape: &[usize], threads: usize, variant: &str, gf: f64) {
+    fn push(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        threads: usize,
+        variant: &str,
+        prec: &str,
+        gf: f64,
+    ) {
         self.records.push(Value::obj([
             ("name", Value::Str(name.to_string())),
             (
@@ -32,12 +45,14 @@ impl Report {
             ),
             ("threads", Value::Num(threads as f64)),
             ("variant", Value::Str(variant.to_string())),
+            ("prec", Value::Str(prec.to_string())),
             ("gflops", Value::Num(gf)),
         ]));
     }
 }
 
-fn bench_gemm_kernel(
+/// Time one `n³` GEMM in precision `S` under the given kernel override.
+fn bench_gemm_kernel<S: Scalar>(
     report: &mut Report,
     crew: &mut Crew,
     params: &BlisParams,
@@ -46,16 +61,16 @@ fn bench_gemm_kernel(
     label: &str,
 ) -> f64 {
     set_kernel(kernel);
-    let a = Matrix::random(n, n, 1);
-    let b = Matrix::random(n, n, 2);
-    let mut c = Matrix::zeros(n, n);
+    let a = Mat::<S>::random(n, n, 1);
+    let b = Mat::<S>::random(n, n, 2);
+    let mut c = Mat::<S>::zeros(n, n);
     let st = bench_seconds(1, 3, || {
-        gemm(crew, params, 1.0, a.view(), b.view(), c.view_mut());
+        gemm(crew, params, S::ONE, a.view(), b.view(), c.view_mut());
     });
     set_kernel(Kernel::Auto);
     let gf = gflops(gemm_flops(n, n, n), st.median);
-    println!("gemm {n}^3 [{label}]: {gf:.2} GFLOPS");
-    report.push("gemm", &[n, n, n], 1, label, gf);
+    println!("gemm {n}^3 [{label}, {}]: {gf:.2} GFLOPS", S::NAME);
+    report.push("gemm", &[n, n, n], 1, label, S::NAME, gf);
     gf
 }
 
@@ -75,10 +90,20 @@ fn main() {
         simd_available()
     );
 
-    // GEMM: SIMD (when available) vs portable vs naive.
-    let blis_g = bench_gemm_kernel(&mut report, &mut crew, &params, n, Kernel::Auto, "auto");
+    // GEMM: per-precision lanes — SIMD (when available) vs portable.
+    let blis_g = bench_gemm_kernel::<f64>(&mut report, &mut crew, &params, n, Kernel::Auto, "auto");
+    let blis_g32 =
+        bench_gemm_kernel::<f32>(&mut report, &mut crew, &params, n, Kernel::Auto, "auto");
     if simd_available() {
-        bench_gemm_kernel(
+        bench_gemm_kernel::<f64>(
+            &mut report,
+            &mut crew,
+            &params,
+            n,
+            Kernel::Portable,
+            "portable",
+        );
+        bench_gemm_kernel::<f32>(
             &mut report,
             &mut crew,
             &params,
@@ -87,9 +112,12 @@ fn main() {
             "portable",
         );
     }
+    let ratio = blis_g32 / blis_g.max(1e-9);
+    println!("gemm {n}^3: f32/f64 throughput ratio {ratio:.2}x");
     // The acceptance shape: single-thread 1024^3 (skipped in quick mode).
     if !quick {
-        bench_gemm_kernel(&mut report, &mut crew, &params, 1024, Kernel::Auto, "auto");
+        bench_gemm_kernel::<f64>(&mut report, &mut crew, &params, 1024, Kernel::Auto, "auto");
+        bench_gemm_kernel::<f32>(&mut report, &mut crew, &params, 1024, Kernel::Auto, "auto");
     }
     let a = Matrix::random(n, n, 1);
     let b = Matrix::random(n, n, 2);
@@ -102,7 +130,7 @@ fn main() {
         "gemm {n}^3: blis {blis_g:.2} GFLOPS vs naive {naive_g:.2} GFLOPS ({:.1}x)",
         blis_g / naive_g
     );
-    report.push("gemm_naive", &[n, n, n], 1, "naive", naive_g);
+    report.push("gemm_naive", &[n, n, n], 1, "naive", "f64", naive_g);
 
     // GEPP shape (k = 128) — the LU trailing-update workload.
     let k = 128;
@@ -114,7 +142,7 @@ fn main() {
     });
     let gepp_g = gflops(gemm_flops(n, n, k), st.median);
     println!("gepp {n}x{n}x{k}: {gepp_g:.2} GFLOPS");
-    report.push("gepp", &[n, n, k], 1, "auto", gepp_g);
+    report.push("gepp", &[n, n, k], 1, "auto", "f64", gepp_g);
 
     // Wide-and-short GEMM: the shape the Loop-5 chunking targets.
     let (wm, wn, wk) = (8 * n, 24, 64);
@@ -126,7 +154,7 @@ fn main() {
     });
     let ws_g = gflops(gemm_flops(wm, wn, wk), st.median);
     println!("gemm wide-short {wm}x{wn}x{wk}: {ws_g:.2} GFLOPS");
-    report.push("gemm_wide_short", &[wm, wn, wk], 1, "auto", ws_g);
+    report.push("gemm_wide_short", &[wm, wn, wk], 1, "auto", "f64", ws_g);
 
     // TRSM.
     let l = Matrix::random(n, n, 5);
@@ -136,7 +164,7 @@ fn main() {
     });
     let trsm_g = gflops(trsm_flops(n, n), st.median);
     println!("trsm {n}x{n}: {trsm_g:.2} GFLOPS");
-    report.push("trsm", &[n, n], 1, "auto", trsm_g);
+    report.push("trsm", &[n, n], 1, "auto", "f64", trsm_g);
 
     // LASWP bandwidth (column-strip blocked).
     let mut m = Matrix::random(n, n, 7);
@@ -147,7 +175,7 @@ fn main() {
     let bytes = (ipiv.len() * n * 32) as f64;
     let laswp_gbs = bytes / st.median / 1e9;
     println!("laswp {}swaps x {n}cols: {laswp_gbs:.2} GB/s", ipiv.len());
-    report.push("laswp_gbs", &[ipiv.len(), n], 1, "auto", laswp_gbs);
+    report.push("laswp_gbs", &[ipiv.len(), n], 1, "auto", "f64", laswp_gbs);
 
     // Packing rates (arena-leased in the GEMM hot path; here we time the
     // copy itself on pre-allocated buffers).
@@ -158,7 +186,14 @@ fn main() {
     });
     let packa_gbs = (params.mc * params.kc * 16) as f64 / st.median / 1e9;
     println!("pack_a {}x{}: {packa_gbs:.2} GB/s", params.mc, params.kc);
-    report.push("pack_a_gbs", &[params.mc, params.kc], 1, "auto", packa_gbs);
+    report.push(
+        "pack_a_gbs",
+        &[params.mc, params.kc],
+        1,
+        "auto",
+        "f64",
+        packa_gbs,
+    );
     let srcb = Matrix::random(params.kc, 1024, 9);
     let mut pb = PackedB::with_capacity(params.kc, 1024);
     let st = bench_seconds(2, 5, || {
@@ -166,25 +201,42 @@ fn main() {
     });
     let packb_gbs = (params.kc * 1024 * 16) as f64 / st.median / 1e9;
     println!("pack_b {}x1024: {packb_gbs:.2} GB/s", params.kc);
-    report.push("pack_b_gbs", &[params.kc, 1024], 1, "auto", packb_gbs);
+    report.push(
+        "pack_b_gbs",
+        &[params.kc, 1024],
+        1,
+        "auto",
+        "f64",
+        packb_gbs,
+    );
 
     if out_path != "-" {
         let doc = Value::obj([
             ("bench", Value::Str("blis".into())),
             ("quick", Value::Bool(quick)),
             ("simd_available", Value::Bool(simd_available())),
+            ("f32_over_f64_gemm", Value::Num(ratio)),
             ("records", Value::Arr(report.records)),
         ]);
         std::fs::write(&out_path, doc.dump()).expect("write bench json");
         println!("wrote {out_path}");
     }
 
-    // On FMA-less x86 the portable kernel pays a software fma() per
-    // multiply-accumulate to keep the cross-kernel bitwise contract
-    // (DESIGN.md §9) — no perf floor is claimed for such hosts.
-    if simd_available() {
+    // On FMA-less x86 (or when MLU_KERNEL=portable pins the scalar
+    // kernels, as the CI no-AVX2 job does) the portable path pays a
+    // software fma() per multiply-accumulate to keep the cross-kernel
+    // bitwise contract (DESIGN.md §9) — no perf floor is claimed there,
+    // so the asserts key on the *active* kernel, not the hardware.
+    if simd_available() && active_kernel_name() == "avx2+fma" {
         assert!(blis_g > naive_g, "blocked GEMM must beat the naive loop");
+        // The f32 kernel runs 8 lanes against f64's 4: the ISSUE-4 target
+        // is ≥ 1.5×; assert a softer 1.2× floor so a noisy CI container
+        // does not flake, and report the real ratio in the JSON above.
+        assert!(
+            ratio > 1.2,
+            "f32 GEMM should outrun f64 on AVX2 (got {ratio:.2}x)"
+        );
     } else {
-        println!("note: no AVX2+FMA — fused portable fallback; blis>naive floor not asserted");
+        println!("note: no AVX2+FMA — fused portable fallback; perf floors not asserted");
     }
 }

@@ -1,22 +1,81 @@
 //! Factorization-family throughput: LU, Cholesky, and QR driven through
-//! the *same* generic WS+ET look-ahead driver, measured per kind and
-//! emitted as machine-readable `BENCH_factor.json` so the trajectory is
-//! tracked PR over PR (the factorization-family counterpart of
-//! `bench_lu_variants`).
+//! the *same* generic WS+ET look-ahead driver, measured per kind **and
+//! per precision** (`f32` + `f64` lanes) and emitted as machine-readable
+//! `BENCH_factor.json` so the trajectory is tracked PR over PR (the
+//! factorization-family counterpart of `bench_lu_variants`).
 //!
 //! Absolute numbers on the CI container are 1-core numbers; what this
-//! harness guards is (a) all three kinds complete through one driver,
-//! (b) their relative throughput stays in the right ballpark (Cholesky
-//! does half the flops of LU, QR twice), and (c) the JSON artifact keeps
-//! flowing for the perf-smoke trend.
+//! harness guards is (a) all three kinds complete through one driver in
+//! both precisions, (b) their relative throughput stays in the right
+//! ballpark (Cholesky does half the flops of LU, QR twice), and (c) the
+//! JSON artifact keeps flowing for the perf-smoke trend, now with a
+//! `prec` field on every record.
 
 use malleable_lu::blis::BlisParams;
 use malleable_lu::cli::Args;
 use malleable_lu::factor::{factorize_lookahead, FactorKind, LaOpts};
-use malleable_lu::matrix::{naive, Matrix};
+use malleable_lu::matrix::{naive, Mat};
 use malleable_lu::pool::Pool;
+use malleable_lu::scalar::Scalar;
 use malleable_lu::util::json::Value;
 use malleable_lu::util::{gflops, timed};
+
+/// Bench one `(kind, n)` cell in precision `S`; returns the JSON record.
+#[allow(clippy::too_many_arguments)]
+fn bench_cell<S: Scalar>(
+    pool: &Pool,
+    params: &BlisParams,
+    opts: &LaOpts,
+    kind: FactorKind,
+    n: usize,
+    bo: usize,
+    bi: usize,
+    reps: usize,
+) -> Value {
+    let a0: Mat<S> = match kind {
+        FactorKind::Chol => Mat::<S>::random_spd(n, n as u64),
+        _ => Mat::<S>::random(n, n, n as u64),
+    };
+    let mut best = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..reps {
+        let mut f = a0.clone();
+        let (secs, out) =
+            timed(|| factorize_lookahead(kind, pool, params, &mut f, bo, bi, opts, None));
+        assert!(!out.cancelled);
+        assert_eq!(out.cols_done, n, "{} {} n={n}", kind.name(), S::NAME);
+        best = best.min(secs);
+        last = Some((f, out));
+    }
+    // Correctness gate: a bench that factorizes garbage measures
+    // nothing. Tolerances scale with the working precision's epsilon.
+    let (f, out) = last.unwrap();
+    let r = match kind {
+        FactorKind::Lu => naive::lu_residual(&a0, &f, &out.ipiv),
+        FactorKind::Chol => naive::chol_residual(&a0, &f),
+        FactorKind::Qr => naive::qr_residual(&a0, &f, &out.tau),
+    };
+    let tol = 64.0 * n as f64 * S::EPSILON.to_f64();
+    assert!(
+        r < tol,
+        "{} {} n={n}: residual {r} above {tol}",
+        kind.name(),
+        S::NAME
+    );
+    let g = gflops(kind.flops(n, n), best);
+    println!(
+        "{:<5} {:<4} n={n:<5} {best:.4}s  {g:.2} GFLOPS",
+        kind.name(),
+        S::NAME
+    );
+    Value::obj([
+        ("kind", Value::Str(kind.name().into())),
+        ("prec", Value::Str(S::NAME.into())),
+        ("n", Value::Num(n as f64)),
+        ("secs", Value::Num(best)),
+        ("gflops", Value::Num(g)),
+    ])
+}
 
 fn main() {
     let args = Args::from_env();
@@ -40,39 +99,12 @@ fn main() {
     let mut records = Vec::new();
     for &n in &sizes {
         for &kind in FactorKind::all() {
-            let a0 = match kind {
-                FactorKind::Chol => Matrix::random_spd(n, n as u64),
-                _ => Matrix::random(n, n, n as u64),
-            };
-            let mut best = f64::INFINITY;
-            let mut last = None;
-            for _ in 0..reps {
-                let mut f = a0.clone();
-                let (secs, out) = timed(|| {
-                    factorize_lookahead(kind, &pool, &params, &mut f, bo, bi, &opts, None)
-                });
-                assert!(!out.cancelled);
-                assert_eq!(out.cols_done, n, "{} n={n}", kind.name());
-                best = best.min(secs);
-                last = Some((f, out));
-            }
-            // Correctness gate: a bench that factorizes garbage measures
-            // nothing.
-            let (f, out) = last.unwrap();
-            let r = match kind {
-                FactorKind::Lu => naive::lu_residual(&a0, &f, &out.ipiv),
-                FactorKind::Chol => naive::chol_residual(&a0, &f),
-                FactorKind::Qr => naive::qr_residual(&a0, &f, &out.tau),
-            };
-            assert!(r < 1e-10, "{} n={n}: residual {r}", kind.name());
-            let g = gflops(kind.flops(n, n), best);
-            println!("{:<5} n={n:<5} {best:.4}s  {g:.2} GFLOPS", kind.name());
-            records.push(Value::obj([
-                ("kind", Value::Str(kind.name().into())),
-                ("n", Value::Num(n as f64)),
-                ("secs", Value::Num(best)),
-                ("gflops", Value::Num(g)),
-            ]));
+            records.push(bench_cell::<f64>(
+                &pool, &params, &opts, kind, n, bo, bi, reps,
+            ));
+            records.push(bench_cell::<f32>(
+                &pool, &params, &opts, kind, n, bo, bi, reps,
+            ));
         }
     }
 

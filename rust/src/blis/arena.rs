@@ -31,6 +31,7 @@
 //!    overwrite every element they later read (edges are zero-padded
 //!    explicitly), so no stale data can leak between problems.
 
+use crate::scalar::Scalar;
 use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -104,6 +105,47 @@ impl AlignedBuf {
     pub fn as_mut_ptr(&mut self) -> *mut f64 {
         self.ptr.as_ptr()
     }
+
+    /// Capacity in elements of scalar type `S` (the buffer's granule is
+    /// `f64`, so an `f64` buffer holds twice as many `f32`s — one arena
+    /// serves both precisions; see [`f64_granules`]).
+    #[inline]
+    pub fn len_as<S: Scalar>(&self) -> usize {
+        self.len * std::mem::size_of::<f64>() / std::mem::size_of::<S>()
+    }
+
+    /// View the buffer as a slice of `S`.
+    ///
+    /// Sound for the sealed scalar types: both are plain-old-data, the
+    /// allocation is 64-byte aligned (≥ any scalar's alignment), and
+    /// `len_as` never exceeds the allocation (with `len == 0` the
+    /// dangling pointer is used with length 0, which is defined).
+    #[inline]
+    pub fn as_slice_of<S: Scalar>(&self) -> &[S] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr() as *const S, self.len_as::<S>()) }
+    }
+
+    /// Mutable typed view (see [`AlignedBuf::as_slice_of`]).
+    #[inline]
+    pub fn as_mut_slice_of<S: Scalar>(&mut self) -> &mut [S] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.as_ptr() as *mut S, self.len_as::<S>())
+        }
+    }
+
+    /// Typed write pointer to the first element.
+    #[inline]
+    pub fn as_mut_ptr_of<S: Scalar>(&mut self) -> *mut S {
+        self.ptr.as_ptr() as *mut S
+    }
+}
+
+/// `f64` granules needed to back `elems` elements of `S` — the unit
+/// [`PackArena::lease`] works in, so one size-classed free list serves
+/// packed buffers of every precision.
+#[inline]
+pub fn f64_granules<S: Scalar>(elems: usize) -> usize {
+    (elems * std::mem::size_of::<S>()).div_ceil(std::mem::size_of::<f64>())
 }
 
 impl std::ops::Deref for AlignedBuf {
@@ -246,6 +288,26 @@ mod tests {
         b[15] = -1.0;
         assert_eq!(b[3], 2.5);
         assert_eq!(b[15], -1.0);
+    }
+
+    #[test]
+    fn typed_views_share_one_allocation() {
+        assert_eq!(f64_granules::<f64>(100), 100);
+        assert_eq!(f64_granules::<f32>(100), 50);
+        assert_eq!(f64_granules::<f32>(101), 51, "odd f32 counts round up");
+        let mut b = AlignedBuf::zeroed(8);
+        assert_eq!(b.len_as::<f64>(), 8);
+        assert_eq!(b.len_as::<f32>(), 16);
+        {
+            let s32 = b.as_mut_slice_of::<f32>();
+            s32[0] = 1.5;
+            s32[15] = -2.0;
+        }
+        assert_eq!(b.as_slice_of::<f32>()[0], 1.5);
+        assert_eq!(b.as_slice_of::<f32>()[15], -2.0);
+        // Empty buffers give empty typed views.
+        let e = AlignedBuf::zeroed(0);
+        assert!(e.as_slice_of::<f32>().is_empty());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The malleable five-loop GEMM (paper Figs. 1, 2 and 10).
+//! The malleable five-loop GEMM (paper Figs. 1, 2 and 10), generic over
+//! the sealed [`Scalar`] layer.
 //!
 //! `C += alpha · A · B`, blocked exactly as BLIS does, executed by a
 //! [`Crew`]. Every Loop-3 iteration publishes two crew jobs — "pack
@@ -19,13 +20,17 @@
 //!
 //! Packed `A_c`/`B_c` buffers are leased from the crew's
 //! [`super::arena::PackArena`] (and returned before `gemm` exits), so the
-//! steady-state factorization stream performs no heap allocation here.
+//! steady-state factorization stream performs no heap allocation here —
+//! in either precision: the arena's granule is `f64` and an `f32` GEMM
+//! views the same size-classed buffers at two elements per granule.
 
+use super::arena::f64_granules;
 use super::micro::micro_kernel;
 use super::pack::{pack_a, pack_b, PackedA, PackedB};
 use super::params::{BlisParams, MR, NR};
 use crate::matrix::{MatMut, MatRef};
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 
 /// `C += alpha · A · B` on the given crew.
@@ -33,12 +38,19 @@ use crate::trace::{span, Kind};
 /// Dimensions: `A` is `m × k`, `B` is `k × n`, `C` is `m × n`.
 /// The result is bitwise independent of the crew size (the `k` reduction
 /// is never split).
-pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
+pub fn gemm<S: Scalar>(
+    crew: &mut Crew,
+    params: &BlisParams,
+    alpha: S,
+    a: MatRef<S>,
+    b: MatRef<S>,
+    c: MatMut<S>,
+) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(b.rows(), k, "gemm: inner dimensions disagree");
     assert_eq!(c.rows(), m, "gemm: C row count");
     assert_eq!(c.cols(), n, "gemm: C column count");
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+    if m == 0 || n == 0 || k == 0 || alpha == S::ZERO {
         return;
     }
 
@@ -48,13 +60,17 @@ pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatR
     // leased from the crew's arena — zero allocations in steady state —
     // and handed back below before returning.
     let arena = std::sync::Arc::clone(crew.arena());
-    let mut pa = PackedA::from_buf(arena.lease(PackedA::required_elems(
-        params.mc.min(crate::util::round_up(m, MR)),
-        params.kc.min(k),
+    let mut pa: PackedA<S> = PackedA::from_buf(arena.lease(f64_granules::<S>(
+        PackedA::<S>::required_elems(
+            params.mc.min(crate::util::round_up(m, MR)),
+            params.kc.min(k),
+        ),
     )));
-    let mut pb = PackedB::from_buf(arena.lease(PackedB::required_elems(
-        params.kc.min(k),
-        params.nc.min(crate::util::round_up(n, NR)),
+    let mut pb: PackedB<S> = PackedB::from_buf(arena.lease(f64_granules::<S>(
+        PackedB::<S>::required_elems(
+            params.kc.min(k),
+            params.nc.min(crate::util::round_up(n, NR)),
+        ),
     )));
 
     // Loop 1: columns of C/B in blocks of n_c.
@@ -78,13 +94,7 @@ pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatR
                 span(Kind::Pack, "pack_a", || {
                     pack_a(crew, a.sub(ic, pc, mc_eff, kc_eff), &mut pa);
                 });
-                macro_kernel(
-                    crew,
-                    alpha,
-                    &pa,
-                    &pb,
-                    c.sub(ic, jc, mc_eff, nc_eff),
-                );
+                macro_kernel(crew, alpha, &pa, &pb, c.sub(ic, jc, mc_eff, nc_eff));
                 ic += mc_eff;
             }
             pc += kc_eff;
@@ -99,7 +109,13 @@ pub fn gemm(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, b: MatR
 /// Loops 4+5: sweep the packed `B_c` micro-panels (Loop 4, parallelized)
 /// against the packed `A_c` micro-panels (Loop 5, split into blocks when
 /// Loop 4 alone has fewer chunks than the team wants — see module docs).
-fn macro_kernel(crew: &mut Crew, alpha: f64, pa: &PackedA, pb: &PackedB, c: MatMut) {
+fn macro_kernel<S: Scalar>(
+    crew: &mut Crew,
+    alpha: S,
+    pa: &PackedA<S>,
+    pb: &PackedB<S>,
+    c: MatMut<S>,
+) {
     let (m, n) = (c.rows(), c.cols());
     debug_assert_eq!(pa.m, m);
     debug_assert_eq!(pb.n, n);
@@ -146,7 +162,7 @@ fn macro_kernel(crew: &mut Crew, alpha: f64, pa: &PackedA, pb: &PackedB, c: MatM
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{naive, Matrix};
+    use crate::matrix::{naive, Mat, Matrix};
     use crate::pool::EntryPolicy;
     use crate::util::quickcheck_lite::{forall_res, Gen};
 
@@ -160,10 +176,7 @@ mod tests {
         naive::gemm(alpha, a.view(), b.view(), c_ref.view_mut());
         let d = c.max_abs_diff(&c_ref);
         let scale = (k as f64).max(1.0);
-        assert!(
-            d < 1e-12 * scale,
-            "m={m} n={n} k={k} alpha={alpha} diff={d}"
-        );
+        assert!(d < 1e-12 * scale, "m={m} n={n} k={k} alpha={alpha} diff={d}");
     }
 
     #[test]
@@ -191,20 +204,37 @@ mod tests {
     }
 
     #[test]
+    fn f32_matches_naive_across_shapes() {
+        let tiny = BlisParams::tiny();
+        let mut crew = Crew::new();
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (MR, NR, 8),
+            (MR + 1, NR + 1, 9),
+            (2 * MR + 3, 3 * NR + 1, 17),
+            (64, 5, 33),
+        ] {
+            let seed = (m * 1000 + n * 10 + k) as u64;
+            let a = Mat::<f32>::random(m, k, seed);
+            let b = Mat::<f32>::random(k, n, seed + 1);
+            let mut c = Mat::<f32>::random(m, n, seed + 2);
+            let mut c_ref = c.clone();
+            gemm(&mut crew, &tiny, -1.0f32, a.view(), b.view(), c.view_mut());
+            naive::gemm(-1.0f32, a.view(), b.view(), c_ref.view_mut());
+            let d = c.max_abs_diff(&c_ref);
+            let tol = 8.0 * f32::EPSILON as f64 * (k as f64).max(1.0);
+            assert!(d < tol, "f32 m={m} n={n} k={k} diff={d} tol={tol}");
+        }
+    }
+
+    #[test]
     fn empty_dims_are_noops() {
         let params = BlisParams::tiny();
         let mut crew = Crew::new();
         let a = Matrix::zeros(0, 0);
         let b = Matrix::zeros(0, 5);
         let mut c = Matrix::zeros(0, 5);
-        gemm(
-            &mut crew,
-            &params,
-            1.0,
-            a.view(),
-            b.view(),
-            c.view_mut(),
-        );
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
         // alpha == 0 early-out leaves C untouched:
         let a = Matrix::random(3, 3, 1);
         let b = Matrix::random(3, 3, 2);
@@ -231,12 +261,7 @@ mod tests {
             b.view(),
             big.view_mut().sub(4, 6, 12, 9),
         );
-        naive::gemm(
-            1.0,
-            a.view(),
-            b.view(),
-            big_ref.view_mut().sub(4, 6, 12, 9),
-        );
+        naive::gemm(1.0, a.view(), b.view(), big_ref.view_mut().sub(4, 6, 12, 9));
         assert!(big.max_abs_diff(&big_ref) < 1e-12);
         assert_eq!(big[(0, 0)], 1.25);
         assert_eq!(big[(19, 19)], 1.25);
@@ -282,6 +307,36 @@ mod tests {
     }
 
     #[test]
+    fn f32_bitwise_identical_with_and_without_members() {
+        // Crew-size determinism holds per precision (DESIGN.md §12).
+        let a = Mat::<f32>::random(67, 45, 21);
+        let b = Mat::<f32>::random(45, 53, 22);
+        let params = BlisParams::tiny();
+
+        let mut c1 = Mat::<f32>::zeros(67, 53);
+        let mut crew1 = Crew::new();
+        gemm(&mut crew1, &params, 1.0f32, a.view(), b.view(), c1.view_mut());
+
+        let mut c2 = Mat::<f32>::zeros(67, 53);
+        let mut crew2 = Crew::new();
+        let shared = crew2.shared();
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                let s = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+            })
+            .collect();
+        gemm(&mut crew2, &params, 1.0f32, a.view(), b.view(), c2.view_mut());
+        crew2.disband();
+        for h in hs {
+            h.join().unwrap();
+        }
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "f32 bitwise mismatch");
+        }
+    }
+
+    #[test]
     fn wide_and_short_shapes_use_loop5_splitting() {
         // Shapes where Loop 4 alone yields fewer chunks than the team
         // wants (n_jr small, n_ir large) — the look-ahead trailing-update
@@ -313,6 +368,35 @@ mod tests {
         assert_eq!(after_second.free_buffers, after_first.free_buffers);
     }
 
+    #[test]
+    fn mixed_precision_stream_shares_one_arena() {
+        // An f32 GEMM after a same-shape f64 warm-up must lease from the
+        // same size-classed free list without allocating anew.
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::random(60, 30, 1);
+        let b = Matrix::random(30, 50, 2);
+        let mut c = Matrix::zeros(60, 50);
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+        let warm = crew.arena().stats();
+        let a32: Mat<f32> = a.convert();
+        let b32: Mat<f32> = b.convert();
+        let mut c32 = Mat::<f32>::zeros(60, 50);
+        gemm(
+            &mut crew,
+            &params,
+            1.0f32,
+            a32.view(),
+            b32.view(),
+            c32.view_mut(),
+        );
+        let after = crew.arena().stats();
+        assert_eq!(
+            warm.allocations, after.allocations,
+            "f32 gemm allocated despite warm f64 arena"
+        );
+    }
+
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn simd_and_portable_gemm_are_bitwise_identical() {
@@ -339,6 +423,35 @@ mod tests {
         let c_port = run(Kernel::Portable);
         for (x, y) in c_simd.data().iter().zip(c_port.data()) {
             assert_eq!(x.to_bits(), y.to_bits(), "bitwise mismatch");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_and_portable_gemm_are_bitwise_identical_f32() {
+        use crate::blis::micro::{set_kernel, simd_available, Kernel};
+        if !simd_available() {
+            eprintln!("skipping: host has no AVX2+FMA");
+            return;
+        }
+        let _g = crate::blis::micro::KERNEL_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let a = Mat::<f32>::random(67, 45, 31);
+        let b = Mat::<f32>::random(45, 53, 32);
+        let params = BlisParams::tiny();
+        let run = |kernel: Kernel| {
+            set_kernel(kernel);
+            let mut c = Mat::<f32>::random(67, 53, 33);
+            let mut crew = Crew::new();
+            gemm(&mut crew, &params, -1.0f32, a.view(), b.view(), c.view_mut());
+            set_kernel(Kernel::Auto);
+            c
+        };
+        let c_simd = run(Kernel::Simd);
+        let c_port = run(Kernel::Portable);
+        for (x, y) in c_simd.data().iter().zip(c_port.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "f32 bitwise mismatch");
         }
     }
 

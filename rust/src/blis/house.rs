@@ -1,5 +1,6 @@
 //! Householder reflector helpers — the building blocks of the blocked QR
-//! factorization (`geqrf`-style panel + `larfb`-style trailing update).
+//! factorization (`geqrf`-style panel + `larfb`-style trailing update),
+//! generic over the sealed [`Scalar`] layer.
 //!
 //! A reflector `H = I − τ·v·vᵀ` (with `v[0] = 1` implicit) annihilates a
 //! column below its diagonal. The panel factorization generates and
@@ -18,32 +19,33 @@
 
 use super::gemm::gemm;
 use super::params::BlisParams;
-use crate::matrix::{MatMut, MatRef, Matrix};
+use crate::matrix::{Mat, MatMut, MatRef};
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 
 /// Generate a Householder reflector from column `j` of `a` (rows `j..m`),
-/// LAPACK `dlarfg` style.
+/// LAPACK `larfg` style.
 ///
 /// On return `a[j, j]` holds `beta` (the resulting `R` diagonal entry),
 /// `a[j+1.., j]` holds the reflector tail `v[1..]` (with `v[0] = 1`
 /// implicit), and the returned `tau` satisfies `H = I − τ·v·vᵀ`. A column
 /// that is already zero below the diagonal yields `tau = 0` (`H = I`).
-pub fn reflector(a: MatMut, j: usize) -> f64 {
+pub fn reflector<S: Scalar>(a: MatMut<S>, j: usize) -> S {
     let m = a.rows();
     let alpha = a.at(j, j);
-    let mut xnorm2 = 0.0;
+    let mut xnorm2 = S::ZERO;
     for i in j + 1..m {
         let x = a.at(i, j);
         xnorm2 += x * x;
     }
-    if xnorm2 == 0.0 {
-        return 0.0;
+    if xnorm2 == S::ZERO {
+        return S::ZERO;
     }
     let norm = (alpha * alpha + xnorm2).sqrt();
-    let beta = if alpha >= 0.0 { -norm } else { norm };
+    let beta = if alpha >= S::ZERO { -norm } else { norm };
     let tau = (beta - alpha) / beta;
-    let scale = 1.0 / (alpha - beta);
+    let scale = S::ONE / (alpha - beta);
     for i in j + 1..m {
         a.update(i, j, |x| x * scale);
     }
@@ -56,16 +58,16 @@ pub fn reflector(a: MatMut, j: usize) -> f64 {
 /// at row `row0` and the tail sits in `a[row0+1.., v_col]`). Rows above
 /// `row0` are untouched. Crew-parallel over the target columns; each
 /// column's `vᵀ·c` reduction is sequential (bitwise crew-independent).
-pub fn apply_reflector(
+pub fn apply_reflector<S: Scalar>(
     crew: &mut Crew,
-    a: MatMut,
+    a: MatMut<S>,
     v_col: usize,
     row0: usize,
-    tau: f64,
+    tau: S,
     jlo: usize,
     jhi: usize,
 ) {
-    if tau == 0.0 || jlo >= jhi {
+    if tau == S::ZERO || jlo >= jhi {
         return;
     }
     let m = a.rows();
@@ -86,18 +88,18 @@ pub fn apply_reflector(
     });
 }
 
-/// Build the upper-triangular block-reflector factor `T` (LAPACK `dlarft`,
+/// Build the upper-triangular block-reflector factor `T` (LAPACK `larft`,
 /// forward/columnwise) for the `k = tau.len()` reflectors stored in the
 /// columns of `v` (unit lower trapezoidal, diagonal implicit):
 /// `H_0·H_1⋯H_{k−1} = I − V·T·Vᵀ`.
-pub fn larft(v: MatRef, tau: &[f64]) -> Matrix {
+pub fn larft<S: Scalar>(v: MatRef<S>, tau: &[S]) -> Mat<S> {
     let k = tau.len();
     let m = v.rows();
-    let mut t = Matrix::zeros(k, k);
-    let mut w = vec![0.0; k];
+    let mut t = Mat::<S>::zeros(k, k);
+    let mut w = vec![S::ZERO; k];
     for j in 0..k {
         t[(j, j)] = tau[j];
-        if tau[j] == 0.0 {
+        if tau[j] == S::ZERO {
             continue;
         }
         // w = V[:, 0..j]ᵀ · v_j (unit diagonal of v_j handled explicitly).
@@ -110,7 +112,7 @@ pub fn larft(v: MatRef, tau: &[f64]) -> Matrix {
         }
         // T[0..j, j] = −τ_j · T[0..j, 0..j] · w  (T is upper triangular).
         for i in 0..j {
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             for p in i..j {
                 s += t[(i, p)] * w[p];
             }
@@ -120,7 +122,7 @@ pub fn larft(v: MatRef, tau: &[f64]) -> Matrix {
     t
 }
 
-/// Apply `Qᵀ = I − V·Tᵀ·Vᵀ` to `c` (LAPACK `dlarfb`, left side,
+/// Apply `Qᵀ = I − V·Tᵀ·Vᵀ` to `c` (LAPACK `larfb`, left side,
 /// transpose): `C := C − V·(Tᵀ·(Vᵀ·C))`.
 ///
 /// `v` is the clean `m × k` reflector block (unit diagonal explicit,
@@ -128,13 +130,13 @@ pub fn larft(v: MatRef, tau: &[f64]) -> Matrix {
 /// [`larft`]. Both rank-`k` products run on the malleable [`gemm`]; the
 /// small `Tᵀ·W` multiply is crew-parallel over `W`'s columns with a
 /// sequential per-element reduction.
-pub fn apply_block_qt(
+pub fn apply_block_qt<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
-    v: MatRef,
-    vt: MatRef,
-    t: MatRef,
-    c: MatMut,
+    v: MatRef<S>,
+    vt: MatRef<S>,
+    t: MatRef<S>,
+    c: MatMut<S>,
 ) {
     let k = t.rows();
     let nc = c.cols();
@@ -145,8 +147,8 @@ pub fn apply_block_qt(
     debug_assert_eq!(vt.rows(), k);
     debug_assert_eq!(v.rows(), c.rows());
     // W := Vᵀ · C  (k × nc).
-    let mut w = Matrix::zeros(k, nc);
-    gemm(crew, params, 1.0, vt, c.as_ref(), w.view_mut());
+    let mut w = Mat::<S>::zeros(k, nc);
+    gemm(crew, params, S::ONE, vt, c.as_ref(), w.view_mut());
     // W := Tᵀ · W, in place. Descending row order: row i only reads rows
     // `<= i`, which are still original when `i` is processed last-to-first.
     let wv = w.view_mut();
@@ -154,7 +156,7 @@ pub fn apply_block_qt(
         crew.parallel_ranges(nc, 8, |cols| {
             for j in cols {
                 for i in (0..k).rev() {
-                    let mut s = 0.0;
+                    let mut s = S::ZERO;
                     for p in 0..=i {
                         s += t.at(p, i) * wv.at(p, j);
                     }
@@ -164,13 +166,13 @@ pub fn apply_block_qt(
         });
     });
     // C := C − V · W.
-    gemm(crew, params, -1.0, v, w.view(), c);
+    gemm(crew, params, S::ZERO - S::ONE, v, w.view(), c);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::naive;
+    use crate::matrix::{naive, Matrix};
 
     /// Apply the stored reflectors one by one (reference path).
     fn apply_seq(a: &Matrix, tau: &[f64], c: &mut Matrix) {
@@ -216,6 +218,22 @@ mod tests {
         let tau = reflector(a.view_mut(), 0);
         assert_eq!(tau, 0.0);
         assert_eq!(a[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn reflector_f32_annihilates() {
+        use crate::matrix::Mat;
+        let mut a = Mat::<f32>::random(12, 1, 2);
+        let a0 = a.clone();
+        let tau = reflector(a.view_mut(), 0);
+        assert!(tau > 0.0 && tau < 2.0, "tau={tau}");
+        // ‖H·a0‖ preserves the column norm to f32 accuracy.
+        let beta = a[(0, 0)].abs();
+        let norm0 = a0.norm_f();
+        assert!(
+            (beta as f64 - norm0).abs() < 16.0 * f32::EPSILON as f64 * norm0,
+            "beta {beta} vs norm {norm0}"
+        );
     }
 
     #[test]

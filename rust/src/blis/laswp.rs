@@ -1,4 +1,4 @@
-//! LASWP — apply a sequence of row interchanges.
+//! LASWP — apply a sequence of row interchanges (any [`Scalar`] type).
 //!
 //! The paper notes (§3.1) that LAPACK's legacy LASWP is sequential and
 //! visibly expensive in the traces (Fig. 5), but embarrassingly parallel
@@ -16,15 +16,17 @@
 //! pivots hit rows that are column-major-adjacent (the panel's row block),
 //! so the strip's working set stays resident across the entire pivot
 //! sequence.
+//!
+//! The strip width itself lives in [`super::params`] — one definition
+//! shared with the look-ahead driver's base-relative swap path
+//! (`factor::lu::laswp_abs`), re-exported here for compatibility.
 
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 
-/// Columns per swap strip: a few micro-panels wide — small enough that
-/// `b_o` pivot rows × strip stays cache-resident, large enough to
-/// amortize the per-strip pivot-sequence walk.
-pub const COL_STRIP: usize = 32;
+pub use super::params::COL_STRIP;
 
 /// Run `f(lo, hi)` over each [`COL_STRIP`]-column strip of `jlo..jhi`,
 /// one crew chunk per strip — the chunking shared by [`laswp`] and the
@@ -50,9 +52,9 @@ pub fn for_each_col_strip(
 /// swap rows `k` and `ipiv[k]`. Pivot indices are absolute row indices of
 /// `a` (LAPACK convention with zero-based rows). Only columns
 /// `jlo..jhi` are touched.
-pub fn laswp(
+pub fn laswp<S: Scalar>(
     crew: &mut Crew,
-    a: MatMut,
+    a: MatMut<S>,
     ipiv: &[usize],
     k0: usize,
     k1: usize,
@@ -79,7 +81,7 @@ pub fn laswp(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{naive, Matrix};
+    use crate::matrix::{naive, Mat, Matrix};
     use crate::pool::EntryPolicy;
 
     #[test]
@@ -93,6 +95,20 @@ mod tests {
         let mut crew = Crew::new();
         laswp(&mut crew, a1.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
 
+        let mut a2 = a0.clone();
+        naive::apply_pivots(a2.view_mut(), &ipiv);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn f32_matches_sequential_reference() {
+        let m = 16;
+        let n = 9;
+        let a0 = Mat::<f32>::random(m, n, 2);
+        let ipiv: Vec<usize> = vec![4, 2, 9, 3, 15];
+        let mut a1 = a0.clone();
+        let mut crew = Crew::new();
+        laswp(&mut crew, a1.view_mut(), &ipiv, 0, ipiv.len(), 0, n);
         let mut a2 = a0.clone();
         naive::apply_pivots(a2.view_mut(), &ipiv);
         assert_eq!(a1, a2);
@@ -174,13 +190,7 @@ mod tests {
         let m = 40;
         let mut rng = crate::util::Prng::new(9);
         let ipiv: Vec<usize> = (0..m / 2).map(|k| rng.range(k, m - 1)).collect();
-        for w in [
-            COL_STRIP - 1,
-            COL_STRIP,
-            COL_STRIP + 1,
-            3 * COL_STRIP + 7,
-            1,
-        ] {
+        for w in [COL_STRIP - 1, COL_STRIP, COL_STRIP + 1, 3 * COL_STRIP + 7, 1] {
             let n = w + 5;
             let a0 = Matrix::random(m, n, w as u64);
             let mut a = a0.clone();

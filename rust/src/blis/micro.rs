@@ -1,26 +1,36 @@
-//! The register-blocked micro-kernel (paper Fig. 1, Loop 5 body).
+//! The register-blocked micro-kernel (paper Fig. 1, Loop 5 body), one
+//! per sealed [`Scalar`] type.
 //!
 //! Computes `C(0..MR, 0..NR) += Σ_p a_panel(:,p) · b_panel(p,:)` over the
-//! packed micro-panels produced by [`super::pack`]. Two implementations
-//! share one contract (the **SIMD dispatch contract**, DESIGN.md §9):
+//! packed micro-panels produced by [`super::pack`]. Per scalar type, two
+//! implementations share one contract (the **SIMD dispatch contract**,
+//! DESIGN.md §9/§12):
 //!
-//! - [`micro_kernel_avx2`] — explicit AVX2+FMA `std::arch` kernel holding
-//!   the full `MR × NR = 8 × 6` accumulator in twelve `__m256d`
-//!   registers, one `vfmadd` rank-1 update per `p`;
-//! - [`micro_kernel_portable`] — scalar fallback performing the *same*
-//!   reduction in the same order, with `f64::mul_add` as the
-//!   multiply-accumulate.
+//! - an explicit AVX2+FMA `std::arch` kernel —
+//!   [`micro_kernel_avx2`] holds the full `f64` `MR × NR = 8 × 6`
+//!   accumulator in twelve `__m256d` registers (two `f64x4` vectors per
+//!   column); [`micro_kernel_avx2_f32`] holds the same 8 × 6 tile in six
+//!   `__m256` registers (one `f32x8` vector per column — the doubled
+//!   lane width is where single precision earns its ~2× throughput);
+//! - [`micro_kernel_portable`] — one *generic* scalar fallback
+//!   performing the same reduction in the same order, with
+//!   [`Scalar::mul_add`] as the multiply-accumulate.
 //!
-//! Both perform, per output element, the identical chain of IEEE-754
-//! correctly-rounded fused multiply-adds followed by one `alpha·acc`
-//! multiply and one add at store time — so their results are **bitwise
-//! identical**, and the repo-wide determinism invariant (DESIGN.md §8)
-//! extends across kernels: a factorization gives the same bits whether
-//! it ran SIMD, portable, or a mix.
+//! Within a type, both perform, per output element, the identical chain
+//! of IEEE-754 correctly-rounded fused multiply-adds followed by one
+//! `alpha·acc` multiply and one add at store time — so their results are
+//! **bitwise identical**, and the repo-wide determinism invariant
+//! (DESIGN.md §8) extends across kernels in both precisions: a
+//! factorization gives the same bits whether it ran SIMD, portable, or a
+//! mix.
 //!
-//! [`micro_kernel`] dispatches at runtime: AVX2+FMA when the CPU has it
+//! [`micro_kernel`] dispatches at runtime through the type's registry
+//! entry ([`Scalar::micro_kernel`]): AVX2+FMA when the CPU has it
 //! (detected once, cached), portable otherwise; [`set_kernel`] forces a
-//! choice (benchmarking, tests, `mlu --kernel`).
+//! choice (benchmarking, tests, `mlu --kernel`), and the `MLU_KERNEL`
+//! environment variable (`portable` | `simd`) does the same for
+//! processes that cannot pass a flag — the CI no-AVX2 job drives the
+//! portable path for both scalar types this way.
 //!
 //! Edge tiles (fewer than `MR` rows / `NR` columns of real `C`) use the
 //! same full-size computation — the packed operands are zero-padded — and
@@ -28,6 +38,7 @@
 
 use super::params::{MR, NR};
 use crate::matrix::MatMut;
+use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Micro-kernel selection (see [`set_kernel`]).
@@ -55,7 +66,8 @@ pub(crate) static KERNEL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new
 
 /// Force a micro-kernel choice process-wide (benches, bitwise tests,
 /// `mlu --kernel portable`). Safe to flip at any time: both kernels
-/// produce identical bits, so in-flight work is unaffected.
+/// produce identical bits, so in-flight work is unaffected. An explicit
+/// choice overrides the `MLU_KERNEL` environment variable.
 pub fn set_kernel(k: Kernel) {
     let v = match k {
         Kernel::Auto => 0,
@@ -65,7 +77,20 @@ pub fn set_kernel(k: Kernel) {
     KERNEL_OVERRIDE.store(v, Ordering::Relaxed);
 }
 
-/// Is the AVX2+FMA kernel available on this host?
+/// The `MLU_KERNEL` environment override (`portable` | `simd`), read
+/// once: the escape hatch for harnesses that cannot pass `--kernel`
+/// (the CI no-AVX2 job exercises the portable path this way).
+fn env_kernel() -> Option<Kernel> {
+    static ENV: std::sync::OnceLock<Option<Kernel>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("MLU_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("portable") => Some(Kernel::Portable),
+        Ok(v) if v.eq_ignore_ascii_case("simd") => Some(Kernel::Simd),
+        _ => None,
+    })
+}
+
+/// Is the AVX2+FMA kernel available on this host? (One answer for both
+/// scalar types: the `f64` and `f32` kernels need the same features.)
 pub fn simd_available() -> bool {
     #[cfg(target_arch = "x86_64")]
     {
@@ -94,40 +119,38 @@ pub fn active_kernel_name() -> &'static str {
 fn use_simd() -> bool {
     match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
         1 => false,
-        _ => simd_available(),
+        2 => simd_available(),
+        _ => match env_kernel() {
+            Some(Kernel::Portable) => false,
+            _ => simd_available(),
+        },
     }
 }
 
 /// `C_tile += alpha * A_panel · B_panel`, where `a_panel`/`b_panel` are
 /// `k`-deep packed micro-panels and the live tile is `m_eff × n_eff`
-/// (`≤ MR × NR`) at `c`'s origin. Dispatches per the module docs.
+/// (`≤ MR × NR`) at `c`'s origin. Dispatches per the module docs through
+/// the scalar type's registry entry.
 #[inline]
-pub fn micro_kernel(
+pub fn micro_kernel<S: Scalar>(
     k: usize,
-    alpha: f64,
-    a_panel: &[f64],
-    b_panel: &[f64],
-    c: MatMut,
+    alpha: S,
+    a_panel: &[S],
+    b_panel: &[S],
+    c: MatMut<S>,
     m_eff: usize,
     n_eff: usize,
 ) {
     debug_assert!(a_panel.len() >= k * MR);
     debug_assert!(b_panel.len() >= k * NR);
     debug_assert!(m_eff <= MR && n_eff <= NR);
-
-    #[cfg(target_arch = "x86_64")]
-    if use_simd() {
-        // SAFETY: AVX2+FMA presence was verified by `use_simd`.
-        unsafe { micro_kernel_avx2(k, alpha, a_panel, b_panel, c, m_eff, n_eff) };
-        return;
-    }
-    micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
+    S::micro_kernel(use_simd(), k, alpha, a_panel, b_panel, c, m_eff, n_eff);
 }
 
-/// Masked store for edge tiles (shared by both kernels so the rounding
-/// of the `alpha`-scaling is identical: one multiply, one add).
+/// Masked store for edge tiles (shared by every kernel of a type so the
+/// rounding of the `alpha`-scaling is identical: one multiply, one add).
 #[inline]
-fn store_edge(alpha: f64, acc: &[f64; MR * NR], c: MatMut, m_eff: usize, n_eff: usize) {
+fn store_edge<S: Scalar>(alpha: S, acc: &[S; MR * NR], c: MatMut<S>, m_eff: usize, n_eff: usize) {
     for j in 0..n_eff {
         for i in 0..m_eff {
             c.update(i, j, |x| x + alpha * acc[j * MR + i]);
@@ -135,24 +158,24 @@ fn store_edge(alpha: f64, acc: &[f64; MR * NR], c: MatMut, m_eff: usize, n_eff: 
     }
 }
 
-/// Scalar reference kernel: one correctly-rounded `mul_add` per
-/// multiply-accumulate (the contract the SIMD kernel reproduces).
-pub fn micro_kernel_portable(
+/// Scalar reference kernel, generic over the sealed types: one
+/// correctly-rounded [`Scalar::mul_add`] per multiply-accumulate (the
+/// contract each SIMD kernel reproduces).
+pub fn micro_kernel_portable<S: Scalar>(
     k: usize,
-    alpha: f64,
-    a_panel: &[f64],
-    b_panel: &[f64],
-    c: MatMut,
+    alpha: S,
+    a_panel: &[S],
+    b_panel: &[S],
+    c: MatMut<S>,
     m_eff: usize,
     n_eff: usize,
 ) {
-    let mut acc = [0.0f64; MR * NR];
+    let mut acc = [S::ZERO; MR * NR];
     // The hot loop: one rank-1 update of the register block per p.
     for p in 0..k {
         let a = &a_panel[p * MR..p * MR + MR];
         let b = &b_panel[p * NR..p * NR + NR];
-        for j in 0..NR {
-            let bj = b[j];
+        for (j, &bj) in b.iter().enumerate() {
             for i in 0..MR {
                 acc[j * MR + i] = a[i].mul_add(bj, acc[j * MR + i]);
             }
@@ -172,13 +195,13 @@ pub fn micro_kernel_portable(
     }
 }
 
-// The AVX2 kernel hardcodes the 8×6 register block (two f64x4 vectors
-// per column, twelve accumulators + two A vectors + one B broadcast =
-// fifteen of the sixteen ymm registers).
+// The AVX2 kernels hardcode the 8×6 register block (f64: two f64x4
+// vectors per column, twelve accumulators; f32: one f32x8 vector per
+// column, six accumulators).
 #[cfg(target_arch = "x86_64")]
-const _: () = assert!(MR == 8 && NR == 6, "micro_kernel_avx2 assumes MR=8, NR=6");
+const _: () = assert!(MR == 8 && NR == 6, "AVX2 micro-kernels assume MR=8, NR=6");
 
-/// AVX2+FMA micro-kernel.
+/// AVX2+FMA `f64` micro-kernel.
 ///
 /// # Safety
 /// The CPU must support AVX2 and FMA (`simd_available()`), and the
@@ -235,15 +258,66 @@ pub unsafe fn micro_kernel_avx2(
     }
 }
 
+/// AVX2+FMA `f32` micro-kernel: the same 8 × 6 tile as the `f64` kernel,
+/// but one `f32x8` vector covers a whole column — six accumulators, one
+/// `vfmadd` per column per `p`, twice the flops per instruction.
+///
+/// # Safety
+/// As [`micro_kernel_avx2`]: AVX2+FMA must be present and the packed
+/// panels must hold `k` full (zero-padded) micro-panels.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn micro_kernel_avx2_f32(
+    k: usize,
+    alpha: f32,
+    a_panel: &[f32],
+    b_panel: &[f32],
+    c: MatMut<f32>,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    use std::arch::x86_64::*;
+
+    let mut acc = [_mm256_setzero_ps(); NR];
+    let mut ap = a_panel.as_ptr();
+    let mut bp = b_panel.as_ptr();
+    for _ in 0..k {
+        let a0 = _mm256_loadu_ps(ap);
+        for (j, acc_j) in acc.iter_mut().enumerate() {
+            let bj = _mm256_set1_ps(*bp.add(j));
+            *acc_j = _mm256_fmadd_ps(a0, bj, *acc_j);
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+
+    if m_eff == MR && n_eff == NR {
+        // Full tile: mul + add, matching the portable store's two
+        // roundings exactly (same contract as the f64 kernel).
+        let av = _mm256_set1_ps(alpha);
+        for (j, acc_j) in acc.iter().enumerate() {
+            let colp = c.col_ptr(j);
+            let c0 = _mm256_loadu_ps(colp);
+            _mm256_storeu_ps(colp, _mm256_add_ps(c0, _mm256_mul_ps(av, *acc_j)));
+        }
+    } else {
+        let mut tmp = [0.0f32; MR * NR];
+        for (j, acc_j) in acc.iter().enumerate() {
+            _mm256_storeu_ps(tmp.as_mut_ptr().add(j * MR), *acc_j);
+        }
+        store_edge(alpha, &tmp, c, m_eff, n_eff);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{naive, Matrix};
+    use crate::matrix::{naive, Mat, Matrix};
 
-    fn pack_cols(a: &Matrix) -> Vec<f64> {
+    fn pack_cols<S: Scalar>(a: &Mat<S>) -> Vec<S> {
         // pack a (m x k, m <= MR) into column-major-by-p layout, zero-padded
         let k = a.cols();
-        let mut v = vec![0.0; k * MR];
+        let mut v = vec![S::ZERO; k * MR];
         for p in 0..k {
             for i in 0..a.rows() {
                 v[p * MR + i] = a[(i, p)];
@@ -252,9 +326,9 @@ mod tests {
         v
     }
 
-    fn pack_rows(b: &Matrix) -> Vec<f64> {
+    fn pack_rows<S: Scalar>(b: &Mat<S>) -> Vec<S> {
         let k = b.rows();
-        let mut v = vec![0.0; k * NR];
+        let mut v = vec![S::ZERO; k * NR];
         for p in 0..k {
             for j in 0..b.cols() {
                 v[p * NR + j] = b[(p, j)];
@@ -274,6 +348,27 @@ mod tests {
         micro_kernel(k, 1.0, &pack_cols(&a), &pack_rows(&b), c.view_mut(), MR, NR);
         naive::gemm(1.0, a.view(), b.view(), c_ref.view_mut());
         assert!(c.max_abs_diff(&c_ref) < 1e-13);
+    }
+
+    #[test]
+    fn full_tile_matches_naive_f32() {
+        let k = 17;
+        let a = Mat::<f32>::random(MR, k, 1);
+        let b = Mat::<f32>::random(k, NR, 2);
+        let mut c = Mat::<f32>::random(MR, NR, 3);
+        let mut c_ref = c.clone();
+
+        micro_kernel(
+            k,
+            1.0f32,
+            &pack_cols(&a),
+            &pack_rows(&b),
+            c.view_mut(),
+            MR,
+            NR,
+        );
+        naive::gemm(1.0f32, a.view(), b.view(), c_ref.view_mut());
+        assert!(c.max_abs_diff(&c_ref) < 1e-4);
     }
 
     #[test]
@@ -334,31 +429,36 @@ mod tests {
 
     /// Run one kernel flavor on an edge tile embedded in a sentinel
     /// matrix; checks the live region against naive and the fringe for
-    /// pollution. `which`: 0 = dispatch, 1 = portable, 2 = avx2.
-    fn check_edge_tile(m_eff: usize, n_eff: usize, k: usize, which: u8) {
+    /// pollution. `which`: 0 = dispatch, 1 = portable, 2 = simd (via
+    /// the scalar registry with the flag forced on).
+    fn check_edge_tile<S: Scalar>(m_eff: usize, n_eff: usize, k: usize, which: u8, tol: f64) {
         let seed = (m_eff * 1000 + n_eff * 10 + k) as u64;
-        let a = Matrix::random(m_eff, k, seed);
-        let b = Matrix::random(k, n_eff, seed + 1);
-        let mut big = Matrix::from_fn(MR + 3, NR + 3, |i, j| (i * 31 + j) as f64 * 0.25 - 3.0);
+        let a = Mat::<S>::random(m_eff, k, seed);
+        let b = Mat::<S>::random(k, n_eff, seed + 1);
+        let mut big =
+            Mat::<S>::from_fn(MR + 3, NR + 3, |i, j| {
+                S::from_f64((i * 31 + j) as f64 * 0.25 - 3.0)
+            });
         let mut big_ref = big.clone();
         let tile = big.view_mut().sub(2, 1, m_eff, n_eff);
         let (ap, bp) = (pack_cols(&a), pack_rows(&b));
+        let neg1 = S::ZERO - S::ONE;
         match which {
-            1 => micro_kernel_portable(k, -1.0, &ap, &bp, tile, m_eff, n_eff),
-            #[cfg(target_arch = "x86_64")]
-            2 => unsafe { micro_kernel_avx2(k, -1.0, &ap, &bp, tile, m_eff, n_eff) },
-            _ => micro_kernel(k, -1.0, &ap, &bp, tile, m_eff, n_eff),
+            1 => micro_kernel_portable(k, neg1, &ap, &bp, tile, m_eff, n_eff),
+            2 => S::micro_kernel(true, k, neg1, &ap, &bp, tile, m_eff, n_eff),
+            _ => micro_kernel(k, neg1, &ap, &bp, tile, m_eff, n_eff),
         }
         naive::gemm(
-            -1.0,
+            neg1,
             a.view(),
             b.view(),
             big_ref.view_mut().sub(2, 1, m_eff, n_eff),
         );
         let d = big.max_abs_diff(&big_ref);
         assert!(
-            d < 1e-12,
-            "which={which} m_eff={m_eff} n_eff={n_eff} k={k}: diff {d}"
+            d < tol,
+            "{} which={which} m_eff={m_eff} n_eff={n_eff} k={k}: diff {d}",
+            S::NAME
         );
     }
 
@@ -367,7 +467,8 @@ mod tests {
         for m_eff in 1..=MR {
             for n_eff in 1..=NR {
                 for k in [1usize, 2, 7] {
-                    check_edge_tile(m_eff, n_eff, k, 1);
+                    check_edge_tile::<f64>(m_eff, n_eff, k, 1, 1e-12);
+                    check_edge_tile::<f32>(m_eff, n_eff, k, 1, 1e-4);
                 }
             }
         }
@@ -378,7 +479,8 @@ mod tests {
         for m_eff in 1..=MR {
             for n_eff in 1..=NR {
                 for k in [1usize, 3, 9] {
-                    check_edge_tile(m_eff, n_eff, k, 0);
+                    check_edge_tile::<f64>(m_eff, n_eff, k, 0, 1e-12);
+                    check_edge_tile::<f32>(m_eff, n_eff, k, 0, 1e-4);
                 }
             }
         }
@@ -386,7 +488,7 @@ mod tests {
 
     #[cfg(target_arch = "x86_64")]
     #[test]
-    fn exhaustive_edge_tile_sweep_avx2() {
+    fn exhaustive_edge_tile_sweep_avx2_both_precisions() {
         if !simd_available() {
             eprintln!("skipping: host has no AVX2+FMA");
             return;
@@ -394,19 +496,16 @@ mod tests {
         for m_eff in 1..=MR {
             for n_eff in 1..=NR {
                 for k in [1usize, 4, 11] {
-                    check_edge_tile(m_eff, n_eff, k, 2);
+                    check_edge_tile::<f64>(m_eff, n_eff, k, 2, 1e-12);
+                    check_edge_tile::<f32>(m_eff, n_eff, k, 2, 1e-4);
                 }
             }
         }
     }
 
+    /// SIMD and portable must agree bit for bit — per scalar type.
     #[cfg(target_arch = "x86_64")]
-    #[test]
-    fn simd_and_portable_are_bitwise_identical() {
-        if !simd_available() {
-            eprintln!("skipping: host has no AVX2+FMA");
-            return;
-        }
+    fn bitwise_sweep<S: Scalar>() {
         for (m_eff, n_eff, k, alpha) in [
             (MR, NR, 64, 1.0),
             (MR, NR, 1, -1.0),
@@ -415,24 +514,24 @@ mod tests {
             (3, 2, 25, -2.5),
             (1, 1, 9, 1.0),
         ] {
+            let alpha = S::from_f64(alpha);
             let seed = (m_eff * 100 + n_eff * 10 + k) as u64;
-            let a = Matrix::random(m_eff, k, seed);
-            let b = Matrix::random(k, n_eff, seed + 1);
-            let c0 = Matrix::random(MR, NR, seed + 2);
+            let a = Mat::<S>::random(m_eff, k, seed);
+            let b = Mat::<S>::random(k, n_eff, seed + 1);
+            let c0 = Mat::<S>::random(MR, NR, seed + 2);
             let (ap, bp) = (pack_cols(&a), pack_rows(&b));
 
             let mut c_simd = c0.clone();
-            unsafe {
-                micro_kernel_avx2(
-                    k,
-                    alpha,
-                    &ap,
-                    &bp,
-                    c_simd.view_mut().sub(0, 0, m_eff, n_eff),
-                    m_eff,
-                    n_eff,
-                )
-            };
+            S::micro_kernel(
+                true,
+                k,
+                alpha,
+                &ap,
+                &bp,
+                c_simd.view_mut().sub(0, 0, m_eff, n_eff),
+                m_eff,
+                n_eff,
+            );
             let mut c_port = c0.clone();
             micro_kernel_portable(
                 k,
@@ -445,12 +544,24 @@ mod tests {
             );
             for (x, y) in c_simd.data().iter().zip(c_port.data()) {
                 assert_eq!(
-                    x.to_bits(),
-                    y.to_bits(),
-                    "bitwise mismatch at m_eff={m_eff} n_eff={n_eff} k={k} alpha={alpha}"
+                    x.to_bits_u64(),
+                    y.to_bits_u64(),
+                    "{}: bitwise mismatch at m_eff={m_eff} n_eff={n_eff} k={k}",
+                    S::NAME
                 );
             }
         }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_and_portable_are_bitwise_identical() {
+        if !simd_available() {
+            eprintln!("skipping: host has no AVX2+FMA");
+            return;
+        }
+        bitwise_sweep::<f64>();
+        bitwise_sweep::<f32>();
     }
 
     #[test]
@@ -458,11 +569,24 @@ mod tests {
         let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         set_kernel(Kernel::Portable);
         assert_eq!(active_kernel_name(), "portable");
-        set_kernel(Kernel::Auto);
+        set_kernel(Kernel::Simd);
         if simd_available() {
             assert_eq!(active_kernel_name(), "avx2+fma");
         } else {
             assert_eq!(active_kernel_name(), "portable");
         }
+        set_kernel(Kernel::Auto);
+        // Under Auto the MLU_KERNEL env (if set) wins, else hardware.
+        let expect = match std::env::var("MLU_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("portable") => "portable",
+            _ => {
+                if simd_available() {
+                    "avx2+fma"
+                } else {
+                    "portable"
+                }
+            }
+        };
+        assert_eq!(active_kernel_name(), expect);
     }
 }

@@ -34,6 +34,16 @@
 //! Householder reflector / compact-WY helpers ([`house`]) — all obeying
 //! the same determinism invariant.
 
+//!
+//! Since the precision-generic redesign (DESIGN.md §12) every kernel in
+//! this module is generic over the sealed [`crate::scalar::Scalar`]
+//! layer: the same five-loop GEMM, TRSM, LASWP, SYRK, and Householder
+//! helpers run in `f32` and `f64`, dispatching per type to an AVX2+FMA
+//! micro-kernel (8×6 in both precisions — two `f64x4` vectors or one
+//! `f32x8` per column) with a shared portable fallback that is bitwise
+//! identical per type. Packed buffers of both precisions lease from one
+//! `f64`-granule arena.
+
 pub mod arena;
 pub mod gemm;
 pub mod house;

@@ -1,4 +1,4 @@
-//! Packing routines.
+//! Packing routines, generic over the sealed [`Scalar`] layer.
 //!
 //! GotoBLAS/BLIS copy the current `A` and `B` blocks into contiguous
 //! buffers laid out exactly in the order the micro-kernel consumes them
@@ -16,29 +16,35 @@
 //! Packing is itself parallel (paper §2: "all t threads collaborate to
 //! copy and re-organize"): each micro-panel is one crew chunk.
 //!
-//! Since PR 2 the buffers are 64-byte-aligned [`AlignedBuf`]s leased from
-//! the crew's packing arena (see [`super::arena`]) rather than fresh
-//! `Vec`s, so the steady-state GEMM stream allocates nothing.
+//! The buffers are 64-byte-aligned [`AlignedBuf`]s leased from the
+//! crew's packing arena (see [`super::arena`]) rather than fresh `Vec`s,
+//! so the steady-state GEMM stream allocates nothing. The arena's lease
+//! granule is `f64`; [`PackedA`]/[`PackedB`] view the same buffers as
+//! their scalar type (an `f32` packing fits twice the elements per
+//! granule), so one arena serves mixed-precision traffic.
 
-use super::arena::AlignedBuf;
+use super::arena::{f64_granules, AlignedBuf};
 use super::params::{MR, NR};
 use crate::matrix::MatRef;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
+use std::marker::PhantomData;
 
 /// Packed buffer for `A_c`: `ceil(m/MR)` micro-panels of `MR × k` each.
 /// Backed by a 64-byte-aligned [`AlignedBuf`], usually leased from the
 /// crew's [`super::arena::PackArena`] (see [`PackedA::from_buf`]).
-pub struct PackedA {
-    /// Backing storage (`n_panels() * MR * k` elements used).
+pub struct PackedA<S: Scalar = f64> {
+    /// Backing storage (`n_panels() * MR * k` elements of `S` used).
     pub buf: AlignedBuf,
     /// Rows packed by the last `pack_a` call.
     pub m: usize,
     /// Depth (columns of `A_c`) packed by the last `pack_a` call.
     pub k: usize,
+    _scalar: PhantomData<S>,
 }
 
-impl PackedA {
-    /// Elements needed to pack an `mc × kc` block.
+impl<S: Scalar> PackedA<S> {
+    /// Elements (of `S`) needed to pack an `mc × kc` block.
     pub fn required_elems(mc: usize, kc: usize) -> usize {
         mc.div_ceil(MR) * MR * kc
     }
@@ -46,13 +52,20 @@ impl PackedA {
     /// Allocate a private buffer for up to `mc × kc` (benches/tests; the
     /// GEMM hot path leases from the arena instead).
     pub fn with_capacity(mc: usize, kc: usize) -> Self {
-        Self::from_buf(AlignedBuf::zeroed(Self::required_elems(mc, kc)))
+        Self::from_buf(AlignedBuf::zeroed(f64_granules::<S>(Self::required_elems(
+            mc, kc,
+        ))))
     }
 
     /// Wrap a leased buffer (contents unspecified; `pack_a` overwrites
     /// every element it later reads).
     pub fn from_buf(buf: AlignedBuf) -> Self {
-        Self { buf, m: 0, k: 0 }
+        Self {
+            buf,
+            m: 0,
+            k: 0,
+            _scalar: PhantomData,
+        }
     }
 
     /// Release the backing buffer (for [`super::arena::PackArena::give_back`]).
@@ -65,27 +78,33 @@ impl PackedA {
         self.m.div_ceil(MR)
     }
 
+    /// The packed elements as a typed slice.
+    pub fn as_slice(&self) -> &[S] {
+        self.buf.as_slice_of::<S>()
+    }
+
     /// Slice holding micro-panel `i` (rows `i*MR .. i*MR+MR`).
     #[inline]
-    pub fn panel(&self, i: usize) -> &[f64] {
+    pub fn panel(&self, i: usize) -> &[S] {
         let sz = MR * self.k;
-        &self.buf[i * sz..(i + 1) * sz]
+        &self.buf.as_slice_of::<S>()[i * sz..(i + 1) * sz]
     }
 }
 
 /// Packed buffer for `B_c`: `ceil(n/NR)` micro-panels of `k × NR` each.
 /// Backing storage as [`PackedA`].
-pub struct PackedB {
-    /// Backing storage (`n_panels() * NR * k` elements used).
+pub struct PackedB<S: Scalar = f64> {
+    /// Backing storage (`n_panels() * NR * k` elements of `S` used).
     pub buf: AlignedBuf,
     /// Depth (rows of `B_c`) packed by the last `pack_b` call.
     pub k: usize,
     /// Columns packed by the last `pack_b` call.
     pub n: usize,
+    _scalar: PhantomData<S>,
 }
 
-impl PackedB {
-    /// Elements needed to pack a `kc × nc` block.
+impl<S: Scalar> PackedB<S> {
+    /// Elements (of `S`) needed to pack a `kc × nc` block.
     pub fn required_elems(kc: usize, nc: usize) -> usize {
         nc.div_ceil(NR) * NR * kc
     }
@@ -93,13 +112,20 @@ impl PackedB {
     /// Allocate a private buffer for up to `kc × nc` (benches/tests; the
     /// GEMM hot path leases from the arena instead).
     pub fn with_capacity(kc: usize, nc: usize) -> Self {
-        Self::from_buf(AlignedBuf::zeroed(Self::required_elems(kc, nc)))
+        Self::from_buf(AlignedBuf::zeroed(f64_granules::<S>(Self::required_elems(
+            kc, nc,
+        ))))
     }
 
     /// Wrap a leased buffer (contents unspecified; `pack_b` overwrites
     /// every element it later reads).
     pub fn from_buf(buf: AlignedBuf) -> Self {
-        Self { buf, k: 0, n: 0 }
+        Self {
+            buf,
+            k: 0,
+            n: 0,
+            _scalar: PhantomData,
+        }
     }
 
     /// Release the backing buffer (for [`super::arena::PackArena::give_back`]).
@@ -112,11 +138,16 @@ impl PackedB {
         self.n.div_ceil(NR)
     }
 
+    /// The packed elements as a typed slice.
+    pub fn as_slice(&self) -> &[S] {
+        self.buf.as_slice_of::<S>()
+    }
+
     /// Slice holding micro-panel `j` (columns `j*NR .. j*NR+NR`).
     #[inline]
-    pub fn panel(&self, j: usize) -> &[f64] {
+    pub fn panel(&self, j: usize) -> &[S] {
         let sz = NR * self.k;
-        &self.buf[j * sz..(j + 1) * sz]
+        &self.buf.as_slice_of::<S>()[j * sz..(j + 1) * sz]
     }
 }
 
@@ -124,19 +155,23 @@ impl PackedB {
 /// (one chunk per micro-panel). Published as a single crew job, i.e. one
 /// "entry point" (paper Fig. 10: the packing of `A_c` is the first thing
 /// a newly merged team collaborates on).
-pub fn pack_a(crew: &mut Crew, a: MatRef, pa: &mut PackedA) {
+pub fn pack_a<S: Scalar>(crew: &mut Crew, a: MatRef<S>, pa: &mut PackedA<S>) {
     let (m, k) = (a.rows(), a.cols());
     pa.m = m;
     pa.k = k;
     let n_panels = m.div_ceil(MR);
     let panel_sz = MR * k;
-    debug_assert!(n_panels * panel_sz <= pa.buf.len(), "PackedA too small");
+    debug_assert!(
+        n_panels * panel_sz <= pa.buf.len_as::<S>(),
+        "PackedA too small"
+    );
     // Hand each chunk a disjoint &mut of the buffer via raw parts: the
     // crew closure must be Fn (shared), so we split the buffer up front.
-    let base = pa.buf.as_mut_ptr() as usize;
+    let base = pa.buf.as_mut_ptr_of::<S>() as usize;
+    let elem = std::mem::size_of::<S>();
     crew.parallel(n_panels, |ip| {
         let dst = unsafe {
-            std::slice::from_raw_parts_mut((base + ip * panel_sz * 8) as *mut f64, panel_sz)
+            std::slice::from_raw_parts_mut((base + ip * panel_sz * elem) as *mut S, panel_sz)
         };
         let i0 = ip * MR;
         let rows = MR.min(m - i0);
@@ -146,7 +181,7 @@ pub fn pack_a(crew: &mut Crew, a: MatRef, pa: &mut PackedA) {
                 dst[p * MR + i] = unsafe { *col.add(i0 + i) };
             }
             for i in rows..MR {
-                dst[p * MR + i] = 0.0; // zero-pad edge
+                dst[p * MR + i] = S::ZERO; // zero-pad edge
             }
         }
     });
@@ -154,29 +189,33 @@ pub fn pack_a(crew: &mut Crew, a: MatRef, pa: &mut PackedA) {
 
 /// Pack `b` (`k × n`) into `pb`, cooperatively on `crew` (one chunk per
 /// `NR`-column micro-panel).
-pub fn pack_b(crew: &mut Crew, b: MatRef, pb: &mut PackedB) {
+pub fn pack_b<S: Scalar>(crew: &mut Crew, b: MatRef<S>, pb: &mut PackedB<S>) {
     let (k, n) = (b.rows(), b.cols());
     pb.k = k;
     pb.n = n;
     let n_panels = n.div_ceil(NR);
     let panel_sz = NR * k;
-    debug_assert!(n_panels * panel_sz <= pb.buf.len(), "PackedB too small");
-    let base = pb.buf.as_mut_ptr() as usize;
+    debug_assert!(
+        n_panels * panel_sz <= pb.buf.len_as::<S>(),
+        "PackedB too small"
+    );
+    let base = pb.buf.as_mut_ptr_of::<S>() as usize;
+    let elem = std::mem::size_of::<S>();
     crew.parallel(n_panels, |jp| {
         let dst = unsafe {
-            std::slice::from_raw_parts_mut((base + jp * panel_sz * 8) as *mut f64, panel_sz)
+            std::slice::from_raw_parts_mut((base + jp * panel_sz * elem) as *mut S, panel_sz)
         };
         let j0 = jp * NR;
         let cols = NR.min(n - j0);
-        for (jj, dst_col) in (0..cols).map(|jj| (jj, j0 + jj)) {
-            let col = b.col_ptr(dst_col);
+        for (jj, src_col) in (0..cols).map(|jj| (jj, j0 + jj)) {
+            let col = b.col_ptr(src_col);
             for p in 0..k {
                 dst[p * NR + jj] = unsafe { *col.add(p) };
             }
         }
         for jj in cols..NR {
             for p in 0..k {
-                dst[p * NR + jj] = 0.0;
+                dst[p * NR + jj] = S::ZERO;
             }
         }
     });
@@ -185,7 +224,7 @@ pub fn pack_b(crew: &mut Crew, b: MatRef, pb: &mut PackedB) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::Matrix;
+    use crate::matrix::{Mat, Matrix};
 
     #[test]
     fn pack_a_layout_exact_multiple() {
@@ -250,6 +289,38 @@ mod tests {
     }
 
     #[test]
+    fn pack_f32_layout_and_padding() {
+        // The same packing invariants hold in single precision, at two
+        // elements per f64 granule.
+        let m = MR + 2;
+        let k = 4;
+        let a = Mat::<f32>::from_fn(m, k, |i, p| (i * 10 + p) as f32 - 1.5);
+        let mut pa = PackedA::<f32>::with_capacity(m, k);
+        assert!(pa.buf.len_as::<f32>() >= PackedA::<f32>::required_elems(m, k));
+        let mut crew = Crew::new();
+        pack_a(&mut crew, a.view(), &mut pa);
+        assert_eq!(pa.n_panels(), 2);
+        for p in 0..k {
+            for i in 0..2 {
+                assert_eq!(pa.panel(1)[p * MR + i], a[(MR + i, p)]);
+            }
+            for i in 2..MR {
+                assert_eq!(pa.panel(1)[p * MR + i], 0.0f32);
+            }
+        }
+        let b = Mat::<f32>::from_fn(k, NR + 2, |p, j| (p + j) as f32 * 0.25);
+        let mut pb = PackedB::<f32>::with_capacity(k, crate::util::round_up(NR + 2, NR));
+        pack_b(&mut crew, b.view(), &mut pb);
+        for p in 0..k {
+            assert_eq!(pb.panel(0)[p * NR], b[(p, 0)]);
+            assert_eq!(pb.panel(1)[p * NR + 1], b[(p, NR + 1)]);
+            for j in 2..NR {
+                assert_eq!(pb.panel(1)[p * NR + j], 0.0f32);
+            }
+        }
+    }
+
+    #[test]
     fn pack_of_subview_respects_stride() {
         let big = Matrix::from_fn(20, 20, |i, j| (i * 20 + j) as f64);
         let v = big.view().sub(3, 4, MR, 6);
@@ -289,7 +360,7 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
-        assert_eq!(&pa1.buf[..], &pa2.buf[..]);
+        assert_eq!(pa1.as_slice(), pa2.as_slice());
     }
 
     #[test]
@@ -299,12 +370,14 @@ mod tests {
         let a = Matrix::random(MR + 2, 5, 44);
         let mut crew = Crew::new();
 
-        let mut pa = PackedA::from_buf(arena.lease(PackedA::required_elems(MR + 2, 5)));
+        let mut pa = PackedA::from_buf(arena.lease(f64_granules::<f64>(
+            PackedA::<f64>::required_elems(MR + 2, 5),
+        )));
         pack_a(&mut crew, a.view(), &mut pa);
         let mut reference = PackedA::with_capacity(MR + 2, 5);
         pack_a(&mut crew, a.view(), &mut reference);
         let used = reference.n_panels() * MR * reference.k;
-        assert_eq!(&pa.buf[..used], &reference.buf[..used]);
+        assert_eq!(&pa.as_slice()[..used], &reference.as_slice()[..used]);
         arena.give_back(pa.into_buf());
         assert_eq!(arena.stats().free_buffers, 1);
     }

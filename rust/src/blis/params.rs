@@ -12,10 +12,18 @@
 //! simplified form), falling back to the Haswell defaults when the
 //! topology is unreadable. `mlu --params mc,kc,nc` overrides both.
 
-/// Micro-kernel rows (register block height).
+/// Micro-kernel rows (register block height). Shared by both sealed
+/// scalar types: 8 rows are two AVX2 `f64x4` vectors or one `f32x8`.
 pub const MR: usize = 8;
 /// Micro-kernel columns (register block width).
 pub const NR: usize = 6;
+
+/// Columns per row-swap strip — the single shared definition consumed by
+/// [`super::laswp`] and the look-ahead driver's base-relative swap path
+/// (`factor::lu::laswp_abs`). A few micro-panels wide: small enough that
+/// the pivot rows × strip working set stays cache-resident, large enough
+/// to amortize the per-strip pivot-sequence walk.
+pub const COL_STRIP: usize = 32;
 
 /// Cache-blocking parameters for the five-loop GEMM.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]

@@ -1,16 +1,18 @@
 //! Small BLAS-1/2 kernels used by the unblocked LU panel factorization:
-//! `idamax` (pivot search), `dscal` (column scaling), `dger` (rank-1
-//! update). The panel lies on the critical path with little concurrency
-//! (paper §3.1), so these are sequential except for an optional crew
-//! variant of `ger` used when the panel team has more than one thread.
+//! `iamax` (pivot search), `scal` (column scaling), `ger` (rank-1
+//! update) — generic over the sealed [`Scalar`] layer. The panel lies on
+//! the critical path with little concurrency (paper §3.1), so these are
+//! sequential except for an optional crew variant of `ger` used when the
+//! panel team has more than one thread.
 
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 
 /// Index of the entry of maximum absolute value in `x[lo..hi]` of column
 /// `j` of `a` (returns an absolute row index). Ties resolve to the lowest
 /// index, matching LAPACK's IDAMAX.
-pub fn iamax_col(a: MatMut, j: usize, lo: usize, hi: usize) -> usize {
+pub fn iamax_col<S: Scalar>(a: MatMut<S>, j: usize, lo: usize, hi: usize) -> usize {
     debug_assert!(lo < hi && hi <= a.rows());
     let mut best_i = lo;
     let mut best = a.at(lo, j).abs();
@@ -25,7 +27,7 @@ pub fn iamax_col(a: MatMut, j: usize, lo: usize, hi: usize) -> usize {
 }
 
 /// Scale `a[lo..hi, j] *= s`.
-pub fn scal_col(a: MatMut, j: usize, lo: usize, hi: usize, s: f64) {
+pub fn scal_col<S: Scalar>(a: MatMut<S>, j: usize, lo: usize, hi: usize, s: S) {
     for i in lo..hi {
         a.update(i, j, |x| x * s);
     }
@@ -34,8 +36,8 @@ pub fn scal_col(a: MatMut, j: usize, lo: usize, hi: usize, s: f64) {
 /// Rank-1 update `A[rlo..rhi, clo..chi] -= x[rlo..rhi] · yᵀ[clo..chi]`
 /// where `x` is column `xcol` of `a` and `y` is row `yrow` of `a`
 /// (exactly the GER shape appearing in the unblocked LU inner loop).
-pub fn ger_update(
-    a: MatMut,
+pub fn ger_update<S: Scalar>(
+    a: MatMut<S>,
     rlo: usize,
     rhi: usize,
     clo: usize,
@@ -45,7 +47,7 @@ pub fn ger_update(
 ) {
     for j in clo..chi {
         let yj = a.at(yrow, j);
-        if yj == 0.0 {
+        if yj == S::ZERO {
             continue;
         }
         for i in rlo..rhi {
@@ -57,9 +59,9 @@ pub fn ger_update(
 
 /// Crew-parallel version of [`ger_update`] (columns split across the
 /// crew). Used when the panel team has more than one thread.
-pub fn ger_update_par(
+pub fn ger_update_par<S: Scalar>(
     crew: &mut Crew,
-    a: MatMut,
+    a: MatMut<S>,
     rlo: usize,
     rhi: usize,
     clo: usize,
@@ -78,7 +80,7 @@ pub fn ger_update_par(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::Matrix;
+    use crate::matrix::{Mat, Matrix};
 
     #[test]
     fn iamax_finds_largest_and_breaks_ties_low() {
@@ -87,6 +89,12 @@ mod tests {
         assert_eq!(iamax_col(v, 0, 0, 5), 1); // |-3| first among ties
         assert_eq!(iamax_col(v, 0, 2, 5), 3);
         assert_eq!(iamax_col(v, 0, 4, 5), 4);
+    }
+
+    #[test]
+    fn iamax_f32() {
+        let mut a = Mat::<f32>::from_rows(4, 1, &[1.0, -5.0, 5.0, 2.0]);
+        assert_eq!(iamax_col(a.view_mut(), 0, 0, 4), 1);
     }
 
     #[test]

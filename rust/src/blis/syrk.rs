@@ -1,5 +1,6 @@
 //! SYRK — symmetric rank-`k` update, the trailing-update kernel of the
-//! right-looking Cholesky factorization.
+//! right-looking Cholesky factorization; generic over the sealed
+//! [`Scalar`] layer.
 //!
 //! `C := C + α·A·Aᵀ`, writing only the lower trapezoid of `C` (the strict
 //! upper triangle of the leading square is never touched, so a symmetric
@@ -22,8 +23,9 @@
 
 use super::gemm::gemm;
 use super::params::BlisParams;
-use crate::matrix::{MatMut, MatRef, Matrix};
+use crate::matrix::{Mat, MatMut, MatRef};
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 
 /// Column-strip width of the blocked SYRK (mirrors the TRSM diagonal
@@ -45,20 +47,26 @@ pub const DB: usize = 32;
 /// triangle; the Cholesky drivers also use the trapezoidal form to update
 /// a block column (`w < m`). The result is bitwise identical for any crew
 /// size *and* for any column split of the same update (see module docs).
-pub fn syrk_ln(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, c: MatMut) {
+pub fn syrk_ln<S: Scalar>(
+    crew: &mut Crew,
+    params: &BlisParams,
+    alpha: S,
+    a: MatRef<S>,
+    c: MatMut<S>,
+) {
     let m = a.rows();
     let k = a.cols();
     let w = c.cols();
     assert_eq!(c.rows(), m, "syrk: C rows must match A rows");
     assert!(w <= m, "syrk: C must be a lower trapezoid (cols <= rows)");
-    if m == 0 || w == 0 || k == 0 || alpha == 0.0 {
+    if m == 0 || w == 0 || k == 0 || alpha == S::ZERO {
         return;
     }
     // Scratch reused by every strip: the transposed strip rows and the
     // diagonal square.
     let jb_max = DB.min(w);
-    let mut at = Matrix::zeros(k, jb_max);
-    let mut sq = Matrix::zeros(jb_max, jb_max);
+    let mut at = Mat::<S>::zeros(k, jb_max);
+    let mut sq = Mat::<S>::zeros(jb_max, jb_max);
     let mut j = 0;
     while j < w {
         let jb = DB.min(w - j);
@@ -115,6 +123,7 @@ pub fn syrk_ln(crew: &mut Crew, params: &BlisParams, alpha: f64, a: MatRef, c: M
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::Matrix;
     use crate::pool::EntryPolicy;
 
     /// Naive full-trapezoid reference.
@@ -153,6 +162,23 @@ mod tests {
             let d = c.max_abs_diff(&want);
             assert!(d < 1e-11, "m={m} k={k} w={w} diff={d}");
         }
+    }
+
+    #[test]
+    fn f32_matches_f64_reference_to_f32_accuracy() {
+        use crate::matrix::Mat;
+        let params = BlisParams::tiny();
+        let (m, k, w) = (DB + 5, 9, DB + 5);
+        let a = Matrix::random(m, k, 3);
+        let c0 = Matrix::random(m, w, 4);
+        let want = reference(-1.0, &a, &c0, w);
+        let a32: Mat<f32> = a.convert();
+        let mut c32: Mat<f32> = c0.convert();
+        let mut crew = Crew::new();
+        syrk_ln(&mut crew, &params, -1.0f32, a32.view(), c32.view_mut());
+        let d = want.max_abs_diff(&c32.convert());
+        let tol = 16.0 * f32::EPSILON as f64 * k as f64;
+        assert!(d < tol, "f32 syrk diff {d} tol {tol}");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Blocked triangular solve with multiple right-hand sides.
+//! Blocked triangular solve with multiple right-hand sides, generic over
+//! the sealed [`Scalar`] layer.
 //!
 //! The LU loop body needs `B := TRILU(A)⁻¹ · B` (left side, lower
 //! triangular, unit diagonal — RL2/LL1 in the paper's Fig. 3/6). The
@@ -12,6 +13,7 @@ use super::gemm::gemm;
 use super::params::BlisParams;
 use crate::matrix::{MatMut, MatRef};
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 
 /// Diagonal block size of the blocked TRSM.
@@ -19,7 +21,7 @@ const DB: usize = 32;
 
 /// `B := TRILU(A)⁻¹ · B` — `A` is `m × m` (only its strict lower triangle
 /// is read; the diagonal is taken as ones), `B` is `m × n`.
-pub fn trsm_llu(crew: &mut Crew, params: &BlisParams, a: MatRef, b: MatMut) {
+pub fn trsm_llu<S: Scalar>(crew: &mut Crew, params: &BlisParams, a: MatRef<S>, b: MatMut<S>) {
     let m = b.rows();
     assert_eq!(a.rows(), m, "trsm: A rows");
     assert_eq!(a.cols(), m, "trsm: A cols");
@@ -54,7 +56,7 @@ pub fn trsm_llu(crew: &mut Crew, params: &BlisParams, a: MatRef, b: MatMut) {
             gemm(
                 crew,
                 params,
-                -1.0,
+                S::ZERO - S::ONE,
                 a.sub(k + db, k, rem, db),
                 bk.as_ref(),
                 b.sub(k + db, 0, rem, n),
@@ -74,7 +76,7 @@ pub fn trsm_llu(crew: &mut Crew, params: &BlisParams, a: MatRef, b: MatMut) {
 /// reduction stays sequential — the result is bitwise identical for any
 /// crew size, matching the determinism invariant of the rest of the
 /// substrate (DESIGN.md §8).
-pub fn trsm_rltn(crew: &mut Crew, a: MatRef, b: MatMut) {
+pub fn trsm_rltn<S: Scalar>(crew: &mut Crew, a: MatRef<S>, b: MatMut<S>) {
     let n = b.cols();
     assert_eq!(a.rows(), n, "trsm_rltn: A rows");
     assert_eq!(a.cols(), n, "trsm_rltn: A cols");
@@ -100,7 +102,7 @@ pub fn trsm_rltn(crew: &mut Crew, a: MatRef, b: MatMut) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{naive, Matrix};
+    use crate::matrix::{naive, Mat, Matrix};
     use crate::util::quickcheck_lite::{forall_res, Gen};
 
     fn unit_lower(n: usize, seed: u64) -> Matrix {
@@ -135,6 +137,22 @@ mod tests {
             let d = b1.max_abs_diff(&b2);
             assert!(d < 1e-11, "m={m} n={n} diff={d}");
         }
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let params = BlisParams::tiny();
+        let m = DB + 9;
+        let n = 11;
+        let a: Mat<f32> = unit_lower(m, 77).convert();
+        let mut b1 = Mat::<f32>::random(m, n, 7);
+        let mut b2 = b1.clone();
+        let mut crew = Crew::new();
+        trsm_llu(&mut crew, &params, a.view(), b1.view_mut());
+        naive::trsm_llu(a.view(), b2.view_mut());
+        let d = b1.max_abs_diff(&b2);
+        let tol = 32.0 * f32::EPSILON as f64 * m as f64;
+        assert!(d < tol, "f32 trsm diff {d} tol {tol}");
     }
 
     #[test]

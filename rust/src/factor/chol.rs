@@ -24,6 +24,7 @@ use super::{FactorKind, Factorization, PanelStep};
 use crate::blis::{syrk_ln, trsm_rltn, BlisParams};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -37,21 +38,21 @@ pub struct CholFactor;
 /// the lower triangle only. The block must be SPD after the caller's
 /// left-looking updates — a non-positive diagonal yields NaNs, which the
 /// residual checks catch (no pivoting, matching LAPACK semantics).
-pub fn chol_unblocked(a: MatMut) {
+pub fn chol_unblocked<S: Scalar>(a: MatMut<S>) {
     let n = a.rows();
     debug_assert_eq!(a.cols(), n);
     for k in 0..n {
         let dk = a.at(k, k).sqrt();
         a.set(k, k, dk);
-        if dk != 0.0 {
-            let r = 1.0 / dk;
+        if dk != S::ZERO {
+            let r = S::ONE / dk;
             for i in k + 1..n {
                 a.update(i, k, |x| x * r);
             }
         }
         for j in k + 1..n {
             let ajk = a.at(j, k);
-            if ajk == 0.0 {
+            if ajk == S::ZERO {
                 continue;
             }
             for i in j..n {
@@ -61,7 +62,7 @@ pub fn chol_unblocked(a: MatMut) {
     }
 }
 
-impl Factorization for CholFactor {
+impl<S: Scalar> Factorization<S> for CholFactor {
     type State = ();
     type Acc = usize;
 
@@ -73,7 +74,7 @@ impl Factorization for CholFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         b: usize,
         bi: usize,
@@ -96,7 +97,7 @@ impl Factorization for CholFactor {
                 syrk_ln(
                     crew,
                     params,
-                    -1.0,
+                    S::ZERO - S::ONE,
                     p.sub(kk, 0, mp - kk, kk).as_ref(),
                     p.sub(kk, kk, mp - kk, bb),
                 );
@@ -133,7 +134,7 @@ impl Factorization for CholFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         bc: usize,
         _st: &(),
@@ -150,7 +151,7 @@ impl Factorization for CholFactor {
         syrk_ln(
             crew,
             params,
-            -1.0,
+            S::ZERO - S::ONE,
             a.sub(j0, f, m - j0, bc).as_ref(),
             a.sub(j0, j0, m - j0, j1 - j0),
         );

@@ -37,8 +37,9 @@
 
 use super::{FactorCtl, Factorization, LaCtl, LaOpts, LaStats, PanelStep};
 use crate::blis::{BlisParams, PackArena};
-use crate::matrix::{MatMut, Matrix};
+use crate::matrix::{Mat, MatMut};
 use crate::pool::{Crew, Pool};
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -51,11 +52,11 @@ use std::sync::{Arc, Mutex};
 /// columns the matrix holds a consistent partial factorization: columns
 /// `0..cols_done` carry their final factor entries and the trailing block
 /// is fully updated.
-pub fn blocked_ctl<F: Factorization>(
+pub fn blocked_ctl<S: Scalar, F: Factorization<S>>(
     fk: &F,
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bo: usize,
     bi: usize,
     ctl: &FactorCtl,
@@ -105,11 +106,11 @@ pub fn blocked_ctl<F: Factorization>(
 /// Termination (module docs above) and a cooperative cancellation
 /// checkpoint between outer panel steps (see [`LaCtl`]).
 #[allow(clippy::too_many_arguments)]
-pub fn lookahead_ctl<F: Factorization>(
+pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     fk: &F,
     pool: &Pool,
     params: &BlisParams,
-    a: &mut Matrix,
+    a: &mut Mat<S>,
     bo: usize,
     bi: usize,
     opts: &LaOpts,
@@ -377,7 +378,7 @@ pub fn lookahead_ctl<F: Factorization>(
 mod tests {
     use super::*;
     use crate::factor::{CholFactor, FactorKind, LuFactor, QrFactor};
-    use crate::matrix::naive;
+    use crate::matrix::{naive, Matrix};
 
     #[test]
     fn blocked_lu_matches_lu_blocked_rl_bitwise() {

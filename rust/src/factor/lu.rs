@@ -1,6 +1,6 @@
 //! LU with partial pivoting as a [`Factorization`] instance — the
 //! paper's original workload, now one kind among three under the generic
-//! drivers.
+//! drivers, implemented for both sealed [`Scalar`] precisions.
 //!
 //! The panel kernels are the existing [`crate::lu::panel`] pair
 //! (right-looking eager, left-looking lazy with the ET poll); the
@@ -14,6 +14,7 @@ use crate::blis::{gemm, trsm_llu, BlisParams};
 use crate::lu::panel::{panel_ll, panel_rl};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::AtomicBool;
 
@@ -23,11 +24,13 @@ pub struct LuFactor;
 
 /// `laswp` with pivot indices relative to row `base` (the panel top):
 /// swap rows `base+k` and `piv[k]` (absolute) for columns `jlo..jhi`.
-/// Reuses [`crate::blis::laswp::for_each_col_strip`]'s chunking: each strip
-/// applies the whole pivot sequence while its rows are cache-resident.
-pub(crate) fn laswp_abs(
+/// Reuses [`crate::blis::laswp::for_each_col_strip`]'s chunking (strip
+/// width [`crate::blis::params::COL_STRIP`], the definition shared with
+/// the plain LASWP): each strip applies the whole pivot sequence while
+/// its rows are cache-resident.
+pub(crate) fn laswp_abs<S: Scalar>(
     crew: &mut Crew,
-    a: MatMut,
+    a: MatMut<S>,
     piv: &[usize],
     base: usize,
     jlo: usize,
@@ -48,7 +51,7 @@ pub(crate) fn laswp_abs(
     });
 }
 
-impl Factorization for LuFactor {
+impl<S: Scalar> Factorization<S> for LuFactor {
     type State = Vec<usize>;
     type Acc = Vec<usize>;
 
@@ -60,7 +63,7 @@ impl Factorization for LuFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         b: usize,
         bi: usize,
@@ -86,7 +89,7 @@ impl Factorization for LuFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         bc: usize,
         st: &Vec<usize>,
@@ -110,7 +113,7 @@ impl Factorization for LuFactor {
             gemm(
                 crew,
                 params,
-                -1.0,
+                S::ZERO - S::ONE,
                 a.sub(below, f, m - below, bc).as_ref(),
                 a.sub(f, j0, bc, w).as_ref(),
                 a.sub(below, j0, m - below, w),
@@ -122,7 +125,7 @@ impl Factorization for LuFactor {
         &self,
         crew: &mut Crew,
         _params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         _bc: usize,
         st: &Vec<usize>,

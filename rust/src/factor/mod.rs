@@ -18,6 +18,12 @@
 //! | [`FactorKind::Chol`] | `potf2` + [`crate::blis::trsm_rltn`] | [`crate::blis::syrk_ln`] | none |
 //! | [`FactorKind::Qr`] | Householder `geqr2` | compact-WY [`crate::blis::house::apply_block_qt`] | none |
 //!
+//! Since the precision-generic redesign (DESIGN.md §12) the trait and
+//! both drivers are additionally parameterized by the sealed
+//! [`Scalar`] type: `Factorization<S>` is implemented for every kind in
+//! both `f32` and `f64`, and one driver instantiation per `(kind, S)`
+//! pair shares all of the scheduling machinery.
+//!
 //! The trait contract (which steps may be worker-shared, where the ET
 //! checkpoints sit, and the per-kind determinism invariant) is documented
 //! in DESIGN.md §11.
@@ -32,8 +38,9 @@ pub use lu::LuFactor;
 pub use qr::QrFactor;
 
 use crate::blis::BlisParams;
-use crate::matrix::{MatMut, Matrix};
+use crate::matrix::{Mat, MatMut};
 use crate::pool::{Crew, EntryPolicy, Pool};
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
@@ -92,7 +99,9 @@ impl FactorKind {
 
     /// Cost-model estimate of the single-core seconds left after `k`
     /// committed columns — the remaining-work half of the serve layer's
-    /// reallocation policy (DESIGN.md §10).
+    /// reallocation policy (DESIGN.md §10). The estimate is in `f64`
+    /// terms; precision-aware callers divide by
+    /// [`Scalar::FLOP_RATE`] (see [`FactorKind::remaining_cost_prec`]).
     pub fn remaining_cost(
         &self,
         hw: &HwModel,
@@ -109,6 +118,23 @@ impl FactorKind {
         }
     }
 
+    /// [`FactorKind::remaining_cost`] scaled by the working precision's
+    /// modeled flop rate: an `f32` problem is priced at half the seconds
+    /// of its `f64` twin, so mixed-precision batches share one
+    /// starvation metric (DESIGN.md §12).
+    #[allow(clippy::too_many_arguments)]
+    pub fn remaining_cost_prec<S: Scalar>(
+        &self,
+        hw: &HwModel,
+        m: usize,
+        n: usize,
+        k: usize,
+        bo: usize,
+        bi: usize,
+    ) -> f64 {
+        self.remaining_cost(hw, m, n, k, bo, bi) / S::FLOP_RATE
+    }
+
     /// Check that an `m × n` problem is well-formed for this kind
     /// (Cholesky requires a square matrix).
     pub fn validate(&self, m: usize, n: usize) -> Result<(), String> {
@@ -122,25 +148,26 @@ impl FactorKind {
 /// One committed panel step: the kind-specific state needed to apply the
 /// panel's transformation ([`Factorization::State`]) plus how far the
 /// panel factorization got before an Early-Termination cut.
-pub struct PanelStep<S> {
+pub struct PanelStep<St> {
     /// Whatever [`Factorization::apply`] needs (pivots, reflector block,
     /// nothing for Cholesky).
-    pub state: S,
+    pub state: St,
     /// Columns actually factorized (`< b` only after an ET cut).
     pub k_done: usize,
     /// Whether an ET signal cut the panel short.
     pub terminated_early: bool,
 }
 
-/// The panel / trailing-update contract the generic drivers schedule.
+/// The panel / trailing-update contract the generic drivers schedule,
+/// parameterized by the working precision `S`.
 ///
 /// Implementations describe *what* one factorization step computes; the
 /// drivers in [`driver`] own *when and by whom* it runs (team split,
 /// Worker Sharing, Early Termination, cancellation checkpoints). Every
 /// method must be bitwise deterministic with respect to crew size — the
 /// trailing reductions it performs must be sequential per output element
-/// (DESIGN.md §8, §11).
-pub trait Factorization: Clone + Send + Sync + 'static {
+/// (DESIGN.md §8, §11) — in each precision independently.
+pub trait Factorization<S: Scalar>: Clone + Send + Sync + 'static {
     /// Per-panel state handed from [`Self::panel`] to [`Self::apply`]
     /// (absolute pivot rows for LU, the compact-WY reflector block for
     /// QR, nothing for Cholesky). Shared read-only across the two
@@ -167,7 +194,7 @@ pub trait Factorization: Clone + Send + Sync + 'static {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         b: usize,
         bi: usize,
@@ -185,7 +212,7 @@ pub trait Factorization: Clone + Send + Sync + 'static {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         bc: usize,
         st: &Self::State,
@@ -200,7 +227,7 @@ pub trait Factorization: Clone + Send + Sync + 'static {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         bc: usize,
         st: &Self::State,
@@ -304,19 +331,20 @@ pub struct FactorCtl<'a> {
     /// Polled between panel steps; when set the factorization stops
     /// before the next step, leaving a clean factored prefix.
     pub cancel: Option<&'a AtomicBool>,
-    /// Trace label prefix (e.g. `req3:qr`); `None` keeps plain labels.
+    /// Trace label prefix (e.g. `req3:qr:f32`); `None` keeps plain labels.
     pub tag: Option<&'a str>,
     /// Called with the number of committed columns after every step.
     pub on_checkpoint: Option<&'a (dyn Fn(usize) + Sync)>,
 }
 
-/// Type-erased result of a factorization of any [`FactorKind`].
+/// Type-erased result of a factorization of any [`FactorKind`], in
+/// working precision `S` (`f64` unless spelled otherwise).
 #[derive(Debug, Clone, Default)]
-pub struct FactorOutcome {
+pub struct FactorOutcome<S: Scalar = f64> {
     /// Absolute pivot rows (LU only; empty for Cholesky/QR).
     pub ipiv: Vec<usize>,
     /// Householder scalar factors (QR only; empty otherwise).
-    pub tau: Vec<f64>,
+    pub tau: Vec<S>,
     /// Columns fully factorized and committed.
     pub cols_done: usize,
     /// Whether the run was cut short by a cancel flag.
@@ -326,20 +354,20 @@ pub struct FactorOutcome {
 }
 
 /// Factorize `a` in place with the generic WS+ET look-ahead driver,
-/// dispatching on `kind`. `pool` supplies the workers (total team =
-/// `pool.workers() + 1` counting the caller); `ctl` adds request-level
-/// cancellation checkpoints.
+/// dispatching on `kind`, in `a`'s own precision. `pool` supplies the
+/// workers (total team = `pool.workers() + 1` counting the caller);
+/// `ctl` adds request-level cancellation checkpoints.
 #[allow(clippy::too_many_arguments)]
-pub fn factorize_lookahead(
+pub fn factorize_lookahead<S: Scalar>(
     kind: FactorKind,
     pool: &Pool,
     params: &BlisParams,
-    a: &mut Matrix,
+    a: &mut Mat<S>,
     bo: usize,
     bi: usize,
     opts: &LaOpts,
     ctl: Option<&LaCtl>,
-) -> FactorOutcome {
+) -> FactorOutcome<S> {
     match kind {
         FactorKind::Lu => {
             let (ipiv, stats) =
@@ -378,16 +406,17 @@ pub fn factorize_lookahead(
 
 /// Factorize `a` in place with the generic blocked right-looking driver
 /// (panel on the critical path, request-level checkpoints), dispatching
-/// on `kind`. This is the serve layer's per-request driver.
-pub fn factorize_blocked(
+/// on `kind`, in `a`'s own precision. This is the serve layer's
+/// per-request driver.
+pub fn factorize_blocked<S: Scalar>(
     kind: FactorKind,
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bo: usize,
     bi: usize,
     ctl: &FactorCtl,
-) -> FactorOutcome {
+) -> FactorOutcome<S> {
     match kind {
         FactorKind::Lu => {
             let (ipiv, cols_done, cancelled) =
@@ -473,5 +502,17 @@ mod tests {
             assert!(half > 0.0, "{}", k.name());
             assert_eq!(done, 0.0, "{}", k.name());
         }
+    }
+
+    #[test]
+    fn precision_scales_remaining_cost() {
+        let hw = HwModel::default();
+        let c64 = FactorKind::Lu.remaining_cost_prec::<f64>(&hw, 256, 256, 0, 32, 8);
+        let c32 = FactorKind::Lu.remaining_cost_prec::<f32>(&hw, 256, 256, 0, 32, 8);
+        assert!(c64 > 0.0);
+        assert!(
+            (c32 - c64 / 2.0).abs() < 1e-12 * c64,
+            "f32 cost {c32} should be half of f64 cost {c64}"
+        );
     }
 }

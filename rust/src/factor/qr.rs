@@ -19,8 +19,9 @@
 use super::{FactorKind, Factorization, PanelStep};
 use crate::blis::house::{apply_block_qt, apply_reflector, larft, reflector};
 use crate::blis::BlisParams;
-use crate::matrix::{MatMut, Matrix};
+use crate::matrix::{Mat, MatMut};
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -30,21 +31,21 @@ pub struct QrFactor;
 
 /// Committed-panel state: everything [`apply_block_qt`] needs to apply
 /// `Qᵀ` of one panel to a block of trailing columns.
-pub struct QrPanel {
+pub struct QrPanel<S: Scalar = f64> {
     /// Householder scalar factors, one per committed column.
-    pub tau: Vec<f64>,
+    pub tau: Vec<S>,
     /// The `k × k` upper-triangular block-reflector factor.
-    t: Matrix,
+    t: Mat<S>,
     /// Clean `m_p × k` reflector block (unit diagonal, zeros above).
-    v: Matrix,
+    v: Mat<S>,
     /// Transpose of `v` (`k × m_p`), precomputed once per panel so both
     /// look-ahead branches share it read-only.
-    vt: Matrix,
+    vt: Mat<S>,
 }
 
-impl Factorization for QrFactor {
-    type State = QrPanel;
-    type Acc = Vec<f64>;
+impl<S: Scalar> Factorization<S> for QrFactor {
+    type State = QrPanel<S>;
+    type Acc = Vec<S>;
 
     fn kind(&self) -> FactorKind {
         FactorKind::Qr
@@ -54,19 +55,19 @@ impl Factorization for QrFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         b: usize,
         bi: usize,
         _ll: bool,
         stop: Option<&AtomicBool>,
-    ) -> PanelStep<QrPanel> {
+    ) -> PanelStep<QrPanel<S>> {
         let m = a.rows();
         let p = a.sub(f, f, m - f, b); // rows f..m, cols f..f+b
         let mp = p.rows();
         let kmax = mp.min(b);
         let bi = bi.max(1);
-        let mut tau: Vec<f64> = Vec::with_capacity(kmax);
+        let mut tau: Vec<S> = Vec::with_capacity(kmax);
         let mut kk = 0;
         let mut terminated_early = false;
         while kk < kmax {
@@ -99,9 +100,9 @@ impl Factorization for QrFactor {
         let _ = params;
         // Condense the committed reflectors into compact WY form.
         let k = kk;
-        let mut v = Matrix::zeros(mp, k);
+        let mut v = Mat::<S>::zeros(mp, k);
         for j in 0..k {
-            v[(j, j)] = 1.0;
+            v[(j, j)] = S::ONE;
             for i in j + 1..mp {
                 v[(i, j)] = p.at(i, j);
             }
@@ -119,10 +120,10 @@ impl Factorization for QrFactor {
         &self,
         crew: &mut Crew,
         params: &BlisParams,
-        a: MatMut,
+        a: MatMut<S>,
         f: usize,
         _bc: usize,
-        st: &QrPanel,
+        st: &QrPanel<S>,
         j0: usize,
         j1: usize,
     ) {
@@ -140,7 +141,7 @@ impl Factorization for QrFactor {
         );
     }
 
-    fn commit(&self, acc: &mut Vec<f64>, st: &QrPanel, k_done: usize) {
+    fn commit(&self, acc: &mut Vec<S>, st: &QrPanel<S>, k_done: usize) {
         debug_assert_eq!(st.tau.len(), k_done);
         acc.extend_from_slice(&st.tau);
     }
@@ -171,7 +172,7 @@ pub fn remaining_cost_qr(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::naive;
+    use crate::matrix::{naive, Matrix};
 
     #[test]
     fn panel_full_width_is_a_valid_qr() {

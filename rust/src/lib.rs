@@ -10,8 +10,13 @@
 //! The crate is organized in layers (see `DESIGN.md`):
 //!
 //! - [`util`] — PRNG, stats, a small property-testing harness.
+//! - [`scalar`] — the **sealed precision layer**: the [`scalar::Scalar`]
+//!   trait (`f32` + `f64`) every numeric layer is generic over —
+//!   epsilon, SIMD lane width, the fused `mul_add` contract, and the
+//!   per-type micro-kernel registry (DESIGN.md §12).
 //! - [`matrix`] — column-major dense matrices, views, norms, naive
-//!   reference kernels.
+//!   reference kernels, generic over [`scalar::Scalar`]
+//!   ([`matrix::Mat`], with [`matrix::Matrix`] the `f64` alias).
 //! - [`pool`] — the **malleable worker pool**: persistent worker threads
 //!   organized into [`pool::Crew`]s whose membership can grow *while a
 //!   kernel is executing* (the paper's Worker-Sharing mechanism).
@@ -27,9 +32,13 @@
 //!   (`LU_LA`), malleable look-ahead (`LU_MB`), and early-termination
 //!   (`LU_ET`) — the look-ahead variants now instantiate the generic
 //!   [`factor`] driver.
+//! - [`solve`] — linear-system solvers over the precision layer,
+//!   including the mixed-precision [`solve::lu_solve_mixed`] (factor in
+//!   `f32`, refine the residual in `f64` to double accuracy).
 //! - [`serve`] — the **batched multi-problem LU scheduler**: an
 //!   [`serve::LuServer`] multiplexes a queue of factorization requests
-//!   over one shared pool, generalizing Worker Sharing ("donate idle
+//!   — in either precision, plus mixed-precision solve requests — over
+//!   one shared pool, generalizing Worker Sharing ("donate idle
 //!   threads to whichever problem is behind") and Early Termination
 //!   (cancel superseded or deadline-expired requests) across problems.
 //! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
@@ -51,8 +60,10 @@ pub mod lu;
 pub mod matrix;
 pub mod pool;
 pub mod runtime;
+pub mod scalar;
 pub mod serve;
 pub mod sim;
+pub mod solve;
 pub mod taskrt;
 pub mod trace;
 pub mod util;

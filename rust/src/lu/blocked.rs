@@ -12,6 +12,7 @@ use super::panel::panel_rl;
 use crate::blis::{gemm, laswp, trsm_llu, BlisParams};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
 use std::sync::atomic::AtomicBool;
 
@@ -47,10 +48,10 @@ pub struct BlockedOutcome {
 /// Blocked right-looking LU with partial pivoting (`LU` in the paper's
 /// evaluation). `bo` = outer block size, `bi` = inner (panel) block size.
 /// Returns absolute pivot indices (LAPACK convention).
-pub fn lu_blocked_rl(
+pub fn lu_blocked_rl<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bo: usize,
     bi: usize,
 ) -> Vec<usize> {
@@ -70,10 +71,10 @@ pub fn lu_blocked_rl(
 /// instantiated with [`crate::factor::LuFactor`] — the scheduling loop
 /// (panel / left swaps / right swaps+TRSM+GEMM, checkpoints, trace tags)
 /// exists exactly once, shared with Cholesky and QR.
-pub fn lu_blocked_rl_ctl(
+pub fn lu_blocked_rl_ctl<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bo: usize,
     bi: usize,
     ctl: &BlockedCtl,
@@ -102,10 +103,10 @@ pub fn lu_blocked_rl_ctl(
 /// Blocked left-looking LU with partial pivoting (paper §4.2, operations
 /// LL1–LL3). Mathematically the same factorization as
 /// [`lu_blocked_rl`]; the update order is lazy instead of eager.
-pub fn lu_blocked_ll(
+pub fn lu_blocked_ll<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bo: usize,
     bi: usize,
 ) -> Vec<usize> {
@@ -126,7 +127,7 @@ pub fn lu_blocked_ll(
             gemm(
                 crew,
                 params,
-                -1.0,
+                S::ZERO - S::ONE,
                 a.sub(k, 0, m - k, k).as_ref(),
                 a.sub(0, k, k, b).as_ref(),
                 a.sub(k, k, m - k, b),

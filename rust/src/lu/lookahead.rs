@@ -21,16 +21,17 @@ pub use crate::factor::{LaCtl, LaOpts, LaStats};
 
 use crate::blis::BlisParams;
 use crate::factor::{driver, LuFactor};
-use crate::matrix::Matrix;
+use crate::matrix::Mat;
 use crate::pool::Pool;
+use crate::scalar::Scalar;
 
 /// Factorize `a` in place with look-ahead. `pool` supplies the worker
 /// threads (total team = `pool.workers() + 1` counting the caller).
 /// Returns absolute pivots and statistics.
-pub fn lu_lookahead(
+pub fn lu_lookahead<S: Scalar>(
     pool: &Pool,
     params: &BlisParams,
-    a: &mut Matrix,
+    a: &mut Mat<S>,
     bo: usize,
     bi: usize,
     opts: &LaOpts,
@@ -40,10 +41,10 @@ pub fn lu_lookahead(
 
 /// [`lu_lookahead`] with a cooperative cancellation checkpoint between
 /// outer panel steps (see [`LaCtl`]).
-pub fn lu_lookahead_ctl(
+pub fn lu_lookahead_ctl<S: Scalar>(
     pool: &Pool,
     params: &BlisParams,
-    a: &mut Matrix,
+    a: &mut Mat<S>,
     bo: usize,
     bi: usize,
     opts: &LaOpts,
@@ -55,7 +56,7 @@ pub fn lu_lookahead_ctl(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::naive;
+    use crate::matrix::{naive, Matrix};
     use crate::pool::{Crew, EntryPolicy};
     use crate::util::quickcheck_lite::{forall_res, Gen};
 

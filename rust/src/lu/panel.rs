@@ -21,6 +21,7 @@ use super::unblocked::lu_unblocked;
 use crate::blis::{gemm, laswp, trsm_llu, BlisParams};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Outcome of a panel factorization.
@@ -39,7 +40,12 @@ pub struct PanelOutcome {
 /// (`bi <= 1` or `bi >= n` degrades to the unblocked algorithm).
 /// BDP within the panel comes from the crew (paper: the PANEL "also
 /// extracts BDP from the same two kernels").
-pub fn panel_rl(crew: &mut Crew, params: &BlisParams, a: MatMut, bi: usize) -> PanelOutcome {
+pub fn panel_rl<S: Scalar>(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: MatMut<S>,
+    bi: usize,
+) -> PanelOutcome {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     if bi <= 1 || bi >= kmax {
@@ -77,7 +83,7 @@ pub fn panel_rl(crew: &mut Crew, params: &BlisParams, a: MatMut, bi: usize) -> P
                 gemm(
                     crew,
                     params,
-                    -1.0,
+                    S::ZERO - S::ONE,
                     a.sub(k + b, k, m - k - b, b).as_ref(),
                     a.sub(k, k + b, b, rest).as_ref(),
                     a.sub(k + b, k + b, m - k - b, rest),
@@ -109,10 +115,10 @@ pub fn panel_rl(crew: &mut Crew, params: &BlisParams, a: MatMut, bi: usize) -> P
 /// - columns `k_done..n` are **exactly as on entry** (no swaps, no
 ///   updates) — they rejoin the trailing submatrix of the outer
 ///   factorization.
-pub fn panel_ll(
+pub fn panel_ll<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
-    a: MatMut,
+    a: MatMut<S>,
     bi: usize,
     stop: Option<&AtomicBool>,
 ) -> PanelOutcome {
@@ -140,7 +146,7 @@ pub fn panel_ll(
             gemm(
                 crew,
                 params,
-                -1.0,
+                S::ZERO - S::ONE,
                 a.sub(k, 0, m - k, k).as_ref(),
                 a.sub(0, k, k, b).as_ref(),
                 a.sub(k, k, m - k, b),

@@ -9,11 +9,13 @@
 
 use crate::blis::small::{ger_update, iamax_col, scal_col};
 use crate::matrix::MatMut;
+use crate::scalar::Scalar;
 
 /// Factorize `a` in place; returns local pivots. Exactly singular columns
 /// (pivot == 0) are tolerated LAPACK-style: the column is skipped and the
-/// zero stays on the diagonal.
-pub fn lu_unblocked(a: MatMut) -> Vec<usize> {
+/// zero stays on the diagonal. Generic over the sealed [`Scalar`] layer —
+/// the same leaf runs in both precisions.
+pub fn lu_unblocked<S: Scalar>(a: MatMut<S>) -> Vec<usize> {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     let mut ipiv = Vec::with_capacity(kmax);
@@ -22,8 +24,8 @@ pub fn lu_unblocked(a: MatMut) -> Vec<usize> {
         ipiv.push(piv);
         a.swap_rows(k, piv, 0, n);
         let akk = a.at(k, k);
-        if akk != 0.0 {
-            scal_col(a, k, k + 1, m, 1.0 / akk);
+        if akk != S::ZERO {
+            scal_col(a, k, k + 1, m, S::ONE / akk);
             ger_update(a, k + 1, m, k + 1, n, k, k);
         }
     }

@@ -4,9 +4,11 @@
 //! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
 //! mlu chol      --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
 //! mlu qr        --n 1024 [--m 2048] --variant et [--bo --bi --threads --check]
-//! mlu solve     --n 512  --variant mb            # factor + solve + residual
+//! mlu solve     --n 512 --prec f32|f64|mixed     # precision-selected solve:
+//!               # mixed = f32 factorization + f64 iterative refinement
+//!               # to full double-precision backward error (DESIGN.md §12)
 //! mlu batch     --sizes 256,192,320 --workers 4 [--kind lu|chol|qr|mix]
-//!               [--check --compare --trace t.json]
+//!               [--prec f32|f64] [--check --compare --trace t.json]
 //!
 //! Global flags: `--params mc,kc,nc` overrides the cache-topology-derived
 //! BLIS blocking; `--kernel auto|simd|portable` forces a micro-kernel
@@ -26,9 +28,11 @@ use malleable_lu::blis::BlisParams;
 use malleable_lu::cli::{render_table, Args};
 use malleable_lu::factor::{self, FactorKind, LaOpts};
 use malleable_lu::lu::{self, LuConfig, Variant};
-use malleable_lu::matrix::{naive, Matrix};
-use malleable_lu::pool::Pool;
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::pool::{Crew, Pool};
+use malleable_lu::scalar::Scalar;
 use malleable_lu::sim::{self, figures, HwModel};
+use malleable_lu::solve::{self, SolvePrec};
 use malleable_lu::util::{gflops, lu_flops, timed};
 use malleable_lu::{runtime, serve, trace};
 
@@ -57,7 +61,8 @@ fn main() {
 
 const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
 commands: factorize | chol | qr | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
-global flags: --params mc,kc,nc | --kernel auto|simd|portable";
+global flags: --params mc,kc,nc | --kernel auto|simd|portable
+solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
 /// cache-topology-derived defaults. A malformed override is a hard
@@ -229,8 +234,17 @@ fn cmd_factor_kind(kind: FactorKind, args: &Args) -> i32 {
 
 fn cmd_solve(args: &Args) -> i32 {
     let n = args.get("n", 512usize);
-    let cfg = lu_config(args);
-    let a0 = Matrix::random_dd(n, args.get("seed", 7u64));
+    let prec_s = args.get_str("prec", "f64");
+    let Some(prec) = SolvePrec::parse(&prec_s) else {
+        eprintln!("unknown --prec {prec_s:?} (expected f32|f64|mixed)");
+        return 2;
+    };
+    let bo = args.get("bo", 256usize);
+    let bi = args.get("bi", 32usize);
+    let threads = args.get("threads", 6usize);
+    let params = resolve_params(args);
+    let seed = args.get("seed", 7u64);
+    let a0 = Matrix::random_dd(n, seed);
     let x_true: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
     let mut b = vec![0.0; n];
     for j in 0..n {
@@ -238,20 +252,41 @@ fn cmd_solve(args: &Args) -> i32 {
             b[i] += a0[(i, j)] * x_true[j];
         }
     }
-    let mut f = a0.clone();
-    let (secs, out) = timed(|| lu::factorize(&mut f, &cfg, None));
-    let x = lu::solve(&f, &out.ipiv, &b);
+    // One crew spanning the whole team, like the blocked variants.
+    let pool = Pool::new(threads.saturating_sub(1));
+    let mut crew = Crew::new();
+    let members = pool.broadcast(|_w| {
+        let s = crew.shared();
+        move || s.member_loop(malleable_lu::pool::EntryPolicy::JobBoundary)
+    });
+    let (secs, out) = timed(|| solve::solve_system(&mut crew, &params, prec, &a0, &b, bo, bi));
+    crew.disband();
+    for h in members {
+        h.wait();
+    }
+    let x = &out.x;
     let err = x
         .iter()
         .zip(&x_true)
         .fold(0.0f64, |acc, (a, b)| acc.max((a - b).abs()));
     println!(
-        "solved {n}x{n} via {} in {:.3}s ({:.2} GFLOPS); max |x−x*| = {err:.3e}",
-        cfg.variant.name(),
-        secs,
-        gflops(lu_flops(n, n), secs)
+        "solved {n}x{n} [prec={}] in {secs:.3}s ({:.2} GFLOPS): backward error {:.3e}, \
+         {} refine sweeps, max |x\u{2212}x*| = {err:.3e}",
+        prec.name(),
+        gflops(lu_flops(n, n), secs),
+        out.backward_error,
+        out.refine_iters
     );
-    i32::from(err > 1e-8)
+    if !out.converged {
+        eprintln!("SOLVE DID NOT CONVERGE");
+        return 1;
+    }
+    let tol = prec.expected_backward_error(n);
+    if out.backward_error > tol {
+        eprintln!("BACKWARD ERROR {:.3e} ABOVE {tol:.3e}", out.backward_error);
+        return 1;
+    }
+    0
 }
 
 fn cmd_batch(args: &Args) -> i32 {
@@ -285,6 +320,15 @@ fn cmd_batch(args: &Args) -> i32 {
         params: resolve_params(args),
         ..Default::default()
     };
+    let prec_s = args.get_str("prec", "f64");
+    match prec_s.as_str() {
+        "f64" => {}
+        "f32" => return batch_f32(args, &sizes, &kinds, cfg),
+        other => {
+            eprintln!("unknown --prec {other:?} for batch (expected f32|f64)");
+            return 1;
+        }
+    }
     let total_flops: f64 = sizes
         .iter()
         .zip(&kinds)
@@ -388,6 +432,73 @@ fn cmd_batch(args: &Args) -> i32 {
             "sequential (full pool per problem): {ssecs:.3}s, {seq_g:.2} GFLOPS → batched speedup {:.2}x",
             ssecs / secs
         );
+    }
+    0
+}
+
+/// `mlu batch --prec f32`: the same request stream submitted in single
+/// precision through the same queue (residual tolerances scale with
+/// `f32::EPSILON`; trace/compare options are f64-only).
+fn batch_f32(
+    args: &Args,
+    sizes: &[usize],
+    kinds: &[malleable_lu::factor::FactorKind],
+    cfg: serve::ServeConfig,
+) -> i32 {
+    let total_flops: f64 = sizes.iter().zip(kinds).map(|(&n, k)| k.flops(n, n)).sum();
+    let mats: Vec<Mat<f32>> = sizes
+        .iter()
+        .zip(kinds)
+        .enumerate()
+        .map(|(i, (&n, &k))| match k {
+            FactorKind::Chol => Mat::<f32>::random_spd(n, i as u64 + 1),
+            _ => Mat::<f32>::random(n, n, i as u64 + 1),
+        })
+        .collect();
+    let originals = if args.has("check") {
+        Some(mats.clone())
+    } else {
+        None
+    };
+    let server = serve::LuServer::new(cfg);
+    let reqs: Vec<serve::LuRequest<f32>> = mats
+        .into_iter()
+        .zip(kinds)
+        .map(|(a, &k)| serve::LuRequest::new(a).with_kind(k))
+        .collect();
+    let (secs, results) = timed(|| server.factorize_batch(reqs));
+    server.shutdown();
+    println!(
+        "batched {} f32 problems (n={sizes:?}) on {} workers: {secs:.3}s, {:.2} aggregate GFLOPS",
+        results.len(),
+        cfg.workers,
+        gflops(total_flops, secs)
+    );
+    for r in &results {
+        println!(
+            "  req{} {}:f32 n={} cols_done={} cancelled={} {:.3}s",
+            r.id,
+            r.kind.name(),
+            r.a.rows(),
+            r.cols_done,
+            r.cancelled,
+            r.secs
+        );
+    }
+    if let Some(origs) = &originals {
+        for (r, a0) in results.iter().zip(origs) {
+            let res = match r.kind {
+                FactorKind::Lu => naive::lu_residual(a0, &r.a, &r.ipiv),
+                FactorKind::Chol => naive::chol_residual(a0, &r.a),
+                FactorKind::Qr => naive::qr_residual(a0, &r.a, &r.tau),
+            };
+            let tol = 16.0 * a0.rows() as f64 * <f32 as Scalar>::EPSILON.to_f64();
+            if res > tol {
+                eprintln!("req{}: residual {res:.3e} above f32 level {tol:.3e}", r.id);
+                return 1;
+            }
+        }
+        println!("  all residuals OK (f32 tolerances)");
     }
     0
 }

@@ -1,29 +1,45 @@
-//! Column-major dense matrices and views.
+//! Column-major dense matrices and views, generic over the sealed
+//! [`Scalar`] precision layer (DESIGN.md §12).
 //!
 //! Storage follows BLAS/LAPACK conventions: column-major with a leading
-//! dimension (`ld`), so every submatrix of a [`Matrix`] is itself
+//! dimension (`ld`), so every submatrix of a [`Mat`] is itself
 //! addressable as a strided view. Parallel kernels operate on [`MatMut`]
 //! raw views; the safety discipline is the classic BLAS one — concurrent
 //! writers always target disjoint blocks, enforced structurally by the
 //! algorithms (each thread owns a distinct column/row range).
+//!
+//! Precision: the owned matrix is [`Mat<S>`] with `S` one of the sealed
+//! scalar types (`f32`, `f64`); [`Matrix`] is the `f64` alias every
+//! pre-existing call site uses, and [`Matrix32`] its single-precision
+//! sibling. Views carry the same parameter with an `f64` default, so
+//! `MatRef`/`MatMut` written without parameters keep meaning double
+//! precision.
 
 pub mod naive;
 
+use crate::scalar::Scalar;
 use crate::util::Prng;
 
-/// Owned column-major `f64` matrix (`ld == rows`).
+/// Owned column-major matrix (`ld == rows`) of scalar type `S`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Matrix {
-    data: Vec<f64>,
+pub struct Mat<S: Scalar> {
+    data: Vec<S>,
     rows: usize,
     cols: usize,
 }
 
-impl Matrix {
+/// The double-precision owned matrix — the crate's historical `Matrix`
+/// type, now an alias of [`Mat<f64>`].
+pub type Matrix = Mat<f64>;
+
+/// The single-precision owned matrix.
+pub type Matrix32 = Mat<f32>;
+
+impl<S: Scalar> Mat<S> {
     /// Zero-filled `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
-            data: vec![0.0; rows * cols],
+            data: vec![S::ZERO; rows * cols],
             rows,
             cols,
         }
@@ -33,18 +49,21 @@ impl Matrix {
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = S::ONE;
         }
         m
     }
 
     /// Matrix with entries drawn uniformly from `(0,1)` — the paper's
-    /// experimental workload (§5).
+    /// experimental workload (§5). The same seed draws the same `f64`
+    /// stream in every precision (entries are rounded into `S`), so
+    /// `Mat::<f32>::random(..)` is the rounded image of
+    /// `Matrix::random(..)`.
     pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
         let mut rng = Prng::new(seed);
         let mut m = Self::zeros(rows, cols);
         for v in &mut m.data {
-            *v = rng.next_f64();
+            *v = S::from_f64(rng.next_f64());
         }
         m
     }
@@ -54,7 +73,7 @@ impl Matrix {
     pub fn random_dd(n: usize, seed: u64) -> Self {
         let mut m = Self::random(n, n, seed);
         for i in 0..n {
-            m[(i, i)] += n as f64;
+            m[(i, i)] += S::from_f64(n as f64);
         }
         m
     }
@@ -65,13 +84,13 @@ impl Matrix {
         let b = Self::random(n, n, seed);
         let mut m = naive::matmul(&b, &b.transposed());
         for j in 0..n {
-            m[(j, j)] += n as f64;
+            m[(j, j)] += S::from_f64(n as f64);
         }
         m
     }
 
     /// Build from a closure `f(i, j)`.
-    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> S) -> Self {
         let mut m = Self::zeros(rows, cols);
         for j in 0..cols {
             for i in 0..rows {
@@ -82,7 +101,7 @@ impl Matrix {
     }
 
     /// Build from row-major slice (convenient for literals in tests).
-    pub fn from_rows(rows: usize, cols: usize, vals: &[f64]) -> Self {
+    pub fn from_rows(rows: usize, cols: usize, vals: &[S]) -> Self {
         assert_eq!(vals.len(), rows * cols);
         Self::from_fn(rows, cols, |i, j| vals[i * cols + j])
     }
@@ -98,17 +117,17 @@ impl Matrix {
     }
 
     /// Raw column-major data (length `rows*cols`).
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[S] {
         &self.data
     }
 
     /// Mutable raw column-major data.
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [S] {
         &mut self.data
     }
 
     /// Full-matrix mutable raw view.
-    pub fn view_mut(&mut self) -> MatMut {
+    pub fn view_mut(&mut self) -> MatMut<S> {
         MatMut {
             ptr: self.data.as_mut_ptr(),
             rows: self.rows,
@@ -118,7 +137,7 @@ impl Matrix {
     }
 
     /// Full-matrix shared raw view.
-    pub fn view(&self) -> MatRef {
+    pub fn view(&self) -> MatRef<S> {
         MatRef {
             ptr: self.data.as_ptr(),
             rows: self.rows,
@@ -127,23 +146,30 @@ impl Matrix {
         }
     }
 
-    /// Frobenius norm.
+    /// Frobenius norm, accumulated in `f64` regardless of `S`.
     pub fn norm_f(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data
+            .iter()
+            .map(|x| {
+                let v = x.to_f64();
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
     }
 
-    /// Max-abs entry.
+    /// Max-abs entry (as `f64`).
     pub fn norm_max(&self) -> f64 {
-        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.to_f64().abs()))
     }
 
-    /// Elementwise maximum absolute difference.
+    /// Elementwise maximum absolute difference (as `f64`).
     pub fn max_abs_diff(&self, other: &Self) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
             .iter()
             .zip(&other.data)
-            .fold(0.0, |a, (x, y)| a.max((x - y).abs()))
+            .fold(0.0f64, |a, (x, y)| a.max((x.to_f64() - y.to_f64()).abs()))
     }
 
     /// Transposed copy.
@@ -152,7 +178,9 @@ impl Matrix {
     }
 
     /// Copy entries to row-major order (for XLA literal interchange).
-    pub fn to_row_major(&self) -> Vec<f64> {
+    /// Inverse of [`Mat::from_row_major`] for every shape, square or not
+    /// (pinned by a property test below).
+    pub fn to_row_major(&self) -> Vec<S> {
         let mut out = Vec::with_capacity(self.rows * self.cols);
         for i in 0..self.rows {
             for j in 0..self.cols {
@@ -162,45 +190,59 @@ impl Matrix {
         out
     }
 
-    /// Build from row-major data (for XLA literal interchange).
-    pub fn from_row_major(rows: usize, cols: usize, vals: &[f64]) -> Self {
+    /// Build from row-major data (for XLA literal interchange). `vals`
+    /// must hold exactly `rows * cols` entries laid out row by row;
+    /// entry `(i, j)` is read from `vals[i * cols + j]` — note `cols`,
+    /// not `rows`, so non-square shapes round-trip through
+    /// [`Mat::to_row_major`] exactly.
+    pub fn from_row_major(rows: usize, cols: usize, vals: &[S]) -> Self {
         Self::from_rows(rows, cols, vals)
+    }
+
+    /// Rounded copy in another precision: `f32 → f64` is exact, `f64 →
+    /// f32` rounds each entry to nearest — the demotion the
+    /// mixed-precision solver performs (DESIGN.md §12).
+    pub fn convert<T: Scalar>(&self) -> Mat<T> {
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            T::from_f64(self[(i, j)].to_f64())
+        })
     }
 }
 
-impl std::ops::Index<(usize, usize)> for Matrix {
-    type Output = f64;
+impl<S: Scalar> std::ops::Index<(usize, usize)> for Mat<S> {
+    type Output = S;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+    fn index(&self, (i, j): (usize, usize)) -> &S {
         debug_assert!(i < self.rows && j < self.cols);
         &self.data[i + j * self.rows]
     }
 }
 
-impl std::ops::IndexMut<(usize, usize)> for Matrix {
+impl<S: Scalar> std::ops::IndexMut<(usize, usize)> for Mat<S> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i + j * self.rows]
     }
 }
 
-/// Shared (read-only) strided view.
+/// Shared (read-only) strided view of scalar type `S` (`f64` unless
+/// spelled otherwise).
 #[derive(Copy, Clone, Debug)]
-pub struct MatRef {
-    ptr: *const f64,
+pub struct MatRef<S: Scalar = f64> {
+    ptr: *const S,
     rows: usize,
     cols: usize,
     ld: usize,
 }
 
-// SAFETY: MatRef is a read-only view; the owning Matrix outlives all uses
-// by construction of the kernels (scoped threads / crew jobs joined before
-// the borrow ends).
-unsafe impl Send for MatRef {}
-unsafe impl Sync for MatRef {}
+// SAFETY: MatRef is a read-only view; the owning Mat outlives all uses
+// by construction of the kernels (scoped threads / crew jobs joined
+// before the borrow ends).
+unsafe impl<S: Scalar> Send for MatRef<S> {}
+unsafe impl<S: Scalar> Sync for MatRef<S> {}
 
-impl MatRef {
+impl<S: Scalar> MatRef<S> {
     /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
@@ -216,20 +258,20 @@ impl MatRef {
 
     /// Element at `(i, j)`.
     #[inline(always)]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(i + j * self.ld) }
     }
 
     /// Pointer to the start of column `j`.
     #[inline(always)]
-    pub fn col_ptr(&self, j: usize) -> *const f64 {
+    pub fn col_ptr(&self, j: usize) -> *const S {
         debug_assert!(j <= self.cols);
         unsafe { self.ptr.add(j * self.ld) }
     }
 
     /// Subview at `(i, j)` of shape `m × n`.
-    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatRef {
+    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatRef<S> {
         debug_assert!(i + m <= self.rows && j + n <= self.cols);
         MatRef {
             ptr: unsafe { self.ptr.add(i + j * self.ld) },
@@ -240,35 +282,36 @@ impl MatRef {
     }
 
     /// Copy into an owned matrix.
-    pub fn to_matrix(&self) -> Matrix {
-        Matrix::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    pub fn to_matrix(&self) -> Mat<S> {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
     }
 }
 
-/// Mutable strided view used by the parallel kernels.
+/// Mutable strided view used by the parallel kernels (`f64` unless
+/// spelled otherwise).
 ///
 /// `Copy` on purpose: kernels hand disjoint-block aliases to worker
 /// threads. All element access is bounds-debug-checked; disjointness of
 /// concurrent writes is an algorithmic invariant (see module docs).
 #[derive(Copy, Clone, Debug)]
-pub struct MatMut {
-    ptr: *mut f64,
+pub struct MatMut<S: Scalar = f64> {
+    ptr: *mut S,
     rows: usize,
     cols: usize,
     ld: usize,
 }
 
 // SAFETY: see module docs — concurrent writers always own disjoint blocks.
-unsafe impl Send for MatMut {}
-unsafe impl Sync for MatMut {}
+unsafe impl<S: Scalar> Send for MatMut<S> {}
+unsafe impl<S: Scalar> Sync for MatMut<S> {}
 
-impl MatMut {
+impl<S: Scalar> MatMut<S> {
     /// Construct from raw parts (used by packing buffers).
     ///
     /// # Safety
     /// `ptr` must be valid for `ld*(cols-1)+rows` reads/writes for the
     /// lifetime of all uses of the view.
-    pub unsafe fn from_raw(ptr: *mut f64, rows: usize, cols: usize, ld: usize) -> Self {
+    pub unsafe fn from_raw(ptr: *mut S, rows: usize, cols: usize, ld: usize) -> Self {
         Self {
             ptr,
             rows,
@@ -292,40 +335,40 @@ impl MatMut {
 
     /// Element at `(i, j)`.
     #[inline(always)]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(i + j * self.ld) }
     }
 
     /// Store `v` at `(i, j)`.
     #[inline(always)]
-    pub fn set(&self, i: usize, j: usize, v: f64) {
+    pub fn set(&self, i: usize, j: usize, v: S) {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(i + j * self.ld) = v }
     }
 
     /// Read-modify-write the element at `(i, j)`.
     #[inline(always)]
-    pub fn update(&self, i: usize, j: usize, f: impl FnOnce(f64) -> f64) {
+    pub fn update(&self, i: usize, j: usize, f: impl FnOnce(S) -> S) {
         self.set(i, j, f(self.at(i, j)));
     }
 
     /// Pointer to the start of column `j`.
     #[inline(always)]
-    pub fn col_ptr(&self, j: usize) -> *mut f64 {
+    pub fn col_ptr(&self, j: usize) -> *mut S {
         debug_assert!(j <= self.cols);
         unsafe { self.ptr.add(j * self.ld) }
     }
 
     /// Mutable column slice.
     #[inline(always)]
-    pub fn col_mut(&self, j: usize) -> &mut [f64] {
+    pub fn col_mut(&self, j: usize) -> &mut [S] {
         debug_assert!(j < self.cols);
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(j * self.ld), self.rows) }
     }
 
     /// Subview at `(i, j)` of shape `m × n`.
-    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatMut {
+    pub fn sub(&self, i: usize, j: usize, m: usize, n: usize) -> MatMut<S> {
         debug_assert!(
             i + m <= self.rows && j + n <= self.cols,
             "sub({i},{j},{m},{n}) out of {}x{}",
@@ -341,7 +384,7 @@ impl MatMut {
     }
 
     /// Read-only alias of this view.
-    pub fn as_ref(&self) -> MatRef {
+    pub fn as_ref(&self) -> MatRef<S> {
         MatRef {
             ptr: self.ptr,
             rows: self.rows,
@@ -366,7 +409,7 @@ impl MatMut {
     }
 
     /// Copy into an owned matrix.
-    pub fn to_matrix(&self) -> Matrix {
+    pub fn to_matrix(&self) -> Mat<S> {
         self.as_ref().to_matrix()
     }
 }
@@ -374,6 +417,7 @@ impl MatMut {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quickcheck_lite::{forall_res, Gen};
 
     #[test]
     fn zeros_eye_indexing() {
@@ -407,6 +451,39 @@ mod tests {
     }
 
     #[test]
+    fn property_row_major_roundtrips_non_square_both_precisions() {
+        // The satellite pin: to_row_major/from_row_major must be exact
+        // inverses for every shape (tall, wide, degenerate) in both
+        // precisions, and the row-major layout must really be row-major
+        // (entry (i, j) at i*cols + j).
+        forall_res("row-major roundtrip (f64 + f32)", 40, |g: &mut Gen| {
+            let rows = g.usize_in(1, 23);
+            let cols = g.usize_in(1, 23);
+            let seed = g.seed();
+            g.label(format!("rows={rows} cols={cols}"));
+
+            let m = Matrix::random(rows, cols, seed);
+            let rm = m.to_row_major();
+            if rm.len() != rows * cols {
+                return Err(format!("rm.len()={}", rm.len()));
+            }
+            if rm[cols - 1] != m[(0, cols - 1)] {
+                return Err("row-major layout is not row-major".into());
+            }
+            if Matrix::from_row_major(rows, cols, &rm) != m {
+                return Err("f64 roundtrip mismatch".into());
+            }
+
+            let m32 = Mat::<f32>::random(rows, cols, seed);
+            let rm32 = m32.to_row_major();
+            if Mat::<f32>::from_row_major(rows, cols, &rm32) != m32 {
+                return Err("f32 roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn random_is_deterministic_and_in_unit_interval() {
         let a = Matrix::random(5, 5, 42);
         let b = Matrix::random(5, 5, 42);
@@ -414,6 +491,25 @@ mod tests {
         assert!(a.data().iter().all(|&x| (0.0..1.0).contains(&x)));
         let c = Matrix::random(5, 5, 43);
         assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn random_f32_is_rounded_image_of_f64() {
+        let a = Matrix::random(6, 4, 9);
+        let a32 = Mat::<f32>::random(6, 4, 9);
+        for j in 0..4 {
+            for i in 0..6 {
+                assert_eq!(a32[(i, j)], a[(i, j)] as f32, "({i},{j})");
+            }
+        }
+        // And convert() performs the same rounding.
+        let c: Mat<f32> = a.convert();
+        assert_eq!(c, a32);
+        // f32 → f64 widening is exact.
+        let back: Matrix = a32.convert();
+        for (x, y) in back.data().iter().zip(a32.data()) {
+            assert_eq!(*x, *y as f64);
+        }
     }
 
     #[test]
@@ -437,6 +533,18 @@ mod tests {
         let s2 = s1.sub(2, 3, 2, 2);
         assert_eq!(s2.at(0, 0), m[(3, 4)]);
         assert_eq!(s2.at(1, 1), m[(4, 5)]);
+    }
+
+    #[test]
+    fn f32_views_and_swaps_work() {
+        let mut m = Mat::<f32>::from_fn(4, 4, |i, j| (i * 10 + j) as f32);
+        let v = m.view_mut();
+        v.swap_rows(0, 2, 1, 3);
+        assert_eq!(m[(0, 1)], 21.0f32);
+        assert_eq!(m[(2, 1)], 1.0f32);
+        assert_eq!(m[(0, 0)], 0.0f32); // untouched column
+        let s = m.view().sub(1, 1, 2, 2);
+        assert_eq!(s.at(0, 0), m[(1, 1)]);
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! Naive reference kernels — the correctness oracles for the BLIS
 //! substrate and the LU variants. Triple loops, no blocking, no
-//! parallelism; trivially auditable.
+//! parallelism; trivially auditable. Generic over the sealed [`Scalar`]
+//! layer so the same oracles validate both precisions; residual and
+//! norm helpers accumulate in `f64` regardless of the working type and
+//! return `f64` (compare against `S::EPSILON`-scaled tolerances).
 
-use super::{MatMut, MatRef, Matrix};
+use super::{Mat, MatMut, MatRef};
+use crate::scalar::Scalar;
 
 /// `C += alpha * A * B` (naive triple loop).
-pub fn gemm(alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
+pub fn gemm<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, c: MatMut<S>) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(b.rows(), k, "gemm: inner dims");
     assert_eq!(c.rows(), m, "gemm: C rows");
@@ -13,7 +17,7 @@ pub fn gemm(alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
     for j in 0..n {
         for p in 0..k {
             let bpj = alpha * b.at(p, j);
-            if bpj == 0.0 {
+            if bpj == S::ZERO {
                 continue;
             }
             for i in 0..m {
@@ -24,16 +28,16 @@ pub fn gemm(alpha: f64, a: MatRef, b: MatRef, c: MatMut) {
 }
 
 /// Owned-output convenience: `A·B`.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let mut c = Matrix::zeros(a.rows(), b.cols());
-    gemm(1.0, a.view(), b.view(), c.view_mut());
+pub fn matmul<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm(S::ONE, a.view(), b.view(), c.view_mut());
     c
 }
 
 /// `B := TRILU(A)⁻¹ · B` — left solve with the *unit* lower triangle of
 /// `A` (diagonal treated as ones, strictly-upper part ignored). This is
 /// the TRSM case appearing in the LU loop body (RL2/LL1).
-pub fn trsm_llu(a: MatRef, b: MatMut) {
+pub fn trsm_llu<S: Scalar>(a: MatRef<S>, b: MatMut<S>) {
     let m = b.rows();
     assert_eq!(a.rows(), m);
     assert_eq!(a.cols(), m);
@@ -50,7 +54,7 @@ pub fn trsm_llu(a: MatRef, b: MatMut) {
 
 /// `B := A⁻¹ · B` with `A` upper triangular (non-unit diagonal) — used by
 /// the linear-system solver after factorization.
-pub fn trsm_upper(a: MatRef, b: MatMut) {
+pub fn trsm_upper<S: Scalar>(a: MatRef<S>, b: MatMut<S>) {
     let m = b.rows();
     assert_eq!(a.rows(), m);
     assert_eq!(a.cols(), m);
@@ -69,8 +73,8 @@ pub fn trsm_upper(a: MatRef, b: MatMut) {
 ///
 /// Overwrites `a` with the packed `L\U` factors and returns `ipiv` in
 /// LAPACK convention: row `i` was swapped with row `ipiv[i]` (`ipiv[i] >=
-/// i`). Panics on an exactly singular pivot only if `strict`.
-pub fn lu(a: MatMut) -> Vec<usize> {
+/// i`).
+pub fn lu<S: Scalar>(a: MatMut<S>) -> Vec<usize> {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     let mut ipiv = Vec::with_capacity(kmax);
@@ -88,18 +92,18 @@ pub fn lu(a: MatMut) -> Vec<usize> {
         ipiv.push(piv);
         a.swap_rows(k, piv, 0, n);
         let akk = a.at(k, k);
-        if akk != 0.0 {
+        if akk != S::ZERO {
             // Scale the subdiagonal of column k. LAPACK-style reciprocal
             // multiply (not division) so the blocked kernels can match
             // this reference bitwise.
-            let rakk = 1.0 / akk;
+            let rakk = S::ONE / akk;
             for i in k + 1..m {
                 a.update(i, k, |x| x * rakk);
             }
             // Rank-1 update of the trailing submatrix.
             for j in k + 1..n {
                 let akj = a.at(k, j);
-                if akj == 0.0 {
+                if akj == S::ZERO {
                     continue;
                 }
                 for i in k + 1..m {
@@ -113,7 +117,7 @@ pub fn lu(a: MatMut) -> Vec<usize> {
 
 /// Apply the pivots produced by [`lu`] to a matrix: `B := P·B` where `P`
 /// is the permutation the factorization applied to `A`'s rows.
-pub fn apply_pivots(b: MatMut, ipiv: &[usize]) {
+pub fn apply_pivots<S: Scalar>(b: MatMut<S>, ipiv: &[usize]) {
     for (k, &p) in ipiv.iter().enumerate() {
         b.swap_rows(k, p, 0, b.cols());
     }
@@ -121,28 +125,29 @@ pub fn apply_pivots(b: MatMut, ipiv: &[usize]) {
 
 /// Extract `L` (unit lower trapezoidal, `m × min(m,n)`) from packed
 /// factors.
-pub fn extract_l(lu: &Matrix) -> Matrix {
+pub fn extract_l<S: Scalar>(lu: &Mat<S>) -> Mat<S> {
     let (m, n) = (lu.rows(), lu.cols());
     let k = m.min(n);
-    Matrix::from_fn(m, k, |i, j| {
+    Mat::from_fn(m, k, |i, j| {
         use std::cmp::Ordering::*;
         match i.cmp(&j) {
             Greater => lu[(i, j)],
-            Equal => 1.0,
-            Less => 0.0,
+            Equal => S::ONE,
+            Less => S::ZERO,
         }
     })
 }
 
 /// Extract `U` (upper trapezoidal, `min(m,n) × n`) from packed factors.
-pub fn extract_u(lu: &Matrix) -> Matrix {
+pub fn extract_u<S: Scalar>(lu: &Mat<S>) -> Mat<S> {
     let (m, n) = (lu.rows(), lu.cols());
     let k = m.min(n);
-    Matrix::from_fn(k, n, |i, j| if j >= i { lu[(i, j)] } else { 0.0 })
+    Mat::from_fn(k, n, |i, j| if j >= i { lu[(i, j)] } else { S::ZERO })
 }
 
-/// Relative residual ‖P·A − L·U‖_F / ‖A‖_F of a factorization of `a`.
-pub fn lu_residual(a: &Matrix, lu_packed: &Matrix, ipiv: &[usize]) -> f64 {
+/// Relative residual ‖P·A − L·U‖_F / ‖A‖_F of a factorization of `a`
+/// (accumulated in `f64` for both precisions).
+pub fn lu_residual<S: Scalar>(a: &Mat<S>, lu_packed: &Mat<S>, ipiv: &[usize]) -> f64 {
     let mut pa = a.clone();
     apply_pivots(pa.view_mut(), ipiv);
     let l = extract_l(lu_packed);
@@ -151,7 +156,7 @@ pub fn lu_residual(a: &Matrix, lu_packed: &Matrix, ipiv: &[usize]) -> f64 {
     let mut diff = 0.0f64;
     for j in 0..a.cols() {
         for i in 0..a.rows() {
-            let d = pa[(i, j)] - prod[(i, j)];
+            let d = pa[(i, j)].to_f64() - prod[(i, j)].to_f64();
             diff += d * d;
         }
     }
@@ -159,11 +164,11 @@ pub fn lu_residual(a: &Matrix, lu_packed: &Matrix, ipiv: &[usize]) -> f64 {
 }
 
 /// Check |L| entries are ≤ 1 (guaranteed by partial pivoting).
-pub fn growth_bounded(lu_packed: &Matrix) -> bool {
+pub fn growth_bounded<S: Scalar>(lu_packed: &Mat<S>) -> bool {
     let (m, n) = (lu_packed.rows(), lu_packed.cols());
     for j in 0..m.min(n) {
         for i in j + 1..m {
-            if lu_packed[(i, j)].abs() > 1.0 + 1e-12 {
+            if lu_packed[(i, j)].to_f64().abs() > 1.0 + 1e-12 {
                 return false;
             }
         }
@@ -171,8 +176,10 @@ pub fn growth_bounded(lu_packed: &Matrix) -> bool {
     true
 }
 
-/// Solve `A·x = b` given packed LU factors and pivots (single RHS).
-pub fn lu_solve(lu_packed: &Matrix, ipiv: &[usize], b: &[f64]) -> Vec<f64> {
+/// Solve `A·x = b` given packed LU factors and pivots (single RHS), in
+/// the factors' own precision — the substitution sweep the
+/// mixed-precision refiner runs in `f32` every iteration.
+pub fn lu_solve<S: Scalar>(lu_packed: &Mat<S>, ipiv: &[usize], b: &[S]) -> Vec<S> {
     let n = lu_packed.rows();
     assert_eq!(lu_packed.cols(), n, "lu_solve: square only");
     assert_eq!(b.len(), n);
@@ -205,7 +212,7 @@ pub fn lu_solve(lu_packed: &Matrix, ipiv: &[usize], b: &[f64]) -> Vec<f64> {
 /// upper triangle is neither read nor written. The input must be
 /// symmetric positive definite — a non-SPD matrix yields NaNs (no pivoting
 /// is performed, matching LAPACK `potf2` semantics).
-pub fn cholesky(a: MatMut) {
+pub fn cholesky<S: Scalar>(a: MatMut<S>) {
     let n = a.rows();
     assert_eq!(a.cols(), n, "cholesky: square only");
     for j in 0..n {
@@ -228,15 +235,15 @@ pub fn cholesky(a: MatMut) {
 
 /// Relative residual `‖A − L·Lᵀ‖_F / ‖A‖_F` of a Cholesky factorization;
 /// only the lower triangle of `l_packed` is read.
-pub fn chol_residual(a: &Matrix, l_packed: &Matrix) -> f64 {
+pub fn chol_residual<S: Scalar>(a: &Mat<S>, l_packed: &Mat<S>) -> f64 {
     let n = a.rows();
-    let l = Matrix::from_fn(n, n, |i, j| if i >= j { l_packed[(i, j)] } else { 0.0 });
+    let l = Mat::from_fn(n, n, |i, j| if i >= j { l_packed[(i, j)] } else { S::ZERO });
     let lt = l.transposed();
     let prod = matmul(&l, &lt);
     let mut diff = 0.0f64;
     for j in 0..n {
         for i in 0..n {
-            let d = a[(i, j)] - prod[(i, j)];
+            let d = a[(i, j)].to_f64() - prod[(i, j)].to_f64();
             diff += d * d;
         }
     }
@@ -247,11 +254,11 @@ pub fn chol_residual(a: &Matrix, l_packed: &Matrix) -> f64 {
 /// from packed QR factors (reflector tails below the diagonal of
 /// `factored`, scalar factors in `tau`). Test oracle — O(m²·k), applies
 /// the reflectors to the identity in reverse order.
-pub fn qr_q(factored: &Matrix, tau: &[f64]) -> Matrix {
+pub fn qr_q<S: Scalar>(factored: &Mat<S>, tau: &[S]) -> Mat<S> {
     let m = factored.rows();
-    let mut q = Matrix::eye(m);
+    let mut q = Mat::eye(m);
     for j in (0..tau.len()).rev() {
-        if tau[j] == 0.0 {
+        if tau[j] == S::ZERO {
             continue;
         }
         for c in 0..m {
@@ -262,7 +269,8 @@ pub fn qr_q(factored: &Matrix, tau: &[f64]) -> Matrix {
             w *= tau[j];
             q[(j, c)] -= w;
             for i in j + 1..m {
-                q[(i, c)] -= factored[(i, j)] * w;
+                let f = factored[(i, j)] * w;
+                q[(i, c)] -= f;
             }
         }
     }
@@ -271,25 +279,25 @@ pub fn qr_q(factored: &Matrix, tau: &[f64]) -> Matrix {
 
 /// Extract `R` (upper trapezoidal, `m × n` with zeros below the diagonal)
 /// from packed QR factors.
-pub fn extract_r(factored: &Matrix) -> Matrix {
-    Matrix::from_fn(factored.rows(), factored.cols(), |i, j| {
+pub fn extract_r<S: Scalar>(factored: &Mat<S>) -> Mat<S> {
+    Mat::from_fn(factored.rows(), factored.cols(), |i, j| {
         if j >= i {
             factored[(i, j)]
         } else {
-            0.0
+            S::ZERO
         }
     })
 }
 
 /// Relative residual `‖A − Q·R‖_F / ‖A‖_F` of a QR factorization.
-pub fn qr_residual(a: &Matrix, factored: &Matrix, tau: &[f64]) -> f64 {
+pub fn qr_residual<S: Scalar>(a: &Mat<S>, factored: &Mat<S>, tau: &[S]) -> f64 {
     let q = qr_q(factored, tau);
     let r = extract_r(factored);
     let prod = matmul(&q, &r);
     let mut diff = 0.0f64;
     for j in 0..a.cols() {
         for i in 0..a.rows() {
-            let d = a[(i, j)] - prod[(i, j)];
+            let d = a[(i, j)].to_f64() - prod[(i, j)].to_f64();
             diff += d * d;
         }
     }
@@ -297,8 +305,8 @@ pub fn qr_residual(a: &Matrix, factored: &Matrix, tau: &[f64]) -> f64 {
 }
 
 /// Max-abs entry of `QᵀQ − I` — the orthogonality defect of an explicit
-/// `Q` factor.
-pub fn orthogonality(q: &Matrix) -> f64 {
+/// `Q` factor (as `f64`).
+pub fn orthogonality<S: Scalar>(q: &Mat<S>) -> f64 {
     let qt = q.transposed();
     let prod = matmul(&qt, q);
     let n = q.cols();
@@ -306,7 +314,7 @@ pub fn orthogonality(q: &Matrix) -> f64 {
     for j in 0..n {
         for i in 0..n {
             let want = if i == j { 1.0 } else { 0.0 };
-            worst = worst.max((prod[(i, j)] - want).abs());
+            worst = worst.max((prod[(i, j)].to_f64() - want).abs());
         }
     }
     worst
@@ -315,6 +323,7 @@ pub fn orthogonality(q: &Matrix) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::Matrix;
     use crate::util::quickcheck_lite::{forall_res, Gen};
 
     #[test]
@@ -342,6 +351,17 @@ mod tests {
         assert!(a.max_abs_diff(&c) < 1e-15);
         let c2 = matmul(&i5, &a);
         assert!(a.max_abs_diff(&c2) < 1e-15);
+    }
+
+    #[test]
+    fn gemm_f32_matches_f64_to_f32_accuracy() {
+        let a = Matrix::random(9, 7, 31);
+        let b = Matrix::random(7, 5, 32);
+        let c = matmul(&a, &b);
+        let c32 = matmul::<f32>(&a.convert(), &b.convert());
+        let d = c.max_abs_diff(&c32.convert());
+        let tol = 16.0 * f32::EPSILON as f64 * 7.0;
+        assert!(d < tol, "f32 gemm drift {d} > {tol}");
     }
 
     #[test]
@@ -421,6 +441,21 @@ mod tests {
             let ipiv = lu(f.view_mut());
             let r = lu_residual(&a, &f, &ipiv);
             assert!(r < 1e-13, "n={n} residual={r}");
+            assert!(growth_bounded(&f));
+        }
+    }
+
+    #[test]
+    fn lu_f32_residual_scales_with_epsilon() {
+        use crate::matrix::Mat;
+        use crate::scalar::Scalar;
+        for n in [4usize, 16, 40] {
+            let a = Mat::<f32>::random(n, n, 7 + n as u64);
+            let mut f = a.clone();
+            let ipiv = lu(f.view_mut());
+            let r = lu_residual(&a, &f, &ipiv);
+            let tol = 8.0 * n as f64 * <f32 as Scalar>::EPSILON.to_f64();
+            assert!(r < tol, "n={n} residual={r} tol={tol}");
             assert!(growth_bounded(&f));
         }
     }

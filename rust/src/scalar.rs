@@ -1,0 +1,317 @@
+//! §scalar — the **sealed precision layer** (DESIGN.md §12).
+//!
+//! Everything numeric in this crate — [`crate::matrix::Mat`], the BLIS
+//! substrate, the factorization drivers, the serve layer — is generic
+//! over one trait, [`Scalar`], implemented for exactly `f32` and `f64`.
+//! The trait is **sealed**: downstream code cannot add implementations,
+//! which is what lets the kernels promise per-type properties (a
+//! registered micro-kernel, a SIMD lane width, the fused-reduction
+//! bitwise contract) without defensive checks at every call site.
+//!
+//! What an implementation provides:
+//!
+//! - the usual arithmetic (via the `core::ops` supertraits) plus the
+//!   handful of float intrinsics the kernels need ([`Scalar::mul_add`],
+//!   [`Scalar::sqrt`], [`Scalar::abs`], …);
+//! - numeric metadata: [`Scalar::EPSILON`] (for tolerance-scaled
+//!   residual checks), [`Scalar::SIMD_LANES`] (AVX2 width: 4 for `f64`,
+//!   8 for `f32`), [`Scalar::FLOP_RATE`] (modeled throughput relative to
+//!   `f64`, consumed by the serve layer's cost model);
+//! - the **micro-kernel registry entry** ([`Scalar::micro_kernel`]): the
+//!   type's register-blocked GEMM micro-kernel, dispatching between its
+//!   AVX2+FMA implementation and the shared portable fallback. The two
+//!   are bitwise identical under the fused-reduction contract
+//!   (DESIGN.md §9), per type — so the repo-wide determinism invariant
+//!   (§8) holds in both precisions.
+//!
+//! Conversions go through `f64` ([`Scalar::from_f64`] /
+//! [`Scalar::to_f64`]): `f32 → f64` is exact, `f64 → f32` rounds to
+//! nearest — the demotion the mixed-precision solver
+//! ([`crate::solve::lu_solve_mixed`]) performs once per system.
+
+use crate::matrix::MatMut;
+
+mod sealed {
+    /// Seal: only `f32` and `f64` may implement [`super::Scalar`].
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// The sealed scalar-type contract of the numeric core (module docs).
+///
+/// Implemented for `f32` and `f64` only. Future precisions (`f16`,
+/// `bf16`) slot in here: implement the trait, register a micro-kernel,
+/// and every layer above — matrix, BLIS, factorization drivers, serve —
+/// works unchanged.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + 'static
+{
+    /// Canonical lowercase name, used in trace tags (`req3:lu:f32`),
+    /// bench records (`"prec"` fields), and CLI flags.
+    const NAME: &'static str;
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Machine epsilon of the type — the unit for tolerance-scaled
+    /// residual checks (a residual `< c·n·EPSILON` is "as good as this
+    /// precision gets").
+    const EPSILON: Self;
+    /// Elements per AVX2 (256-bit) vector: 4 for `f64`, 8 for `f32`.
+    const SIMD_LANES: usize;
+    /// Modeled flop throughput relative to `f64` (1.0 for `f64`, 2.0
+    /// for `f32`: twice the SIMD lanes, half the memory traffic). The
+    /// serve layer's cost model divides modeled seconds by this rate so
+    /// mixed-precision batches share one starvation metric.
+    const FLOP_RATE: f64;
+
+    /// Round an `f64` into this type (exact for `f64`, nearest for
+    /// `f32`).
+    fn from_f64(v: f64) -> Self;
+    /// Widen into `f64` (always exact for the sealed types).
+    fn to_f64(self) -> f64;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// Fused multiply-add `self * a + b` with a single rounding — the
+    /// operation the micro-kernel bitwise contract is built on.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    /// The larger of `self` and `other` (IEEE `maxNum` semantics).
+    fn max(self, other: Self) -> Self;
+    /// Raw bits, widened to `u64` — for bitwise-identity assertions
+    /// across kernels and crew sizes.
+    fn to_bits_u64(self) -> u64;
+    /// Whether the value is finite (not NaN / ±inf).
+    fn is_finite(self) -> bool;
+
+    /// The type's registered GEMM micro-kernel (DESIGN.md §12): compute
+    /// `C_tile += alpha · A_panel · B_panel` over `k`-deep packed
+    /// micro-panels, writing the `m_eff × n_eff` live tile at `c`'s
+    /// origin. With `simd` set the caller has verified AVX2+FMA support
+    /// ([`crate::blis::micro::simd_available`]) and the type's SIMD
+    /// kernel runs; otherwise the shared portable fallback runs. Both
+    /// produce bitwise-identical results (the §9 contract), so the flag
+    /// is a pure performance choice.
+    #[allow(clippy::too_many_arguments)]
+    fn micro_kernel(
+        simd: bool,
+        k: usize,
+        alpha: Self,
+        a_panel: &[Self],
+        b_panel: &[Self],
+        c: MatMut<Self>,
+        m_eff: usize,
+        n_eff: usize,
+    );
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    const SIMD_LANES: usize = 4;
+    const FLOP_RATE: f64 = 1.0;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits()
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+
+    #[inline]
+    fn micro_kernel(
+        simd: bool,
+        k: usize,
+        alpha: Self,
+        a_panel: &[Self],
+        b_panel: &[Self],
+        c: MatMut<Self>,
+        m_eff: usize,
+        n_eff: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: `simd` is only passed as true after
+            // `micro::simd_available()` confirmed AVX2+FMA (dispatch
+            // contract of `blis::micro::micro_kernel`).
+            unsafe {
+                crate::blis::micro::micro_kernel_avx2(
+                    k, alpha, a_panel, b_panel, c, m_eff, n_eff,
+                )
+            };
+            return;
+        }
+        let _ = simd;
+        crate::blis::micro::micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    const SIMD_LANES: usize = 8;
+    const FLOP_RATE: f64 = 2.0;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn to_bits_u64(self) -> u64 {
+        u64::from(self.to_bits())
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+
+    #[inline]
+    fn micro_kernel(
+        simd: bool,
+        k: usize,
+        alpha: Self,
+        a_panel: &[Self],
+        b_panel: &[Self],
+        c: MatMut<Self>,
+        m_eff: usize,
+        n_eff: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: as in the f64 impl — `simd` implies AVX2+FMA.
+            unsafe {
+                crate::blis::micro::micro_kernel_avx2_f32(
+                    k, alpha, a_panel, b_panel, c, m_eff, n_eff,
+                )
+            };
+            return;
+        }
+        let _ = simd;
+        crate::blis::micro::micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(<f64 as Scalar>::EPSILON, f64::EPSILON);
+        assert_eq!(<f32 as Scalar>::EPSILON, f32::EPSILON);
+        // Twice the lanes, twice the modeled rate.
+        assert_eq!(f32::SIMD_LANES, 2 * f64::SIMD_LANES);
+        assert_eq!(f32::FLOP_RATE, 2.0 * f64::FLOP_RATE);
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        for v in [0.0f64, 1.5, -2.25, 1e-3] {
+            // Values exactly representable in f32 survive the roundtrip.
+            assert_eq!(<f32 as Scalar>::from_f64(v).to_f64(), v);
+            assert_eq!(<f64 as Scalar>::from_f64(v), v);
+        }
+        // f64→f32 rounds: a value below f32 resolution collapses.
+        let tiny = 1.0 + f64::EPSILON;
+        assert_eq!(<f32 as Scalar>::from_f64(tiny), 1.0f32);
+    }
+
+    fn fused_chain<S: Scalar>(n: usize) -> S {
+        let mut acc = S::ZERO;
+        for i in 0..n {
+            let x = S::from_f64(0.1 + i as f64);
+            acc = x.mul_add(S::from_f64(0.25), acc);
+        }
+        acc
+    }
+
+    #[test]
+    fn generic_arithmetic_matches_concrete() {
+        // The generic fused chain must be the exact chain the concrete
+        // types compute (this is the contract kernels rely on).
+        let g64 = fused_chain::<f64>(17);
+        let mut c64 = 0.0f64;
+        for i in 0..17 {
+            c64 = (0.1 + i as f64).mul_add(0.25, c64);
+        }
+        assert_eq!(g64.to_bits(), c64.to_bits());
+
+        let g32 = fused_chain::<f32>(17);
+        let mut c32 = 0.0f32;
+        for i in 0..17 {
+            c32 = ((0.1 + i as f64) as f32).mul_add(0.25, c32);
+        }
+        assert_eq!(g32.to_bits(), c32.to_bits());
+    }
+}

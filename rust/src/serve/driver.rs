@@ -2,26 +2,31 @@
 //! pool worker, with per-request trace tags, cost-model progress
 //! accounting, deadline enforcement, and cancellation checkpoints.
 //!
-//! Since the factorization-family refactor the driver is kind-generic:
-//! it dispatches through [`crate::factor::factorize_blocked`], so LU,
-//! Cholesky, and QR requests all flow through the same queue, crew
-//! leases, and checkpoints. Trace spans are tagged `req{id}:{kind}` so
-//! the per-request Gantt lanes show what each problem was
-//! ([`crate::trace::ascii_gantt_requests`]).
+//! Since the factorization-family refactor the driver is kind-generic —
+//! it dispatches through [`crate::factor::factorize_blocked`] — and
+//! since the precision redesign it is *scalar*-generic too: LU,
+//! Cholesky, and QR requests in either precision flow through the same
+//! queue, crew leases, and checkpoints. Trace spans are tagged
+//! `req{id}:{kind}:{prec}` so the per-request Gantt lanes show what each
+//! problem was and in which precision it ran
+//! ([`crate::trace::ascii_gantt_requests`]), and the cost model prices
+//! remaining work at the precision's modeled flop rate
+//! ([`crate::scalar::Scalar::FLOP_RATE`]).
 
 use super::registry::Lease;
 use crate::blis::BlisParams;
 use crate::factor::{factorize_blocked, FactorCtl, FactorKind, FactorOutcome};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 /// Cost-model estimate of the single-core seconds left in an `m × n` LU
-/// after `k` committed columns. Kept as the LU-specialized shorthand of
-/// [`FactorKind::remaining_cost`], which the scheduler now uses for all
-/// kinds.
+/// after `k` committed columns. Kept as the LU-specialized, `f64`-rate
+/// shorthand of [`FactorKind::remaining_cost`], which the scheduler now
+/// uses (precision-scaled) for all kinds.
 pub fn remaining_cost(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi: usize) -> f64 {
     FactorKind::Lu.remaining_cost(hw, m, n, k, bo, bi)
 }
@@ -47,15 +52,17 @@ pub struct DriveCfg<'a> {
     pub deadline: Option<Instant>,
 }
 
-/// Factorize `a` on the calling thread, leading `crew`. Trace spans are
-/// tagged `req{id}:{kind}` so multi-problem traces can tell requests (and
-/// their kinds) apart.
-pub fn drive(crew: &mut Crew, a: MatMut, cfg: &DriveCfg) -> FactorOutcome {
+/// Factorize `a` on the calling thread, leading `crew`, in `a`'s own
+/// precision. Trace spans are tagged `req{id}:{kind}:{prec}` so
+/// multi-problem traces can tell requests (kind *and* precision) apart.
+pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> FactorOutcome<S> {
     let (m, n) = (a.rows(), a.cols());
-    let tag = format!("req{}:{}", cfg.lease.id, cfg.kind.name());
+    let tag = format!("req{}:{}:{}", cfg.lease.id, cfg.kind.name(), S::NAME);
     let checkpoint = |k: usize| {
-        cfg.lease
-            .set_remaining(cfg.kind.remaining_cost(cfg.hw, m, n, k, cfg.bo, cfg.bi));
+        cfg.lease.set_remaining(
+            cfg.kind
+                .remaining_cost_prec::<S>(cfg.hw, m, n, k, cfg.bo, cfg.bi),
+        );
         if let Some(d) = cfg.deadline {
             if Instant::now() >= d {
                 cfg.cancel.store(true, Ordering::Release);
@@ -73,7 +80,7 @@ pub fn drive(crew: &mut Crew, a: MatMut, cfg: &DriveCfg) -> FactorOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{naive, Matrix};
+    use crate::matrix::{naive, Mat, Matrix};
     use std::sync::Arc;
 
     #[test]
@@ -156,6 +163,36 @@ mod tests {
             };
             assert!(r < 1e-11, "{}: residual {r}", kind.name());
         }
+    }
+
+    #[test]
+    fn drive_runs_f32_requests_with_scaled_cost() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let n = 40;
+        let a0 = Mat::<f32>::random(n, n, 33);
+        let mut f = a0.clone();
+        let start_cost = FactorKind::Lu.remaining_cost_prec::<f32>(&hw, n, n, 0, 8, 4);
+        let lease = Arc::new(Lease::new(9, 0, crew.shared(), start_cost));
+        let cancel = AtomicBool::new(false);
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            kind: FactorKind::Lu,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(!out.cancelled);
+        assert_eq!(out.cols_done, n);
+        assert_eq!(lease.remaining(), 0.0);
+        let r = naive::lu_residual(&a0, &f, &out.ipiv);
+        let tol = 8.0 * n as f64 * f32::EPSILON as f64;
+        assert!(r < tol, "f32 residual {r} tol {tol}");
     }
 
     #[test]

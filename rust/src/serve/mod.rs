@@ -6,9 +6,21 @@
 //! This layer generalizes both across *problems*: an [`LuServer`] accepts
 //! a queue of factorization requests (mixed sizes, priorities, optional
 //! deadlines — and since the factorization-family refactor, mixed
-//! [`FactorKind`]s: `Lu | Chol | Qr` share one priority queue, one crew
-//! registry, and one cost model) and multiplexes them over a single
-//! [`Pool`].
+//! [`FactorKind`]s) and multiplexes them over a single [`Pool`].
+//!
+//! Since the precision redesign (DESIGN.md §12) the queue is
+//! **precision-heterogeneous**: `f32` and `f64` requests — created with
+//! [`LuRequest::new`] over a [`Mat<S>`] of either sealed scalar type —
+//! and mixed-precision *solve* requests ([`SolveRequest`], the
+//! `lu_solve_mixed` workload) share one priority queue, one crew
+//! registry, one packing arena, and one cost model. Typed results come
+//! back through typed handles (`submit::<f32>` returns a
+//! `JobHandle<JobResult<f32>>`); internally each queue entry is a
+//! type-erased lead closure, so the scheduler itself never branches on
+//! precision. The cost model prices an `f32` problem at half the modeled
+//! seconds of its `f64` twin ([`crate::scalar::Scalar::FLOP_RATE`]), and
+//! trace spans are tagged `req{id}:{kind}:{prec}` so Gantt lanes name
+//! both.
 //!
 //! Scheduling model — every pool worker runs the same `serve_loop`:
 //!
@@ -28,10 +40,6 @@
 //! (or an expired deadline) stops a request at its next panel
 //! checkpoint, leaving a clean factored prefix and returning its crew to
 //! the pool.
-//!
-//! Every kernel span a leader emits is tagged `req{id}:{kind}`, so
-//! [`crate::trace::ascii_gantt_requests`] can render one Gantt lane per
-//! problem, labeled with its factorization kind.
 
 pub mod driver;
 pub mod registry;
@@ -40,9 +48,11 @@ pub use registry::{CrewRegistry, Lease};
 
 use crate::blis::{BlisParams, PackArena};
 use crate::factor::FactorKind;
-use crate::matrix::Matrix;
+use crate::matrix::{Mat, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
+use crate::scalar::Scalar;
 use crate::sim::HwModel;
+use crate::solve::{SolveCtl, SolvePrec};
 use crossbeam_utils::Backoff;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -80,11 +90,12 @@ impl Default for ServeConfig {
     }
 }
 
-/// One factorization request (of any [`FactorKind`] — the name predates
-/// the factorization-family refactor).
-pub struct LuRequest {
+/// One factorization request of any [`FactorKind`], in precision `S`
+/// (`f64` unless the matrix says otherwise — the name predates the
+/// factorization-family refactor).
+pub struct LuRequest<S: Scalar = f64> {
     /// The matrix to factorize (consumed; returned in the result).
-    pub a: Matrix,
+    pub a: Mat<S>,
     /// Which factorization to run (`Lu` by default).
     pub kind: FactorKind,
     /// Higher runs first and attracts floaters more strongly.
@@ -97,9 +108,9 @@ pub struct LuRequest {
     pub bi: Option<usize>,
 }
 
-impl LuRequest {
+impl<S: Scalar> LuRequest<S> {
     /// A default-priority LU request with server-default block sizes.
-    pub fn new(a: Matrix) -> Self {
+    pub fn new(a: Mat<S>) -> Self {
         Self {
             a,
             kind: FactorKind::Lu,
@@ -138,20 +149,75 @@ impl LuRequest {
     }
 }
 
-/// Completed (or cancelled) request.
+/// A mixed-precision (or precision-selected) linear-system solve
+/// request: the `lu_solve_mixed` workload as a queue citizen. The system
+/// is given in `f64`; `prec` selects the factorization arithmetic
+/// ([`SolvePrec::Mixed`] = `f32` factors + `f64` iterative refinement to
+/// double-precision backward error — DESIGN.md §12).
+pub struct SolveRequest {
+    /// The (square) system matrix.
+    pub a: Matrix,
+    /// The right-hand side (`b.len() == a.rows()`).
+    pub b: Vec<f64>,
+    /// Which arithmetic the solve runs in.
+    pub prec: SolvePrec,
+    /// Higher runs first and attracts floaters more strongly.
+    pub priority: u8,
+    /// Budget after which the request is ET-cancelled.
+    pub deadline: Option<Duration>,
+    /// Outer block-size override (server default when `None`).
+    pub bo: Option<usize>,
+    /// Inner block-size override.
+    pub bi: Option<usize>,
+}
+
+impl SolveRequest {
+    /// A default-priority mixed-precision solve request.
+    pub fn new(a: Matrix, b: Vec<f64>) -> Self {
+        Self {
+            a,
+            b,
+            prec: SolvePrec::Mixed,
+            priority: 0,
+            deadline: None,
+            bo: None,
+            bi: None,
+        }
+    }
+
+    /// Select the solve arithmetic (default [`SolvePrec::Mixed`]).
+    pub fn with_prec(mut self, prec: SolvePrec) -> Self {
+        self.prec = prec;
+        self
+    }
+
+    /// Set the scheduling priority (higher runs first).
+    pub fn with_priority(mut self, p: u8) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Set the wall-clock budget after which the request is cancelled.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Completed (or cancelled) factorization request, in precision `S`.
 #[derive(Debug)]
-pub struct JobResult {
+pub struct JobResult<S: Scalar = f64> {
     /// Request id assigned at submission.
     pub id: u64,
     /// The factorization that ran.
     pub kind: FactorKind,
     /// The matrix, now holding the factors (a clean factored prefix of
     /// `cols_done` columns if the request was cancelled).
-    pub a: Matrix,
+    pub a: Mat<S>,
     /// Absolute pivots for the committed columns (LU only).
     pub ipiv: Vec<usize>,
     /// Householder scalar factors for the committed columns (QR only).
-    pub tau: Vec<f64>,
+    pub tau: Vec<S>,
     /// Columns fully factorized and committed.
     pub cols_done: usize,
     /// Whether the request was cancelled (by handle, deadline, or a
@@ -161,20 +227,53 @@ pub struct JobResult {
     pub secs: f64,
 }
 
-struct JobState {
-    done: Mutex<Option<JobResult>>,
+/// Completed (or cancelled) solve request.
+#[derive(Debug)]
+pub struct SolveJobResult {
+    /// Request id assigned at submission.
+    pub id: u64,
+    /// The solve arithmetic that ran.
+    pub prec: SolvePrec,
+    /// The solution in `f64` (empty if cancelled before completion).
+    pub x: Vec<f64>,
+    /// Refinement sweeps performed (mixed path only).
+    pub refine_iters: usize,
+    /// Final normwise backward error (`f64`; infinite if cancelled).
+    pub backward_error: f64,
+    /// Whether the precision path's convergence criterion was met.
+    pub converged: bool,
+    /// Whether the request was cancelled (handle or deadline).
+    pub cancelled: bool,
+    /// Wall seconds from submission to completion.
+    pub secs: f64,
+}
+
+struct JobState<R> {
+    done: Mutex<Option<R>>,
     cv: Condvar,
     cancel: AtomicBool,
 }
 
-/// Handle returned by [`LuServer::submit`].
-pub struct JobHandle {
-    id: u64,
-    state: Arc<JobState>,
+impl<R> JobState<R> {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
+        })
+    }
 }
 
-impl JobHandle {
-    /// The request id (matches [`JobResult::id`] and trace tags).
+/// Handle returned by [`LuServer::submit`] / [`LuServer::submit_solve`],
+/// typed by the result it will deliver (`JobResult<S>` or
+/// [`SolveJobResult`]).
+pub struct JobHandle<R = JobResult> {
+    id: u64,
+    state: Arc<JobState<R>>,
+}
+
+impl<R> JobHandle<R> {
+    /// The request id (matches the result's `id` and trace tags).
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -193,7 +292,7 @@ impl JobHandle {
 
     /// Block until the request completes (or is cancelled) and take the
     /// result.
-    pub fn wait(self) -> JobResult {
+    pub fn wait(self) -> R {
         let mut slot = self.state.done.lock().unwrap();
         loop {
             if let Some(result) = slot.take() {
@@ -204,17 +303,17 @@ impl JobHandle {
     }
 }
 
+/// One queued request: the scheduling key plus a type-erased lead
+/// closure (the precision and kind live inside the closure, so the
+/// queue itself is precision-heterogeneous).
 struct QueuedJob {
     id: u64,
     seq: u64,
     priority: u8,
-    kind: FactorKind,
-    a: Matrix,
-    bo: usize,
-    bi: usize,
-    deadline: Option<Instant>,
-    submitted: Instant,
-    state: Arc<JobState>,
+    /// Drives the request to completion and fulfills its typed handle.
+    run: Box<dyn FnOnce(&ServerState) + Send>,
+    /// Fulfills the handle with a cancelled result (panic recovery).
+    abort: Box<dyn FnOnce() + Send>,
 }
 
 impl PartialEq for QueuedJob {
@@ -248,9 +347,11 @@ struct ServerState {
     registry: CrewRegistry,
     stop: AtomicBool,
     cfg: ServeConfig,
-    /// Packing arena shared by every request's crew: once the largest
-    /// request shape has been served, later factorizations lease their
-    /// packed buffers without allocating (DESIGN.md §9).
+    /// Packing arena shared by every request's crew — across kinds *and*
+    /// precisions (the arena's granule is `f64`; `f32` packings view the
+    /// same size-classed buffers): once the largest request shape has
+    /// been served, later factorizations lease their packed buffers
+    /// without allocating (DESIGN.md §9).
     arena: Arc<PackArena>,
 }
 
@@ -261,9 +362,23 @@ impl ServerState {
         self.queued.store(q.len(), Ordering::Release);
         job
     }
+
+    fn push(&self, job: QueuedJob) {
+        // Stop-check and push under one lock: shutdown() also sets
+        // `stop` under this lock, so a job can never slip into the
+        // queue after the serve loops were told to drain and exit
+        // (its waiter would hang forever).
+        let mut q = self.queue.lock().unwrap();
+        assert!(
+            !self.stop.load(Ordering::Acquire),
+            "LuServer::submit after shutdown"
+        );
+        q.push(job);
+        self.queued.store(q.len(), Ordering::Release);
+    }
 }
 
-/// The batched multi-problem LU server (module docs above).
+/// The batched multi-problem factorization server (module docs above).
 pub struct LuServer {
     pool: Pool,
     state: Arc<ServerState>,
@@ -311,47 +426,86 @@ impl LuServer {
         self.state.arena.stats()
     }
 
-    /// Enqueue a request; returns immediately with a handle.
-    pub fn submit(&self, req: LuRequest) -> JobHandle {
+    /// Enqueue a factorization request in either precision; returns
+    /// immediately with a typed handle.
+    pub fn submit<S: Scalar>(&self, req: LuRequest<S>) -> JobHandle<JobResult<S>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let state = Arc::new(JobState {
-            done: Mutex::new(None),
-            cv: Condvar::new(),
-            cancel: AtomicBool::new(false),
-        });
+        let jstate = JobState::<JobResult<S>>::new();
         let now = Instant::now();
+        let priority = req.priority;
+        let run_state = Arc::clone(&jstate);
+        let abort_state = Arc::clone(&jstate);
+        let kind = req.kind;
         let job = QueuedJob {
             id,
             seq: id,
-            priority: req.priority,
-            kind: req.kind,
-            a: req.a,
-            bo: req.bo.unwrap_or(self.state.cfg.bo),
-            bi: req.bi.unwrap_or(self.state.cfg.bi),
-            deadline: req.deadline.map(|d| now + d),
-            submitted: now,
-            state: Arc::clone(&state),
+            priority,
+            run: Box::new(move |state: &ServerState| {
+                lead_factor::<S>(state, id, req, now, run_state);
+            }),
+            abort: Box::new(move || {
+                complete(
+                    &abort_state,
+                    JobResult::<S> {
+                        id,
+                        kind,
+                        a: Mat::zeros(0, 0),
+                        ipiv: Vec::new(),
+                        tau: Vec::new(),
+                        cols_done: 0,
+                        cancelled: true,
+                        secs: 0.0,
+                    },
+                );
+            }),
         };
-        {
-            // Stop-check and push under one lock: shutdown() also sets
-            // `stop` under this lock, so a job can never slip into the
-            // queue after the serve loops were told to drain and exit
-            // (its waiter would hang forever).
-            let mut q = self.state.queue.lock().unwrap();
-            assert!(
-                !self.state.stop.load(Ordering::Acquire),
-                "LuServer::submit after shutdown"
-            );
-            q.push(job);
-            self.state.queued.store(q.len(), Ordering::Release);
-        }
-        JobHandle { id, state }
+        self.state.push(job);
+        JobHandle { id, state: jstate }
     }
 
-    /// Submit a whole batch and wait for every result (returned in
-    /// submission order).
-    pub fn factorize_batch(&self, reqs: Vec<LuRequest>) -> Vec<JobResult> {
-        let handles: Vec<JobHandle> = reqs.into_iter().map(|r| self.submit(r)).collect();
+    /// Enqueue a precision-selected linear-system solve (the
+    /// mixed-precision workload); returns immediately with a typed
+    /// handle.
+    pub fn submit_solve(&self, req: SolveRequest) -> JobHandle<SolveJobResult> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let jstate = JobState::<SolveJobResult>::new();
+        let now = Instant::now();
+        let priority = req.priority;
+        let prec = req.prec;
+        let run_state = Arc::clone(&jstate);
+        let abort_state = Arc::clone(&jstate);
+        let job = QueuedJob {
+            id,
+            seq: id,
+            priority,
+            run: Box::new(move |state: &ServerState| {
+                lead_solve(state, id, req, now, run_state);
+            }),
+            abort: Box::new(move || {
+                complete(
+                    &abort_state,
+                    SolveJobResult {
+                        id,
+                        prec,
+                        x: Vec::new(),
+                        refine_iters: 0,
+                        backward_error: f64::INFINITY,
+                        converged: false,
+                        cancelled: true,
+                        secs: 0.0,
+                    },
+                );
+            }),
+        };
+        self.state.push(job);
+        JobHandle { id, state: jstate }
+    }
+
+    /// Submit a whole batch (one precision) and wait for every result
+    /// (returned in submission order).
+    pub fn factorize_batch<S: Scalar>(&self, reqs: Vec<LuRequest<S>>) -> Vec<JobResult<S>> {
+        let handles: Vec<JobHandle<JobResult<S>>> =
+            reqs.into_iter().map(|r| self.submit(r)).collect();
         handles.into_iter().map(|h| h.wait()).collect()
     }
 
@@ -359,7 +513,8 @@ impl LuServer {
     /// serve loops. Called automatically on drop.
     pub fn shutdown(&self) {
         {
-            // Under the queue lock — see the pairing note in `submit`.
+            // Under the queue lock — see the pairing note in
+            // `ServerState::push`.
             let _q = self.state.queue.lock().unwrap();
             self.state.stop.store(true, Ordering::Release);
         }
@@ -375,11 +530,11 @@ impl Drop for LuServer {
     }
 }
 
-/// One-call batch entry point: factorize all matrices on a fresh server,
-/// returning results in input order.
-pub fn factorize_batch(mats: Vec<Matrix>, cfg: &ServeConfig) -> Vec<JobResult> {
+/// One-call batch entry point: factorize all matrices (one precision) on
+/// a fresh server, returning results in input order.
+pub fn factorize_batch<S: Scalar>(mats: Vec<Mat<S>>, cfg: &ServeConfig) -> Vec<JobResult<S>> {
     let server = LuServer::new(*cfg);
-    let reqs: Vec<LuRequest> = mats.into_iter().map(LuRequest::new).collect();
+    let reqs: Vec<LuRequest<S>> = mats.into_iter().map(LuRequest::new).collect();
     let out = server.factorize_batch(reqs);
     server.shutdown();
     out
@@ -391,29 +546,16 @@ fn serve_loop(state: &ServerState) {
     let backoff = Backoff::new();
     loop {
         if let Some(job) = state.pop() {
-            let jstate = Arc::clone(&job.state);
-            let id = job.id;
-            let kind = job.kind;
+            let QueuedJob {
+                id, run, abort, ..
+            } = job;
             // A panicking request must not wedge its waiter or leak its
             // registry entry (that would strand floaters on a dead crew).
-            let led =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| lead_job(state, job)));
+            let led = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(state)));
             if led.is_err() {
                 state.registry.unregister(id);
                 eprintln!("serve: request {id} panicked; reported as cancelled");
-                complete(
-                    &jstate,
-                    JobResult {
-                        id,
-                        kind,
-                        a: Matrix::zeros(0, 0),
-                        ipiv: Vec::new(),
-                        tau: Vec::new(),
-                        cols_done: 0,
-                        cancelled: true,
-                        secs: 0.0,
-                    },
-                );
+                abort();
             }
             backoff.reset();
             continue;
@@ -444,21 +586,26 @@ fn serve_loop(state: &ServerState) {
     }
 }
 
-/// Lead one request: register its crew, drive the factorization, fulfill
-/// the handle.
-fn lead_job(state: &ServerState, job: QueuedJob) {
-    let QueuedJob {
-        id,
-        kind,
+/// Lead one factorization request (either precision): register its crew,
+/// drive the factorization, fulfill the typed handle.
+fn lead_factor<S: Scalar>(
+    state: &ServerState,
+    id: u64,
+    req: LuRequest<S>,
+    submitted: Instant,
+    jstate: Arc<JobState<JobResult<S>>>,
+) {
+    let LuRequest {
         mut a,
+        kind,
+        priority,
+        deadline,
         bo,
         bi,
-        deadline,
-        submitted,
-        priority,
-        state: jstate,
-        ..
-    } = job;
+    } = req;
+    let bo = bo.unwrap_or(state.cfg.bo);
+    let bi = bi.unwrap_or(state.cfg.bi);
+    let deadline = deadline.map(|d| submitted + d);
     // A request cancelled (or expired) while still queued costs nothing;
     // the pool stays fully available to the rest of the batch. A
     // malformed problem (rectangular Cholesky) is rejected the same way
@@ -493,7 +640,7 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
         id,
         priority,
         crew.shared(),
-        kind.remaining_cost(&state.cfg.hw, m, n, 0, bo, bi),
+        kind.remaining_cost_prec::<S>(&state.cfg.hw, m, n, 0, bo, bi),
     ));
     state.registry.register(Arc::clone(&lease));
     let dcfg = driver::DriveCfg {
@@ -528,7 +675,124 @@ fn lead_job(state: &ServerState, job: QueuedJob) {
     );
 }
 
-fn complete(jstate: &JobState, result: JobResult) {
+/// Lead one solve request: register a crew lease priced at the chosen
+/// precision's flop rate, run the precision-selected solve (factor stage
+/// on the crew, refinement on the leader), fulfill the handle. Trace
+/// spans are tagged `req{id}:solve:{prec}`.
+fn lead_solve(
+    state: &ServerState,
+    id: u64,
+    req: SolveRequest,
+    submitted: Instant,
+    jstate: Arc<JobState<SolveJobResult>>,
+) {
+    let SolveRequest {
+        a,
+        b,
+        prec,
+        priority,
+        deadline,
+        bo,
+        bi,
+    } = req;
+    let bo = bo.unwrap_or(state.cfg.bo);
+    let bi = bi.unwrap_or(state.cfg.bi);
+    let deadline = deadline.map(|d| submitted + d);
+    let n = a.rows();
+    let malformed = a.cols() != n || b.len() != n;
+    let dead_on_arrival = jstate.cancel.load(Ordering::Acquire)
+        || deadline.is_some_and(|d| Instant::now() >= d)
+        || malformed;
+    if dead_on_arrival {
+        if malformed {
+            eprintln!(
+                "serve: solve request {id} rejected: need square A + matching rhs, got {}x{} / {}",
+                a.rows(),
+                a.cols(),
+                b.len()
+            );
+        }
+        let secs = submitted.elapsed().as_secs_f64();
+        complete(
+            &jstate,
+            SolveJobResult {
+                id,
+                prec,
+                x: Vec::new(),
+                refine_iters: 0,
+                backward_error: f64::INFINITY,
+                converged: false,
+                cancelled: true,
+                secs,
+            },
+        );
+        return;
+    }
+    let mut crew = Crew::with_arena(Arc::clone(&state.arena));
+    // The factor stage dominates; price it at the chosen precision's
+    // rate (mixed factors in f32).
+    let rate = match prec {
+        SolvePrec::F64 => 1.0,
+        SolvePrec::F32 | SolvePrec::Mixed => f32::FLOP_RATE,
+    };
+    let lease = Arc::new(Lease::new(
+        id,
+        priority,
+        crew.shared(),
+        FactorKind::Lu.remaining_cost(&state.cfg.hw, n, n, 0, bo, bi) / rate,
+    ));
+    state.registry.register(Arc::clone(&lease));
+    let tag = format!("req{id}:solve:{}", prec.name());
+    let hw = state.cfg.hw;
+    let lease2 = Arc::clone(&lease);
+    let cancel2 = &jstate.cancel;
+    // Deadline enforcement mirrors `drive`: every factor checkpoint
+    // folds an expired deadline into the cancel flag, which the factor
+    // stage polls between panel steps and the refiner polls between
+    // sweeps. (A deadline expiring inside a single O(n²) refinement
+    // sweep is caught at the next sweep boundary.)
+    let checkpoint = move |k: usize| {
+        lease2.set_remaining(FactorKind::Lu.remaining_cost(&hw, n, n, k, bo, bi) / rate);
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                cancel2.store(true, Ordering::Release);
+            }
+        }
+    };
+    let ctl = SolveCtl {
+        cancel: Some(cancel2),
+        tag: Some(&tag),
+        on_checkpoint: Some(&checkpoint),
+    };
+    let out = crate::solve::solve_system_ctl(
+        &mut crew,
+        &state.cfg.params,
+        prec,
+        &a,
+        &b,
+        bo,
+        bi,
+        &ctl,
+    );
+    state.registry.unregister(id);
+    crew.disband();
+    let secs = submitted.elapsed().as_secs_f64();
+    complete(
+        &jstate,
+        SolveJobResult {
+            id,
+            prec,
+            x: out.x,
+            refine_iters: out.refine_iters,
+            backward_error: out.backward_error,
+            converged: out.converged,
+            cancelled: out.cancelled,
+            secs,
+        },
+    );
+}
+
+fn complete<R>(jstate: &JobState<R>, result: R) {
     *jstate.done.lock().unwrap() = Some(result);
     jstate.cv.notify_all();
 }
@@ -553,17 +817,8 @@ mod tests {
             id,
             seq: id,
             priority,
-            kind: FactorKind::Lu,
-            a: Matrix::zeros(1, 1),
-            bo: 4,
-            bi: 2,
-            deadline: None,
-            submitted: Instant::now(),
-            state: Arc::new(JobState {
-                done: Mutex::new(None),
-                cv: Condvar::new(),
-                cancel: AtomicBool::new(false),
-            }),
+            run: Box::new(|_: &ServerState| {}),
+            abort: Box::new(|| {}),
         }
     }
 
@@ -623,6 +878,62 @@ mod tests {
             assert_eq!(res.ipiv, piv_ref, "req{} pivots", res.id);
         }
         assert!(server.registry().is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn f32_and_f64_requests_share_one_queue() {
+        let server = LuServer::new(tiny_cfg(2));
+        let n = 48;
+        let a64 = Matrix::random(n, n, 61);
+        let a32 = Mat::<f32>::random(n, n, 62);
+        let h64 = server.submit(LuRequest::new(a64.clone()));
+        let h32 = server.submit(LuRequest::new(a32.clone()));
+        let r64 = h64.wait();
+        let r32 = h32.wait();
+        assert!(!r64.cancelled && !r32.cancelled);
+        assert_eq!(r64.cols_done, n);
+        assert_eq!(r32.cols_done, n);
+        let res64 = naive::lu_residual(&a64, &r64.a, &r64.ipiv);
+        assert!(res64 < 1e-11, "f64 residual {res64}");
+        let res32 = naive::lu_residual(&a32, &r32.a, &r32.ipiv);
+        let tol32 = 8.0 * n as f64 * f32::EPSILON as f64;
+        assert!(res32 < tol32, "f32 residual {res32} tol {tol32}");
+        // Same seed stream: the f32 problem is the rounded image of the
+        // f64 one, and its pivots still match the f32 reference.
+        let mut g = a32.clone();
+        let piv_ref = naive::lu(g.view_mut());
+        assert_eq!(r32.ipiv, piv_ref, "f32 pivots");
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_solve_request_reaches_f64_accuracy() {
+        let server = LuServer::new(tiny_cfg(2));
+        let n = 48;
+        let a = Matrix::random_dd(n, 71);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.5) - 3.0).collect();
+        let mut b = vec![0.0; n];
+        for j in 0..n {
+            for i in 0..n {
+                b[i] += a[(i, j)] * x_true[j];
+            }
+        }
+        let h = server.submit_solve(SolveRequest::new(a.clone(), b.clone()));
+        let res = h.wait();
+        assert!(!res.cancelled);
+        assert!(res.converged, "backward error {}", res.backward_error);
+        assert_eq!(res.prec, SolvePrec::Mixed);
+        assert!(res.refine_iters >= 1);
+        let tol = 2.0 * n as f64 * f64::EPSILON * 16.0;
+        assert!(
+            res.backward_error < tol,
+            "solve backward error {} above {tol}",
+            res.backward_error
+        );
+        for (xi, ti) in res.x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
         server.shutdown();
     }
 
@@ -736,6 +1047,31 @@ mod tests {
         let a0 = Matrix::random(24, 24, 2);
         let ok = server.submit(LuRequest::new(a0.clone())).wait();
         assert!(!ok.cancelled);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_solve_deadline_is_cancelled() {
+        let server = LuServer::new(tiny_cfg(1));
+        let n = 48;
+        let a = Matrix::random_dd(n, 81);
+        let b = vec![1.0; n];
+        let h = server
+            .submit_solve(SolveRequest::new(a, b).with_deadline(Duration::from_secs(0)));
+        let res = h.wait();
+        assert!(res.cancelled);
+        assert!(!res.converged);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_solve_request_is_rejected_cleanly() {
+        let server = LuServer::new(tiny_cfg(1));
+        // rhs length mismatch
+        let h = server.submit_solve(SolveRequest::new(Matrix::random(16, 16, 1), vec![1.0; 8]));
+        let res = h.wait();
+        assert!(res.cancelled);
+        assert!(!res.converged);
         server.shutdown();
     }
 

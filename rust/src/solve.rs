@@ -1,0 +1,514 @@
+//! §solve — dense linear-system solvers over the precision layer,
+//! including the **mixed-precision iteratively-refined solve** the
+//! `Scalar` redesign exists to enable (DESIGN.md §12).
+//!
+//! Three paths, selected by [`SolvePrec`]:
+//!
+//! - [`SolvePrec::F64`] — factor and solve entirely in `f64` (the
+//!   classic path).
+//! - [`SolvePrec::F32`] — factor and solve entirely in `f32`; the
+//!   answer carries `f32`-level backward error (fast, for tolerant
+//!   consumers).
+//! - [`SolvePrec::Mixed`] — [`lu_solve_mixed`]: factor once in `f32`
+//!   (all O(n³) flops at the doubled SIMD width), then run classical
+//!   iterative refinement with the residual computed in `f64`:
+//!
+//!   ```text
+//!   factor P·A32 = L32·U32                 (O(n³), f32)
+//!   x ← promote(solve32(b))                (O(n²), f32)
+//!   repeat: r ← b − A·x                    (O(n²), f64)
+//!           x ← x + promote(solve32(r))    (O(n²), f32)
+//!   ```
+//!
+//!   **Convergence criterion** (the DESIGN.md §12 contract): stop when
+//!   the normwise backward error `‖r‖∞ / (‖A‖∞·‖x‖∞ + ‖b‖∞)` drops to
+//!   `≤ 2·n·ε_f64`, i.e. the solution is as backward-stable as a full
+//!   `f64` factorization; give up (`converged = false`) when the error
+//!   stops improving — the matrix is too ill-conditioned for `f32`
+//!   factors (κ(A) ≳ 1/ε_f32) — or after [`MAX_REFINE_ITERS`] sweeps.
+//!   For matrices `f32` can handle, the error contracts by ~κ(A)·ε_f32
+//!   per sweep, so 2–4 iterations reach `f64` accuracy while >99% of
+//!   the flops ran at `f32` speed.
+//!
+//! The factorization stage runs on the malleable blocked driver
+//! ([`crate::lu::lu_blocked_rl_ctl`]), so solves inherit crew
+//! malleability, arena-leased packing, and — through [`SolveCtl`] —
+//! request-level cancellation; the serve layer exposes the whole thing
+//! as a queue request kind (`LuServer::submit_solve`).
+
+use crate::blis::BlisParams;
+use crate::lu::{lu_blocked_rl_ctl, BlockedCtl};
+use crate::matrix::{Mat, Matrix};
+use crate::pool::Crew;
+use crate::scalar::Scalar;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Refinement-sweep cap: far above the 2–4 sweeps a well-conditioned
+/// system needs, low enough that a hopeless (κ ≳ 1/ε_f32) system fails
+/// fast.
+pub const MAX_REFINE_ITERS: usize = 40;
+
+/// Which arithmetic a solve runs in (`mlu solve --prec ...`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SolvePrec {
+    /// Factor and solve in `f32` (single-precision backward error).
+    F32,
+    /// Factor and solve in `f64` (the classic path).
+    F64,
+    /// Factor in `f32`, refine the residual in `f64` to `f64`-level
+    /// backward error ([`lu_solve_mixed`]).
+    Mixed,
+}
+
+impl SolvePrec {
+    /// Parse `f32` | `f64` | `mixed`.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "f32" | "single" => SolvePrec::F32,
+            "f64" | "double" => SolvePrec::F64,
+            "mixed" | "mp" => SolvePrec::Mixed,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (trace tags, bench records, CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolvePrec::F32 => "f32",
+            SolvePrec::F64 => "f64",
+            SolvePrec::Mixed => "mixed",
+        }
+    }
+
+    /// The backward-error level this path promises for a well-conditioned
+    /// system: `c·n·ε` with `ε` of the *result* precision (`f64` for the
+    /// mixed path — that is its whole point).
+    pub fn expected_backward_error(&self, n: usize) -> f64 {
+        let eps = match self {
+            SolvePrec::F32 => f32::EPSILON as f64,
+            SolvePrec::F64 | SolvePrec::Mixed => f64::EPSILON,
+        };
+        16.0 * (n as f64).max(1.0) * eps
+    }
+}
+
+/// Cooperative control for a cancellable solve (the serve layer's
+/// request-level ET, threaded through the factor stage and polled
+/// between refinement sweeps).
+#[derive(Default)]
+pub struct SolveCtl<'a> {
+    /// Polled by the factor stage between panel steps and by the refiner
+    /// between sweeps.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Trace label prefix (e.g. `req3:solve:mixed`).
+    pub tag: Option<&'a str>,
+    /// Called with committed factor columns after every panel step.
+    pub on_checkpoint: Option<&'a (dyn Fn(usize) + Sync)>,
+}
+
+/// Outcome of a [`solve_system`] / [`lu_solve_mixed`] call.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// The solution (always reported in `f64`, whatever the working
+    /// precision).
+    pub x: Vec<f64>,
+    /// Refinement sweeps performed (0 for the pure-precision paths).
+    pub refine_iters: usize,
+    /// Final normwise backward error `‖b−Ax‖∞ / (‖A‖∞·‖x‖∞ + ‖b‖∞)`,
+    /// computed in `f64`.
+    pub backward_error: f64,
+    /// Whether the path's convergence criterion was met (for `Mixed`:
+    /// `f64`-level backward error; for the pure paths: the factor ran to
+    /// completion).
+    pub converged: bool,
+    /// Whether a cancel flag cut the solve short.
+    pub cancelled: bool,
+    /// Columns of the factorization committed (== n unless cancelled).
+    pub cols_done: usize,
+}
+
+fn inf_norm_vec(v: &[f64]) -> f64 {
+    v.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+}
+
+fn inf_norm_mat(a: &Matrix) -> f64 {
+    let (m, n) = (a.rows(), a.cols());
+    let mut worst = 0.0f64;
+    for i in 0..m {
+        let mut row = 0.0f64;
+        for j in 0..n {
+            row += a[(i, j)].abs();
+        }
+        worst = worst.max(row);
+    }
+    worst
+}
+
+/// `r := b − A·x`, all in `f64`, sequential per element (deterministic).
+fn residual_vec(a: &Matrix, x: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = a.rows();
+    let mut r = b.to_vec();
+    for (j, &xj) in x.iter().enumerate() {
+        if xj == 0.0 {
+            continue;
+        }
+        for (i, ri) in r.iter_mut().enumerate().take(n) {
+            *ri -= a[(i, j)] * xj;
+        }
+    }
+    r
+}
+
+/// Error from a precomputed residual. Non-finite entries anywhere in
+/// `r` or `x` (an exactly-singular `f32` pivot yields inf/NaN through
+/// the substitution sweep) are reported as an **infinite** error — a
+/// plain `max` fold would silently drop NaNs and could declare a
+/// garbage solution converged.
+fn err_norm(r: &[f64], x: &[f64], anorm: f64, bnorm: f64) -> f64 {
+    if !r.iter().all(|v| v.is_finite()) || !x.iter().all(|v| v.is_finite()) {
+        return f64::INFINITY;
+    }
+    inf_norm_vec(r) / (anorm * inf_norm_vec(x) + bnorm).max(f64::MIN_POSITIVE)
+}
+
+/// Normwise backward error of a candidate solution (in `f64`; infinite
+/// when the candidate contains non-finite entries).
+pub fn backward_error(a: &Matrix, x: &[f64], b: &[f64]) -> f64 {
+    err_norm(
+        &residual_vec(a, x, b),
+        x,
+        inf_norm_mat(a),
+        inf_norm_vec(b),
+    )
+}
+
+/// Factor `a` (a copy, in precision `S`) on `crew` and back/forward
+/// substitute `b`. Returns `(x, factors, ipiv, cols_done, cancelled)`
+/// with `x` promoted to `f64` (empty when cancelled before completion);
+/// the factors and pivots feed the mixed-precision refiner.
+fn factor_and_solve<S: Scalar>(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: &Matrix,
+    b: &[f64],
+    bo: usize,
+    bi: usize,
+    ctl: &SolveCtl,
+) -> (Vec<f64>, Mat<S>, Vec<usize>, usize, bool) {
+    let n = a.rows();
+    let mut fac: Mat<S> = a.convert();
+    let bctl = BlockedCtl {
+        cancel: ctl.cancel,
+        tag: ctl.tag,
+        on_checkpoint: ctl.on_checkpoint,
+    };
+    let out = lu_blocked_rl_ctl(crew, params, fac.view_mut(), bo, bi, &bctl);
+    if out.cancelled || out.cols_done < n {
+        return (Vec::new(), fac, out.ipiv, out.cols_done, true);
+    }
+    let bs: Vec<S> = b.iter().map(|&v| S::from_f64(v)).collect();
+    let xs = crate::matrix::naive::lu_solve(&fac, &out.ipiv, &bs);
+    let x: Vec<f64> = xs.iter().map(|v| v.to_f64()).collect();
+    (x, fac, out.ipiv, out.cols_done, false)
+}
+
+/// Mixed-precision solve: `f32` factorization + `f64` iterative
+/// refinement (module docs). `a` must be square and `b.len() == n`.
+pub fn lu_solve_mixed(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: &Matrix,
+    b: &[f64],
+    bo: usize,
+    bi: usize,
+) -> SolveOutcome {
+    lu_solve_mixed_ctl(crew, params, a, b, bo, bi, &SolveCtl::default())
+}
+
+/// [`lu_solve_mixed`] with cooperative cancellation (see [`SolveCtl`]).
+#[allow(clippy::too_many_arguments)]
+pub fn lu_solve_mixed_ctl(
+    crew: &mut Crew,
+    params: &BlisParams,
+    a: &Matrix,
+    b: &[f64],
+    bo: usize,
+    bi: usize,
+    ctl: &SolveCtl,
+) -> SolveOutcome {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "lu_solve_mixed: square systems only");
+    assert_eq!(b.len(), n, "lu_solve_mixed: rhs length");
+    let (x0, fac, ipiv, cols_done, cancelled) =
+        factor_and_solve::<f32>(crew, params, a, b, bo, bi, ctl);
+    if cancelled {
+        return SolveOutcome {
+            x: x0,
+            refine_iters: 0,
+            backward_error: f64::INFINITY,
+            converged: false,
+            cancelled: true,
+            cols_done,
+        };
+    }
+    let mut x = x0;
+    let anorm = inf_norm_mat(a);
+    let bnorm = inf_norm_vec(b);
+    let tol = 2.0 * (n as f64).max(1.0) * f64::EPSILON;
+    let mut iters = 0;
+    let mut converged = false;
+    let mut was_cancelled = false;
+    let mut prev_err = f64::INFINITY;
+    let mut err;
+    loop {
+        // One O(n²) residual pass per sweep: it serves both the
+        // convergence test for the current x and — when another sweep
+        // runs — the correction right-hand side.
+        let r = residual_vec(a, &x, b);
+        err = err_norm(&r, &x, anorm, bnorm);
+        if err <= tol {
+            converged = true;
+            break;
+        }
+        // Stagnation: refinement contracts by ~κ·ε_f32 per sweep; once a
+        // sweep stops shrinking the error the matrix is beyond what the
+        // f32 factors can correct (this also catches a non-finite err
+        // from an exactly-singular f32 pivot immediately).
+        if err >= prev_err * 0.9 || iters >= MAX_REFINE_ITERS {
+            break;
+        }
+        if let Some(c) = ctl.cancel {
+            if c.load(Ordering::Acquire) {
+                was_cancelled = true;
+                break;
+            }
+        }
+        // Correction: d solves A32·d = r with the f32 factors.
+        let r32: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        let d = crate::matrix::naive::lu_solve(&fac, &ipiv, &r32);
+        for (xi, di) in x.iter_mut().zip(&d) {
+            *xi += *di as f64;
+        }
+        iters += 1;
+        prev_err = err;
+    }
+    SolveOutcome {
+        x,
+        refine_iters: iters,
+        backward_error: err,
+        converged,
+        cancelled: was_cancelled,
+        cols_done,
+    }
+}
+
+/// Solve `A·x = b` in the requested precision (the `mlu solve --prec`
+/// entry point). See the module docs for the three paths.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_system_ctl(
+    crew: &mut Crew,
+    params: &BlisParams,
+    prec: SolvePrec,
+    a: &Matrix,
+    b: &[f64],
+    bo: usize,
+    bi: usize,
+    ctl: &SolveCtl,
+) -> SolveOutcome {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "solve_system: square systems only");
+    assert_eq!(b.len(), n, "solve_system: rhs length");
+    match prec {
+        SolvePrec::Mixed => lu_solve_mixed_ctl(crew, params, a, b, bo, bi, ctl),
+        SolvePrec::F64 => {
+            let (x, _fac, _ipiv, cols_done, cancelled) =
+                factor_and_solve::<f64>(crew, params, a, b, bo, bi, ctl);
+            let err = if cancelled {
+                f64::INFINITY
+            } else {
+                backward_error(a, &x, b)
+            };
+            SolveOutcome {
+                x,
+                refine_iters: 0,
+                backward_error: err,
+                converged: !cancelled,
+                cancelled,
+                cols_done,
+            }
+        }
+        SolvePrec::F32 => {
+            let (x, _fac, _ipiv, cols_done, cancelled) =
+                factor_and_solve::<f32>(crew, params, a, b, bo, bi, ctl);
+            let err = if cancelled {
+                f64::INFINITY
+            } else {
+                backward_error(a, &x, b)
+            };
+            SolveOutcome {
+                x,
+                refine_iters: 0,
+                backward_error: err,
+                converged: !cancelled,
+                cancelled,
+                cols_done,
+            }
+        }
+    }
+}
+
+/// [`solve_system_ctl`] without cancellation plumbing.
+pub fn solve_system(
+    crew: &mut Crew,
+    params: &BlisParams,
+    prec: SolvePrec,
+    a: &Matrix,
+    b: &[f64],
+    bo: usize,
+    bi: usize,
+) -> SolveOutcome {
+    solve_system_ctl(crew, params, prec, a, b, bo, bi, &SolveCtl::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rhs_for(a: &Matrix, x_true: &[f64]) -> Vec<f64> {
+        let n = a.rows();
+        let mut b = vec![0.0; n];
+        for (j, &xj) in x_true.iter().enumerate() {
+            for (i, bi) in b.iter_mut().enumerate().take(n) {
+                *bi += a[(i, j)] * xj;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn prec_parse_roundtrip() {
+        for (s, p) in [
+            ("f32", SolvePrec::F32),
+            ("F64", SolvePrec::F64),
+            ("mixed", SolvePrec::Mixed),
+            ("mp", SolvePrec::Mixed),
+            ("single", SolvePrec::F32),
+        ] {
+            assert_eq!(SolvePrec::parse(s), Some(p));
+        }
+        assert_eq!(SolvePrec::parse("f16"), None);
+        assert_eq!(SolvePrec::Mixed.name(), "mixed");
+    }
+
+    #[test]
+    fn mixed_reaches_f64_backward_error_on_f32_work() {
+        // The ISSUE acceptance shape: O(n³) in f32, f64-level answer.
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        for n in [48usize, 96] {
+            let a = Matrix::random_dd(n, 11 + n as u64);
+            let x_true: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) - 4.0).collect();
+            let b = rhs_for(&a, &x_true);
+            let out = lu_solve_mixed(&mut crew, &params, &a, &b, 16, 4);
+            assert!(out.converged, "n={n}: not converged (err {})", out.backward_error);
+            assert!(!out.cancelled);
+            assert_eq!(out.cols_done, n);
+            assert!(out.refine_iters >= 1, "refinement must actually run");
+            let tol = 2.0 * n as f64 * f64::EPSILON * 16.0;
+            assert!(
+                out.backward_error < tol,
+                "n={n}: backward error {} above f64 level {tol}",
+                out.backward_error
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_beats_pure_f32_by_orders_of_magnitude() {
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let n = 64;
+        let a = Matrix::random(n, n, 5);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = rhs_for(&a, &x_true);
+        let f32_out = solve_system(&mut crew, &params, SolvePrec::F32, &a, &b, 16, 4);
+        let mix_out = solve_system(&mut crew, &params, SolvePrec::Mixed, &a, &b, 16, 4);
+        assert!(f32_out.converged && mix_out.converged);
+        assert!(
+            mix_out.backward_error < f32_out.backward_error / 100.0,
+            "mixed {} vs f32 {}",
+            mix_out.backward_error,
+            f32_out.backward_error
+        );
+    }
+
+    #[test]
+    fn all_precisions_meet_their_own_tolerance() {
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let n = 56;
+        let a = Matrix::random_dd(n, 9);
+        let x_true: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let b = rhs_for(&a, &x_true);
+        for prec in [SolvePrec::F32, SolvePrec::F64, SolvePrec::Mixed] {
+            let out = solve_system(&mut crew, &params, prec, &a, &b, 16, 4);
+            assert!(out.converged, "{}", prec.name());
+            let tol = prec.expected_backward_error(n);
+            assert!(
+                out.backward_error < tol,
+                "{}: err {} tol {tol}",
+                prec.name(),
+                out.backward_error
+            );
+            // And the x itself is close for the well-conditioned system.
+            for (xi, ti) in out.x.iter().zip(&x_true) {
+                let xtol = if prec == SolvePrec::F32 { 1e-3 } else { 1e-8 };
+                assert!((xi - ti).abs() < xtol, "{}: |Δx|", prec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cancelled_solve_reports_cancelled() {
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let n = 48;
+        let a = Matrix::random_dd(n, 3);
+        let b = vec![1.0; n];
+        let cancel = AtomicBool::new(true);
+        let ctl = SolveCtl {
+            cancel: Some(&cancel),
+            ..Default::default()
+        };
+        let out = solve_system_ctl(&mut crew, &params, SolvePrec::Mixed, &a, &b, 16, 4, &ctl);
+        assert!(out.cancelled);
+        assert!(!out.converged);
+        assert!(out.cols_done < n);
+    }
+
+    #[test]
+    fn f32_singular_pivot_fails_cleanly_instead_of_converging_on_nan() {
+        // diag(1e-50, 1): nonsingular in f64, but the tiny pivot rounds
+        // to 0.0f32 — the f32 substitution sweep produces NaN/inf. The
+        // solver must report failure, not fold the NaNs away and claim
+        // convergence.
+        let params = BlisParams::tiny();
+        let mut crew = Crew::new();
+        let a = Matrix::from_rows(2, 2, &[1e-50, 0.0, 0.0, 1.0]);
+        let b = vec![1e-50, 1.0];
+        let out = lu_solve_mixed(&mut crew, &params, &a, &b, 16, 4);
+        assert!(!out.converged, "must not converge through NaNs");
+        assert!(
+            !out.backward_error.is_finite(),
+            "backward error {} should be infinite",
+            out.backward_error
+        );
+    }
+
+    #[test]
+    fn backward_error_of_exact_solution_is_zero() {
+        let a = Matrix::eye(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(backward_error(&a, &b, &b), 0.0);
+    }
+}

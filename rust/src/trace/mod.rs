@@ -72,7 +72,8 @@ pub struct Span {
     pub lane: usize,
     /// Task class (panel, swap, trsm, gemm, ...).
     pub kind: Kind,
-    /// Free-form label; serve drivers prefix it with `req<id>:<kind>.`.
+    /// Free-form label; serve drivers prefix it with
+    /// `req<id>:<kind>:<prec>.`.
     pub label: String,
     /// Seconds since the recorder's origin.
     pub t0: f64,
@@ -209,8 +210,9 @@ pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
 
 /// Render spans as a multi-problem Gantt: one lane per *request*, keyed
 /// by the label prefix up to the first `.` when it is a request tag
-/// (`req<id>:<kind>`, as emitted by the serve layer's drivers — the lane
-/// label therefore names the factorization kind, e.g. `req3:qr`, instead
+/// (`req<id>:<kind>:<prec>`, as emitted by the serve layer's drivers —
+/// the lane label therefore names the factorization kind and working
+/// precision, e.g. `req3:qr:f32`, instead
 /// of implying every lane is an LU); untagged spans share an `(other)`
 /// lane. Where [`ascii_gantt`] answers "what was each worker doing", this
 /// view answers "how did each problem's lifetime overlap the others' on

@@ -1,0 +1,250 @@
+//! Precision-layer integration tests (ISSUE 4 acceptance):
+//!
+//! - every factorization kind runs through the generic drivers in both
+//!   sealed precisions, with residuals bounded by tolerances scaled to
+//!   the working type's `EPSILON` (not hard-coded 1e-12s);
+//! - `f32` results are crew-size- and kernel-bitwise deterministic,
+//!   mirroring the long-standing `f64` guarantees;
+//! - the mixed-precision solve does its O(n³) work in `f32` yet lands at
+//!   `f64`-level backward error (`‖Ax−b‖/(‖A‖‖x‖+‖b‖) < c·n·ε_f64`);
+//! - `f32` and `f64` requests (and mixed solve requests) flow through
+//!   one serve queue.
+
+use malleable_lu::blis::micro::{set_kernel, simd_available, Kernel};
+use malleable_lu::blis::BlisParams;
+use malleable_lu::factor::{factorize_lookahead, FactorKind, LaOpts};
+use malleable_lu::lu::lu_blocked_rl;
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::pool::{Crew, Pool};
+use malleable_lu::scalar::Scalar;
+use malleable_lu::serve::{LuRequest, LuServer, ServeConfig, SolveRequest};
+use malleable_lu::solve::{lu_solve_mixed, solve_system, SolvePrec};
+
+/// `c·n·ε` residual tolerance for working precision `S`.
+fn tol<S: Scalar>(n: usize, c: f64) -> f64 {
+    c * (n as f64).max(1.0) * S::EPSILON.to_f64()
+}
+
+fn input_for<S: Scalar>(kind: FactorKind, n: usize, seed: u64) -> Mat<S> {
+    match kind {
+        FactorKind::Chol => Mat::<S>::random_spd(n, seed),
+        _ => Mat::<S>::random(n, n, seed),
+    }
+}
+
+fn residual_of<S: Scalar>(
+    kind: FactorKind,
+    a0: &Mat<S>,
+    f: &Mat<S>,
+    ipiv: &[usize],
+    tau: &[S],
+) -> f64 {
+    match kind {
+        FactorKind::Lu => naive::lu_residual(a0, f, ipiv),
+        FactorKind::Chol => naive::chol_residual(a0, f),
+        FactorKind::Qr => naive::qr_residual(a0, f, tau),
+    }
+}
+
+/// Every kind × both precisions through the generic WS+ET look-ahead
+/// driver, with EPSILON-scaled tolerances.
+fn lookahead_all_kinds<S: Scalar>() {
+    let pool = Pool::new(2);
+    let params = BlisParams::tiny();
+    let opts = LaOpts {
+        malleable: true,
+        early_term: true,
+        ..Default::default()
+    };
+    for &kind in FactorKind::all() {
+        let n = 56;
+        let a0 = input_for::<S>(kind, n, 7);
+        let mut f = a0.clone();
+        let out = factorize_lookahead(kind, &pool, &params, &mut f, 16, 4, &opts, None);
+        assert!(!out.cancelled, "{} {}", kind.name(), S::NAME);
+        assert_eq!(out.cols_done, n, "{} {}", kind.name(), S::NAME);
+        let r = residual_of(kind, &a0, &f, &out.ipiv, &out.tau);
+        let t = tol::<S>(n, 16.0);
+        assert!(
+            r < t,
+            "{} {}: residual {r} above {t}",
+            kind.name(),
+            S::NAME
+        );
+    }
+}
+
+#[test]
+fn lookahead_all_kinds_f64() {
+    lookahead_all_kinds::<f64>();
+}
+
+#[test]
+fn lookahead_all_kinds_f32() {
+    lookahead_all_kinds::<f32>();
+}
+
+/// The f32 blocked LU is bitwise identical across crew sizes — the §8
+/// determinism invariant holds per precision.
+#[test]
+fn f32_blocked_lu_bitwise_across_crew_sizes() {
+    use malleable_lu::pool::EntryPolicy;
+    let a0 = Mat::<f32>::random(72, 72, 9);
+    let params = BlisParams::tiny();
+
+    let mut f1 = a0.clone();
+    let mut crew1 = Crew::new();
+    let p1 = lu_blocked_rl(&mut crew1, &params, f1.view_mut(), 16, 4);
+
+    let mut f2 = a0.clone();
+    let mut crew2 = Crew::new();
+    let shared = crew2.shared();
+    let hs: Vec<_> = (0..3)
+        .map(|_| {
+            let s = std::sync::Arc::clone(&shared);
+            std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+        })
+        .collect();
+    let p2 = lu_blocked_rl(&mut crew2, &params, f2.view_mut(), 16, 4);
+    crew2.disband();
+    for h in hs {
+        h.join().unwrap();
+    }
+    assert_eq!(p1, p2);
+    for (x, y) in f1.data().iter().zip(f2.data()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// SIMD vs portable kernels give bitwise-identical f32 factorizations
+/// (mirrors the f64 guarantee in `perf_invariants.rs`).
+#[test]
+fn f32_lu_bitwise_across_kernels() {
+    if !simd_available() {
+        eprintln!("skipping: host has no AVX2+FMA");
+        return;
+    }
+    let a0 = Mat::<f32>::random(64, 64, 11);
+    let params = BlisParams::tiny();
+    let run = |kernel: Kernel| {
+        set_kernel(kernel);
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let piv = lu_blocked_rl(&mut crew, &params, f.view_mut(), 16, 4);
+        set_kernel(Kernel::Auto);
+        (f, piv)
+    };
+    let (f_simd, p_simd) = run(Kernel::Simd);
+    let (f_port, p_port) = run(Kernel::Portable);
+    assert_eq!(p_simd, p_port);
+    for (x, y) in f_simd.data().iter().zip(f_port.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "f32 kernel mismatch");
+    }
+}
+
+/// The acceptance criterion of ISSUE 4: `lu_solve_mixed` factors in f32
+/// yet reaches f64-level backward error.
+#[test]
+fn mixed_solve_reaches_f64_backward_error() {
+    let params = BlisParams::tiny();
+    let mut crew = Crew::new();
+    for (n, seed) in [(64usize, 3u64), (96, 4)] {
+        let a = Matrix::random_dd(n, seed);
+        let x_true: Vec<f64> = (0..n).map(|i| ((i % 11) as f64) - 5.0).collect();
+        let mut b = vec![0.0; n];
+        for j in 0..n {
+            for i in 0..n {
+                b[i] += a[(i, j)] * x_true[j];
+            }
+        }
+        let out = lu_solve_mixed(&mut crew, &params, &a, &b, 16, 4);
+        assert!(out.converged, "n={n}: err {}", out.backward_error);
+        assert!(out.refine_iters >= 1, "refinement must run");
+        // f64-level: < c·n·ε_f64, far beyond anything f32 can do alone.
+        let t = tol::<f64>(n, 16.0);
+        assert!(
+            out.backward_error < t,
+            "n={n}: backward error {} above {t}",
+            out.backward_error
+        );
+        // And far below the f32 floor.
+        assert!(out.backward_error < tol::<f32>(n, 1.0) / 100.0);
+    }
+}
+
+/// Precision ladder: each path meets its own tolerance and mixed ≈ f64.
+#[test]
+fn solve_precision_ladder() {
+    let params = BlisParams::tiny();
+    let mut crew = Crew::new();
+    let n = 72;
+    let a = Matrix::random_dd(n, 21);
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+    let e32 = solve_system(&mut crew, &params, SolvePrec::F32, &a, &b, 16, 4).backward_error;
+    let e64 = solve_system(&mut crew, &params, SolvePrec::F64, &a, &b, 16, 4).backward_error;
+    let emx = solve_system(&mut crew, &params, SolvePrec::Mixed, &a, &b, 16, 4).backward_error;
+    assert!(e32 < tol::<f32>(n, 16.0), "f32 err {e32}");
+    assert!(e64 < tol::<f64>(n, 16.0), "f64 err {e64}");
+    assert!(emx < tol::<f64>(n, 16.0), "mixed err {emx}");
+    assert!(emx < e32, "mixed must beat pure f32");
+}
+
+/// f32, f64, and mixed-solve requests interleave in one server queue.
+#[test]
+fn serve_queue_is_precision_heterogeneous() {
+    let server = LuServer::new(ServeConfig {
+        workers: 2,
+        bo: 16,
+        bi: 4,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    });
+    let n = 48;
+    let a64 = Matrix::random(n, n, 31);
+    let a32 = Mat::<f32>::random(n, n, 32);
+    let spd32 = Mat::<f32>::random_spd(n, 33);
+    let asys = Matrix::random_dd(n, 34);
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+
+    let h64 = server.submit(LuRequest::new(a64.clone()));
+    let h32 = server.submit(LuRequest::new(a32.clone()));
+    let hch = server.submit(LuRequest::new(spd32.clone()).with_kind(FactorKind::Chol));
+    let hsv = server.submit_solve(SolveRequest::new(asys.clone(), b.clone()));
+
+    let r64 = h64.wait();
+    assert!(!r64.cancelled);
+    assert!(naive::lu_residual(&a64, &r64.a, &r64.ipiv) < tol::<f64>(n, 16.0));
+
+    let r32 = h32.wait();
+    assert!(!r32.cancelled);
+    assert!(naive::lu_residual(&a32, &r32.a, &r32.ipiv) < tol::<f32>(n, 16.0));
+
+    let rch = hch.wait();
+    assert!(!rch.cancelled, "f32 cholesky request cancelled");
+    assert!(naive::chol_residual(&spd32, &rch.a) < tol::<f32>(n, 16.0));
+
+    let rsv = hsv.wait();
+    assert!(!rsv.cancelled && rsv.converged);
+    assert!(rsv.backward_error < tol::<f64>(n, 16.0));
+    assert_eq!(rsv.prec, SolvePrec::Mixed);
+
+    server.shutdown();
+}
+
+/// Cross-precision consistency: the f32 factorization of a well-
+/// conditioned matrix agrees with the f64 one to f32 accuracy (same
+/// pivots on the same rounded data is NOT guaranteed in general, but the
+/// factors of the rounded problem must reconstruct the rounded matrix).
+#[test]
+fn f32_factors_reconstruct_rounded_problem() {
+    let n = 80;
+    let a64 = Matrix::random_dd(n, 41);
+    let a32: Mat<f32> = a64.convert();
+    let params = BlisParams::tiny();
+    let mut f = a32.clone();
+    let mut crew = Crew::new();
+    let ipiv = lu_blocked_rl(&mut crew, &params, f.view_mut(), 16, 4);
+    let r = naive::lu_residual(&a32, &f, &ipiv);
+    assert!(r < tol::<f32>(n, 16.0), "residual {r}");
+    assert!(naive::growth_bounded(&f));
+}
