@@ -1,0 +1,200 @@
+//! Steal-on vs steal-off throughput on deliberately imbalanced
+//! wide-and-short trailing updates (ISSUE 5, DESIGN.md §13).
+//!
+//! The shape is the look-ahead trailing update once the panel narrows:
+//! tall `C` (many Loop-5 micro-panel rows), few Loop-4 columns — the
+//! grid where a static partition leaves stragglers whenever the roster
+//! is uneven. Imbalance is injected two ways:
+//!
+//! - a *churn* lane where members enlist under short quota leases,
+//!   leave, and rejoin mid-GEMM, so the roster at arm time rarely
+//!   matches the roster that finishes the job (the WS / serve-lease
+//!   resize scenario the hybrid scheduler exists for);
+//! - a *steady* lane with a fixed roster as the contention baseline.
+//!
+//! Emits machine-readable `BENCH_steal.json` (same schema family as
+//! `BENCH_blis.json`) with per-lane GFLOPS for `off` / `auto` / fully
+//! static, plus the headline `steal_on_over_off` aggregate ratio on the
+//! imbalanced lane. A soft ≥ 0.9× floor guards against the hybrid path
+//! regressing; the real ratio is what CI archives.
+//!
+//! Usage: `cargo bench --bench bench_steal -- [--quick] [--out FILE]`
+
+use malleable_lu::blis::{gemm, BlisParams, StealPolicy};
+use malleable_lu::cli::Args;
+use malleable_lu::matrix::Matrix;
+use malleable_lu::pool::{Crew, EntryPolicy};
+use malleable_lu::util::json::Value;
+use malleable_lu::util::stats::bench_seconds;
+use malleable_lu::util::{gemm_flops, gflops};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct Report {
+    records: Vec<Value>,
+}
+
+impl Report {
+    fn push(&mut self, name: &str, shape: &[usize], members: usize, steal: &str, gf: f64) {
+        self.records.push(Value::obj([
+            ("name", Value::Str(name.to_string())),
+            (
+                "shape",
+                Value::Arr(shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+            ),
+            ("members", Value::Num(members as f64)),
+            ("steal", Value::Str(steal.to_string())),
+            ("gflops", Value::Num(gf)),
+        ]));
+    }
+}
+
+/// Measure repeated `C += A·B` on a crew with `members` enlisted
+/// helpers. With `churn`, the helpers cycle through short quota leases
+/// instead of staying enlisted — the imbalanced lane.
+fn bench_lane(
+    report: &mut Report,
+    name: &str,
+    (m, n, k): (usize, usize, usize),
+    members: usize,
+    churn: bool,
+    steal: StealPolicy,
+) -> f64 {
+    let params = BlisParams::auto().with_steal(steal);
+    let a = Matrix::random(m, k, 1);
+    let b = Matrix::random(k, n, 2);
+    let mut c = Matrix::zeros(m, n);
+    let mut crew = Crew::new();
+    let shared = crew.shared();
+    let stop = Arc::new(AtomicBool::new(false));
+    let helpers: Vec<_> = (0..members)
+        .map(|i| {
+            let s = Arc::clone(&shared);
+            let st = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                if churn {
+                    while !st.load(Ordering::Acquire) {
+                        let quota = AtomicUsize::new(0);
+                        let st2 = Arc::clone(&st);
+                        s.member_loop_while(EntryPolicy::JobBoundary, move || {
+                            quota.fetch_add(1, Ordering::Relaxed) < 64 + 32 * i
+                                && !st2.load(Ordering::Acquire)
+                        });
+                    }
+                } else {
+                    let st2 = Arc::clone(&st);
+                    s.member_loop_while(EntryPolicy::JobBoundary, move || {
+                        !st2.load(Ordering::Acquire)
+                    });
+                }
+            })
+        })
+        .collect();
+    if !churn {
+        while crew.members() < members {
+            std::thread::yield_now();
+        }
+    }
+    let st = bench_seconds(1, 3, || {
+        gemm(&mut crew, &params, 1.0, a.view(), b.view(), c.view_mut());
+    });
+    stop.store(true, Ordering::Release);
+    crew.disband();
+    for h in helpers {
+        h.join().unwrap();
+    }
+    let gf = gflops(gemm_flops(m, n, k), st.median);
+    println!(
+        "{name} {m}x{n}x{k} members={members} steal={}: {gf:.2} GFLOPS",
+        steal.name()
+    );
+    report.push(name, &[m, n, k], members, &steal.name(), gf);
+    gf
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_steal.json");
+    let mut report = Report {
+        records: Vec::new(),
+    };
+
+    // Wide-and-short trailing-update shapes: tall C, narrow Loop 4.
+    let shape = if quick { (768, 24, 64) } else { (3072, 48, 128) };
+    let members = 3;
+
+    // Imbalanced lane: roster churns mid-GEMM.
+    let churn_off = bench_lane(
+        &mut report,
+        "trailing_churn",
+        shape,
+        members,
+        true,
+        StealPolicy::Off,
+    );
+    let churn_auto = bench_lane(
+        &mut report,
+        "trailing_churn",
+        shape,
+        members,
+        true,
+        StealPolicy::Auto,
+    );
+    let _ = bench_lane(
+        &mut report,
+        "trailing_churn",
+        shape,
+        members,
+        true,
+        StealPolicy::Fraction(1000),
+    );
+
+    // Steady-roster lane: contention baseline.
+    let steady_off = bench_lane(
+        &mut report,
+        "trailing_steady",
+        shape,
+        members,
+        false,
+        StealPolicy::Off,
+    );
+    let steady_auto = bench_lane(
+        &mut report,
+        "trailing_steady",
+        shape,
+        members,
+        false,
+        StealPolicy::Auto,
+    );
+
+    let ratio_churn = churn_auto / churn_off.max(1e-9);
+    let ratio_steady = steady_auto / steady_off.max(1e-9);
+    println!("imbalanced lane steal-on/off ratio: {ratio_churn:.3}");
+    println!("steady lane steal-on/off ratio:     {ratio_steady:.3}");
+
+    if out_path != "-" {
+        let doc = Value::obj([
+            ("bench", Value::Str("steal".into())),
+            ("quick", Value::Bool(quick)),
+            ("steal_on_over_off", Value::Num(ratio_churn)),
+            ("steal_on_over_off_steady", Value::Num(ratio_steady)),
+            ("records", Value::Arr(report.records)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+
+    // Anti-regression floor: the hybrid schedule runs the identical tile
+    // set, so it must stay within noise of the central ticket even on a
+    // 1-core container (where both serialize); the win shows up as
+    // ratio > 1 on real multi-core hosts with churn. The floor is only
+    // *asserted* on full (non-quick) runs — the CI smoke lane's tiny
+    // shapes on an oversubscribed shared runner are too noisy for a
+    // hard gate, so there the ratio is archived and merely warned on.
+    if ratio_churn <= 0.9 {
+        let msg = format!("steal-on imbalanced lane ratio {ratio_churn:.3} below 0.9 floor");
+        assert!(quick, "{msg}");
+        println!("warning: {msg} (quick mode: not enforced)");
+    }
+}

@@ -18,6 +18,16 @@
 //! however many workers are present, and the WS join point stays at the
 //! Loop-3 (`i_c`) job boundary.
 //!
+//! *How* the chunk grid is distributed is governed by
+//! [`BlisParams::steal`] (DESIGN.md §13): the default hybrid
+//! static/dynamic schedule gives each crew member a statically owned
+//! prefix of the grid (contention-free, locality-stable) plus a shared
+//! dynamic tail that idle members — including workers freshly absorbed
+//! via WS or re-leased by the serve registry — drain and then steal
+//! from other members' slices. `StealPolicy::Off` restores the central
+//! ticket. Both schedules execute the identical set of chunks, so
+//! results are bitwise equal either way (`tests/steal_agree.rs`).
+//!
 //! Packed `A_c`/`B_c` buffers are leased from the crew's
 //! [`super::arena::PackArena`] (and returned before `gemm` exits), so the
 //! steady-state factorization stream performs no heap allocation here —
@@ -94,7 +104,7 @@ pub fn gemm<S: Scalar>(
                 span(Kind::Pack, "pack_a", || {
                     pack_a(crew, a.sub(ic, pc, mc_eff, kc_eff), &mut pa);
                 });
-                macro_kernel(crew, alpha, &pa, &pb, c.sub(ic, jc, mc_eff, nc_eff));
+                macro_kernel(crew, params, alpha, &pa, &pb, c.sub(ic, jc, mc_eff, nc_eff));
                 ic += mc_eff;
             }
             pc += kc_eff;
@@ -109,8 +119,16 @@ pub fn gemm<S: Scalar>(
 /// Loops 4+5: sweep the packed `B_c` micro-panels (Loop 4, parallelized)
 /// against the packed `A_c` micro-panels (Loop 5, split into blocks when
 /// Loop 4 alone has fewer chunks than the team wants — see module docs).
+///
+/// The tile grid is scheduled by `params.steal` (DESIGN.md §13): under
+/// the hybrid policy each current crew member owns a static prefix of
+/// the `(j_r, i_r)` grid and the tail is stolen dynamically; under
+/// [`crate::blis::StealPolicy::Off`] every chunk is claimed from the
+/// central ticket. Either way each chunk is a disjoint set of `C` tiles
+/// with sequential `k`-reductions, so the schedule cannot perturb bits.
 fn macro_kernel<S: Scalar>(
     crew: &mut Crew,
+    params: &BlisParams,
     alpha: S,
     pa: &PackedA<S>,
     pb: &PackedB<S>,
@@ -136,7 +154,7 @@ fn macro_kernel<S: Scalar>(
     let ir_block = n_ir.div_ceil(ir_splits);
     let n_ib = n_ir.div_ceil(ir_block);
 
-    crew.parallel(n_jr * n_ib, |chunk| {
+    crew.parallel_steal(n_jr * n_ib, params.steal, |chunk| {
         let jr = chunk / n_ib;
         let ib = chunk % n_ib;
         let j0 = jr * NR;
@@ -344,6 +362,56 @@ mod tests {
         let params = BlisParams::default();
         for &(m, n, k) in &[(300usize, 5usize, 40usize), (257, NR, 13), (512, 1, 7)] {
             check(m, n, k, -1.0, &params, (m + n + k) as u64);
+        }
+    }
+
+    #[test]
+    fn steal_on_and_off_are_bitwise_identical() {
+        use crate::blis::StealPolicy;
+        // The tentpole invariant at the GEMM level: the hybrid
+        // static/dynamic schedule moves tile ownership, never tile
+        // content, so every steal policy produces the same bits — with
+        // and without members, in the wide-and-short shapes where the
+        // static slices actually matter.
+        for &(m, n, k) in &[(150usize, 9usize, 33usize), (67, 53, 45)] {
+            let a = Matrix::random(m, k, 81);
+            let b = Matrix::random(k, n, 82);
+            let run = |steal: StealPolicy, members: usize| -> Matrix {
+                let params = BlisParams::tiny().with_steal(steal);
+                let mut c = Matrix::random(m, n, 83);
+                let mut crew = Crew::new();
+                let shared = crew.shared();
+                let hs: Vec<_> = (0..members)
+                    .map(|_| {
+                        let s = std::sync::Arc::clone(&shared);
+                        std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+                    })
+                    .collect();
+                gemm(&mut crew, &params, -1.0, a.view(), b.view(), c.view_mut());
+                crew.disband();
+                for h in hs {
+                    h.join().unwrap();
+                }
+                c
+            };
+            let base = run(StealPolicy::Off, 0);
+            for members in [0usize, 3] {
+                for steal in [
+                    StealPolicy::Off,
+                    StealPolicy::Auto,
+                    StealPolicy::Fraction(1000),
+                    StealPolicy::Fraction(200),
+                ] {
+                    let c = run(steal, members);
+                    for (x, y) in base.data().iter().zip(c.data()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "m={m} n={n} k={k} steal={steal:?} members={members}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -59,6 +59,6 @@ pub use arena::{AlignedBuf, ArenaStats, PackArena};
 pub use gemm::gemm;
 pub use laswp::laswp;
 pub use micro::{set_kernel, Kernel};
-pub use params::{BlisParams, CacheInfo};
+pub use params::{BlisParams, CacheInfo, StealPolicy};
 pub use syrk::syrk_ln;
 pub use trsm::{trsm_llu, trsm_rltn};

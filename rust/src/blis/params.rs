@@ -25,6 +25,8 @@ pub const NR: usize = 6;
 /// to amortize the per-strip pivot-sequence walk.
 pub const COL_STRIP: usize = 32;
 
+pub use crate::pool::steal::StealPolicy;
+
 /// Cache-blocking parameters for the five-loop GEMM.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct BlisParams {
@@ -34,6 +36,11 @@ pub struct BlisParams {
     pub kc: usize,
     /// Loop-1 block (columns of `B_c`, sized for L3 residency).
     pub nc: usize,
+    /// How the macro-kernel's tile grid is scheduled across the crew:
+    /// hybrid static/dynamic tile-stealing (DESIGN.md §13) or the
+    /// central-ticket baseline. Bitwise-neutral by construction; `mlu
+    /// --steal off|auto|<fraction>` overrides.
+    pub steal: StealPolicy,
 }
 
 impl Default for BlisParams {
@@ -43,6 +50,7 @@ impl Default for BlisParams {
             mc: 96,
             kc: 256,
             nc: 4092,
+            steal: StealPolicy::default(),
         }
     }
 }
@@ -55,7 +63,15 @@ impl BlisParams {
             mc: 2 * MR,
             kc: 8,
             nc: 3 * NR,
+            steal: StealPolicy::default(),
         }
+    }
+
+    /// This configuration with a different steal policy (builder-style,
+    /// for tests and benches that compare schedules).
+    pub fn with_steal(mut self, steal: StealPolicy) -> Self {
+        self.steal = steal;
+        self
     }
 
     /// Validate invariants (all blocks nonzero; `mc` multiple of `MR` and
@@ -92,6 +108,7 @@ impl BlisParams {
             mc: num(parts[0])?,
             kc: num(parts[1])?,
             nc: num(parts[2])?,
+            steal: StealPolicy::default(),
         }
         .validated()
     }
@@ -121,8 +138,13 @@ impl BlisParams {
         let kc = (info.l1d / (F * (MR + NR))).clamp(64, 1024) / 8 * 8;
         let mc = (info.l2 * 3 / 4 / (F * kc)).clamp(2 * MR, 4096) / MR * MR;
         let nc = (info.l3 / 2 / (F * kc)).clamp(8 * NR, 16384) / NR * NR;
-        Self { mc, kc, nc }
-            .validated()
+        Self {
+            mc,
+            kc,
+            nc,
+            steal: StealPolicy::default(),
+        }
+        .validated()
             .unwrap_or_else(|_| Self::default())
     }
 }
@@ -197,21 +219,24 @@ mod tests {
         assert!(BlisParams {
             mc: 0,
             kc: 1,
-            nc: NR
+            nc: NR,
+            ..BlisParams::default()
         }
         .validated()
         .is_err());
         assert!(BlisParams {
             mc: MR + 1,
             kc: 1,
-            nc: NR
+            nc: NR,
+            ..BlisParams::default()
         }
         .validated()
         .is_err());
         assert!(BlisParams {
             mc: MR,
             kc: 1,
-            nc: NR + 1
+            nc: NR + 1,
+            ..BlisParams::default()
         }
         .validated()
         .is_err());
@@ -224,7 +249,8 @@ mod tests {
             BlisParams {
                 mc: 96,
                 kc: 256,
-                nc: 4092
+                nc: 4092,
+                ..BlisParams::default()
             }
         );
         assert_eq!(
@@ -232,7 +258,8 @@ mod tests {
             BlisParams {
                 mc: 16,
                 kc: 8,
-                nc: 12
+                nc: 12,
+                ..BlisParams::default()
             }
         );
         assert!(BlisParams::parse("96,256").is_err());

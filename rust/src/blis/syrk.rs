@@ -19,7 +19,10 @@
 //! `R` column split must produce bitwise the same trailing matrix as the
 //! blocked driver's full-width update (DESIGN.md §8, §11). Malleability
 //! comes along for free: the bulk of the flops inherit GEMM's Loop-3
-//! Worker-Sharing entry points.
+//! Worker-Sharing entry points — and, since the hybrid-scheduling PR,
+//! GEMM's static/dynamic tile-stealing macro-loop
+//! ([`BlisParams::steal`], DESIGN.md §13), which is likewise
+//! bitwise-invisible here because stealing only moves tile ownership.
 
 use super::gemm::gemm;
 use super::params::BlisParams;
@@ -256,6 +259,46 @@ mod tests {
         }
         for (x, y) in c1.data().iter().zip(c2.data()) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn steal_policy_does_not_change_bits() {
+        use crate::blis::StealPolicy;
+        // Cholesky's trailing update must be schedule-invariant too: the
+        // hybrid tile-stealing macro-loop under SYRK's gemm routing
+        // yields the same bits as the central ticket, across crews.
+        let (m, k) = (70usize, 13usize);
+        let a = Matrix::random(m, k, 9);
+        let c0 = Matrix::random(m, m, 10);
+        let run = |steal: StealPolicy, members: usize| -> Matrix {
+            let params = BlisParams::tiny().with_steal(steal);
+            let mut c = c0.clone();
+            let mut crew = Crew::new();
+            let shared = crew.shared();
+            let hs: Vec<_> = (0..members)
+                .map(|_| {
+                    let s = std::sync::Arc::clone(&shared);
+                    std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+                })
+                .collect();
+            syrk_ln(&mut crew, &params, -1.0, a.view(), c.view_mut());
+            crew.disband();
+            for h in hs {
+                h.join().unwrap();
+            }
+            c
+        };
+        let base = run(StealPolicy::Off, 0);
+        for (steal, members) in [
+            (StealPolicy::Auto, 0),
+            (StealPolicy::Auto, 3),
+            (StealPolicy::Fraction(1000), 2),
+        ] {
+            let c = run(steal, members);
+            for (x, y) in base.data().iter().zip(c.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "steal={steal:?} members={members}");
+            }
         }
     }
 

@@ -142,6 +142,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
         let (out, cols_done, cancelled) = blocked_ctl(fk, &mut crew, params, av, bo, bi, &fctl);
         stats.cancelled = cancelled;
         stats.panel_widths = vec![bo.min(kmax); cols_done.div_ceil(bo.max(1))];
+        let cs = crew.stats();
+        stats.hybrid_tiles = cs.hybrid_tiles;
+        stats.stolen_tiles = cs.stolen_tiles;
         if let Some(c) = ctl {
             c.cols_done.store(cols_done, Ordering::Release);
         }
@@ -166,6 +169,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     for h in all_members {
         h.wait();
     }
+    let cs = crew_all.stats();
+    stats.hybrid_tiles += cs.hybrid_tiles;
+    stats.stolen_tiles += cs.stolen_tiles;
 
     // `cur`: the factorized-but-not-yet-applied panel [f, f+bc). Its
     // state is shared read-only between the PF and RU branches.
@@ -190,6 +196,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
                 stats.panel_widths.push(bc);
                 let mut crew = Crew::with_arena(Arc::clone(&arena));
                 fk.apply_left(&mut crew, params, av, f, bc, &st_cur);
+                let cs = crew.stats();
+                stats.hybrid_tiles += cs.hybrid_tiles;
+                stats.stolen_tiles += cs.stolen_tiles;
                 fk.commit(&mut acc, &st_cur, bc);
                 committed += bc;
                 c.cols_done.store(committed, Ordering::Release);
@@ -221,6 +230,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
             for h in members {
                 h.wait();
             }
+            let cs = crew.stats();
+            stats.hybrid_tiles += cs.hybrid_tiles;
+            stats.stolen_tiles += cs.stolen_tiles;
             break;
         }
 
@@ -347,6 +359,13 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
             h.wait();
         }
         pf_task.wait();
+        // Fold both branches' hybrid-scheduler counters into the run's
+        // stats (the PF crew handle moved into its worker task; its
+        // shared state carries the counters).
+        let cs = crew_ru.stats();
+        let (pf_stolen, pf_tiles) = pf_shared.steal_stats();
+        stats.hybrid_tiles += cs.hybrid_tiles + pf_tiles;
+        stats.stolen_tiles += cs.stolen_tiles + pf_stolen;
 
         let out = outcome.lock().unwrap().take().expect("panel outcome");
         if out.terminated_early {
@@ -527,6 +546,42 @@ mod tests {
         }
         for (x, y) in f1.data().iter().zip(f2.data()) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn lookahead_steal_on_matches_steal_off_bitwise() {
+        // The hybrid tile-stealing schedule threads through both
+        // look-ahead branches (PF applies to P, RU to R) without
+        // touching a bit — for the WS-enabled configuration where crews
+        // actually grow mid-iteration.
+        use crate::blis::StealPolicy;
+        let n = 72;
+        let a0 = Matrix::random(n, n, 55);
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let run = |steal: StealPolicy| {
+            let pool = Pool::new(3);
+            let params = BlisParams::tiny().with_steal(steal);
+            let mut f = a0.clone();
+            let (p, stats) =
+                lookahead_ctl(&LuFactor, &pool, &params, &mut f, 16, 4, &opts, None);
+            (f, p, stats)
+        };
+        let (f_off, p_off, s_off) = run(StealPolicy::Off);
+        assert_eq!(s_off.hybrid_tiles, 0, "Off must not touch the deques");
+        for steal in [StealPolicy::Auto, StealPolicy::Fraction(1000)] {
+            let (f_on, p_on, s_on) = run(steal);
+            assert_eq!(p_off, p_on, "{steal:?} pivots");
+            assert!(
+                s_on.hybrid_tiles > 0,
+                "{steal:?} must schedule macro-kernel tiles through the deques"
+            );
+            for (x, y) in f_off.data().iter().zip(f_on.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{steal:?}");
+            }
         }
     }
 

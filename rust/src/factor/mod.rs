@@ -283,6 +283,13 @@ pub struct LaStats {
     pub panel_widths: Vec<usize>,
     /// Whether the run was cut short through [`LaCtl`] (request-level ET).
     pub cancelled: bool,
+    /// Macro-kernel tiles executed under the hybrid static/dynamic
+    /// scheduler across the run's crews (DESIGN.md §13; zero when
+    /// [`crate::blis::StealPolicy::Off`]).
+    pub hybrid_tiles: u64,
+    /// Hybrid tiles taken from another participant's static slice —
+    /// how much within-update rebalancing actually happened.
+    pub stolen_tiles: u64,
 }
 
 /// Cooperative control threaded through a look-ahead factorization by

@@ -14,8 +14,11 @@
 //!
 //! The factors produced are identical (to roundoff) to the plain blocked
 //! algorithm for any ET flag timing, and **bitwise** identical for any
-//! crew size — see the determinism notes in `factor/driver.rs` and
-//! DESIGN.md §8/§11.
+//! crew size *and any steal policy* — the trailing update's hybrid
+//! static/dynamic tile schedule ([`crate::blis::BlisParams::steal`],
+//! DESIGN.md §13) moves tile ownership between crew members but never a
+//! tile's arithmetic. See the determinism notes in `factor/driver.rs`
+//! and DESIGN.md §8/§11/§13.
 
 pub use crate::factor::{LaCtl, LaOpts, LaStats};
 
@@ -152,6 +155,33 @@ mod tests {
         let mut g = a0.clone();
         let piv_ref = naive::lu(g.view_mut());
         assert_eq!(ipiv, piv_ref);
+    }
+
+    #[test]
+    fn mb_with_stealing_bitwise_equals_mb_without() {
+        // WS moves whole workers between branches; the hybrid scheduler
+        // additionally moves tiles between workers inside the update.
+        // Neither may change a bit of the LU.
+        use crate::blis::StealPolicy;
+        let a0 = Matrix::random(96, 96, 31);
+        let opts = LaOpts {
+            malleable: true,
+            ..Default::default()
+        };
+        let run = |steal: StealPolicy| {
+            let pool = Pool::new(3);
+            let params = BlisParams::tiny().with_steal(steal);
+            let mut f = a0.clone();
+            let (ipiv, stats) = lu_lookahead(&pool, &params, &mut f, 16, 4, &opts);
+            (f, ipiv, stats)
+        };
+        let (f0, p0, _) = run(StealPolicy::Off);
+        let (f1, p1, s1) = run(StealPolicy::Auto);
+        assert_eq!(p0, p1);
+        assert!(s1.hybrid_tiles > 0);
+        for (x, y) in f0.data().iter().zip(f1.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

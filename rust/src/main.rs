@@ -12,7 +12,11 @@
 //!
 //! Global flags: `--params mc,kc,nc` overrides the cache-topology-derived
 //! BLIS blocking; `--kernel auto|simd|portable` forces a micro-kernel
-//! (results are bitwise identical either way).
+//! (results are bitwise identical either way); `--steal
+//! off|auto|<fraction>` selects the trailing-update schedule — hybrid
+//! static/dynamic tile-stealing with an auto or fixed static fraction,
+//! or the central-ticket baseline (also bitwise identical; DESIGN.md
+//! §13).
 //! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
 //! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
 //! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
@@ -61,7 +65,7 @@ fn main() {
 
 const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
 commands: factorize | chol | qr | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
-global flags: --params mc,kc,nc | --kernel auto|simd|portable
+global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
 solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
@@ -70,16 +74,28 @@ solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)";
 /// would corrupt perf experiments.
 fn resolve_params(args: &Args) -> BlisParams {
     let s = args.get_str("params", "");
-    if s.is_empty() {
-        return BlisParams::auto();
-    }
-    match BlisParams::parse(&s) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("bad --params: {e}");
-            std::process::exit(2);
+    let mut p = if s.is_empty() {
+        BlisParams::auto()
+    } else {
+        match BlisParams::parse(&s) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --params: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let steal = args.get_str("steal", "");
+    if !steal.is_empty() {
+        match malleable_lu::blis::StealPolicy::parse(&steal) {
+            Ok(sp) => p.steal = sp,
+            Err(e) => {
+                eprintln!("bad --steal: {e}");
+                std::process::exit(2);
+            }
         }
     }
+    p
 }
 
 /// Apply `--kernel auto|simd|portable` process-wide. An unknown value

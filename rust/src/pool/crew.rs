@@ -8,6 +8,7 @@
 //! distribution automatically adapts to however many workers are enlisted
 //! at the moment — this is what makes the team *malleable*.
 
+use super::steal::{StealPolicy, TileSched, TileSource};
 use crate::blis::arena::PackArena;
 use crossbeam_utils::{Backoff, CachePadded};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -59,6 +60,11 @@ unsafe impl Send for JobFn {}
 struct JobSlot {
     f: Option<JobFn>,
     n_chunks: u32,
+    /// Hybrid static/dynamic schedule for this job (`None` = central
+    /// ticket self-scheduling). Fetched together with `f` under the
+    /// lock, so a participant always pulls a job through the scheduler
+    /// it was published with.
+    sched: Option<Arc<TileSched>>,
 }
 
 /// Counters exposed for tests, traces and benchmarks.
@@ -72,6 +78,11 @@ pub struct CrewStats {
     pub member_chunks: u64,
     /// High-water mark of concurrently enlisted members.
     pub max_members: usize,
+    /// Tiles executed under the hybrid scheduler, any source
+    /// (DESIGN.md §13).
+    pub hybrid_tiles: u64,
+    /// Hybrid tiles taken from *another* participant's static slice.
+    pub stolen_tiles: u64,
 }
 
 /// State shared between the leader and the members.
@@ -89,6 +100,12 @@ pub struct CrewShared {
     max_members: AtomicUsize,
     /// Chunks executed by members (for stats/tests).
     member_chunks: AtomicU64,
+    /// Lifetime count of tiles executed under the hybrid scheduler.
+    hybrid_tiles: AtomicU64,
+    /// Lifetime count of hybrid tiles stolen from another participant's
+    /// static slice — the signal the serve layer's lease-sizing feedback
+    /// reads ([`crate::serve`], DESIGN.md §13).
+    stolen_tiles: AtomicU64,
     /// Set by `disband`; members exit their loop.
     disbanded: CachePadded<AtomicU64>, // 0 = live, 1 = disbanded
 }
@@ -101,10 +118,13 @@ impl CrewShared {
             job: Mutex::new(JobSlot {
                 f: None,
                 n_chunks: 0,
+                sched: None,
             }),
             members: AtomicUsize::new(0),
             max_members: AtomicUsize::new(0),
             member_chunks: AtomicU64::new(0),
+            hybrid_tiles: AtomicU64::new(0),
+            stolen_tiles: AtomicU64::new(0),
             disbanded: CachePadded::new(AtomicU64::new(0)),
         }
     }
@@ -161,14 +181,17 @@ impl CrewShared {
                 // Fetch the job published for epoch `e` (or a later one —
                 // in which case the CAS below simply never succeeds for
                 // `e` and we re-observe the newer epoch next iteration).
-                let (f, n) = {
+                let (f, n, sched) = {
                     let slot = self.job.lock().unwrap();
                     match slot.f {
-                        Some(f) => (f, slot.n_chunks),
+                        Some(f) => (f, slot.n_chunks, slot.sched.clone()),
                         None => continue,
                     }
                 };
-                let mine = self.pull_chunks(e, n, f);
+                let mine = match sched {
+                    Some(s) => self.pull_hybrid(f, &s),
+                    None => self.pull_chunks(e, n, f),
+                };
                 self.member_chunks.fetch_add(mine, Ordering::Relaxed);
                 backoff.reset();
             } else {
@@ -178,6 +201,50 @@ impl CrewShared {
             }
         }
         self.members.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Claim-and-run tiles of the current hybrid job until every deque
+    /// is drained. Returns the number of tiles executed.
+    ///
+    /// Exactly-once holds because each tile lives in exactly one deque
+    /// and deque pops are linearizable; the closure-liveness argument is
+    /// the same as for `pull_chunks` — a popped-but-unfinished tile has
+    /// not been counted in `completed`, so the leader is still parked
+    /// inside `parallel` and the closure's frame is alive. A *stale*
+    /// scheduler (fetched for a job that already drained) hands out no
+    /// tiles, so holding one is harmless; re-arming a scheduler for a
+    /// new job is only done when no stale holder exists (see the
+    /// `Arc::strong_count` gate in [`Crew::parallel_steal`]).
+    fn pull_hybrid(&self, f: JobFn, sched: &TileSched) -> u64 {
+        let slot = sched.claim_slot();
+        let mut ran = 0u64;
+        let mut stolen = 0u64;
+        while let Some((tile, src)) = sched.next_tile(slot) {
+            // SAFETY: see the closure-liveness note above.
+            unsafe { (*f.0)(tile) };
+            self.completed.fetch_add(1, Ordering::Release);
+            ran += 1;
+            if src == TileSource::Stolen {
+                stolen += 1;
+            }
+        }
+        if ran > 0 {
+            self.hybrid_tiles.fetch_add(ran, Ordering::Relaxed);
+        }
+        if stolen > 0 {
+            self.stolen_tiles.fetch_add(stolen, Ordering::Relaxed);
+        }
+        ran
+    }
+
+    /// Lifetime hybrid-scheduler counters `(stolen_tiles, hybrid_tiles)`
+    /// — read by the serve layer's checkpoint to derive the crew's
+    /// steal pressure (DESIGN.md §13).
+    pub fn steal_stats(&self) -> (u64, u64) {
+        (
+            self.stolen_tiles.load(Ordering::Relaxed),
+            self.hybrid_tiles.load(Ordering::Relaxed),
+        )
     }
 
     /// Claim-and-run chunks of job `epoch` until none remain (or the
@@ -218,6 +285,12 @@ pub struct Crew {
     /// many crews (look-ahead iterations, serve leaders) share one via
     /// [`Crew::with_arena`] so steady-state packing never allocates.
     arena: Arc<PackArena>,
+    /// Reusable hybrid schedule for [`Crew::parallel_steal`] jobs. Only
+    /// re-armed when nothing else holds it (`Arc::strong_count == 1`),
+    /// so a stale member can never pop a new job's tiles through an old
+    /// job's closure; otherwise a fresh one is allocated (rare — only
+    /// under member churn straddling a publish).
+    sched_cache: Option<Arc<TileSched>>,
 }
 
 impl Default for Crew {
@@ -241,6 +314,7 @@ impl Crew {
             jobs: 0,
             leader_chunks: 0,
             arena,
+            sched_cache: None,
         }
     }
 
@@ -270,6 +344,58 @@ impl Crew {
     /// itself executes chunks, so a crew with zero members degrades to a
     /// sequential loop with two atomic ops per chunk.
     pub fn parallel<F: Fn(usize) + Sync>(&mut self, n_chunks: usize, f: F) {
+        self.publish_and_run(n_chunks, None, f);
+    }
+
+    /// Like [`Crew::parallel`], but scheduled by `policy`: under a
+    /// hybrid policy (DESIGN.md §13) each current participant owns a
+    /// static prefix slice of the chunk grid and the remainder goes into
+    /// a shared dynamic tail; participants that run dry — including
+    /// workers absorbed mid-run via Worker Sharing or serve leases —
+    /// take from the tail and then steal from other participants'
+    /// slices. Chunk *ownership* moves; chunk *content* does not, so the
+    /// result is bitwise identical to [`Crew::parallel`] for every crew
+    /// size and steal timing (`tests/steal_agree.rs`).
+    pub fn parallel_steal<F: Fn(usize) + Sync>(
+        &mut self,
+        n_chunks: usize,
+        policy: StealPolicy,
+        f: F,
+    ) {
+        let workers = self.members() + 1;
+        match policy.static_fraction(workers, n_chunks) {
+            None => self.publish_and_run(n_chunks, None, f),
+            Some(frac) => {
+                let sched = self.take_sched(workers);
+                sched.arm(workers, n_chunks, frac);
+                self.publish_and_run(n_chunks, Some(sched), f);
+            }
+        }
+    }
+
+    /// Fetch the cached [`TileSched`] if it is safe to re-arm (nothing
+    /// else holds it and it has room for `workers` slots), else allocate
+    /// a replacement. The returned `Arc` is also stored back in the
+    /// cache, so steady-state hybrid jobs allocate nothing here.
+    fn take_sched(&mut self, workers: usize) -> Arc<TileSched> {
+        let reusable = self
+            .sched_cache
+            .as_ref()
+            .is_some_and(|s| Arc::strong_count(s) == 1 && s.capacity() >= workers);
+        if !reusable {
+            // Oversize a little so roster growth doesn't reallocate
+            // every join.
+            self.sched_cache = Some(Arc::new(TileSched::with_capacity(workers + 2)));
+        }
+        Arc::clone(self.sched_cache.as_ref().unwrap())
+    }
+
+    fn publish_and_run<F: Fn(usize) + Sync>(
+        &mut self,
+        n_chunks: usize,
+        sched: Option<Arc<TileSched>>,
+        f: F,
+    ) {
         if n_chunks == 0 {
             return;
         }
@@ -288,28 +414,39 @@ impl Crew {
             )
         });
 
+        let hybrid = sched.clone();
         {
             let mut slot = self.shared.job.lock().unwrap();
             slot.f = Some(f_raw);
             slot.n_chunks = n;
+            slot.sched = sched;
         }
         self.shared.completed.store(0, Ordering::Relaxed);
-        // Publish: epoch bump + chunk counter reset in one store.
+        // Publish: epoch bump + chunk counter reset in one store. Hybrid
+        // jobs publish an exhausted ticket so the ticket path can never
+        // hand out a chunk the deques also own.
+        let ticket_chunk = if hybrid.is_some() { n } else { 0 };
         self.shared
             .ticket
-            .store(Ticket::new(self.epoch, 0).0, Ordering::Release);
+            .store(Ticket::new(self.epoch, ticket_chunk).0, Ordering::Release);
 
         // The leader works too.
-        self.leader_chunks += self.shared.pull_chunks(self.epoch, n, f_raw);
+        self.leader_chunks += match &hybrid {
+            Some(s) => self.shared.pull_hybrid(f_raw, s),
+            None => self.shared.pull_chunks(self.epoch, n, f_raw),
+        };
 
         // Wait for stragglers (members still finishing their last chunk).
         let backoff = Backoff::new();
         while self.shared.completed.load(Ordering::Acquire) < n_chunks {
             backoff.snooze();
         }
-        // Drop the stored pointer eagerly (hygiene; not required for
-        // soundness).
-        self.shared.job.lock().unwrap().f = None;
+        // Drop the stored pointer and schedule eagerly (the pointer for
+        // hygiene, the schedule so the cache's strong count can return
+        // to 1 and the next hybrid job may re-arm it).
+        let mut slot = self.shared.job.lock().unwrap();
+        slot.f = None;
+        slot.sched = None;
     }
 
     /// Convenience: split `0..len` into `chunks_per_worker`-ish chunks and
@@ -354,6 +491,8 @@ impl Crew {
             leader_chunks: self.leader_chunks,
             member_chunks: self.shared.member_chunks.load(Ordering::Relaxed),
             max_members: self.shared.max_members.load(Ordering::Relaxed),
+            hybrid_tiles: self.shared.hybrid_tiles.load(Ordering::Relaxed),
+            stolen_tiles: self.shared.stolen_tiles.load(Ordering::Relaxed),
         }
     }
 }
@@ -623,6 +762,192 @@ mod tests {
             counter.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(counter.load(Ordering::Relaxed), 328);
+    }
+
+    #[test]
+    fn hybrid_leader_alone_executes_all_chunks() {
+        let mut crew = Crew::new();
+        let hit = (0..97).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        crew.parallel_steal(97, StealPolicy::Auto, |c| {
+            hit[c].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hit.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let s = crew.stats();
+        assert_eq!(s.leader_chunks, 97);
+        assert_eq!(s.hybrid_tiles, 97);
+        assert_eq!(s.stolen_tiles, 0, "a lone leader has no one to rob");
+    }
+
+    #[test]
+    fn hybrid_each_chunk_runs_exactly_once_under_churn() {
+        // The hybrid counterpart of `each_chunk_runs_exactly_once_under_
+        // churn`: members joining and leaving at random times, every
+        // chunk of every hybrid job runs exactly once.
+        let mut crew = Crew::new();
+        let shared = crew.shared();
+        const JOBS: usize = 20;
+        const CHUNKS: usize = 113;
+        let hits: Vec<Vec<AtomicUsize>> = (0..JOBS)
+            .map(|_| (0..CHUNKS).map(|_| AtomicUsize::new(0)).collect())
+            .collect();
+        let stop = Arc::new(AtomicUsize::new(0));
+        let joiners: Vec<_> = (0..4)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                let st = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while st.load(Ordering::Acquire) == 0 {
+                        let quota = AtomicUsize::new(0);
+                        let st2 = Arc::clone(&st);
+                        s.member_loop_while(
+                            if i % 2 == 0 {
+                                EntryPolicy::Immediate
+                            } else {
+                                EntryPolicy::JobBoundary
+                            },
+                            move || {
+                                quota.fetch_add(1, Ordering::Relaxed) < 200
+                                    && st2.load(Ordering::Acquire) == 0
+                            },
+                        );
+                    }
+                })
+            })
+            .collect();
+        for (j, job_hits) in hits.iter().enumerate() {
+            let policy = match j % 3 {
+                0 => StealPolicy::Auto,
+                1 => StealPolicy::Fraction(1000),
+                _ => StealPolicy::Fraction(300),
+            };
+            crew.parallel_steal(CHUNKS, policy, |c| {
+                job_hits[c].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        stop.store(1, Ordering::Release);
+        crew.disband();
+        for j in joiners {
+            j.join().unwrap();
+        }
+        for (j, job_hits) in hits.iter().enumerate() {
+            for (c, h) in job_hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "job {j} chunk {c}");
+            }
+        }
+        let s = crew.stats();
+        assert_eq!(s.leader_chunks + s.member_chunks, (JOBS * CHUNKS) as u64);
+        assert_eq!(s.hybrid_tiles, (JOBS * CHUNKS) as u64);
+    }
+
+    #[test]
+    fn hybrid_member_finishes_job_after_midjob_revocation() {
+        // The "revoke a worker while its deque is non-empty" scenario:
+        // the member's lease is revoked *while the hybrid job is in
+        // flight* (leases are polled between jobs), so the member still
+        // owns undrained tiles at revocation time. The job must complete
+        // with every chunk run exactly once, and the member must leave
+        // only at the job boundary.
+        let mut crew = Crew::new();
+        let shared = crew.shared();
+        let lease = Arc::new(AtomicUsize::new(1));
+        let l = Arc::clone(&lease);
+        let s = Arc::clone(&shared);
+        let member = std::thread::spawn(move || {
+            s.member_loop_while(EntryPolicy::Immediate, || l.load(Ordering::Acquire) == 1)
+        });
+        while crew.members() != 1 {
+            std::thread::yield_now();
+        }
+        let hit = (0..64).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        let lease2 = Arc::clone(&lease);
+        // Fully static split: both participants own a 32-tile slice, so
+        // the revocation (fired by the very first tile either side runs)
+        // lands while deques are provably non-empty.
+        crew.parallel_steal(64, StealPolicy::Fraction(1000), |c| {
+            lease2.store(0, Ordering::Release);
+            hit[c].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hit.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        member.join().unwrap();
+        assert_eq!(crew.members(), 0);
+        // The crew keeps working after the departure.
+        let n = AtomicUsize::new(0);
+        crew.parallel_steal(16, StealPolicy::Auto, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn hybrid_bitwise_matches_ticket_schedule() {
+        // parallel vs parallel_steal on the same data: bitwise equality
+        // of every output slot, with and without members.
+        let data: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.37).sin()).collect();
+        let run = |policy: Option<StealPolicy>, members: usize| -> Vec<u64> {
+            let mut crew = Crew::new();
+            let shared = crew.shared();
+            let hs: Vec<_> = (0..members)
+                .map(|_| {
+                    let s = Arc::clone(&shared);
+                    std::thread::spawn(move || s.member_loop(EntryPolicy::Immediate))
+                })
+                .collect();
+            let out: Vec<std::sync::Mutex<f64>> =
+                (0..64).map(|_| std::sync::Mutex::new(0.0)).collect();
+            let body = |c: usize| {
+                let s: f64 = data[c * 64..(c + 1) * 64]
+                    .iter()
+                    .fold(0.0, |acc, &x| x.mul_add(1.0000001, acc));
+                *out[c].lock().unwrap() = s;
+            };
+            match policy {
+                Some(p) => crew.parallel_steal(64, p, body),
+                None => crew.parallel(64, body),
+            }
+            crew.disband();
+            for h in hs {
+                h.join().unwrap();
+            }
+            out.iter().map(|m| m.lock().unwrap().to_bits()).collect()
+        };
+        let base = run(None, 0);
+        for members in [0usize, 2] {
+            for policy in [
+                StealPolicy::Off,
+                StealPolicy::Auto,
+                StealPolicy::Fraction(500),
+                StealPolicy::Fraction(1000),
+            ] {
+                assert_eq!(
+                    base,
+                    run(Some(policy), members),
+                    "policy {policy:?} members {members}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_sched_cache_is_reused_across_jobs() {
+        // Steady state must not allocate a fresh TileSched per job: with
+        // a stable roster the cached scheduler's strong count returns to
+        // 1 between jobs, so the same Arc is re-armed.
+        let mut crew = Crew::new();
+        crew.parallel_steal(32, StealPolicy::Auto, |_| {});
+        let first = crew
+            .sched_cache
+            .as_ref()
+            .map(|s| Arc::as_ptr(s) as usize)
+            .unwrap();
+        for _ in 0..10 {
+            crew.parallel_steal(32, StealPolicy::Auto, |_| {});
+            let now = crew
+                .sched_cache
+                .as_ref()
+                .map(|s| Arc::as_ptr(s) as usize)
+                .unwrap();
+            assert_eq!(first, now, "steady-state hybrid job reallocated its sched");
+        }
     }
 
     #[test]

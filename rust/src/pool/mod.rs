@@ -24,9 +24,19 @@
 //! The chunk-grab protocol packs `(epoch, next_chunk)` into one atomic so
 //! a stale member can never execute a chunk of a later job with an earlier
 //! job's function (see `crew::Ticket`).
+//!
+//! [`Crew::parallel_steal`] adds a second scheduling mode on top of the
+//! same job/epoch protocol: a **hybrid static/dynamic** split
+//! ([`steal::TileSched`], DESIGN.md §13) in which each participant owns a
+//! static slice of the chunk grid and idle participants drain a shared
+//! tail, then steal from other slices — the within-update malleability
+//! that lets a crew resized mid-iteration rebalance without waiting for
+//! the next job boundary.
 
 pub mod crew;
+pub mod steal;
 pub mod worker;
 
 pub use crew::{Crew, CrewShared, CrewStats, EntryPolicy};
+pub use steal::{auto_static_fraction, StealPolicy, TileDeque, TileSched, TileSource};
 pub use worker::{current_worker, Pool, TaskHandle};

@@ -1,0 +1,473 @@
+//! Hybrid static/dynamic tile scheduling for crew jobs (DESIGN.md §13).
+//!
+//! The crew's baseline self-scheduler ([`super::Crew::parallel`]) is a
+//! *central* dynamic queue: every participant claims the next chunk by a
+//! CAS on one shared ticket word. That balances load perfectly but makes
+//! every chunk grab contend on the same cache line, and it gives a
+//! participant no affinity to any part of the tile grid. Donfack et al.
+//! ("Hybrid static/dynamic scheduling for already optimized dense matrix
+//! factorization") show the sweet spot for trailing updates is a hybrid:
+//! give each worker a *statically owned* slice (no contention, stable
+//! locality) and keep a *dynamic tail* that whoever runs dry — including
+//! workers freshly absorbed via Worker Sharing or re-leased by the serve
+//! registry — takes from, stealing from other owners' slices once the
+//! tail is empty.
+//!
+//! The building block is the [`TileDeque`]: a contiguous tile range
+//! `[lo, hi)` packed into one atomic word. The owner takes from the
+//! front, thieves take from the back, both by CAS on the packed word, so
+//! the structure is lock-free and every tile is handed out exactly once.
+//! A [`TileSched`] is one job's worth of deques: one per planned
+//! participant (the static slices) plus one shared tail. Participants
+//! claim a slot on arrival; latecomers beyond the planned roster hold no
+//! static slice and live entirely off the tail and steals — this is how
+//! a worker absorbed mid-factorization contributes without waiting for
+//! the next iteration's re-partition.
+//!
+//! **Determinism**: tile *ownership* moves, tile *content* does not. A
+//! chunk computes the same values no matter which participant runs it
+//! (each C tile's `k`-reduction is sequential inside one chunk — the
+//! fused-reduction contract of DESIGN.md §8), so the hybrid schedule is
+//! bitwise identical to the central ticket schedule for every crew size
+//! and every steal timing. `tests/steal_agree.rs` proves this across all
+//! factorization kinds, both precisions, and mid-run crew resizes.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Whether (and how) the trailing-update macro-loop uses the hybrid
+/// static/dynamic scheduler. Lives in the pool layer (the [`TileSched`]
+/// consumer) but is carried by [`crate::blis::BlisParams`] as the
+/// user-facing knob (`mlu --steal off|auto|<fraction>`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    /// Central dynamic self-scheduling only (the pre-steal baseline):
+    /// every chunk is claimed from the shared ticket.
+    Off,
+    /// Hybrid scheduling with the static fraction derived from the crew
+    /// size and the tile-grid size ([`auto_static_fraction`]).
+    #[default]
+    Auto,
+    /// Hybrid scheduling with a fixed static fraction, stored in
+    /// per-mille (`0..=1000`) so the knob stays `Eq`/`Copy`.
+    Fraction(u16),
+}
+
+impl StealPolicy {
+    /// Parse the `--steal` syntax: `off`, `auto`, or a fraction in
+    /// `[0, 1]` (e.g. `0.7`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(StealPolicy::Off),
+            "auto" | "on" => Ok(StealPolicy::Auto),
+            other => {
+                let f: f64 = other
+                    .parse()
+                    .map_err(|_| format!("bad --steal {s:?} (expected off|auto|0..1)"))?;
+                if !(0.0..=1.0).contains(&f) {
+                    return Err(format!("--steal fraction {f} outside [0, 1]"));
+                }
+                Ok(StealPolicy::Fraction((f * 1000.0).round() as u16))
+            }
+        }
+    }
+
+    /// Display name (`off`, `auto`, or the fraction).
+    pub fn name(&self) -> String {
+        match self {
+            StealPolicy::Off => "off".into(),
+            StealPolicy::Auto => "auto".into(),
+            StealPolicy::Fraction(pm) => format!("{:.3}", *pm as f64 / 1000.0),
+        }
+    }
+
+    /// The static fraction to use for a job of `n_tiles` chunks on
+    /// `workers` current participants, or `None` when the policy (or a
+    /// degenerate grid) says to stay on the central ticket.
+    pub fn static_fraction(&self, workers: usize, n_tiles: usize) -> Option<f64> {
+        match self {
+            StealPolicy::Off => None,
+            StealPolicy::Auto => Some(auto_static_fraction(workers, n_tiles)),
+            StealPolicy::Fraction(pm) => Some(*pm as f64 / 1000.0),
+        }
+    }
+}
+
+/// Static fraction derived from the crew size and the tile-grid size:
+/// leave roughly two tiles per worker in the dynamic tail (enough slack
+/// to absorb load imbalance and mid-job joiners), never more than 90%
+/// static, and fall to fully dynamic when the grid is too small for
+/// static slices to mean anything. A lone worker gets 100% static — the
+/// tail would only add CAS traffic, and any late joiner can still steal
+/// from the owner's slice back.
+pub fn auto_static_fraction(workers: usize, n_tiles: usize) -> f64 {
+    if workers <= 1 {
+        return 1.0;
+    }
+    if n_tiles <= 2 * workers {
+        return 0.0;
+    }
+    (1.0 - (2.0 * workers as f64) / n_tiles as f64).clamp(0.0, 0.9)
+}
+
+/// `(lo << 32) | hi`: the un-issued tile range `[lo, hi)` of one deque.
+#[inline]
+fn pack(lo: u32, hi: u32) -> u64 {
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// A contiguous tile range with lock-free two-ended retrieval: the owner
+/// pops from the front (ascending order, preserving its streaming
+/// locality), thieves pop from the back (so an owner and a thief only
+/// collide on the very last tile). Both ends are claimed by CAS on one
+/// packed word; some participant always makes progress.
+#[derive(Default)]
+pub struct TileDeque {
+    range: CachePadded<AtomicU64>,
+}
+
+impl TileDeque {
+    /// Empty deque.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset to the range `[lo, hi)`. Only sound while no participant is
+    /// popping (the crew arms deques before publishing the job).
+    pub fn reset(&self, lo: u32, hi: u32) {
+        debug_assert!(lo <= hi);
+        self.range.store(pack(lo, hi), Ordering::Release);
+    }
+
+    /// Tiles not yet handed out.
+    pub fn len(&self) -> usize {
+        let (lo, hi) = unpack(self.range.load(Ordering::Acquire));
+        hi.saturating_sub(lo) as usize
+    }
+
+    /// Whether every tile has been handed out.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner end: take the lowest remaining tile.
+    pub fn pop_front(&self) -> Option<usize> {
+        let mut cur = self.range.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = unpack(cur);
+            if lo >= hi {
+                return None;
+            }
+            match self.range.compare_exchange_weak(
+                cur,
+                pack(lo + 1, hi),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(lo as usize),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Thief end: take the highest remaining tile.
+    pub fn pop_back(&self) -> Option<usize> {
+        let mut cur = self.range.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = unpack(cur);
+            if lo >= hi {
+                return None;
+            }
+            match self.range.compare_exchange_weak(
+                cur,
+                pack(lo, hi - 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some((hi - 1) as usize),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Where a tile came from, for the steal accounting.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TileSource {
+    /// The participant's own static slice.
+    Own,
+    /// The shared dynamic tail.
+    Shared,
+    /// Stolen from another participant's static slice.
+    Stolen,
+}
+
+/// One job's hybrid schedule: `n_owners` static slices plus the shared
+/// dynamic tail (module docs above). Reusable across jobs via
+/// [`TileSched::arm`] so steady-state crews allocate nothing here.
+pub struct TileSched {
+    owners: Vec<TileDeque>,
+    shared: TileDeque,
+    /// Owner slots active for the current job (`<= owners.len()`).
+    n_owners: AtomicUsize,
+    /// Participant arrival counter; the first `n_owners` arrivals get
+    /// static slices, later ones live off the tail and steals.
+    next_slot: AtomicUsize,
+}
+
+impl TileSched {
+    /// A scheduler with room for `capacity` static owner slots.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            owners: (0..capacity.max(1)).map(|_| TileDeque::new()).collect(),
+            shared: TileDeque::new(),
+            n_owners: AtomicUsize::new(0),
+            next_slot: AtomicUsize::new(0),
+        }
+    }
+
+    /// Owner slots this scheduler can arm without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Partition `n_tiles` for `workers` participants with the given
+    /// static fraction: each of the `workers` owner slots gets an equal
+    /// `⌊frac·n/workers⌋`-tile prefix slice, the remainder becomes the
+    /// shared tail. Must only be called between jobs (no popper active).
+    pub fn arm(&self, workers: usize, n_tiles: usize, static_fraction: f64) {
+        let w = workers.clamp(1, self.owners.len());
+        assert!(n_tiles <= u32::MAX as usize, "too many tiles");
+        let static_total = (n_tiles as f64 * static_fraction.clamp(0.0, 1.0)) as usize;
+        let per = static_total / w;
+        for (i, d) in self.owners.iter().enumerate() {
+            if i < w {
+                d.reset((i * per) as u32, ((i + 1) * per) as u32);
+            } else {
+                d.reset(0, 0);
+            }
+        }
+        self.shared.reset((w * per) as u32, n_tiles as u32);
+        self.n_owners.store(w, Ordering::Release);
+        self.next_slot.store(0, Ordering::Release);
+    }
+
+    /// Claim a participant slot for the current job.
+    pub fn claim_slot(&self) -> usize {
+        self.next_slot.fetch_add(1, Ordering::AcqRel)
+    }
+
+    /// Take the next tile for participant `slot`: own slice first, then
+    /// the shared tail, then steal from other owners' backs (scanning
+    /// from `slot + 1` so thieves spread out). `None` once every deque
+    /// has handed out all of its tiles.
+    pub fn next_tile(&self, slot: usize) -> Option<(usize, TileSource)> {
+        let n = self.n_owners.load(Ordering::Acquire);
+        if slot < n {
+            if let Some(t) = self.owners[slot].pop_front() {
+                return Some((t, TileSource::Own));
+            }
+        }
+        if let Some(t) = self.shared.pop_front() {
+            return Some((t, TileSource::Shared));
+        }
+        for k in 1..=n {
+            let victim = (slot + k) % n.max(1);
+            if victim == slot {
+                continue;
+            }
+            if let Some(t) = self.owners[victim].pop_back() {
+                return Some((t, TileSource::Stolen));
+            }
+        }
+        None
+    }
+
+    /// Un-issued tiles across every deque (diagnostics only; racy).
+    pub fn remaining(&self) -> usize {
+        let n = self.n_owners.load(Ordering::Acquire);
+        self.owners.iter().take(n).map(|d| d.len()).sum::<usize>() + self.shared.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn deque_two_ended_pops_are_disjoint_and_exhaustive() {
+        let d = TileDeque::new();
+        d.reset(3, 10);
+        assert_eq!(d.len(), 7);
+        assert_eq!(d.pop_front(), Some(3));
+        assert_eq!(d.pop_back(), Some(9));
+        let mut got = vec![3, 9];
+        while let Some(t) = d.pop_front() {
+            got.push(t);
+        }
+        assert!(d.pop_back().is_none());
+        got.sort_unstable();
+        assert_eq!(got, (3..10).collect::<Vec<_>>());
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn deque_concurrent_pops_hand_out_each_tile_once() {
+        let d = Arc::new(TileDeque::new());
+        const N: usize = 10_000;
+        d.reset(0, N as u32);
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect());
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let d = Arc::clone(&d);
+                let hits = Arc::clone(&hits);
+                std::thread::spawn(move || loop {
+                    let t = if i % 2 == 0 { d.pop_front() } else { d.pop_back() };
+                    let Some(t) = t else { break };
+                    hits[t].fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "tile {t}");
+        }
+    }
+
+    #[test]
+    fn sched_partitions_cover_every_tile() {
+        for (w, n, frac) in [
+            (1usize, 17usize, 1.0f64),
+            (3, 17, 0.7),
+            (4, 100, 0.9),
+            (2, 5, 0.0),
+            (6, 3, 0.5), // fewer tiles than workers
+        ] {
+            let s = TileSched::with_capacity(w);
+            s.arm(w, n, frac);
+            let mut got = Vec::new();
+            // Single collector draining every source.
+            let slot = s.claim_slot();
+            while let Some((t, _)) = s.next_tile(slot) {
+                got.push(t);
+            }
+            got.sort_unstable();
+            assert_eq!(got, (0..n).collect::<Vec<_>>(), "w={w} n={n} frac={frac}");
+        }
+    }
+
+    #[test]
+    fn latecomer_beyond_roster_steals_from_static_slices() {
+        let s = TileSched::with_capacity(2);
+        s.arm(2, 20, 1.0); // fully static: nothing in the shared tail
+        let owner = s.claim_slot();
+        let _other = s.claim_slot();
+        let late = s.claim_slot(); // slot 2: no static slice
+        assert_eq!(owner, 0);
+        assert_eq!(late, 2);
+        let (t, src) = s.next_tile(late).expect("latecomer must find work");
+        assert_eq!(src, TileSource::Stolen);
+        assert!(t < 20);
+    }
+
+    #[test]
+    fn sources_are_classified() {
+        let s = TileSched::with_capacity(2);
+        s.arm(2, 10, 0.8); // per-owner 4, shared [8, 10)
+        let a = s.claim_slot();
+        let b = s.claim_slot();
+        let (_, src) = s.next_tile(a).unwrap();
+        assert_eq!(src, TileSource::Own);
+        // Drain b's slice, then the shared tail, then steal from a.
+        let mut own = 0;
+        let mut shared = 0;
+        let mut stolen = 0;
+        while let Some((_, src)) = s.next_tile(b) {
+            match src {
+                TileSource::Own => own += 1,
+                TileSource::Shared => shared += 1,
+                TileSource::Stolen => stolen += 1,
+            }
+        }
+        assert_eq!(own, 4);
+        assert_eq!(shared, 2);
+        assert_eq!(stolen, 3, "a took one of its own 4 tiles first");
+    }
+
+    #[test]
+    fn sched_concurrent_exactly_once_under_mixed_slots() {
+        const N: usize = 5_000;
+        let s = Arc::new(TileSched::with_capacity(3));
+        s.arm(3, N, 0.8);
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect());
+        let hs: Vec<_> = (0..5) // two more participants than owner slots
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let hits = Arc::clone(&hits);
+                std::thread::spawn(move || {
+                    let slot = s.claim_slot();
+                    while let Some((t, _)) = s.next_tile(slot) {
+                        hits[t].fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "tile {t}");
+        }
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn arm_reuses_without_allocation_observable_state() {
+        let s = TileSched::with_capacity(4);
+        s.arm(4, 40, 0.5);
+        let slot = s.claim_slot();
+        while s.next_tile(slot).is_some() {}
+        // Re-arm with a different shape; everything must be re-issued.
+        s.arm(2, 7, 0.9);
+        let slot = s.claim_slot();
+        let mut got = Vec::new();
+        while let Some((t, _)) = s.next_tile(slot) {
+            got.push(t);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn policy_parse_and_fraction() {
+        assert_eq!(StealPolicy::parse("off").unwrap(), StealPolicy::Off);
+        assert_eq!(StealPolicy::parse("auto").unwrap(), StealPolicy::Auto);
+        assert_eq!(StealPolicy::parse("0.7").unwrap(), StealPolicy::Fraction(700));
+        assert!(StealPolicy::parse("1.5").is_err());
+        assert!(StealPolicy::parse("banana").is_err());
+        assert_eq!(StealPolicy::Off.static_fraction(4, 100), None);
+        assert_eq!(StealPolicy::Fraction(250).static_fraction(4, 100), Some(0.25));
+        let auto = StealPolicy::Auto.static_fraction(4, 100).unwrap();
+        assert!((0.0..=0.9).contains(&auto));
+    }
+
+    #[test]
+    fn auto_fraction_shapes() {
+        assert_eq!(auto_static_fraction(1, 100), 1.0);
+        assert_eq!(auto_static_fraction(4, 8), 0.0, "tiny grids go dynamic");
+        let f = auto_static_fraction(4, 100);
+        assert!((f - 0.92f64.min(0.9)).abs() < 0.1, "got {f}");
+        assert!(auto_static_fraction(2, 1_000_000) <= 0.9);
+    }
+}

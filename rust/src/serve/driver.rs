@@ -58,11 +58,20 @@ pub struct DriveCfg<'a> {
 pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> FactorOutcome<S> {
     let (m, n) = (a.rows(), a.cols());
     let tag = format!("req{}:{}:{}", cfg.lease.id, cfg.kind.name(), S::NAME);
+    // Steal-pressure feedback (DESIGN.md §13): at every panel checkpoint
+    // the stolen-tile fraction of the hybrid-scheduled work done since
+    // the previous checkpoint is folded into the lease, where the
+    // floater policy's starvation score reads it.
+    let shared = crew.shared();
+    let prev_stolen = std::sync::atomic::AtomicU64::new(0);
+    let prev_tiles = std::sync::atomic::AtomicU64::new(0);
     let checkpoint = |k: usize| {
         cfg.lease.set_remaining(
             cfg.kind
                 .remaining_cost_prec::<S>(cfg.hw, m, n, k, cfg.bo, cfg.bi),
         );
+        cfg.lease
+            .fold_steal_delta(&shared, &prev_stolen, &prev_tiles);
         if let Some(d) = cfg.deadline {
             if Instant::now() >= d {
                 cfg.cancel.store(true, Ordering::Release);
@@ -193,6 +202,40 @@ mod tests {
         let r = naive::lu_residual(&a0, &f, &out.ipiv);
         let tol = 8.0 * n as f64 * f32::EPSILON as f64;
         assert!(r < tol, "f32 residual {r} tol {tol}");
+    }
+
+    #[test]
+    fn drive_updates_steal_pressure_signal() {
+        // A lone leader steals nothing from itself: after driving a
+        // hybrid-scheduled request to completion the lease's pressure
+        // signal must have been refreshed to 0 (not left at a stale
+        // preset), while the crew demonstrably ran the tiles through
+        // the hybrid scheduler.
+        use crate::blis::StealPolicy;
+        let hw = HwModel::default();
+        let params = BlisParams::tiny().with_steal(StealPolicy::Fraction(800));
+        let a0 = Matrix::random(48, 48, 77);
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let lease = Arc::new(Lease::new(11, 0, crew.shared(), 1.0));
+        lease.set_steal_pressure(0.9); // stale preset the drive must overwrite
+        let cancel = AtomicBool::new(false);
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            kind: FactorKind::Lu,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(!out.cancelled);
+        assert_eq!(lease.steal_pressure(), 0.0);
+        let (stolen, tiles) = crew.shared().steal_stats();
+        assert_eq!(stolen, 0);
+        assert!(tiles > 0, "hybrid scheduler must have run the update tiles");
     }
 
     #[test]

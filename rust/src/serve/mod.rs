@@ -40,6 +40,17 @@
 //! (or an expired deadline) stops a request at its next panel
 //! checkpoint, leaving a clean factored prefix and returning its crew to
 //! the pool.
+//!
+//! Since the hybrid-scheduling PR (DESIGN.md §13) a floater that joins a
+//! crew mid-update is also rebalanced *within* the update: the trailing
+//! macro-loops run under the static/dynamic tile-stealing schedule, so a
+//! donated worker drains the crew's dynamic tail and steals from its
+//! static slices instead of idling until the next iteration. The
+//! leader's panel checkpoints feed the observed stolen-tile fraction
+//! back into the lease ([`Lease::steal_pressure`]), and the starvation
+//! score weights crews that convert donated workers into steals above
+//! crews whose updates are already balanced — stolen-tile counts feeding
+//! lease sizing.
 
 pub mod driver;
 pub mod registry;
@@ -746,13 +757,18 @@ fn lead_solve(
     let hw = state.cfg.hw;
     let lease2 = Arc::clone(&lease);
     let cancel2 = &jstate.cancel;
+    let crew_shared = crew.shared();
+    let prev_stolen = AtomicU64::new(0);
+    let prev_tiles = AtomicU64::new(0);
     // Deadline enforcement mirrors `drive`: every factor checkpoint
     // folds an expired deadline into the cancel flag, which the factor
     // stage polls between panel steps and the refiner polls between
     // sweeps. (A deadline expiring inside a single O(n²) refinement
-    // sweep is caught at the next sweep boundary.)
+    // sweep is caught at the next sweep boundary.) Steal pressure is
+    // fed back the same way (DESIGN.md §13).
     let checkpoint = move |k: usize| {
         lease2.set_remaining(FactorKind::Lu.remaining_cost(&hw, n, n, k, bo, bi) / rate);
+        lease2.fold_steal_delta(&crew_shared, &prev_stolen, &prev_tiles);
         if let Some(d) = deadline {
             if Instant::now() >= d {
                 cancel2.store(true, Ordering::Release);

@@ -26,6 +26,15 @@ pub struct Lease {
     /// Modeled single-core seconds of work left, stored as `f64` bits.
     /// Updated by the leader at every panel checkpoint.
     remaining: AtomicU64,
+    /// Fraction of this crew's recent macro-kernel tiles that were
+    /// *stolen* (taken from another member's static slice), in `[0, 1]`,
+    /// stored as `f64` bits. Updated by the leader at every panel
+    /// checkpoint from the crew's hybrid-scheduler counters
+    /// ([`CrewShared::steal_stats`]). High pressure means the static
+    /// partition is under-provisioned for the problem's current team —
+    /// donated workers are absorbed productively — so the starvation
+    /// score weights it up (DESIGN.md §13).
+    steal_pressure: AtomicU64,
 }
 
 impl Lease {
@@ -36,6 +45,7 @@ impl Lease {
             priority,
             shared,
             remaining: AtomicU64::new(remaining.to_bits()),
+            steal_pressure: AtomicU64::new(0.0f64.to_bits()),
         }
     }
 
@@ -50,14 +60,51 @@ impl Lease {
         self.remaining.store(secs.to_bits(), Ordering::Relaxed);
     }
 
+    /// Recent stolen-tile fraction of this crew's hybrid schedule (see
+    /// the field docs).
+    pub fn steal_pressure(&self) -> f64 {
+        f64::from_bits(self.steal_pressure.load(Ordering::Relaxed))
+    }
+
+    /// Refresh the steal-pressure signal (leader, at checkpoints);
+    /// clamped into `[0, 1]`.
+    pub fn set_steal_pressure(&self, p: f64) {
+        self.steal_pressure
+            .store(p.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Fold the crew's hybrid-scheduler progress since the previous
+    /// checkpoint into the steal-pressure signal: reads
+    /// [`CrewShared::steal_stats`], diffs against the caller-held
+    /// `prev_stolen`/`prev_tiles` cursors (updating them), and stores
+    /// `Δstolen / Δtiles` (0 when no hybrid tiles ran). The one shared
+    /// implementation both the factor and solve lead checkpoints call.
+    pub fn fold_steal_delta(
+        &self,
+        shared: &CrewShared,
+        prev_stolen: &AtomicU64,
+        prev_tiles: &AtomicU64,
+    ) {
+        let (stolen, tiles) = shared.steal_stats();
+        let ds = stolen.saturating_sub(prev_stolen.swap(stolen, Ordering::Relaxed));
+        let dt = tiles.saturating_sub(prev_tiles.swap(tiles, Ordering::Relaxed));
+        self.set_steal_pressure(if dt == 0 { 0.0 } else { ds as f64 / dt as f64 });
+    }
+
     /// Work-conserving starvation score: priority-weighted remaining
-    /// work divided by the team already on the problem. The floater
-    /// policy sends idle workers to the highest score — the paper's WS
-    /// rule ("donate to whoever is behind") generalized from two
-    /// branches to N problems.
+    /// work divided by the team already on the problem, scaled up by the
+    /// crew's observed steal pressure. The floater policy sends idle
+    /// workers to the highest score — the paper's WS rule ("donate to
+    /// whoever is behind") generalized from two branches to N problems.
+    /// The steal term is the lease-sizing feedback of DESIGN.md §13: a
+    /// crew whose dynamic tail and static slices are being actively
+    /// stolen from is demonstrably able to convert extra workers into
+    /// progress *within* the current iteration, so it out-bids an
+    /// otherwise equal crew whose update is already balanced.
     pub fn starvation(&self) -> f64 {
         let team = self.shared.members() + 1; // members + the leader
-        (self.priority as f64 + 1.0) * self.remaining() / team as f64
+        (self.priority as f64 + 1.0) * self.remaining() * (1.0 + self.steal_pressure())
+            / team as f64
     }
 }
 
@@ -183,5 +230,24 @@ mod tests {
     fn most_starved_empty_is_none() {
         let reg = CrewRegistry::new();
         assert!(reg.most_starved().is_none());
+    }
+
+    #[test]
+    fn steal_pressure_breaks_ties_toward_the_stealing_crew() {
+        // Two otherwise identical problems: the one whose crew shows
+        // active within-update stealing attracts the floater.
+        let reg = CrewRegistry::new();
+        let (_c1, l1) = lease(1, 0, 1.0);
+        let (_c2, l2) = lease(2, 0, 1.0);
+        reg.register(Arc::clone(&l1));
+        reg.register(Arc::clone(&l2));
+        l2.set_steal_pressure(0.6);
+        assert_eq!(reg.most_starved().unwrap().id, 2);
+        // The signal is clamped and symmetric.
+        l1.set_steal_pressure(7.0); // clamps to 1.0
+        assert_eq!(l1.steal_pressure(), 1.0);
+        assert_eq!(reg.most_starved().unwrap().id, 1);
+        l1.set_steal_pressure(-3.0);
+        assert_eq!(l1.steal_pressure(), 0.0);
     }
 }

@@ -24,7 +24,7 @@
 //! keeping it out of the graph spares n² extra edges; LAPACK semantics
 //! are preserved).
 
-use super::{run, GraphBuilder};
+use super::{run, GraphBuilder, RunStats};
 use crate::blis::{gemm, trsm_llu};
 use crate::lu::panel::panel_ll;
 use crate::lu::{LuConfig, LuResult};
@@ -36,11 +36,20 @@ use std::sync::{Arc, Mutex};
 /// Factorize `a` in place via the task runtime. Total team =
 /// `pool.workers() + 1` (the caller executes tasks too).
 pub fn factorize_os(pool: &Pool, a: &mut Matrix, cfg: &LuConfig) -> LuResult {
+    factorize_os_stats(pool, a, cfg).0
+}
+
+/// [`factorize_os`] additionally returning the runtime's execution
+/// statistics — in particular [`RunStats::start_order`], which with a
+/// 0-worker pool is the exact queue-pop order and (since the ready
+/// queue's total (priority, release-sequence) ordering) is identical
+/// run over run. Schedule-comparison tests pin that determinism here.
+pub fn factorize_os_stats(pool: &Pool, a: &mut Matrix, cfg: &LuConfig) -> (LuResult, RunStats) {
     let av = a.view_mut();
     let (m, n) = (av.rows(), av.cols());
     let kmax = m.min(n);
     if kmax == 0 {
-        return LuResult::default();
+        return (LuResult::default(), RunStats::default());
     }
     let bo = cfg.bo.max(1);
     let bi = cfg.bi.max(1);
@@ -116,7 +125,7 @@ pub fn factorize_os(pool: &Pool, a: &mut Matrix, cfg: &LuConfig) -> LuResult {
         }
     }
 
-    run(gb.build(), pool);
+    let run_stats = run(gb.build(), pool);
 
     // Deferred left-of-panel pivot application + pivot vector assembly.
     let mut crew = Crew::new();
@@ -128,10 +137,13 @@ pub fn factorize_os(pool: &Pool, a: &mut Matrix, cfg: &LuConfig) -> LuResult {
         ipiv.extend_from_slice(&piv);
     }
     debug_assert_eq!(ipiv.len(), kmax);
-    LuResult {
-        ipiv,
-        la_stats: None,
-    }
+    (
+        LuResult {
+            ipiv,
+            la_stats: None,
+        },
+        run_stats,
+    )
 }
 
 /// Swap rows `base+i` ↔ `piv[i]` over columns `jlo..jhi` (same convention
@@ -234,6 +246,34 @@ mod tests {
         let out = crate::lu::factorize(&mut f, &cfg(8, 4), None);
         let r = residual(&a0, &f, &out.ipiv);
         assert!(r < 1e-11, "residual {r}");
+    }
+
+    #[test]
+    fn lu_os_task_order_is_deterministic() {
+        // With a 0-worker pool the caller is the only executor, so
+        // `start_order` is exactly the ready queue's pop order. The
+        // (priority, release-sequence) total ordering makes it identical
+        // across runs — the reproducibility prerequisite for comparing
+        // LU_OS schedules (it did not hold under the old id tie-break
+        // once tasks were released out of declaration order).
+        let a0 = Matrix::random(40, 40, 17);
+        let pool = Pool::new(0);
+        let runner = || {
+            let mut f = a0.clone();
+            let (out, stats) = factorize_os_stats(&pool, &mut f, &cfg(8, 4));
+            (out.ipiv, stats.start_order, f)
+        };
+        let (ipiv0, order0, f0) = runner();
+        assert!(!order0.is_empty());
+        assert_eq!(order0[0], 0, "P(0) is the only seed task");
+        for _ in 0..2 {
+            let (ipiv, order, f) = runner();
+            assert_eq!(order, order0, "pop order must reproduce exactly");
+            assert_eq!(ipiv, ipiv0);
+            for (x, y) in f.data().iter().zip(f0.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //!
 //! The runtime executes a static task graph: each [`Task`] carries a
 //! priority and a closure; edges are data dependencies declared at build
-//! time. Ready tasks go into a priority queue (higher priority first, FIFO
-//! within a priority level — the paper's OmpSs configuration prioritizes
-//! panel-factorization tasks to advance the critical path). Workers (pool
-//! threads plus the caller) pull from the queue until the graph drains.
+//! time. Ready tasks go into a priority queue (higher priority first,
+//! FIFO *by release order* within a priority level — a total, enqueue-
+//! sequenced tie-break, so the pop order is deterministic; the paper's
+//! OmpSs configuration prioritizes panel-factorization tasks to advance
+//! the critical path). Workers (pool threads plus the caller) pull from
+//! the queue until the graph drains.
 //!
 //! Tasks run *sequential* kernels (the paper links LU_OS against
 //! single-threaded BLIS): TP only, no nested BDP — that contrast with the
@@ -120,18 +122,34 @@ pub struct Graph {
     missing: Vec<AtomicUsize>,
 }
 
-/// Ready-queue entry ordered by (priority, FIFO id).
+/// Ready-queue entry ordered by (priority, FIFO enqueue sequence).
+///
+/// The FIFO key is the *enqueue* sequence number — assigned under the
+/// queue lock when a task becomes ready — not the task id. Ordering by
+/// id looked FIFO but was latently unfair: a task released late by its
+/// dependencies would jump ahead of an equal-priority task that had
+/// been waiting in the queue, merely because it was *declared* earlier.
+/// (And `BinaryHeap` by itself leaves equal keys in unspecified order,
+/// so without a total tie-break the pop order would not even be
+/// deterministic.) A total (priority, seq) key makes the pop order a
+/// pure function of the release order, which is what lets
+/// `LU_OS`-schedule comparisons reproduce run over run.
 #[derive(PartialEq, Eq)]
 struct Ready {
     priority: Priority,
+    seq: u64,
     id: usize,
 }
 
 impl Ord for Ready {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Max-heap: higher priority first; among equals, lower id first.
+        // Max-heap: higher priority first; among equals, earlier
+        // enqueue first. The trailing id comparison never decides a pop
+        // (seqs are unique); it keeps Ord consistent with the derived
+        // Eq over all fields.
         self.priority
             .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
             .then(other.id.cmp(&self.id))
     }
 }
@@ -142,8 +160,22 @@ impl PartialOrd for Ready {
     }
 }
 
+struct ReadyQueue {
+    heap: BinaryHeap<Ready>,
+    /// Next FIFO sequence number (monotone; assigned at push).
+    next_seq: u64,
+}
+
+impl ReadyQueue {
+    fn push(&mut self, priority: Priority, id: usize) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Ready { priority, seq, id });
+    }
+}
+
 struct SchedState {
-    queue: Mutex<BinaryHeap<Ready>>,
+    queue: Mutex<ReadyQueue>,
     ready_cv: Condvar,
     remaining: AtomicUsize,
 }
@@ -173,22 +205,23 @@ pub fn run(graph: Graph, pool: &Pool) -> RunStats {
     }
     let graph = Arc::new(graph);
     let sched = Arc::new(SchedState {
-        queue: Mutex::new(BinaryHeap::new()),
+        queue: Mutex::new(ReadyQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }),
         ready_cv: Condvar::new(),
         remaining: AtomicUsize::new(n),
     });
-    // Seed the queue with dependency-free tasks.
+    // Seed the queue with dependency-free tasks (in declaration order —
+    // their release order, since none has prerequisites).
     {
         let mut q = sched.queue.lock().unwrap();
         for id in 0..n {
             if graph.missing[id].load(Ordering::Relaxed) == 0 {
-                q.push(Ready {
-                    priority: graph.tasks[id].priority,
-                    id,
-                });
+                q.push(graph.tasks[id].priority, id);
             }
         }
-        assert!(!q.is_empty(), "task graph has no entry tasks (cycle?)");
+        assert!(!q.heap.is_empty(), "task graph has no entry tasks (cycle?)");
     }
 
     let handles: Vec<_> = (0..pool.workers())
@@ -220,7 +253,7 @@ fn executor_loop(graph: &Graph, sched: &SchedState, stats: &Mutex<RunStats>, me:
                 if sched.remaining.load(Ordering::Acquire) == 0 {
                     return;
                 }
-                if let Some(r) = q.pop() {
+                if let Some(r) = q.heap.pop() {
                     break r.id;
                 }
                 q = sched.ready_cv.wait(q).unwrap();
@@ -249,10 +282,7 @@ fn executor_loop(graph: &Graph, sched: &SchedState, stats: &Mutex<RunStats>, me:
         if !newly_ready.is_empty() || finished {
             let mut q = sched.queue.lock().unwrap();
             for id in newly_ready {
-                q.push(Ready {
-                    priority: graph.tasks[id].priority,
-                    id,
-                });
+                q.push(graph.tasks[id].priority, id);
             }
             drop(q);
             sched.ready_cv.notify_all();
@@ -333,6 +363,45 @@ mod tests {
         }
         let stats = run(gb.build(), &pool);
         assert_eq!(stats.start_order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fifo_follows_release_order_not_task_id() {
+        // The latent-unfairness pin: task 2 (`waits`) becomes ready at
+        // seed time, task 1 (`released`) only after the root runs. True
+        // FIFO-within-priority must run the longer-waiting task 2 first,
+        // even though task 1 has the smaller id. (The old id-ordered
+        // tie-break ran [0, 1, 2].)
+        let pool = Pool::new(0);
+        let mut gb = GraphBuilder::new();
+        let root = gb.add("root", 0, &[], || {});
+        let _released = gb.add("released", 0, &[root], || {});
+        let _waits = gb.add("waits", 0, &[], || {});
+        let stats = run(gb.build(), &pool);
+        assert_eq!(stats.start_order, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn pop_order_is_deterministic_across_runs() {
+        // Same graph, same single-participant execution => identical
+        // start order, run after run — the reproducibility prerequisite
+        // for comparing schedules (e.g. steal-on vs steal-off LU_OS).
+        let build = || {
+            let mut gb = GraphBuilder::new();
+            let root = gb.add("root", 5, &[], || {});
+            for i in 0..6 {
+                let d = gb.add(format!("u{i}"), 0, &[root], || {});
+                if i % 2 == 0 {
+                    gb.add(format!("p{i}"), 10, &[d], || {});
+                }
+            }
+            gb.build()
+        };
+        let pool = Pool::new(0);
+        let first = run(build(), &pool).start_order;
+        for _ in 0..3 {
+            assert_eq!(run(build(), &pool).start_order, first);
+        }
     }
 
     #[test]

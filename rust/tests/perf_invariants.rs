@@ -6,9 +6,14 @@
 //! 2. LU results are **bitwise identical** across SIMD/portable
 //!    micro-kernels (skipped gracefully on non-AVX2 hosts) and across
 //!    crew sizes with the Loop-3 × Loop-4 chunked macro-kernel.
+//!
+//! The hybrid-scheduling PR (ISSUE 5) extends invariant 1 to steal-on
+//! runs: the tile deques are armed in place and the crew's scheduler is
+//! cached across jobs, so stealing adds no steady-state allocations —
+//! and the packed-arena lease rules are untouched.
 
 use malleable_lu::blis::micro::{set_kernel, simd_available, Kernel};
-use malleable_lu::blis::BlisParams;
+use malleable_lu::blis::{BlisParams, StealPolicy};
 use malleable_lu::lu::{lu_blocked_rl, lu_lookahead, LaOpts};
 use malleable_lu::matrix::{naive, Matrix};
 use malleable_lu::pool::{Crew, EntryPolicy, Pool};
@@ -63,6 +68,38 @@ fn lookahead_lu_reaches_arena_steady_state_across_iterations() {
     assert!(stats.iters >= 2, "must run several look-ahead iterations");
     let r = naive::lu_residual(&a0, &f, &ipiv);
     assert!(r < 1e-12, "residual {r}");
+}
+
+#[test]
+fn steal_on_blocked_lu_keeps_zero_allocation_steady_state() {
+    // Same structure as the test above, with the hybrid scheduler on at
+    // full static fraction (the deque-heaviest configuration): warm up,
+    // then assert the second factorization allocates nothing — neither
+    // packed buffers (arena counters) nor per-job schedulers (the crew's
+    // sched cache, observable as arena invariance + completion).
+    let params = BlisParams::tiny().with_steal(StealPolicy::Fraction(1000));
+    let mut crew = Crew::new();
+
+    let mut a = Matrix::random(96, 96, 21);
+    let _ = lu_blocked_rl(&mut crew, &params, a.view_mut(), 16, 4);
+    let warm = crew.arena().stats();
+    assert!(warm.allocations > 0, "warm-up must have leased buffers");
+    assert_eq!(
+        warm.free_buffers as u64, warm.allocations,
+        "all leases must be back on the free list"
+    );
+
+    let mut b = Matrix::random(96, 96, 22);
+    let _ = lu_blocked_rl(&mut crew, &params, b.view_mut(), 16, 4);
+    let steady = crew.arena().stats();
+    assert!(steady.leases > warm.leases + 10);
+    assert_eq!(
+        warm.allocations, steady.allocations,
+        "steal-on steady-state LU allocated packed buffers"
+    );
+    assert_eq!(warm.bytes_allocated, steady.bytes_allocated);
+    let s = crew.stats();
+    assert!(s.hybrid_tiles > 0, "hybrid scheduler must have been active");
 }
 
 fn factor_bits(a0: &Matrix, members: usize) -> (Vec<usize>, Vec<u64>) {

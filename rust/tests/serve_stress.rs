@@ -3,8 +3,8 @@
 //! cancelled request must leave a resumable partial factorization, and a
 //! cancelled request's pool must remain fully reusable.
 
-use malleable_lu::blis::{gemm, BlisParams};
-use malleable_lu::lu::{lu_blocked_rl_ctl, lu_unblocked, BlockedCtl};
+use malleable_lu::blis::{gemm, BlisParams, StealPolicy};
+use malleable_lu::lu::{lu_blocked_rl, lu_blocked_rl_ctl, lu_unblocked, BlockedCtl};
 use malleable_lu::matrix::{naive, Matrix};
 use malleable_lu::pool::{Crew, EntryPolicy};
 use malleable_lu::serve::{factorize_batch, LuRequest, LuServer, ServeConfig};
@@ -141,6 +141,138 @@ fn cancelled_request_leaves_server_reusable() {
         assert!(!out.cancelled);
         let r = naive::lu_residual(&a0, &out.a, &out.ipiv);
         assert!(r < 1e-11, "round {round}: residual {r}");
+    }
+    server.shutdown();
+}
+
+/// Lease revocation *under stealing* (ISSUE 5): members churn through
+/// revocable leases while the leader factorizes under the hybrid
+/// static/dynamic schedule with a high static fraction — so when a
+/// member's lease is revoked its static deque is routinely non-empty.
+/// Revocation lands at the next job boundary (a member never abandons a
+/// job mid-flight), the remaining participants drain the departed
+/// member's tiles by stealing, and the result must stay bitwise equal to
+/// the lone-leader run — with **no leaked arena blocks**: after every
+/// run, every packed buffer ever allocated is back on the free list, and
+/// a steady-state rerun allocates nothing (the `perf_invariants.rs`
+/// accounting, reused here under churn).
+#[test]
+fn lease_revocation_under_stealing_completes_without_leaks() {
+    // Fully-static split maximizes the tiles stranded in a revoked
+    // member's deque.
+    let params = BlisParams::tiny().with_steal(StealPolicy::Fraction(1000));
+    let n = 96;
+    let a0 = Matrix::random(n, n, 31);
+
+    // Reference bits: leader alone, same steal policy.
+    let (ipiv_ref, bits_ref) = {
+        let mut f = a0.clone();
+        let mut crew = Crew::new();
+        let ipiv = lu_blocked_rl(&mut crew, &params, f.view_mut(), 16, 4);
+        (ipiv, f.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>())
+    };
+
+    let mut crew = Crew::new();
+    let shared = crew.shared();
+    let stop = Arc::new(AtomicBool::new(false));
+    let churners: Vec<_> = (0..3)
+        .map(|i| {
+            let s = Arc::clone(&shared);
+            let st = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !st.load(Ordering::Acquire) {
+                    // Short lease: revoked after a few lease polls, i.e.
+                    // a few jobs — mid-factorization, deques non-empty.
+                    let quota = AtomicUsize::new(0);
+                    let st2 = Arc::clone(&st);
+                    let policy = if i % 2 == 0 {
+                        EntryPolicy::Immediate
+                    } else {
+                        EntryPolicy::JobBoundary
+                    };
+                    s.member_loop_while(policy, move || {
+                        quota.fetch_add(1, Ordering::Relaxed) < 150
+                            && !st2.load(Ordering::Acquire)
+                    });
+                }
+            })
+        })
+        .collect();
+
+    // Warm-up run under churn, then assert the steady state.
+    let mut f1 = a0.clone();
+    let p1 = lu_blocked_rl(&mut crew, &params, f1.view_mut(), 16, 4);
+    let warm = crew.arena().stats();
+    assert!(warm.allocations > 0);
+    assert_eq!(
+        warm.free_buffers as u64, warm.allocations,
+        "arena blocks leaked after churn run (leases not all returned)"
+    );
+
+    let mut f2 = a0.clone();
+    let p2 = lu_blocked_rl(&mut crew, &params, f2.view_mut(), 16, 4);
+    let steady = crew.arena().stats();
+    assert_eq!(
+        warm.allocations, steady.allocations,
+        "steady-state run under churn allocated packed buffers"
+    );
+    assert_eq!(
+        steady.free_buffers as u64, steady.allocations,
+        "arena blocks leaked on the steady-state run"
+    );
+
+    stop.store(true, Ordering::Release);
+    crew.disband();
+    for c in churners {
+        c.join().unwrap();
+    }
+
+    // Residual + bitwise agreement with the lone-leader reference.
+    for (ipiv, f) in [(&p1, &f1), (&p2, &f2)] {
+        assert_eq!(*ipiv, ipiv_ref);
+        let r = naive::lu_residual(&a0, f, ipiv);
+        assert!(r < 1e-11, "residual {r}");
+        for (x, y) in f.data().iter().zip(&bits_ref) {
+            assert_eq!(x.to_bits(), *y, "bits differ from lone-leader run");
+        }
+    }
+}
+
+/// The same revocation-under-stealing scenario at the serve layer: a
+/// steal-on batch over a multi-worker server (floaters enlist into and
+/// are revoked from in-flight crews as the queue drains) must produce
+/// reference results and return every arena block.
+#[test]
+fn serve_batch_with_stealing_returns_all_arena_blocks() {
+    let cfg = ServeConfig {
+        workers: 3,
+        bo: 16,
+        bi: 4,
+        params: BlisParams::tiny().with_steal(StealPolicy::Fraction(900)),
+        ..Default::default()
+    };
+    let server = LuServer::new(cfg);
+    let sizes = [48usize, 64, 40, 56];
+    for round in 0..2 {
+        let originals: Vec<Matrix> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| Matrix::random(n, n, 60 + round * 10 + i as u64))
+            .collect();
+        let reqs: Vec<LuRequest> = originals.iter().map(|a| LuRequest::new(a.clone())).collect();
+        let results = server.factorize_batch(reqs);
+        for (res, a0) in results.iter().zip(&originals) {
+            assert!(!res.cancelled, "req{} cancelled", res.id);
+            let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+            assert!(r < 1e-11, "req{}: residual {r}", res.id);
+            let mut g = a0.clone();
+            assert_eq!(res.ipiv, naive::lu(g.view_mut()), "req{} pivots", res.id);
+        }
+        let stats = server.arena_stats();
+        assert_eq!(
+            stats.free_buffers as u64, stats.allocations,
+            "round {round}: arena blocks leaked under steal-on serving"
+        );
     }
     server.shutdown();
 }

@@ -1,0 +1,277 @@
+//! The deterministic scheduler-test harness for hybrid static/dynamic
+//! tile-stealing (ISSUE 5, DESIGN.md §13).
+//!
+//! The tentpole invariant: the steal-on schedule moves tile *ownership*
+//! between crew members — never a tile's arithmetic — so every
+//! factorization result is **bitwise identical** to the steal-off
+//! (central-ticket) schedule, for every kind × precision × crew size,
+//! including crews that grow and shrink mid-run. The harness *proves*
+//! this rather than assuming it:
+//!
+//! - the generic blocked driver is the deterministic backbone (its
+//!   operation sequence is schedule-independent by construction, unlike
+//!   ET whose cuts are timing-dependent);
+//! - crew resize events (member join / lease revocation) are injected at
+//!   panel-checkpoint boundaries chosen by the property generator, so a
+//!   crew is factorizing with one roster and finishes with another;
+//! - a fixed exhaustive sweep covers all kinds × both precisions × crew
+//!   sizes 1–6, and a quickcheck_lite property randomizes shapes, block
+//!   sizes, steal fractions, and event schedules on top.
+
+use malleable_lu::blis::{BlisParams, StealPolicy};
+use malleable_lu::factor::{factorize_blocked, FactorCtl, FactorKind};
+use malleable_lu::matrix::Mat;
+use malleable_lu::pool::{Crew, EntryPolicy};
+use malleable_lu::scalar::Scalar;
+use malleable_lu::util::quickcheck_lite::{forall_res, Gen};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A crew-resize event fired when the factorization commits column
+/// `at_col`: member `member` (0-based) joins or leaves the crew.
+#[derive(Copy, Clone, Debug)]
+struct ResizeEvent {
+    at_col: usize,
+    member: usize,
+    join: bool,
+}
+
+/// Bitwise signature of one factorization run: every matrix element's
+/// bits, the pivots, and the tau bits.
+#[derive(PartialEq, Eq, Debug)]
+struct RunBits {
+    a: Vec<u64>,
+    ipiv: Vec<usize>,
+    tau: Vec<u64>,
+    cols_done: usize,
+}
+
+/// Run one blocked factorization of `a0` under the given steal policy
+/// with `crew_size` total participants (leader + `crew_size - 1`
+/// members), applying `events` at their column boundaries.
+///
+/// Members are parked threads gated by per-member `active` flags; the
+/// driver's checkpoint callback flips the flags per the event schedule,
+/// so joins and revocations land exactly at iteration boundaries — the
+/// places a WS absorption or a serve-layer lease change would land.
+fn run_schedule<S: Scalar>(
+    kind: FactorKind,
+    a0: &Mat<S>,
+    steal: StealPolicy,
+    crew_size: usize,
+    bo: usize,
+    events: &[ResizeEvent],
+) -> RunBits {
+    let params = BlisParams::tiny().with_steal(steal);
+    let mut crew = Crew::new();
+    let shared = crew.shared();
+    let n_members = crew_size.saturating_sub(1);
+
+    // Per-member gates: `active[i]` tells member `i` to be enlisted.
+    let active: Arc<Vec<AtomicBool>> =
+        Arc::new((0..n_members).map(|_| AtomicBool::new(false)).collect());
+    let quit = Arc::new(AtomicBool::new(false));
+    let threads: Vec<_> = (0..n_members)
+        .map(|i| {
+            let s = Arc::clone(&shared);
+            let act = Arc::clone(&active);
+            let q = Arc::clone(&quit);
+            std::thread::spawn(move || {
+                while !q.load(Ordering::Acquire) {
+                    if act[i].load(Ordering::Acquire) {
+                        let act2 = Arc::clone(&act);
+                        let q2 = Arc::clone(&q);
+                        s.member_loop_while(EntryPolicy::JobBoundary, move || {
+                            act2[i].load(Ordering::Acquire) && !q2.load(Ordering::Acquire)
+                        });
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Everyone except the event-scheduled latecomers starts enlisted.
+    let initially_active: Vec<bool> = (0..n_members)
+        .map(|i| !events.iter().any(|e| e.member == i && e.join))
+        .collect();
+    for (i, &on) in initially_active.iter().enumerate() {
+        active[i].store(on, Ordering::Release);
+    }
+    // Wait for the initial roster so the first iterations really run at
+    // the requested crew size.
+    let want = initially_active.iter().filter(|&&b| b).count();
+    while shared.members() < want {
+        std::thread::yield_now();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let events_sorted: Vec<ResizeEvent> = {
+        let mut v = events.to_vec();
+        v.sort_by_key(|e| e.at_col);
+        v
+    };
+    let active2 = Arc::clone(&active);
+    let checkpoint = move |k: usize| {
+        let mut idx = cursor.load(Ordering::Relaxed);
+        while idx < events_sorted.len() && events_sorted[idx].at_col <= k {
+            let e = events_sorted[idx];
+            if e.member < active2.len() {
+                active2[e.member].store(e.join, Ordering::Release);
+            }
+            idx += 1;
+        }
+        cursor.store(idx, Ordering::Relaxed);
+    };
+    let ctl = FactorCtl {
+        cancel: None,
+        tag: None,
+        on_checkpoint: Some(&checkpoint),
+    };
+
+    let mut f = a0.clone();
+    let out = factorize_blocked(kind, &mut crew, &params, f.view_mut(), bo, 4, &ctl);
+
+    quit.store(true, Ordering::Release);
+    crew.disband();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    RunBits {
+        a: f.data().iter().map(|x| x.to_bits_u64()).collect(),
+        ipiv: out.ipiv,
+        tau: out.tau.iter().map(|x| x.to_bits_u64()).collect(),
+        cols_done: out.cols_done,
+    }
+}
+
+fn problem<S: Scalar>(kind: FactorKind, n: usize, seed: u64) -> Mat<S> {
+    match kind {
+        FactorKind::Chol => Mat::<S>::random_spd(n, seed),
+        _ => Mat::<S>::random(n, n, seed),
+    }
+}
+
+/// The exhaustive acceptance sweep: all kinds × both precisions × crew
+/// sizes 1–6, each with a mid-run grow *and* shrink, steal-on compared
+/// bitwise against the steal-off run of the same crew size — and
+/// against the lone-leader baseline, pinning crew-size invariance too.
+#[test]
+fn steal_on_bitwise_equals_steal_off_all_kinds_precisions_crews() {
+    fn sweep<S: Scalar>() {
+        let n = 48;
+        let bo = 8;
+        for &kind in FactorKind::all() {
+            let a0 = problem::<S>(kind, n, 0xA5 + kind.name().len() as u64);
+            let baseline = run_schedule(kind, &a0, StealPolicy::Off, 1, bo, &[]);
+            assert_eq!(baseline.cols_done, n);
+            for crew_size in 1..=6usize {
+                // Member 0 leaves after 16 columns (a genuine shrink:
+                // it starts enlisted); when there is a *distinct* last
+                // member, it joins after 24 (a grow). At crew_size == 2
+                // the only member gets the leave alone — pairing it
+                // with a join would mark it a latecomer and turn the
+                // shrink into a no-op.
+                let mut events: Vec<ResizeEvent> = if crew_size >= 2 {
+                    vec![ResizeEvent {
+                        at_col: 16,
+                        member: 0,
+                        join: false,
+                    }]
+                } else {
+                    Vec::new()
+                };
+                if crew_size >= 3 {
+                    events.push(ResizeEvent {
+                        at_col: 24,
+                        member: crew_size - 2,
+                        join: true,
+                    });
+                }
+                let off = run_schedule(kind, &a0, StealPolicy::Off, crew_size, bo, &events);
+                for steal in [StealPolicy::Auto, StealPolicy::Fraction(1000)] {
+                    let on = run_schedule(kind, &a0, steal, crew_size, bo, &events);
+                    assert_eq!(
+                        on, off,
+                        "{}/{}: steal {steal:?} vs off, crew {crew_size}",
+                        kind.name(),
+                        S::NAME
+                    );
+                }
+                assert_eq!(
+                    off, baseline,
+                    "{}/{}: crew {crew_size} vs lone leader",
+                    kind.name(),
+                    S::NAME
+                );
+            }
+        }
+    }
+    sweep::<f64>();
+    sweep::<f32>();
+}
+
+/// Randomized property on top of the sweep: shapes, outer blocks, steal
+/// fractions, and event schedules drawn by quickcheck_lite; every drawn
+/// configuration must agree bitwise with its steal-off twin.
+#[test]
+fn property_random_resize_schedules_agree_bitwise() {
+    forall_res("steal-on ≡ steal-off under random resize", 12, |g: &mut Gen| {
+        let n = g.usize_in(24, 56);
+        let bo = g.choose(&[4usize, 8, 16]);
+        let crew_size = g.usize_in(1, 6);
+        let kind = g.choose(&[FactorKind::Lu, FactorKind::Chol, FactorKind::Qr]);
+        let steal = if g.bool_with(0.5) {
+            StealPolicy::Auto
+        } else {
+            StealPolicy::Fraction(g.usize_in(0, 1000) as u16)
+        };
+        let n_events = g.usize_in(0, crew_size.saturating_sub(1).min(2));
+        let events: Vec<ResizeEvent> = (0..n_events)
+            .map(|i| ResizeEvent {
+                // Random iteration boundary: any committed-column count.
+                at_col: g.usize_in(1, (n - 1).max(1)),
+                member: g.usize_in(0, crew_size.saturating_sub(2)),
+                join: i % 2 == 1 && g.bool_with(0.7),
+            })
+            .collect();
+        let seed = g.seed();
+        g.label(format!(
+            "kind={} n={n} bo={bo} crew={crew_size} steal={steal:?} events={events:?}",
+            kind.name()
+        ));
+        let a0 = problem::<f64>(kind, n, seed);
+        let off = run_schedule(kind, &a0, StealPolicy::Off, crew_size, bo, &events);
+        let on = run_schedule(kind, &a0, steal, crew_size, bo, &events);
+        if on != off {
+            return Err("steal-on and steal-off runs disagree bitwise".into());
+        }
+        if off.cols_done != n {
+            return Err(format!("incomplete factorization: {}", off.cols_done));
+        }
+        Ok(())
+    });
+}
+
+/// The f32 edge of the property (smaller, fixed sweep — the full random
+/// sweep above runs in f64).
+#[test]
+fn f32_random_fractions_agree_bitwise() {
+    forall_res("f32 steal-on ≡ steal-off", 6, |g: &mut Gen| {
+        let n = g.usize_in(24, 48);
+        let crew_size = g.usize_in(1, 4);
+        let kind = g.choose(&[FactorKind::Lu, FactorKind::Chol, FactorKind::Qr]);
+        let frac = g.usize_in(0, 1000) as u16;
+        let seed = g.seed();
+        g.label(format!("kind={} n={n} crew={crew_size} frac={frac}", kind.name()));
+        let a0 = problem::<f32>(kind, n, seed);
+        let off = run_schedule(kind, &a0, StealPolicy::Off, crew_size, 8, &[]);
+        let on = run_schedule(kind, &a0, StealPolicy::Fraction(frac), crew_size, 8, &[]);
+        if on != off {
+            return Err("f32 steal-on and steal-off runs disagree bitwise".into());
+        }
+        Ok(())
+    });
+}
