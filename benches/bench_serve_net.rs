@@ -1,0 +1,233 @@
+//! Network-daemon soak: hundreds of concurrent protocol clients over a
+//! Unix socket, mixed kinds (LU/Cholesky/QR/solve), precisions and
+//! sizes, measuring per-request submit→response latency (p50/p99) and
+//! aggregate factorization GFLOPS through the wire.
+//!
+//! The structural assertion matters more than the throughput number:
+//! after the soak, every admitted request must have been answered
+//! exactly once (`admitted == delivered + reaped`, with `reaped == 0`
+//! since no client disconnects mid-request), no crew leases may remain
+//! registered, and the pack arena must have every buffer back on its
+//! free list — the daemon leaks nothing under concurrent load.
+
+use malleable_lu::cli::Args;
+use malleable_lu::factor::FactorKind;
+use malleable_lu::matrix::{Mat, Matrix};
+use malleable_lu::serve::client::{ServeClient, WireEvent};
+use malleable_lu::serve::net::{BindAddr, NetConfig, ServeDaemon};
+use malleable_lu::serve::proto;
+use malleable_lu::serve::ServeConfig;
+use malleable_lu::solve::SolvePrec;
+use malleable_lu::util::{gflops, lu_flops};
+use std::time::{Duration, Instant};
+
+/// One client's tally, merged into the global stats after its thread
+/// joins.
+#[derive(Default)]
+struct ClientTally {
+    /// Submit→terminal-event seconds for every completed request.
+    latencies: Vec<f64>,
+    /// Factorization flops of the completed requests.
+    flops: f64,
+    /// Requests refused with a typed rejection (still "answered").
+    rejected: usize,
+}
+
+/// Build and submit request `i` of client `c`, then block for its
+/// terminal event. Returns `None` on a typed rejection.
+fn one_request(client: &mut ServeClient, c: usize, i: usize) -> Option<(f64, f64)> {
+    let pick = c * 7 + i;
+    let n = [32usize, 48, 64, 96][pick % 4];
+    let seed = pick as u64 + 1;
+    let t0 = Instant::now();
+    let (id, flops) = match pick % 5 {
+        // A fifth of the stream exercises the solve path (always f64
+        // systems; the mixed path is the interesting arithmetic).
+        4 => {
+            let a = Matrix::random_dd(n, seed);
+            let b = vec![1.0; n];
+            let req = proto::SolveReq {
+                prec: SolvePrec::Mixed,
+                priority: (pick % 3) as u8,
+                deadline_ms: 0,
+                bo: 0,
+                bi: 0,
+                a,
+                b,
+            };
+            let id = client.submit_solve(&req).expect("submit solve");
+            (id, lu_flops(n, n))
+        }
+        k => {
+            let kind = FactorKind::all()[k % 3];
+            let a = if pick % 2 == 0 {
+                let a0 = match kind {
+                    FactorKind::Chol => Matrix::random_spd(n, seed),
+                    _ => Matrix::random(n, n, seed),
+                };
+                proto::WireMat::F64(a0)
+            } else {
+                let a0 = match kind {
+                    FactorKind::Chol => Mat::<f32>::random_spd(n, seed),
+                    _ => Mat::<f32>::random(n, n, seed),
+                };
+                proto::WireMat::F32(a0)
+            };
+            let req = proto::FactorReq {
+                kind,
+                priority: (pick % 3) as u8,
+                deadline_ms: 0,
+                bo: 0,
+                bi: 0,
+                a,
+            };
+            let id = client.submit_factor(&req).expect("submit factor");
+            (id, kind.flops(n, n))
+        }
+    };
+    match client.recv().expect("recv") {
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id, "completion order is per-request here");
+            assert!(!resp.cancelled, "no deadline was set");
+            Some((t0.elapsed().as_secs_f64(), flops))
+        }
+        WireEvent::Solve { id: rid, resp } => {
+            assert_eq!(rid, id);
+            assert!(resp.converged, "dd solve must converge");
+            Some((t0.elapsed().as_secs_f64(), flops))
+        }
+        WireEvent::Rejected { id: rid, .. } => {
+            assert_eq!(rid, id);
+            None
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_serve_net.json");
+    // Acceptance floor for the full soak: ≥256 concurrent clients.
+    let clients = args.get("clients", if quick { 48usize } else { 256 });
+    let per_client = args.get("reqs", if quick { 2usize } else { 3 });
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+
+    let sock = std::env::temp_dir().join(format!("mlu-bench-net-{}.sock", std::process::id()));
+    let addr = BindAddr::Unix(sock.clone());
+    let mut cfg = NetConfig {
+        serve: ServeConfig {
+            workers,
+            bo: 48,
+            bi: 16,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // One request in flight per client: a pending bound of `clients`
+    // admits the whole soak, so rejections (counted, still answered)
+    // only appear if the scheduler truly falls behind.
+    cfg.admission.max_pending = clients;
+    let daemon = ServeDaemon::bind(&addr, cfg).expect("bind unix socket");
+
+    let wall = Instant::now();
+    let handles: Vec<std::thread::JoinHandle<ClientTally>> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut tally = ClientTally::default();
+                let mut client = ServeClient::connect(&addr).expect("connect");
+                for i in 0..per_client {
+                    match one_request(&mut client, c, i) {
+                        Some((secs, flops)) => {
+                            tally.latencies.push(secs);
+                            tally.flops += flops;
+                        }
+                        None => tally.rejected += 1,
+                    }
+                }
+                client.goodbye().expect("goodbye");
+                tally
+            })
+        })
+        .collect();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut total_flops = 0.0;
+    let mut rejected = 0usize;
+    for h in handles {
+        let t = h.join().expect("client thread");
+        latencies.extend(t.latencies);
+        total_flops += t.flops;
+        rejected += t.rejected;
+    }
+    let secs = wall.elapsed().as_secs_f64();
+
+    daemon.drain(Duration::from_secs(10));
+    let stats = daemon.stats();
+    let arena = daemon.arena_stats();
+    daemon.shutdown();
+
+    // Zero dropped-without-rejection: every submitted request produced
+    // exactly one terminal event, and the daemon's own ledger agrees.
+    let total = clients * per_client;
+    assert_eq!(latencies.len() + rejected, total, "every request answered");
+    assert_eq!(stats.conns_accepted as usize, clients);
+    assert_eq!(
+        stats.admission.admitted,
+        stats.delivered + stats.reaped,
+        "admitted requests must be delivered or reaped"
+    );
+    assert_eq!(stats.reaped, 0, "no client disconnected mid-request");
+    assert_eq!(stats.malformed, 0);
+    assert!(daemon.registry().is_empty(), "no leaked crew leases");
+    assert_eq!(
+        arena.free_buffers as u64, arena.allocations,
+        "every arena buffer returned"
+    );
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile(&latencies, 50.0) * 1e3;
+    let p99 = percentile(&latencies, 99.0) * 1e3;
+    let agg = gflops(total_flops, secs);
+    println!(
+        "serve-net soak: {clients} clients x {per_client} reqs over {} in {secs:.3}s",
+        daemon.local_addr()
+    );
+    println!(
+        "  completed={} rejected={rejected} p50={p50:.2}ms p99={p99:.2}ms aggregate={agg:.2} GFLOPS",
+        latencies.len()
+    );
+
+    if out_path != "-" {
+        use malleable_lu::util::json::Value;
+        let doc = Value::obj([
+            ("bench", Value::Str("serve_net".into())),
+            ("quick", Value::Bool(quick)),
+            ("clients", Value::Num(clients as f64)),
+            ("reqs_per_client", Value::Num(per_client as f64)),
+            ("workers", Value::Num(workers as f64)),
+            ("secs", Value::Num(secs)),
+            ("completed", Value::Num(latencies.len() as f64)),
+            ("rejected", Value::Num(rejected as f64)),
+            ("p50_ms", Value::Num(p50)),
+            ("p99_ms", Value::Num(p99)),
+            ("aggregate_gflops", Value::Num(agg)),
+            ("delivered", Value::Num(stats.delivered as f64)),
+            ("reaped", Value::Num(stats.reaped as f64)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+    println!("bench_serve_net OK");
+}

@@ -41,6 +41,11 @@
 //!   one shared pool, generalizing Worker Sharing ("donate idle
 //!   threads to whichever problem is behind") and Early Termination
 //!   (cancel superseded or deadline-expired requests) across problems.
+//!   [`serve::net::ServeDaemon`] fronts it with a network daemon (TCP
+//!   and Unix sockets) speaking the versioned binary protocol of
+//!   [`serve::proto`], with admission control and graceful drain
+//!   (DESIGN.md §14); [`serve::client::ServeClient`] is the matching
+//!   client library behind `mlu sclient`.
 //! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
 //!   `LU_OS` baseline.
 //! - [`trace`] — an Extrae-like execution tracer (ASCII Gantt + Chrome

@@ -9,6 +9,19 @@
 //!               # to full double-precision backward error (DESIGN.md §12)
 //! mlu batch     --sizes 256,192,320 --workers 4 [--kind lu|chol|qr|mix]
 //!               [--prec f32|f64] [--check --compare --trace t.json]
+//! mlu serve     --listen unix:/run/mlu.sock|tcp:host:port [--workers 4]
+//!               [--max-pending 64 --max-client 16 --max-dim 8192
+//!                --grace-ms 5000]   # network daemon; SIGTERM/SIGINT
+//!                                   # triggers a graceful drain (§14)
+//! mlu sclient   --connect unix:...|tcp:... --count 8 --n 96
+//!               [--kind lu|chol|qr|solve|mix --prec f32|f64|mix
+//!                --priority 0 --deadline-ms 0 --check]  # protocol client
+//! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
+//! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
+//! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
+//! mlu xla       --n 192 --bo 64 [--stepped]      # PJRT artifact demo
+//! mlu info
+//! ```
 //!
 //! Global flags: `--params mc,kc,nc` overrides the cache-topology-derived
 //! BLIS blocking; `--kernel auto|simd|portable` forces a micro-kernel
@@ -17,12 +30,6 @@
 //! static/dynamic tile-stealing with an auto or fixed static fraction,
 //! or the central-ticket baseline (also bitwise identical; DESIGN.md
 //! §13).
-//! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
-//! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
-//! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
-//! mlu xla       --n 192 --bo 64 [--stepped]      # PJRT artifact demo
-//! mlu info
-//! ```
 //!
 //! `mlu chol` and `mlu qr` run Cholesky / Householder QR through the
 //! *same* generic WS+ET look-ahead driver as the LU variants — the
@@ -49,7 +56,9 @@ fn main() {
         "chol" => cmd_factor_kind(FactorKind::Chol, &args),
         "qr" => cmd_factor_kind(FactorKind::Qr, &args),
         "solve" => cmd_solve(&args),
-        "batch" | "serve" => cmd_batch(&args),
+        "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
+        "sclient" => cmd_sclient(&args),
         "trace" => cmd_trace(&args),
         "fig" => cmd_fig(&args),
         "gepp" => cmd_gepp(&args),
@@ -64,9 +73,11 @@ fn main() {
 }
 
 const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
-commands: factorize | chol | qr | solve | batch | trace | fig {14,15,16,17} | gepp | xla | info
+commands: factorize | chol | qr | solve | batch | serve | sclient | trace | fig {14,15,16,17} | gepp | xla | info
 global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
-solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)";
+solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)
+serve flags: --listen unix:<path>|tcp:<host:port> --workers N --max-pending Q --max-client C --max-dim D --grace-ms G
+sclient flags: --connect <addr> --count N --n SIZE --kind lu|chol|qr|solve|mix --prec f32|f64|mix --check";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
 /// cache-topology-derived defaults. A malformed override is a hard
@@ -517,6 +528,369 @@ fn batch_f32(
         println!("  all residuals OK (f32 tolerances)");
     }
     0
+}
+
+/// Set by the SIGINT/SIGTERM handler; polled by [`cmd_serve`]'s main
+/// loop. The handler is async-signal-safe: it only stores a flag.
+static SERVE_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn serve_on_signal(_sig: i32) {
+    SERVE_STOP.store(true, std::sync::atomic::Ordering::Release);
+}
+
+/// Install SIGINT (2) and SIGTERM (15) handlers through the C library's
+/// `signal` symbol — there is no `libc` crate in the offline registry
+/// and `std` exposes no signal API. Linux-only, like the Unix-socket
+/// transport itself (DESIGN.md §14.7).
+fn install_serve_signal_handlers() {
+    extern "C" {
+        fn signal(sig: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    unsafe {
+        signal(2, serve_on_signal); // SIGINT
+        signal(15, serve_on_signal); // SIGTERM
+    }
+}
+
+/// `mlu serve`: bind the network daemon and block until SIGTERM/SIGINT,
+/// then drain gracefully — stop accepting, finish or ET in-flight work,
+/// flush every response — before shutting the compute pool down
+/// (DESIGN.md §14).
+fn cmd_serve(args: &Args) -> i32 {
+    use malleable_lu::serve::{admission::AdmissionCfg, net};
+    let listen = args.get_str("listen", "tcp:127.0.0.1:7070");
+    let addr = match net::BindAddr::parse(&listen) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --listen: {e}");
+            return 2;
+        }
+    };
+    let net_cfg = net::NetConfig {
+        serve: serve::ServeConfig {
+            workers: args.get("workers", 4usize),
+            bo: args.get("bo", 64),
+            bi: args.get("bi", 16),
+            params: resolve_params(args),
+            ..Default::default()
+        },
+        admission: AdmissionCfg {
+            max_pending: args.get("max-pending", 64usize),
+            max_client_inflight: args.get("max-client", 16usize),
+            max_dim: args.get("max-dim", 8192usize),
+        },
+        ..Default::default()
+    };
+    let grace = std::time::Duration::from_millis(args.get("grace-ms", 5000u64));
+    let workers = net_cfg.serve.workers;
+    let daemon = match net::ServeDaemon::bind(&addr, net_cfg) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "mlu serve: listening on {} ({workers} workers); SIGTERM or SIGINT drains",
+        daemon.local_addr()
+    );
+    install_serve_signal_handlers();
+    while !SERVE_STOP.load(std::sync::atomic::Ordering::Acquire) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("mlu serve: draining (grace {} ms)", grace.as_millis());
+    daemon.drain(grace);
+    daemon.shutdown();
+    let s = daemon.stats();
+    println!(
+        "mlu serve: done — conns={} admitted={} delivered={} reaped={} \
+         rejected(overloaded={} too_large={} draining={}) malformed={} oversized={}",
+        s.conns_accepted,
+        s.admission.admitted,
+        s.delivered,
+        s.reaped,
+        s.admission.rejected_overloaded,
+        s.admission.rejected_too_large,
+        s.admission.rejected_draining,
+        s.malformed,
+        s.oversized_frames
+    );
+    // The drain invariant (DESIGN.md §14.6): every admitted request was
+    // answered exactly once or reaped against a vanished client.
+    if s.admission.admitted != s.delivered + s.reaped {
+        eprintln!("DRAIN INVARIANT VIOLATED: admitted != delivered + reaped");
+        return 1;
+    }
+    0
+}
+
+/// What `mlu sclient` remembers per in-flight request so it can verify
+/// the response (`--check`) and report latency.
+enum SentReq {
+    /// Factorization submitted in f64.
+    F64 {
+        /// Requested kind.
+        kind: FactorKind,
+        /// Original matrix for the residual check.
+        a0: Matrix,
+    },
+    /// Factorization submitted in f32.
+    F32 {
+        /// Requested kind.
+        kind: FactorKind,
+        /// Original matrix for the residual check.
+        a0: Mat<f32>,
+    },
+    /// Mixed-precision solve of an order-`n` system with x* = 1.
+    Solve {
+        /// System order (for the backward-error tolerance).
+        n: usize,
+    },
+}
+
+/// `mlu sclient`: submit a pipelined burst of requests to a running
+/// daemon and report per-request latency; with `--check`, verify
+/// residuals / backward errors client-side.
+fn cmd_sclient(args: &Args) -> i32 {
+    use malleable_lu::serve::client::{ServeClient, WireEvent};
+    use malleable_lu::serve::net::BindAddr;
+    use malleable_lu::serve::proto;
+    use std::time::Instant;
+
+    let addr_s = args.get_str("connect", "tcp:127.0.0.1:7070");
+    let addr = match BindAddr::parse(&addr_s) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --connect: {e}");
+            return 2;
+        }
+    };
+    let count = args.get("count", 8usize);
+    let n = args.get("n", 96usize);
+    let kind_s = args.get_str("kind", "mix");
+    let prec_s = args.get_str("prec", "f64");
+    if !matches!(prec_s.as_str(), "f64" | "f32" | "mix") {
+        eprintln!("unknown --prec {prec_s:?} (expected f32|f64|mix)");
+        return 2;
+    }
+    let priority = args.get("priority", 0u8);
+    let deadline_ms = args.get("deadline-ms", 0u32);
+    let bo = args.get("bo", 0u16);
+    let bi = args.get("bi", 0u16);
+    let check = args.has("check");
+
+    let mut client = match ServeClient::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+
+    // Pipelined submission: write every request up front, then drain
+    // responses in whatever completion order the daemon produces.
+    let t0 = Instant::now();
+    let mut sent: std::collections::HashMap<u64, (SentReq, Instant)> =
+        std::collections::HashMap::new();
+    for i in 0..count {
+        let seed = i as u64 + 1;
+        let kname = if kind_s == "mix" {
+            ["lu", "chol", "qr", "solve"][i % 4]
+        } else {
+            kind_s.as_str()
+        };
+        let submit = if kname == "solve" {
+            // Diagonally-dominant system with x* = 1 (b = A·1).
+            let a = Matrix::random_dd(n, seed);
+            let mut b = vec![0.0; n];
+            for j in 0..n {
+                for r in 0..n {
+                    b[r] += a[(r, j)];
+                }
+            }
+            let req = proto::SolveReq {
+                prec: SolvePrec::Mixed,
+                priority,
+                deadline_ms,
+                bo,
+                bi,
+                a,
+                b,
+            };
+            client.submit_solve(&req).map(|id| (id, SentReq::Solve { n }))
+        } else {
+            let Some(kind) = FactorKind::parse(kname) else {
+                eprintln!("unknown --kind {kname:?} (expected lu|chol|qr|solve|mix)");
+                return 2;
+            };
+            let use_f32 = match prec_s.as_str() {
+                "f32" => true,
+                "mix" => i % 2 == 1,
+                _ => false,
+            };
+            if use_f32 {
+                let a0 = match kind {
+                    FactorKind::Chol => Mat::<f32>::random_spd(n, seed),
+                    _ => Mat::<f32>::random(n, n, seed),
+                };
+                let req = proto::FactorReq {
+                    kind,
+                    priority,
+                    deadline_ms,
+                    bo,
+                    bi,
+                    a: proto::WireMat::F32(a0.clone()),
+                };
+                client.submit_factor(&req).map(|id| (id, SentReq::F32 { kind, a0 }))
+            } else {
+                let a0 = match kind {
+                    FactorKind::Chol => Matrix::random_spd(n, seed),
+                    _ => Matrix::random(n, n, seed),
+                };
+                let req = proto::FactorReq {
+                    kind,
+                    priority,
+                    deadline_ms,
+                    bo,
+                    bi,
+                    a: proto::WireMat::F64(a0.clone()),
+                };
+                client.submit_factor(&req).map(|id| (id, SentReq::F64 { kind, a0 }))
+            }
+        };
+        match submit {
+            Ok((id, info)) => {
+                sent.insert(id, (info, Instant::now()));
+            }
+            Err(e) => {
+                eprintln!("submit failed: {e}");
+                return 1;
+            }
+        }
+    }
+
+    let mut failures = 0usize;
+    let mut rejects = 0usize;
+    for _ in 0..count {
+        let ev = match client.recv() {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!("recv failed: {e}");
+                return 1;
+            }
+        };
+        match ev {
+            WireEvent::Factor { id, resp } => {
+                let Some((info, t)) = sent.remove(&id) else {
+                    eprintln!("response for unknown id {id}");
+                    failures += 1;
+                    continue;
+                };
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                println!(
+                    "  req{id} {}:{} n={} cols_done={} cancelled={} {ms:.1} ms",
+                    resp.kind.name(),
+                    resp.a.prec_name(),
+                    resp.a.cols(),
+                    resp.cols_done,
+                    resp.cancelled
+                );
+                if check && !sclient_check_factor(id, &info, &resp) {
+                    failures += 1;
+                }
+            }
+            WireEvent::Solve { id, resp } => {
+                let Some((info, t)) = sent.remove(&id) else {
+                    eprintln!("response for unknown id {id}");
+                    failures += 1;
+                    continue;
+                };
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                println!(
+                    "  req{id} solve:{} n={} refine_iters={} berr={:.3e} {ms:.1} ms",
+                    resp.prec.name(),
+                    resp.x.len(),
+                    resp.refine_iters,
+                    resp.backward_error
+                );
+                if check {
+                    let SentReq::Solve { n } = info else {
+                        eprintln!("req{id}: solve response for a factor request");
+                        failures += 1;
+                        continue;
+                    };
+                    let tol = SolvePrec::Mixed.expected_backward_error(n);
+                    if resp.cancelled || !resp.converged || resp.backward_error > tol {
+                        eprintln!(
+                            "req{id}: solve check failed (cancelled={} converged={} berr={:.3e} tol={tol:.3e})",
+                            resp.cancelled,
+                            resp.converged,
+                            resp.backward_error
+                        );
+                        failures += 1;
+                    }
+                }
+            }
+            WireEvent::Rejected { id, reject } => {
+                eprintln!("  req{id} REJECTED {}: {}", reject.code.name(), reject.reason);
+                sent.remove(&id);
+                rejects += 1;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "sclient: {count} requests in {secs:.3}s ({rejects} rejected, {failures} check failures)"
+    );
+    let _ = client.goodbye();
+    if failures > 0 || rejects > 0 || !sent.is_empty() {
+        return 1;
+    }
+    0
+}
+
+/// Client-side residual verification for one factorization response.
+fn sclient_check_factor(id: u64, info: &SentReq, resp: &serve::proto::FactorResp) -> bool {
+    use malleable_lu::serve::proto::{WireMat, WireVec};
+    if resp.cancelled {
+        eprintln!("req{id}: cancelled (cols_done={})", resp.cols_done);
+        return false;
+    }
+    let ipiv: Vec<usize> = resp.ipiv.iter().map(|&p| p as usize).collect();
+    let (res, tol) = match (info, &resp.a) {
+        (SentReq::F64 { kind, a0 }, WireMat::F64(f)) => {
+            let r = match kind {
+                FactorKind::Lu => naive::lu_residual(a0, f, &ipiv),
+                FactorKind::Chol => naive::chol_residual(a0, f),
+                FactorKind::Qr => match &resp.tau {
+                    WireVec::F64(tau) => naive::qr_residual(a0, f, tau),
+                    WireVec::F32(_) => f64::NAN,
+                },
+            };
+            (r, 1e-10)
+        }
+        (SentReq::F32 { kind, a0 }, WireMat::F32(f)) => {
+            let r = match kind {
+                FactorKind::Lu => naive::lu_residual(a0, f, &ipiv),
+                FactorKind::Chol => naive::chol_residual(a0, f),
+                FactorKind::Qr => match &resp.tau {
+                    WireVec::F32(tau) => naive::qr_residual(a0, f, tau),
+                    WireVec::F64(_) => f64::NAN,
+                },
+            };
+            let tol = 16.0 * a0.rows() as f64 * <f32 as Scalar>::EPSILON.to_f64();
+            (r, tol)
+        }
+        _ => {
+            eprintln!("req{id}: response precision does not match the request");
+            return false;
+        }
+    };
+    if res.is_nan() || res > tol {
+        eprintln!("req{id}: residual {res:.3e} above {tol:.3e}");
+        return false;
+    }
+    true
 }
 
 fn cmd_trace(args: &Args) -> i32 {

@@ -1,0 +1,329 @@
+//! Admission control for the serve daemon: bounded pending work, typed
+//! load-shedding, per-client fairness, and the drain state machine
+//! (DESIGN.md §14.5–§14.6).
+//!
+//! The daemon's compute layer ([`crate::serve::LuServer`]) multiplexes a
+//! fixed worker pool; accepting unbounded work would only grow the queue
+//! and every request's latency. This module is the front door that says
+//! *no* early and cheaply, before any matrix payload is admitted to the
+//! queue:
+//!
+//! - **Global bound** (`max_pending`): at most this many requests may be
+//!   admitted-but-not-yet-responded across all connections; beyond it,
+//!   requests are rejected [`RejectCode::Overloaded`].
+//! - **Fairness quota** (`max_client_inflight`): one connection may hold
+//!   at most this many of the pending slots, so a greedy pipelining
+//!   client cannot starve the rest. The invariant (tested in
+//!   `admission::tests` and end-to-end in `tests/serve_net.rs`): *for any
+//!   client c at any time, `inflight(c) ≤ max_client_inflight`, and a
+//!   client below its quota is refused only if the global bound is
+//!   reached or the daemon is draining.*
+//! - **Size bound** (`max_dim`): any matrix dimension above it is
+//!   rejected [`RejectCode::TooLarge`] before decode buffers are grown.
+//! - **Drain** ([`AdmissionCtl::start_drain`]): flips the state machine
+//!   from `Accepting` to `Draining`; every later admission attempt gets
+//!   [`RejectCode::Draining`] while already-admitted work runs (or is
+//!   ET-cancelled at the grace deadline) and its responses flush. When
+//!   the last pending request is released the state is observably
+//!   `Drained` ([`AdmissionCtl::is_drained`]).
+//!
+//! All counters are lock-free (`AtomicUsize`/`AtomicU64` CAS); admission
+//! sits on the reader-thread hot path of every request.
+
+use super::proto::RejectCode;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Admission bounds (the operator-tunable knobs of `mlu serve`).
+#[derive(Copy, Clone, Debug)]
+pub struct AdmissionCfg {
+    /// Global cap on admitted-but-unanswered requests (all connections).
+    pub max_pending: usize,
+    /// Per-connection cap on admitted-but-unanswered requests.
+    pub max_client_inflight: usize,
+    /// Largest accepted matrix dimension (rows or cols).
+    pub max_dim: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        Self {
+            max_pending: 64,
+            max_client_inflight: 16,
+            max_dim: 8192,
+        }
+    }
+}
+
+/// Monotone counters the daemon exports ([`AdmissionCtl::stats`]).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests admitted to the compute queue.
+    pub admitted: u64,
+    /// Rejections: global pending bound or fairness quota hit.
+    pub rejected_overloaded: u64,
+    /// Rejections: matrix dimension above `max_dim`.
+    pub rejected_too_large: u64,
+    /// Rejections: arrived while draining.
+    pub rejected_draining: u64,
+}
+
+/// The admission-control state machine (module docs above). One per
+/// daemon; shared by every connection's reader thread.
+pub struct AdmissionCtl {
+    cfg: AdmissionCfg,
+    pending: AtomicUsize,
+    per_client: Mutex<HashMap<u64, usize>>,
+    draining: AtomicBool,
+    admitted: AtomicU64,
+    rej_overloaded: AtomicU64,
+    rej_too_large: AtomicU64,
+    rej_draining: AtomicU64,
+}
+
+impl AdmissionCtl {
+    /// New controller in the `Accepting` state.
+    pub fn new(cfg: AdmissionCfg) -> Self {
+        Self {
+            cfg,
+            pending: AtomicUsize::new(0),
+            per_client: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+            admitted: AtomicU64::new(0),
+            rej_overloaded: AtomicU64::new(0),
+            rej_too_large: AtomicU64::new(0),
+            rej_draining: AtomicU64::new(0),
+        }
+    }
+
+    /// The bounds this controller enforces.
+    pub fn cfg(&self) -> &AdmissionCfg {
+        &self.cfg
+    }
+
+    /// Try to admit one request from `client` with matrix dimensions
+    /// `dims`. On `Ok`, the caller holds one pending slot and **must**
+    /// eventually call [`release`](Self::release) exactly once (after
+    /// the response or rejection has been written, or the client
+    /// reaped). On `Err`, nothing is held.
+    ///
+    /// Check order: drain state, then size, then quotas — a daemon that
+    /// is draining says so even for oversized requests, and an oversized
+    /// request is refused without charging the client's quota.
+    pub fn try_admit(&self, client: u64, dims: (usize, usize)) -> Result<(), RejectCode> {
+        if self.draining.load(Ordering::Acquire) {
+            self.rej_draining.fetch_add(1, Ordering::Relaxed);
+            return Err(RejectCode::Draining);
+        }
+        if dims.0 > self.cfg.max_dim || dims.1 > self.cfg.max_dim {
+            self.rej_too_large.fetch_add(1, Ordering::Relaxed);
+            return Err(RejectCode::TooLarge);
+        }
+        // Take the per-client slot first (under the map lock), then the
+        // global slot via CAS; back out the client slot if the global
+        // bound loses the race.
+        {
+            let mut map = self.per_client.lock().unwrap();
+            let slot = map.entry(client).or_insert(0);
+            if *slot >= self.cfg.max_client_inflight {
+                self.rej_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(RejectCode::Overloaded);
+            }
+            *slot += 1;
+        }
+        let mut cur = self.pending.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cfg.max_pending {
+                let mut map = self.per_client.lock().unwrap();
+                if let Some(slot) = map.get_mut(&client) {
+                    *slot -= 1;
+                }
+                self.rej_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(RejectCode::Overloaded);
+            }
+            match self.pending.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Return `client`'s pending slot after its response (or rejection
+    /// for an admitted-then-failed request) has been flushed, or after
+    /// the connection was reaped. Pairs one-to-one with a successful
+    /// [`try_admit`](Self::try_admit).
+    pub fn release(&self, client: u64) {
+        {
+            let mut map = self.per_client.lock().unwrap();
+            match map.get_mut(&client) {
+                Some(slot) if *slot > 0 => {
+                    *slot -= 1;
+                    if *slot == 0 {
+                        map.remove(&client);
+                    }
+                }
+                _ => debug_assert!(false, "release without matching admit (client {client})"),
+            }
+        }
+        let prev = self.pending.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "global release without matching admit");
+    }
+
+    /// Admitted-but-unanswered requests right now (all connections).
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// `client`'s admitted-but-unanswered requests right now.
+    pub fn client_inflight(&self, client: u64) -> usize {
+        self.per_client
+            .lock()
+            .unwrap()
+            .get(&client)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Enter the `Draining` state: every subsequent
+    /// [`try_admit`](Self::try_admit) is refused with
+    /// [`RejectCode::Draining`]. Idempotent; there is no way back to
+    /// `Accepting` (a drain is the start of a shutdown).
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether the controller refuses new work.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Terminal state: draining *and* every admitted request released.
+    pub fn is_drained(&self) -> bool {
+        self.is_draining() && self.pending() == 0
+    }
+
+    /// Snapshot of the monotone admission counters.
+    pub fn stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_overloaded: self.rej_overloaded.load(Ordering::Relaxed),
+            rejected_too_large: self.rej_too_large.load(Ordering::Relaxed),
+            rejected_draining: self.rej_draining.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(max_pending: usize, max_client: usize, max_dim: usize) -> AdmissionCtl {
+        AdmissionCtl::new(AdmissionCfg {
+            max_pending,
+            max_client_inflight: max_client,
+            max_dim,
+        })
+    }
+
+    #[test]
+    fn global_bound_sheds_overload() {
+        let c = ctl(2, 10, 100);
+        assert!(c.try_admit(1, (10, 10)).is_ok());
+        assert!(c.try_admit(2, (10, 10)).is_ok());
+        assert_eq!(c.try_admit(3, (10, 10)), Err(RejectCode::Overloaded));
+        c.release(1);
+        assert!(c.try_admit(3, (10, 10)).is_ok());
+        assert_eq!(c.pending(), 2);
+        let s = c.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.rejected_overloaded, 1);
+    }
+
+    #[test]
+    fn fairness_quota_caps_one_client_but_not_the_next() {
+        // The fairness invariant: the greedy client is refused at its
+        // quota while another client is still admitted.
+        let c = ctl(10, 2, 100);
+        assert!(c.try_admit(7, (10, 10)).is_ok());
+        assert!(c.try_admit(7, (10, 10)).is_ok());
+        assert_eq!(c.try_admit(7, (10, 10)), Err(RejectCode::Overloaded));
+        assert_eq!(c.client_inflight(7), 2);
+        assert!(c.try_admit(8, (10, 10)).is_ok(), "other client starved");
+        c.release(7);
+        assert!(c.try_admit(7, (10, 10)).is_ok());
+    }
+
+    #[test]
+    fn too_large_is_rejected_without_charging_quota() {
+        let c = ctl(10, 1, 64);
+        assert_eq!(c.try_admit(1, (65, 10)), Err(RejectCode::TooLarge));
+        assert_eq!(c.try_admit(1, (10, 65)), Err(RejectCode::TooLarge));
+        assert_eq!(c.client_inflight(1), 0);
+        // The quota is untouched: an in-bounds request still fits.
+        assert!(c.try_admit(1, (64, 64)).is_ok());
+        assert_eq!(c.stats().rejected_too_large, 2);
+    }
+
+    #[test]
+    fn drain_state_machine_reaches_drained() {
+        let c = ctl(10, 10, 100);
+        assert!(c.try_admit(1, (10, 10)).is_ok());
+        assert!(!c.is_draining());
+        c.start_drain();
+        assert!(c.is_draining());
+        assert!(!c.is_drained(), "still one pending");
+        assert_eq!(c.try_admit(2, (10, 10)), Err(RejectCode::Draining));
+        // Draining outranks every other rejection reason.
+        assert_eq!(c.try_admit(2, (1000, 1000)), Err(RejectCode::Draining));
+        c.release(1);
+        assert!(c.is_drained());
+        assert_eq!(c.stats().rejected_draining, 2);
+    }
+
+    #[test]
+    fn release_frees_both_global_and_client_slots() {
+        let c = ctl(2, 2, 100);
+        assert!(c.try_admit(5, (1, 1)).is_ok());
+        assert!(c.try_admit(5, (1, 1)).is_ok());
+        c.release(5);
+        c.release(5);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.client_inflight(5), 0);
+        // Both bounds fully recovered.
+        assert!(c.try_admit(5, (1, 1)).is_ok());
+        assert!(c.try_admit(5, (1, 1)).is_ok());
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_the_bound() {
+        use std::sync::Arc;
+        let c = Arc::new(ctl(8, 8, 100));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut admitted = 0u64;
+                for _ in 0..500 {
+                    if c.try_admit(t, (10, 10)).is_ok() {
+                        assert!(c.pending() <= 8, "pending bound violated");
+                        admitted += 1;
+                        c.release(t);
+                    }
+                }
+                admitted
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.stats().admitted, total);
+    }
+}

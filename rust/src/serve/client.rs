@@ -1,0 +1,181 @@
+//! [`ServeClient`] — the library-side counterpart of the
+//! [`net`](super::net) daemon: connects over TCP or Unix socket, runs
+//! the version handshake, and speaks the [`proto`](super::proto) frames.
+//!
+//! The client is deliberately synchronous and pipelining-friendly:
+//! [`submit_factor`](ServeClient::submit_factor) /
+//! [`submit_solve`](ServeClient::submit_solve) write a request frame and
+//! return its id immediately; [`recv`](ServeClient::recv) blocks for the
+//! next server event (response *or* typed rejection), which may arrive
+//! in any completion order. `mlu sclient` and the `bench_serve_net` soak
+//! harness drive hundreds of these concurrently from plain threads.
+
+use super::net::BindAddr;
+use super::proto::{self, ReadEvent, Reject};
+use std::io::Write;
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+enum ClientStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl std::io::Read for ClientStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            Self::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ClientStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            Self::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            Self::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// One event read back from the daemon; the `id` fields echo the id the
+/// matching `submit_*` call returned.
+#[derive(Debug)]
+pub enum WireEvent {
+    /// A factorization completed (possibly ET-cancelled — check
+    /// [`proto::FactorResp::cancelled`]).
+    Factor {
+        /// The id assigned at submission.
+        id: u64,
+        /// The decoded response.
+        resp: proto::FactorResp,
+    },
+    /// A solve completed.
+    Solve {
+        /// The id assigned at submission.
+        id: u64,
+        /// The decoded response.
+        resp: proto::SolveResp,
+    },
+    /// The daemon refused a request (or, with `id == 0`, the session).
+    Rejected {
+        /// The id of the refused request; 0 for session-level rejects.
+        id: u64,
+        /// Typed code and operator-facing reason.
+        reject: Reject,
+    },
+}
+
+/// A connected protocol session (module docs above).
+pub struct ServeClient {
+    stream: ClientStream,
+    next_id: u64,
+}
+
+fn io_err(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+impl ServeClient {
+    /// Connect to `addr` and complete the HELLO/HELLO_ACK handshake.
+    /// Fails with `InvalidData` if the server rejects our version.
+    pub fn connect(addr: &BindAddr) -> std::io::Result<Self> {
+        let stream = match addr {
+            BindAddr::Tcp(a) => ClientStream::Tcp(TcpStream::connect(a.as_str())?),
+            BindAddr::Unix(p) => ClientStream::Unix(UnixStream::connect(p)?),
+        };
+        let mut c = Self { stream, next_id: 1 };
+        c.stream.write_all(&proto::encode_hello(proto::VERSION, proto::VERSION))?;
+        c.stream.flush()?;
+        match c.read_event()? {
+            (f, _) if f == proto::T_HELLO_ACK => Ok(c),
+            (_, Some(WireEvent::Rejected { reject, .. })) => Err(io_err(format!(
+                "server rejected session: {} ({})",
+                reject.code.name(),
+                reject.reason
+            ))),
+            _ => Err(io_err("expected HELLO_ACK")),
+        }
+    }
+
+    /// Write a factorization request frame; returns its id immediately
+    /// (pipelined — pair with a later [`recv`](Self::recv)).
+    pub fn submit_factor(&mut self, req: &proto::FactorReq) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&proto::encode_factor_req(id, req))?;
+        self.stream.flush()?;
+        Ok(id)
+    }
+
+    /// Write a solve request frame; returns its id immediately.
+    pub fn submit_solve(&mut self, req: &proto::SolveReq) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&proto::encode_solve_req(id, req))?;
+        self.stream.flush()?;
+        Ok(id)
+    }
+
+    /// Block for the next server event. Responses arrive in completion
+    /// order, not submission order.
+    pub fn recv(&mut self) -> std::io::Result<WireEvent> {
+        match self.read_event()? {
+            (_, Some(ev)) => Ok(ev),
+            (ty, None) => Err(io_err(format!("unexpected frame type 0x{ty:02x}"))),
+        }
+    }
+
+    /// Optional per-read timeout for [`recv`](Self::recv); `None`
+    /// blocks indefinitely (the default).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        match &self.stream {
+            ClientStream::Tcp(s) => s.set_read_timeout(timeout),
+            ClientStream::Unix(s) => s.set_read_timeout(timeout),
+        }
+    }
+
+    /// Send GOODBYE and close the session cleanly.
+    pub fn goodbye(mut self) -> std::io::Result<()> {
+        self.stream.write_all(&proto::encode_goodbye())?;
+        self.stream.flush()
+    }
+
+    fn read_event(&mut self) -> std::io::Result<(u8, Option<WireEvent>)> {
+        match proto::read_frame(&mut self.stream, usize::MAX, &mut |_| true) {
+            ReadEvent::Frame(f) => {
+                let ev = match f.ty {
+                    proto::T_FACTOR_OK => Some(WireEvent::Factor {
+                        id: f.id,
+                        resp: proto::decode_factor_resp(&f.payload).map_err(|e| io_err(e.0))?,
+                    }),
+                    proto::T_SOLVE_OK => Some(WireEvent::Solve {
+                        id: f.id,
+                        resp: proto::decode_solve_resp(&f.payload).map_err(|e| io_err(e.0))?,
+                    }),
+                    proto::T_REJECT => Some(WireEvent::Rejected {
+                        id: f.id,
+                        reject: proto::decode_reject(&f.payload).map_err(|e| io_err(e.0))?,
+                    }),
+                    _ => None,
+                };
+                Ok((f.ty, ev))
+            }
+            ReadEvent::Eof | ReadEvent::Closed => Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )),
+            ReadEvent::Oversized(..) => Err(io_err("oversized frame from server")),
+            ReadEvent::Corrupt(e) => Err(io_err(e.0)),
+        }
+    }
+}

@@ -50,6 +50,10 @@ pub struct DriveCfg<'a> {
     pub cancel: &'a AtomicBool,
     /// Absolute deadline, folded into `cancel` at every checkpoint.
     pub deadline: Option<Instant>,
+    /// Originating network connection id when the request came through
+    /// the daemon ([`crate::serve::net`]); folds into the trace tag as
+    /// `req{id}@c{client}:{kind}:{prec}`.
+    pub client: Option<u64>,
 }
 
 /// Factorize `a` on the calling thread, leading `crew`, in `a`'s own
@@ -57,7 +61,10 @@ pub struct DriveCfg<'a> {
 /// multi-problem traces can tell requests (kind *and* precision) apart.
 pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> FactorOutcome<S> {
     let (m, n) = (a.rows(), a.cols());
-    let tag = format!("req{}:{}:{}", cfg.lease.id, cfg.kind.name(), S::NAME);
+    let tag = match cfg.client {
+        Some(c) => format!("req{}@c{c}:{}:{}", cfg.lease.id, cfg.kind.name(), S::NAME),
+        None => format!("req{}:{}:{}", cfg.lease.id, cfg.kind.name(), S::NAME),
+    };
     // Steal-pressure feedback (DESIGN.md §13): at every panel checkpoint
     // the stolen-tile fraction of the hybrid-scheduled work done since
     // the previous checkpoint is folded into the lease, where the
@@ -129,6 +136,7 @@ mod tests {
             lease: &lease,
             cancel: &cancel,
             deadline: None,
+            client: None,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -161,6 +169,7 @@ mod tests {
                 lease: &lease,
                 cancel: &cancel,
                 deadline: None,
+                client: None,
             };
             let out = drive(&mut crew, f.view_mut(), &cfg);
             assert!(!out.cancelled, "{}", kind.name());
@@ -194,6 +203,7 @@ mod tests {
             lease: &lease,
             cancel: &cancel,
             deadline: None,
+            client: None,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -229,6 +239,7 @@ mod tests {
             lease: &lease,
             cancel: &cancel,
             deadline: None,
+            client: None,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -255,6 +266,7 @@ mod tests {
             lease: &lease,
             cancel: &cancel,
             deadline: Some(Instant::now()),
+            client: None,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(out.cancelled);

@@ -52,7 +52,11 @@
 //! crews whose updates are already balanced — stolen-tile counts feeding
 //! lease sizing.
 
+pub mod admission;
+pub mod client;
 pub mod driver;
+pub mod net;
+pub mod proto;
 pub mod registry;
 
 pub use registry::{CrewRegistry, Lease};
@@ -117,6 +121,12 @@ pub struct LuRequest<S: Scalar = f64> {
     pub bo: Option<usize>,
     /// Inner block-size override.
     pub bi: Option<usize>,
+    /// Originating network connection id, when the request arrived via
+    /// the [`net`] daemon (`None` for in-process submissions). Folded
+    /// into the trace tag (`req{id}@c{client}:{kind}:{prec}`) so
+    /// per-request Gantt lanes name the connection, and used by
+    /// admission accounting.
+    pub client: Option<u64>,
 }
 
 impl<S: Scalar> LuRequest<S> {
@@ -129,6 +139,7 @@ impl<S: Scalar> LuRequest<S> {
             deadline: None,
             bo: None,
             bi: None,
+            client: None,
         }
     }
 
@@ -158,6 +169,14 @@ impl<S: Scalar> LuRequest<S> {
         self.bi = Some(bi);
         self
     }
+
+    /// Tag the request with its originating network connection id (set
+    /// by the [`net`] daemon; in-process callers normally leave it
+    /// unset).
+    pub fn with_client(mut self, client: u64) -> Self {
+        self.client = Some(client);
+        self
+    }
 }
 
 /// A mixed-precision (or precision-selected) linear-system solve
@@ -180,6 +199,8 @@ pub struct SolveRequest {
     pub bo: Option<usize>,
     /// Inner block-size override.
     pub bi: Option<usize>,
+    /// Originating network connection id (see [`LuRequest::client`]).
+    pub client: Option<u64>,
 }
 
 impl SolveRequest {
@@ -193,6 +214,7 @@ impl SolveRequest {
             deadline: None,
             bo: None,
             bi: None,
+            client: None,
         }
     }
 
@@ -211,6 +233,13 @@ impl SolveRequest {
     /// Set the wall-clock budget after which the request is cancelled.
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Tag the request with its originating network connection id (see
+    /// [`LuRequest::with_client`]).
+    pub fn with_client(mut self, client: u64) -> Self {
+        self.client = Some(client);
         self
     }
 }
@@ -311,6 +340,33 @@ impl<R> JobHandle<R> {
             }
             slot = self.state.cv.wait(slot).unwrap();
         }
+    }
+
+    /// A type-erased cancel handle that outlives `wait(self)`: the
+    /// [`net`] daemon keeps one per outstanding request so a drain
+    /// deadline (or a vanished client) can still ET the job after the
+    /// writer thread has consumed the typed handle.
+    pub fn cancel_token(&self) -> CancelToken
+    where
+        R: Send + 'static,
+    {
+        let state = Arc::clone(&self.state);
+        CancelToken(Arc::new(move || {
+            state.cancel.store(true, Ordering::Release);
+        }))
+    }
+}
+
+/// Type-erased request-cancellation handle (see
+/// [`JobHandle::cancel_token`]). Cloneable; calling [`CancelToken::cancel`]
+/// is idempotent and stops the request at its next panel checkpoint.
+#[derive(Clone)]
+pub struct CancelToken(Arc<dyn Fn() + Send + Sync>);
+
+impl CancelToken {
+    /// Request early termination (same semantics as [`JobHandle::cancel`]).
+    pub fn cancel(&self) {
+        (self.0)();
     }
 }
 
@@ -613,6 +669,7 @@ fn lead_factor<S: Scalar>(
         deadline,
         bo,
         bi,
+        client,
     } = req;
     let bo = bo.unwrap_or(state.cfg.bo);
     let bi = bi.unwrap_or(state.cfg.bi);
@@ -663,6 +720,7 @@ fn lead_factor<S: Scalar>(
         lease: &lease,
         cancel: &jstate.cancel,
         deadline,
+        client,
     };
     let out = driver::drive(&mut crew, a.view_mut(), &dcfg);
     // Withdraw before disbanding: floaters leave at the epoch bump, and
@@ -705,6 +763,7 @@ fn lead_solve(
         deadline,
         bo,
         bi,
+        client,
     } = req;
     let bo = bo.unwrap_or(state.cfg.bo);
     let bi = bi.unwrap_or(state.cfg.bi);
@@ -753,7 +812,10 @@ fn lead_solve(
         FactorKind::Lu.remaining_cost(&state.cfg.hw, n, n, 0, bo, bi) / rate,
     ));
     state.registry.register(Arc::clone(&lease));
-    let tag = format!("req{id}:solve:{}", prec.name());
+    let tag = match client {
+        Some(c) => format!("req{id}@c{c}:solve:{}", prec.name()),
+        None => format!("req{id}:solve:{}", prec.name()),
+    };
     let hw = state.cfg.hw;
     let lease2 = Arc::clone(&lease);
     let cancel2 = &jstate.cancel;

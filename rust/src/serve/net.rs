@@ -1,0 +1,971 @@
+//! The network front-end of the serve layer: [`ServeDaemon`] exposes an
+//! [`LuServer`] over TCP or a Unix-domain socket, speaking the
+//! [`proto`](super::proto) wire protocol under the
+//! [`admission`](super::admission) policy (DESIGN.md §14).
+//!
+//! Thread architecture — intake is fully decoupled from compute:
+//!
+//! ```text
+//!  acceptor thread ──(new socket, client id)──▶ per-connection pair:
+//!    reader thread: handshake → frames → admission → LuServer::submit
+//!        │  bounded sync_channel (backpressure: a slow writer stalls
+//!        ▼  the reader, which stalls the socket, which stalls the client)
+//!    writer thread: polls job handles in completion order, encodes
+//!                   responses, flushes, releases admission slots
+//! ```
+//!
+//! The compute crews never touch a socket: a request enters the same
+//! priority queue as in-process submissions, tagged with its connection
+//! id (`req{id}@c{cid}:{kind}:{prec}` trace lanes).
+//!
+//! **Lifecycle.** [`ServeDaemon::drain`] implements graceful shutdown:
+//! stop accepting connections, flip admission to `Draining` (new
+//! requests get typed [`RejectCode::Draining`] rejects), let in-flight
+//! work finish — or early-terminate it at the grace deadline through the
+//! per-request [`CancelToken`]s — and flush every response before the
+//! sockets close. [`ServeDaemon::shutdown`] is drain plus joining every
+//! thread and stopping the compute pool; the accounting invariant
+//! `admitted == delivered + reaped` then holds exactly ([`DaemonStats`]).
+//!
+//! **Failure containment.** A client that disconnects mid-request is
+//! *reaped*: its outstanding jobs are cancelled and awaited (so crew
+//! leases unregister and arena buffers return — `free_buffers ==
+//! allocations` survives any disconnect pattern), its admission slots
+//! are released, and nothing else in the daemon notices.
+
+use super::admission::{AdmissionCfg, AdmissionCtl, AdmissionStats};
+use super::proto::{self, ReadEvent, RejectCode};
+use super::{CancelToken, JobHandle, JobResult, LuRequest, LuServer, ServeConfig, SolveJobResult, SolveRequest};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Where the daemon listens (or a client connects).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BindAddr {
+    /// TCP, e.g. `tcp:127.0.0.1:7070` (bind to port 0 for an ephemeral
+    /// port, then read it back via [`ServeDaemon::local_addr`]).
+    Tcp(String),
+    /// Unix-domain socket path, e.g. `unix:/run/mlu.sock`.
+    Unix(PathBuf),
+}
+
+impl BindAddr {
+    /// Parse `unix:<path>`, `tcp:<host:port>`, or a bare `host:port`
+    /// (treated as TCP).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err("empty unix socket path".into());
+            }
+            return Ok(Self::Unix(PathBuf::from(path)));
+        }
+        let hostport = s.strip_prefix("tcp:").unwrap_or(s);
+        if hostport.is_empty() || !hostport.contains(':') {
+            return Err(format!("bad listen address {s:?} (want unix:<path> or tcp:<host:port>)"));
+        }
+        Ok(Self::Tcp(hostport.to_string()))
+    }
+}
+
+impl std::fmt::Display for BindAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Tcp(a) => write!(f, "tcp:{a}"),
+            Self::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Daemon configuration: the compute layer's [`ServeConfig`], the
+/// admission bounds, and the socket-level limits.
+#[derive(Copy, Clone, Debug)]
+pub struct NetConfig {
+    /// Compute-side configuration (workers, block sizes, cost model).
+    pub serve: ServeConfig,
+    /// Admission bounds (pending queue, per-client quota, size cap).
+    pub admission: AdmissionCfg,
+    /// Largest accepted frame payload in bytes; larger frames are
+    /// drained and rejected [`RejectCode::TooLarge`] without buffering.
+    pub max_frame: usize,
+    /// Socket read timeout — the poll granularity at which reader
+    /// threads notice drain/shutdown. Smaller = faster drain response,
+    /// more idle wakeups.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            serve: ServeConfig::default(),
+            admission: AdmissionCfg::default(),
+            max_frame: 64 << 20,
+            read_timeout_ms: 25,
+        }
+    }
+}
+
+/// Counter snapshot from [`ServeDaemon::stats`]. After a completed
+/// drain, `admission.admitted == delivered + reaped` — every admitted
+/// request was answered exactly once or reaped against a vanished
+/// client; nothing is silently dropped.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct DaemonStats {
+    /// Connections the acceptor handed to reader/writer pairs.
+    pub conns_accepted: u64,
+    /// Admission-control counters (admitted + typed rejections).
+    pub admission: AdmissionStats,
+    /// Responses (complete or ET-cancelled) flushed to live clients.
+    pub delivered: u64,
+    /// Admitted requests cancelled-and-awaited because their client
+    /// disconnected before the response could be written.
+    pub reaped: u64,
+    /// Frames that failed to decode (bad magic/version/payload).
+    pub malformed: u64,
+    /// Frames whose announced payload exceeded `max_frame` (drained and
+    /// rejected at the framing layer, before admission).
+    pub oversized_frames: u64,
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Self::Tcp(s) => Self::Tcp(s.try_clone()?),
+            Self::Unix(s) => Self::Unix(s.try_clone()?),
+        })
+    }
+
+    fn set_timeouts(&self, read: Duration, write: Duration) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => {
+                s.set_read_timeout(Some(read))?;
+                s.set_write_timeout(Some(write))
+            }
+            Self::Unix(s) => {
+                s.set_read_timeout(Some(read))?;
+                s.set_write_timeout(Some(write))
+            }
+        }
+    }
+
+    fn shutdown_both(&self) {
+        let _ = match self {
+            Self::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Self::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            Self::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            Self::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            Self::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Self::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Self::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(l) => l.set_nonblocking(nb),
+            Self::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+/// An admitted request waiting for its compute result, held by the
+/// connection's writer thread.
+enum Pending {
+    F64(JobHandle<JobResult<f64>>),
+    F32(JobHandle<JobResult<f32>>),
+    Solve(JobHandle<SolveJobResult>),
+}
+
+impl Pending {
+    fn job_id(&self) -> u64 {
+        match self {
+            Self::F64(h) => h.id(),
+            Self::F32(h) => h.id(),
+            Self::Solve(h) => h.id(),
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        match self {
+            Self::F64(h) => h.is_done(),
+            Self::F32(h) => h.is_done(),
+            Self::Solve(h) => h.is_done(),
+        }
+    }
+
+    /// Block for the result and encode the response frame for `wire_id`.
+    fn finish(self, wire_id: u64) -> Vec<u8> {
+        match self {
+            Self::F64(h) => {
+                let r = h.wait();
+                proto::encode_factor_resp(wire_id, &factor_resp_f64(r))
+            }
+            Self::F32(h) => {
+                let r = h.wait();
+                proto::encode_factor_resp(wire_id, &factor_resp_f32(r))
+            }
+            Self::Solve(h) => {
+                let r = h.wait();
+                proto::encode_solve_resp(
+                    wire_id,
+                    &proto::SolveResp {
+                        prec: r.prec,
+                        cancelled: r.cancelled,
+                        converged: r.converged,
+                        refine_iters: r.refine_iters as u32,
+                        backward_error: r.backward_error,
+                        secs: r.secs,
+                        x: r.x,
+                    },
+                )
+            }
+        }
+    }
+
+    /// Cancel and await the job without a client to answer: the crew
+    /// lease unregisters and the arena buffers return before we let go.
+    fn reap(self) {
+        match self {
+            Self::F64(h) => {
+                h.cancel();
+                let _ = h.wait();
+            }
+            Self::F32(h) => {
+                h.cancel();
+                let _ = h.wait();
+            }
+            Self::Solve(h) => {
+                h.cancel();
+                let _ = h.wait();
+            }
+        }
+    }
+}
+
+fn factor_resp_f64(r: JobResult<f64>) -> proto::FactorResp {
+    proto::FactorResp {
+        kind: r.kind,
+        cancelled: r.cancelled,
+        cols_done: r.cols_done,
+        secs: r.secs,
+        ipiv: r.ipiv.iter().map(|&p| p as u32).collect(),
+        tau: proto::WireVec::F64(r.tau),
+        a: proto::WireMat::F64(r.a),
+    }
+}
+
+fn factor_resp_f32(r: JobResult<f32>) -> proto::FactorResp {
+    proto::FactorResp {
+        kind: r.kind,
+        cancelled: r.cancelled,
+        cols_done: r.cols_done,
+        secs: r.secs,
+        ipiv: r.ipiv.iter().map(|&p| p as u32).collect(),
+        tau: proto::WireVec::F32(r.tau),
+        a: proto::WireMat::F32(r.a),
+    }
+}
+
+/// Reader → writer hand-off. The channel is bounded: when the writer
+/// falls behind (slow client, busy compute), `send` blocks the reader,
+/// which stops draining the socket — backpressure all the way to the
+/// client's `write`.
+enum Outgoing {
+    /// A fully encoded session/reject frame, written as-is.
+    Frame(Vec<u8>),
+    /// An admitted request: written when its job completes.
+    Job { wire_id: u64, pending: Pending },
+}
+
+struct NetShared {
+    server: LuServer,
+    admission: AdmissionCtl,
+    cfg: NetConfig,
+    /// Tells connection threads to wind down (drain/shutdown).
+    stop_conns: AtomicBool,
+    /// Outstanding cancel handles by compute job id, so a drain
+    /// deadline can ET work whose typed handle the writer already owns.
+    cancels: Mutex<HashMap<u64, CancelToken>>,
+    conns_accepted: AtomicU64,
+    delivered: AtomicU64,
+    reaped: AtomicU64,
+    malformed: AtomicU64,
+    oversized: AtomicU64,
+}
+
+/// The network daemon (module docs above). Bind with
+/// [`ServeDaemon::bind`]; stop with [`ServeDaemon::shutdown`] (also runs
+/// on drop).
+pub struct ServeDaemon {
+    shared: Arc<NetShared>,
+    stop_accept: Arc<AtomicBool>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    local: BindAddr,
+    unix_path: Option<PathBuf>,
+    drained: AtomicBool,
+}
+
+impl ServeDaemon {
+    /// Bind `addr` and start serving. A stale Unix socket file at the
+    /// path is removed first (the common crashed-daemon leftover).
+    pub fn bind(addr: &BindAddr, cfg: NetConfig) -> std::io::Result<Self> {
+        let (listener, local, unix_path) = match addr {
+            BindAddr::Tcp(a) => {
+                let l = TcpListener::bind(a.as_str())?;
+                let local = BindAddr::Tcp(l.local_addr()?.to_string());
+                (Listener::Tcp(l), local, None)
+            }
+            BindAddr::Unix(p) => {
+                if p.exists() {
+                    std::fs::remove_file(p)?;
+                }
+                let l = UnixListener::bind(p)?;
+                (Listener::Unix(l), BindAddr::Unix(p.clone()), Some(p.clone()))
+            }
+        };
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(NetShared {
+            server: LuServer::new(cfg.serve),
+            admission: AdmissionCtl::new(cfg.admission),
+            cfg,
+            stop_conns: AtomicBool::new(false),
+            cancels: Mutex::new(HashMap::new()),
+            conns_accepted: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+            oversized: AtomicU64::new(0),
+        });
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let conn_threads = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop_accept);
+            let threads = Arc::clone(&conn_threads);
+            std::thread::Builder::new()
+                .name("mlu-accept".into())
+                .spawn(move || acceptor_loop(listener, shared, stop, threads))
+                .expect("spawn acceptor")
+        };
+        Ok(Self {
+            shared,
+            stop_accept,
+            acceptor: Mutex::new(Some(acceptor)),
+            conn_threads,
+            local,
+            unix_path,
+            drained: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound address — with the real port for `tcp:host:0` binds.
+    pub fn local_addr(&self) -> BindAddr {
+        self.local.clone()
+    }
+
+    /// Counter snapshot (see [`DaemonStats`] for the drain invariant).
+    pub fn stats(&self) -> DaemonStats {
+        DaemonStats {
+            conns_accepted: self.shared.conns_accepted.load(Ordering::Relaxed),
+            admission: self.shared.admission.stats(),
+            delivered: self.shared.delivered.load(Ordering::Relaxed),
+            reaped: self.shared.reaped.load(Ordering::Relaxed),
+            malformed: self.shared.malformed.load(Ordering::Relaxed),
+            oversized_frames: self.shared.oversized.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The compute layer's in-flight registry (tests, introspection).
+    pub fn registry(&self) -> &super::CrewRegistry {
+        self.shared.server.registry()
+    }
+
+    /// The compute layer's packing-arena statistics (leak checks:
+    /// `free_buffers as u64 == allocations` after a drain).
+    pub fn arena_stats(&self) -> crate::blis::ArenaStats {
+        self.shared.server.arena_stats()
+    }
+
+    /// Graceful drain (DESIGN.md §14.6): stop accepting connections,
+    /// refuse new requests with `Draining`, let admitted work finish —
+    /// until `grace` expires, after which outstanding jobs are
+    /// ET-cancelled (their clients still get responses, flagged
+    /// `cancelled`) — then wait for every response to flush and every
+    /// connection thread to exit. Idempotent.
+    pub fn drain(&self, grace: Duration) {
+        if self.drained.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let deadline = Instant::now() + grace;
+        self.stop_accept.store(true, Ordering::Release);
+        self.shared.admission.start_drain();
+        self.shared.stop_conns.store(true, Ordering::Release);
+        let mut cancelled = false;
+        while !self.shared.admission.is_drained() {
+            if !cancelled && Instant::now() >= deadline {
+                // Grace expired: ET everything still outstanding. The
+                // writers deliver the cancelled results normally.
+                for tok in self.shared.cancels.lock().unwrap().values() {
+                    tok.cancel();
+                }
+                cancelled = true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        loop {
+            let mut threads = self.conn_threads.lock().unwrap();
+            let Some(h) = threads.pop() else { break };
+            drop(threads);
+            let _ = h.join();
+        }
+        if let Some(p) = &self.unix_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    /// Drain (default 5 s grace if [`drain`](Self::drain) was not
+    /// already called) and stop the compute pool. Runs on drop.
+    pub fn shutdown(&self) {
+        self.drain(Duration::from_secs(5));
+        self.shared.server.shutdown();
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn acceptor_loop(
+    listener: Listener,
+    shared: Arc<NetShared>,
+    stop: Arc<AtomicBool>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_client: u64 = 1;
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok(stream) => {
+                let client = next_client;
+                next_client += 1;
+                shared.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                match spawn_connection(stream, client, &shared) {
+                    Ok(pair) => threads.lock().unwrap().extend(pair),
+                    Err(e) => eprintln!("serve: connection {client} setup failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn spawn_connection(
+    stream: Stream,
+    client: u64,
+    shared: &Arc<NetShared>,
+) -> std::io::Result<Vec<JoinHandle<()>>> {
+    stream.set_timeouts(
+        Duration::from_millis(shared.cfg.read_timeout_ms),
+        Duration::from_secs(10),
+    )?;
+    let write_half = stream.try_clone()?;
+    // Channel bound: the client's fairness quota plus slack for
+    // handshake/reject frames. A reader blocked here is the designed
+    // backpressure path.
+    let bound = shared.cfg.admission.max_client_inflight + 8;
+    let (tx, rx) = mpsc::sync_channel::<Outgoing>(bound);
+    let dead = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let shared = Arc::clone(shared);
+        let dead = Arc::clone(&dead);
+        std::thread::Builder::new()
+            .name(format!("mlu-read-{client}"))
+            .spawn(move || reader_loop(stream, client, shared, tx, dead))?
+    };
+    let writer = {
+        let shared = Arc::clone(shared);
+        let dead = Arc::clone(&dead);
+        std::thread::Builder::new()
+            .name(format!("mlu-write-{client}"))
+            .spawn(move || writer_loop(write_half, client, shared, rx, dead))?
+    };
+    Ok(vec![reader, writer])
+}
+
+/// Send to the writer, blocking while the channel is full (the
+/// backpressure path) but giving up when the connection dies. On
+/// failure the message comes back so the caller can settle it — an
+/// admitted `Job` must never be silently dropped (its admission slot
+/// and crew lease would leak, wedging a later drain).
+fn send_outgoing(
+    tx: &SyncSender<Outgoing>,
+    dead: &AtomicBool,
+    mut msg: Outgoing,
+) -> Result<(), Outgoing> {
+    loop {
+        if dead.load(Ordering::Acquire) {
+            return Err(msg);
+        }
+        match tx.try_send(msg) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(m)) => {
+                msg = m;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(TrySendError::Disconnected(m)) => return Err(m),
+        }
+    }
+}
+
+/// Send a frame, discarding it if the connection is gone (rejects and
+/// handshake frames carry no daemon-side bookkeeping). Returns whether
+/// the connection is still usable.
+fn send_frame(tx: &SyncSender<Outgoing>, dead: &AtomicBool, bytes: Vec<u8>) -> bool {
+    send_outgoing(tx, dead, Outgoing::Frame(bytes)).is_ok()
+}
+
+/// Hand an admitted job to the writer; if the connection is gone, reap
+/// it here (cancel + await, release the admission slot, drop the cancel
+/// token) so the accounting invariant survives. Returns whether the
+/// connection is still usable.
+fn send_job(
+    shared: &NetShared,
+    client: u64,
+    tx: &SyncSender<Outgoing>,
+    dead: &AtomicBool,
+    wire_id: u64,
+    pending: Pending,
+) -> bool {
+    match send_outgoing(tx, dead, Outgoing::Job { wire_id, pending }) {
+        Ok(()) => true,
+        Err(Outgoing::Job { pending, .. }) => {
+            let job_id = pending.job_id();
+            pending.reap();
+            shared.reaped.fetch_add(1, Ordering::Relaxed);
+            shared.cancels.lock().unwrap().remove(&job_id);
+            shared.admission.release(client);
+            false
+        }
+        Err(Outgoing::Frame(_)) => unreachable!("job send returned a frame"),
+    }
+}
+
+fn reader_loop(
+    mut stream: Stream,
+    client: u64,
+    shared: Arc<NetShared>,
+    tx: SyncSender<Outgoing>,
+    dead: Arc<AtomicBool>,
+) {
+    let max_payload = shared.cfg.max_frame;
+    let stop = |idle: bool| -> bool {
+        // Keep reading while the connection is alive; during a drain,
+        // stay up only to finish a frame already on the wire.
+        !(dead.load(Ordering::Acquire)
+            || (shared.stop_conns.load(Ordering::Acquire) && idle))
+    };
+    // Handshake: the first frame must be HELLO with a version range
+    // covering ours.
+    match proto::read_frame(&mut stream, max_payload, &mut |idle| stop(idle)) {
+        ReadEvent::Frame(f) if f.ty == proto::T_HELLO => {
+            match proto::decode_hello(&f.payload) {
+                Ok((lo, hi)) if lo <= proto::VERSION && proto::VERSION <= hi => {
+                    if !send_frame(&tx, &dead, proto::encode_hello_ack(proto::VERSION)) {
+                        return;
+                    }
+                }
+                Ok((lo, hi)) => {
+                    let reason = format!("server speaks v{} only, client offered v{lo}..v{hi}", proto::VERSION);
+                    let _ = send_frame(
+                        &tx,
+                        &dead,
+                        proto::encode_reject(0, RejectCode::Unsupported, &reason),
+                    );
+                    return;
+                }
+                Err(e) => {
+                    shared.malformed.fetch_add(1, Ordering::Relaxed);
+                    let _ = send_frame(
+                        &tx,
+                        &dead,
+                        proto::encode_reject(0, RejectCode::Malformed, &e.0),
+                    );
+                    return;
+                }
+            }
+        }
+        ReadEvent::Frame(_) => {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = send_frame(
+                &tx,
+                &dead,
+                proto::encode_reject(0, RejectCode::Malformed, "expected HELLO"),
+            );
+            return;
+        }
+        ReadEvent::Corrupt(e) => {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = send_frame(
+                &tx,
+                &dead,
+                proto::encode_reject(0, RejectCode::Malformed, &e.0),
+            );
+            return;
+        }
+        ReadEvent::Eof | ReadEvent::Closed | ReadEvent::Oversized(..) => return,
+    }
+    loop {
+        match proto::read_frame(&mut stream, max_payload, &mut |idle| stop(idle)) {
+            ReadEvent::Frame(f) => match f.ty {
+                proto::T_FACTOR => {
+                    if !handle_factor(&shared, client, &tx, &dead, f.id, &f.payload) {
+                        break;
+                    }
+                }
+                proto::T_SOLVE => {
+                    if !handle_solve(&shared, client, &tx, &dead, f.id, &f.payload) {
+                        break;
+                    }
+                }
+                proto::T_GOODBYE => break,
+                other => {
+                    shared.malformed.fetch_add(1, Ordering::Relaxed);
+                    let reason = format!("unexpected frame type 0x{other:02x}");
+                    if !send_frame(
+                        &tx,
+                        &dead,
+                        proto::encode_reject(f.id, RejectCode::Malformed, &reason),
+                    ) {
+                        break;
+                    }
+                }
+            },
+            ReadEvent::Oversized(id, len) => {
+                shared.oversized.fetch_add(1, Ordering::Relaxed);
+                let reason = format!("frame payload {len} B over the {max_payload} B limit");
+                if !send_frame(
+                    &tx,
+                    &dead,
+                    proto::encode_reject(id, RejectCode::TooLarge, &reason),
+                ) {
+                    break;
+                }
+            }
+            ReadEvent::Corrupt(e) => {
+                // Framing can't be trusted any more: best-effort reject,
+                // then close.
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = send_frame(
+                    &tx,
+                    &dead,
+                    proto::encode_reject(0, RejectCode::Malformed, &e.0),
+                );
+                break;
+            }
+            ReadEvent::Eof | ReadEvent::Closed => break,
+        }
+    }
+    // Dropping `tx` lets the writer finish its queue and exit.
+}
+
+/// Decode, admit, and submit one factor request. Returns `false` when
+/// the connection is gone and the reader should stop.
+fn handle_factor(
+    shared: &Arc<NetShared>,
+    client: u64,
+    tx: &SyncSender<Outgoing>,
+    dead: &AtomicBool,
+    wire_id: u64,
+    payload: &[u8],
+) -> bool {
+    let req = match proto::decode_factor_req(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            return send_frame(tx, dead, proto::encode_reject(wire_id, RejectCode::Malformed, &e.0));
+        }
+    };
+    let dims = (req.a.rows(), req.a.cols());
+    if let Err(code) = shared.admission.try_admit(client, dims) {
+        let reason = admit_reason(code, shared, dims);
+        return send_frame(tx, dead, proto::encode_reject(wire_id, code, &reason));
+    }
+    // Admission slot held from here: the writer releases it after the
+    // response flushes (or the reap path does).
+    let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms as u64));
+    let pending = match req.a {
+        proto::WireMat::F64(a) => {
+            let mut r = LuRequest::new(a)
+                .with_kind(req.kind)
+                .with_priority(req.priority)
+                .with_client(client);
+            if let Some(d) = deadline {
+                r = r.with_deadline(d);
+            }
+            if req.bo > 0 && req.bi > 0 {
+                r = r.with_blocks(req.bo as usize, req.bi as usize);
+            }
+            let h = shared.server.submit(r);
+            register_cancel(shared, h.id(), h.cancel_token());
+            Pending::F64(h)
+        }
+        proto::WireMat::F32(a) => {
+            let mut r = LuRequest::new(a)
+                .with_kind(req.kind)
+                .with_priority(req.priority)
+                .with_client(client);
+            if let Some(d) = deadline {
+                r = r.with_deadline(d);
+            }
+            if req.bo > 0 && req.bi > 0 {
+                r = r.with_blocks(req.bo as usize, req.bi as usize);
+            }
+            let h = shared.server.submit(r);
+            register_cancel(shared, h.id(), h.cancel_token());
+            Pending::F32(h)
+        }
+    };
+    send_job(shared, client, tx, dead, wire_id, pending)
+}
+
+/// Decode, admit, and submit one solve request (same contract as
+/// [`handle_factor`]).
+fn handle_solve(
+    shared: &Arc<NetShared>,
+    client: u64,
+    tx: &SyncSender<Outgoing>,
+    dead: &AtomicBool,
+    wire_id: u64,
+    payload: &[u8],
+) -> bool {
+    let req = match proto::decode_solve_req(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            return send_frame(tx, dead, proto::encode_reject(wire_id, RejectCode::Malformed, &e.0));
+        }
+    };
+    let dims = (req.a.rows(), req.a.cols());
+    if let Err(code) = shared.admission.try_admit(client, dims) {
+        let reason = admit_reason(code, shared, dims);
+        return send_frame(tx, dead, proto::encode_reject(wire_id, code, &reason));
+    }
+    let mut r = SolveRequest::new(req.a, req.b)
+        .with_prec(req.prec)
+        .with_priority(req.priority)
+        .with_client(client);
+    if req.deadline_ms > 0 {
+        r = r.with_deadline(Duration::from_millis(req.deadline_ms as u64));
+    }
+    if req.bo > 0 && req.bi > 0 {
+        r.bo = Some(req.bo as usize);
+        r.bi = Some(req.bi as usize);
+    }
+    let h = shared.server.submit_solve(r);
+    register_cancel(shared, h.id(), h.cancel_token());
+    send_job(shared, client, tx, dead, wire_id, Pending::Solve(h))
+}
+
+fn register_cancel(shared: &NetShared, job_id: u64, tok: CancelToken) {
+    shared.cancels.lock().unwrap().insert(job_id, tok);
+}
+
+fn admit_reason(code: RejectCode, shared: &NetShared, dims: (usize, usize)) -> String {
+    let cfg = shared.admission.cfg();
+    match code {
+        RejectCode::Overloaded => format!(
+            "pending queue full ({} global / {} per client)",
+            cfg.max_pending, cfg.max_client_inflight
+        ),
+        RejectCode::TooLarge => format!(
+            "matrix {}x{} over the {} dimension cap",
+            dims.0, dims.1, cfg.max_dim
+        ),
+        RejectCode::Draining => "daemon is draining".into(),
+        other => other.name().into(),
+    }
+}
+
+fn writer_loop(
+    mut stream: Stream,
+    client: u64,
+    shared: Arc<NetShared>,
+    rx: Receiver<Outgoing>,
+    dead: Arc<AtomicBool>,
+) {
+    let mut pendings: VecDeque<(u64, Pending)> = VecDeque::new();
+    let mut open = true;
+    let mut write = |stream: &mut Stream, bytes: &[u8], dead: &AtomicBool| -> bool {
+        if dead.load(Ordering::Acquire) {
+            return false;
+        }
+        if stream.write_all(bytes).and_then(|_| stream.flush()).is_err() {
+            // Client gone (or wedged past the write timeout): stop the
+            // reader too and reap everything still outstanding.
+            dead.store(true, Ordering::Release);
+            stream.shutdown_both();
+            return false;
+        }
+        true
+    };
+    loop {
+        // Pull whatever the reader queued.
+        loop {
+            match rx.try_recv() {
+                Ok(Outgoing::Frame(b)) => {
+                    write(&mut stream, &b, &dead);
+                }
+                Ok(Outgoing::Job { wire_id, pending }) => pendings.push_back((wire_id, pending)),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        // Deliver completed jobs in completion order.
+        let mut i = 0;
+        while i < pendings.len() {
+            if dead.load(Ordering::Acquire) || pendings[i].1.is_done() {
+                let (wire_id, pending) = pendings.remove(i).unwrap();
+                let job_id = pending.job_id();
+                if dead.load(Ordering::Acquire) {
+                    pending.reap();
+                    shared.reaped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    let frame = pending.finish(wire_id);
+                    if write(&mut stream, &frame, &dead) {
+                        shared.delivered.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // The result is computed but unsendable; it
+                        // counts as reaped, not delivered.
+                        shared.reaped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                shared.cancels.lock().unwrap().remove(&job_id);
+                shared.admission.release(client);
+            } else {
+                i += 1;
+            }
+        }
+        if !open && pendings.is_empty() {
+            break;
+        }
+        // Idle: block briefly on the channel so new work wakes us, and
+        // completion polling stays at a 200 µs cadence.
+        match rx.recv_timeout(Duration::from_micros(200)) {
+            Ok(Outgoing::Frame(b)) => {
+                write(&mut stream, &b, &dead);
+            }
+            Ok(Outgoing::Job { wire_id, pending }) => pendings.push_back((wire_id, pending)),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => open = false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_addr_parses_all_forms() {
+        assert_eq!(
+            BindAddr::parse("unix:/tmp/x.sock").unwrap(),
+            BindAddr::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            BindAddr::parse("tcp:127.0.0.1:7070").unwrap(),
+            BindAddr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            BindAddr::parse("127.0.0.1:0").unwrap(),
+            BindAddr::Tcp("127.0.0.1:0".into())
+        );
+        assert!(BindAddr::parse("unix:").is_err());
+        assert!(BindAddr::parse("nonsense").is_err());
+        assert_eq!(
+            BindAddr::parse("unix:/a/b").unwrap().to_string(),
+            "unix:/a/b"
+        );
+    }
+
+    #[test]
+    fn daemon_binds_drains_and_reports_consistent_stats() {
+        let cfg = NetConfig {
+            serve: ServeConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let daemon =
+            ServeDaemon::bind(&BindAddr::Tcp("127.0.0.1:0".into()), cfg).expect("bind");
+        let BindAddr::Tcp(addr) = daemon.local_addr() else {
+            panic!("expected tcp")
+        };
+        assert!(addr.ends_with(|c: char| c.is_ascii_digit()));
+        daemon.drain(Duration::from_millis(100));
+        daemon.shutdown();
+        let s = daemon.stats();
+        assert_eq!(s.conns_accepted, 0);
+        assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    }
+}

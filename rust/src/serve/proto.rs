@@ -1,0 +1,1091 @@
+//! The `mlu serve` **wire protocol**: a small versioned length-prefixed
+//! binary framing for factor/solve requests and typed responses /
+//! rejections, spoken over TCP and Unix sockets.
+//!
+//! **The normative byte-level specification is DESIGN.md §14** — the
+//! tables there and the encoders/decoders here must match byte for
+//! byte; the protocol unit tests pin representative frames against
+//! hand-written byte images to keep them honest. Summary:
+//!
+//! ```text
+//! frame   := header payload
+//! header  := magic(2 = "ML") version(1) type(1) id(8 LE) len(4 LE)
+//! payload := `len` bytes, layout per frame type (DESIGN.md §14)
+//! ```
+//!
+//! All integers are **little-endian**; all floating-point data is
+//! IEEE-754 binary32/binary64, little-endian, **column-major** for
+//! matrices. The `id` is assigned by the client, unique per connection,
+//! and echoed verbatim in the matching response or rejection — so a
+//! client may pipeline requests and match responses in any completion
+//! order.
+//!
+//! This module is pure encode/decode over byte slices plus one
+//! incremental frame reader ([`read_frame`]); it performs no admission
+//! decisions and owns no sockets. The daemon lives in
+//! [`crate::serve::net`], the client in [`crate::serve::client`], and
+//! admission control in [`crate::serve::admission`].
+
+use crate::factor::FactorKind;
+use crate::matrix::{Mat, Matrix};
+use crate::solve::SolvePrec;
+use std::io::Read;
+
+/// Frame magic, bytes 0–1 of every header: ASCII `"ML"`.
+pub const MAGIC: [u8; 2] = *b"ML";
+/// The one protocol version this build speaks (header byte 2).
+pub const VERSION: u8 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 16;
+
+/// Frame type: client hello (version negotiation), `id = 0`.
+pub const T_HELLO: u8 = 0x01;
+/// Frame type: server hello acknowledgement, `id = 0`.
+pub const T_HELLO_ACK: u8 = 0x02;
+/// Frame type: factorization request (client → server).
+pub const T_FACTOR: u8 = 0x10;
+/// Frame type: linear-system solve request (client → server).
+pub const T_SOLVE: u8 = 0x11;
+/// Frame type: factorization response (server → client).
+pub const T_FACTOR_OK: u8 = 0x20;
+/// Frame type: solve response (server → client).
+pub const T_SOLVE_OK: u8 = 0x21;
+/// Frame type: typed rejection (server → client).
+pub const T_REJECT: u8 = 0x30;
+/// Frame type: client goodbye — flush and close, `id = 0`, empty payload.
+pub const T_GOODBYE: u8 = 0x40;
+
+/// One decoded frame: type byte, request id, raw payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// Frame type (`T_*` constant).
+    pub ty: u8,
+    /// Request id (0 for session-level frames).
+    pub id: u64,
+    /// Raw payload bytes (layout per type; DESIGN.md §14).
+    pub payload: Vec<u8>,
+}
+
+/// Why a request (or a whole connection) was refused — the typed
+/// rejection codes of DESIGN.md §14. Encoded as payload byte 0 of a
+/// [`T_REJECT`] frame.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The admission queue (global bound or this client's fairness
+    /// quota) is full; retry later. Code 1.
+    Overloaded = 1,
+    /// The frame or problem exceeds the daemon's configured size bounds
+    /// (`max_frame` payload bytes or `max_dim` matrix dimension). Code 2.
+    TooLarge = 2,
+    /// The daemon is draining toward shutdown and admits no new work.
+    /// Code 3.
+    Draining = 3,
+    /// The frame could not be decoded (bad magic, unknown type,
+    /// inconsistent lengths, bad enum codes). Code 4.
+    Malformed = 4,
+    /// Version negotiation failed: the server speaks no version in the
+    /// client's offered range. Code 5.
+    Unsupported = 5,
+}
+
+impl RejectCode {
+    /// Wire code byte.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire code byte.
+    pub fn parse(c: u8) -> Option<Self> {
+        match c {
+            1 => Some(Self::Overloaded),
+            2 => Some(Self::TooLarge),
+            3 => Some(Self::Draining),
+            4 => Some(Self::Malformed),
+            5 => Some(Self::Unsupported),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (logs, `mlu sclient` output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Overloaded => "overloaded",
+            Self::TooLarge => "too-large",
+            Self::Draining => "draining",
+            Self::Malformed => "malformed",
+            Self::Unsupported => "unsupported",
+        }
+    }
+}
+
+/// A decoded rejection frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reject {
+    /// Why the request was refused.
+    pub code: RejectCode,
+    /// Free-form operator-facing reason (UTF-8; may be empty).
+    pub reason: String,
+}
+
+/// Matrix payload in either wire precision (prec byte 0 = f64,
+/// 1 = f32).
+#[derive(Debug, Clone)]
+pub enum WireMat {
+    /// Double precision (8-byte elements).
+    F64(Mat<f64>),
+    /// Single precision (4-byte elements).
+    F32(Mat<f32>),
+}
+
+impl WireMat {
+    /// Wire precision code (0 = f64, 1 = f32).
+    pub fn prec_code(&self) -> u8 {
+        match self {
+            Self::F64(_) => 0,
+            Self::F32(_) => 1,
+        }
+    }
+
+    /// Precision name as used in trace tags ("f64" / "f32").
+    pub fn prec_name(&self) -> &'static str {
+        match self {
+            Self::F64(_) => "f64",
+            Self::F32(_) => "f32",
+        }
+    }
+
+    /// Rows of the carried matrix.
+    pub fn rows(&self) -> usize {
+        match self {
+            Self::F64(a) => a.rows(),
+            Self::F32(a) => a.rows(),
+        }
+    }
+
+    /// Columns of the carried matrix.
+    pub fn cols(&self) -> usize {
+        match self {
+            Self::F64(a) => a.cols(),
+            Self::F32(a) => a.cols(),
+        }
+    }
+}
+
+/// A vector payload matching a [`WireMat`]'s precision (QR `tau`).
+#[derive(Debug, Clone)]
+pub enum WireVec {
+    /// Double-precision elements.
+    F64(Vec<f64>),
+    /// Single-precision elements.
+    F32(Vec<f32>),
+}
+
+impl WireVec {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F64(v) => v.len(),
+            Self::F32(v) => v.len(),
+        }
+    }
+
+    /// Whether the vector is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A decoded factorization request ([`T_FACTOR`] payload).
+#[derive(Debug, Clone)]
+pub struct FactorReq {
+    /// Which factorization to run.
+    pub kind: FactorKind,
+    /// Scheduling priority (higher runs first).
+    pub priority: u8,
+    /// Wall-clock budget in milliseconds; 0 = none.
+    pub deadline_ms: u32,
+    /// Outer block-size override; 0 = server default.
+    pub bo: u16,
+    /// Inner block-size override; 0 = server default.
+    pub bi: u16,
+    /// The matrix, in its wire precision.
+    pub a: WireMat,
+}
+
+/// A decoded factorization response ([`T_FACTOR_OK`] payload).
+#[derive(Debug, Clone)]
+pub struct FactorResp {
+    /// The factorization that ran.
+    pub kind: FactorKind,
+    /// Whether the request was cancelled (deadline / drain ET); the
+    /// factors then hold a clean `cols_done`-column prefix.
+    pub cancelled: bool,
+    /// Columns fully factorized and committed.
+    pub cols_done: usize,
+    /// Server-side seconds from admission to completion.
+    pub secs: f64,
+    /// Absolute pivots for the committed columns (LU only).
+    pub ipiv: Vec<u32>,
+    /// Householder scalar factors (QR only), in the matrix precision.
+    pub tau: WireVec,
+    /// The factors, in the request's precision.
+    pub a: WireMat,
+}
+
+/// A decoded solve request ([`T_SOLVE`] payload). The system is always
+/// shipped in f64; `prec` selects the factorization arithmetic
+/// (mixed = f32 factors + f64 refinement, DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct SolveReq {
+    /// Which arithmetic the solve runs in.
+    pub prec: SolvePrec,
+    /// Scheduling priority (higher runs first).
+    pub priority: u8,
+    /// Wall-clock budget in milliseconds; 0 = none.
+    pub deadline_ms: u32,
+    /// Outer block-size override; 0 = server default.
+    pub bo: u16,
+    /// Inner block-size override; 0 = server default.
+    pub bi: u16,
+    /// The (square) system matrix.
+    pub a: Matrix,
+    /// The right-hand side (`b.len() == a.rows()`).
+    pub b: Vec<f64>,
+}
+
+/// A decoded solve response ([`T_SOLVE_OK`] payload).
+#[derive(Debug, Clone)]
+pub struct SolveResp {
+    /// The arithmetic that ran.
+    pub prec: SolvePrec,
+    /// Whether the request was cancelled before completion.
+    pub cancelled: bool,
+    /// Whether the precision path's convergence criterion was met.
+    pub converged: bool,
+    /// Refinement sweeps performed (mixed path only).
+    pub refine_iters: u32,
+    /// Final normwise backward error.
+    pub backward_error: f64,
+    /// Server-side seconds from admission to completion.
+    pub secs: f64,
+    /// The solution (empty if cancelled).
+    pub x: Vec<f64>,
+}
+
+/// Decode failure: the frame was well-delimited but its payload does
+/// not parse (wrong length, bad enum code, overflowing dimensions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ProtoError> {
+    Err(ProtoError(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitives.
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.i + n > self.b.len() {
+            return err(format!(
+                "truncated payload: need {} bytes at offset {}, have {}",
+                n,
+                self.i,
+                self.b.len() - self.i
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, ProtoError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, ProtoError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.i != self.b.len() {
+            return err(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.i
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
+    out.reserve(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
+    out.reserve(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn kind_code(kind: FactorKind) -> u8 {
+    match kind {
+        FactorKind::Lu => 0,
+        FactorKind::Chol => 1,
+        FactorKind::Qr => 2,
+    }
+}
+
+fn parse_kind(c: u8) -> Result<FactorKind, ProtoError> {
+    match c {
+        0 => Ok(FactorKind::Lu),
+        1 => Ok(FactorKind::Chol),
+        2 => Ok(FactorKind::Qr),
+        other => err(format!("unknown factor kind code {other}")),
+    }
+}
+
+fn solve_prec_code(p: SolvePrec) -> u8 {
+    match p {
+        SolvePrec::F64 => 0,
+        SolvePrec::F32 => 1,
+        SolvePrec::Mixed => 2,
+    }
+}
+
+fn parse_solve_prec(c: u8) -> Result<SolvePrec, ProtoError> {
+    match c {
+        0 => Ok(SolvePrec::F64),
+        1 => Ok(SolvePrec::F32),
+        2 => Ok(SolvePrec::Mixed),
+        other => err(format!("unknown solve precision code {other}")),
+    }
+}
+
+/// Checked `m * n * elem_size` for payload sizing; rejects dimension
+/// products that overflow or exceed `u32::MAX` payload bytes.
+fn data_bytes(m: usize, n: usize, elem: usize) -> Result<usize, ProtoError> {
+    m.checked_mul(n)
+        .and_then(|e| e.checked_mul(elem))
+        .filter(|&b| b <= u32::MAX as usize)
+        .ok_or_else(|| ProtoError(format!("matrix {m}x{n} overflows the frame length field")))
+}
+
+// ---------------------------------------------------------------------------
+// Frame assembly and header parsing.
+
+/// Assemble a full frame (header + payload) for `ty`/`id`.
+pub fn encode_frame(ty: u8, id: u64, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= u32::MAX as usize, "payload exceeds u32 length");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ty);
+    put_u64(&mut out, id);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Parsed header fields: `(type, id, payload_len)`.
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u64, u32), ProtoError> {
+    if h[0..2] != MAGIC {
+        return err(format!("bad magic {:02x}{:02x} (want 4d4c)", h[0], h[1]));
+    }
+    if h[2] != VERSION {
+        return err(format!("unsupported protocol version {} (want {VERSION})", h[2]));
+    }
+    let ty = h[3];
+    let id = u64::from_le_bytes(h[4..12].try_into().unwrap());
+    let len = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    Ok((ty, id, len))
+}
+
+/// What [`read_frame`] observed on the stream.
+#[derive(Debug)]
+pub enum ReadEvent {
+    /// A complete frame (payload already bounded by `max_payload`).
+    Frame(Frame),
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+    /// The tick callback asked to stop while no partial frame was
+    /// buffered (idle close point).
+    Closed,
+    /// A frame header announced a payload above `max_payload`; the
+    /// payload was drained and discarded. Carries `(id, announced_len)`
+    /// so the caller can send a typed `TooLarge` rejection.
+    Oversized(u64, u32),
+    /// The header failed to parse (bad magic / version) or the stream
+    /// died mid-frame. The connection is unusable for further framing.
+    Corrupt(ProtoError),
+}
+
+/// Read one frame from `r`, tolerating read timeouts.
+///
+/// `tick` is called after every timed-out read with `idle = true` when
+/// no byte of the next frame has arrived yet; returning `false` stops
+/// the read. Stopping while idle yields [`ReadEvent::Closed`]; stopping
+/// mid-frame (or hitting EOF mid-frame) yields [`ReadEvent::Corrupt`],
+/// because the framing can no longer be trusted.
+pub fn read_frame(
+    r: &mut impl Read,
+    max_payload: usize,
+    tick: &mut dyn FnMut(bool) -> bool,
+) -> ReadEvent {
+    let mut header = [0u8; HEADER_LEN];
+    match read_full(r, &mut header, true, tick) {
+        Fill::Done => {}
+        Fill::Eof { nothing_read: true } => return ReadEvent::Eof,
+        Fill::Eof { nothing_read: false } => {
+            return ReadEvent::Corrupt(ProtoError("eof inside a frame header".into()))
+        }
+        Fill::Stopped { nothing_read: true } => return ReadEvent::Closed,
+        Fill::Stopped { nothing_read: false } => {
+            return ReadEvent::Corrupt(ProtoError("stopped inside a frame header".into()))
+        }
+        Fill::Io(e) => return ReadEvent::Corrupt(ProtoError(format!("read: {e}"))),
+    }
+    let (ty, id, len) = match parse_header(&header) {
+        Ok(t) => t,
+        Err(e) => return ReadEvent::Corrupt(e),
+    };
+    if len as usize > max_payload {
+        // Drain without buffering so the connection stays framed.
+        let mut left = len as usize;
+        let mut sink = [0u8; 4096];
+        while left > 0 {
+            let want = left.min(sink.len());
+            match read_full(r, &mut sink[..want], false, tick) {
+                Fill::Done => left -= want,
+                _ => {
+                    return ReadEvent::Corrupt(ProtoError(
+                        "stream died while draining an oversized frame".into(),
+                    ))
+                }
+            }
+        }
+        return ReadEvent::Oversized(id, len);
+    }
+    let mut payload = vec![0u8; len as usize];
+    match read_full(r, &mut payload, false, tick) {
+        Fill::Done => ReadEvent::Frame(Frame { ty, id, payload }),
+        Fill::Io(e) => ReadEvent::Corrupt(ProtoError(format!("read: {e}"))),
+        _ => ReadEvent::Corrupt(ProtoError("eof inside a frame payload".into())),
+    }
+}
+
+enum Fill {
+    Done,
+    Eof { nothing_read: bool },
+    Stopped { nothing_read: bool },
+    Io(std::io::Error),
+}
+
+/// `read_exact` that survives read timeouts: partial progress is kept
+/// across timed-out reads (plain `read_exact` would lose it and corrupt
+/// the framing).
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    at_boundary: bool,
+    tick: &mut dyn FnMut(bool) -> bool,
+) -> Fill {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Fill::Eof { nothing_read: at_boundary && got == 0 },
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if !tick(at_boundary && got == 0) {
+                    return Fill::Stopped { nothing_read: at_boundary && got == 0 };
+                }
+            }
+            Err(e) => return Fill::Io(e),
+        }
+    }
+    Fill::Done
+}
+
+// ---------------------------------------------------------------------------
+// Session frames.
+
+/// Encode the client hello: offered version range `[min, max]`.
+pub fn encode_hello(min_ver: u8, max_ver: u8) -> Vec<u8> {
+    encode_frame(T_HELLO, 0, &[min_ver, max_ver])
+}
+
+/// Decode a hello payload into `(min_ver, max_ver)`.
+pub fn decode_hello(p: &[u8]) -> Result<(u8, u8), ProtoError> {
+    if p.len() != 2 {
+        return err(format!("hello payload must be 2 bytes, got {}", p.len()));
+    }
+    Ok((p[0], p[1]))
+}
+
+/// Encode the server's hello acknowledgement carrying the chosen
+/// version.
+pub fn encode_hello_ack(version: u8) -> Vec<u8> {
+    encode_frame(T_HELLO_ACK, 0, &[version])
+}
+
+/// Decode a hello-ack payload into the chosen version.
+pub fn decode_hello_ack(p: &[u8]) -> Result<u8, ProtoError> {
+    if p.len() != 1 {
+        return err(format!("hello-ack payload must be 1 byte, got {}", p.len()));
+    }
+    Ok(p[0])
+}
+
+/// Encode the client goodbye (flush-and-close).
+pub fn encode_goodbye() -> Vec<u8> {
+    encode_frame(T_GOODBYE, 0, &[])
+}
+
+/// Encode a typed rejection for request `id`.
+pub fn encode_reject(id: u64, code: RejectCode, reason: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + reason.len());
+    p.push(code.code());
+    p.extend_from_slice(&[0, 0, 0]);
+    p.extend_from_slice(reason.as_bytes());
+    encode_frame(T_REJECT, id, &p)
+}
+
+/// Decode a rejection payload.
+pub fn decode_reject(p: &[u8]) -> Result<Reject, ProtoError> {
+    let mut c = Cursor::new(p);
+    let code = c.u8()?;
+    c.take(3)?;
+    let code = RejectCode::parse(code).ok_or_else(|| ProtoError(format!("bad reject code {code}")))?;
+    let reason = String::from_utf8_lossy(&p[4..]).into_owned();
+    Ok(Reject { code, reason })
+}
+
+// ---------------------------------------------------------------------------
+// Factor request/response.
+
+/// Fixed (pre-data) bytes of a [`T_FACTOR`] payload.
+pub const FACTOR_REQ_FIXED: usize = 20;
+
+/// Encode a factorization request frame.
+pub fn encode_factor_req(id: u64, req: &FactorReq) -> Vec<u8> {
+    let (m, n) = (req.a.rows(), req.a.cols());
+    let mut p = Vec::with_capacity(FACTOR_REQ_FIXED);
+    p.push(kind_code(req.kind));
+    p.push(req.a.prec_code());
+    p.push(req.priority);
+    p.push(0);
+    put_u32(&mut p, m as u32);
+    put_u32(&mut p, n as u32);
+    put_u32(&mut p, req.deadline_ms);
+    put_u16(&mut p, req.bo);
+    put_u16(&mut p, req.bi);
+    match &req.a {
+        WireMat::F64(a) => put_f64_slice(&mut p, a.data()),
+        WireMat::F32(a) => put_f32_slice(&mut p, a.data()),
+    }
+    encode_frame(T_FACTOR, id, &p)
+}
+
+/// Decode a factorization request payload.
+pub fn decode_factor_req(p: &[u8]) -> Result<FactorReq, ProtoError> {
+    let mut c = Cursor::new(p);
+    let kind = parse_kind(c.u8()?)?;
+    let prec = c.u8()?;
+    let priority = c.u8()?;
+    c.u8()?; // reserved
+    let m = c.u32()? as usize;
+    let n = c.u32()? as usize;
+    let deadline_ms = c.u32()?;
+    let bo = c.u16()?;
+    let bi = c.u16()?;
+    let a = match prec {
+        0 => {
+            data_bytes(m, n, 8)?;
+            let data = c.f64_vec(m * n)?;
+            WireMat::F64(mat_from_col_major(m, n, data))
+        }
+        1 => {
+            data_bytes(m, n, 4)?;
+            let data = c.f32_vec(m * n)?;
+            WireMat::F32(mat_from_col_major(m, n, data))
+        }
+        other => return err(format!("unknown matrix precision code {other}")),
+    };
+    c.done()?;
+    Ok(FactorReq { kind, priority, deadline_ms, bo, bi, a })
+}
+
+fn mat_from_col_major<S: crate::scalar::Scalar>(m: usize, n: usize, data: Vec<S>) -> Mat<S> {
+    let mut a = Mat::<S>::zeros(m, n);
+    a.data_mut().copy_from_slice(&data);
+    a
+}
+
+/// Fixed (pre-data) bytes of a [`T_FACTOR_OK`] payload.
+pub const FACTOR_RESP_FIXED: usize = 32;
+
+/// Encode a factorization response frame.
+pub fn encode_factor_resp(id: u64, resp: &FactorResp) -> Vec<u8> {
+    let (m, n) = (resp.a.rows(), resp.a.cols());
+    let mut p = Vec::with_capacity(FACTOR_RESP_FIXED);
+    p.push(kind_code(resp.kind));
+    p.push(resp.a.prec_code());
+    p.push(u8::from(resp.cancelled));
+    p.push(0);
+    put_u32(&mut p, m as u32);
+    put_u32(&mut p, n as u32);
+    put_u32(&mut p, resp.cols_done as u32);
+    put_u32(&mut p, resp.ipiv.len() as u32);
+    put_u32(&mut p, resp.tau.len() as u32);
+    put_f64(&mut p, resp.secs);
+    for piv in &resp.ipiv {
+        put_u32(&mut p, *piv);
+    }
+    match (&resp.tau, &resp.a) {
+        (WireVec::F64(t), WireMat::F64(a)) => {
+            put_f64_slice(&mut p, t);
+            put_f64_slice(&mut p, a.data());
+        }
+        (WireVec::F32(t), WireMat::F32(a)) => {
+            put_f32_slice(&mut p, t);
+            put_f32_slice(&mut p, a.data());
+        }
+        _ => unreachable!("tau precision always matches the factors"),
+    }
+    encode_frame(T_FACTOR_OK, id, &p)
+}
+
+/// Decode a factorization response payload.
+pub fn decode_factor_resp(p: &[u8]) -> Result<FactorResp, ProtoError> {
+    let mut c = Cursor::new(p);
+    let kind = parse_kind(c.u8()?)?;
+    let prec = c.u8()?;
+    let cancelled = c.u8()? != 0;
+    c.u8()?; // reserved
+    let m = c.u32()? as usize;
+    let n = c.u32()? as usize;
+    let cols_done = c.u32()? as usize;
+    let n_ipiv = c.u32()? as usize;
+    let n_tau = c.u32()? as usize;
+    let secs = c.f64()?;
+    let mut ipiv = Vec::with_capacity(n_ipiv);
+    for _ in 0..n_ipiv {
+        ipiv.push(c.u32()?);
+    }
+    let (tau, a) = match prec {
+        0 => {
+            data_bytes(m, n, 8)?;
+            let tau = WireVec::F64(c.f64_vec(n_tau)?);
+            let a = WireMat::F64(mat_from_col_major(m, n, c.f64_vec(m * n)?));
+            (tau, a)
+        }
+        1 => {
+            data_bytes(m, n, 4)?;
+            let tau = WireVec::F32(c.f32_vec(n_tau)?);
+            let a = WireMat::F32(mat_from_col_major(m, n, c.f32_vec(m * n)?));
+            (tau, a)
+        }
+        other => return err(format!("unknown matrix precision code {other}")),
+    };
+    c.done()?;
+    Ok(FactorResp { kind, cancelled, cols_done, secs, ipiv, tau, a })
+}
+
+// ---------------------------------------------------------------------------
+// Solve request/response.
+
+/// Fixed (pre-data) bytes of a [`T_SOLVE`] payload.
+pub const SOLVE_REQ_FIXED: usize = 16;
+
+/// Encode a solve request frame.
+pub fn encode_solve_req(id: u64, req: &SolveReq) -> Vec<u8> {
+    let n = req.a.rows();
+    let mut p = Vec::with_capacity(SOLVE_REQ_FIXED);
+    p.push(solve_prec_code(req.prec));
+    p.push(req.priority);
+    put_u16(&mut p, 0);
+    put_u32(&mut p, n as u32);
+    put_u32(&mut p, req.deadline_ms);
+    put_u16(&mut p, req.bo);
+    put_u16(&mut p, req.bi);
+    put_f64_slice(&mut p, req.a.data());
+    put_f64_slice(&mut p, &req.b);
+    encode_frame(T_SOLVE, id, &p)
+}
+
+/// Decode a solve request payload.
+pub fn decode_solve_req(p: &[u8]) -> Result<SolveReq, ProtoError> {
+    let mut c = Cursor::new(p);
+    let prec = parse_solve_prec(c.u8()?)?;
+    let priority = c.u8()?;
+    c.u16()?; // reserved
+    let n = c.u32()? as usize;
+    let deadline_ms = c.u32()?;
+    let bo = c.u16()?;
+    let bi = c.u16()?;
+    data_bytes(n, n + 1, 8)?;
+    let a = mat_from_col_major(n, n, c.f64_vec(n * n)?);
+    let b = c.f64_vec(n)?;
+    c.done()?;
+    Ok(SolveReq { prec, priority, deadline_ms, bo, bi, a, b })
+}
+
+/// Fixed (pre-data) bytes of a [`T_SOLVE_OK`] payload.
+pub const SOLVE_RESP_FIXED: usize = 28;
+
+/// Encode a solve response frame.
+pub fn encode_solve_resp(id: u64, resp: &SolveResp) -> Vec<u8> {
+    let mut p = Vec::with_capacity(SOLVE_RESP_FIXED + resp.x.len() * 8);
+    p.push(solve_prec_code(resp.prec));
+    p.push(u8::from(resp.cancelled));
+    p.push(u8::from(resp.converged));
+    p.push(0);
+    put_u32(&mut p, resp.x.len() as u32);
+    put_u32(&mut p, resp.refine_iters);
+    put_f64(&mut p, resp.backward_error);
+    put_f64(&mut p, resp.secs);
+    put_f64_slice(&mut p, &resp.x);
+    encode_frame(T_SOLVE_OK, id, &p)
+}
+
+/// Decode a solve response payload.
+pub fn decode_solve_resp(p: &[u8]) -> Result<SolveResp, ProtoError> {
+    let mut c = Cursor::new(p);
+    let prec = parse_solve_prec(c.u8()?)?;
+    let cancelled = c.u8()? != 0;
+    let converged = c.u8()? != 0;
+    c.u8()?; // reserved
+    let n_x = c.u32()? as usize;
+    let refine_iters = c.u32()?;
+    let backward_error = c.f64()?;
+    let secs = c.f64()?;
+    let x = c.f64_vec(n_x)?;
+    c.done()?;
+    Ok(SolveResp { prec, cancelled, converged, refine_iters, backward_error, secs, x })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_all(bytes: &[u8]) -> ReadEvent {
+        let mut r = std::io::Cursor::new(bytes.to_vec());
+        read_frame(&mut r, 1 << 20, &mut |_| true)
+    }
+
+    #[test]
+    fn header_bytes_match_the_spec_table() {
+        // DESIGN.md §14: "ML", version 1, type, id LE, len LE.
+        let f = encode_frame(T_FACTOR, 0x0102_0304_0506_0708, &[0xAA, 0xBB]);
+        assert_eq!(&f[0..2], b"ML");
+        assert_eq!(f[2], 1);
+        assert_eq!(f[3], 0x10);
+        assert_eq!(&f[4..12], &[0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(&f[12..16], &[2, 0, 0, 0]);
+        assert_eq!(&f[16..], &[0xAA, 0xBB]);
+    }
+
+    #[test]
+    fn hello_frames_roundtrip_and_match_bytes() {
+        let h = encode_hello(1, 1);
+        assert_eq!(h.len(), HEADER_LEN + 2);
+        assert_eq!(&h[16..], &[1, 1]);
+        match read_all(&h) {
+            ReadEvent::Frame(f) => {
+                assert_eq!(f.ty, T_HELLO);
+                assert_eq!(f.id, 0);
+                assert_eq!(decode_hello(&f.payload).unwrap(), (1, 1));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let ack = encode_hello_ack(1);
+        match read_all(&ack) {
+            ReadEvent::Frame(f) => assert_eq!(decode_hello_ack(&f.payload).unwrap(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn factor_req_roundtrips_both_precisions() {
+        let a = Matrix::random(5, 3, 9);
+        let req = FactorReq {
+            kind: FactorKind::Qr,
+            priority: 7,
+            deadline_ms: 1234,
+            bo: 64,
+            bi: 16,
+            a: WireMat::F64(a.clone()),
+        };
+        let frame = encode_factor_req(42, &req);
+        // Byte-level spot checks against the §14 table.
+        assert_eq!(frame[16], 2, "kind code qr");
+        assert_eq!(frame[17], 0, "prec code f64");
+        assert_eq!(frame[18], 7, "priority");
+        assert_eq!(&frame[20..24], &5u32.to_le_bytes(), "m");
+        assert_eq!(&frame[24..28], &3u32.to_le_bytes(), "n");
+        assert_eq!(&frame[28..32], &1234u32.to_le_bytes(), "deadline_ms");
+        assert_eq!(&frame[32..34], &64u16.to_le_bytes(), "bo");
+        assert_eq!(&frame[34..36], &16u16.to_le_bytes(), "bi");
+        let got = decode_factor_req(&frame[HEADER_LEN..]).unwrap();
+        assert_eq!(got.kind, FactorKind::Qr);
+        assert_eq!(got.priority, 7);
+        assert_eq!(got.deadline_ms, 1234);
+        match got.a {
+            WireMat::F64(b) => assert_eq!(b.data(), a.data()),
+            _ => panic!("wrong precision"),
+        }
+
+        let a32 = Mat::<f32>::random(4, 4, 3);
+        let req32 = FactorReq {
+            kind: FactorKind::Lu,
+            priority: 0,
+            deadline_ms: 0,
+            bo: 0,
+            bi: 0,
+            a: WireMat::F32(a32.clone()),
+        };
+        let frame32 = encode_factor_req(7, &req32);
+        assert_eq!(frame32.len(), HEADER_LEN + FACTOR_REQ_FIXED + 16 * 4);
+        let got32 = decode_factor_req(&frame32[HEADER_LEN..]).unwrap();
+        match got32.a {
+            WireMat::F32(b) => assert_eq!(b.data(), a32.data()),
+            _ => panic!("wrong precision"),
+        }
+    }
+
+    #[test]
+    fn factor_resp_roundtrips_with_ipiv_and_tau() {
+        let f = Matrix::random(4, 4, 1);
+        let resp = FactorResp {
+            kind: FactorKind::Lu,
+            cancelled: false,
+            cols_done: 4,
+            secs: 0.125,
+            ipiv: vec![2, 3, 3, 3],
+            tau: WireVec::F64(vec![]),
+            a: WireMat::F64(f.clone()),
+        };
+        let frame = encode_factor_resp(11, &resp);
+        let got = decode_factor_resp(&frame[HEADER_LEN..]).unwrap();
+        assert_eq!(got.ipiv, vec![2, 3, 3, 3]);
+        assert_eq!(got.cols_done, 4);
+        assert_eq!(got.secs, 0.125);
+        assert!(!got.cancelled);
+        match got.a {
+            WireMat::F64(b) => assert_eq!(b.data(), f.data()),
+            _ => panic!("wrong precision"),
+        }
+    }
+
+    #[test]
+    fn solve_frames_roundtrip() {
+        let a = Matrix::random_dd(6, 2);
+        let b = vec![1.0; 6];
+        let req = SolveReq {
+            prec: SolvePrec::Mixed,
+            priority: 3,
+            deadline_ms: 0,
+            bo: 32,
+            bi: 8,
+            a: a.clone(),
+            b: b.clone(),
+        };
+        let frame = encode_solve_req(5, &req);
+        assert_eq!(frame.len(), HEADER_LEN + SOLVE_REQ_FIXED + (36 + 6) * 8);
+        let got = decode_solve_req(&frame[HEADER_LEN..]).unwrap();
+        assert_eq!(got.prec, SolvePrec::Mixed);
+        assert_eq!(got.b, b);
+        assert_eq!(got.a.data(), a.data());
+
+        let resp = SolveResp {
+            prec: SolvePrec::Mixed,
+            cancelled: false,
+            converged: true,
+            refine_iters: 3,
+            backward_error: 1e-16,
+            secs: 0.5,
+            x: vec![1.0, -2.0, 3.0],
+        };
+        let frame = encode_solve_resp(5, &resp);
+        let got = decode_solve_resp(&frame[HEADER_LEN..]).unwrap();
+        assert!(got.converged);
+        assert_eq!(got.refine_iters, 3);
+        assert_eq!(got.x, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn reject_roundtrips_all_codes() {
+        for code in [
+            RejectCode::Overloaded,
+            RejectCode::TooLarge,
+            RejectCode::Draining,
+            RejectCode::Malformed,
+            RejectCode::Unsupported,
+        ] {
+            let frame = encode_reject(99, code, "why not");
+            match read_all(&frame) {
+                ReadEvent::Frame(f) => {
+                    assert_eq!(f.ty, T_REJECT);
+                    assert_eq!(f.id, 99);
+                    let r = decode_reject(&f.payload).unwrap();
+                    assert_eq!(r.code, code);
+                    assert_eq!(r.reason, "why not");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_bad_version_are_corrupt() {
+        let mut f = encode_goodbye();
+        f[0] = b'X';
+        assert!(matches!(read_all(&f), ReadEvent::Corrupt(_)));
+        let mut f = encode_goodbye();
+        f[2] = 9;
+        match read_all(&f) {
+            ReadEvent::Corrupt(e) => assert!(e.0.contains("version"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_corrupt_not_hangs() {
+        let full = encode_hello(1, 1);
+        // Truncated inside the header.
+        assert!(matches!(read_all(&full[..7]), ReadEvent::Corrupt(_)));
+        // Truncated inside the payload.
+        assert!(matches!(read_all(&full[..HEADER_LEN + 1]), ReadEvent::Corrupt(_)));
+        // Empty stream is a clean EOF.
+        assert!(matches!(read_all(&[]), ReadEvent::Eof));
+    }
+
+    #[test]
+    fn oversized_frame_is_drained_and_reported() {
+        let big = encode_frame(T_FACTOR, 17, &vec![0u8; 1000]);
+        let mut r = std::io::Cursor::new([big.clone(), encode_goodbye()].concat());
+        match read_frame(&mut r, 100, &mut |_| true) {
+            ReadEvent::Oversized(id, len) => {
+                assert_eq!(id, 17);
+                assert_eq!(len, 1000);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The stream stays framed: the next frame still parses.
+        match read_frame(&mut r, 100, &mut |_| true) {
+            ReadEvent::Frame(f) => assert_eq!(f.ty, T_GOODBYE),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_length_must_match_dimensions() {
+        let a = Matrix::random(4, 4, 1);
+        let req = FactorReq {
+            kind: FactorKind::Lu,
+            priority: 0,
+            deadline_ms: 0,
+            bo: 0,
+            bi: 0,
+            a: WireMat::F64(a),
+        };
+        let frame = encode_factor_req(1, &req);
+        // Chop one element off the data: decode must fail, not panic.
+        let short = &frame[HEADER_LEN..frame.len() - 8];
+        assert!(decode_factor_req(short).is_err());
+        // Extend with trailing bytes: also rejected.
+        let mut long = frame[HEADER_LEN..].to_vec();
+        long.extend_from_slice(&[0; 4]);
+        assert!(decode_factor_req(&long).is_err());
+    }
+
+    #[test]
+    fn bad_enum_codes_are_rejected() {
+        let a = Matrix::random(2, 2, 1);
+        let req = FactorReq {
+            kind: FactorKind::Lu,
+            priority: 0,
+            deadline_ms: 0,
+            bo: 0,
+            bi: 0,
+            a: WireMat::F64(a),
+        };
+        let frame = encode_factor_req(1, &req);
+        let mut p = frame[HEADER_LEN..].to_vec();
+        p[0] = 7; // kind
+        assert!(decode_factor_req(&p).is_err());
+        let mut p = frame[HEADER_LEN..].to_vec();
+        p[1] = 9; // precision
+        assert!(decode_factor_req(&p).is_err());
+        assert!(RejectCode::parse(0).is_none());
+        assert!(RejectCode::parse(6).is_none());
+    }
+}

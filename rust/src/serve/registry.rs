@@ -60,8 +60,24 @@ impl Lease {
         self.remaining.store(secs.to_bits(), Ordering::Relaxed);
     }
 
-    /// Recent stolen-tile fraction of this crew's hybrid schedule (see
-    /// the field docs).
+    /// Recent stolen-tile fraction of this crew's hybrid schedule.
+    ///
+    /// **Units**: dimensionless, in `[0, 1]` — the fraction of
+    /// macro-kernel tiles completed since the last panel checkpoint that
+    /// were *stolen* rather than executed by their static owner
+    /// (`Δstolen / Δtiles` over [`CrewShared::steal_stats`], computed by
+    /// [`Lease::fold_steal_delta`]). `0.0` means the static partition
+    /// matched the team perfectly (or no hybrid tiles ran); `1.0` means
+    /// every tile moved, i.e. the static slices are badly sized for the
+    /// crew that actually showed up.
+    ///
+    /// **Interpretation**: pressure is a *demand* signal, not a health
+    /// problem — stealing is how the hybrid schedule absorbs a team that
+    /// grew mid-iteration (DESIGN.md §13). A high-pressure crew is
+    /// demonstrably converting extra hands into progress, which is why
+    /// [`Lease::starvation`] weights it up. The window is one panel
+    /// step, so the signal tracks the current iteration rather than the
+    /// problem's history.
     pub fn steal_pressure(&self) -> f64 {
         f64::from_bits(self.steal_pressure.load(Ordering::Relaxed))
     }
@@ -91,16 +107,41 @@ impl Lease {
         self.set_steal_pressure(if dt == 0 { 0.0 } else { ds as f64 / dt as f64 });
     }
 
-    /// Work-conserving starvation score: priority-weighted remaining
-    /// work divided by the team already on the problem, scaled up by the
-    /// crew's observed steal pressure. The floater policy sends idle
-    /// workers to the highest score — the paper's WS rule ("donate to
-    /// whoever is behind") generalized from two branches to N problems.
-    /// The steal term is the lease-sizing feedback of DESIGN.md §13: a
-    /// crew whose dynamic tail and static slices are being actively
-    /// stolen from is demonstrably able to convert extra workers into
-    /// progress *within* the current iteration, so it out-bids an
-    /// otherwise equal crew whose update is already balanced.
+    /// Work-conserving starvation score:
+    ///
+    /// ```text
+    /// (priority + 1) · remaining · (1 + steal_pressure) / team
+    /// ```
+    ///
+    /// **Units**: modeled single-core seconds per enlisted worker — how
+    /// much priority-weighted work each current team member would still
+    /// have to carry. The floater policy sends idle workers to the
+    /// highest score: the paper's WS rule ("donate to whoever is
+    /// behind") generalized from two branches to N concurrent problems.
+    ///
+    /// **Derivation of each factor**:
+    /// - `priority + 1` — the `+1` keeps priority-0 requests schedulable
+    ///   (a plain multiply would zero them out); each priority level
+    ///   scales the problem's bid linearly.
+    /// - `remaining` — the cost-model estimate
+    ///   ([`crate::serve::driver::remaining_cost`]), refreshed at panel
+    ///   checkpoints, so the score decays as the problem progresses.
+    /// - `1 + steal_pressure` — the lease-sizing feedback of DESIGN.md
+    ///   §13: a crew whose static slices are being actively stolen from
+    ///   can demonstrably convert extra workers into progress *within*
+    ///   the current iteration, so it out-bids an otherwise equal crew
+    ///   whose update is already balanced. Bounded in `[1, 2]`, it
+    ///   re-orders comparable bids without drowning priority or size.
+    /// - `/ team` (members + leader) — work-conservation: doubling a
+    ///   team halves its bid, spreading floaters instead of herding
+    ///   them onto the single largest problem.
+    ///
+    /// **Tuning**: the score is deliberately scale-free — only ratios
+    /// between in-flight leases matter, so recalibrating the cost model
+    /// (see [`crate::sim::costmodel::HwModel`]) does not perturb the
+    /// policy. If high-priority work must preempt harder, widen the
+    /// priority gap at submission time rather than reshaping the
+    /// formula; the `u8` priority gives 256 levels of headroom.
     pub fn starvation(&self) -> f64 {
         let team = self.shared.members() + 1; // members + the leader
         (self.priority as f64 + 1.0) * self.remaining() * (1.0 + self.steal_pressure())

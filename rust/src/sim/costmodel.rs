@@ -15,37 +15,75 @@
 //!   scales linearly).
 
 /// Hardware + library throughput model. All rates in GFLOPS, times in
-/// seconds.
+/// seconds. Each constant documents its units, where its default comes
+/// from, and what to touch when calibrating against a different machine
+/// — recalibration changes the simulated figures but never the serve
+/// policy, because [`crate::serve::registry::Lease::starvation`] only
+/// compares cost ratios.
 #[derive(Copy, Clone, Debug)]
 pub struct HwModel {
-    /// Cores on the socket (paper: 6).
+    /// Cores on the socket (count). Paper testbed: 6 (Xeon E5-2603 v3).
     pub cores: usize,
     /// Per-core sustained DGEMM rate for large operands (GFLOPS).
+    /// Default 20.5 = 80 % of the 25.6 GFLOPS DP peak (1.6 GHz ×
+    /// 16 flops/cycle), the BLIS-on-Haswell efficiency reported in the
+    /// paper's refs [20, 21]. First knob to retune on new hardware:
+    /// measure a large square DGEMM on one core and divide by 1e9.
     pub core_gemm_peak: f64,
-    /// `k` ramp constant: GEPP efficiency `≈ 1 − exp(−k/k_ramp)`.
+    /// `k`-ramp constant (dimensionless, in units of `k`): GEPP
+    /// efficiency `≈ 1 − exp(−k/k_ramp)`. Default 30 places ≥ 94 % of
+    /// the asymptote at `k ≈ 144`, matching the paper's Fig. 14 "reaches
+    /// its asymptotic peak around k = 144". Lower values sharpen the
+    /// ramp; retune if a measured GEPP curve saturates elsewhere.
     pub k_ramp: f64,
-    /// Optimal `k_c`; `k` slightly above it pays a repacking penalty.
+    /// Optimal `k_c` (elements). Default 256 = the BLIS blocking for
+    /// Haswell DP; `k` slightly above it pays a repacking penalty
+    /// (paper footnote 4). Keep equal to the real `k_c` in use
+    /// (`--params mc,kc,nc`), or the dip lands at the wrong `k`.
     pub kc: usize,
-    /// Multiplicative penalty for `kc < k ≤ kc + 64`.
+    /// Multiplicative throughput penalty (dimensionless, `< 1`) applied
+    /// for `kc < k ≤ kc + 64` — the second packing pass is barely
+    /// amortized there. Default 0.92, eyeballed from the magnitude of
+    /// the Fig. 14 dip. Set to 1.0 to disable the effect.
     pub kc_dip: f64,
-    /// Per-core rate of the unblocked panel kernels (GFLOPS).
+    /// Per-core rate of the unblocked panel kernels (GFLOPS). Default
+    /// 2.5: the latency/bandwidth-bound regime of partial pivoting —
+    /// an order of magnitude under `core_gemm_peak`, which is the
+    /// premise of the whole paper. Raising it shrinks the panel/update
+    /// imbalance and with it every WS/ET win; calibrate from a real
+    /// unblocked `m × b_i` factorization, not from BLAS-3 numbers.
     pub unb_rate: f64,
-    /// TRSM efficiency relative to GEPP at the same `k`.
+    /// TRSM efficiency relative to GEPP at the same `k` (dimensionless,
+    /// `0..1`). Default 0.7: triangular solves have half the ILP of
+    /// GEMM per element and a thinner packing. Measured ratio of BLIS
+    /// dtrsm/dgemm on Haswell rounds to this.
     pub trsm_eff: f64,
     /// Memory bandwidth per core for row swaps (GB/s), saturating at
-    /// `bw_cores` cores.
+    /// `bw_cores` cores. Default 6.0 ≈ 51 GB/s socket DRAM bandwidth
+    /// shared by the cores that can usefully issue swap traffic. LASWP
+    /// is pure data movement (paper §3.1), so only this pair — not any
+    /// flop rate — prices it.
     pub bw_core: f64,
-    /// Core count at which the swap bandwidth saturates.
+    /// Core count at which the swap bandwidth saturates (count).
+    /// Default 4: the E5-2603 v3's DRAM channels saturate before all 6
+    /// cores are issuing. `laswp_time` is flat beyond this.
     pub bw_cores: usize,
-    /// Parallelization efficiency loss per extra thread (synchronization,
-    /// packing imbalance).
+    /// Parallelization efficiency loss per extra thread (dimensionless
+    /// per thread): `t` threads deliver `t / (1 + par_loss·(t−1))`.
+    /// Default 0.015 makes 6 threads ≈ 5.6× — "scales well but not
+    /// perfectly". Derived by fitting the paper's multi-thread GEPP
+    /// points; raise it to model a NUMA or hyperthreaded penalty.
     pub par_loss: f64,
-    /// Fixed overhead per kernel invocation (seconds) — covers job
-    /// dispatch, packing setup. Matters only for tiny blocks.
+    /// Fixed overhead per kernel invocation (seconds) — job dispatch,
+    /// packing setup. Default 2 µs ≈ one crew job publish + pickup on
+    /// the real pool (bench_blis dispatch numbers). Only visible for
+    /// tiny blocks; it is what makes shrinking `b_i` below ~8 a loss.
     pub kernel_overhead: f64,
     /// Overhead per task in the task-runtime baseline (seconds) —
     /// dependency bookkeeping, scheduling (the paper's "overhead of a
-    /// runtime" §1). OmpSs-era runtimes: ~2–5 µs/task.
+    /// runtime", §1). Default 3 µs, inside the 2–5 µs/task band of
+    /// OmpSs-era runtimes. The `LU_OS`-vs-`LU_ET` gap at small `n`
+    /// (Fig. 17) is proportional to `task_overhead − kernel_overhead`.
     pub task_overhead: f64,
 }
 

@@ -10,6 +10,12 @@
 //!
 //! Tracing is strictly opt-in: with no recorder installed, [`span`] costs
 //! one relaxed atomic load.
+//!
+//! Serve-layer spans carry structured label prefixes: in-process batch
+//! requests tag `req{id}:{kind}:{prec}`, and requests arriving through
+//! the network daemon tag `req{id}@c{client}:{kind}:{prec}` — so
+//! [`ascii_gantt_requests`] attributes lanes to individual network
+//! clients as well as to requests.
 
 use crate::pool::current_worker;
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,0 +1,516 @@
+//! End-to-end tests for the `mlu serve` network daemon: wire roundtrips
+//! over Unix and TCP sockets, protocol robustness (malformed, truncated
+//! and oversized frames, version mismatch), admission backpressure,
+//! mid-request disconnects, graceful drain under load, and a
+//! many-client soak.
+//!
+//! The recurring invariant is the daemon's ledger (DESIGN.md §14.6):
+//! after the connections settle, `admitted == delivered + reaped`, the
+//! crew registry is empty, and the pack arena has every buffer back on
+//! its free list — nothing leaks, nothing is silently dropped.
+
+use malleable_lu::factor::FactorKind;
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::scalar::Scalar;
+use malleable_lu::serve::client::{ServeClient, WireEvent};
+use malleable_lu::serve::net::{BindAddr, NetConfig, ServeDaemon};
+use malleable_lu::serve::proto::{self, ReadEvent, RejectCode};
+use malleable_lu::serve::ServeConfig;
+use malleable_lu::solve::SolvePrec;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+fn cfg(workers: usize) -> NetConfig {
+    NetConfig {
+        serve: ServeConfig {
+            workers,
+            bo: 48,
+            bi: 16,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// A collision-free Unix socket path for one test.
+fn unix_addr(tag: &str) -> BindAddr {
+    let p = std::env::temp_dir().join(format!("mlu-test-{tag}-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    BindAddr::Unix(p)
+}
+
+fn factor_req(kind: FactorKind, a: proto::WireMat) -> proto::FactorReq {
+    proto::FactorReq {
+        kind,
+        priority: 0,
+        deadline_ms: 0,
+        bo: 0,
+        bi: 0,
+        a,
+    }
+}
+
+/// Poll until every admitted request has been delivered or reaped and
+/// the compute layer holds no lease — the settled-ledger state every
+/// test ends in.
+fn await_settled(daemon: &ServeDaemon, timeout: Duration) {
+    let t0 = Instant::now();
+    loop {
+        let s = daemon.stats();
+        if s.admission.admitted == s.delivered + s.reaped && daemon.registry().is_empty() {
+            return;
+        }
+        assert!(t0.elapsed() < timeout, "daemon did not settle: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn assert_no_leaks(daemon: &ServeDaemon) {
+    assert!(daemon.registry().is_empty(), "leaked crew leases");
+    let a = daemon.arena_stats();
+    assert_eq!(
+        a.free_buffers as u64, a.allocations,
+        "arena buffers not all returned"
+    );
+}
+
+#[test]
+fn unix_roundtrip_mixed_kinds_and_precisions() {
+    let addr = unix_addr("round");
+    let daemon = ServeDaemon::bind(&addr, cfg(3)).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let n = 96;
+    let lu0 = Matrix::random(n, n, 1);
+    let ch0 = Mat::<f32>::random_spd(n, 2);
+    let qr0 = Matrix::random(n, n, 3);
+    let id_lu = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(lu0.clone())))
+        .unwrap();
+    let id_ch = client
+        .submit_factor(&factor_req(FactorKind::Chol, proto::WireMat::F32(ch0.clone())))
+        .unwrap();
+    let id_qr = client
+        .submit_factor(&factor_req(FactorKind::Qr, proto::WireMat::F64(qr0.clone())))
+        .unwrap();
+    // Diagonally-dominant system with x* = 1 (b = A·1).
+    let a = Matrix::random_dd(n, 4);
+    let mut b = vec![0.0; n];
+    for j in 0..n {
+        for i in 0..n {
+            b[i] += a[(i, j)];
+        }
+    }
+    let id_sv = client
+        .submit_solve(&proto::SolveReq {
+            prec: SolvePrec::Mixed,
+            priority: 1,
+            deadline_ms: 0,
+            bo: 0,
+            bi: 0,
+            a,
+            b,
+        })
+        .unwrap();
+
+    for _ in 0..4 {
+        match client.recv().unwrap() {
+            WireEvent::Factor { id, resp } => {
+                assert!(!resp.cancelled);
+                let ipiv: Vec<usize> = resp.ipiv.iter().map(|&p| p as usize).collect();
+                if id == id_lu {
+                    let proto::WireMat::F64(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    assert!(naive::lu_residual(&lu0, f, &ipiv) < 1e-10);
+                } else if id == id_ch {
+                    let proto::WireMat::F32(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    let tol = 16.0 * n as f64 * <f32 as Scalar>::EPSILON.to_f64();
+                    assert!(naive::chol_residual(&ch0, f) < tol);
+                } else if id == id_qr {
+                    let proto::WireMat::F64(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    let proto::WireVec::F64(tau) = &resp.tau else {
+                        panic!("tau precision flipped")
+                    };
+                    assert!(naive::qr_residual(&qr0, f, tau) < 1e-10);
+                } else {
+                    panic!("unknown factor id {id}");
+                }
+            }
+            WireEvent::Solve { id, resp } => {
+                assert_eq!(id, id_sv);
+                assert!(resp.converged);
+                assert!(resp.backward_error <= SolvePrec::Mixed.expected_backward_error(n));
+                assert!(resp.x.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+            }
+            WireEvent::Rejected { id, reject } => panic!("req{id} rejected: {reject:?}"),
+        }
+    }
+    client.goodbye().unwrap();
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, 4);
+    assert_eq!(s.delivered, 4);
+    assert_eq!(s.reaped, 0);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+}
+
+/// Bind a daemon on an ephemeral TCP port.
+fn tcp_daemon(c: NetConfig) -> ServeDaemon {
+    ServeDaemon::bind(&BindAddr::parse("tcp:127.0.0.1:0").unwrap(), c).unwrap()
+}
+
+#[test]
+fn tcp_roundtrip_on_ephemeral_port() {
+    let daemon = tcp_daemon(cfg(2));
+    let addr = daemon.local_addr();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let n = 64;
+    let a0 = Matrix::random(n, n, 7);
+    let id = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(a0.clone())))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id);
+            let proto::WireMat::F64(f) = &resp.a else {
+                panic!("precision flipped")
+            };
+            let ipiv: Vec<usize> = resp.ipiv.iter().map(|&p| p as usize).collect();
+            assert!(naive::lu_residual(&a0, f, &ipiv) < 1e-10);
+        }
+        other => panic!("expected factor response, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    daemon.shutdown();
+}
+
+/// Raw-socket connect to a TCP daemon, for tests that need to write
+/// hand-crafted (broken) bytes below the `ServeClient` layer.
+fn raw_tcp(daemon: &ServeDaemon) -> std::net::TcpStream {
+    let BindAddr::Tcp(hostport) = daemon.local_addr() else {
+        panic!("expected tcp daemon")
+    };
+    std::net::TcpStream::connect(hostport.as_str()).unwrap()
+}
+
+#[test]
+fn hello_version_mismatch_is_rejected_unsupported() {
+    let daemon = tcp_daemon(cfg(2));
+    let mut s = raw_tcp(&daemon);
+    s.write_all(&proto::encode_hello(9, 9)).unwrap();
+    match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+        ReadEvent::Frame(f) => {
+            assert_eq!(f.ty, proto::T_REJECT);
+            let r = proto::decode_reject(&f.payload).unwrap();
+            assert_eq!(r.code, RejectCode::Unsupported);
+        }
+        other => panic!("expected reject, got {other:?}"),
+    }
+    // The daemon closes the session after a failed handshake.
+    match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+        ReadEvent::Eof | ReadEvent::Closed => {}
+        other => panic!("expected close, got {other:?}"),
+    }
+    daemon.shutdown();
+}
+
+#[test]
+fn malformed_and_truncated_frames_do_not_kill_the_daemon() {
+    let daemon = tcp_daemon(cfg(2));
+
+    // Garbage bytes instead of a HELLO: Malformed reject, then close.
+    {
+        let mut s = raw_tcp(&daemon);
+        s.write_all(b"this is not a protocol frame!!!!").unwrap();
+        match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+            ReadEvent::Frame(f) => {
+                assert_eq!(f.ty, proto::T_REJECT);
+                let r = proto::decode_reject(&f.payload).unwrap();
+                assert_eq!(r.code, RejectCode::Malformed);
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    // A valid handshake, then a header announcing more payload than we
+    // send: the reader sees a truncated stream and closes the session.
+    {
+        let mut s = raw_tcp(&daemon);
+        s.write_all(&proto::encode_hello(proto::VERSION, proto::VERSION)).unwrap();
+        match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+            ReadEvent::Frame(f) => assert_eq!(f.ty, proto::T_HELLO_ACK),
+            other => panic!("expected hello ack, got {other:?}"),
+        }
+        let mut frame = proto::encode_frame(proto::T_FACTOR, 1, &[0u8; 1000]);
+        frame.truncate(proto::HEADER_LEN + 10);
+        s.write_all(&frame).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        loop {
+            match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+                ReadEvent::Frame(f) if f.ty == proto::T_REJECT => continue,
+                ReadEvent::Eof | ReadEvent::Closed => break,
+                other => panic!("expected reject/close, got {other:?}"),
+            }
+        }
+    }
+
+    // The daemon survives both: a well-behaved client still works.
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(32, 32, 1)));
+    client.submit_factor(&req).unwrap();
+    assert!(matches!(client.recv().unwrap(), WireEvent::Factor { .. }));
+    client.goodbye().unwrap();
+
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert!(s.malformed >= 2, "malformed counter: {}", s.malformed);
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+}
+
+#[test]
+fn oversized_payload_is_rejected_and_the_stream_survives() {
+    let mut c = cfg(2);
+    c.max_frame = 4096; // a 64x64 f64 matrix (32 KiB) is over the cap
+    let addr = unix_addr("oversize");
+    let daemon = ServeDaemon::bind(&addr, c).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let big = Matrix::random(64, 64, 1);
+    let id_big = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(big)))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Rejected { id, reject } => {
+            assert_eq!(id, id_big);
+            assert_eq!(reject.code, RejectCode::TooLarge);
+        }
+        other => panic!("expected TooLarge reject, got {other:?}"),
+    }
+
+    // The oversized frame was drained, not buffered: the same
+    // connection keeps working with an in-budget request.
+    let small = Matrix::random(16, 16, 2);
+    let id_small = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(small)))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Factor { id, resp } => {
+            assert_eq!(id, id_small);
+            assert!(!resp.cancelled);
+        }
+        other => panic!("expected factor response, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.oversized_frames, 1);
+    assert_eq!(s.admission.admitted, 1);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+}
+
+#[test]
+fn overload_rejection_is_typed_and_nonfatal() {
+    let mut c = cfg(2);
+    // A zero-length pending queue refuses every request
+    // deterministically — the typed-rejection path itself is what this
+    // test pins down.
+    c.admission.max_pending = 0;
+    let addr = unix_addr("overload");
+    let daemon = ServeDaemon::bind(&addr, c).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(32, 32, 1)));
+    let id = client.submit_factor(&req).unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Rejected { id: rid, reject } => {
+            assert_eq!(rid, id);
+            assert_eq!(reject.code, RejectCode::Overloaded);
+            assert!(!reject.reason.is_empty());
+        }
+        other => panic!("expected Overloaded reject, got {other:?}"),
+    }
+    // Rejection is per-request, not per-connection: the session lives.
+    let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(16, 16, 2)));
+    let id2 = client.submit_factor(&req).unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Rejected { id: rid, .. } => assert_eq!(rid, id2),
+        other => panic!("expected reject, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    let s = daemon.stats();
+    assert_eq!(s.admission.rejected_overloaded, 2);
+    assert_eq!(s.admission.admitted, 0);
+    daemon.shutdown();
+}
+
+#[test]
+fn disconnect_mid_request_reaps_without_leaks() {
+    let addr = unix_addr("reap");
+    let daemon = ServeDaemon::bind(&addr, cfg(2)).unwrap();
+
+    {
+        let mut client = ServeClient::connect(&addr).unwrap();
+        let a0 = Matrix::random(192, 192, 1);
+        let req = factor_req(FactorKind::Lu, proto::WireMat::F64(a0));
+        client.submit_factor(&req).unwrap();
+        // Wait until the request is actually admitted (the reader may
+        // not have decoded the frame yet), then vanish without reading
+        // the response.
+        let t0 = Instant::now();
+        while daemon.stats().admission.admitted == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "never admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    } // drop = abrupt disconnect
+
+    // The daemon must reap the orphaned request: cancel-or-finish it,
+    // release its lease and admission slot, return its arena buffers.
+    await_settled(&daemon, Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, 1);
+    assert_eq!(s.delivered + s.reaped, 1);
+    assert_no_leaks(&daemon);
+
+    // And a fresh client gets full service afterwards.
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(48, 48, 2)));
+    client.submit_factor(&req).unwrap();
+    assert!(matches!(client.recv().unwrap(), WireEvent::Factor { .. }));
+    client.goodbye().unwrap();
+    daemon.shutdown();
+}
+
+#[test]
+fn drain_under_load_answers_every_admitted_request() {
+    let addr = unix_addr("drain");
+    let daemon = ServeDaemon::bind(&addr, cfg(3)).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let k = 6;
+    let mut ids = Vec::new();
+    for i in 0..k {
+        let a0 = Matrix::random(128, 128, i as u64 + 1);
+        let req = factor_req(FactorKind::Lu, proto::WireMat::F64(a0));
+        ids.push(client.submit_factor(&req).unwrap());
+    }
+
+    // Reader thread: collect every terminal event until the daemon
+    // closes the connection at the end of the drain.
+    let reader = std::thread::spawn(move || {
+        let mut events: Vec<u64> = Vec::new();
+        loop {
+            match client.recv() {
+                Ok(WireEvent::Factor { id, .. })
+                | Ok(WireEvent::Solve { id, .. })
+                | Ok(WireEvent::Rejected { id, .. }) => events.push(id),
+                Err(_) => break, // daemon closed after the drain
+            }
+        }
+        events
+    });
+
+    // Drain while the requests are in flight. A short grace forces the
+    // ET path for whatever is still running — those clients still get
+    // responses, flagged `cancelled`.
+    daemon.drain(Duration::from_millis(50));
+    let events = reader.join().unwrap();
+
+    // Every event answers a request we submitted, at most once each.
+    let mut seen = events.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), events.len(), "duplicate responses: {events:?}");
+    assert!(events.iter().all(|id| ids.contains(id)));
+
+    // The ledger: everything admitted was answered (or reaped, had the
+    // client vanished — it did not, so reaped stays 0) and nothing
+    // leaked. Events the client saw = deliveries + typed rejections.
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    assert_eq!(s.reaped, 0);
+    let rejected = s.admission.rejected_draining + s.admission.rejected_overloaded;
+    assert_eq!(events.len() as u64, s.delivered + rejected);
+    assert_no_leaks(&daemon);
+
+    // Post-drain, the daemon accepts no new sessions.
+    assert!(ServeClient::connect(&addr).is_err());
+    daemon.shutdown();
+}
+
+/// 256 concurrent Unix-socket clients (the acceptance soak, sized down
+/// nowhere): every request must produce exactly one terminal event.
+/// The `soak_` prefix lets the TSan CI lane skip it (`--skip soak_`).
+#[test]
+fn soak_many_concurrent_unix_clients() {
+    let clients = 256;
+    let addr = unix_addr("soak");
+    let mut c = cfg(3);
+    c.admission.max_pending = clients;
+    let daemon = ServeDaemon::bind(&addr, c).unwrap();
+
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(&addr).unwrap();
+                let n = [24usize, 32, 40][i % 3];
+                let kind = FactorKind::all()[i % 3];
+                let a = if i % 2 == 0 {
+                    proto::WireMat::F64(match kind {
+                        FactorKind::Chol => Matrix::random_spd(n, i as u64 + 1),
+                        _ => Matrix::random(n, n, i as u64 + 1),
+                    })
+                } else {
+                    proto::WireMat::F32(match kind {
+                        FactorKind::Chol => Mat::<f32>::random_spd(n, i as u64 + 1),
+                        _ => Mat::<f32>::random(n, n, i as u64 + 1),
+                    })
+                };
+                let id = client.submit_factor(&factor_req(kind, a)).unwrap();
+                let done = match client.recv().unwrap() {
+                    WireEvent::Factor { id: rid, resp } => {
+                        assert_eq!(rid, id);
+                        assert!(!resp.cancelled);
+                        true
+                    }
+                    WireEvent::Rejected { id: rid, .. } => {
+                        assert_eq!(rid, id);
+                        false
+                    }
+                    other => panic!("unexpected event {other:?}"),
+                };
+                client.goodbye().unwrap();
+                done
+            })
+        })
+        .collect();
+
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    for h in handles {
+        if h.join().unwrap() {
+            completed += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    assert_eq!(completed + rejected, clients as u64);
+
+    daemon.drain(Duration::from_secs(60));
+    let s = daemon.stats();
+    assert_eq!(s.conns_accepted, clients as u64);
+    assert_eq!(s.delivered, completed);
+    assert_eq!(s.reaped, 0);
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+}
