@@ -135,9 +135,17 @@ impl AdmissionCtl {
         let mut cur = self.pending.load(Ordering::Relaxed);
         loop {
             if cur >= self.cfg.max_pending {
+                // Back the per-client slot out, dropping the entry at
+                // zero exactly as `release` does — otherwise every new
+                // client refused at the global bound would leave a
+                // permanent zero-count entry behind (unbounded map
+                // growth under sustained overload).
                 let mut map = self.per_client.lock().unwrap();
                 if let Some(slot) = map.get_mut(&client) {
                     *slot -= 1;
+                    if *slot == 0 {
+                        map.remove(&client);
+                    }
                 }
                 self.rej_overloaded.fetch_add(1, Ordering::Relaxed);
                 return Err(RejectCode::Overloaded);
@@ -180,6 +188,14 @@ impl AdmissionCtl {
     /// Admitted-but-unanswered requests right now (all connections).
     pub fn pending(&self) -> usize {
         self.pending.load(Ordering::Acquire)
+    }
+
+    /// Clients currently holding at least one pending slot. Entries are
+    /// removed when their count returns to zero (both on release and on
+    /// a global-bound back-out), so this stays bounded by the live
+    /// connection count — not by every client id ever seen.
+    pub fn tracked_clients(&self) -> usize {
+        self.per_client.lock().unwrap().len()
     }
 
     /// `client`'s admitted-but-unanswered requests right now.
@@ -270,6 +286,23 @@ mod tests {
         // The quota is untouched: an in-bounds request still fits.
         assert!(c.try_admit(1, (64, 64)).is_ok());
         assert_eq!(c.stats().rejected_too_large, 2);
+    }
+
+    #[test]
+    fn global_bound_backout_leaves_no_client_entry_behind() {
+        // A full global queue refuses every newcomer; each refusal must
+        // back its per-client slot out *and* drop the zero-count map
+        // entry, or sustained overload from short-lived connections
+        // grows the map without bound.
+        let c = ctl(1, 4, 100);
+        assert!(c.try_admit(1, (10, 10)).is_ok());
+        assert_eq!(c.tracked_clients(), 1);
+        for client in 2..100u64 {
+            assert_eq!(c.try_admit(client, (10, 10)), Err(RejectCode::Overloaded));
+        }
+        assert_eq!(c.tracked_clients(), 1, "rejected clients leaked map entries");
+        c.release(1);
+        assert_eq!(c.tracked_clients(), 0);
     }
 
     #[test]

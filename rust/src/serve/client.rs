@@ -12,10 +12,11 @@
 
 use super::net::BindAddr;
 use super::proto::{self, ReadEvent, Reject};
+use std::cell::Cell;
 use std::io::Write;
 use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 enum ClientStream {
     Tcp(TcpStream),
@@ -79,6 +80,8 @@ pub enum WireEvent {
 pub struct ServeClient {
     stream: ClientStream,
     next_id: u64,
+    /// Deadline budget for one `recv` call; `None` blocks indefinitely.
+    read_timeout: Cell<Option<Duration>>,
 }
 
 fn io_err(msg: impl Into<String>) -> std::io::Error {
@@ -93,7 +96,11 @@ impl ServeClient {
             BindAddr::Tcp(a) => ClientStream::Tcp(TcpStream::connect(a.as_str())?),
             BindAddr::Unix(p) => ClientStream::Unix(UnixStream::connect(p)?),
         };
-        let mut c = Self { stream, next_id: 1 };
+        let mut c = Self {
+            stream,
+            next_id: 1,
+            read_timeout: Cell::new(None),
+        };
         c.stream.write_all(&proto::encode_hello(proto::VERSION, proto::VERSION))?;
         c.stream.flush()?;
         match c.read_event()? {
@@ -135,9 +142,23 @@ impl ServeClient {
         }
     }
 
-    /// Optional per-read timeout for [`recv`](Self::recv); `None`
+    /// Optional per-call timeout for [`recv`](Self::recv); `None`
     /// blocks indefinitely (the default).
+    ///
+    /// When the deadline passes, `recv` fails with
+    /// [`std::io::ErrorKind::TimedOut`]. A timeout that fires *between*
+    /// frames (the common case: no event has arrived yet) leaves the
+    /// session synchronized — a later `recv` simply waits again. One
+    /// that fires *mid-frame* (the server stalled inside a response)
+    /// abandons the partial frame, so the stream can no longer be
+    /// trusted and the session should be dropped; the error message
+    /// says which case occurred.
     pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        // The socket-level timeout makes blocked reads surface as
+        // `WouldBlock`/`TimedOut` ticks; the deadline check in
+        // `read_event` turns those into a hard per-call budget instead
+        // of silently retrying forever.
+        self.read_timeout.set(timeout);
         match &self.stream {
             ClientStream::Tcp(s) => s.set_read_timeout(timeout),
             ClientStream::Unix(s) => s.set_read_timeout(timeout),
@@ -151,7 +172,16 @@ impl ServeClient {
     }
 
     fn read_event(&mut self) -> std::io::Result<(u8, Option<WireEvent>)> {
-        match proto::read_frame(&mut self.stream, usize::MAX, &mut |_| true) {
+        let deadline = self.read_timeout.get().map(|t| Instant::now() + t);
+        let mut timed_out = false;
+        let mut tick = |_idle: bool| match deadline {
+            Some(d) if Instant::now() >= d => {
+                timed_out = true;
+                false
+            }
+            _ => true,
+        };
+        match proto::read_frame(&mut self.stream, usize::MAX, &mut tick) {
             ReadEvent::Frame(f) => {
                 let ev = match f.ty {
                     proto::T_FACTOR_OK => Some(WireEvent::Factor {
@@ -170,11 +200,21 @@ impl ServeClient {
                 };
                 Ok((f.ty, ev))
             }
-            ReadEvent::Eof | ReadEvent::Closed => Err(std::io::Error::new(
+            // `Closed` only arises from our deadline tick returning
+            // false at a frame boundary: a clean, retryable timeout.
+            ReadEvent::Closed => Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "read timed out waiting for a server event (between frames; retryable)",
+            )),
+            ReadEvent::Eof => Err(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "server closed the connection",
             )),
             ReadEvent::Oversized(..) => Err(io_err("oversized frame from server")),
+            ReadEvent::Corrupt(e) if timed_out => Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                format!("read timed out mid-frame; the session is unsynchronized, drop it ({e})"),
+            )),
             ReadEvent::Corrupt(e) => Err(io_err(e.0)),
         }
     }

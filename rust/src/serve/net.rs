@@ -23,7 +23,10 @@
 //! requests get typed [`RejectCode::Draining`] rejects), let in-flight
 //! work finish — or early-terminate it at the grace deadline through the
 //! per-request [`CancelToken`]s — and flush every response before the
-//! sockets close. [`ServeDaemon::shutdown`] is drain plus joining every
+//! sockets close. Once the ledger settles (or the grace deadline
+//! passes), a *hard stop* forces readers off even partially received
+//! frames, so a client stalled mid-header cannot hold the drain open.
+//! [`ServeDaemon::shutdown`] is drain plus joining every
 //! thread and stopping the compute pool; the accounting invariant
 //! `admitted == delivered + reaped` then holds exactly ([`DaemonStats`]).
 //!
@@ -327,8 +330,15 @@ struct NetShared {
     server: LuServer,
     admission: AdmissionCtl,
     cfg: NetConfig,
-    /// Tells connection threads to wind down (drain/shutdown).
+    /// Tells connection threads to wind down (drain/shutdown). Readers
+    /// still finish a frame already on the wire (to answer it with a
+    /// `Draining` reject) — until `hard_stop` flips.
     stop_conns: AtomicBool,
+    /// Final phase of a drain: readers abandon even partial frames at
+    /// their next read tick. Without this, a client that sends half a
+    /// header and then stalls would pin its reader thread — and the
+    /// drain join — forever.
+    hard_stop: AtomicBool,
     /// Outstanding cancel handles by compute job id, so a drain
     /// deadline can ET work whose typed handle the writer already owns.
     cancels: Mutex<HashMap<u64, CancelToken>>,
@@ -376,6 +386,7 @@ impl ServeDaemon {
             admission: AdmissionCtl::new(cfg.admission),
             cfg,
             stop_conns: AtomicBool::new(false),
+            hard_stop: AtomicBool::new(false),
             cancels: Mutex::new(HashMap::new()),
             conns_accepted: AtomicU64::new(0),
             delivered: AtomicU64::new(0),
@@ -433,12 +444,25 @@ impl ServeDaemon {
         self.shared.server.arena_stats()
     }
 
+    /// Connection threads currently tracked for the drain-time join.
+    /// The acceptor sweeps finished ones on every poll, so on an idle
+    /// daemon this decays to the live-connection thread count rather
+    /// than growing with every connection ever accepted (tests,
+    /// introspection).
+    pub fn tracked_conn_threads(&self) -> usize {
+        self.conn_threads.lock().unwrap().len()
+    }
+
     /// Graceful drain (DESIGN.md §14.6): stop accepting connections,
     /// refuse new requests with `Draining`, let admitted work finish —
     /// until `grace` expires, after which outstanding jobs are
     /// ET-cancelled (their clients still get responses, flagged
     /// `cancelled`) — then wait for every response to flush and every
-    /// connection thread to exit. Idempotent.
+    /// connection thread to exit. Completion is bounded: once the
+    /// ledger settles (or the grace deadline passes), readers parked
+    /// mid-frame on stalled clients are forced out at their next read
+    /// tick, so a half-sent header cannot hold the drain open.
+    /// Idempotent.
     pub fn drain(&self, grace: Duration) {
         if self.drained.swap(true, Ordering::AcqRel) {
             return;
@@ -451,7 +475,11 @@ impl ServeDaemon {
         while !self.shared.admission.is_drained() {
             if !cancelled && Instant::now() >= deadline {
                 // Grace expired: ET everything still outstanding. The
-                // writers deliver the cancelled results normally.
+                // writers deliver the cancelled results normally. Also
+                // stop waiting on partial frames — a stalled mid-frame
+                // client holds no admission slot and gets no further
+                // patience past the deadline.
+                self.shared.hard_stop.store(true, Ordering::Release);
                 for tok in self.shared.cancels.lock().unwrap().values() {
                     tok.cancel();
                 }
@@ -459,6 +487,11 @@ impl ServeDaemon {
             }
             std::thread::sleep(Duration::from_millis(1));
         }
+        // Ledger settled: every admitted request is answered. Readers
+        // may still sit mid-frame on connections that hold no admission
+        // slot; force them out so the joins below finish within one
+        // read-timeout tick instead of at the client's leisure.
+        self.shared.hard_stop.store(true, Ordering::Release);
         if let Some(h) = self.acceptor.lock().unwrap().take() {
             let _ = h.join();
         }
@@ -495,6 +528,10 @@ fn acceptor_loop(
 ) {
     let mut next_client: u64 = 1;
     while !stop.load(Ordering::Acquire) {
+        // Join threads of connections that already ended, so a
+        // long-running daemon does not keep one handle per connection
+        // ever accepted (drain still joins the live stragglers).
+        reap_finished(&threads);
         match listener.accept() {
             Ok(stream) => {
                 let client = next_client;
@@ -513,6 +550,26 @@ fn acceptor_loop(
                 std::thread::sleep(Duration::from_millis(50));
             }
         }
+    }
+}
+
+/// Join every connection thread that has already exited, leaving live
+/// ones tracked for the drain-time join.
+fn reap_finished(threads: &Mutex<Vec<JoinHandle<()>>>) {
+    let mut done = Vec::new();
+    {
+        let mut t = threads.lock().unwrap();
+        let mut i = 0;
+        while i < t.len() {
+            if t[i].is_finished() {
+                done.push(t.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for h in done {
+        let _ = h.join();
     }
 }
 
@@ -617,8 +674,11 @@ fn reader_loop(
     let max_payload = shared.cfg.max_frame;
     let stop = |idle: bool| -> bool {
         // Keep reading while the connection is alive; during a drain,
-        // stay up only to finish a frame already on the wire.
+        // stay up only to finish a frame already on the wire — and not
+        // even that once the drain's hard-stop phase begins (a stalled
+        // partial frame must not pin this thread forever).
         !(dead.load(Ordering::Acquire)
+            || shared.hard_stop.load(Ordering::Acquire)
             || (shared.stop_conns.load(Ordering::Acquire) && idle))
     };
     // Handshake: the first frame must be HELLO with a version range

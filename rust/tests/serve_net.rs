@@ -390,6 +390,100 @@ fn disconnect_mid_request_reaps_without_leaks() {
 }
 
 #[test]
+fn recv_timeout_fires_and_the_session_survives() {
+    let daemon = tcp_daemon(cfg(2));
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+
+    // Nothing submitted: recv must come back with TimedOut instead of
+    // blocking forever on the configured per-call budget.
+    client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let t0 = Instant::now();
+    let err = client.recv().expect_err("recv returned without a request in flight");
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "timeout took {:?}",
+        t0.elapsed()
+    );
+
+    // An idle-boundary timeout leaves the stream framed: the same
+    // session still completes a real request afterwards.
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(32, 32, 5)));
+    let id = client.submit_factor(&req).unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id);
+            assert!(!resp.cancelled);
+        }
+        other => panic!("expected factor response, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    daemon.shutdown();
+}
+
+#[test]
+fn drain_completes_despite_a_client_stalled_mid_frame() {
+    let daemon = tcp_daemon(cfg(2));
+
+    // A well-behaved handshake, then half a frame header — and silence,
+    // with the socket held open. This connection holds no admission
+    // slot; it must not be able to hold the drain open either.
+    let mut stalled = raw_tcp(&daemon);
+    stalled
+        .write_all(&proto::encode_hello(proto::VERSION, proto::VERSION))
+        .unwrap();
+    match proto::read_frame(&mut stalled, 1 << 20, &mut |_| true) {
+        ReadEvent::Frame(f) => assert_eq!(f.ty, proto::T_HELLO_ACK),
+        other => panic!("expected hello ack, got {other:?}"),
+    }
+    let frame = proto::encode_frame(proto::T_FACTOR, 1, &[0u8; 256]);
+    stalled.write_all(&frame[..7]).unwrap(); // partial header, then stall
+
+    // Give the reader a moment to consume the partial bytes so the
+    // drain genuinely catches it mid-frame.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let t0 = Instant::now();
+    daemon.drain(Duration::from_millis(200));
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "drain hung on the stalled client: {:?}",
+        t0.elapsed()
+    );
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    daemon.shutdown();
+    drop(stalled); // kept alive (stalled, not closed) through the drain
+}
+
+#[test]
+fn finished_connection_threads_are_swept_while_running() {
+    let daemon = tcp_daemon(cfg(2));
+    for i in 0..8u64 {
+        let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+        let req = factor_req(FactorKind::Lu, proto::WireMat::F64(Matrix::random(24, 24, i + 1)));
+        client.submit_factor(&req).unwrap();
+        assert!(matches!(client.recv().unwrap(), WireEvent::Factor { .. }));
+        client.goodbye().unwrap();
+    }
+    // The acceptor sweeps finished reader/writer pairs on every poll:
+    // with all 8 connections closed, the tracked handles must decay to
+    // zero long before any drain.
+    let t0 = Instant::now();
+    while daemon.tracked_conn_threads() > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "conn threads never swept: {} still tracked",
+            daemon.tracked_conn_threads()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(daemon.stats().conns_accepted, 8);
+    daemon.shutdown();
+}
+
+#[test]
 fn drain_under_load_answers_every_admitted_request() {
     let addr = unix_addr("drain");
     let daemon = ServeDaemon::bind(&addr, cfg(3)).unwrap();
