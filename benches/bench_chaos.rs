@@ -1,0 +1,132 @@
+//! Supervision-overhead pin (DESIGN.md §15.5): the serve stack's
+//! fault-handling machinery — per-request cancel flag, deadline fold,
+//! lease progress accounting at every panel checkpoint, and (under
+//! `--features chaos`) the disarmed fault-injection hooks — must cost
+//! under 2% of raw factorization throughput. Robustness that taxes the
+//! steady state would contradict the paper's thesis that malleability
+//! mechanisms are cheap enough to leave on.
+//!
+//! Two timed paths over identical inputs on the same crew:
+//!
+//! - **raw**: `factorize_blocked` with a default (empty) `FactorCtl` —
+//!   no cancel flag, no checkpoints, no supervision.
+//! - **supervised**: the real serve-request driver
+//!   (`serve::driver::drive`) with a live lease, cancel flag, and a
+//!   far-future deadline, exactly as a daemon request runs.
+//!
+//! Best-of-`reps` timing on both sides squeezes scheduler noise out of
+//! the ratio; the JSON records both rates and the overhead percentage.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::cli::Args;
+use malleable_lu::factor::{factorize_blocked, FactorCtl, FactorKind};
+use malleable_lu::matrix::Matrix;
+use malleable_lu::pool::Crew;
+use malleable_lu::serve::driver::{drive, DriveCfg};
+use malleable_lu::serve::Lease;
+use malleable_lu::sim::HwModel;
+use malleable_lu::util::gflops;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_chaos.json");
+    let n = args.get("n", if quick { 256usize } else { 512 });
+    let reps = args.get("reps", if quick { 3usize } else { 7 });
+    let max_overhead_pct = args.get("max-overhead-pct", 2.0f64);
+    let (bo, bi) = (64usize, 16usize);
+
+    let params = BlisParams::default();
+    let hw = HwModel::default();
+    let kind = FactorKind::Lu;
+    let a0 = Matrix::random(n, n, 42);
+    let mut crew = Crew::new();
+    let cancel = AtomicBool::new(false);
+
+    let run_raw = |crew: &mut Crew| {
+        let mut a = a0.clone();
+        let t0 = Instant::now();
+        let out = factorize_blocked(kind, crew, &params, a.view_mut(), bo, bi, &FactorCtl::default());
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(out.error.is_none() && !out.cancelled, "raw run failed");
+        assert_eq!(out.cols_done, n);
+        secs
+    };
+    let run_supervised = |crew: &mut Crew, cancel: &AtomicBool| {
+        let lease = Arc::new(Lease::new(
+            1,
+            0,
+            crew.shared(),
+            kind.remaining_cost_prec::<f64>(&hw, n, n, 0, bo, bi),
+        ));
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo,
+            bi,
+            kind,
+            lease: &lease,
+            cancel,
+            deadline: Some(Instant::now() + Duration::from_secs(3600)),
+            client: None,
+        };
+        let mut a = a0.clone();
+        let t0 = Instant::now();
+        let out = drive(crew, a.view_mut(), &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(out.error.is_none() && !out.cancelled, "supervised run failed");
+        assert_eq!(out.cols_done, n);
+        secs
+    };
+
+    // Warm the arena and caches once per path before timing.
+    run_raw(&mut crew);
+    run_supervised(&mut crew, &cancel);
+
+    let mut best_raw = f64::INFINITY;
+    let mut best_sup = f64::INFINITY;
+    for _ in 0..reps {
+        // Alternate paths so slow drift (thermal, competing load) hits
+        // both sides evenly instead of biasing one.
+        best_raw = best_raw.min(run_raw(&mut crew));
+        best_sup = best_sup.min(run_supervised(&mut crew, &cancel));
+    }
+
+    let flops = kind.flops(n, n);
+    let raw_gf = gflops(flops, best_raw);
+    let sup_gf = gflops(flops, best_sup);
+    let overhead_pct = (best_sup / best_raw - 1.0) * 100.0;
+    let hooks = cfg!(feature = "chaos");
+
+    println!("chaos supervision overhead: n={n} bo={bo} bi={bi} reps={reps} hooks_compiled={hooks}");
+    println!("  raw        {raw_gf:8.2} GFLOPS  ({:.1} ms)", best_raw * 1e3);
+    println!("  supervised {sup_gf:8.2} GFLOPS  ({:.1} ms)", best_sup * 1e3);
+    println!("  overhead   {overhead_pct:+.2}%  (limit {max_overhead_pct:.1}%)");
+
+    if out_path != "-" {
+        use malleable_lu::util::json::Value;
+        let doc = Value::obj([
+            ("bench", Value::Str("chaos".into())),
+            ("quick", Value::Bool(quick)),
+            ("n", Value::Num(n as f64)),
+            ("reps", Value::Num(reps as f64)),
+            ("hooks_compiled", Value::Bool(hooks)),
+            ("raw_gflops", Value::Num(raw_gf)),
+            ("supervised_gflops", Value::Num(sup_gf)),
+            ("overhead_pct", Value::Num(overhead_pct)),
+            ("max_overhead_pct", Value::Num(max_overhead_pct)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+
+    assert!(
+        overhead_pct < max_overhead_pct,
+        "supervision overhead {overhead_pct:.2}% exceeds the {max_overhead_pct:.1}% budget \
+         (raw {raw_gf:.2} vs supervised {sup_gf:.2} GFLOPS)"
+    );
+    println!("bench_chaos OK");
+}

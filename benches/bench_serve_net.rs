@@ -100,6 +100,9 @@ fn one_request(client: &mut ServeClient, c: usize, i: usize) -> Option<(f64, f64
             assert_eq!(rid, id);
             None
         }
+        WireEvent::Failed { id: rid, failure } => {
+            panic!("well-posed request {rid} failed: {failure:?}");
+        }
     }
 }
 

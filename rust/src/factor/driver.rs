@@ -35,23 +35,107 @@
 //! timing, because the left-looking panels leave aborted columns
 //! untouched (the per-kind ET contract, DESIGN.md §11).
 
-use super::{FactorCtl, Factorization, LaCtl, LaOpts, LaStats, PanelStep};
+use super::{FactorCtl, FactorError, FactorKind, Factorization, LaCtl, LaOpts, LaStats, PanelStep};
 use crate::blis::{BlisParams, PackArena};
 use crate::matrix::{Mat, MatMut};
 use crate::pool::{Crew, Pool};
 use crate::scalar::Scalar;
 use crate::trace::{span, Kind};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Column-major scan for the first non-finite entry (NaN or ±∞) of `a`;
+/// returns its offset `j * rows + i`. Both drivers run this before
+/// touching the matrix so a poisoned input yields a typed
+/// [`FactorError::NonFinite`] instead of NaN-filled factors.
+fn first_non_finite<S: Scalar>(a: &MatMut<S>) -> Option<usize> {
+    let (m, n) = (a.rows(), a.cols());
+    for j in 0..n {
+        for i in 0..m {
+            if !a.at(i, j).is_finite() {
+                return Some(j * m + i);
+            }
+        }
+    }
+    None
+}
+
+/// Inspect the diagonal of a freshly factorized panel (columns
+/// `f..f+bc`) for the kind-specific failure conditions (DESIGN.md §15.2).
+/// Returns the error plus whether it is *fatal*: LU treats an
+/// exactly-zero pivot with LAPACK-`info` semantics (record the column,
+/// keep factoring — the factors stay valid, only a solve would divide by
+/// zero) and QR does the same for a zero `R` diagonal (rank deficiency);
+/// a Cholesky breakdown or a non-finite diagonal ends the run after this
+/// panel's commit.
+fn panel_health<S: Scalar>(
+    kind: FactorKind,
+    a: &MatMut<S>,
+    f: usize,
+    bc: usize,
+) -> Option<(FactorError, bool)> {
+    let m = a.rows();
+    for j in f..f + bc {
+        let d = a.at(j, j);
+        if !d.is_finite() {
+            // A Cholesky panel goes non-finite exactly when the input
+            // was not positive definite (sqrt of a negative leading
+            // minor): report the cause, not the symptom.
+            let e = match kind {
+                FactorKind::Chol => {
+                    FactorError::Unsupported(format!(
+                        "matrix is not positive definite (breakdown at column {j})"
+                    ))
+                }
+                _ => FactorError::NonFinite {
+                    first_offset: j * m + j,
+                },
+            };
+            return Some((e, true));
+        }
+        if d == S::ZERO {
+            return Some((
+                FactorError::ExactlySingular { col: j },
+                kind == FactorKind::Chol,
+            ));
+        }
+    }
+    None
+}
+
+/// Record the first error seen; any fatal condition stops the run even
+/// if a non-fatal error (LU's zero pivot) was recorded earlier.
+fn note(err: &mut Option<FactorError>, fatal: &mut bool, e: FactorError, is_fatal: bool) {
+    if err.is_none() {
+        *err = Some(e);
+    }
+    *fatal |= is_fatal;
+}
+
+/// Fold a crew's poison state (a member panicked inside a chunk) into
+/// the run's error as a fatal [`FactorError::Internal`].
+fn note_poison(err: &mut Option<FactorError>, fatal: &mut bool, msg: Option<String>) {
+    if let Some(msg) = msg {
+        note(
+            err,
+            fatal,
+            FactorError::Internal(format!("crew poisoned: {msg}")),
+            true,
+        );
+    }
+}
 
 /// Blocked right-looking factorization with cooperative checkpoints
 /// between panel steps (the serve layer's per-request driver).
 ///
-/// Returns the accumulated kind output, the committed column count, and
-/// whether a cancel flag cut the run short. After `cols_done` committed
-/// columns the matrix holds a consistent partial factorization: columns
-/// `0..cols_done` carry their final factor entries and the trailing block
-/// is fully updated.
+/// Returns the accumulated kind output, the committed column count,
+/// whether a cancel flag cut the run short, and the first typed
+/// numerical or supervision failure detected (see [`panel_health`] for
+/// which errors stop the run and which are recorded LAPACK-`info`
+/// style). After `cols_done` committed columns the matrix holds a
+/// consistent partial factorization: columns `0..cols_done` carry their
+/// final factor entries and the trailing block is fully updated.
 pub fn blocked_ctl<S: Scalar, F: Factorization<S>>(
     fk: &F,
     crew: &mut Crew,
@@ -60,12 +144,17 @@ pub fn blocked_ctl<S: Scalar, F: Factorization<S>>(
     bo: usize,
     bi: usize,
     ctl: &FactorCtl,
-) -> (F::Acc, usize, bool) {
+) -> (F::Acc, usize, bool, Option<FactorError>) {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     let bo = bo.max(1);
     let mut acc = F::Acc::default();
     let mut cancelled = false;
+    let mut error: Option<FactorError> = None;
+    let mut fatal = false;
+    if let Some(off) = first_non_finite(&a) {
+        return (acc, 0, false, Some(FactorError::NonFinite { first_offset: off }));
+    }
     let mut k = 0;
     while k < kmax {
         if let Some(c) = ctl.cancel {
@@ -95,16 +184,33 @@ pub fn blocked_ctl<S: Scalar, F: Factorization<S>>(
         }
         fk.commit(&mut acc, &st.state, st.k_done);
         k += b;
+        if let Some((e, is_fatal)) = panel_health(fk.kind(), &a, k - b, b) {
+            note(&mut error, &mut fatal, e, is_fatal);
+        }
+        if crew.is_poisoned() {
+            note_poison(&mut error, &mut fatal, crew.poison_message());
+        }
         if let Some(cb) = ctl.on_checkpoint {
             cb(k);
         }
+        if fatal {
+            break;
+        }
     }
-    (acc, k, cancelled)
+    (acc, k, cancelled, error)
 }
 
 /// The generic look-ahead driver with Worker Sharing and Early
 /// Termination (module docs above) and a cooperative cancellation
 /// checkpoint between outer panel steps (see [`LaCtl`]).
+///
+/// The third element of the return value is the first typed failure
+/// detected, with the same semantics as [`blocked_ctl`]: non-fatal
+/// errors (LU/QR exact singularity) are recorded while the run
+/// completes; fatal ones (Cholesky breakdown, mid-run overflow, a
+/// panicked crew member or panel branch) commit the current panel and
+/// stop, leaving the same clean factored prefix a request-level cancel
+/// would.
 #[allow(clippy::too_many_arguments)]
 pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     fk: &F,
@@ -115,7 +221,7 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     bi: usize,
     opts: &LaOpts,
     ctl: Option<&LaCtl>,
-) -> (F::Acc, LaStats) {
+) -> (F::Acc, LaStats, Option<FactorError>) {
     let av = a.view_mut();
     let (m, n) = (av.rows(), av.cols());
     let kmax = m.min(n);
@@ -123,8 +229,17 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     let mut stats = LaStats::default();
     let mut acc = F::Acc::default();
     let mut committed = 0usize;
+    let mut error: Option<FactorError> = None;
+    let mut fatal = false;
     if kmax == 0 {
-        return (acc, stats);
+        return (acc, stats, None);
+    }
+    if let Some(off) = first_non_finite(&av) {
+        return (
+            acc,
+            stats,
+            Some(FactorError::NonFinite { first_offset: off }),
+        );
     }
     // One packing arena for every crew this factorization creates (the
     // per-iteration PF/RU crews, prologue, epilogue): packed-buffer
@@ -139,7 +254,8 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
             cancel: ctl.map(|c| &c.cancel),
             ..Default::default()
         };
-        let (out, cols_done, cancelled) = blocked_ctl(fk, &mut crew, params, av, bo, bi, &fctl);
+        let (out, cols_done, cancelled, err) =
+            blocked_ctl(fk, &mut crew, params, av, bo, bi, &fctl);
         stats.cancelled = cancelled;
         stats.panel_widths = vec![bo.min(kmax); cols_done.div_ceil(bo.max(1))];
         let cs = crew.stats();
@@ -148,7 +264,7 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
         if let Some(c) = ctl {
             c.cols_done.store(cols_done, Ordering::Release);
         }
-        return (out, stats);
+        return (out, stats, err);
     }
     let t_pf = opts.t_pf.max(1).min(pool.workers());
 
@@ -172,6 +288,12 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     let cs = crew_all.stats();
     stats.hybrid_tiles += cs.hybrid_tiles;
     stats.stolen_tiles += cs.stolen_tiles;
+    if crew_all.is_poisoned() {
+        note_poison(&mut error, &mut fatal, crew_all.poison_message());
+    }
+    if let Some((e, is_fatal)) = panel_health(fk.kind(), &av, 0, first.k_done) {
+        note(&mut error, &mut fatal, e, is_fatal);
+    }
 
     // `cur`: the factorized-but-not-yet-applied panel [f, f+bc). Its
     // state is shared read-only between the PF and RU branches.
@@ -186,24 +308,29 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
 
     loop {
         let right0 = f + bc;
-        if let Some(c) = ctl {
-            if c.is_cancelled() {
-                // Request-level ET: commit the already-factorized current
-                // panel (including anything it owes the left block) and
-                // stop. The trailing columns keep their pre-update
-                // values; see [`LaCtl::request_cancel`].
-                stats.cancelled = true;
-                stats.panel_widths.push(bc);
-                let mut crew = Crew::with_arena(Arc::clone(&arena));
-                fk.apply_left(&mut crew, params, av, f, bc, &st_cur);
-                let cs = crew.stats();
-                stats.hybrid_tiles += cs.hybrid_tiles;
-                stats.stolen_tiles += cs.stolen_tiles;
-                fk.commit(&mut acc, &st_cur, bc);
-                committed += bc;
-                c.cols_done.store(committed, Ordering::Release);
-                break;
+        let cancel_now = ctl.is_some_and(|c| c.is_cancelled());
+        if cancel_now || fatal {
+            // Request-level ET (or a fatal error using the same exit):
+            // commit the already-factorized current panel (including
+            // anything it owes the left block) and stop. The trailing
+            // columns keep their pre-update values; see
+            // [`LaCtl::request_cancel`].
+            stats.cancelled = cancel_now;
+            stats.panel_widths.push(bc);
+            let mut crew = Crew::with_arena(Arc::clone(&arena));
+            fk.apply_left(&mut crew, params, av, f, bc, &st_cur);
+            let cs = crew.stats();
+            stats.hybrid_tiles += cs.hybrid_tiles;
+            stats.stolen_tiles += cs.stolen_tiles;
+            if crew.is_poisoned() {
+                note_poison(&mut error, &mut fatal, crew.poison_message());
             }
+            fk.commit(&mut acc, &st_cur, bc);
+            committed += bc;
+            if let Some(c) = ctl {
+                c.cols_done.store(committed, Ordering::Release);
+            }
+            break;
         }
         stats.panel_widths.push(bc);
 
@@ -233,6 +360,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
             let cs = crew.stats();
             stats.hybrid_tiles += cs.hybrid_tiles;
             stats.stolen_tiles += cs.stolen_tiles;
+            if crew.is_poisoned() {
+                note_poison(&mut error, &mut fatal, crew.poison_message());
+            }
             break;
         }
 
@@ -347,8 +477,16 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
 
         // Wait for the panel result (the PF worker may still be enlisted
         // in our crew afterwards — that is fine, it parks on job waits).
+        // A PF task that *dies* never sets `pf_work_done`, so also poll
+        // the task handle: its unwind drops `crew_pf`, whose `Drop`
+        // disbands the PF crew and releases any enlisted members — the
+        // containment path that turns a panel-branch panic into a typed
+        // error instead of a wedged spin.
         let backoff = crossbeam_utils::Backoff::new();
         while !pf_work_done.load(Ordering::Acquire) {
+            if pf_task.is_done() {
+                break;
+            }
             backoff.snooze();
         }
         if opts.malleable && crew_ru.stats().max_members > (pool.workers() - t_pf) {
@@ -358,7 +496,9 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
         for h in handles {
             h.wait();
         }
-        pf_task.wait();
+        let pf_panic = std::panic::catch_unwind(AssertUnwindSafe(|| pf_task.wait()))
+            .err()
+            .map(|e| crate::pool::panic_message(e.as_ref()));
         // Fold both branches' hybrid-scheduler counters into the run's
         // stats (the PF crew handle moved into its worker task; its
         // shared state carries the counters).
@@ -366,13 +506,48 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
         let (pf_stolen, pf_tiles) = pf_shared.steal_stats();
         stats.hybrid_tiles += cs.hybrid_tiles + pf_tiles;
         stats.stolen_tiles += cs.stolen_tiles + pf_stolen;
+        if crew_ru.is_poisoned() {
+            note_poison(&mut error, &mut fatal, crew_ru.poison_message());
+        }
+        if pf_shared.is_poisoned() {
+            note_poison(&mut error, &mut fatal, pf_shared.poison_message());
+        }
+        if let Some(msg) = pf_panic {
+            note(
+                &mut error,
+                &mut fatal,
+                FactorError::Internal(format!("look-ahead panel branch panicked: {msg}")),
+                true,
+            );
+        }
 
-        let out = outcome.lock().unwrap().take().expect("panel outcome");
+        let out = match outcome.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            Some(out) => out,
+            None => {
+                // The panel branch died before producing the next panel:
+                // the loop-top stop path commits the *current* panel
+                // (still intact) and ends the run with the error above.
+                note(
+                    &mut error,
+                    &mut fatal,
+                    FactorError::Internal(String::from(
+                        "look-ahead panel branch produced no outcome",
+                    )),
+                    true,
+                );
+                // The stop path re-pushes the current panel's width.
+                stats.panel_widths.pop();
+                continue;
+            }
+        };
         if out.terminated_early {
             stats.et_cuts += 1;
             attempt = out.k_done.max(bi.max(1));
         } else {
             attempt = (attempt + bi.max(1)).min(bo);
+        }
+        if let Some((e, is_fatal)) = panel_health(fk.kind(), &av, right0, out.k_done) {
+            note(&mut error, &mut fatal, e, is_fatal);
         }
 
         // Commit the current panel and adopt the next.
@@ -389,8 +564,8 @@ pub fn lookahead_ctl<S: Scalar, F: Factorization<S>>(
     if let Some(c) = ctl {
         c.cols_done.store(committed, Ordering::Release);
     }
-    debug_assert!(stats.cancelled || committed == kmax);
-    (acc, stats)
+    debug_assert!(stats.cancelled || error.is_some() || committed == kmax);
+    (acc, stats, error)
 }
 
 #[cfg(test)]
@@ -412,7 +587,7 @@ mod tests {
 
         let mut f2 = a0.clone();
         let mut crew2 = Crew::new();
-        let (p2, done, cancelled) = blocked_ctl(
+        let (p2, done, cancelled, err) = blocked_ctl(
             &LuFactor,
             &mut crew2,
             &params,
@@ -422,6 +597,7 @@ mod tests {
             &FactorCtl::default(),
         );
         assert!(!cancelled);
+        assert_eq!(err, None);
         assert_eq!(done, 60);
         assert_eq!(p1, p2);
         for (x, y) in f1.data().iter().zip(f2.data()) {
@@ -437,7 +613,7 @@ mod tests {
         let a0 = Matrix::random_spd(n, 5);
         let mut f = a0.clone();
         let mut crew = Crew::new();
-        let (_, done, cancelled) = blocked_ctl(
+        let (_, done, cancelled, err) = blocked_ctl(
             &CholFactor,
             &mut crew,
             &params,
@@ -447,13 +623,14 @@ mod tests {
             &FactorCtl::default(),
         );
         assert!(!cancelled);
+        assert_eq!(err, None);
         assert_eq!(done, n);
         let r = naive::chol_residual(&a0, &f);
         assert!(r < 1e-12, "chol residual {r}");
 
         let a0 = Matrix::random(n, n, 6);
         let mut f = a0.clone();
-        let (tau, done, _) = blocked_ctl(
+        let (tau, done, _, _) = blocked_ctl(
             &QrFactor,
             &mut crew,
             &params,
@@ -478,7 +655,7 @@ mod tests {
 
         let mut f1 = a0.clone();
         let mut crew = Crew::new();
-        let (_, d1, _) = blocked_ctl(
+        let (_, d1, _, _) = blocked_ctl(
             &CholFactor,
             &mut crew,
             &params,
@@ -491,7 +668,7 @@ mod tests {
 
         let pool = Pool::new(2);
         let mut f2 = a0.clone();
-        let (_, stats) = lookahead_ctl(
+        let (_, stats, _) = lookahead_ctl(
             &CholFactor,
             &pool,
             &params,
@@ -517,7 +694,7 @@ mod tests {
 
         let mut f1 = a0.clone();
         let mut crew = Crew::new();
-        let (t1, d1, _) = blocked_ctl(
+        let (t1, d1, _, _) = blocked_ctl(
             &QrFactor,
             &mut crew,
             &params,
@@ -530,7 +707,7 @@ mod tests {
 
         let pool = Pool::new(2);
         let mut f2 = a0.clone();
-        let (t2, _) = lookahead_ctl(
+        let (t2, _, _) = lookahead_ctl(
             &QrFactor,
             &pool,
             &params,
@@ -566,7 +743,7 @@ mod tests {
             let pool = Pool::new(3);
             let params = BlisParams::tiny().with_steal(steal);
             let mut f = a0.clone();
-            let (p, stats) =
+            let (p, stats, _) =
                 lookahead_ctl(&LuFactor, &pool, &params, &mut f, 16, 4, &opts, None);
             (f, p, stats)
         };

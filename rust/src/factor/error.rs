@@ -1,0 +1,130 @@
+//! Typed numerical-failure taxonomy for the factorization family
+//! (DESIGN.md §15).
+//!
+//! The paper's Early-Termination mechanism is a *controlled-failure*
+//! protocol: one branch tells another to abandon work cleanly. This
+//! module extends the same discipline to genuine failures — a singular
+//! pivot, a NaN in the input, a panicking worker — so that every layer
+//! above the drivers (solve, serve, the wire protocol) can distinguish
+//! "your matrix is the problem" from "the daemon is the problem"
+//! instead of dividing by zero or returning garbage bytes.
+
+use std::fmt;
+
+/// A typed numerical (or supervision) failure of a factorization or
+/// solve. Carried by [`super::FactorOutcome::error`], threaded through
+/// the fallible naive oracles ([`crate::matrix::naive::try_lu`] et al.)
+/// and, for the serve stack, serialized into the wire protocol's
+/// `FAILED` frame ([`crate::serve::proto::encode_failed`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FactorError {
+    /// An exactly-zero pivot (LU) or zero Cholesky diagonal was
+    /// committed at column `col`: the matrix is exactly singular in the
+    /// working precision. LAPACK-`info` semantics: LU still completes
+    /// the factorization (the zero pivot's column is skipped), so the
+    /// partial factors are valid — only a subsequent solve would divide
+    /// by zero.
+    ExactlySingular {
+        /// First column whose pivot/diagonal is exactly zero.
+        col: usize,
+    },
+    /// A non-finite value (NaN or ±∞) was found — in the input before
+    /// the factorization started, or on the committed diagonal after an
+    /// overflow mid-run.
+    NonFinite {
+        /// Column-major offset (`j * rows + i`) of the first offending
+        /// entry.
+        first_offset: usize,
+    },
+    /// The request asked for something this kind cannot do (e.g. a
+    /// Cholesky factorization of a matrix that is not positive
+    /// definite).
+    Unsupported(
+        /// Human-readable description of the unsupported condition.
+        String,
+    ),
+    /// A daemon-side fault: a worker panicked and poisoned the crew, a
+    /// leader panicked mid-request, or the supervision layer cancelled
+    /// a wedged computation. Never the client's fault.
+    Internal(
+        /// Human-readable description (panic message or watchdog note).
+        String,
+    ),
+}
+
+impl FactorError {
+    /// Stable wire code of this error's category (the first payload
+    /// byte of a `FAILED` frame; see DESIGN.md §14.3 and §15.1).
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            FactorError::ExactlySingular { .. } => 1,
+            FactorError::NonFinite { .. } => 2,
+            FactorError::Unsupported(_) => 3,
+            FactorError::Internal(_) => 4,
+        }
+    }
+
+    /// The numeric detail the wire frame carries alongside the code:
+    /// the offending column / offset, or 0 for the string-only kinds.
+    pub fn wire_detail(&self) -> u64 {
+        match self {
+            FactorError::ExactlySingular { col } => *col as u64,
+            FactorError::NonFinite { first_offset } => *first_offset as u64,
+            _ => 0,
+        }
+    }
+
+    /// Whether this failure was caused by the daemon rather than the
+    /// request (clients may report it as a server fault, not retry with
+    /// the same matrix and expect a different answer).
+    pub fn is_internal(&self) -> bool {
+        matches!(self, FactorError::Internal(_))
+    }
+}
+
+impl fmt::Display for FactorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FactorError::ExactlySingular { col } => {
+                write!(f, "matrix is exactly singular (zero pivot at column {col})")
+            }
+            FactorError::NonFinite { first_offset } => {
+                write!(f, "non-finite value (first at column-major offset {first_offset})")
+            }
+            FactorError::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+            FactorError::Internal(msg) => write!(f, "internal fault: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FactorError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_codes_are_stable() {
+        assert_eq!(FactorError::ExactlySingular { col: 3 }.wire_code(), 1);
+        assert_eq!(FactorError::NonFinite { first_offset: 9 }.wire_code(), 2);
+        assert_eq!(FactorError::Unsupported("x".into()).wire_code(), 3);
+        assert_eq!(FactorError::Internal("y".into()).wire_code(), 4);
+    }
+
+    #[test]
+    fn details_carry_the_location() {
+        assert_eq!(FactorError::ExactlySingular { col: 3 }.wire_detail(), 3);
+        assert_eq!(FactorError::NonFinite { first_offset: 9 }.wire_detail(), 9);
+        assert_eq!(FactorError::Internal("y".into()).wire_detail(), 0);
+        assert!(FactorError::Internal("y".into()).is_internal());
+        assert!(!FactorError::ExactlySingular { col: 0 }.is_internal());
+    }
+
+    #[test]
+    fn display_names_the_failure() {
+        let s = FactorError::ExactlySingular { col: 7 }.to_string();
+        assert!(s.contains("singular") && s.contains('7'), "{s}");
+        let s = FactorError::Internal("worker panicked".into()).to_string();
+        assert!(s.contains("internal") && s.contains("worker panicked"), "{s}");
+    }
+}

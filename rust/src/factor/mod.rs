@@ -30,10 +30,12 @@
 
 pub mod chol;
 pub mod driver;
+pub mod error;
 pub mod lu;
 pub mod qr;
 
 pub use chol::CholFactor;
+pub use error::FactorError;
 pub use lu::LuFactor;
 pub use qr::QrFactor;
 
@@ -358,6 +360,12 @@ pub struct FactorOutcome<S: Scalar = f64> {
     pub cancelled: bool,
     /// Look-ahead statistics (`None` for the blocked driver).
     pub la_stats: Option<LaStats>,
+    /// Typed numerical (or supervision) failure, if the drivers detected
+    /// one (DESIGN.md §15). LAPACK-`info` semantics for LU: an
+    /// [`FactorError::ExactlySingular`] is recorded but the
+    /// factorization still completes; every other kind of error stops
+    /// the run after the last committed panel.
+    pub error: Option<FactorError>,
 }
 
 /// Factorize `a` in place with the generic WS+ET look-ahead driver,
@@ -377,7 +385,7 @@ pub fn factorize_lookahead<S: Scalar>(
 ) -> FactorOutcome<S> {
     match kind {
         FactorKind::Lu => {
-            let (ipiv, stats) =
+            let (ipiv, stats, error) =
                 driver::lookahead_ctl(&LuFactor, pool, params, a, bo, bi, opts, ctl);
             FactorOutcome {
                 cols_done: ipiv.len(),
@@ -385,10 +393,11 @@ pub fn factorize_lookahead<S: Scalar>(
                 ipiv,
                 tau: Vec::new(),
                 la_stats: Some(stats),
+                error,
             }
         }
         FactorKind::Chol => {
-            let (done, stats) =
+            let (done, stats, error) =
                 driver::lookahead_ctl(&CholFactor, pool, params, a, bo, bi, opts, ctl);
             FactorOutcome {
                 cols_done: done,
@@ -396,16 +405,19 @@ pub fn factorize_lookahead<S: Scalar>(
                 ipiv: Vec::new(),
                 tau: Vec::new(),
                 la_stats: Some(stats),
+                error,
             }
         }
         FactorKind::Qr => {
-            let (tau, stats) = driver::lookahead_ctl(&QrFactor, pool, params, a, bo, bi, opts, ctl);
+            let (tau, stats, error) =
+                driver::lookahead_ctl(&QrFactor, pool, params, a, bo, bi, opts, ctl);
             FactorOutcome {
                 cols_done: tau.len(),
                 cancelled: stats.cancelled,
                 ipiv: Vec::new(),
                 tau,
                 la_stats: Some(stats),
+                error,
             }
         }
     }
@@ -426,7 +438,7 @@ pub fn factorize_blocked<S: Scalar>(
 ) -> FactorOutcome<S> {
     match kind {
         FactorKind::Lu => {
-            let (ipiv, cols_done, cancelled) =
+            let (ipiv, cols_done, cancelled, error) =
                 driver::blocked_ctl(&LuFactor, crew, params, a, bo, bi, ctl);
             FactorOutcome {
                 ipiv,
@@ -434,10 +446,11 @@ pub fn factorize_blocked<S: Scalar>(
                 cols_done,
                 cancelled,
                 la_stats: None,
+                error,
             }
         }
         FactorKind::Chol => {
-            let (_, cols_done, cancelled) =
+            let (_, cols_done, cancelled, error) =
                 driver::blocked_ctl(&CholFactor, crew, params, a, bo, bi, ctl);
             FactorOutcome {
                 ipiv: Vec::new(),
@@ -445,10 +458,11 @@ pub fn factorize_blocked<S: Scalar>(
                 cols_done,
                 cancelled,
                 la_stats: None,
+                error,
             }
         }
         FactorKind::Qr => {
-            let (tau, cols_done, cancelled) =
+            let (tau, cols_done, cancelled, error) =
                 driver::blocked_ctl(&QrFactor, crew, params, a, bo, bi, ctl);
             FactorOutcome {
                 ipiv: Vec::new(),
@@ -456,6 +470,7 @@ pub fn factorize_blocked<S: Scalar>(
                 cols_done,
                 cancelled,
                 la_stats: None,
+                error,
             }
         }
     }

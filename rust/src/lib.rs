@@ -61,6 +61,11 @@
 pub mod blis;
 pub mod cli;
 pub mod factor;
+/// Deterministic, seeded fault injection for the chaos suite
+/// (DESIGN.md §15.4). Compiled only under `cfg(test)` or the `chaos`
+/// feature; release builds carry no hook code.
+#[cfg(any(test, feature = "chaos"))]
+pub mod faultplan;
 pub mod lu;
 pub mod matrix;
 pub mod pool;

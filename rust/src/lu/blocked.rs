@@ -43,6 +43,10 @@ pub struct BlockedOutcome {
     pub cols_done: usize,
     /// Whether the run was cut short by [`BlockedCtl::cancel`].
     pub cancelled: bool,
+    /// First typed failure detected by the driver (DESIGN.md §15); an
+    /// exactly-zero pivot is recorded here while the factorization
+    /// still completes (LAPACK-`info` semantics).
+    pub error: Option<crate::factor::FactorError>,
 }
 
 /// Blocked right-looking LU with partial pivoting (`LU` in the paper's
@@ -84,7 +88,7 @@ pub fn lu_blocked_rl_ctl<S: Scalar>(
         tag: ctl.tag,
         on_checkpoint: ctl.on_checkpoint,
     };
-    let (ipiv, cols_done, cancelled) = crate::factor::driver::blocked_ctl(
+    let (ipiv, cols_done, cancelled, error) = crate::factor::driver::blocked_ctl(
         &crate::factor::LuFactor,
         crew,
         params,
@@ -97,6 +101,7 @@ pub fn lu_blocked_rl_ctl<S: Scalar>(
         ipiv,
         cols_done,
         cancelled,
+        error,
     }
 }
 
@@ -250,6 +255,56 @@ mod tests {
         let ipiv = lu_blocked_rl(&mut crew, &BlisParams::tiny(), a.view_mut(), 4, 2);
         assert_eq!(ipiv.len(), 16);
         assert!(a.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn singular_matrix_reports_typed_error_and_still_completes() {
+        // LAPACK-`info` semantics: the factorization runs to completion
+        // (pinned by `singular_matrix_completes` above) *and* the first
+        // zero pivot's column is reported as a typed error.
+        let mut a = Matrix::zeros(16, 16);
+        let mut crew = Crew::new();
+        let out = lu_blocked_rl_ctl(
+            &mut crew,
+            &BlisParams::tiny(),
+            a.view_mut(),
+            4,
+            2,
+            &BlockedCtl::default(),
+        );
+        assert_eq!(out.cols_done, 16);
+        assert!(!out.cancelled);
+        assert_eq!(
+            out.error,
+            Some(crate::factor::FactorError::ExactlySingular { col: 0 })
+        );
+    }
+
+    #[test]
+    fn non_finite_input_is_rejected_before_factoring() {
+        let mut a = Matrix::random(16, 16, 3);
+        a.view_mut().set(5, 2, f64::NAN);
+        let snapshot: Vec<u64> = a.data().iter().map(|x| x.to_bits()).collect();
+        let mut crew = Crew::new();
+        let out = lu_blocked_rl_ctl(
+            &mut crew,
+            &BlisParams::tiny(),
+            a.view_mut(),
+            4,
+            2,
+            &BlockedCtl::default(),
+        );
+        assert_eq!(out.cols_done, 0);
+        assert_eq!(
+            out.error,
+            Some(crate::factor::FactorError::NonFinite {
+                first_offset: 2 * 16 + 5
+            })
+        );
+        // The input must be untouched: the prescan fails fast instead of
+        // smearing NaNs through the factors.
+        let after: Vec<u64> = a.data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(snapshot, after);
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //!                                   # triggers a graceful drain (§14)
 //! mlu sclient   --connect unix:...|tcp:... --count 8 --n 96
 //!               [--kind lu|chol|qr|solve|mix --prec f32|f64|mix
-//!                --priority 0 --deadline-ms 0 --check]  # protocol client
+//!                --priority 0 --deadline-ms 0 --check
+//!                --retry 0 --backoff 100]  # protocol client; --retry
+//!                                # reconnects and resubmits unsettled
+//!                                # requests after disconnects or
+//!                                # transient refusals (jittered
+//!                                # exponential backoff)
 //! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
 //! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
 //! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
@@ -77,7 +82,8 @@ commands: factorize | chol | qr | solve | batch | serve | sclient | trace | fig 
 global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
 solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)
 serve flags: --listen unix:<path>|tcp:<host:port> --workers N --max-pending Q --max-client C --max-dim D --grace-ms G
-sclient flags: --connect <addr> --count N --n SIZE --kind lu|chol|qr|solve|mix --prec f32|f64|mix --check";
+sclient flags: --connect <addr> --count N --n SIZE --kind lu|chol|qr|solve|mix --prec f32|f64|mix --check
+               --retry N --backoff MS (reconnect + resubmit on disconnects, overloaded/draining rejects, internal failures)";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
 /// cache-topology-derived defaults. A malformed override is a hard
@@ -604,7 +610,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let s = daemon.stats();
     println!(
         "mlu serve: done — conns={} admitted={} delivered={} reaped={} \
-         rejected(overloaded={} too_large={} draining={}) malformed={} oversized={}",
+         rejected(overloaded={} too_large={} draining={}) malformed={} oversized={} watchdog={}",
         s.conns_accepted,
         s.admission.admitted,
         s.delivered,
@@ -613,7 +619,8 @@ fn cmd_serve(args: &Args) -> i32 {
         s.admission.rejected_too_large,
         s.admission.rejected_draining,
         s.malformed,
-        s.oversized_frames
+        s.oversized_frames,
+        s.watchdog_fired
     );
     // The drain invariant (DESIGN.md §14.6): every admitted request was
     // answered exactly once or reaped against a vanished client.
@@ -648,9 +655,42 @@ enum SentReq {
     },
 }
 
+/// One `mlu sclient` request, generated up front and kept until it is
+/// *settled* — answered, terminally failed/rejected, or out of retries.
+/// Keeping the wire payload lets a retry resubmit it verbatim after a
+/// reconnect.
+struct ReqSpec {
+    info: SentReq,
+    payload: ReqPayload,
+}
+
+enum ReqPayload {
+    Factor(serve::proto::FactorReq),
+    Solve(serve::proto::SolveReq),
+}
+
+/// Deterministically jittered exponential backoff: attempt `k`
+/// (1-based) sleeps somewhere in `[base·2^(k-1)/2, base·2^(k-1)]` ms
+/// (exponent capped at 2^6). The jitter comes from a fixed-seed LCG, so
+/// runs are reproducible while scripted reconnect storms still spread
+/// out instead of hammering the daemon in lock-step.
+fn jittered_backoff_ms(base: u64, attempt: usize, rng: &mut u64) -> u64 {
+    *rng = rng
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    let span = base.saturating_mul(1 << attempt.saturating_sub(1).min(6)).max(1);
+    span / 2 + (*rng >> 33) % (span / 2 + 1)
+}
+
 /// `mlu sclient`: submit a pipelined burst of requests to a running
 /// daemon and report per-request latency; with `--check`, verify
-/// residuals / backward errors client-side.
+/// residuals / backward errors client-side. `--retry N` survives
+/// daemon restarts and transient refusals: a dropped connection, an
+/// `overloaded`/`draining` reject, or an `internal` failure reconnects
+/// (with `--backoff` jittered exponential delay) and resubmits only the
+/// still-unsettled requests. Numerical failures (`singular`,
+/// `non-finite`, `unsupported`) are terminal — retrying cannot fix the
+/// input.
 fn cmd_sclient(args: &Args) -> i32 {
     use malleable_lu::serve::client::{ServeClient, WireEvent};
     use malleable_lu::serve::net::BindAddr;
@@ -678,20 +718,12 @@ fn cmd_sclient(args: &Args) -> i32 {
     let bo = args.get("bo", 0u16);
     let bi = args.get("bi", 0u16);
     let check = args.has("check");
+    let retry = args.get("retry", 0usize);
+    let backoff = args.get("backoff", 100u64);
 
-    let mut client = match ServeClient::connect(&addr) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("connect {addr}: {e}");
-            return 1;
-        }
-    };
-
-    // Pipelined submission: write every request up front, then drain
-    // responses in whatever completion order the daemon produces.
-    let t0 = Instant::now();
-    let mut sent: std::collections::HashMap<u64, (SentReq, Instant)> =
-        std::collections::HashMap::new();
+    // Generate every request up front; the specs outlive any one
+    // connection so a retry can resubmit the unsettled ones verbatim.
+    let mut specs: Vec<Option<ReqSpec>> = Vec::with_capacity(count);
     for i in 0..count {
         let seed = i as u64 + 1;
         let kname = if kind_s == "mix" {
@@ -699,7 +731,7 @@ fn cmd_sclient(args: &Args) -> i32 {
         } else {
             kind_s.as_str()
         };
-        let submit = if kname == "solve" {
+        let spec = if kname == "solve" {
             // Diagonally-dominant system with x* = 1 (b = A·1).
             let a = Matrix::random_dd(n, seed);
             let mut b = vec![0.0; n];
@@ -708,16 +740,18 @@ fn cmd_sclient(args: &Args) -> i32 {
                     b[r] += a[(r, j)];
                 }
             }
-            let req = proto::SolveReq {
-                prec: SolvePrec::Mixed,
-                priority,
-                deadline_ms,
-                bo,
-                bi,
-                a,
-                b,
-            };
-            client.submit_solve(&req).map(|id| (id, SentReq::Solve { n }))
+            ReqSpec {
+                info: SentReq::Solve { n },
+                payload: ReqPayload::Solve(proto::SolveReq {
+                    prec: SolvePrec::Mixed,
+                    priority,
+                    deadline_ms,
+                    bo,
+                    bi,
+                    a,
+                    b,
+                }),
+            }
         } else {
             let Some(kind) = FactorKind::parse(kname) else {
                 eprintln!("unknown --kind {kname:?} (expected lu|chol|qr|solve|mix)");
@@ -733,117 +767,227 @@ fn cmd_sclient(args: &Args) -> i32 {
                     FactorKind::Chol => Mat::<f32>::random_spd(n, seed),
                     _ => Mat::<f32>::random(n, n, seed),
                 };
-                let req = proto::FactorReq {
-                    kind,
-                    priority,
-                    deadline_ms,
-                    bo,
-                    bi,
-                    a: proto::WireMat::F32(a0.clone()),
-                };
-                client.submit_factor(&req).map(|id| (id, SentReq::F32 { kind, a0 }))
+                ReqSpec {
+                    info: SentReq::F32 { kind, a0: a0.clone() },
+                    payload: ReqPayload::Factor(proto::FactorReq {
+                        kind,
+                        priority,
+                        deadline_ms,
+                        bo,
+                        bi,
+                        a: proto::WireMat::F32(a0),
+                    }),
+                }
             } else {
                 let a0 = match kind {
                     FactorKind::Chol => Matrix::random_spd(n, seed),
                     _ => Matrix::random(n, n, seed),
                 };
-                let req = proto::FactorReq {
-                    kind,
-                    priority,
-                    deadline_ms,
-                    bo,
-                    bi,
-                    a: proto::WireMat::F64(a0.clone()),
-                };
-                client.submit_factor(&req).map(|id| (id, SentReq::F64 { kind, a0 }))
-            }
-        };
-        match submit {
-            Ok((id, info)) => {
-                sent.insert(id, (info, Instant::now()));
-            }
-            Err(e) => {
-                eprintln!("submit failed: {e}");
-                return 1;
-            }
-        }
-    }
-
-    let mut failures = 0usize;
-    let mut rejects = 0usize;
-    for _ in 0..count {
-        let ev = match client.recv() {
-            Ok(ev) => ev,
-            Err(e) => {
-                eprintln!("recv failed: {e}");
-                return 1;
-            }
-        };
-        match ev {
-            WireEvent::Factor { id, resp } => {
-                let Some((info, t)) = sent.remove(&id) else {
-                    eprintln!("response for unknown id {id}");
-                    failures += 1;
-                    continue;
-                };
-                let ms = t.elapsed().as_secs_f64() * 1e3;
-                println!(
-                    "  req{id} {}:{} n={} cols_done={} cancelled={} {ms:.1} ms",
-                    resp.kind.name(),
-                    resp.a.prec_name(),
-                    resp.a.cols(),
-                    resp.cols_done,
-                    resp.cancelled
-                );
-                if check && !sclient_check_factor(id, &info, &resp) {
-                    failures += 1;
+                ReqSpec {
+                    info: SentReq::F64 { kind, a0: a0.clone() },
+                    payload: ReqPayload::Factor(proto::FactorReq {
+                        kind,
+                        priority,
+                        deadline_ms,
+                        bo,
+                        bi,
+                        a: proto::WireMat::F64(a0),
+                    }),
                 }
             }
-            WireEvent::Solve { id, resp } => {
-                let Some((info, t)) = sent.remove(&id) else {
-                    eprintln!("response for unknown id {id}");
-                    failures += 1;
+        };
+        specs.push(Some(spec));
+    }
+
+    let t0 = Instant::now();
+    let mut failures = 0usize;
+    let mut rejects = 0usize;
+    let mut attempt = 0usize;
+    let mut rng: u64 = 0x5851_f42d_4c95_7f2d;
+    loop {
+        let mut client = match ServeClient::connect(&addr) {
+            Ok(c) => c,
+            Err(e) => {
+                if attempt < retry {
+                    attempt += 1;
+                    let ms = jittered_backoff_ms(backoff, attempt, &mut rng);
+                    eprintln!("connect {addr}: {e}; retry {attempt}/{retry} in {ms} ms");
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
                     continue;
-                };
-                let ms = t.elapsed().as_secs_f64() * 1e3;
-                println!(
-                    "  req{id} solve:{} n={} refine_iters={} berr={:.3e} {ms:.1} ms",
-                    resp.prec.name(),
-                    resp.x.len(),
-                    resp.refine_iters,
-                    resp.backward_error
-                );
-                if check {
-                    let SentReq::Solve { n } = info else {
-                        eprintln!("req{id}: solve response for a factor request");
+                }
+                eprintln!("connect {addr}: {e}");
+                return 1;
+            }
+        };
+        // Pipelined submission of everything still unsettled, then
+        // drain responses in whatever completion order the daemon
+        // produces.
+        let mut inflight: std::collections::HashMap<u64, (usize, Instant)> =
+            std::collections::HashMap::new();
+        let mut conn_lost = false;
+        for (idx, slot) in specs.iter().enumerate() {
+            let Some(spec) = slot else { continue };
+            let sub = match &spec.payload {
+                ReqPayload::Factor(q) => client.submit_factor(q),
+                ReqPayload::Solve(q) => client.submit_solve(q),
+            };
+            match sub {
+                Ok(id) => {
+                    inflight.insert(id, (idx, Instant::now()));
+                }
+                Err(e) => {
+                    eprintln!("submit failed: {e}");
+                    conn_lost = true;
+                    break;
+                }
+            }
+        }
+        while !conn_lost && !inflight.is_empty() {
+            let ev = match client.recv() {
+                Ok(ev) => ev,
+                Err(e) => {
+                    eprintln!("recv failed: {e}");
+                    conn_lost = true;
+                    break;
+                }
+            };
+            match ev {
+                WireEvent::Factor { id, resp } => {
+                    let Some((idx, t)) = inflight.remove(&id) else {
+                        eprintln!("response for unknown id {id}");
                         failures += 1;
                         continue;
                     };
-                    let tol = SolvePrec::Mixed.expected_backward_error(n);
-                    if resp.cancelled || !resp.converged || resp.backward_error > tol {
+                    let ms = t.elapsed().as_secs_f64() * 1e3;
+                    println!(
+                        "  req{id} {}:{} n={} cols_done={} cancelled={} {ms:.1} ms",
+                        resp.kind.name(),
+                        resp.a.prec_name(),
+                        resp.a.cols(),
+                        resp.cols_done,
+                        resp.cancelled
+                    );
+                    if check {
+                        match specs[idx].as_ref() {
+                            Some(s) if sclient_check_factor(id, &s.info, &resp) => {}
+                            _ => failures += 1,
+                        }
+                    }
+                    specs[idx] = None;
+                }
+                WireEvent::Solve { id, resp } => {
+                    let Some((idx, t)) = inflight.remove(&id) else {
+                        eprintln!("response for unknown id {id}");
+                        failures += 1;
+                        continue;
+                    };
+                    let ms = t.elapsed().as_secs_f64() * 1e3;
+                    println!(
+                        "  req{id} solve:{} n={} refine_iters={} berr={:.3e} {ms:.1} ms",
+                        resp.prec.name(),
+                        resp.x.len(),
+                        resp.refine_iters,
+                        resp.backward_error
+                    );
+                    if check {
+                        let tol = SolvePrec::Mixed.expected_backward_error(n);
+                        if resp.cancelled || !resp.converged || resp.backward_error > tol {
+                            eprintln!(
+                                "req{id}: solve check failed (cancelled={} converged={} berr={:.3e} tol={tol:.3e})",
+                                resp.cancelled,
+                                resp.converged,
+                                resp.backward_error
+                            );
+                            failures += 1;
+                        }
+                    }
+                    specs[idx] = None;
+                }
+                WireEvent::Failed { id, failure } => {
+                    let Some((idx, _)) = inflight.remove(&id) else {
+                        eprintln!("failure for unknown id {id}");
+                        failures += 1;
+                        continue;
+                    };
+                    // Only internal faults (a panicked leader) are worth
+                    // retrying; numerical failures are properties of the
+                    // input and will recur verbatim.
+                    if failure.code == proto::FailCode::Internal && attempt < retry {
                         eprintln!(
-                            "req{id}: solve check failed (cancelled={} converged={} berr={:.3e} tol={tol:.3e})",
-                            resp.cancelled,
-                            resp.converged,
-                            resp.backward_error
+                            "  req{id} FAILED {}: {} — will retry",
+                            failure.code.name(),
+                            failure.reason
+                        );
+                    } else {
+                        eprintln!(
+                            "  req{id} FAILED {}: {} (detail={})",
+                            failure.code.name(),
+                            failure.reason,
+                            failure.detail
                         );
                         failures += 1;
+                        specs[idx] = None;
+                    }
+                }
+                WireEvent::Rejected { id, reject } => {
+                    if id == 0 {
+                        eprintln!(
+                            "session rejected {}: {}",
+                            reject.code.name(),
+                            reject.reason
+                        );
+                        conn_lost = true;
+                        break;
+                    }
+                    let Some((idx, _)) = inflight.remove(&id) else {
+                        eprintln!("reject for unknown id {id}");
+                        rejects += 1;
+                        continue;
+                    };
+                    let transient = matches!(
+                        reject.code,
+                        proto::RejectCode::Overloaded | proto::RejectCode::Draining
+                    );
+                    if transient && attempt < retry {
+                        eprintln!(
+                            "  req{id} REJECTED {}: {} — will retry",
+                            reject.code.name(),
+                            reject.reason
+                        );
+                    } else {
+                        eprintln!(
+                            "  req{id} REJECTED {}: {}",
+                            reject.code.name(),
+                            reject.reason
+                        );
+                        rejects += 1;
+                        specs[idx] = None;
                     }
                 }
             }
-            WireEvent::Rejected { id, reject } => {
-                eprintln!("  req{id} REJECTED {}: {}", reject.code.name(), reject.reason);
-                sent.remove(&id);
-                rejects += 1;
-            }
         }
+        if !conn_lost {
+            let _ = client.goodbye();
+        }
+        let outstanding = specs.iter().filter(|s| s.is_some()).count();
+        if outstanding == 0 {
+            break;
+        }
+        if attempt >= retry {
+            eprintln!("sclient: {outstanding} request(s) unresolved after {attempt} retries");
+            failures += outstanding;
+            break;
+        }
+        attempt += 1;
+        let ms = jittered_backoff_ms(backoff, attempt, &mut rng);
+        eprintln!("sclient: retrying {outstanding} request(s), attempt {attempt}/{retry} in {ms} ms");
+        std::thread::sleep(std::time::Duration::from_millis(ms));
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "sclient: {count} requests in {secs:.3}s ({rejects} rejected, {failures} check failures)"
+        "sclient: {count} requests in {secs:.3}s ({rejects} rejected, {failures} failures, {attempt} reconnect attempts)"
     );
-    let _ = client.goodbye();
-    if failures > 0 || rejects > 0 || !sent.is_empty() {
+    if failures > 0 || rejects > 0 {
         return 1;
     }
     0

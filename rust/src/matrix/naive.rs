@@ -6,7 +6,21 @@
 //! return `f64` (compare against `S::EPSILON`-scaled tolerances).
 
 use super::{Mat, MatMut, MatRef};
+use crate::factor::FactorError;
 use crate::scalar::Scalar;
+
+/// Column-major offset (`j * rows + i`) of the first non-finite entry
+/// of `a`, scanning columns left to right.
+fn first_non_finite<S: Scalar>(a: MatRef<S>) -> Option<usize> {
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            if !a.at(i, j).is_finite() {
+                return Some(j * a.rows() + i);
+            }
+        }
+    }
+    None
+}
 
 /// `C += alpha * A * B` (naive triple loop).
 pub fn gemm<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, c: MatMut<S>) {
@@ -115,6 +129,30 @@ pub fn lu<S: Scalar>(a: MatMut<S>) -> Vec<usize> {
     ipiv
 }
 
+/// Checked variant of [`lu`]: identical arithmetic and pivots, but with
+/// typed failure reporting instead of silent degradation.
+///
+/// - Non-finite input is rejected *before* any entry is written
+///   ([`FactorError::NonFinite`] carries the column-major offset of the
+///   first offender; `a` is untouched).
+/// - A zero pivot — which [`lu`] silently skips, LAPACK `getrf`-style —
+///   is reported as [`FactorError::ExactlySingular`] naming the first
+///   offending column. The factorization still runs to completion first
+///   (the packed factors are exactly what [`lu`] produces), mirroring
+///   LAPACK's `info > 0` convention.
+pub fn try_lu<S: Scalar>(a: MatMut<S>) -> Result<Vec<usize>, FactorError> {
+    if let Some(off) = first_non_finite(a.as_ref()) {
+        return Err(FactorError::NonFinite { first_offset: off });
+    }
+    let ipiv = lu(a);
+    for k in 0..a.rows().min(a.cols()) {
+        if a.at(k, k) == S::ZERO {
+            return Err(FactorError::ExactlySingular { col: k });
+        }
+    }
+    Ok(ipiv)
+}
+
 /// Apply the pivots produced by [`lu`] to a matrix: `B := P·B` where `P`
 /// is the permutation the factorization applied to `A`'s rows.
 pub fn apply_pivots<S: Scalar>(b: MatMut<S>, ipiv: &[usize]) {
@@ -207,6 +245,34 @@ pub fn lu_solve<S: Scalar>(lu_packed: &Mat<S>, ipiv: &[usize], b: &[S]) -> Vec<S
     x
 }
 
+/// Checked variant of [`lu_solve`]: refuses to divide by a zero or
+/// non-finite pivot. [`lu_solve`]'s back-substitution divides by
+/// `U(i,i)` unconditionally, so packed factors of a singular matrix
+/// silently yield `inf`/NaN solutions; this variant reports
+/// [`FactorError::ExactlySingular`] (or [`FactorError::NonFinite`])
+/// instead, naming the first offending diagonal.
+pub fn try_lu_solve<S: Scalar>(
+    lu_packed: &Mat<S>,
+    ipiv: &[usize],
+    b: &[S],
+) -> Result<Vec<S>, FactorError> {
+    let n = lu_packed.rows();
+    assert_eq!(lu_packed.cols(), n, "lu_solve: square only");
+    assert_eq!(b.len(), n);
+    for i in 0..n {
+        let d = lu_packed[(i, i)];
+        if !d.is_finite() {
+            return Err(FactorError::NonFinite {
+                first_offset: i * n + i,
+            });
+        }
+        if d == S::ZERO {
+            return Err(FactorError::ExactlySingular { col: i });
+        }
+    }
+    Ok(lu_solve(lu_packed, ipiv, b))
+}
+
 /// Unblocked Cholesky factorization `A = L·Lᵀ` (lower, left-looking
 /// reference). Overwrites the lower triangle of `a` with `L`; the strict
 /// upper triangle is neither read nor written. The input must be
@@ -231,6 +297,58 @@ pub fn cholesky<S: Scalar>(a: MatMut<S>) {
             a.set(i, j, s / dj);
         }
     }
+}
+
+/// Checked variant of [`cholesky`]: identical arithmetic on the happy
+/// path (the committed columns match [`cholesky`] bitwise), but
+/// breakdown is detected *before* the offending `sqrt`/divide instead
+/// of letting NaNs propagate:
+///
+/// - A non-finite entry in the lower triangle (the only part read) is
+///   rejected up front as [`FactorError::NonFinite`]; `a` is untouched.
+/// - A zero reduced diagonal is [`FactorError::ExactlySingular`].
+/// - A negative or overflowed reduced diagonal (the matrix is not
+///   positive definite) is [`FactorError::Unsupported`].
+///
+/// On error, columns `0..col` hold valid `L` columns and the rest of
+/// `a` is unwritten (matching LAPACK `potf2`'s `info > 0` contract).
+pub fn try_cholesky<S: Scalar>(a: MatMut<S>) -> Result<(), FactorError> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky: square only");
+    for j in 0..n {
+        for i in j..n {
+            if !a.at(i, j).is_finite() {
+                return Err(FactorError::NonFinite {
+                    first_offset: j * n + i,
+                });
+            }
+        }
+    }
+    for j in 0..n {
+        let mut d = a.at(j, j);
+        for p in 0..j {
+            let l = a.at(j, p);
+            d -= l * l;
+        }
+        if !d.is_finite() || d < S::ZERO {
+            return Err(FactorError::Unsupported(format!(
+                "matrix is not positive definite (breakdown at column {j})"
+            )));
+        }
+        if d == S::ZERO {
+            return Err(FactorError::ExactlySingular { col: j });
+        }
+        let dj = d.sqrt();
+        a.set(j, j, dj);
+        for i in j + 1..n {
+            let mut s = a.at(i, j);
+            for p in 0..j {
+                s -= a.at(i, p) * a.at(j, p);
+            }
+            a.set(i, j, s / dj);
+        }
+    }
+    Ok(())
 }
 
 /// Relative residual `‖A − L·Lᵀ‖_F / ‖A‖_F` of a Cholesky factorization;
@@ -545,6 +663,125 @@ mod tests {
         assert!((a[(0, 0)] - 2.0).abs() < 1e-15);
         assert!((a[(1, 0)] - 1.0).abs() < 1e-15);
         assert!((a[(1, 1)] - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn try_lu_matches_lu_on_well_posed_input() {
+        let a = Matrix::random(9, 9, 21);
+        let mut f1 = a.clone();
+        let mut f2 = a.clone();
+        let ipiv1 = lu(f1.view_mut());
+        let ipiv2 = try_lu(f2.view_mut()).expect("well-posed input");
+        assert_eq!(ipiv1, ipiv2);
+        assert_eq!(f1, f2, "checked oracle must be bitwise identical");
+    }
+
+    #[test]
+    fn try_lu_reports_exactly_singular() {
+        // All-zero input: first pivot is already zero.
+        let mut z = Matrix::zeros(4, 4);
+        assert_eq!(
+            try_lu(z.view_mut()),
+            Err(FactorError::ExactlySingular { col: 0 })
+        );
+        // Rank-1 matrix: elimination zeroes the second diagonal.
+        let mut r1 = Matrix::from_rows(2, 2, &[1., 2., 2., 4.]);
+        assert_eq!(
+            try_lu(r1.view_mut()),
+            Err(FactorError::ExactlySingular { col: 1 })
+        );
+    }
+
+    #[test]
+    fn try_lu_rejects_non_finite_without_touching_input() {
+        let a0 = Matrix::random(5, 5, 22);
+        let mut a = a0.clone();
+        a[(2, 1)] = f64::NAN;
+        let before = a.clone();
+        let err = try_lu(a.view_mut()).unwrap_err();
+        assert_eq!(err, FactorError::NonFinite { first_offset: 5 + 2 });
+        // Prescan fires before any write: every finite entry untouched.
+        for j in 0..5 {
+            for i in 0..5 {
+                if (i, j) != (2, 1) {
+                    assert_eq!(a[(i, j)].to_bits(), before[(i, j)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn try_lu_solve_refuses_zero_pivot_that_lu_solve_divides_by() {
+        // Packed factors of a singular matrix: U(1,1) == 0. The raw
+        // oracle divides by it and yields non-finite garbage; the
+        // checked oracle names the column instead.
+        let mut f = Matrix::from_rows(2, 2, &[2., 4., 0.5, 0.]);
+        let ipiv = vec![0usize, 1];
+        let b = [1.0f64, 1.0];
+        let raw = lu_solve(&f, &ipiv, &b);
+        assert!(
+            raw.iter().any(|x| !x.is_finite()),
+            "raw oracle silently produces non-finite solution: {raw:?}"
+        );
+        assert_eq!(
+            try_lu_solve(&f, &ipiv, &b),
+            Err(FactorError::ExactlySingular { col: 1 })
+        );
+        // And a non-finite diagonal is its own typed failure.
+        f[(0, 0)] = f64::INFINITY;
+        assert_eq!(
+            try_lu_solve(&f, &ipiv, &b),
+            Err(FactorError::NonFinite { first_offset: 0 })
+        );
+    }
+
+    #[test]
+    fn try_cholesky_matches_cholesky_on_spd_input() {
+        for n in [1usize, 3, 8, 17] {
+            let a = Matrix::random_spd(n, 40 + n as u64);
+            let mut f1 = a.clone();
+            let mut f2 = a.clone();
+            cholesky(f1.view_mut());
+            try_cholesky(f2.view_mut()).expect("SPD input");
+            for j in 0..n {
+                for i in j..n {
+                    assert_eq!(
+                        f1[(i, j)].to_bits(),
+                        f2[(i, j)].to_bits(),
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn try_cholesky_reports_typed_breakdown() {
+        // Indefinite: d goes negative at column 1.
+        let mut ind = Matrix::from_rows(2, 2, &[1., 2., 2., 1.]);
+        match try_cholesky(ind.view_mut()) {
+            Err(FactorError::Unsupported(msg)) => {
+                assert!(msg.contains("column 1"), "{msg}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        // Exactly singular SPSD: zero reduced diagonal at column 0.
+        let mut z = Matrix::zeros(3, 3);
+        assert_eq!(
+            try_cholesky(z.view_mut()),
+            Err(FactorError::ExactlySingular { col: 0 })
+        );
+        // NaN in the lower triangle is rejected up front; the strict
+        // upper triangle is never read, so garbage there is fine.
+        let mut a = Matrix::random_spd(4, 44);
+        a[(0, 3)] = f64::NAN; // strict upper: ignored
+        try_cholesky(a.view_mut()).expect("upper-triangle NaN is not read");
+        let mut b = Matrix::random_spd(4, 45);
+        b[(3, 1)] = f64::NAN; // lower: offset 1*4 + 3
+        assert_eq!(
+            try_cholesky(b.view_mut()),
+            Err(FactorError::NonFinite { first_offset: 7 })
+        );
     }
 
     #[test]

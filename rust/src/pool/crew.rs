@@ -11,6 +11,7 @@
 use super::steal::{StealPolicy, TileSched, TileSource};
 use crate::blis::arena::PackArena;
 use crossbeam_utils::{Backoff, CachePadded};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -108,6 +109,14 @@ pub struct CrewShared {
     stolen_tiles: AtomicU64,
     /// Set by `disband`; members exit their loop.
     disbanded: CachePadded<AtomicU64>, // 0 = live, 1 = disbanded
+    /// Set when a participant's chunk panicked (DESIGN.md §15.3). The
+    /// chunk is still counted in `completed` — so the leader's
+    /// `parallel` wait always terminates — but the job's output is
+    /// untrustworthy; drivers poll [`CrewShared::is_poisoned`] at their
+    /// next checkpoint and fail the run with a typed internal error.
+    poisoned: CachePadded<AtomicU64>, // 0 = healthy, 1 = poisoned
+    /// The first panic's message (later panics keep the first).
+    poison_msg: Mutex<Option<String>>,
 }
 
 impl CrewShared {
@@ -126,12 +135,41 @@ impl CrewShared {
             hybrid_tiles: AtomicU64::new(0),
             stolen_tiles: AtomicU64::new(0),
             disbanded: CachePadded::new(AtomicU64::new(0)),
+            poisoned: CachePadded::new(AtomicU64::new(0)),
+            poison_msg: Mutex::new(None),
         }
     }
 
     /// Has `disband` been called?
     pub fn is_disbanded(&self) -> bool {
         self.disbanded.load(Ordering::Acquire) != 0
+    }
+
+    /// Whether any participant's chunk panicked during any job of this
+    /// crew. A poisoned crew still schedules and completes jobs — the
+    /// flag tells the *driver* that results since the poisoning are
+    /// untrustworthy and the run must end with a typed internal error.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire) != 0
+    }
+
+    /// The first recorded panic message, when poisoned.
+    pub fn poison_message(&self) -> Option<String> {
+        self.poison_msg
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Record a chunk panic: keep the first message, raise the flag.
+    fn record_poison(&self, payload: Box<dyn std::any::Any + Send>) {
+        let msg = super::panic_message(payload.as_ref());
+        let mut slot = self.poison_msg.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+        drop(slot);
+        self.poisoned.store(1, Ordering::Release);
     }
 
     /// Number of currently enlisted members (excluding the leader).
@@ -182,7 +220,7 @@ impl CrewShared {
                 // in which case the CAS below simply never succeeds for
                 // `e` and we re-observe the newer epoch next iteration).
                 let (f, n, sched) = {
-                    let slot = self.job.lock().unwrap();
+                    let slot = self.job.lock().unwrap_or_else(|e| e.into_inner());
                     match slot.f {
                         Some(f) => (f, slot.n_chunks, slot.sched.clone()),
                         None => continue,
@@ -220,9 +258,18 @@ impl CrewShared {
         let mut ran = 0u64;
         let mut stolen = 0u64;
         while let Some((tile, src)) = sched.next_tile(slot) {
-            // SAFETY: see the closure-liveness note above.
-            unsafe { (*f.0)(tile) };
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                #[cfg(any(test, feature = "chaos"))]
+                crate::faultplan::chunk_hook(tile);
+                // SAFETY: see the closure-liveness note above.
+                unsafe { (*f.0)(tile) };
+            }));
+            // Count the tile completed even on panic — the leader spins
+            // on `completed` and must never wait for a dead worker.
             self.completed.fetch_add(1, Ordering::Release);
+            if let Err(payload) = r {
+                self.record_poison(payload);
+            }
             ran += 1;
             if src == TileSource::Stolen {
                 stolen += 1;
@@ -262,12 +309,23 @@ impl CrewShared {
                 .compare_exchange_weak(cur.0, next.0, Ordering::AcqRel, Ordering::Acquire)
                 .is_ok()
             {
-                // SAFETY: a successful CAS for `epoch` implies the leader
-                // is still inside `parallel` for this job (it cannot
-                // return before `completed == n_chunks`, and our increment
-                // below has not happened yet), so the closure is alive.
-                unsafe { (*f.0)(cur.chunk() as usize) };
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    #[cfg(any(test, feature = "chaos"))]
+                    crate::faultplan::chunk_hook(cur.chunk() as usize);
+                    // SAFETY: a successful CAS for `epoch` implies the
+                    // leader is still inside `parallel` for this job (it
+                    // cannot return before `completed == n_chunks`, and
+                    // our increment below has not happened yet), so the
+                    // closure is alive.
+                    unsafe { (*f.0)(cur.chunk() as usize) };
+                }));
+                // Count the chunk completed even on panic — the leader
+                // spins on `completed` and must never wait for a dead
+                // worker (the poison flag carries the failure instead).
                 self.completed.fetch_add(1, Ordering::Release);
+                if let Err(payload) = r {
+                    self.record_poison(payload);
+                }
                 ran += 1;
             }
         }
@@ -334,6 +392,17 @@ impl Crew {
         self.shared.members()
     }
 
+    /// Whether a participant's chunk panicked during any job of this
+    /// crew (see [`CrewShared::is_poisoned`]).
+    pub fn is_poisoned(&self) -> bool {
+        self.shared.is_poisoned()
+    }
+
+    /// The first recorded panic message, when poisoned.
+    pub fn poison_message(&self) -> Option<String> {
+        self.shared.poison_message()
+    }
+
     /// Execute `f(chunk)` for every `chunk in 0..n_chunks`, cooperatively
     /// with all currently enlisted members — *and* any member that enlists
     /// while the job is running (they join this job under
@@ -378,16 +447,16 @@ impl Crew {
     /// a replacement. The returned `Arc` is also stored back in the
     /// cache, so steady-state hybrid jobs allocate nothing here.
     fn take_sched(&mut self, workers: usize) -> Arc<TileSched> {
-        let reusable = self
-            .sched_cache
-            .as_ref()
-            .is_some_and(|s| Arc::strong_count(s) == 1 && s.capacity() >= workers);
-        if !reusable {
-            // Oversize a little so roster growth doesn't reallocate
-            // every join.
-            self.sched_cache = Some(Arc::new(TileSched::with_capacity(workers + 2)));
+        if let Some(s) = &self.sched_cache {
+            if Arc::strong_count(s) == 1 && s.capacity() >= workers {
+                return Arc::clone(s);
+            }
         }
-        Arc::clone(self.sched_cache.as_ref().unwrap())
+        // Oversize a little so roster growth doesn't reallocate
+        // every join.
+        let fresh = Arc::new(TileSched::with_capacity(workers + 2));
+        self.sched_cache = Some(Arc::clone(&fresh));
+        fresh
     }
 
     fn publish_and_run<F: Fn(usize) + Sync>(
@@ -401,7 +470,10 @@ impl Crew {
         }
         assert!(n_chunks <= u32::MAX as usize, "too many chunks");
         let n = n_chunks as u32;
-        self.epoch = self.epoch.checked_add(1).expect("crew epoch overflow");
+        self.epoch = match self.epoch.checked_add(1) {
+            Some(e) => e,
+            None => panic!("crew epoch overflow"),
+        };
         self.jobs += 1;
 
         let f_obj: &(dyn Fn(usize) + Sync) = &f;
@@ -416,7 +488,7 @@ impl Crew {
 
         let hybrid = sched.clone();
         {
-            let mut slot = self.shared.job.lock().unwrap();
+            let mut slot = self.shared.job.lock().unwrap_or_else(|e| e.into_inner());
             slot.f = Some(f_raw);
             slot.n_chunks = n;
             slot.sched = sched;
@@ -444,7 +516,7 @@ impl Crew {
         // Drop the stored pointer and schedule eagerly (the pointer for
         // hygiene, the schedule so the cache's strong count can return
         // to 1 and the next hybrid job may re-arm it).
-        let mut slot = self.shared.job.lock().unwrap();
+        let mut slot = self.shared.job.lock().unwrap_or_else(|e| e.into_inner());
         slot.f = None;
         slot.sched = None;
     }
@@ -504,6 +576,7 @@ impl Drop for Crew {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
@@ -948,6 +1021,67 @@ mod tests {
                 .unwrap();
             assert_eq!(first, now, "steady-state hybrid job reallocated its sched");
         }
+    }
+
+    #[test]
+    fn chunk_panic_poisons_crew_without_hanging_leader() {
+        let mut crew = Crew::new();
+        let counter = AtomicUsize::new(0);
+        crew.parallel(16, |c| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            if c == 7 {
+                panic!("chunk 7 exploded");
+            }
+        });
+        // The leader returned (no hang), every chunk was accounted for,
+        // and the crew is poisoned with the panic's message.
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+        assert!(crew.is_poisoned());
+        assert!(crew.poison_message().unwrap().contains("chunk 7"));
+        // A poisoned crew still schedules later jobs — the *driver*
+        // decides what the flag means for the run.
+        crew.parallel(4, |_| {});
+    }
+
+    #[test]
+    fn member_chunk_panic_poisons_without_killing_the_member() {
+        let mut crew = Crew::new();
+        let shared = crew.shared();
+        let h = std::thread::spawn({
+            let s = Arc::clone(&shared);
+            move || s.member_loop(EntryPolicy::Immediate)
+        });
+        while crew.members() != 1 {
+            std::thread::yield_now();
+        }
+        let counter = AtomicUsize::new(0);
+        crew.parallel(64, |c| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            if c % 13 == 0 {
+                panic!("unlucky chunk {c}");
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+        assert!(crew.is_poisoned());
+        // The member survived its chunk panic and leaves via disband —
+        // the containment property the serve layer's reabsorption needs.
+        crew.disband();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hybrid_chunk_panic_poisons_too() {
+        let mut crew = Crew::new();
+        let counter = AtomicUsize::new(0);
+        crew.parallel_steal(32, StealPolicy::Auto, |c| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            if c == 3 {
+                panic!("tile 3 exploded");
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+        assert!(crew.is_poisoned());
+        assert!(crew.poison_message().unwrap().contains("tile 3"));
     }
 
     #[test]

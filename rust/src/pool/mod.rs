@@ -32,6 +32,14 @@
 //! tail, then steal from other slices — the within-update malleability
 //! that lets a crew resized mid-iteration rebalance without waiting for
 //! the next job boundary.
+//!
+//! Since the fault-containment work (DESIGN.md §15) this module is also
+//! a *supervision* layer: crew chunks run under `catch_unwind`, a panic
+//! poisons the crew instead of wedging its leader, and the whole module
+//! forbids `unwrap`/`expect` outside tests — lock poisoning is recovered
+//! (`unwrap_or_else(|e| e.into_inner())`) because a panicking worker
+//! must never take the daemon down with it.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod crew;
 pub mod steal;
@@ -39,4 +47,4 @@ pub mod worker;
 
 pub use crew::{Crew, CrewShared, CrewStats, EntryPolicy};
 pub use steal::{auto_static_fraction, StealPolicy, TileDeque, TileSched, TileSource};
-pub use worker::{current_worker, Pool, TaskHandle};
+pub use worker::{current_worker, panic_message, Pool, TaskHandle};

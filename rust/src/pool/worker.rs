@@ -36,13 +36,19 @@ impl Mailbox {
         }
     }
 
+    // Lock poisoning is recovered throughout: a queue of boxed closures
+    // has no invariant a mid-push panic could break, and the supervision
+    // layer must keep scheduling after a worker panicked.
     fn push(&self, t: BoxTask) {
-        self.queue.lock().unwrap().push_back(t);
+        self.queue
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push_back(t);
         self.ready.notify_one();
     }
 
     fn pop(&self, shutdown: &AtomicBool) -> Option<BoxTask> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(t) = q.pop_front() {
                 return Some(t);
@@ -50,7 +56,7 @@ impl Mailbox {
             if shutdown.load(Ordering::Acquire) {
                 return None;
             }
-            q = self.ready.wait(q).unwrap();
+            q = self.ready.wait(q).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -83,9 +89,9 @@ impl TaskHandle {
     /// this.
     pub fn wait(self) {
         let (lock, cv) = &*self.state;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().unwrap_or_else(|e| e.into_inner());
         while *st == TaskState::Pending {
-            st = cv.wait(st).unwrap();
+            st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         if let TaskState::Panicked(msg) = &*st {
             panic!("pool task panicked: {msg}");
@@ -94,7 +100,7 @@ impl TaskHandle {
 
     /// Non-blocking completion check (does not consume the handle).
     pub fn is_done(&self) -> bool {
-        *self.state.0.lock().unwrap() != TaskState::Pending
+        *self.state.0.lock().unwrap_or_else(|e| e.into_inner()) != TaskState::Pending
     }
 }
 
@@ -125,7 +131,7 @@ impl Pool {
                             task();
                         }
                     })
-                    .expect("failed to spawn pool worker")
+                    .unwrap_or_else(|e| panic!("failed to spawn pool worker: {e}"))
             })
             .collect();
         Self {
@@ -148,7 +154,7 @@ impl Pool {
         self.mailboxes[worker].push(Box::new(move || {
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             let (lock, cv) = &*state;
-            let mut st = lock.lock().unwrap();
+            let mut st = lock.lock().unwrap_or_else(|e| e.into_inner());
             *st = match result {
                 Ok(()) => TaskState::Done,
                 Err(e) => TaskState::Panicked(panic_message(e.as_ref())),
@@ -175,7 +181,7 @@ impl Pool {
             // Wake idle workers so they observe the flag.
             mb.ready.notify_all();
         }
-        let mut threads = self.threads.lock().unwrap();
+        let mut threads = self.threads.lock().unwrap_or_else(|e| e.into_inner());
         for t in threads.drain(..) {
             let _ = t.join();
         }
@@ -188,7 +194,11 @@ impl Drop for Pool {
     }
 }
 
-fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads; anything else yields a placeholder). Shared by the
+/// pool's task supervision, the crew-poisoning path, and the serve
+/// leaders' `catch_unwind` handlers.
+pub fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = e.downcast_ref::<String>() {
@@ -199,6 +209,7 @@ fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::pool::{Crew, EntryPolicy};

@@ -6,8 +6,9 @@
 //! [`submit_factor`](ServeClient::submit_factor) /
 //! [`submit_solve`](ServeClient::submit_solve) write a request frame and
 //! return its id immediately; [`recv`](ServeClient::recv) blocks for the
-//! next server event (response *or* typed rejection), which may arrive
-//! in any completion order. `mlu sclient` and the `bench_serve_net` soak
+//! next server event (response, typed rejection, or typed
+//! [`Failed`](WireEvent::Failed) report), which may arrive in any
+//! completion order. `mlu sclient` and the `bench_serve_net` soak
 //! harness drive hundreds of these concurrently from plain threads.
 
 use super::net::BindAddr;
@@ -73,6 +74,17 @@ pub enum WireEvent {
         id: u64,
         /// Typed code and operator-facing reason.
         reject: Reject,
+    },
+    /// An *admitted* request ran but its computation failed — a typed
+    /// numerical error (singular input, non-finite data, not positive
+    /// definite) or an internal fault (a panicked leader). Distinct
+    /// from [`WireEvent::Rejected`], which refuses work before it runs;
+    /// only the `Internal` code is worth retrying.
+    Failed {
+        /// The id assigned at submission.
+        id: u64,
+        /// Typed failure code, detail word, and human-readable reason.
+        failure: proto::Failure,
     },
 }
 
@@ -195,6 +207,10 @@ impl ServeClient {
                     proto::T_REJECT => Some(WireEvent::Rejected {
                         id: f.id,
                         reject: proto::decode_reject(&f.payload).map_err(|e| io_err(e.0))?,
+                    }),
+                    proto::T_FAILED => Some(WireEvent::Failed {
+                        id: f.id,
+                        failure: proto::decode_failed(&f.payload).map_err(|e| io_err(e.0))?,
                     }),
                     _ => None,
                 };

@@ -73,6 +73,11 @@ pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> Factor
     let prev_stolen = std::sync::atomic::AtomicU64::new(0);
     let prev_tiles = std::sync::atomic::AtomicU64::new(0);
     let checkpoint = |k: usize| {
+        // Chaos hook (DESIGN.md §15.4): inert unless a fault plan is
+        // armed; a stall injected here is observed by the deadline fold
+        // below, a panic unwinds to the serve loop's `catch_unwind`.
+        #[cfg(any(test, feature = "chaos"))]
+        crate::faultplan::checkpoint_hook(&tag, k);
         cfg.lease.set_remaining(
             cfg.kind
                 .remaining_cost_prec::<S>(cfg.hw, m, n, k, cfg.bo, cfg.bi),
@@ -90,12 +95,23 @@ pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> Factor
         tag: Some(&tag),
         on_checkpoint: Some(&checkpoint),
     };
-    factorize_blocked(cfg.kind, crew, cfg.params, a, cfg.bo, cfg.bi, &ctl)
+    let out = factorize_blocked(cfg.kind, crew, cfg.params, a, cfg.bo, cfg.bi, &ctl);
+    // A crew panic surfaces as `FactorError::Internal` and leaves the
+    // crew poisoned; poison the lease too so the floater policy stops
+    // routing helpers at a doomed request while it is wound down.
+    if let Some(e) = &out.error {
+        if e.is_internal() {
+            cfg.lease.poison();
+        }
+    }
+    out
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::faultplan::{FaultAction, FaultPlan};
     use crate::matrix::{naive, Mat, Matrix};
     use std::sync::Arc;
 
@@ -140,10 +156,74 @@ mod tests {
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
+        assert!(out.error.is_none(), "clean run: {:?}", out.error);
         assert_eq!(out.cols_done, 48);
         assert_eq!(lease.remaining(), 0.0);
+        assert!(!lease.is_poisoned());
         let r = naive::lu_residual(&a0, &f, &out.ipiv);
         assert!(r < 1e-12, "residual {r}");
+    }
+
+    #[test]
+    fn injected_chunk_panic_poisons_crew_and_lease() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let mut f = Matrix::random(48, 48, 5);
+        let mut crew = Crew::new();
+        let lease = Arc::new(Lease::new(13, 0, crew.shared(), 1.0));
+        let cancel = AtomicBool::new(false);
+        let plan = FaultPlan {
+            seed: 0,
+            action: FaultAction::PanicInChunk { nth: 0 },
+        };
+        let _g = plan.arm_local();
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            kind: FactorKind::Lu,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+            client: None,
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(crate::faultplan::fired(), "plan must have fired");
+        let err = out.error.expect("crew panic must surface as an error");
+        assert!(err.is_internal(), "{err}");
+        assert!(!out.cancelled, "typed failure is not a cancellation");
+        assert!(lease.is_poisoned(), "doomed request must repel floaters");
+    }
+
+    #[test]
+    fn injected_checkpoint_panic_unwinds_to_caller() {
+        use std::panic::AssertUnwindSafe;
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let mut f = Matrix::random(48, 48, 6);
+        let mut crew = Crew::new();
+        let lease = Arc::new(Lease::new(17, 0, crew.shared(), 1.0));
+        let cancel = AtomicBool::new(false);
+        let plan = FaultPlan {
+            seed: 0,
+            action: FaultAction::PanicAtCheckpoint { k: 0 },
+        };
+        let _g = plan.arm_local();
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            kind: FactorKind::Lu,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+            client: None,
+        };
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| drive(&mut crew, f.view_mut(), &cfg)));
+        assert!(r.is_err(), "leader panic must unwind to the serve loop");
+        assert!(crate::faultplan::fired());
     }
 
     #[test]

@@ -51,6 +51,17 @@
 //! score weights crews that convert donated workers into steals above
 //! crews whose updates are already balanced — stolen-tile counts feeding
 //! lease sizing.
+//!
+//! **Fault model** (DESIGN.md §15): a request that *ran* but failed —
+//! exactly singular matrix, non-finite payload, panicked worker — is
+//! completed with a typed [`crate::factor::FactorError`] in its
+//! result's `error` field, never by hanging its waiter. A panicking
+//! leader is caught in the serve loop, its registry entry withdrawn,
+//! and its handle fulfilled with `FactorError::Internal`; a panicking
+//! crew member poisons its crew, which the drivers surface the same
+//! way. The serve layer forbids `unwrap`/`expect` outside tests so a
+//! poisoned mutex can never take down an unrelated request.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod admission;
 pub mod client;
@@ -62,7 +73,7 @@ pub mod registry;
 pub use registry::{CrewRegistry, Lease};
 
 use crate::blis::{BlisParams, PackArena};
-use crate::factor::FactorKind;
+use crate::factor::{FactorError, FactorKind};
 use crate::matrix::{Mat, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
 use crate::scalar::Scalar;
@@ -265,6 +276,12 @@ pub struct JobResult<S: Scalar = f64> {
     pub cancelled: bool,
     /// Wall seconds from submission to completion.
     pub secs: f64,
+    /// Typed numerical/fault status (DESIGN.md §15): `None` for a clean
+    /// run; `ExactlySingular`/`NonFinite`/`Unsupported` for numerical
+    /// failures of the *input*; `Internal` when the daemon faulted
+    /// (panicked leader, poisoned crew) while executing it. The [`net`]
+    /// layer maps this to a `FAILED` wire frame.
+    pub error: Option<FactorError>,
 }
 
 /// Completed (or cancelled) solve request.
@@ -286,6 +303,11 @@ pub struct SolveJobResult {
     pub cancelled: bool,
     /// Wall seconds from submission to completion.
     pub secs: f64,
+    /// Typed numerical/fault status of the factor stage (see
+    /// [`JobResult::error`]); e.g. `ExactlySingular` when the working
+    /// precision's pivot is exactly zero, which also explains a
+    /// `converged == false` with infinite backward error.
+    pub error: Option<FactorError>,
 }
 
 struct JobState<R> {
@@ -327,18 +349,26 @@ impl<R> JobHandle<R> {
 
     /// Whether the result is ready (non-blocking).
     pub fn is_done(&self) -> bool {
-        self.state.done.lock().unwrap().is_some()
+        self.state
+            .done
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_some()
     }
 
     /// Block until the request completes (or is cancelled) and take the
     /// result.
     pub fn wait(self) -> R {
-        let mut slot = self.state.done.lock().unwrap();
+        let mut slot = self.state.done.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(result) = slot.take() {
                 return result;
             }
-            slot = self.state.cv.wait(slot).unwrap();
+            slot = self
+                .state
+                .cv
+                .wait(slot)
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -379,8 +409,10 @@ struct QueuedJob {
     priority: u8,
     /// Drives the request to completion and fulfills its typed handle.
     run: Box<dyn FnOnce(&ServerState) + Send>,
-    /// Fulfills the handle with a cancelled result (panic recovery).
-    abort: Box<dyn FnOnce() + Send>,
+    /// Fulfills the handle with a typed-failure result (panic recovery:
+    /// the serve loop passes the `FactorError::Internal` describing the
+    /// leader's panic).
+    abort: Box<dyn FnOnce(FactorError) + Send>,
 }
 
 impl PartialEq for QueuedJob {
@@ -424,7 +456,7 @@ struct ServerState {
 
 impl ServerState {
     fn pop(&self) -> Option<QueuedJob> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
         let job = q.pop();
         self.queued.store(q.len(), Ordering::Release);
         job
@@ -435,7 +467,7 @@ impl ServerState {
         // `stop` under this lock, so a job can never slip into the
         // queue after the serve loops were told to drain and exit
         // (its waiter would hang forever).
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
         assert!(
             !self.stop.load(Ordering::Acquire),
             "LuServer::submit after shutdown"
@@ -510,7 +542,7 @@ impl LuServer {
             run: Box::new(move |state: &ServerState| {
                 lead_factor::<S>(state, id, req, now, run_state);
             }),
-            abort: Box::new(move || {
+            abort: Box::new(move |err: FactorError| {
                 complete(
                     &abort_state,
                     JobResult::<S> {
@@ -520,8 +552,9 @@ impl LuServer {
                         ipiv: Vec::new(),
                         tau: Vec::new(),
                         cols_done: 0,
-                        cancelled: true,
+                        cancelled: false,
                         secs: 0.0,
+                        error: Some(err),
                     },
                 );
             }),
@@ -548,7 +581,7 @@ impl LuServer {
             run: Box::new(move |state: &ServerState| {
                 lead_solve(state, id, req, now, run_state);
             }),
-            abort: Box::new(move || {
+            abort: Box::new(move |err: FactorError| {
                 complete(
                     &abort_state,
                     SolveJobResult {
@@ -558,8 +591,9 @@ impl LuServer {
                         refine_iters: 0,
                         backward_error: f64::INFINITY,
                         converged: false,
-                        cancelled: true,
+                        cancelled: false,
                         secs: 0.0,
+                        error: Some(err),
                     },
                 );
             }),
@@ -582,10 +616,15 @@ impl LuServer {
         {
             // Under the queue lock — see the pairing note in
             // `ServerState::push`.
-            let _q = self.state.queue.lock().unwrap();
+            let _q = self.state.queue.lock().unwrap_or_else(|e| e.into_inner());
             self.state.stop.store(true, Ordering::Release);
         }
-        for h in self.loops.lock().unwrap().drain(..) {
+        for h in self
+            .loops
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+        {
             h.wait();
         }
     }
@@ -619,10 +658,13 @@ fn serve_loop(state: &ServerState) {
             // A panicking request must not wedge its waiter or leak its
             // registry entry (that would strand floaters on a dead crew).
             let led = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(state)));
-            if led.is_err() {
+            if let Err(payload) = led {
                 state.registry.unregister(id);
-                eprintln!("serve: request {id} panicked; reported as cancelled");
-                abort();
+                let msg = crate::pool::panic_message(payload.as_ref());
+                eprintln!("serve: request {id} panicked ({msg}); reported as failed");
+                abort(FactorError::Internal(format!(
+                    "request leader panicked: {msg}"
+                )));
             }
             backoff.reset();
             continue;
@@ -683,9 +725,13 @@ fn lead_factor<S: Scalar>(
         || deadline.is_some_and(|d| Instant::now() >= d)
         || shape_check.is_err();
     if dead_on_arrival {
-        if let Err(e) = shape_check {
-            eprintln!("serve: request {id} rejected: {e}");
-        }
+        let shape_err = match shape_check {
+            Err(e) => {
+                eprintln!("serve: request {id} rejected: {e}");
+                Some(FactorError::Unsupported(e.to_string()))
+            }
+            Ok(()) => None,
+        };
         let secs = submitted.elapsed().as_secs_f64();
         complete(
             &jstate,
@@ -698,6 +744,7 @@ fn lead_factor<S: Scalar>(
                 cols_done: 0,
                 cancelled: true,
                 secs,
+                error: shape_err,
             },
         );
         return;
@@ -740,6 +787,7 @@ fn lead_factor<S: Scalar>(
             cols_done: out.cols_done,
             cancelled: out.cancelled,
             secs,
+            error: out.error,
         },
     );
 }
@@ -774,14 +822,18 @@ fn lead_solve(
         || deadline.is_some_and(|d| Instant::now() >= d)
         || malformed;
     if dead_on_arrival {
-        if malformed {
-            eprintln!(
-                "serve: solve request {id} rejected: need square A + matching rhs, got {}x{} / {}",
+        let shape_err = if malformed {
+            let why = format!(
+                "need square A + matching rhs, got {}x{} / {}",
                 a.rows(),
                 a.cols(),
                 b.len()
             );
-        }
+            eprintln!("serve: solve request {id} rejected: {why}");
+            Some(FactorError::Unsupported(why))
+        } else {
+            None
+        };
         let secs = submitted.elapsed().as_secs_f64();
         complete(
             &jstate,
@@ -794,6 +846,7 @@ fn lead_solve(
                 converged: false,
                 cancelled: true,
                 secs,
+                error: shape_err,
             },
         );
         return;
@@ -866,16 +919,18 @@ fn lead_solve(
             converged: out.converged,
             cancelled: out.cancelled,
             secs,
+            error: out.error,
         },
     );
 }
 
 fn complete<R>(jstate: &JobState<R>, result: R) {
-    *jstate.done.lock().unwrap() = Some(result);
+    *jstate.done.lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
     jstate.cv.notify_all();
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::matrix::naive;
@@ -896,7 +951,7 @@ mod tests {
             seq: id,
             priority,
             run: Box::new(|_: &ServerState| {}),
-            abort: Box::new(|| {}),
+            abort: Box::new(|_| {}),
         }
     }
 

@@ -102,6 +102,17 @@ pub struct NetConfig {
     /// threads notice drain/shutdown. Smaller = faster drain response,
     /// more idle wakeups.
     pub read_timeout_ms: u64,
+    /// Watchdog multiplier (DESIGN.md §15): a deadline-carrying request
+    /// still unfinished after `deadline × watchdog_factor` is
+    /// force-cancelled by the acceptor's poll, bounding the damage of a
+    /// leader wedged *between* checkpoints (where the checkpoint
+    /// deadline cut cannot see it). `0` disables the watchdog.
+    /// Deadline-less requests are never watchdogged — nothing bounds
+    /// how long they may legitimately run.
+    pub watchdog_factor: u32,
+    /// Floor on the watchdog trigger, so millisecond-scale deadlines do
+    /// not turn scheduling jitter into spurious force-cancels.
+    pub watchdog_min_ms: u64,
 }
 
 impl Default for NetConfig {
@@ -111,6 +122,8 @@ impl Default for NetConfig {
             admission: AdmissionCfg::default(),
             max_frame: 64 << 20,
             read_timeout_ms: 25,
+            watchdog_factor: 4,
+            watchdog_min_ms: 250,
         }
     }
 }
@@ -135,6 +148,10 @@ pub struct DaemonStats {
     /// Frames whose announced payload exceeded `max_frame` (drained and
     /// rejected at the framing layer, before admission).
     pub oversized_frames: u64,
+    /// Requests force-cancelled by the watchdog because they overran
+    /// `deadline × watchdog_factor`. Their clients still get a response
+    /// (flagged `cancelled`), so they count toward `delivered` too.
+    pub watchdog_fired: u64,
 }
 
 enum Stream {
@@ -243,18 +260,31 @@ impl Pending {
     }
 
     /// Block for the result and encode the response frame for `wire_id`.
+    /// A result carrying a typed [`FactorError`](crate::factor::FactorError)
+    /// becomes a `FAILED` frame instead of a factor/solve response; a
+    /// plain cancellation (deadline, drain ET) stays a normal response
+    /// flagged `cancelled`. Either way the request counts as delivered.
     fn finish(self, wire_id: u64) -> Vec<u8> {
         match self {
             Self::F64(h) => {
                 let r = h.wait();
-                proto::encode_factor_resp(wire_id, &factor_resp_f64(r))
+                match &r.error {
+                    Some(e) => proto::encode_failed(wire_id, &proto::Failure::from_error(e)),
+                    None => proto::encode_factor_resp(wire_id, &factor_resp_f64(r)),
+                }
             }
             Self::F32(h) => {
                 let r = h.wait();
-                proto::encode_factor_resp(wire_id, &factor_resp_f32(r))
+                match &r.error {
+                    Some(e) => proto::encode_failed(wire_id, &proto::Failure::from_error(e)),
+                    None => proto::encode_factor_resp(wire_id, &factor_resp_f32(r)),
+                }
             }
             Self::Solve(h) => {
                 let r = h.wait();
+                if let Some(e) = &r.error {
+                    return proto::encode_failed(wire_id, &proto::Failure::from_error(e));
+                }
                 proto::encode_solve_resp(
                     wire_id,
                     &proto::SolveResp {
@@ -340,13 +370,29 @@ struct NetShared {
     /// drain join — forever.
     hard_stop: AtomicBool,
     /// Outstanding cancel handles by compute job id, so a drain
-    /// deadline can ET work whose typed handle the writer already owns.
-    cancels: Mutex<HashMap<u64, CancelToken>>,
+    /// deadline can ET work whose typed handle the writer already owns,
+    /// and the watchdog can force-cancel requests stuck past
+    /// `deadline × watchdog_factor`.
+    cancels: Mutex<HashMap<u64, WatchEntry>>,
     conns_accepted: AtomicU64,
     delivered: AtomicU64,
     reaped: AtomicU64,
     malformed: AtomicU64,
     oversized: AtomicU64,
+    watchdog_fired: AtomicU64,
+}
+
+/// One outstanding request as the watchdog sees it.
+struct WatchEntry {
+    tok: CancelToken,
+    /// When the request was admitted and submitted.
+    armed_at: Instant,
+    /// The client-requested deadline; `None` exempts the request from
+    /// the watchdog (nothing bounds a deadline-less run).
+    deadline: Option<Duration>,
+    /// Set once the watchdog cancelled this entry, so a slow request is
+    /// counted (and cancelled) once, not once per poll tick.
+    fired: bool,
 }
 
 /// The network daemon (module docs above). Bind with
@@ -393,6 +439,7 @@ impl ServeDaemon {
             reaped: AtomicU64::new(0),
             malformed: AtomicU64::new(0),
             oversized: AtomicU64::new(0),
+            watchdog_fired: AtomicU64::new(0),
         });
         let stop_accept = Arc::new(AtomicBool::new(false));
         let conn_threads = Arc::new(Mutex::new(Vec::new()));
@@ -402,8 +449,7 @@ impl ServeDaemon {
             let threads = Arc::clone(&conn_threads);
             std::thread::Builder::new()
                 .name("mlu-accept".into())
-                .spawn(move || acceptor_loop(listener, shared, stop, threads))
-                .expect("spawn acceptor")
+                .spawn(move || acceptor_loop(listener, shared, stop, threads))?
         };
         Ok(Self {
             shared,
@@ -430,6 +476,7 @@ impl ServeDaemon {
             reaped: self.shared.reaped.load(Ordering::Relaxed),
             malformed: self.shared.malformed.load(Ordering::Relaxed),
             oversized_frames: self.shared.oversized.load(Ordering::Relaxed),
+            watchdog_fired: self.shared.watchdog_fired.load(Ordering::Relaxed),
         }
     }
 
@@ -450,7 +497,10 @@ impl ServeDaemon {
     /// than growing with every connection ever accepted (tests,
     /// introspection).
     pub fn tracked_conn_threads(&self) -> usize {
-        self.conn_threads.lock().unwrap().len()
+        self.conn_threads
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .len()
     }
 
     /// Graceful drain (DESIGN.md §14.6): stop accepting connections,
@@ -480,8 +530,14 @@ impl ServeDaemon {
                 // client holds no admission slot and gets no further
                 // patience past the deadline.
                 self.shared.hard_stop.store(true, Ordering::Release);
-                for tok in self.shared.cancels.lock().unwrap().values() {
-                    tok.cancel();
+                for entry in self
+                    .shared
+                    .cancels
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .values()
+                {
+                    entry.tok.cancel();
                 }
                 cancelled = true;
             }
@@ -492,11 +548,16 @@ impl ServeDaemon {
         // slot; force them out so the joins below finish within one
         // read-timeout tick instead of at the client's leisure.
         self.shared.hard_stop.store(true, Ordering::Release);
-        if let Some(h) = self.acceptor.lock().unwrap().take() {
+        if let Some(h) = self
+            .acceptor
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
             let _ = h.join();
         }
         loop {
-            let mut threads = self.conn_threads.lock().unwrap();
+            let mut threads = self.conn_threads.lock().unwrap_or_else(|e| e.into_inner());
             let Some(h) = threads.pop() else { break };
             drop(threads);
             let _ = h.join();
@@ -532,13 +593,19 @@ fn acceptor_loop(
         // long-running daemon does not keep one handle per connection
         // ever accepted (drain still joins the live stragglers).
         reap_finished(&threads);
+        // Watchdog tick (DESIGN.md §15): force-cancel deadline-carrying
+        // requests stuck past `deadline × watchdog_factor`.
+        watchdog_sweep(&shared);
         match listener.accept() {
             Ok(stream) => {
                 let client = next_client;
                 next_client += 1;
                 shared.conns_accepted.fetch_add(1, Ordering::Relaxed);
                 match spawn_connection(stream, client, &shared) {
-                    Ok(pair) => threads.lock().unwrap().extend(pair),
+                    Ok(pair) => threads
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .extend(pair),
                     Err(e) => eprintln!("serve: connection {client} setup failed: {e}"),
                 }
             }
@@ -553,12 +620,40 @@ fn acceptor_loop(
     }
 }
 
+/// One watchdog pass over the outstanding-request table: cancel every
+/// deadline-carrying request that has overrun `deadline ×
+/// watchdog_factor` (floored at `watchdog_min_ms`). The leader observes
+/// the cancel at its next checkpoint — or, if it was wedged in an
+/// injected stall, as soon as the stall ends — and the client still
+/// gets its response, flagged `cancelled`. Requests without a deadline
+/// are exempt: nothing bounds how long they may legitimately run.
+fn watchdog_sweep(shared: &NetShared) {
+    let factor = shared.cfg.watchdog_factor;
+    if factor == 0 {
+        return;
+    }
+    let min = Duration::from_millis(shared.cfg.watchdog_min_ms);
+    let mut cancels = shared.cancels.lock().unwrap_or_else(|e| e.into_inner());
+    for entry in cancels.values_mut() {
+        let Some(d) = entry.deadline else { continue };
+        if entry.fired {
+            continue;
+        }
+        let limit = std::cmp::max(d * factor, min);
+        if entry.armed_at.elapsed() > limit {
+            entry.tok.cancel();
+            entry.fired = true;
+            shared.watchdog_fired.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Join every connection thread that has already exited, leaving live
 /// ones tracked for the drain-time join.
 fn reap_finished(threads: &Mutex<Vec<JoinHandle<()>>>) {
     let mut done = Vec::new();
     {
-        let mut t = threads.lock().unwrap();
+        let mut t = threads.lock().unwrap_or_else(|e| e.into_inner());
         let mut i = 0;
         while i < t.len() {
             if t[i].is_finished() {
@@ -656,7 +751,11 @@ fn send_job(
             let job_id = pending.job_id();
             pending.reap();
             shared.reaped.fetch_add(1, Ordering::Relaxed);
-            shared.cancels.lock().unwrap().remove(&job_id);
+            shared
+                .cancels
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&job_id);
             shared.admission.release(client);
             false
         }
@@ -823,7 +922,7 @@ fn handle_factor(
                 r = r.with_blocks(req.bo as usize, req.bi as usize);
             }
             let h = shared.server.submit(r);
-            register_cancel(shared, h.id(), h.cancel_token());
+            register_cancel(shared, h.id(), h.cancel_token(), deadline);
             Pending::F64(h)
         }
         proto::WireMat::F32(a) => {
@@ -838,7 +937,7 @@ fn handle_factor(
                 r = r.with_blocks(req.bo as usize, req.bi as usize);
             }
             let h = shared.server.submit(r);
-            register_cancel(shared, h.id(), h.cancel_token());
+            register_cancel(shared, h.id(), h.cancel_token(), deadline);
             Pending::F32(h)
         }
     };
@@ -867,24 +966,33 @@ fn handle_solve(
         let reason = admit_reason(code, shared, dims);
         return send_frame(tx, dead, proto::encode_reject(wire_id, code, &reason));
     }
+    let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms as u64));
     let mut r = SolveRequest::new(req.a, req.b)
         .with_prec(req.prec)
         .with_priority(req.priority)
         .with_client(client);
-    if req.deadline_ms > 0 {
-        r = r.with_deadline(Duration::from_millis(req.deadline_ms as u64));
+    if let Some(d) = deadline {
+        r = r.with_deadline(d);
     }
     if req.bo > 0 && req.bi > 0 {
         r.bo = Some(req.bo as usize);
         r.bi = Some(req.bi as usize);
     }
     let h = shared.server.submit_solve(r);
-    register_cancel(shared, h.id(), h.cancel_token());
+    register_cancel(shared, h.id(), h.cancel_token(), deadline);
     send_job(shared, client, tx, dead, wire_id, Pending::Solve(h))
 }
 
-fn register_cancel(shared: &NetShared, job_id: u64, tok: CancelToken) {
-    shared.cancels.lock().unwrap().insert(job_id, tok);
+fn register_cancel(shared: &NetShared, job_id: u64, tok: CancelToken, deadline: Option<Duration>) {
+    shared.cancels.lock().unwrap_or_else(|e| e.into_inner()).insert(
+        job_id,
+        WatchEntry {
+            tok,
+            armed_at: Instant::now(),
+            deadline,
+            fired: false,
+        },
+    );
 }
 
 fn admit_reason(code: RejectCode, shared: &NetShared, dims: (usize, usize)) -> String {
@@ -943,27 +1051,33 @@ fn writer_loop(
         // Deliver completed jobs in completion order.
         let mut i = 0;
         while i < pendings.len() {
-            if dead.load(Ordering::Acquire) || pendings[i].1.is_done() {
-                let (wire_id, pending) = pendings.remove(i).unwrap();
-                let job_id = pending.job_id();
-                if dead.load(Ordering::Acquire) {
-                    pending.reap();
-                    shared.reaped.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    let frame = pending.finish(wire_id);
-                    if write(&mut stream, &frame, &dead) {
-                        shared.delivered.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        // The result is computed but unsendable; it
-                        // counts as reaped, not delivered.
-                        shared.reaped.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                shared.cancels.lock().unwrap().remove(&job_id);
-                shared.admission.release(client);
-            } else {
+            if !(dead.load(Ordering::Acquire) || pendings[i].1.is_done()) {
                 i += 1;
+                continue;
             }
+            let Some((wire_id, pending)) = pendings.remove(i) else {
+                break;
+            };
+            let job_id = pending.job_id();
+            if dead.load(Ordering::Acquire) {
+                pending.reap();
+                shared.reaped.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let frame = pending.finish(wire_id);
+                if write(&mut stream, &frame, &dead) {
+                    shared.delivered.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // The result is computed but unsendable; it
+                    // counts as reaped, not delivered.
+                    shared.reaped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            shared
+                .cancels
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&job_id);
+            shared.admission.release(client);
         }
         if !open && pendings.is_empty() {
             break;
@@ -982,6 +1096,7 @@ fn writer_loop(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

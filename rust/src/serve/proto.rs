@@ -26,7 +26,7 @@
 //! [`crate::serve::net`], the client in [`crate::serve::client`], and
 //! admission control in [`crate::serve::admission`].
 
-use crate::factor::FactorKind;
+use crate::factor::{FactorError, FactorKind};
 use crate::matrix::{Mat, Matrix};
 use crate::solve::SolvePrec;
 use std::io::Read;
@@ -52,6 +52,12 @@ pub const T_FACTOR_OK: u8 = 0x20;
 pub const T_SOLVE_OK: u8 = 0x21;
 /// Frame type: typed rejection (server → client).
 pub const T_REJECT: u8 = 0x30;
+/// Frame type: typed failure of an *admitted* request (server →
+/// client). Distinct from [`T_REJECT`]: the request passed admission
+/// and ran, but the computation itself failed — the matrix is exactly
+/// singular, the payload carries NaNs, or the daemon suffered an
+/// internal fault while executing it.
+pub const T_FAILED: u8 = 0x31;
 /// Frame type: client goodbye — flush and close, `id = 0`, empty payload.
 pub const T_GOODBYE: u8 = 0x40;
 
@@ -125,6 +131,85 @@ pub struct Reject {
     pub code: RejectCode,
     /// Free-form operator-facing reason (UTF-8; may be empty).
     pub reason: String,
+}
+
+/// Why an admitted request failed — payload byte 0 of a [`T_FAILED`]
+/// frame, mirroring [`FactorError`]'s wire encoding.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum FailCode {
+    /// The matrix is exactly singular; `detail` carries the first
+    /// offending column. Numerical, not retryable. Code 1.
+    Singular = 1,
+    /// The input (or the working-precision arithmetic) holds a
+    /// non-finite value; `detail` carries the column-major offset of
+    /// the first offender. Numerical, not retryable. Code 2.
+    NonFinite = 2,
+    /// The request is structurally unsupported for the chosen
+    /// factorization (e.g. not positive definite for Cholesky).
+    /// Numerical, not retryable. Code 3.
+    Unsupported = 3,
+    /// A daemon-side fault while executing the request (worker panic,
+    /// poisoned crew, watchdog cancellation). The input may be fine —
+    /// retrying is reasonable. Code 4.
+    Internal = 4,
+}
+
+impl FailCode {
+    /// Wire code byte.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire code byte.
+    pub fn parse(c: u8) -> Option<Self> {
+        match c {
+            1 => Some(Self::Singular),
+            2 => Some(Self::NonFinite),
+            3 => Some(Self::Unsupported),
+            4 => Some(Self::Internal),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (logs, `mlu sclient` output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Singular => "singular",
+            Self::NonFinite => "non-finite",
+            Self::Unsupported => "unsupported",
+            Self::Internal => "internal",
+        }
+    }
+}
+
+/// A decoded failure frame ([`T_FAILED`] payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Failure {
+    /// Failure class (drives client-side retry decisions).
+    pub code: FailCode,
+    /// Class-specific detail: offending column for [`FailCode::Singular`],
+    /// column-major offset for [`FailCode::NonFinite`], 0 otherwise.
+    pub detail: u64,
+    /// Operator-facing description (UTF-8; the [`FactorError`] display
+    /// string on the server side).
+    pub reason: String,
+}
+
+impl Failure {
+    /// Build the wire failure for a typed factorization error.
+    pub fn from_error(e: &FactorError) -> Self {
+        let code = match e {
+            FactorError::ExactlySingular { .. } => FailCode::Singular,
+            FactorError::NonFinite { .. } => FailCode::NonFinite,
+            FactorError::Unsupported(_) => FailCode::Unsupported,
+            FactorError::Internal(_) => FailCode::Internal,
+        };
+        Self {
+            code,
+            detail: e.wire_detail(),
+            reason: e.to_string(),
+        }
+    }
 }
 
 /// Matrix payload in either wire precision (prec byte 0 = f64,
@@ -337,22 +422,33 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16, ProtoError> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32, ProtoError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
     }
 
     fn f64(&mut self) -> Result<f64, ProtoError> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_bits(self.u64()?))
     }
 
     fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, ProtoError> {
         let raw = self.take(n * 8)?;
         Ok(raw
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| {
+                f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
             .collect())
     }
 
@@ -360,7 +456,7 @@ impl<'a> Cursor<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 
@@ -457,8 +553,8 @@ pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u64, u32), ProtoError> 
         return err(format!("unsupported protocol version {} (want {VERSION})", h[2]));
     }
     let ty = h[3];
-    let id = u64::from_le_bytes(h[4..12].try_into().unwrap());
-    let len = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    let id = u64::from_le_bytes([h[4], h[5], h[6], h[7], h[8], h[9], h[10], h[11]]);
+    let len = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
     Ok((ty, id, len))
 }
 
@@ -626,6 +722,30 @@ pub fn decode_reject(p: &[u8]) -> Result<Reject, ProtoError> {
     let code = RejectCode::parse(code).ok_or_else(|| ProtoError(format!("bad reject code {code}")))?;
     let reason = String::from_utf8_lossy(&p[4..]).into_owned();
     Ok(Reject { code, reason })
+}
+
+/// Encode a typed failure for admitted request `id`. Payload layout
+/// (DESIGN.md §14): `code(1) reserved(3) detail(8 LE) reason(UTF-8,
+/// rest of payload)`.
+pub fn encode_failed(id: u64, f: &Failure) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + f.reason.len());
+    p.push(f.code.code());
+    p.extend_from_slice(&[0, 0, 0]);
+    put_u64(&mut p, f.detail);
+    p.extend_from_slice(f.reason.as_bytes());
+    encode_frame(T_FAILED, id, &p)
+}
+
+/// Decode a failure payload.
+pub fn decode_failed(p: &[u8]) -> Result<Failure, ProtoError> {
+    let mut c = Cursor::new(p);
+    let code = c.u8()?;
+    c.take(3)?;
+    let detail = c.u64()?;
+    let code =
+        FailCode::parse(code).ok_or_else(|| ProtoError(format!("bad failure code {code}")))?;
+    let reason = String::from_utf8_lossy(&p[12..]).into_owned();
+    Ok(Failure { code, detail, reason })
 }
 
 // ---------------------------------------------------------------------------
@@ -833,6 +953,7 @@ pub fn decode_solve_resp(p: &[u8]) -> Result<SolveResp, ProtoError> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -1001,6 +1122,76 @@ mod tests {
                 }
                 other => panic!("unexpected {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn failed_frame_matches_spec_bytes_and_roundtrips() {
+        // Byte-image pin for the §14 FAILED row: code(1) pad(3)
+        // detail(8 LE) reason.
+        let f = Failure {
+            code: FailCode::Singular,
+            detail: 3,
+            reason: "zero pivot".into(),
+        };
+        let frame = encode_failed(21, &f);
+        assert_eq!(frame[3], T_FAILED);
+        assert_eq!(&frame[4..12], &21u64.to_le_bytes());
+        assert_eq!(frame[16], 1, "failure code byte");
+        assert_eq!(&frame[17..20], &[0, 0, 0], "reserved pad");
+        assert_eq!(&frame[20..28], &3u64.to_le_bytes(), "detail");
+        assert_eq!(&frame[28..], b"zero pivot");
+        for code in [
+            FailCode::Singular,
+            FailCode::NonFinite,
+            FailCode::Unsupported,
+            FailCode::Internal,
+        ] {
+            let f = Failure {
+                code,
+                detail: 0xDEAD_BEEF_0102_0304,
+                reason: format!("because {}", code.name()),
+            };
+            let frame = encode_failed(7, &f);
+            match read_all(&frame) {
+                ReadEvent::Frame(fr) => {
+                    assert_eq!(fr.ty, T_FAILED);
+                    assert_eq!(fr.id, 7);
+                    assert_eq!(decode_failed(&fr.payload).unwrap(), f);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(FailCode::parse(0).is_none());
+        assert!(FailCode::parse(5).is_none());
+        assert!(decode_failed(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn failure_from_error_maps_every_variant() {
+        let cases = [
+            (
+                FactorError::ExactlySingular { col: 5 },
+                FailCode::Singular,
+                5u64,
+            ),
+            (
+                FactorError::NonFinite { first_offset: 37 },
+                FailCode::NonFinite,
+                37,
+            ),
+            (
+                FactorError::Unsupported("not SPD".into()),
+                FailCode::Unsupported,
+                0,
+            ),
+            (FactorError::Internal("crew died".into()), FailCode::Internal, 0),
+        ];
+        for (err, code, detail) in cases {
+            let f = Failure::from_error(&err);
+            assert_eq!(f.code, code, "{err:?}");
+            assert_eq!(f.detail, detail, "{err:?}");
+            assert_eq!(f.reason, err.to_string());
         }
     }
 

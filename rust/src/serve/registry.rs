@@ -11,7 +11,7 @@
 //! remaining work per enlisted worker is highest.
 
 use crate::pool::CrewShared;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One in-flight problem's entry: its crew plus the scheduling signals
@@ -35,6 +35,11 @@ pub struct Lease {
     /// donated workers are absorbed productively — so the starvation
     /// score weights it up (DESIGN.md §13).
     steal_pressure: AtomicU64,
+    /// Set when the problem's crew suffered a fault (a chunk panicked,
+    /// or the leader died). A poisoned lease never attracts floaters —
+    /// donating workers to a dying problem wastes them — and is
+    /// unregistered by its leader's cleanup path shortly after.
+    poisoned: AtomicBool,
 }
 
 impl Lease {
@@ -46,7 +51,19 @@ impl Lease {
             shared,
             remaining: AtomicU64::new(remaining.to_bits()),
             steal_pressure: AtomicU64::new(0.0f64.to_bits()),
+            poisoned: AtomicBool::new(false),
         }
+    }
+
+    /// Mark the lease faulted (crew poisoned or leader panicked); see
+    /// the `poisoned` field docs. Idempotent.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// Whether [`Lease::poison`] was called.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
     }
 
     /// Cost-model estimate of the problem's remaining work (modeled
@@ -179,7 +196,7 @@ impl CrewRegistry {
 
     /// Number of in-flight problems.
     pub fn len(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.slots.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Whether no problem is in flight.
@@ -189,7 +206,10 @@ impl CrewRegistry {
 
     /// Announce a problem as open for donated workers.
     pub fn register(&self, lease: Arc<Lease>) {
-        self.slots.lock().unwrap().push(lease);
+        self.slots
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(lease);
         self.epoch.fetch_add(1, Ordering::AcqRel);
     }
 
@@ -197,17 +217,23 @@ impl CrewRegistry {
     /// its crew leave at the next job boundary (epoch change), before
     /// the leader disbands it.
     pub fn unregister(&self, id: u64) {
-        self.slots.lock().unwrap().retain(|l| l.id != id);
+        self.slots
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .retain(|l| l.id != id);
         self.epoch.fetch_add(1, Ordering::AcqRel);
     }
 
     /// The lease with the highest starvation score, if any problem is in
     /// flight. Concurrent callers may briefly herd onto the same lease;
     /// the score self-corrects as each enlistment raises the team count.
+    /// Poisoned leases ([`Lease::poison`]) are skipped — a faulted
+    /// problem is being torn down and must not absorb floaters.
     pub fn most_starved(&self) -> Option<Arc<Lease>> {
-        let slots = self.slots.lock().unwrap();
+        let slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
         slots
             .iter()
+            .filter(|l| !l.is_poisoned())
             .max_by(|a, b| {
                 a.starvation()
                     .partial_cmp(&b.starvation())
@@ -218,6 +244,7 @@ impl CrewRegistry {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::pool::Crew;
@@ -271,6 +298,22 @@ mod tests {
     fn most_starved_empty_is_none() {
         let reg = CrewRegistry::new();
         assert!(reg.most_starved().is_none());
+    }
+
+    #[test]
+    fn poisoned_lease_attracts_no_floaters() {
+        let reg = CrewRegistry::new();
+        let (_c1, l1) = lease(1, 0, 1.0);
+        let (_c2, l2) = lease(2, 7, 100.0); // by score, the clear winner
+        reg.register(Arc::clone(&l1));
+        reg.register(Arc::clone(&l2));
+        assert_eq!(reg.most_starved().unwrap().id, 2);
+        l2.poison();
+        assert!(l2.is_poisoned());
+        // The faulted problem is skipped even though it out-bids l1.
+        assert_eq!(reg.most_starved().unwrap().id, 1);
+        l1.poison();
+        assert!(reg.most_starved().is_none(), "all poisoned: no pick");
     }
 
     #[test]

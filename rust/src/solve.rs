@@ -37,6 +37,7 @@
 //! as a queue request kind (`LuServer::submit_solve`).
 
 use crate::blis::BlisParams;
+use crate::factor::FactorError;
 use crate::lu::{lu_blocked_rl_ctl, BlockedCtl};
 use crate::matrix::{Mat, Matrix};
 use crate::pool::Crew;
@@ -125,6 +126,13 @@ pub struct SolveOutcome {
     pub cancelled: bool,
     /// Columns of the factorization committed (== n unless cancelled).
     pub cols_done: usize,
+    /// Typed numerical failure from the factorization stage, if any
+    /// (exactly singular working-precision pivot, non-finite input,
+    /// crew fault). Non-fatal errors — e.g. an `f32` pivot that rounds
+    /// to zero — coexist with a completed factorization; the refiner
+    /// then reports `converged == false` with an infinite backward
+    /// error, and this field says *why*.
+    pub error: Option<FactorError>,
 }
 
 fn inf_norm_vec(v: &[f64]) -> f64 {
@@ -183,9 +191,11 @@ pub fn backward_error(a: &Matrix, x: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Factor `a` (a copy, in precision `S`) on `crew` and back/forward
-/// substitute `b`. Returns `(x, factors, ipiv, cols_done, cancelled)`
-/// with `x` promoted to `f64` (empty when cancelled before completion);
-/// the factors and pivots feed the mixed-precision refiner.
+/// substitute `b`. Returns `(x, factors, ipiv, cols_done, cancelled,
+/// error)` with `x` promoted to `f64` (empty when the factorization did
+/// not run to completion — cancelled or stopped by a fatal typed
+/// error); the factors and pivots feed the mixed-precision refiner.
+#[allow(clippy::type_complexity)]
 fn factor_and_solve<S: Scalar>(
     crew: &mut Crew,
     params: &BlisParams,
@@ -194,7 +204,7 @@ fn factor_and_solve<S: Scalar>(
     bo: usize,
     bi: usize,
     ctl: &SolveCtl,
-) -> (Vec<f64>, Mat<S>, Vec<usize>, usize, bool) {
+) -> (Vec<f64>, Mat<S>, Vec<usize>, usize, bool, Option<FactorError>) {
     let n = a.rows();
     let mut fac: Mat<S> = a.convert();
     let bctl = BlockedCtl {
@@ -204,12 +214,19 @@ fn factor_and_solve<S: Scalar>(
     };
     let out = lu_blocked_rl_ctl(crew, params, fac.view_mut(), bo, bi, &bctl);
     if out.cancelled || out.cols_done < n {
-        return (Vec::new(), fac, out.ipiv, out.cols_done, true);
+        return (
+            Vec::new(),
+            fac,
+            out.ipiv,
+            out.cols_done,
+            out.cancelled,
+            out.error,
+        );
     }
     let bs: Vec<S> = b.iter().map(|&v| S::from_f64(v)).collect();
     let xs = crate::matrix::naive::lu_solve(&fac, &out.ipiv, &bs);
     let x: Vec<f64> = xs.iter().map(|v| v.to_f64()).collect();
-    (x, fac, out.ipiv, out.cols_done, false)
+    (x, fac, out.ipiv, out.cols_done, false, out.error)
 }
 
 /// Mixed-precision solve: `f32` factorization + `f64` iterative
@@ -239,16 +256,17 @@ pub fn lu_solve_mixed_ctl(
     let n = a.rows();
     assert_eq!(a.cols(), n, "lu_solve_mixed: square systems only");
     assert_eq!(b.len(), n, "lu_solve_mixed: rhs length");
-    let (x0, fac, ipiv, cols_done, cancelled) =
+    let (x0, fac, ipiv, cols_done, cancelled, ferr) =
         factor_and_solve::<f32>(crew, params, a, b, bo, bi, ctl);
-    if cancelled {
+    if cancelled || cols_done < n {
         return SolveOutcome {
             x: x0,
             refine_iters: 0,
             backward_error: f64::INFINITY,
             converged: false,
-            cancelled: true,
+            cancelled,
             cols_done,
+            error: ferr,
         };
     }
     let mut x = x0;
@@ -299,6 +317,7 @@ pub fn lu_solve_mixed_ctl(
         converged,
         cancelled: was_cancelled,
         cols_done,
+        error: ferr,
     }
 }
 
@@ -321,9 +340,9 @@ pub fn solve_system_ctl(
     match prec {
         SolvePrec::Mixed => lu_solve_mixed_ctl(crew, params, a, b, bo, bi, ctl),
         SolvePrec::F64 => {
-            let (x, _fac, _ipiv, cols_done, cancelled) =
+            let (x, _fac, _ipiv, cols_done, cancelled, ferr) =
                 factor_and_solve::<f64>(crew, params, a, b, bo, bi, ctl);
-            let err = if cancelled {
+            let err = if cancelled || cols_done < n {
                 f64::INFINITY
             } else {
                 backward_error(a, &x, b)
@@ -332,15 +351,16 @@ pub fn solve_system_ctl(
                 x,
                 refine_iters: 0,
                 backward_error: err,
-                converged: !cancelled,
+                converged: !cancelled && cols_done == n && err.is_finite(),
                 cancelled,
                 cols_done,
+                error: ferr,
             }
         }
         SolvePrec::F32 => {
-            let (x, _fac, _ipiv, cols_done, cancelled) =
+            let (x, _fac, _ipiv, cols_done, cancelled, ferr) =
                 factor_and_solve::<f32>(crew, params, a, b, bo, bi, ctl);
-            let err = if cancelled {
+            let err = if cancelled || cols_done < n {
                 f64::INFINITY
             } else {
                 backward_error(a, &x, b)
@@ -349,9 +369,10 @@ pub fn solve_system_ctl(
                 x,
                 refine_iters: 0,
                 backward_error: err,
-                converged: !cancelled,
+                converged: !cancelled && cols_done == n && err.is_finite(),
                 cancelled,
                 cols_done,
+                error: ferr,
             }
         }
     }
@@ -503,6 +524,14 @@ mod tests {
             "backward error {} should be infinite",
             out.backward_error
         );
+        // And the *reason* is now typed: the 1e-50 pivot rounds to zero
+        // in the f32 working precision.
+        assert_eq!(
+            out.error,
+            Some(FactorError::ExactlySingular { col: 0 }),
+            "singular f32 pivot must be reported as a typed error"
+        );
+        assert!(!out.cancelled, "typed failure is not a cancellation");
     }
 
     #[test]

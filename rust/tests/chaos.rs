@@ -1,0 +1,403 @@
+//! Seeded chaos suite for the serve stack (DESIGN.md §15): every fault
+//! family in [`malleable_lu::faultplan`] is swept across 12 seeds ×
+//! {LU, Cholesky, QR} against a live daemon, and after *every* scenario
+//! the same invariants must hold — the ledger balances
+//! (`admitted == delivered + reaped`), the crew registry is empty, the
+//! pack arena has every buffer back, and a fresh well-posed request
+//! still completes. Faults degrade one request, never the daemon.
+//!
+//! Only built with `--features chaos` (the CI chaos lane); the default
+//! `cargo test` compiles this file to nothing.
+//!
+//! Fault plans are armed *globally* here ([`FaultPlan::arm`]): every
+//! scenario holds the arming guard for its fault window, and the one
+//! test that never injects (`fault_free_runs_are_bitwise_identical`)
+//! arms an inert `PoisonInput` plan so it serializes with the sweep
+//! instead of racing a live global fault.
+
+#![cfg(feature = "chaos")]
+
+use malleable_lu::factor::FactorKind;
+use malleable_lu::faultplan::{self, FaultAction, FaultPlan};
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::serve::client::{ServeClient, WireEvent};
+use malleable_lu::serve::net::{BindAddr, NetConfig, ServeDaemon};
+use malleable_lu::serve::proto::{self, FailCode, ReadEvent};
+use malleable_lu::serve::ServeConfig;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+fn cfg(workers: usize) -> NetConfig {
+    NetConfig {
+        serve: ServeConfig {
+            workers,
+            bo: 48,
+            bi: 16,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn tcp_daemon(c: NetConfig) -> ServeDaemon {
+    ServeDaemon::bind(&BindAddr::parse("tcp:127.0.0.1:0").unwrap(), c).unwrap()
+}
+
+/// Raw-socket connect, for the mid-frame-disconnect scenarios.
+fn raw_tcp(daemon: &ServeDaemon) -> std::net::TcpStream {
+    let BindAddr::Tcp(hostport) = daemon.local_addr() else {
+        panic!("expected tcp daemon")
+    };
+    std::net::TcpStream::connect(hostport.as_str()).unwrap()
+}
+
+/// A factor request with explicit small blocks (`bo=16`, `bi=8`), so
+/// even modest matrices cross several panel checkpoints and many crew
+/// chunks — the places the hooks live.
+fn req(kind: FactorKind, a: proto::WireMat, deadline_ms: u32) -> proto::FactorReq {
+    proto::FactorReq {
+        kind,
+        priority: 0,
+        deadline_ms,
+        bo: 16,
+        bi: 8,
+        a,
+    }
+}
+
+/// A well-posed input for `kind` (SPD for Cholesky).
+fn input(kind: FactorKind, n: usize, seed: u64) -> Matrix {
+    match kind {
+        FactorKind::Chol => Matrix::random_spd(n, seed),
+        _ => Matrix::random(n, n, seed),
+    }
+}
+
+/// The recurring post-scenario invariant: the daemon settles with a
+/// balanced ledger and nothing leaked.
+fn settle_and_check(daemon: &ServeDaemon, ctx: &str, admitted: u64) {
+    let t0 = Instant::now();
+    loop {
+        let s = daemon.stats();
+        if s.admission.admitted == s.delivered + s.reaped && daemon.registry().is_empty() {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "{ctx}: daemon did not settle: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, admitted, "{ctx}: {s:?}");
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped, "{ctx}: {s:?}");
+    assert!(daemon.registry().is_empty(), "{ctx}: leaked crew leases");
+    let a = daemon.arena_stats();
+    assert_eq!(
+        a.free_buffers as u64, a.allocations,
+        "{ctx}: arena buffers not all returned"
+    );
+}
+
+/// After the fault: a fresh well-posed request on a fresh connection
+/// must get full, numerically correct service. Call with the plan
+/// already disarmed, so an unspent plan cannot fire here.
+fn follow_up(addr: &BindAddr, ctx: &str) {
+    let mut client = ServeClient::connect(addr)
+        .unwrap_or_else(|e| panic!("{ctx}: daemon stopped accepting: {e}"));
+    let a0 = Matrix::random(48, 48, 99);
+    let id = client
+        .submit_factor(&req(FactorKind::Lu, proto::WireMat::F64(a0.clone()), 0))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert!(!resp.cancelled, "{ctx}");
+            let proto::WireMat::F64(f) = &resp.a else {
+                panic!("{ctx}: precision flipped")
+            };
+            let ipiv: Vec<usize> = resp.ipiv.iter().map(|&p| p as usize).collect();
+            let r = naive::lu_residual(&a0, f, &ipiv);
+            assert!(r < 1e-10, "{ctx}: post-fault residual {r}");
+        }
+        other => panic!("{ctx}: daemon did not survive the fault: {other:?}"),
+    }
+    client.goodbye().unwrap();
+}
+
+/// One seeded scenario: derive the plan, run the fault-family-specific
+/// interaction, check the shared invariants.
+fn run_scenario(seed: u64, kind: FactorKind) {
+    let plan = FaultPlan::from_seed(seed);
+    let ctx = format!("seed {seed} ({:?}) on {}", plan.action, kind.name());
+    match plan.action {
+        FaultAction::PanicAtCheckpoint { .. } => leader_panic(&plan, kind, &ctx),
+        FaultAction::PanicInChunk { .. } => crew_panic(&plan, kind, &ctx),
+        FaultAction::StallAtCheckpoint { .. } => stalled_leader(&plan, kind, &ctx),
+        FaultAction::PoisonInput => poisoned_input(&plan, kind, seed, &ctx),
+        FaultAction::DropConnection { mid_frame } => {
+            dropped_connection(&plan, kind, mid_frame, seed, &ctx)
+        }
+    }
+}
+
+/// The leader panics at a panel checkpoint: the serve loop's
+/// `catch_unwind` must convert it into a typed `FAILED{internal}` —
+/// delivered, not dropped — and the daemon must keep serving.
+fn leader_panic(plan: &FaultPlan, kind: FactorKind, ctx: &str) {
+    let guard = plan.arm();
+    let daemon = tcp_daemon(cfg(2));
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let id = client
+        .submit_factor(&req(kind, proto::WireMat::F64(input(kind, 96, plan.seed + 1)), 0))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Failed { id: rid, failure } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert_eq!(failure.code, FailCode::Internal, "{ctx}: {failure:?}");
+            assert!(failure.reason.contains("panicked"), "{ctx}: {}", failure.reason);
+        }
+        other => panic!("{ctx}: expected FAILED(internal), got {other:?}"),
+    }
+    assert!(faultplan::fired(), "{ctx}: plan never fired");
+    client.goodbye().unwrap();
+    drop(guard);
+    follow_up(&daemon.local_addr(), ctx);
+    daemon.drain(Duration::from_secs(30));
+    settle_and_check(&daemon, ctx, 2);
+    assert_eq!(daemon.stats().reaped, 0, "{ctx}: no client vanished");
+    daemon.shutdown();
+}
+
+/// A crew member panics inside a chunk: the crew is poisoned but never
+/// wedged (the chunk still counts as completed), and the request comes
+/// back as `FAILED{internal}`. Seeds whose chunk ordinal exceeds the
+/// run's chunk count simply complete — also a valid outcome, asserted
+/// consistent with `fired()`.
+fn crew_panic(plan: &FaultPlan, kind: FactorKind, ctx: &str) {
+    let guard = plan.arm();
+    let daemon = tcp_daemon(cfg(2));
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let id = client
+        .submit_factor(&req(kind, proto::WireMat::F64(input(kind, 128, plan.seed + 1)), 0))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Failed { id: rid, failure } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert_eq!(failure.code, FailCode::Internal, "{ctx}: {failure:?}");
+            assert!(faultplan::fired(), "{ctx}: FAILED without the plan firing");
+        }
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert!(!resp.cancelled, "{ctx}");
+            assert!(
+                !faultplan::fired(),
+                "{ctx}: plan fired yet the request completed cleanly"
+            );
+        }
+        other => panic!("{ctx}: expected FAILED or a clean response, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    drop(guard);
+    follow_up(&daemon.local_addr(), ctx);
+    daemon.drain(Duration::from_secs(30));
+    settle_and_check(&daemon, ctx, 2);
+    daemon.shutdown();
+}
+
+/// The leader stalls (wedged-but-alive) at a checkpoint, well past the
+/// request's deadline: the response must come back flagged `cancelled`,
+/// and — since the stall (≥120 ms) overruns the watchdog limit (70 ms)
+/// — the watchdog must have force-cancelled it while it was wedged.
+fn stalled_leader(plan: &FaultPlan, kind: FactorKind, ctx: &str) {
+    let guard = plan.arm();
+    let mut c = cfg(2);
+    c.watchdog_factor = 1;
+    c.watchdog_min_ms = 70;
+    let daemon = tcp_daemon(c);
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let id = client
+        .submit_factor(&req(kind, proto::WireMat::F64(input(kind, 96, plan.seed + 1)), 60))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Factor { id: rid, resp } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert!(resp.cancelled, "{ctx}: stalled past its deadline yet not cancelled");
+        }
+        other => panic!("{ctx}: expected a cancelled response, got {other:?}"),
+    }
+    if faultplan::fired() {
+        assert!(
+            daemon.stats().watchdog_fired >= 1,
+            "{ctx}: a {:?} stall never tripped the watchdog",
+            plan.action
+        );
+    }
+    client.goodbye().unwrap();
+    drop(guard);
+    follow_up(&daemon.local_addr(), ctx);
+    daemon.drain(Duration::from_secs(30));
+    settle_and_check(&daemon, ctx, 2);
+    daemon.shutdown();
+}
+
+/// A NaN planted in the payload itself: caught by the driver's prescan,
+/// answered as `FAILED{non-finite}` carrying the column-major offset.
+/// Alternates precision across the sweep's `PoisonInput` seeds (3, 9,
+/// ...), so both the f64 and f32 prescans get exercised.
+fn poisoned_input(plan: &FaultPlan, kind: FactorKind, seed: u64, ctx: &str) {
+    let guard = plan.arm();
+    let daemon = tcp_daemon(cfg(2));
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let n = 64usize;
+    let i = ((seed * 7 + 3) % n as u64) as usize;
+    let j = ((seed * 5 + 1) % n as u64) as usize;
+    let id = if (seed / 6) % 2 == 0 {
+        let mut a = input(kind, n, seed + 1);
+        a[(i, j)] = f64::NAN;
+        client
+            .submit_factor(&req(kind, proto::WireMat::F64(a), 0))
+            .unwrap()
+    } else {
+        let mut a = match kind {
+            FactorKind::Chol => Mat::<f32>::random_spd(n, seed + 1),
+            _ => Mat::<f32>::random(n, n, seed + 1),
+        };
+        a[(i, j)] = f32::NAN;
+        client
+            .submit_factor(&req(kind, proto::WireMat::F32(a), 0))
+            .unwrap()
+    };
+    match client.recv().unwrap() {
+        WireEvent::Failed { id: rid, failure } => {
+            assert_eq!(rid, id, "{ctx}");
+            assert_eq!(failure.code, FailCode::NonFinite, "{ctx}: {failure:?}");
+            assert_eq!(
+                failure.detail,
+                (j * n + i) as u64,
+                "{ctx}: wrong NaN offset"
+            );
+        }
+        other => panic!("{ctx}: expected FAILED(non-finite), got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    drop(guard);
+    follow_up(&daemon.local_addr(), ctx);
+    daemon.drain(Duration::from_secs(30));
+    settle_and_check(&daemon, ctx, 2);
+    daemon.shutdown();
+}
+
+/// A client that vanishes: mid-frame before admission (the framing
+/// layer closes the session; nothing enters the ledger), or right after
+/// submitting (the orphaned request is finished-or-cancelled, then
+/// delivered into a dead socket or reaped — never leaked).
+fn dropped_connection(plan: &FaultPlan, kind: FactorKind, mid_frame: bool, seed: u64, ctx: &str) {
+    let guard = plan.arm();
+    let daemon = tcp_daemon(cfg(2));
+    if mid_frame {
+        let mut s = raw_tcp(&daemon);
+        s.write_all(&proto::encode_hello(proto::VERSION, proto::VERSION)).unwrap();
+        match proto::read_frame(&mut s, 1 << 20, &mut |_| true) {
+            ReadEvent::Frame(f) => assert_eq!(f.ty, proto::T_HELLO_ACK, "{ctx}"),
+            other => panic!("{ctx}: expected hello ack, got {other:?}"),
+        }
+        let frame = proto::encode_frame(proto::T_FACTOR, 1, &[0u8; 512]);
+        s.write_all(&frame[..proto::HEADER_LEN + 17]).unwrap();
+        drop(s); // vanish mid-frame: nothing was admitted
+        drop(guard);
+        follow_up(&daemon.local_addr(), ctx);
+        daemon.drain(Duration::from_secs(30));
+        settle_and_check(&daemon, ctx, 1);
+    } else {
+        {
+            let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+            client
+                .submit_factor(&req(kind, proto::WireMat::F64(input(kind, 160, seed + 1)), 0))
+                .unwrap();
+            // Wait for admission, then vanish without reading the answer.
+            let t0 = Instant::now();
+            while daemon.stats().admission.admitted == 0 {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "{ctx}: never admitted"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        } // drop = abrupt disconnect with one admitted request in flight
+        drop(guard);
+        follow_up(&daemon.local_addr(), ctx);
+        daemon.drain(Duration::from_secs(30));
+        settle_and_check(&daemon, ctx, 2);
+    }
+    daemon.shutdown();
+}
+
+/// The acceptance sweep: 12 consecutive seeds (twice around the 6
+/// action variants, with different in-family parameters) × every
+/// factorization kind — 36 scenarios, run serially in one test because
+/// globally-armed plans must never overlap another scenario's requests.
+#[test]
+fn chaos_sweep_every_family_across_kinds() {
+    for seed in 0..12u64 {
+        for &kind in FactorKind::all() {
+            run_scenario(seed, kind);
+        }
+    }
+}
+
+/// With no fault armed the chaos build must be *bitwise* identical run
+/// to run: the hooks, supervision, and watchdog add observation, never
+/// perturbation. Arms an inert `PoisonInput` plan (it has no in-process
+/// hook) purely to serialize with the sweep above.
+#[test]
+fn fault_free_runs_are_bitwise_identical() {
+    let inert = FaultPlan {
+        seed: u64::MAX,
+        action: FaultAction::PoisonInput,
+    };
+    let _g = inert.arm();
+    for &kind in FactorKind::all() {
+        let daemon = tcp_daemon(cfg(2));
+        let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+        let a0 = input(kind, 96, 7);
+        let mut runs: Vec<(Vec<u64>, Vec<u64>, Vec<u64>)> = Vec::new();
+        for _ in 0..2 {
+            let id = client
+                .submit_factor(&req(kind, proto::WireMat::F64(a0.clone()), 0))
+                .unwrap();
+            match client.recv().unwrap() {
+                WireEvent::Factor { id: rid, resp } => {
+                    assert_eq!(rid, id);
+                    assert!(!resp.cancelled);
+                    let proto::WireMat::F64(f) = &resp.a else {
+                        panic!("{}: precision flipped", kind.name())
+                    };
+                    let mut bits = Vec::with_capacity(96 * 96);
+                    for j in 0..f.cols() {
+                        for i in 0..f.rows() {
+                            bits.push(f[(i, j)].to_bits());
+                        }
+                    }
+                    let tau = match &resp.tau {
+                        proto::WireVec::F64(t) => t.iter().map(|x| x.to_bits()).collect(),
+                        proto::WireVec::F32(t) => t.iter().map(|x| x.to_bits() as u64).collect(),
+                    };
+                    let ipiv = resp.ipiv.iter().map(|&p| p as u64).collect();
+                    runs.push((bits, ipiv, tau));
+                }
+                other => panic!("{}: expected a factor response, got {other:?}", kind.name()),
+            }
+        }
+        assert_eq!(runs[0].1, runs[1].1, "{}: pivots differ", kind.name());
+        assert_eq!(runs[0].2, runs[1].2, "{}: tau not bitwise identical", kind.name());
+        assert_eq!(
+            runs[0].0, runs[1].0,
+            "{}: factors not bitwise identical across runs",
+            kind.name()
+        );
+        client.goodbye().unwrap();
+        daemon.drain(Duration::from_secs(30));
+        daemon.shutdown();
+    }
+}

@@ -14,7 +14,7 @@ use malleable_lu::matrix::{naive, Mat, Matrix};
 use malleable_lu::scalar::Scalar;
 use malleable_lu::serve::client::{ServeClient, WireEvent};
 use malleable_lu::serve::net::{BindAddr, NetConfig, ServeDaemon};
-use malleable_lu::serve::proto::{self, ReadEvent, RejectCode};
+use malleable_lu::serve::proto::{self, FailCode, ReadEvent, RejectCode};
 use malleable_lu::serve::ServeConfig;
 use malleable_lu::solve::SolvePrec;
 use std::io::Write;
@@ -147,7 +147,7 @@ fn unix_roundtrip_mixed_kinds_and_precisions() {
                 assert!(resp.backward_error <= SolvePrec::Mixed.expected_backward_error(n));
                 assert!(resp.x.iter().all(|&x| (x - 1.0).abs() < 1e-6));
             }
-            WireEvent::Rejected { id, reject } => panic!("req{id} rejected: {reject:?}"),
+            other => panic!("unexpected terminal event: {other:?}"),
         }
     }
     client.goodbye().unwrap();
@@ -505,7 +505,8 @@ fn drain_under_load_answers_every_admitted_request() {
             match client.recv() {
                 Ok(WireEvent::Factor { id, .. })
                 | Ok(WireEvent::Solve { id, .. })
-                | Ok(WireEvent::Rejected { id, .. }) => events.push(id),
+                | Ok(WireEvent::Rejected { id, .. })
+                | Ok(WireEvent::Failed { id, .. }) => events.push(id),
                 Err(_) => break, // daemon closed after the drain
             }
         }
@@ -537,6 +538,138 @@ fn drain_under_load_answers_every_admitted_request() {
 
     // Post-drain, the daemon accepts no new sessions.
     assert!(ServeClient::connect(&addr).is_err());
+    daemon.shutdown();
+}
+
+#[test]
+fn nan_payload_fails_typed_and_the_session_survives() {
+    // f64 over a Unix socket: a NaN planted at a known column-major
+    // offset must come back as FAILED{non-finite} carrying that offset,
+    // count as *delivered* (not dropped, not cancelled), and leave the
+    // session usable.
+    let addr = unix_addr("nanpay");
+    let daemon = ServeDaemon::bind(&addr, cfg(2)).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let n = 32;
+    let mut a = Matrix::random(n, n, 1);
+    a[(2, 1)] = f64::NAN;
+    let id = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(a)))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Failed { id: rid, failure } => {
+            assert_eq!(rid, id);
+            assert_eq!(failure.code, FailCode::NonFinite);
+            assert_eq!(failure.detail, (n + 2) as u64, "column-major offset of the NaN");
+            assert!(failure.reason.contains("non-finite"), "{}", failure.reason);
+        }
+        other => panic!("expected FAILED, got {other:?}"),
+    }
+    // A failed request is not a failed connection.
+    let ok = Matrix::random(n, n, 2);
+    client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(ok)))
+        .unwrap();
+    assert!(matches!(client.recv().unwrap(), WireEvent::Factor { .. }));
+    client.goodbye().unwrap();
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, 2);
+    assert_eq!(s.delivered, 2, "FAILED counts as delivered");
+    assert_eq!(s.reaped, 0);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+
+    // f32 over TCP, QR kind: same typed failure, offset 0.
+    let daemon = tcp_daemon(cfg(2));
+    let mut client = ServeClient::connect(&daemon.local_addr()).unwrap();
+    let mut a = Mat::<f32>::random(n, n, 3);
+    a[(0, 0)] = f32::NAN;
+    let id = client
+        .submit_factor(&factor_req(FactorKind::Qr, proto::WireMat::F32(a)))
+        .unwrap();
+    match client.recv().unwrap() {
+        WireEvent::Failed { id: rid, failure } => {
+            assert_eq!(rid, id);
+            assert_eq!(failure.code, FailCode::NonFinite);
+            assert_eq!(failure.detail, 0);
+        }
+        other => panic!("expected FAILED, got {other:?}"),
+    }
+    client.goodbye().unwrap();
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, s.delivered + s.reaped);
+    assert_no_leaks(&daemon);
+    daemon.shutdown();
+}
+
+#[test]
+fn singular_and_indefinite_inputs_fail_typed_without_leaks() {
+    let addr = unix_addr("singular");
+    let daemon = ServeDaemon::bind(&addr, cfg(2)).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let n = 32;
+
+    // Exactly singular LU: the all-zeros matrix pivots to zero in
+    // column 0. LAPACK-info semantics — the run completes, but the wire
+    // answer is the typed failure, not NaN-filled factors.
+    let id_lu = client
+        .submit_factor(&factor_req(FactorKind::Lu, proto::WireMat::F64(Mat::zeros(n, n))))
+        .unwrap();
+    // Indefinite Cholesky: a negated SPD matrix breaks down at column 0.
+    let mut spd = Matrix::random_spd(n, 5);
+    for j in 0..n {
+        for i in 0..n {
+            spd[(i, j)] = -spd[(i, j)];
+        }
+    }
+    let id_ch = client
+        .submit_factor(&factor_req(FactorKind::Chol, proto::WireMat::F64(spd)))
+        .unwrap();
+    // Singular solve: factorization of A = 0 cannot back-substitute.
+    let id_sv = client
+        .submit_solve(&proto::SolveReq {
+            prec: SolvePrec::Mixed,
+            priority: 0,
+            deadline_ms: 0,
+            bo: 0,
+            bi: 0,
+            a: Mat::zeros(n, n),
+            b: vec![1.0; n],
+        })
+        .unwrap();
+
+    for _ in 0..3 {
+        match client.recv().unwrap() {
+            WireEvent::Failed { id, failure } => {
+                if id == id_lu {
+                    assert_eq!(failure.code, FailCode::Singular);
+                    assert_eq!(failure.detail, 0, "zero pivot in column 0");
+                    assert!(failure.reason.contains("singular"), "{}", failure.reason);
+                } else if id == id_ch {
+                    assert_eq!(failure.code, FailCode::Unsupported);
+                    assert!(
+                        failure.reason.contains("positive definite"),
+                        "{}",
+                        failure.reason
+                    );
+                } else if id == id_sv {
+                    assert_eq!(failure.code, FailCode::Singular);
+                } else {
+                    panic!("failure for unknown id {id}");
+                }
+            }
+            other => panic!("expected FAILED, got {other:?}"),
+        }
+    }
+    client.goodbye().unwrap();
+    daemon.drain(Duration::from_secs(30));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, 3);
+    assert_eq!(s.delivered, 3, "typed failures are delivered answers");
+    assert_eq!(s.reaped, 0);
+    assert_no_leaks(&daemon);
     daemon.shutdown();
 }
 
