@@ -46,6 +46,11 @@
 //!   [`serve::proto`], with admission control and graceful drain
 //!   (DESIGN.md §14); [`serve::client::ServeClient`] is the matching
 //!   client library behind `mlu sclient`.
+//! - [`replay`] — deterministic scheduler **capture/replay**: record every
+//!   scheduling decision a serve run makes into a versioned `.mrb` bundle,
+//!   re-execute it offline with byte-identical results and decision-stream
+//!   certification, and sweep counterfactual steal policies through the
+//!   [`sim`] cost model (DESIGN.md §16).
 //! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
 //!   `LU_OS` baseline.
 //! - [`trace`] — an Extrae-like execution tracer (ASCII Gantt + Chrome
@@ -69,6 +74,7 @@ pub mod faultplan;
 pub mod lu;
 pub mod matrix;
 pub mod pool;
+pub mod replay;
 pub mod runtime;
 pub mod scalar;
 pub mod serve;

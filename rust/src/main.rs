@@ -21,6 +21,12 @@
 //!                                # requests after disconnects or
 //!                                # transient refusals (jittered
 //!                                # exponential backoff)
+//! mlu replay    bundle.mrb [--rounds 3 --workers W]
+//!               [--sweep steal=off|auto|250|750,static_frac=0.9]
+//!               [--out BENCH_replay.json]  # deterministic capture/replay:
+//!                                 # certify bitwise results + decision
+//!                                 # streams, sweep counterfactual steal
+//!                                 # policies through the cost model (§16)
 //! mlu trace     --n 2000 --variant mb [--sim] [--out trace.json]
 //! mlu fig 14|15|16|17 [--paper] [--out fig.csv]  # simulated paper figures
 //! mlu gepp      --m 768 --kmax 256               # real-mode GEPP curve
@@ -64,6 +70,7 @@ fn main() {
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
         "sclient" => cmd_sclient(&args),
+        "replay" => cmd_replay(&args),
         "trace" => cmd_trace(&args),
         "fig" => cmd_fig(&args),
         "gepp" => cmd_gepp(&args),
@@ -78,12 +85,16 @@ fn main() {
 }
 
 const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
-commands: factorize | chol | qr | solve | batch | serve | sclient | trace | fig {14,15,16,17} | gepp | xla | info
+commands: factorize | chol | qr | solve | batch | serve | sclient | replay | trace | fig {14,15,16,17} | gepp | xla | info
 global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
 solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)
 serve flags: --listen unix:<path>|tcp:<host:port> --workers N --max-pending Q --max-client C --max-dim D --grace-ms G
+             --capture out.mrb (record every scheduling decision into a replay bundle, DESIGN.md §16)
 sclient flags: --connect <addr> --count N --n SIZE --kind lu|chol|qr|solve|mix --prec f32|f64|mix --check
-               --retry N --backoff MS (reconnect + resubmit on disconnects, overloaded/draining rejects, internal failures)";
+               --retry N --backoff MS (reconnect + resubmit on disconnects, overloaded/draining rejects, internal failures)
+replay: mlu replay bundle.mrb [--rounds N --workers W --sweep steal=off|auto|250,static_frac=0.9 --out BENCH_replay.json]
+        re-executes a captured bundle, certifies bitwise results + invariant decision streams (exit 1 on divergence),
+        and with --sweep prices the trace under counterfactual steal policies into the --out JSON";
 
 /// Resolve the BLIS blocking: `--params mc,kc,nc` override, else the
 /// cache-topology-derived defaults. A malformed override is a hard
@@ -589,6 +600,14 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let grace = std::time::Duration::from_millis(args.get("grace-ms", 5000u64));
     let workers = net_cfg.serve.workers;
+    // Snapshot the serve config before `bind` takes ownership — the
+    // capture bundle records it so replay can rebuild the same server.
+    let capture_path = args.get_str("capture", "");
+    let bundle_cfg = malleable_lu::replay::BundleCfg::from_serve(&net_cfg.serve);
+    if !capture_path.is_empty() && !malleable_lu::replay::capture::start() {
+        eprintln!("--capture: another capture is already active in this process");
+        return 1;
+    }
     let daemon = match net::ServeDaemon::bind(&addr, net_cfg) {
         Ok(d) => d,
         Err(e) => {
@@ -607,6 +626,34 @@ fn cmd_serve(args: &Args) -> i32 {
     println!("mlu serve: draining (grace {} ms)", grace.as_millis());
     daemon.drain(grace);
     daemon.shutdown();
+    if !capture_path.is_empty() {
+        match malleable_lu::replay::capture::stop() {
+            Some((decisions, mut requests)) => {
+                // Submission order = id order (ids are dense from 0).
+                requests.sort_by_key(|r| r.id);
+                let bundle = malleable_lu::replay::Bundle {
+                    cfg: bundle_cfg,
+                    requests,
+                    decisions,
+                };
+                let bytes = malleable_lu::replay::bundle::encode(&bundle);
+                if let Err(e) = std::fs::write(&capture_path, &bytes) {
+                    eprintln!("--capture: cannot write {capture_path}: {e}");
+                    return 1;
+                }
+                println!(
+                    "mlu serve: captured {} requests / {} decisions into {capture_path} ({} B)",
+                    bundle.requests.len(),
+                    bundle.decisions.len(),
+                    bytes.len()
+                );
+            }
+            None => {
+                eprintln!("--capture: recorder vanished (no bundle written)");
+                return 1;
+            }
+        }
+    }
     let s = daemon.stats();
     println!(
         "mlu serve: done — conns={} admitted={} delivered={} reaped={} \
@@ -629,6 +676,91 @@ fn cmd_serve(args: &Args) -> i32 {
         return 1;
     }
     0
+}
+
+/// `mlu replay bundle.mrb`: re-execute a captured serve run and certify
+/// it (DESIGN.md §16.4); `--sweep` additionally prices the trace under
+/// counterfactual steal policies into `--out` (§16.6). Exit 1 when
+/// certification is refused — the replay regression suite keys on it.
+fn cmd_replay(args: &Args) -> i32 {
+    use malleable_lu::replay::{bundle, parse_sweep, run_replay, run_sweep};
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: mlu replay <bundle.mrb> [--rounds N --workers W --sweep SPEC --out FILE]");
+        return 2;
+    };
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let bundle = match bundle::decode(&bytes) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "replay: {path} — {} requests, {} decisions, captured on {} workers (steal {})",
+        bundle.requests.len(),
+        bundle.decisions.len(),
+        bundle.cfg.workers,
+        bundle.cfg.steal.name()
+    );
+    let rounds = args.get("rounds", 1usize);
+    let workers = {
+        let w = args.get("workers", 0usize);
+        (w > 0).then_some(w)
+    };
+    let report = match run_replay(&bundle, rounds, workers) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("replay failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render());
+    let sweep_spec = args.get_str("sweep", "");
+    if !sweep_spec.is_empty() {
+        let points = match parse_sweep(&sweep_spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --sweep: {e}");
+                return 2;
+            }
+        };
+        let doc = run_sweep(&bundle, &points);
+        let out = args.get_str("out", "BENCH_replay.json");
+        if let Err(e) = std::fs::write(&out, doc.dump()) {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+        if let Some(rows) = doc.get("points").and_then(|p| p.as_arr()) {
+            println!("sweep: {} policy points -> {out}", rows.len());
+            for r in rows {
+                let name = r.get("policy").and_then(|v| v.as_str()).unwrap_or("?");
+                let gf = r.get("gflops").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let dgf = r
+                    .get("delta_gflops_pct")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                let dlat = r
+                    .get("delta_latency_pct")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                println!(
+                    "  {name:<24} {gf:8.2} GFLOPS  Δgflops {dgf:+7.2}%  Δlatency {dlat:+7.2}%"
+                );
+            }
+        }
+    }
+    if report.certified_ok() {
+        0
+    } else {
+        1
+    }
 }
 
 /// What `mlu sclient` remembers per in-flight request so it can verify

@@ -91,6 +91,28 @@ impl StealPolicy {
             StealPolicy::Fraction(pm) => Some(*pm as f64 / 1000.0),
         }
     }
+
+    /// Stable wire encoding for replay bundles (DESIGN.md §16.3):
+    /// `(tag, per_mille)` with tag 0 = off, 1 = auto, 2 = fixed
+    /// fraction. The per-mille operand is 0 unless tag is 2.
+    pub fn wire_tag(&self) -> (u8, u16) {
+        match self {
+            StealPolicy::Off => (0, 0),
+            StealPolicy::Auto => (1, 0),
+            StealPolicy::Fraction(pm) => (2, *pm),
+        }
+    }
+
+    /// Decode the [`StealPolicy::wire_tag`] encoding; `None` on an
+    /// unknown tag or an out-of-range fraction.
+    pub fn from_wire(tag: u8, per_mille: u16) -> Option<Self> {
+        match tag {
+            0 => Some(StealPolicy::Off),
+            1 => Some(StealPolicy::Auto),
+            2 if per_mille <= 1000 => Some(StealPolicy::Fraction(per_mille)),
+            _ => None,
+        }
+    }
 }
 
 /// Static fraction derived from the crew size and the tile-grid size:

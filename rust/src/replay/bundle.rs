@@ -1,0 +1,624 @@
+//! The versioned **`.mrb` replay-bundle format** — encode/decode for
+//! the capture artifacts of [`super::capture`].
+//!
+//! **The normative byte-level specification is DESIGN.md §16.3** — the
+//! tables there and the codec here must match byte for byte; the
+//! golden-bundle test (`tests/replay_bundle.rs`) pins a committed
+//! fixture's byte image to keep them honest, exactly as the proto pin
+//! tests do for the wire protocol. Summary:
+//!
+//! ```text
+//! bundle   := header config counts request* decision*
+//! header   := magic(4 = "MLRB") version(1) flags(1) reserved(2)
+//! config   := workers(4) bo(4) bi(4) mc(4) kc(4) nc(4)
+//!             steal_tag(1) steal_pm(2) reserved(1)
+//! counts   := n_requests(4) n_decisions(4)
+//! request  := id(8) kind(1) prec(1) priority(1) flags(1) m(4) n(4)
+//!             bo(2) bi(2) deadline_ms(4) client(8) cols_done(4)
+//!             digest(8) data_len(4) rhs_len(4) data rhs
+//! decision := tag(1) reserved(3) ordinal(8) req(8) a(8) b(8)
+//! ```
+//!
+//! All integers little-endian; matrix `data` is column-major IEEE-754
+//! in the request's precision, `rhs` is `f64` (solve requests only).
+//! A schema change **must** bump [`VERSION`] and keep this decoder as
+//! the v1 path — [`decode`] dispatches on the version byte and rejects
+//! unknown versions instead of guessing.
+
+use super::capture::{Decision, DecisionKind};
+use crate::blis::{BlisParams, StealPolicy};
+use crate::factor::FactorKind;
+
+/// Bundle magic, bytes 0–3 of every `.mrb` file.
+pub const MAGIC: [u8; 4] = *b"MLRB";
+/// The bundle version this build writes (header byte 4).
+pub const VERSION: u8 = 1;
+/// Fixed size of the header + config + counts prefix.
+pub const PREFIX_LEN: usize = 8 + 28 + 8;
+/// Fixed (pre-data) bytes of one request record.
+pub const REQ_FIXED: usize = 56;
+/// Size of one decision record.
+pub const DEC_LEN: usize = 36;
+
+/// Request-kind code for an LU factorization (matches the wire
+/// protocol's factor-kind codes for the factor kinds).
+pub const REQ_LU: u8 = 0;
+/// Request-kind code for a Cholesky factorization.
+pub const REQ_CHOL: u8 = 1;
+/// Request-kind code for a QR factorization.
+pub const REQ_QR: u8 = 2;
+/// Request-kind code for a linear-system solve.
+pub const REQ_SOLVE: u8 = 3;
+
+/// Sentinel for "no originating network connection" in the `client`
+/// field.
+pub const NO_CLIENT: u64 = u64::MAX;
+
+/// Map a [`FactorKind`] to its bundle request-kind code.
+pub fn kind_code(kind: FactorKind) -> u8 {
+    match kind {
+        FactorKind::Lu => REQ_LU,
+        FactorKind::Chol => REQ_CHOL,
+        FactorKind::Qr => REQ_QR,
+    }
+}
+
+/// Decode a bundle request-kind code into a [`FactorKind`] (`None` for
+/// [`REQ_SOLVE`] and unknown codes).
+pub fn parse_kind(c: u8) -> Option<FactorKind> {
+    match c {
+        REQ_LU => Some(FactorKind::Lu),
+        REQ_CHOL => Some(FactorKind::Chol),
+        REQ_QR => Some(FactorKind::Qr),
+        _ => None,
+    }
+}
+
+/// Precision code of a scalar type: 0 = `f64`, 1 = `f32`.
+pub fn prec_code<S: crate::scalar::Scalar>() -> u8 {
+    u8::from(std::mem::size_of::<S>() == 4)
+}
+
+/// Precision code of a solve request: 0 = `f64`, 1 = `f32`, 2 = mixed.
+pub fn solve_prec_code(p: crate::solve::SolvePrec) -> u8 {
+    match p {
+        crate::solve::SolvePrec::F64 => 0,
+        crate::solve::SolvePrec::F32 => 1,
+        crate::solve::SolvePrec::Mixed => 2,
+    }
+}
+
+/// Serialize a matrix column-major, little-endian, in its own precision
+/// — the bundle's request-payload encoding. Bit-exact: elements go out
+/// as raw IEEE bits, so capture → replay reconstructs the identical
+/// matrix.
+pub fn mat_to_le<S: crate::scalar::Scalar>(a: &crate::matrix::Mat<S>) -> Vec<u8> {
+    let elem = std::mem::size_of::<S>();
+    let mut out = Vec::with_capacity(a.data().len() * elem);
+    for &v in a.data() {
+        let bits = v.to_bits_u64();
+        if elem == 4 {
+            out.extend_from_slice(&(bits as u32).to_le_bytes());
+        } else {
+            out.extend_from_slice(&bits.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Serialize a right-hand side (`f64` little-endian).
+pub fn rhs_to_le(b: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(b.len() * 8);
+    for v in b {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// The serve configuration a capture ran under — enough to rebuild an
+/// equivalent [`crate::serve::ServeConfig`] at replay time. The cost
+/// model is deliberately *not* in the bundle: it is part of the build
+/// (DESIGN.md §16.5), so replaying a bundle under a recalibrated model
+/// reports divergence on the lease-sizing records — by design.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct BundleCfg {
+    /// Pool workers the capture served with.
+    pub workers: u32,
+    /// Server-default outer block size.
+    pub bo: u32,
+    /// Server-default inner (panel) block size.
+    pub bi: u32,
+    /// BLIS `m_c` in effect.
+    pub mc: u32,
+    /// BLIS `k_c` in effect.
+    pub kc: u32,
+    /// BLIS `n_c` in effect.
+    pub nc: u32,
+    /// The steal policy the capture ran under.
+    pub steal: StealPolicy,
+}
+
+impl BundleCfg {
+    /// Capture the relevant parts of a live serve configuration.
+    pub fn from_serve(cfg: &crate::serve::ServeConfig) -> Self {
+        Self {
+            workers: cfg.workers as u32,
+            bo: cfg.bo as u32,
+            bi: cfg.bi as u32,
+            mc: cfg.params.mc as u32,
+            kc: cfg.params.kc as u32,
+            nc: cfg.params.nc as u32,
+            steal: cfg.params.steal,
+        }
+    }
+
+    /// Rebuild the serve configuration for a replay (entry policy and
+    /// cost model come from the build's defaults — see the type docs).
+    pub fn to_serve(&self) -> crate::serve::ServeConfig {
+        crate::serve::ServeConfig {
+            workers: self.workers as usize,
+            bo: self.bo as usize,
+            bi: self.bi as usize,
+            params: BlisParams {
+                mc: self.mc as usize,
+                kc: self.kc as usize,
+                nc: self.nc as usize,
+                steal: self.steal,
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// One captured request: the replayable workload payload plus the
+/// capture run's outcome (digest + flags).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReqRecord {
+    /// Request id assigned by the capture run's server (dense from 0).
+    pub id: u64,
+    /// Request kind ([`REQ_LU`] … [`REQ_SOLVE`]).
+    pub kind: u8,
+    /// Precision code: 0 = f64, 1 = f32; for solves the
+    /// [`crate::solve::SolvePrec`] code (0 = f64, 1 = f32, 2 = mixed).
+    pub prec: u8,
+    /// Scheduling priority.
+    pub priority: u8,
+    /// Whether the capture run cancelled the request (handle, deadline,
+    /// malformed shape). Cancelled/failed requests replay but are not
+    /// certified — their outcome depended on wall-clock timing
+    /// (DESIGN.md §16.4).
+    pub cancelled: bool,
+    /// Whether the capture run completed it with a typed error.
+    pub failed: bool,
+    /// Matrix rows.
+    pub m: u32,
+    /// Matrix columns.
+    pub n: u32,
+    /// Per-request outer block override (0 = server default).
+    pub bo: u16,
+    /// Per-request inner block override (0 = server default).
+    pub bi: u16,
+    /// Captured deadline in ms (0 = none). Replay drops deadlines —
+    /// they are wall-clock, hence environmental.
+    pub deadline_ms: u32,
+    /// Originating connection id, [`NO_CLIENT`] for in-process.
+    pub client: u64,
+    /// Columns the capture run committed.
+    pub cols_done: u32,
+    /// FNV-1a digest of the capture run's result bytes
+    /// ([`super::factor_digest`] / [`super::solve_digest`]).
+    pub digest: u64,
+    /// Column-major matrix payload, little-endian in `prec`.
+    pub data: Vec<u8>,
+    /// Right-hand side (`f64` LE), solve requests only.
+    pub rhs: Vec<u8>,
+}
+
+/// A decoded replay bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bundle {
+    /// The serve configuration of the capture run.
+    pub cfg: BundleCfg,
+    /// Captured requests, in submission order.
+    pub requests: Vec<ReqRecord>,
+    /// The captured decision stream, in ordinal order.
+    pub decisions: Vec<Decision>,
+}
+
+/// Decode failure: bad magic, unknown version, truncated or
+/// inconsistent records.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BundleError(pub String);
+
+impl std::fmt::Display for BundleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bundle error: {}", self.0)
+    }
+}
+
+impl std::error::Error for BundleError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, BundleError> {
+    Err(BundleError(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitives (the proto idiom, kept local so the bundle
+// codec stays self-contained).
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], BundleError> {
+        if self.i + n > self.b.len() {
+            return err(format!(
+                "truncated bundle: need {} bytes at offset {}, have {}",
+                n,
+                self.i,
+                self.b.len() - self.i
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, BundleError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, BundleError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, BundleError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, BundleError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn done(&self) -> Result<(), BundleError> {
+        if self.i != self.b.len() {
+            return err(format!(
+                "{} trailing bytes after the last record",
+                self.b.len() - self.i
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode.
+
+/// Serialize a bundle in the current ([`VERSION`]) format.
+pub fn encode(bundle: &Bundle) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        PREFIX_LEN
+            + bundle
+                .requests
+                .iter()
+                .map(|r| REQ_FIXED + r.data.len() + r.rhs.len())
+                .sum::<usize>()
+            + bundle.decisions.len() * DEC_LEN,
+    );
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(0); // flags
+    put_u16(&mut out, 0); // reserved
+    let c = &bundle.cfg;
+    put_u32(&mut out, c.workers);
+    put_u32(&mut out, c.bo);
+    put_u32(&mut out, c.bi);
+    put_u32(&mut out, c.mc);
+    put_u32(&mut out, c.kc);
+    put_u32(&mut out, c.nc);
+    let (steal_tag, steal_pm) = c.steal.wire_tag();
+    out.push(steal_tag);
+    put_u16(&mut out, steal_pm);
+    out.push(0); // reserved
+    put_u32(&mut out, bundle.requests.len() as u32);
+    put_u32(&mut out, bundle.decisions.len() as u32);
+    for r in &bundle.requests {
+        put_u64(&mut out, r.id);
+        out.push(r.kind);
+        out.push(r.prec);
+        out.push(r.priority);
+        out.push(u8::from(r.cancelled) | (u8::from(r.failed) << 1));
+        put_u32(&mut out, r.m);
+        put_u32(&mut out, r.n);
+        put_u16(&mut out, r.bo);
+        put_u16(&mut out, r.bi);
+        put_u32(&mut out, r.deadline_ms);
+        put_u64(&mut out, r.client);
+        put_u32(&mut out, r.cols_done);
+        put_u64(&mut out, r.digest);
+        put_u32(&mut out, r.data.len() as u32);
+        put_u32(&mut out, r.rhs.len() as u32);
+        out.extend_from_slice(&r.data);
+        out.extend_from_slice(&r.rhs);
+    }
+    for d in &bundle.decisions {
+        out.push(d.kind.tag());
+        out.extend_from_slice(&[0, 0, 0]); // reserved
+        put_u64(&mut out, d.ordinal);
+        put_u64(&mut out, d.req);
+        put_u64(&mut out, d.a);
+        put_u64(&mut out, d.b);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decode.
+
+/// Parse a bundle, dispatching on the header's version byte. Unknown
+/// versions are rejected with the version named — never guessed at.
+pub fn decode(bytes: &[u8]) -> Result<Bundle, BundleError> {
+    if bytes.len() < 5 {
+        return err("bundle shorter than its header");
+    }
+    if bytes[0..4] != MAGIC {
+        return err(format!(
+            "bad magic {:02x}{:02x}{:02x}{:02x} (want 4d4c5242 \"MLRB\")",
+            bytes[0], bytes[1], bytes[2], bytes[3]
+        ));
+    }
+    match bytes[4] {
+        1 => decode_v1(bytes),
+        v => err(format!("unsupported bundle version {v} (this build reads 1)")),
+    }
+}
+
+/// The v1 decoder — kept as a distinct entry point so future versions
+/// must preserve it (the golden-bundle test pins it).
+pub fn decode_v1(bytes: &[u8]) -> Result<Bundle, BundleError> {
+    let mut c = Cursor::new(bytes);
+    c.take(4)?; // magic (checked by decode; re-verified cheaply here)
+    let ver = c.u8()?;
+    if ver != 1 {
+        return err(format!("decode_v1 fed version {ver}"));
+    }
+    c.u8()?; // flags
+    c.u16()?; // reserved
+    let workers = c.u32()?;
+    let bo = c.u32()?;
+    let bi = c.u32()?;
+    let mc = c.u32()?;
+    let kc = c.u32()?;
+    let nc = c.u32()?;
+    let steal_tag = c.u8()?;
+    let steal_pm = c.u16()?;
+    c.u8()?; // reserved
+    let steal = StealPolicy::from_wire(steal_tag, steal_pm)
+        .ok_or_else(|| BundleError(format!("bad steal policy tag {steal_tag}/{steal_pm}")))?;
+    let n_req = c.u32()? as usize;
+    let n_dec = c.u32()? as usize;
+    let mut requests = Vec::with_capacity(n_req.min(1 << 16));
+    for _ in 0..n_req {
+        let id = c.u64()?;
+        let kind = c.u8()?;
+        if kind > REQ_SOLVE {
+            return err(format!("unknown request kind code {kind}"));
+        }
+        let prec = c.u8()?;
+        if prec > 2 || (kind != REQ_SOLVE && prec > 1) {
+            return err(format!("bad precision code {prec} for kind {kind}"));
+        }
+        let priority = c.u8()?;
+        let flags = c.u8()?;
+        let m = c.u32()?;
+        let n = c.u32()?;
+        let bo = c.u16()?;
+        let bi = c.u16()?;
+        let deadline_ms = c.u32()?;
+        let client = c.u64()?;
+        let cols_done = c.u32()?;
+        let digest = c.u64()?;
+        let data_len = c.u32()? as usize;
+        let rhs_len = c.u32()? as usize;
+        let elem = if kind == REQ_SOLVE || prec == 0 { 8 } else { 4 };
+        let want = (m as usize)
+            .checked_mul(n as usize)
+            .and_then(|e| e.checked_mul(elem))
+            .ok_or_else(|| BundleError(format!("matrix {m}x{n} overflows")))?;
+        if data_len != want {
+            return err(format!(
+                "request {id}: data length {data_len} does not match {m}x{n} in prec {prec}"
+            ));
+        }
+        if kind == REQ_SOLVE {
+            if rhs_len != m as usize * 8 {
+                return err(format!("solve request {id}: rhs length {rhs_len} != {}", m * 8));
+            }
+        } else if rhs_len != 0 {
+            return err(format!("factor request {id} carries a {rhs_len}-byte rhs"));
+        }
+        let data = c.take(data_len)?.to_vec();
+        let rhs = c.take(rhs_len)?.to_vec();
+        requests.push(ReqRecord {
+            id,
+            kind,
+            prec,
+            priority,
+            cancelled: flags & 1 != 0,
+            failed: flags & 2 != 0,
+            m,
+            n,
+            bo,
+            bi,
+            deadline_ms,
+            client,
+            cols_done,
+            digest,
+            data,
+            rhs,
+        });
+    }
+    let mut decisions = Vec::with_capacity(n_dec.min(1 << 20));
+    for i in 0..n_dec {
+        let tag = c.u8()?;
+        c.take(3)?; // reserved
+        let ordinal = c.u64()?;
+        let req = c.u64()?;
+        let a = c.u64()?;
+        let b = c.u64()?;
+        let kind = DecisionKind::from_tag(tag)
+            .ok_or_else(|| BundleError(format!("decision {i}: unknown tag {tag}")))?;
+        decisions.push(Decision {
+            ordinal,
+            kind,
+            req,
+            a,
+            b,
+        });
+    }
+    c.done()?;
+    Ok(Bundle {
+        cfg: BundleCfg {
+            workers,
+            bo,
+            bi,
+            mc,
+            kc,
+            nc,
+            steal,
+        },
+        requests,
+        decisions,
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Bundle {
+        Bundle {
+            cfg: BundleCfg {
+                workers: 3,
+                bo: 16,
+                bi: 4,
+                mc: 16,
+                kc: 8,
+                nc: 18,
+                steal: StealPolicy::Fraction(500),
+            },
+            requests: vec![ReqRecord {
+                id: 0,
+                kind: REQ_LU,
+                prec: 0,
+                priority: 2,
+                cancelled: false,
+                failed: false,
+                m: 2,
+                n: 2,
+                bo: 0,
+                bi: 0,
+                deadline_ms: 0,
+                client: NO_CLIENT,
+                cols_done: 2,
+                digest: 0x1234_5678_9abc_def0,
+                data: (0..32).collect(),
+                rhs: vec![],
+            }],
+            decisions: vec![
+                Decision {
+                    ordinal: 0,
+                    kind: DecisionKind::Submit,
+                    req: 0,
+                    a: (2 << 32) | 2,
+                    b: 0,
+                },
+                Decision {
+                    ordinal: 1,
+                    kind: DecisionKind::LeaseGrant,
+                    req: 0,
+                    a: 2,
+                    b: 1.5f64.to_bits(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_header_bytes() {
+        let b = sample();
+        let bytes = encode(&b);
+        assert_eq!(&bytes[0..4], b"MLRB");
+        assert_eq!(bytes[4], 1);
+        assert_eq!(decode(&bytes).unwrap(), b);
+        assert_eq!(
+            bytes.len(),
+            PREFIX_LEN + REQ_FIXED + 32 + 2 * DEC_LEN,
+            "fixed sizes drifted from the layout constants"
+        );
+    }
+
+    #[test]
+    fn bad_magic_version_and_truncation_rejected() {
+        let bytes = encode(&sample());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().0.contains("magic"));
+        let mut bad = bytes.clone();
+        bad[4] = 2;
+        assert!(decode(&bad).unwrap_err().0.contains("version 2"));
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode(&long).unwrap_err().0.contains("trailing"));
+    }
+
+    #[test]
+    fn inconsistent_payload_lengths_rejected() {
+        let mut b = sample();
+        b.requests[0].data.pop();
+        assert!(decode(&encode(&b)).is_err());
+        let mut b = sample();
+        b.requests[0].rhs = vec![0; 4];
+        assert!(decode(&encode(&b)).is_err());
+    }
+
+    #[test]
+    fn steal_policy_wire_roundtrips() {
+        for p in [
+            StealPolicy::Off,
+            StealPolicy::Auto,
+            StealPolicy::Fraction(0),
+            StealPolicy::Fraction(750),
+        ] {
+            let (t, pm) = p.wire_tag();
+            assert_eq!(StealPolicy::from_wire(t, pm), Some(p));
+        }
+        assert_eq!(StealPolicy::from_wire(3, 0), None);
+        assert_eq!(StealPolicy::from_wire(2, 1001), None);
+    }
+}

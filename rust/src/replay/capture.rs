@@ -1,0 +1,313 @@
+//! The **capture recorder**: a global, opt-in decision log the serve
+//! stack feeds while it schedules (DESIGN.md §16.2).
+//!
+//! Mirrors the [`crate::trace`] recorder idiom: one process-wide
+//! recorder, armed with [`start`] and drained with [`stop`], observed
+//! from the hot paths through a single relaxed atomic load ([`active`])
+//! so a disarmed build records nothing and pays nothing. The serve
+//! layer calls [`record`] at every scheduling decision point — request
+//! submission, admission verdict, lease grant/revocation, panel
+//! checkpoint, steal-count fold, floater donation, early-termination
+//! trigger — and [`record_request`]/[`record_result`] to capture the
+//! workload payloads and result digests that make a bundle replayable.
+//!
+//! Exactly one capture may be active per process (the decision ordinal
+//! space is global); [`start`] returns `false` instead of nesting.
+
+use super::bundle::ReqRecord;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// What kind of scheduling decision a [`Decision`] records. The tag
+/// values are the wire encoding (bundle decision records, DESIGN.md
+/// §16.3) and must never be renumbered — add new kinds at the end.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// A request entered the queue. `a` packs the dims
+    /// (`m << 32 | n`), `b` packs the scheduling meta
+    /// (`kind | prec << 8 | priority << 16 | bo << 32 | bi << 48`).
+    Submit = 1,
+    /// The daemon's admission verdict for a wire request. `req` is the
+    /// *wire* id, `a` the connection id, `b` packs
+    /// `verdict | m << 8 | n << 32` (verdict 0 = admitted, else the
+    /// [`crate::serve::proto::RejectCode`] byte; dims saturate at 24
+    /// bits).
+    Admission = 2,
+    /// A crew lease was registered for a request. `a` is the priority,
+    /// `b` the initial remaining-cost estimate (`f64` bits).
+    LeaseGrant = 3,
+    /// A panel checkpoint refreshed the lease's remaining-cost
+    /// estimate. `a` is the committed-column count `k`, `b` the
+    /// refreshed estimate (`f64` bits).
+    Checkpoint = 4,
+    /// The per-checkpoint stolen-tile fold (DESIGN.md §13). `a` is
+    /// `k`, `b` packs `stolen << 32 | tiles` (the deltas since the
+    /// previous checkpoint, each saturating at `u32::MAX`).
+    StealDelta = 5,
+    /// A floating worker donated itself to the most starved crew (the
+    /// WS rule across problems). `a` is the registry epoch at the
+    /// join, `b` is 0.
+    WsJoin = 6,
+    /// Early termination fired. `a` is the checkpoint `k` (0 when
+    /// unknown), `b` the trigger: 1 = request deadline expired, 2 =
+    /// daemon watchdog force-cancel.
+    EtTrigger = 7,
+    /// The lease was withdrawn at request completion. `a` packs
+    /// `cols_done | cancelled << 32 | poisoned << 33`, `b` is 0.
+    LeaseRevoke = 8,
+}
+
+impl DecisionKind {
+    /// Wire tag byte (bundle decision records).
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire tag byte.
+    pub fn from_tag(t: u8) -> Option<Self> {
+        match t {
+            1 => Some(Self::Submit),
+            2 => Some(Self::Admission),
+            3 => Some(Self::LeaseGrant),
+            4 => Some(Self::Checkpoint),
+            5 => Some(Self::StealDelta),
+            6 => Some(Self::WsJoin),
+            7 => Some(Self::EtTrigger),
+            8 => Some(Self::LeaseRevoke),
+            _ => None,
+        }
+    }
+
+    /// Short lowercase name for reports and divergence rendering.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Submit => "submit",
+            Self::Admission => "admission",
+            Self::LeaseGrant => "lease-grant",
+            Self::Checkpoint => "checkpoint",
+            Self::StealDelta => "steal-delta",
+            Self::WsJoin => "ws-join",
+            Self::EtTrigger => "et-trigger",
+            Self::LeaseRevoke => "lease-revoke",
+        }
+    }
+
+    /// Whether records of this kind are **invariant** (must reproduce
+    /// bit-for-bit when the bundle is replayed) or **environmental**
+    /// (timing artifacts of the capture run, preserved as context and
+    /// consumed by the counterfactual engine). See DESIGN.md §16.4 for
+    /// the normative split.
+    pub fn invariant(self) -> bool {
+        matches!(
+            self,
+            Self::Submit | Self::LeaseGrant | Self::Checkpoint | Self::LeaseRevoke
+        )
+    }
+}
+
+/// One recorded scheduling decision. `a`/`b` are kind-specific packed
+/// operands (see [`DecisionKind`]); `ordinal` is the global capture
+/// sequence number (gapless from 0).
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct Decision {
+    /// Global capture ordinal (position in the decision stream).
+    pub ordinal: u64,
+    /// What was decided.
+    pub kind: DecisionKind,
+    /// The request id the decision concerns (wire id for
+    /// [`DecisionKind::Admission`]).
+    pub req: u64,
+    /// First kind-specific operand.
+    pub a: u64,
+    /// Second kind-specific operand.
+    pub b: u64,
+}
+
+impl Decision {
+    /// Render the decision for divergence reports and `mlu replay`
+    /// output, decoding the packed operands per kind.
+    pub fn describe(&self) -> String {
+        let d = match self.kind {
+            DecisionKind::Submit => format!(
+                "dims {}x{} meta {:#x}",
+                self.a >> 32,
+                self.a & 0xffff_ffff,
+                self.b
+            ),
+            DecisionKind::Admission => format!(
+                "client {} verdict {} dims {}x{}",
+                self.a,
+                self.b & 0xff,
+                (self.b >> 8) & 0xff_ffff,
+                (self.b >> 32) & 0xff_ffff
+            ),
+            DecisionKind::LeaseGrant => format!(
+                "priority {} remaining {:.3}s",
+                self.a,
+                f64::from_bits(self.b)
+            ),
+            DecisionKind::Checkpoint => {
+                format!("k {} remaining {:.3}s", self.a, f64::from_bits(self.b))
+            }
+            DecisionKind::StealDelta => format!(
+                "k {} stolen {} tiles {}",
+                self.a,
+                self.b >> 32,
+                self.b & 0xffff_ffff
+            ),
+            DecisionKind::WsJoin => format!("epoch {}", self.a),
+            DecisionKind::EtTrigger => format!(
+                "k {} trigger {}",
+                self.a,
+                if self.b == 2 { "watchdog" } else { "deadline" }
+            ),
+            DecisionKind::LeaseRevoke => format!(
+                "cols_done {} cancelled {} poisoned {}",
+                self.a & 0xffff_ffff,
+                (self.a >> 32) & 1,
+                (self.a >> 33) & 1
+            ),
+        };
+        format!(
+            "#{} {} req{} [{}]: {}",
+            self.ordinal,
+            self.kind.name(),
+            self.req,
+            if self.kind.invariant() { "inv" } else { "env" },
+            d
+        )
+    }
+}
+
+/// Pack a steal-delta pair into [`DecisionKind::StealDelta`]'s `b`
+/// operand (`stolen << 32 | tiles`, each saturating at `u32::MAX`).
+pub fn pack_delta(stolen: u64, tiles: u64) -> u64 {
+    (stolen.min(u64::from(u32::MAX)) << 32) | tiles.min(u64::from(u32::MAX))
+}
+
+struct CapState {
+    decisions: Vec<Decision>,
+    requests: Vec<ReqRecord>,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<CapState>> = Mutex::new(None);
+
+/// Whether a capture is currently armed. One relaxed load — this is
+/// the only cost a non-capturing run pays at each decision point.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Arm the process-wide capture. Returns `false` (and records nothing)
+/// if a capture is already active — captures do not nest.
+pub fn start() -> bool {
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    if ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    *st = Some(CapState {
+        decisions: Vec::new(),
+        requests: Vec::new(),
+    });
+    ACTIVE.store(true, Ordering::Release);
+    true
+}
+
+/// Disarm the capture and take everything it recorded: the decision
+/// stream (in ordinal order) and the request records (in submission
+/// order). Returns `None` if no capture was active.
+pub fn stop() -> Option<(Vec<Decision>, Vec<ReqRecord>)> {
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    ACTIVE.store(false, Ordering::Release);
+    st.take().map(|s| (s.decisions, s.requests))
+}
+
+/// Append one decision to the active capture (no-op when disarmed).
+/// The ordinal is assigned under the log lock, so the stream is
+/// gapless and totally ordered even with concurrent recorders.
+pub fn record(kind: DecisionKind, req: u64, a: u64, b: u64) {
+    if !active() {
+        return;
+    }
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(s) = st.as_mut() {
+        let ordinal = s.decisions.len() as u64;
+        s.decisions.push(Decision {
+            ordinal,
+            kind,
+            req,
+            a,
+            b,
+        });
+    }
+}
+
+/// Capture one request's replayable payload (called by
+/// [`crate::serve::LuServer::submit`]/`submit_solve` while a capture is
+/// armed). No-op when disarmed.
+pub fn record_request(rec: ReqRecord) {
+    if !active() {
+        return;
+    }
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(s) = st.as_mut() {
+        s.requests.push(rec);
+    }
+}
+
+/// Attach the completion outcome (result digest, committed columns,
+/// flags) to a captured request. No-op when disarmed or when `id` was
+/// never captured (e.g. submitted before [`start`]).
+pub fn record_result(id: u64, digest: u64, cols_done: u32, cancelled: bool, failed: bool) {
+    if !active() {
+        return;
+    }
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(s) = st.as_mut() {
+        if let Some(r) = s.requests.iter_mut().find(|r| r.id == id) {
+            r.digest = digest;
+            r.cols_done = cols_done;
+            r.cancelled = cancelled;
+            r.failed = failed;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tags_roundtrip_and_split_is_stable() {
+        for tag in 1..=8u8 {
+            let k = DecisionKind::from_tag(tag).unwrap();
+            assert_eq!(k.tag(), tag);
+        }
+        assert!(DecisionKind::from_tag(0).is_none());
+        assert!(DecisionKind::from_tag(9).is_none());
+        // The invariant/environmental split is part of the v1 format
+        // contract (DESIGN.md §16.4) — changing it is a version bump.
+        let inv: Vec<u8> = (1..=8)
+            .filter(|&t| DecisionKind::from_tag(t).unwrap().invariant())
+            .collect();
+        assert_eq!(inv, vec![1, 3, 4, 8]);
+    }
+
+    #[test]
+    fn describe_names_every_kind() {
+        for tag in 1..=8u8 {
+            let d = Decision {
+                ordinal: 7,
+                kind: DecisionKind::from_tag(tag).unwrap(),
+                req: 3,
+                a: 1,
+                b: 2,
+            };
+            let s = d.describe();
+            assert!(s.contains("req3"), "{s}");
+            assert!(s.contains("#7"), "{s}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! §replay — **deterministic scheduler capture/replay with
+//! counterfactual policy sweeps** (DESIGN.md §16).
+//!
+//! The schedule-invariance property (`tests/steal_agree.rs`, DESIGN.md
+//! §8/§13) proves that WS donations, hybrid tile stealing, and crew-size
+//! changes never change a result bit. This module turns that test
+//! assertion into an ops subsystem:
+//!
+//! - [`capture`] — a global, opt-in recorder the serve stack feeds at
+//!   every scheduling decision point (`mlu serve --capture out.mrb`):
+//!   lease grants/revocations, panel checkpoints, per-checkpoint steal
+//!   counts, WS joins, ET triggers, daemon admission verdicts.
+//! - [`bundle`] — the compact versioned `.mrb` artifact holding the
+//!   serve configuration, the request payloads + result digests, and
+//!   the decision stream.
+//! - [`replayer`] — `mlu replay bundle.mrb`: re-executes the captured
+//!   workload, certifies byte-identical results (via the digests below)
+//!   and decision-stream equality on the **invariant** subset
+//!   (DESIGN.md §16.4), and reports the first divergence with full
+//!   context instead of silently continuing.
+//! - [`sweep`] — the counterfactual engine: re-prices a captured trace
+//!   under alternate [`crate::blis::StealPolicy`] points with the
+//!   [`crate::sim`] cost model (`mlu replay --sweep steal=0|250|500|750`),
+//!   emitting per-policy predicted GFLOPS/latency deltas into
+//!   `BENCH_replay.json`.
+
+pub mod bundle;
+pub mod capture;
+pub mod replayer;
+pub mod sweep;
+
+pub use bundle::{Bundle, BundleCfg, BundleError, ReqRecord};
+pub use capture::{Decision, DecisionKind};
+pub use replayer::{run_replay, Divergence, ReplayReport};
+pub use sweep::{parse_sweep, run_sweep, PolicyPoint};
+
+use crate::scalar::Scalar;
+use crate::serve::{JobResult, SolveJobResult};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a/64 over `u64` words — the digest primitive for
+/// result certification. Word-wise (not byte-wise) keeps digesting a
+/// large factor cheap while remaining order- and value-sensitive.
+#[derive(Debug, Copy, Clone)]
+pub struct Digest(u64);
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest {
+    /// Fresh digest at the FNV offset basis.
+    pub fn new() -> Self {
+        Self(FNV_OFFSET)
+    }
+
+    /// Fold one word.
+    pub fn push(&mut self, w: u64) {
+        self.0 ^= w;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    /// The digest value.
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Digest of a factorization result: every factor element's raw bits
+/// (via [`Scalar::to_bits_u64`]) plus pivots, Householder scalars,
+/// committed-column count, and the cancelled flag. Two results digest
+/// equal iff they are bitwise identical — the §8 invariant reduced to
+/// one `u64` the bundle can carry.
+pub fn factor_digest<S: Scalar>(res: &JobResult<S>) -> u64 {
+    let mut d = Digest::new();
+    for &v in res.a.data() {
+        d.push(v.to_bits_u64());
+    }
+    for &p in &res.ipiv {
+        d.push(p as u64);
+    }
+    for &t in &res.tau {
+        d.push(t.to_bits_u64());
+    }
+    d.push(res.cols_done as u64);
+    d.push(u64::from(res.cancelled));
+    d.value()
+}
+
+/// Digest of a solve result: the solution's bits plus refinement
+/// count, backward error, and the convergence/cancellation flags.
+pub fn solve_digest(res: &SolveJobResult) -> u64 {
+    let mut d = Digest::new();
+    for &x in &res.x {
+        d.push(x.to_bits());
+    }
+    d.push(res.refine_iters as u64);
+    d.push(res.backward_error.to_bits());
+    d.push(u64::from(res.converged));
+    d.push(u64::from(res.cancelled));
+    d.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::FactorKind;
+    use crate::matrix::Matrix;
+
+    #[test]
+    fn digest_is_order_and_value_sensitive() {
+        let mut a = Digest::new();
+        a.push(1);
+        a.push(2);
+        let mut b = Digest::new();
+        b.push(2);
+        b.push(1);
+        assert_ne!(a.value(), b.value());
+        let mut c = Digest::new();
+        c.push(1);
+        c.push(2);
+        assert_eq!(a.value(), c.value());
+    }
+
+    #[test]
+    fn factor_digest_tracks_every_field() {
+        let base = JobResult::<f64> {
+            id: 0,
+            kind: FactorKind::Lu,
+            a: Matrix::random(8, 8, 3),
+            ipiv: vec![1, 2, 3],
+            tau: vec![],
+            cols_done: 8,
+            cancelled: false,
+            secs: 0.0,
+            error: None,
+        };
+        let d0 = factor_digest(&base);
+        let mut flipped = JobResult::<f64> {
+            a: base.a.clone(),
+            ipiv: base.ipiv.clone(),
+            tau: vec![],
+            ..base
+        };
+        flipped.a.data_mut()[5] += 1e-16;
+        assert_ne!(factor_digest(&flipped), d0, "one-ulp change must show");
+        let repiv = JobResult::<f64> {
+            a: base.a.clone(),
+            ipiv: vec![1, 2, 4],
+            tau: vec![],
+            ..base
+        };
+        assert_ne!(factor_digest(&repiv), d0);
+        let cut = JobResult::<f64> {
+            a: base.a.clone(),
+            ipiv: base.ipiv.clone(),
+            tau: vec![],
+            cols_done: 7,
+            cancelled: true,
+            ..base
+        };
+        assert_ne!(factor_digest(&cut), d0);
+    }
+}

@@ -1,0 +1,397 @@
+//! The **deterministic replayer**: re-execute a captured bundle and
+//! certify it against the capture run (DESIGN.md §16.4).
+//!
+//! Replay rebuilds the serve configuration from the bundle, re-submits
+//! every captured request in its original submission order (ids are
+//! dense from 0 in both runs, so captured id `i` maps to replayed id
+//! `i` positionally), runs the workload under a fresh capture, and then
+//! compares:
+//!
+//! 1. **Results, bitwise** — the FNV digest of every replayed result
+//!    against the digest the capture run recorded
+//!    ([`super::factor_digest`] / [`super::solve_digest`]).
+//! 2. **Decision streams on the invariant subset** — per request, the
+//!    subsequence of [`DecisionKind`]s with `invariant() == true`
+//!    (submit, lease grant, checkpoints, lease revoke) must reproduce
+//!    operand-for-operand. Environmental records (admission, steal
+//!    deltas, WS joins, ET triggers) are timing artifacts of the capture
+//!    machine; they are *context*, compared never, reported always.
+//!
+//! Certification is all-or-nothing: the first mismatch produces a
+//! [`Divergence`] naming the exact captured ordinal, and the report
+//! refuses to certify. Requests the capture run cancelled or failed are
+//! replayed but **skipped** from certification — their outcome depended
+//! on wall-clock timing (deadlines, watchdogs, injected faults), which
+//! replay deliberately does not reproduce.
+
+use super::bundle::{Bundle, ReqRecord, NO_CLIENT, REQ_SOLVE};
+use super::capture::{self, Decision};
+use crate::factor::FactorKind;
+use crate::matrix::{Mat, Matrix};
+use crate::scalar::Scalar;
+use crate::serve::{JobHandle, JobResult, LuRequest, LuServer, SolveJobResult, SolveRequest};
+use crate::solve::SolvePrec;
+
+/// Why and where a replay stopped matching its capture.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    /// Ordinal (in the *captured* stream) of the first diverging record.
+    pub ordinal: u64,
+    /// The request the diverging record belongs to (captured id).
+    pub req: u64,
+    /// What the capture recorded at that point, rendered.
+    pub expected: String,
+    /// What the replay produced instead (`None`: the replay's invariant
+    /// stream for this request ended early).
+    pub got: Option<String>,
+    /// The captured decisions around the divergence, rendered as an
+    /// event strip with the culprit marked
+    /// ([`crate::trace::ascii_event_strip`]).
+    pub context: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "first divergence at captured ordinal {} (req{}):",
+            self.ordinal, self.req
+        )?;
+        writeln!(f, "  expected: {}", self.expected)?;
+        match &self.got {
+            Some(g) => writeln!(f, "  replayed: {g}")?,
+            None => writeln!(f, "  replayed: (stream ended)")?,
+        }
+        write!(f, "context:\n{}", self.context)
+    }
+}
+
+/// Outcome of [`run_replay`].
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Requests in the bundle.
+    pub requests: usize,
+    /// Requests certified bitwise + decision-stream identical.
+    pub certified: usize,
+    /// Requests skipped (capture run cancelled/failed them).
+    pub skipped: usize,
+    /// Decisions in the captured stream.
+    pub captured_decisions: usize,
+    /// Decisions the (last) replay round recorded.
+    pub replayed_decisions: usize,
+    /// Replay rounds executed.
+    pub rounds: usize,
+    /// First divergence, if certification failed.
+    pub divergence: Option<Divergence>,
+}
+
+impl ReplayReport {
+    /// Whether every certifiable request reproduced exactly.
+    pub fn certified_ok(&self) -> bool {
+        self.divergence.is_none()
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "replay: {} requests ({} certified, {} skipped), {} captured / {} replayed decisions, {} round(s)\n",
+            self.requests,
+            self.certified,
+            self.skipped,
+            self.captured_decisions,
+            self.replayed_decisions,
+            self.rounds
+        );
+        match &self.divergence {
+            None => out.push_str("CERTIFIED: results and invariant decision streams identical\n"),
+            Some(d) => {
+                out.push_str("NOT CERTIFIED\n");
+                out.push_str(&format!("{d}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// What one replay round produced, per request (positional = replayed
+/// id).
+struct ReplayRound {
+    decisions: Vec<Decision>,
+    requests: Vec<ReqRecord>,
+}
+
+/// Re-execute `bundle` `rounds` times and certify each round against the
+/// capture. `workers` overrides the captured worker count (certification
+/// must still pass — schedule invariance is the whole point). Returns
+/// `Err` only for structural failures (another capture active, malformed
+/// bundle); divergence is reported *in* the report, not as an error.
+pub fn run_replay(
+    bundle: &Bundle,
+    rounds: usize,
+    workers: Option<usize>,
+) -> Result<ReplayReport, String> {
+    let rounds = rounds.max(1);
+    let mut report = ReplayReport {
+        requests: bundle.requests.len(),
+        certified: 0,
+        skipped: bundle
+            .requests
+            .iter()
+            .filter(|r| r.cancelled || r.failed)
+            .count(),
+        captured_decisions: bundle.decisions.len(),
+        replayed_decisions: 0,
+        rounds: 0,
+        divergence: None,
+    };
+    for _ in 0..rounds {
+        let round = replay_once(bundle, workers)?;
+        report.replayed_decisions = round.decisions.len();
+        report.rounds += 1;
+        report.certified = 0;
+        if let Some(d) = certify_round(bundle, &round) {
+            report.divergence = Some(d);
+            return Ok(report);
+        }
+        report.certified = report.requests - report.skipped;
+    }
+    Ok(report)
+}
+
+fn mat_from_le<S: Scalar>(m: usize, n: usize, bytes: &[u8]) -> Mat<S> {
+    let mut a = Mat::<S>::zeros(m, n);
+    let elem = std::mem::size_of::<S>();
+    for (v, chunk) in a.data_mut().iter_mut().zip(bytes.chunks_exact(elem)) {
+        *v = if elem == 8 {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(chunk);
+            S::from_f64(f64::from_le_bytes(b))
+        } else {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(chunk);
+            S::from_f64(f64::from(f32::from_le_bytes(b)))
+        };
+    }
+    a
+}
+
+fn rhs_from_le(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(c);
+            f64::from_le_bytes(b)
+        })
+        .collect()
+}
+
+enum AnyHandle {
+    F64(JobHandle<JobResult<f64>>),
+    F32(JobHandle<JobResult<f32>>),
+    Solve(JobHandle<SolveJobResult>),
+}
+
+impl AnyHandle {
+    fn wait(self) {
+        match self {
+            AnyHandle::F64(h) => {
+                h.wait();
+            }
+            AnyHandle::F32(h) => {
+                h.wait();
+            }
+            AnyHandle::Solve(h) => {
+                h.wait();
+            }
+        }
+    }
+}
+
+/// One replay execution: fresh server from the bundle's config, captured
+/// requests re-submitted in order (deadlines dropped — they are
+/// wall-clock, hence environmental), everything recorded under a fresh
+/// capture. The replay's own request records carry the digests the same
+/// hook path computed in the capture run.
+fn replay_once(bundle: &Bundle, workers: Option<usize>) -> Result<ReplayRound, String> {
+    if !capture::start() {
+        return Err("another capture is active in this process".into());
+    }
+    let mut cfg = bundle.cfg.to_serve();
+    if let Some(w) = workers {
+        cfg.workers = w.max(1);
+    }
+    let server = LuServer::new(cfg);
+    let mut handles = Vec::with_capacity(bundle.requests.len());
+    for r in &bundle.requests {
+        let (m, n) = (r.m as usize, r.n as usize);
+        let h = if r.kind == REQ_SOLVE {
+            let a = mat_from_le::<f64>(m, n, &r.data);
+            let prec = match r.prec {
+                0 => SolvePrec::F64,
+                1 => SolvePrec::F32,
+                _ => SolvePrec::Mixed,
+            };
+            let mut req = SolveRequest::new(a, rhs_from_le(&r.rhs))
+                .with_prec(prec)
+                .with_priority(r.priority);
+            if r.bo != 0 && r.bi != 0 {
+                req.bo = Some(r.bo as usize);
+                req.bi = Some(r.bi as usize);
+            }
+            if r.client != NO_CLIENT {
+                req = req.with_client(r.client);
+            }
+            AnyHandle::Solve(server.submit_solve(req))
+        } else {
+            let kind = super::bundle::parse_kind(r.kind)
+                .unwrap_or(FactorKind::Lu);
+            if r.prec == 1 {
+                let a: Mat<f32> = mat_from_le(m, n, &r.data);
+                AnyHandle::F32(server.submit(factor_req(a, kind, r)))
+            } else {
+                let a: Matrix = mat_from_le(m, n, &r.data);
+                AnyHandle::F64(server.submit(factor_req(a, kind, r)))
+            }
+        };
+        handles.push(h);
+    }
+    for h in handles {
+        h.wait();
+    }
+    server.shutdown();
+    let (decisions, requests) =
+        capture::stop().ok_or_else(|| String::from("capture vanished during replay"))?;
+    Ok(ReplayRound {
+        decisions,
+        requests,
+    })
+}
+
+fn factor_req<S: Scalar>(a: Mat<S>, kind: FactorKind, r: &ReqRecord) -> LuRequest<S> {
+    let mut req = LuRequest::new(a).with_kind(kind).with_priority(r.priority);
+    if r.bo != 0 && r.bi != 0 {
+        req = req.with_blocks(r.bo as usize, r.bi as usize);
+    }
+    if r.client != NO_CLIENT {
+        req = req.with_client(r.client);
+    }
+    req
+}
+
+/// Certify one replay round: digests first structural (count) checks,
+/// then per-request invariant decision subsequences, then result
+/// digests. Returns the first divergence found, in captured-ordinal
+/// order.
+fn certify_round(bundle: &Bundle, round: &ReplayRound) -> Option<Divergence> {
+    // Requests replay positionally; a count mismatch means the bundle
+    // and the replay disagree about what was even submitted.
+    if round.requests.len() != bundle.requests.len() {
+        return Some(structural_divergence(
+            bundle,
+            0,
+            format!(
+                "{} captured requests, {} replayed",
+                bundle.requests.len(),
+                round.requests.len()
+            ),
+        ));
+    }
+    for (i, cap_req) in bundle.requests.iter().enumerate() {
+        if cap_req.cancelled || cap_req.failed {
+            continue; // wall-clock outcome: replayed, never certified
+        }
+        let cap_inv: Vec<&Decision> = bundle
+            .decisions
+            .iter()
+            .filter(|d| d.kind.invariant() && d.req == cap_req.id)
+            .collect();
+        let rep_id = round.requests[i].id;
+        let rep_inv: Vec<&Decision> = round
+            .decisions
+            .iter()
+            .filter(|d| d.kind.invariant() && d.req == rep_id)
+            .collect();
+        for (j, cap_d) in cap_inv.iter().enumerate() {
+            match rep_inv.get(j) {
+                None => {
+                    return Some(divergence_at(bundle, cap_d, None));
+                }
+                Some(rep_d) => {
+                    if cap_d.kind != rep_d.kind || cap_d.a != rep_d.a || cap_d.b != rep_d.b {
+                        return Some(divergence_at(bundle, cap_d, Some(rep_d)));
+                    }
+                }
+            }
+        }
+        if rep_inv.len() > cap_inv.len() {
+            let extra = rep_inv[cap_inv.len()];
+            let anchor = cap_inv
+                .last()
+                .map(|d| d.ordinal)
+                .unwrap_or(0);
+            return Some(Divergence {
+                ordinal: anchor,
+                req: cap_req.id,
+                expected: "(invariant stream ends here)".into(),
+                got: Some(extra.describe()),
+                context: context_strip(bundle, anchor),
+            });
+        }
+        // Streams agree — now the result itself, bit for bit.
+        let rep_req = &round.requests[i];
+        if rep_req.digest != cap_req.digest
+            || rep_req.cols_done != cap_req.cols_done
+            || rep_req.cancelled != cap_req.cancelled
+            || rep_req.failed != cap_req.failed
+        {
+            let anchor = cap_inv.last().map(|d| d.ordinal).unwrap_or(0);
+            return Some(Divergence {
+                ordinal: anchor,
+                req: cap_req.id,
+                expected: format!(
+                    "result digest {:016x} cols_done {} cancelled {} failed {}",
+                    cap_req.digest, cap_req.cols_done, cap_req.cancelled, cap_req.failed
+                ),
+                got: Some(format!(
+                    "result digest {:016x} cols_done {} cancelled {} failed {}",
+                    rep_req.digest, rep_req.cols_done, rep_req.cancelled, rep_req.failed
+                )),
+                context: context_strip(bundle, anchor),
+            });
+        }
+    }
+    None
+}
+
+fn divergence_at(bundle: &Bundle, expected: &Decision, got: Option<&Decision>) -> Divergence {
+    Divergence {
+        ordinal: expected.ordinal,
+        req: expected.req,
+        expected: expected.describe(),
+        got: got.map(|d| d.describe()),
+        context: context_strip(bundle, expected.ordinal),
+    }
+}
+
+fn structural_divergence(bundle: &Bundle, ordinal: u64, what: String) -> Divergence {
+    Divergence {
+        ordinal,
+        req: u64::MAX,
+        expected: what,
+        got: None,
+        context: context_strip(bundle, ordinal),
+    }
+}
+
+/// The captured decisions around `ordinal`, rendered with the culprit
+/// marked (invariant *and* environmental records — the environmental
+/// ones are exactly the context a divergence investigation needs).
+fn context_strip(bundle: &Bundle, ordinal: u64) -> String {
+    let events: Vec<(u64, String)> = bundle
+        .decisions
+        .iter()
+        .map(|d| (d.ordinal, d.describe()))
+        .collect();
+    crate::trace::ascii_event_strip(&events, ordinal, 4)
+}

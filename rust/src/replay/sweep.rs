@@ -1,0 +1,458 @@
+//! The **counterfactual policy engine** (`mlu replay --sweep`,
+//! DESIGN.md §16.6): re-price a captured trace under alternate
+//! [`StealPolicy`] points with the [`crate::sim`] cost model, without
+//! re-executing a single flop.
+//!
+//! A bundle carries everything the pricing needs: the request shapes,
+//! the serve configuration, and the captured per-checkpoint
+//! [`DecisionKind::StealDelta`] records — the *observed* steal pressure
+//! of the real run. The sweep holds the workload fixed and varies only
+//! the scheduling policy, answering "what would this exact trace have
+//! cost under `steal=0.25`?" offline. Predictions are cost-model
+//! estimates, not measurements — they rank policies; they do not
+//! certify bits (that is [`super::replayer`]'s job).
+//!
+//! Pricing model (per non-cancelled request, `w` workers):
+//!
+//! - `t_par` — the [`HwModel`] panel/update recurrence on one core,
+//!   divided by the model's sublinear thread multiplier
+//!   `w / (1 + par_loss·(w−1))`.
+//! - `dyn_cost = tiles·(1−s)·task_overhead·contention / w` — every
+//!   dynamically scheduled tile pays one shared-ticket claim;
+//!   [`StealPolicy::Off`] doubles the contention factor because all
+//!   claims hit one central ticket word (DESIGN.md §13).
+//! - `imb_cost = s²·p_obs·t_par/2` — statically owned tiles cannot
+//!   rebalance, so imbalance grows with the square of the static
+//!   fraction, scaled by the steal ratio `p_obs` the capture actually
+//!   observed (high observed stealing ⇒ this workload was imbalanced
+//!   ⇒ pinning tiles statically hurts it more).
+//!
+//! The captured policy is always point 0 (the baseline); every other
+//! point reports percentage deltas against it in `BENCH_replay.json`.
+
+use super::bundle::{Bundle, ReqRecord, REQ_CHOL, REQ_LU, REQ_QR, REQ_SOLVE};
+use super::capture::DecisionKind;
+use crate::pool::steal::{auto_static_fraction, StealPolicy};
+use crate::sim::costmodel::HwModel;
+use crate::util::json::Value;
+
+/// Fallback tile size (elements per side) used to estimate a request's
+/// tile-grid population when the capture carries no
+/// [`DecisionKind::StealDelta`] records for it (e.g. a dead-on-arrival
+/// request): one tile per `64×64` block of the matrix.
+pub const FALLBACK_TILE: usize = 64;
+
+/// One policy point of a sweep: a label (as the user spelled it) plus
+/// the decoded [`StealPolicy`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyPoint {
+    /// Human-readable spelling, used as the JSON `policy` field.
+    pub label: String,
+    /// The steal policy to price the trace under.
+    pub policy: StealPolicy,
+}
+
+impl PolicyPoint {
+    /// A point labeled with the policy's canonical name.
+    pub fn of(policy: StealPolicy) -> Self {
+        Self {
+            label: policy.name(),
+            policy,
+        }
+    }
+}
+
+/// Parse the `--sweep` syntax: comma-separated `key=v|v|…` groups whose
+/// points are unioned, e.g. `steal=0|250|500|750,static_frac=0.9`.
+///
+/// - `steal=` takes `off`, `auto`, or a static fraction in **per-mille**
+///   (`0..=1000`) — the bundle's own wire unit, so `steal=250` is the
+///   25 %-static hybrid.
+/// - `static_frac=` takes fractions in `[0, 1]` (`0.25` ≡ `steal=250`).
+pub fn parse_sweep(spec: &str) -> Result<Vec<PolicyPoint>, String> {
+    let mut points = Vec::new();
+    for group in spec.split(',').filter(|g| !g.is_empty()) {
+        let (key, vals) = group
+            .split_once('=')
+            .ok_or_else(|| format!("sweep group {group:?} is not key=v|v|…"))?;
+        for val in vals.split('|').filter(|v| !v.is_empty()) {
+            let policy = match key {
+                "steal" => match val {
+                    "off" => StealPolicy::Off,
+                    "auto" => StealPolicy::Auto,
+                    pm => {
+                        let pm: u16 = pm.parse().map_err(|_| {
+                            format!("bad steal point {val:?} (want off|auto|0..=1000 per-mille)")
+                        })?;
+                        if pm > 1000 {
+                            return Err(format!("steal point {pm} exceeds 1000 per-mille"));
+                        }
+                        StealPolicy::Fraction(pm)
+                    }
+                },
+                "static_frac" => {
+                    let f: f64 = val
+                        .parse()
+                        .map_err(|_| format!("bad static_frac point {val:?}"))?;
+                    if !(0.0..=1.0).contains(&f) {
+                        return Err(format!("static_frac point {f} outside [0, 1]"));
+                    }
+                    StealPolicy::Fraction((f * 1000.0).round() as u16)
+                }
+                other => {
+                    return Err(format!(
+                        "unknown sweep key {other:?} (want steal|static_frac)"
+                    ))
+                }
+            };
+            let point = PolicyPoint {
+                label: format!("{key}={val}"),
+                policy,
+            };
+            if !points.contains(&point) {
+                points.push(point);
+            }
+        }
+    }
+    if points.is_empty() {
+        return Err(format!("sweep spec {spec:?} produced no points"));
+    }
+    Ok(points)
+}
+
+/// Per-request observables extracted from the captured decision stream.
+struct ReqCost {
+    /// Predicted parallel compute seconds on the bundle's worker count
+    /// (policy-independent).
+    t_par: f64,
+    /// Tile-grid population (captured `StealDelta` sum, or the
+    /// [`FALLBACK_TILE`] estimate).
+    tiles: f64,
+    /// Useful flops, for the aggregate GFLOPS figure.
+    flops: f64,
+}
+
+/// Model flops of one request (the same formulas the bench suite
+/// reports against).
+fn req_flops(r: &ReqRecord) -> f64 {
+    let (m, n) = (r.m as f64, r.n as f64);
+    match r.kind {
+        REQ_CHOL => n * n * n / 3.0,
+        REQ_QR => 2.0 * m * n * n - 2.0 * n * n * n / 3.0,
+        // Solves are LU-factor dominated; refinement is O(n²) noise.
+        REQ_LU | REQ_SOLVE => crate::util::lu_flops(r.m as usize, r.n as usize),
+        _ => 0.0,
+    }
+}
+
+/// Single-core modeled seconds of one request: the panel recurrence at
+/// the latency-bound rate plus the trailing updates at the GEPP rate —
+/// the same decomposition [`crate::sim::lu_sim`] walks, collapsed to a
+/// closed loop over panels. `f32`/mixed requests factor at twice the
+/// double-precision rate (twice the SIMD lanes).
+fn req_t1(hw: &HwModel, r: &ReqRecord, cfg_bo: usize, cfg_bi: usize) -> f64 {
+    let m = r.m as usize;
+    let n = r.n as usize;
+    let bo = if r.bo != 0 { r.bo as usize } else { cfg_bo }.max(1);
+    let bi = if r.bi != 0 { r.bi as usize } else { cfg_bi }.max(1);
+    let prec_scale = if r.kind != REQ_SOLVE && r.prec == 1 {
+        2.0
+    } else if r.kind == REQ_SOLVE && r.prec != 0 {
+        // f32 / mixed solves factor in single precision.
+        2.0
+    } else {
+        1.0
+    };
+    let mut secs = 0.0;
+    let mut panel_fl = 0.0;
+    let mut j = 0;
+    while j < n.min(m) {
+        let b = bo.min(n - j);
+        let rows = m - j;
+        secs += hw.panel_time(rows, b, bi, 1);
+        let bf = b as f64;
+        panel_fl += rows as f64 * bf * bf - bf * bf * bf / 3.0;
+        j += b;
+    }
+    let update_fl = (req_flops(r) - panel_fl).max(0.0);
+    secs += update_fl / (hw.gepp_gflops(bo, 1) * 1e9);
+    secs / prec_scale
+}
+
+/// Extract the policy-independent per-request costs plus the global
+/// observed steal ratio. Cancelled/failed requests are excluded from
+/// the pricing (their real extent is unknowable) but counted in the
+/// report.
+fn req_costs(bundle: &Bundle, hw: &HwModel) -> (Vec<ReqCost>, f64, f64, usize) {
+    let w = (bundle.cfg.workers as usize).max(1);
+    let thread_scale = {
+        let t = w as f64;
+        t / (1.0 + hw.par_loss * (t - 1.0))
+    };
+    let mut total_tiles = 0.0;
+    let mut total_stolen = 0.0;
+    let mut costs = Vec::new();
+    let mut skipped = 0;
+    for r in &bundle.requests {
+        if r.cancelled || r.failed {
+            skipped += 1;
+            continue;
+        }
+        let mut tiles = 0u64;
+        for d in &bundle.decisions {
+            if d.kind == DecisionKind::StealDelta && d.req == r.id {
+                tiles += d.b & 0xffff_ffff;
+                total_stolen += (d.b >> 32) as f64;
+            }
+        }
+        let tiles = if tiles > 0 {
+            tiles as f64
+        } else {
+            ((r.m as usize * r.n as usize) / (FALLBACK_TILE * FALLBACK_TILE)).max(1) as f64
+        };
+        total_tiles += tiles;
+        costs.push(ReqCost {
+            t_par: req_t1(hw, r, bundle.cfg.bo as usize, bundle.cfg.bi as usize) / thread_scale,
+            tiles,
+            flops: req_flops(r),
+        });
+    }
+    let p_obs = if total_tiles > 0.0 {
+        (total_stolen / total_tiles).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    (costs, p_obs, total_stolen, skipped)
+}
+
+/// Price one policy point over the extracted per-request costs.
+/// Returns `(mean_latency, makespan, gflops, mean_static_frac)`.
+fn price(
+    costs: &[ReqCost],
+    p_obs: f64,
+    policy: StealPolicy,
+    workers: usize,
+    hw: &HwModel,
+) -> (f64, f64, f64, f64) {
+    let w = workers.max(1) as f64;
+    let mut makespan = 0.0;
+    let mut flops = 0.0;
+    let mut frac_sum = 0.0;
+    for c in costs {
+        let (s, contention) = match policy {
+            StealPolicy::Off => (0.0, 2.0),
+            StealPolicy::Auto => (auto_static_fraction(workers, c.tiles as usize), 1.0),
+            StealPolicy::Fraction(pm) => (f64::from(pm) / 1000.0, 1.0),
+        };
+        let dyn_cost = c.tiles * (1.0 - s) * hw.task_overhead * contention / w;
+        let imb_cost = s * s * p_obs * c.t_par * 0.5;
+        makespan += c.t_par + dyn_cost + imb_cost;
+        flops += c.flops;
+        frac_sum += s;
+    }
+    let n = costs.len().max(1) as f64;
+    (
+        makespan / n,
+        makespan,
+        crate::util::gflops(flops, makespan),
+        frac_sum / n,
+    )
+}
+
+/// Run a sweep: price the captured trace under the bundle's own policy
+/// (point 0, the baseline) and under each requested point, and return
+/// the `BENCH_replay.json` document — per-policy predicted latency,
+/// makespan, GFLOPS, and percentage deltas against the baseline.
+pub fn run_sweep(bundle: &Bundle, points: &[PolicyPoint]) -> Value {
+    let hw = HwModel::default();
+    let workers = (bundle.cfg.workers as usize).max(1);
+    let (costs, p_obs, stolen, skipped) = req_costs(bundle, &hw);
+    let baseline = PolicyPoint {
+        label: format!("captured:{}", bundle.cfg.steal.name()),
+        policy: bundle.cfg.steal,
+    };
+    let (base_lat, base_make, base_gf, _) = price(&costs, p_obs, baseline.policy, workers, &hw);
+    let mut rows = Vec::new();
+    for (i, p) in std::iter::once(&baseline).chain(points.iter()).enumerate() {
+        let (lat, make, gf, frac) = price(&costs, p_obs, p.policy, workers, &hw);
+        let pct = |new: f64, base: f64| {
+            if base > 0.0 {
+                (new - base) / base * 100.0
+            } else {
+                0.0
+            }
+        };
+        rows.push(Value::obj([
+            ("policy", Value::Str(p.label.clone())),
+            ("baseline", Value::Bool(i == 0)),
+            ("static_frac_mean", Value::Num(frac)),
+            ("mean_latency_s", Value::Num(lat)),
+            ("makespan_s", Value::Num(make)),
+            ("gflops", Value::Num(gf)),
+            ("delta_gflops_pct", Value::Num(pct(gf, base_gf))),
+            ("delta_latency_pct", Value::Num(pct(lat, base_lat))),
+        ]));
+    }
+    Value::obj([
+        ("bench", Value::Str("replay_sweep".into())),
+        (
+            "bundle",
+            Value::obj([
+                ("requests", Value::Num(bundle.requests.len() as f64)),
+                ("priced", Value::Num(costs.len() as f64)),
+                ("skipped", Value::Num(skipped as f64)),
+                ("decisions", Value::Num(bundle.decisions.len() as f64)),
+                ("workers", Value::Num(workers as f64)),
+                ("steal", Value::Str(bundle.cfg.steal.name())),
+            ]),
+        ),
+        (
+            "observed",
+            Value::obj([
+                ("stolen_tiles", Value::Num(stolen)),
+                ("steal_ratio", Value::Num(p_obs)),
+            ]),
+        ),
+        (
+            "baseline",
+            Value::obj([
+                ("mean_latency_s", Value::Num(base_lat)),
+                ("makespan_s", Value::Num(base_make)),
+                ("gflops", Value::Num(base_gf)),
+            ]),
+        ),
+        ("points", Value::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::replay::bundle::{BundleCfg, NO_CLIENT};
+    use crate::replay::capture::Decision;
+
+    fn bundle_with(steal: StealPolicy, decisions: Vec<Decision>) -> Bundle {
+        Bundle {
+            cfg: BundleCfg {
+                workers: 4,
+                bo: 64,
+                bi: 16,
+                mc: 176,
+                kc: 256,
+                nc: 4080,
+                steal,
+            },
+            requests: vec![ReqRecord {
+                id: 0,
+                kind: REQ_LU,
+                prec: 0,
+                priority: 2,
+                cancelled: false,
+                failed: false,
+                m: 512,
+                n: 512,
+                bo: 0,
+                bi: 0,
+                deadline_ms: 0,
+                client: NO_CLIENT,
+                cols_done: 512,
+                digest: 1,
+                data: vec![],
+                rhs: vec![],
+            }],
+            decisions,
+        }
+    }
+
+    #[test]
+    fn parse_sweep_unions_groups_and_rejects_garbage() {
+        let pts = parse_sweep("steal=off|auto|250,static_frac=0.9").unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].policy, StealPolicy::Off);
+        assert_eq!(pts[1].policy, StealPolicy::Auto);
+        assert_eq!(pts[2].policy, StealPolicy::Fraction(250));
+        assert_eq!(pts[3].policy, StealPolicy::Fraction(900));
+        assert_eq!(pts[3].label, "static_frac=0.9");
+        assert!(parse_sweep("steal=1001").is_err());
+        assert!(parse_sweep("static_frac=1.5").is_err());
+        assert!(parse_sweep("bogus=1").is_err());
+        assert!(parse_sweep("steal").is_err());
+        assert!(parse_sweep("").is_err());
+        // Duplicate points collapse.
+        assert_eq!(parse_sweep("steal=250,static_frac=0.25").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sweep_report_has_baseline_and_deltas() {
+        // Captured run saw heavy stealing: 100 of 200 tiles stolen.
+        let d = vec![Decision {
+            ordinal: 0,
+            kind: DecisionKind::StealDelta,
+            req: 0,
+            a: 0,
+            b: (100 << 32) | 200,
+        }];
+        let b = bundle_with(StealPolicy::Auto, d);
+        let pts = parse_sweep("steal=off|1000").unwrap();
+        let v = run_sweep(&b, &pts);
+        let rows = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3, "baseline + two points");
+        assert_eq!(rows[0].get("baseline").unwrap(), &Value::Bool(true));
+        assert_eq!(
+            rows[0].get("delta_gflops_pct").unwrap().as_f64(),
+            Some(0.0),
+            "baseline deltas are zero by construction"
+        );
+        // Observed steal ratio reached the report.
+        let p = v
+            .get("observed")
+            .unwrap()
+            .get("steal_ratio")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((p - 0.5).abs() < 1e-12);
+        // With p_obs = 0.5 a fully-static policy must price worse
+        // (higher latency) than the hybrid baseline.
+        let full_static = rows[2].get("delta_latency_pct").unwrap().as_f64().unwrap();
+        assert!(full_static > 0.0, "got {full_static}");
+        // The report round-trips through the JSON codec.
+        assert_eq!(crate::util::json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn fallback_tiles_used_when_no_deltas_captured() {
+        let b = bundle_with(StealPolicy::Off, vec![]);
+        let v = run_sweep(&b, &[PolicyPoint::of(StealPolicy::Auto)]);
+        // 512×512 / 64² = 64 tiles, no stealing observed.
+        let p = v
+            .get("observed")
+            .unwrap()
+            .get("steal_ratio")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(p, 0.0);
+        let rows = v.get("points").unwrap().as_arr().unwrap();
+        // With zero observed stealing, imbalance costs nothing, so the
+        // hybrid point can only save ticket contention: ≥ baseline.
+        let gf = rows[1].get("delta_gflops_pct").unwrap().as_f64().unwrap();
+        assert!(gf >= 0.0, "got {gf}");
+    }
+
+    #[test]
+    fn cancelled_requests_are_skipped_not_priced() {
+        let mut b = bundle_with(StealPolicy::Auto, vec![]);
+        b.requests[0].cancelled = true;
+        let v = run_sweep(&b, &[]);
+        assert_eq!(
+            v.get("bundle").unwrap().get("priced").unwrap().as_f64(),
+            Some(0.0)
+        );
+        assert_eq!(
+            v.get("bundle").unwrap().get("skipped").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+}

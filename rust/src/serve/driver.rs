@@ -18,6 +18,7 @@ use crate::blis::BlisParams;
 use crate::factor::{factorize_blocked, FactorCtl, FactorKind, FactorOutcome};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
+use crate::replay::capture::{self, DecisionKind};
 use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -78,15 +79,27 @@ pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> Factor
         // below, a panic unwinds to the serve loop's `catch_unwind`.
         #[cfg(any(test, feature = "chaos"))]
         crate::faultplan::checkpoint_hook(&tag, k);
-        cfg.lease.set_remaining(
-            cfg.kind
-                .remaining_cost_prec::<S>(cfg.hw, m, n, k, cfg.bo, cfg.bi),
-        );
-        cfg.lease
+        let rem = cfg
+            .kind
+            .remaining_cost_prec::<S>(cfg.hw, m, n, k, cfg.bo, cfg.bi);
+        cfg.lease.set_remaining(rem);
+        let (ds, dt) = cfg
+            .lease
             .fold_steal_delta(&shared, &prev_stolen, &prev_tiles);
+        // Capture (DESIGN.md §16.2): the lease-sizing refresh is an
+        // invariant record, the steal fold an environmental one.
+        if capture::active() {
+            capture::record(DecisionKind::Checkpoint, cfg.lease.id, k as u64, rem.to_bits());
+            capture::record(
+                DecisionKind::StealDelta,
+                cfg.lease.id,
+                k as u64,
+                capture::pack_delta(ds, dt),
+            );
+        }
         if let Some(d) = cfg.deadline {
-            if Instant::now() >= d {
-                cfg.cancel.store(true, Ordering::Release);
+            if Instant::now() >= d && !cfg.cancel.swap(true, Ordering::Release) {
+                capture::record(DecisionKind::EtTrigger, cfg.lease.id, k as u64, 1);
             }
         }
     };

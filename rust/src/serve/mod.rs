@@ -76,6 +76,8 @@ use crate::blis::{BlisParams, PackArena};
 use crate::factor::{FactorError, FactorKind};
 use crate::matrix::{Mat, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
+use crate::replay::capture::{self, DecisionKind};
+use crate::replay::{bundle, factor_digest, solve_digest};
 use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use crate::solve::{SolveCtl, SolvePrec};
@@ -529,6 +531,9 @@ impl LuServer {
     /// immediately with a typed handle.
     pub fn submit<S: Scalar>(&self, req: LuRequest<S>) -> JobHandle<JobResult<S>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if capture::active() {
+            capture_submit_factor(id, &req);
+        }
         let jstate = JobState::<JobResult<S>>::new();
         let now = Instant::now();
         let priority = req.priority;
@@ -568,6 +573,9 @@ impl LuServer {
     /// handle.
     pub fn submit_solve(&self, req: SolveRequest) -> JobHandle<SolveJobResult> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if capture::active() {
+            capture_submit_solve(id, &req);
+        }
         let jstate = JobState::<SolveJobResult>::new();
         let now = Instant::now();
         let priority = req.priority;
@@ -646,6 +654,84 @@ pub fn factorize_batch<S: Scalar>(mats: Vec<Mat<S>>, cfg: &ServeConfig) -> Vec<J
     out
 }
 
+/// Capture one factor submission (DESIGN.md §16.2): the replayable
+/// request record (bit-exact payload) plus the invariant `Submit`
+/// decision. Called with the capture known active.
+fn capture_submit_factor<S: Scalar>(id: u64, req: &LuRequest<S>) {
+    let (m, n) = (req.a.rows() as u64, req.a.cols() as u64);
+    let kind = bundle::kind_code(req.kind);
+    let prec = bundle::prec_code::<S>();
+    let (bo, bi) = (req.bo.unwrap_or(0) as u64, req.bi.unwrap_or(0) as u64);
+    capture::record_request(bundle::ReqRecord {
+        id,
+        kind,
+        prec,
+        priority: req.priority,
+        cancelled: false,
+        failed: false,
+        m: m as u32,
+        n: n as u32,
+        bo: bo as u16,
+        bi: bi as u16,
+        deadline_ms: deadline_ms(req.deadline),
+        client: req.client.unwrap_or(bundle::NO_CLIENT),
+        cols_done: 0,
+        digest: 0,
+        data: bundle::mat_to_le(&req.a),
+        rhs: Vec::new(),
+    });
+    capture::record(
+        DecisionKind::Submit,
+        id,
+        (m << 32) | n,
+        u64::from(kind)
+            | (u64::from(prec) << 8)
+            | (u64::from(req.priority) << 16)
+            | (bo << 32)
+            | (bi << 48),
+    );
+}
+
+/// Capture one solve submission (see [`capture_submit_factor`]).
+fn capture_submit_solve(id: u64, req: &SolveRequest) {
+    let (m, n) = (req.a.rows() as u64, req.a.cols() as u64);
+    let prec = bundle::solve_prec_code(req.prec);
+    let (bo, bi) = (req.bo.unwrap_or(0) as u64, req.bi.unwrap_or(0) as u64);
+    capture::record_request(bundle::ReqRecord {
+        id,
+        kind: bundle::REQ_SOLVE,
+        prec,
+        priority: req.priority,
+        cancelled: false,
+        failed: false,
+        m: m as u32,
+        n: n as u32,
+        bo: bo as u16,
+        bi: bi as u16,
+        deadline_ms: deadline_ms(req.deadline),
+        client: req.client.unwrap_or(bundle::NO_CLIENT),
+        cols_done: 0,
+        digest: 0,
+        data: bundle::mat_to_le(&req.a),
+        rhs: bundle::rhs_to_le(&req.b),
+    });
+    capture::record(
+        DecisionKind::Submit,
+        id,
+        (m << 32) | n,
+        u64::from(bundle::REQ_SOLVE)
+            | (u64::from(prec) << 8)
+            | (u64::from(req.priority) << 16)
+            | (bo << 32)
+            | (bi << 48),
+    );
+}
+
+fn deadline_ms(d: Option<Duration>) -> u32 {
+    d.map(|d| d.as_millis().min(u128::from(u32::MAX)) as u32)
+        .unwrap_or(0)
+}
+
 /// One pool worker's scheduling loop: lead the highest-priority queued
 /// request, else float into the most starved in-flight crew, else wait.
 fn serve_loop(state: &ServerState) {
@@ -674,6 +760,11 @@ fn serve_loop(state: &ServerState) {
         }
         let e0 = state.registry.epoch();
         if let Some(lease) = state.registry.most_starved() {
+            // Environmental capture record: which crew this floater
+            // donated itself to, at which registry epoch. Timing-shaped,
+            // so never certified — but it is exactly the context a
+            // divergence investigation (or a policy sweep) wants.
+            capture::record(DecisionKind::WsJoin, lease.id, e0, 0);
             // Donate this worker until the picture changes: the crew
             // closes, a problem arrives or finishes, queued work appears,
             // or the server stops.
@@ -733,31 +824,39 @@ fn lead_factor<S: Scalar>(
             Ok(()) => None,
         };
         let secs = submitted.elapsed().as_secs_f64();
-        complete(
-            &jstate,
-            JobResult {
-                id,
-                kind,
-                a,
-                ipiv: Vec::new(),
-                tau: Vec::new(),
-                cols_done: 0,
-                cancelled: true,
-                secs,
-                error: shape_err,
-            },
-        );
+        let result = JobResult {
+            id,
+            kind,
+            a,
+            ipiv: Vec::new(),
+            tau: Vec::new(),
+            cols_done: 0,
+            cancelled: true,
+            secs,
+            error: shape_err,
+        };
+        if capture::active() {
+            // Dead-on-arrival outcome is wall-clock-shaped (cancel races
+            // the pop, deadlines expire in queue): recorded so replay can
+            // skip certification for it, never certified (§16.4).
+            capture::record_result(id, factor_digest(&result), 0, true, result.error.is_some());
+        }
+        complete(&jstate, result);
         return;
     }
     let (m, n) = (a.rows(), a.cols());
     let mut crew = Crew::with_arena(Arc::clone(&state.arena));
-    let lease = Arc::new(Lease::new(
-        id,
-        priority,
-        crew.shared(),
-        kind.remaining_cost_prec::<S>(&state.cfg.hw, m, n, 0, bo, bi),
-    ));
+    let initial_cost = kind.remaining_cost_prec::<S>(&state.cfg.hw, m, n, 0, bo, bi);
+    let lease = Arc::new(Lease::new(id, priority, crew.shared(), initial_cost));
     state.registry.register(Arc::clone(&lease));
+    if capture::active() {
+        capture::record(
+            DecisionKind::LeaseGrant,
+            id,
+            u64::from(priority),
+            initial_cost.to_bits(),
+        );
+    }
     let dcfg = driver::DriveCfg {
         params: &state.cfg.params,
         hw: &state.cfg.hw,
@@ -774,22 +873,39 @@ fn lead_factor<S: Scalar>(
     // disband waits for the stragglers, so the crew's workers are back
     // in their serve loops before the result is published.
     state.registry.unregister(id);
+    if capture::active() {
+        capture::record(
+            DecisionKind::LeaseRevoke,
+            id,
+            out.cols_done as u64
+                | (u64::from(out.cancelled) << 32)
+                | (u64::from(lease.is_poisoned()) << 33),
+            0,
+        );
+    }
     crew.disband();
     let secs = submitted.elapsed().as_secs_f64();
-    complete(
-        &jstate,
-        JobResult {
+    let result = JobResult {
+        id,
+        kind,
+        a,
+        ipiv: out.ipiv,
+        tau: out.tau,
+        cols_done: out.cols_done,
+        cancelled: out.cancelled,
+        secs,
+        error: out.error,
+    };
+    if capture::active() {
+        capture::record_result(
             id,
-            kind,
-            a,
-            ipiv: out.ipiv,
-            tau: out.tau,
-            cols_done: out.cols_done,
-            cancelled: out.cancelled,
-            secs,
-            error: out.error,
-        },
-    );
+            factor_digest(&result),
+            result.cols_done as u32,
+            result.cancelled,
+            result.error.is_some(),
+        );
+    }
+    complete(&jstate, result);
 }
 
 /// Lead one solve request: register a crew lease priced at the chosen
@@ -835,20 +951,21 @@ fn lead_solve(
             None
         };
         let secs = submitted.elapsed().as_secs_f64();
-        complete(
-            &jstate,
-            SolveJobResult {
-                id,
-                prec,
-                x: Vec::new(),
-                refine_iters: 0,
-                backward_error: f64::INFINITY,
-                converged: false,
-                cancelled: true,
-                secs,
-                error: shape_err,
-            },
-        );
+        let result = SolveJobResult {
+            id,
+            prec,
+            x: Vec::new(),
+            refine_iters: 0,
+            backward_error: f64::INFINITY,
+            converged: false,
+            cancelled: true,
+            secs,
+            error: shape_err,
+        };
+        if capture::active() {
+            capture::record_result(id, solve_digest(&result), 0, true, result.error.is_some());
+        }
+        complete(&jstate, result);
         return;
     }
     let mut crew = Crew::with_arena(Arc::clone(&state.arena));
@@ -858,13 +975,17 @@ fn lead_solve(
         SolvePrec::F64 => 1.0,
         SolvePrec::F32 | SolvePrec::Mixed => f32::FLOP_RATE,
     };
-    let lease = Arc::new(Lease::new(
-        id,
-        priority,
-        crew.shared(),
-        FactorKind::Lu.remaining_cost(&state.cfg.hw, n, n, 0, bo, bi) / rate,
-    ));
+    let initial_cost = FactorKind::Lu.remaining_cost(&state.cfg.hw, n, n, 0, bo, bi) / rate;
+    let lease = Arc::new(Lease::new(id, priority, crew.shared(), initial_cost));
     state.registry.register(Arc::clone(&lease));
+    if capture::active() {
+        capture::record(
+            DecisionKind::LeaseGrant,
+            id,
+            u64::from(priority),
+            initial_cost.to_bits(),
+        );
+    }
     let tag = match client {
         Some(c) => format!("req{id}@c{c}:solve:{}", prec.name()),
         None => format!("req{id}:solve:{}", prec.name()),
@@ -882,11 +1003,21 @@ fn lead_solve(
     // sweep is caught at the next sweep boundary.) Steal pressure is
     // fed back the same way (DESIGN.md §13).
     let checkpoint = move |k: usize| {
-        lease2.set_remaining(FactorKind::Lu.remaining_cost(&hw, n, n, k, bo, bi) / rate);
-        lease2.fold_steal_delta(&crew_shared, &prev_stolen, &prev_tiles);
+        let rem = FactorKind::Lu.remaining_cost(&hw, n, n, k, bo, bi) / rate;
+        lease2.set_remaining(rem);
+        let (ds, dt) = lease2.fold_steal_delta(&crew_shared, &prev_stolen, &prev_tiles);
+        if capture::active() {
+            capture::record(DecisionKind::Checkpoint, id, k as u64, rem.to_bits());
+            capture::record(
+                DecisionKind::StealDelta,
+                id,
+                k as u64,
+                capture::pack_delta(ds, dt),
+            );
+        }
         if let Some(d) = deadline {
-            if Instant::now() >= d {
-                cancel2.store(true, Ordering::Release);
+            if Instant::now() >= d && !cancel2.swap(true, Ordering::Release) {
+                capture::record(DecisionKind::EtTrigger, id, k as u64, 1);
             }
         }
     };
@@ -906,22 +1037,41 @@ fn lead_solve(
         &ctl,
     );
     state.registry.unregister(id);
+    if capture::active() {
+        // Solves commit whole (no partial column prefix): cols_done in
+        // the revoke record is `n` on a clean run, 0 on a cancel.
+        let done = if out.cancelled { 0u64 } else { n as u64 };
+        capture::record(
+            DecisionKind::LeaseRevoke,
+            id,
+            done | (u64::from(out.cancelled) << 32) | (u64::from(lease.is_poisoned()) << 33),
+            0,
+        );
+    }
     crew.disband();
     let secs = submitted.elapsed().as_secs_f64();
-    complete(
-        &jstate,
-        SolveJobResult {
+    let result = SolveJobResult {
+        id,
+        prec,
+        x: out.x,
+        refine_iters: out.refine_iters,
+        backward_error: out.backward_error,
+        converged: out.converged,
+        cancelled: out.cancelled,
+        secs,
+        error: out.error,
+    };
+    if capture::active() {
+        let done = if result.cancelled { 0 } else { n as u32 };
+        capture::record_result(
             id,
-            prec,
-            x: out.x,
-            refine_iters: out.refine_iters,
-            backward_error: out.backward_error,
-            converged: out.converged,
-            cancelled: out.cancelled,
-            secs,
-            error: out.error,
-        },
-    );
+            solve_digest(&result),
+            done,
+            result.cancelled,
+            result.error.is_some(),
+        );
+    }
+    complete(&jstate, result);
 }
 
 fn complete<R>(jstate: &JobState<R>, result: R) {

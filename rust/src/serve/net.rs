@@ -634,7 +634,7 @@ fn watchdog_sweep(shared: &NetShared) {
     }
     let min = Duration::from_millis(shared.cfg.watchdog_min_ms);
     let mut cancels = shared.cancels.lock().unwrap_or_else(|e| e.into_inner());
-    for entry in cancels.values_mut() {
+    for (job_id, entry) in cancels.iter_mut() {
         let Some(d) = entry.deadline else { continue };
         if entry.fired {
             continue;
@@ -644,6 +644,14 @@ fn watchdog_sweep(shared: &NetShared) {
             entry.tok.cancel();
             entry.fired = true;
             shared.watchdog_fired.fetch_add(1, Ordering::Relaxed);
+            // Environmental capture record: the daemon force-cancelled
+            // this job (trigger code 2 = watchdog; DESIGN.md §16.2).
+            crate::replay::capture::record(
+                crate::replay::capture::DecisionKind::EtTrigger,
+                *job_id,
+                0,
+                2,
+            );
         }
     }
 }
@@ -898,14 +906,17 @@ fn handle_factor(
         Ok(r) => r,
         Err(e) => {
             shared.malformed.fetch_add(1, Ordering::Relaxed);
+            record_admission(wire_id, client, RejectCode::Malformed.code(), (0, 0));
             return send_frame(tx, dead, proto::encode_reject(wire_id, RejectCode::Malformed, &e.0));
         }
     };
     let dims = (req.a.rows(), req.a.cols());
     if let Err(code) = shared.admission.try_admit(client, dims) {
+        record_admission(wire_id, client, code.code(), dims);
         let reason = admit_reason(code, shared, dims);
         return send_frame(tx, dead, proto::encode_reject(wire_id, code, &reason));
     }
+    record_admission(wire_id, client, 0, dims);
     // Admission slot held from here: the writer releases it after the
     // response flushes (or the reap path does).
     let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms as u64));
@@ -958,14 +969,17 @@ fn handle_solve(
         Ok(r) => r,
         Err(e) => {
             shared.malformed.fetch_add(1, Ordering::Relaxed);
+            record_admission(wire_id, client, RejectCode::Malformed.code(), (0, 0));
             return send_frame(tx, dead, proto::encode_reject(wire_id, RejectCode::Malformed, &e.0));
         }
     };
     let dims = (req.a.rows(), req.a.cols());
     if let Err(code) = shared.admission.try_admit(client, dims) {
+        record_admission(wire_id, client, code.code(), dims);
         let reason = admit_reason(code, shared, dims);
         return send_frame(tx, dead, proto::encode_reject(wire_id, code, &reason));
     }
+    record_admission(wire_id, client, 0, dims);
     let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms as u64));
     let mut r = SolveRequest::new(req.a, req.b)
         .with_prec(req.prec)
@@ -981,6 +995,26 @@ fn handle_solve(
     let h = shared.server.submit_solve(r);
     register_cancel(shared, h.id(), h.cancel_token(), deadline);
     send_job(shared, client, tx, dead, wire_id, Pending::Solve(h))
+}
+
+/// Capture one admission verdict (DESIGN.md §16.2) — environmental:
+/// `req` is the *wire* id (the daemon decides before a server id
+/// exists), `a` the connection id, `b` packs `verdict | m << 8 |
+/// n << 32` (verdict 0 = admitted, else the [`RejectCode`] byte; dims
+/// saturate at 24 bits). No-op unless a capture is armed.
+fn record_admission(wire_id: u64, client: u64, verdict: u8, dims: (usize, usize)) {
+    use crate::replay::capture::{self, DecisionKind};
+    if !capture::active() {
+        return;
+    }
+    let m = (dims.0 as u64).min(0xff_ffff);
+    let n = (dims.1 as u64).min(0xff_ffff);
+    capture::record(
+        DecisionKind::Admission,
+        wire_id,
+        client,
+        u64::from(verdict) | (m << 8) | (n << 32),
+    );
 }
 
 fn register_cancel(shared: &NetShared, job_id: u64, tok: CancelToken, deadline: Option<Duration>) {

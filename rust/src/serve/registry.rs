@@ -112,16 +112,20 @@ impl Lease {
     /// `prev_stolen`/`prev_tiles` cursors (updating them), and stores
     /// `Δstolen / Δtiles` (0 when no hybrid tiles ran). The one shared
     /// implementation both the factor and solve lead checkpoints call.
+    /// Returns the `(Δstolen, Δtiles)` pair so the caller can feed the
+    /// capture recorder ([`crate::replay::capture`]) without re-reading
+    /// the counters.
     pub fn fold_steal_delta(
         &self,
         shared: &CrewShared,
         prev_stolen: &AtomicU64,
         prev_tiles: &AtomicU64,
-    ) {
+    ) -> (u64, u64) {
         let (stolen, tiles) = shared.steal_stats();
         let ds = stolen.saturating_sub(prev_stolen.swap(stolen, Ordering::Relaxed));
         let dt = tiles.saturating_sub(prev_tiles.swap(tiles, Ordering::Relaxed));
         self.set_steal_pressure(if dt == 0 { 0.0 } else { ds as f64 / dt as f64 });
+        (ds, dt)
     }
 
     /// Work-conserving starvation score:

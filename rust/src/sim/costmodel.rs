@@ -246,6 +246,47 @@ impl HwModel {
     pub fn machine_peak(&self) -> f64 {
         self.core_gemm_peak * self.cores as f64
     }
+
+    /// Recalibrate `core_gemm_peak` — the model's first knob (see its
+    /// field docs) — from one **measured** GEMM: `C(m×n) += A(m×k)·B(k×n)`
+    /// on `t` threads took `measured_secs`. Returns a copy of the model
+    /// whose [`HwModel::gemm_time`] reproduces the measurement exactly
+    /// at the anchor shape; every other constant keeps its paper-derived
+    /// value, so the model's *shape* (k-ramp, `k_c` dip, thread scaling,
+    /// width efficiency) is preserved and only the absolute rate moves.
+    ///
+    /// This is the documented remedy for cost-model drift between the
+    /// simulated and the benched GFLOPS: anchor on a measured rate, then
+    /// cross-check other shapes against the calibrated model —
+    /// `tests/sim_calib.rs` pins both the exact inversion and the
+    /// cross-shape agreement, and the counterfactual sweeps of
+    /// `mlu replay` (DESIGN.md §16.6) price captured traces through the
+    /// same model. Degenerate anchors (zero dims, a measurement at or
+    /// under the fixed kernel overhead) leave the model unchanged.
+    pub fn calibrate_from_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        t: usize,
+        measured_secs: f64,
+    ) -> HwModel {
+        let mut hw = *self;
+        if m == 0 || n == 0 || k == 0 {
+            return hw;
+        }
+        let useful = measured_secs - self.kernel_overhead;
+        if useful <= 0.0 {
+            return hw;
+        }
+        let fl = crate::util::gemm_flops(m, n, k);
+        let needed = fl / (useful * self.width_eff(n) * 1e9);
+        let current = self.gepp_gflops(k, t);
+        if needed > 0.0 && current > 0.0 {
+            hw.core_gemm_peak = self.core_gemm_peak * needed / current;
+        }
+        hw
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +358,33 @@ mod tests {
         assert_eq!(hw.trsm_time(10, 0, 6), 0.0);
         assert_eq!(hw.laswp_time(0, 10, 6), 0.0);
         assert_eq!(hw.unblocked_time(10, 0), 0.0);
+    }
+
+    #[test]
+    fn calibrate_from_gemm_inverts_exactly_and_keeps_the_shape() {
+        let hw = HwModel::default();
+        let (m, n, k, t) = (256, 256, 64, 1);
+        // Pretend the machine measured 10 ms for this GEMM: the
+        // calibrated model must reproduce that measurement exactly …
+        let measured = 0.010;
+        let cal = hw.calibrate_from_gemm(m, n, k, t, measured);
+        let predicted = cal.gemm_time(m, n, k, t);
+        assert!(
+            (predicted - measured).abs() / measured < 1e-9,
+            "anchor not inverted: predicted {predicted}, measured {measured}"
+        );
+        // … while preserving every shape ratio (only the absolute rate
+        // moved).
+        for kk in [16usize, 96, 256, 320] {
+            let before = hw.gepp_gflops(kk, 6) / hw.gepp_gflops(64, 6);
+            let after = cal.gepp_gflops(kk, 6) / cal.gepp_gflops(64, 6);
+            assert!((before - after).abs() < 1e-12, "shape moved at k={kk}");
+        }
+        // Degenerate anchors leave the model untouched.
+        let same = hw.calibrate_from_gemm(0, 256, 64, 1, measured);
+        assert_eq!(same.core_gemm_peak, hw.core_gemm_peak);
+        let same = hw.calibrate_from_gemm(m, n, k, t, hw.kernel_overhead / 2.0);
+        assert_eq!(same.core_gemm_peak, hw.core_gemm_peak);
     }
 
     #[test]

@@ -308,6 +308,31 @@ pub fn busy_by_kind(spans: &[Span]) -> Vec<(usize, Kind, f64)> {
     v
 }
 
+/// Render an ordered event stream as a one-event-per-line strip with a
+/// `>>` marker on the highlighted ordinal — the divergence-context view
+/// the replay certifier prints (`mlu replay`, DESIGN.md §16.4): the
+/// decisions around the first diverging record, each already described
+/// by [`crate::replay::Decision::describe`], with the culprit flagged.
+/// Events outside `window` ordinals of the highlight are elided.
+pub fn ascii_event_strip(events: &[(u64, String)], highlight: u64, window: u64) -> String {
+    let mut out = String::new();
+    let lo = highlight.saturating_sub(window);
+    let hi = highlight.saturating_add(window);
+    let mut elided = 0usize;
+    for (ordinal, text) in events {
+        if *ordinal < lo || *ordinal > hi {
+            elided += 1;
+            continue;
+        }
+        let marker = if *ordinal == highlight { ">>" } else { "  " };
+        out.push_str(&format!("{marker} {text}\n"));
+    }
+    if elided > 0 {
+        out.push_str(&format!("   ({elided} events outside the ±{window} window elided)\n"));
+    }
+    out
+}
+
 fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -503,6 +528,17 @@ mod tests {
         assert!(j.contains("\"cat\": \"pack\""));
         assert!(j.contains("\\\"A_c\\\"")); // quotes escaped
         assert!(j.contains("\"ts\": 1000.000"));
+    }
+
+    #[test]
+    fn event_strip_marks_highlight_and_elides_far_events() {
+        let events: Vec<(u64, String)> = (0..20).map(|i| (i, format!("ev{i}"))).collect();
+        let s = ascii_event_strip(&events, 10, 3);
+        assert!(s.contains(">> ev10"), "{s}");
+        assert!(s.contains("   ev7"), "{s}");
+        assert!(s.contains("   ev13"), "{s}");
+        assert!(!s.contains("ev3\n"), "{s}");
+        assert!(s.contains("13 events outside"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Replay-based regression suite for the capture/replay subsystem
+//! (DESIGN.md §16): capture a mixed-kind, mixed-precision serve run,
+//! replay it repeatedly, and certify bitwise-identical results and
+//! decision streams — including across crew sizes, which is the
+//! schedule-invariance property (§8/§13) doing real operational work.
+//!
+//! The chaos CI lane builds this suite with `--features chaos`, so the
+//! capture hooks are exercised with the fault-injection hooks compiled
+//! in (and disarmed): the determinism claim holds in the
+//! instrumentation-heavy build too, not just the lean one.
+//!
+//! The capture recorder is process-global (one ordinal space), so every
+//! test that arms it serializes on [`CAP_LOCK`] — `run_replay` arms it
+//! internally as well, which is why the lock wraps whole test bodies.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::factor::FactorKind;
+use malleable_lu::matrix::{Mat, Matrix};
+use malleable_lu::replay::{
+    bundle, capture, factor_digest, run_replay, solve_digest, Bundle, BundleCfg, DecisionKind,
+};
+use malleable_lu::serve::{LuRequest, LuServer, ServeConfig, SolveRequest};
+use malleable_lu::solve::SolvePrec;
+use std::sync::Mutex;
+
+/// Serializes use of the process-global capture recorder across tests
+/// in this binary (other test binaries are separate processes).
+static CAP_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        bo: 16,
+        bi: 8,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    }
+}
+
+/// Run the reference mixed workload on `server`, waiting for every
+/// result. Returns the per-request digests in submission order —
+/// computed through the same digest functions the capture hooks use, so
+/// an uncaptured run yields directly comparable values.
+fn run_workload(server: &LuServer) -> Vec<u64> {
+    let lu64 = Matrix::random(64, 64, 11);
+    let chol = Matrix::random_spd(48, 22);
+    let qr = Matrix::random(56, 40, 33);
+    let lu32 = Mat::<f32>::random(64, 64, 44);
+    let sa = Matrix::random(48, 48, 55);
+    let sb: Vec<f64> = (0..48).map(|i| 1.0 + (i as f64) * 0.25).collect();
+    let h0 = server.submit(LuRequest::new(lu64));
+    let h1 = server.submit(LuRequest::new(chol).with_kind(FactorKind::Chol).with_priority(1));
+    let h2 = server.submit(LuRequest::new(qr).with_kind(FactorKind::Qr));
+    let h3 = server.submit(LuRequest::new(lu32).with_priority(2));
+    let h4 = server.submit_solve(SolveRequest::new(sa, sb).with_prec(SolvePrec::Mixed));
+    let r0 = h0.wait();
+    let r1 = h1.wait();
+    let r2 = h2.wait();
+    let r3 = h3.wait();
+    let r4 = h4.wait();
+    assert!(r0.error.is_none() && !r0.cancelled, "{:?}", r0.error);
+    assert!(r1.error.is_none() && !r1.cancelled, "{:?}", r1.error);
+    assert!(r2.error.is_none() && !r2.cancelled, "{:?}", r2.error);
+    assert!(r3.error.is_none() && !r3.cancelled, "{:?}", r3.error);
+    assert!(r4.error.is_none() && !r4.cancelled, "{:?}", r4.error);
+    vec![
+        factor_digest(&r0),
+        factor_digest(&r1),
+        factor_digest(&r2),
+        factor_digest(&r3),
+        solve_digest(&r4),
+    ]
+}
+
+/// Capture the reference workload on a fresh `workers`-worker server
+/// and assemble the bundle the way `mlu serve --capture` does.
+/// Caller must hold [`CAP_LOCK`].
+fn captured_bundle(workers: usize) -> Bundle {
+    let cfg = serve_cfg(workers);
+    let bcfg = BundleCfg::from_serve(&cfg);
+    assert!(capture::start(), "no capture may be active here");
+    let server = LuServer::new(cfg);
+    run_workload(&server);
+    server.shutdown();
+    let (decisions, mut requests) = capture::stop().expect("capture was armed");
+    requests.sort_by_key(|r| r.id);
+    Bundle {
+        cfg: bcfg,
+        requests,
+        decisions,
+    }
+}
+
+#[test]
+fn capture_replay_roundtrip_certifies_three_rounds() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let bundle = captured_bundle(3);
+    assert_eq!(bundle.requests.len(), 5);
+    for r in &bundle.requests {
+        assert_ne!(r.digest, 0, "request {} never got its result digest", r.id);
+        assert!(!r.cancelled && !r.failed);
+    }
+    // Every request contributed its full invariant lifecycle.
+    for kind in [
+        DecisionKind::Submit,
+        DecisionKind::LeaseGrant,
+        DecisionKind::Checkpoint,
+        DecisionKind::LeaseRevoke,
+    ] {
+        let n = bundle.decisions.iter().filter(|d| d.kind == kind).count();
+        assert!(n >= 5, "{}: only {n} records", kind.name());
+    }
+    // The capture -> bundle -> capture round trip is byte-identical
+    // (the tentpole's "compact versioned bundle" leg).
+    let bytes = bundle::encode(&bundle);
+    let back = bundle::decode(&bytes).expect("own encoding must decode");
+    assert_eq!(back, bundle);
+    assert_eq!(bundle::encode(&back), bytes, "re-encode must be byte-identical");
+    // Replay three times on the captured crew size: bitwise results,
+    // identical invariant decision streams, every round.
+    let report = run_replay(&bundle, 3, None).expect("replay must run");
+    assert_eq!(report.rounds, 3);
+    assert_eq!(report.certified, 5);
+    assert_eq!(report.skipped, 0);
+    assert!(
+        report.certified_ok(),
+        "divergence: {}",
+        report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+    );
+    let rendered = report.render();
+    assert!(rendered.contains("CERTIFIED"), "{rendered}");
+}
+
+#[test]
+fn replay_certifies_across_crew_sizes() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let bundle = captured_bundle(2);
+    for workers in [1usize, 3, 6] {
+        let report = run_replay(&bundle, 1, Some(workers)).expect("replay must run");
+        assert!(
+            report.certified_ok(),
+            "workers={workers}: {}",
+            report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+        );
+        assert_eq!(report.certified, 5, "workers={workers}");
+    }
+}
+
+#[test]
+fn capture_changes_no_results_and_is_deterministic() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Uncaptured reference run: same digests the hooks would compute.
+    let server = LuServer::new(serve_cfg(3));
+    let bare = run_workload(&server);
+    server.shutdown();
+    // Captured run: recording must not change a single result bit —
+    // the "capture overhead changes zero decisions" pin.
+    let b1 = captured_bundle(3);
+    let captured: Vec<u64> = b1.requests.iter().map(|r| r.digest).collect();
+    assert_eq!(captured, bare, "capture mode altered a result");
+    // And capture itself is deterministic: a second captured run records
+    // the same request payloads and the same invariant decision stream.
+    let b2 = captured_bundle(3);
+    assert_eq!(b1.requests, b2.requests);
+    // Per-request invariant subsequences reproduce record-for-record;
+    // only the global interleaving across requests is timing-dependent.
+    let inv = |b: &Bundle, id: u64| -> Vec<(DecisionKind, u64, u64)> {
+        b.decisions
+            .iter()
+            .filter(|d| d.kind.invariant() && d.req == id)
+            .map(|d| (d.kind, d.a, d.b))
+            .collect()
+    };
+    for id in 0..5u64 {
+        assert_eq!(inv(&b1, id), inv(&b2, id), "invariant stream differs for req {id}");
+    }
+}
+
+#[test]
+fn injected_divergence_reports_exact_ordinal_and_refuses_certification() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut bundle = captured_bundle(2);
+    // Perturb one *invariant* record: the first checkpoint of request 0.
+    let idx = bundle
+        .decisions
+        .iter()
+        .position(|d| d.kind == DecisionKind::Checkpoint && d.req == 0)
+        .expect("request 0 must have checkpoints");
+    let expected_ordinal = bundle.decisions[idx].ordinal;
+    bundle.decisions[idx].b ^= 1; // one ulp in the cost estimate
+    let report = run_replay(&bundle, 1, None).expect("replay must run");
+    assert!(!report.certified_ok(), "perturbed bundle must not certify");
+    assert_eq!(report.certified, 0, "certification is refused outright");
+    let d = report.divergence.expect("divergence must be reported");
+    assert_eq!(
+        d.ordinal, expected_ordinal,
+        "first divergence must name the exact perturbed ordinal"
+    );
+    assert_eq!(d.req, 0);
+    assert!(d.got.is_some(), "replay produced a record at that position");
+    assert!(
+        d.context.contains(">>"),
+        "context strip must mark the culprit:\n{}",
+        d.context
+    );
+    let rendered = format!("{d}");
+    assert!(
+        rendered.contains(&format!("ordinal {expected_ordinal}")),
+        "{rendered}"
+    );
+}
+
+#[test]
+fn environmental_records_never_block_certification() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut bundle = captured_bundle(2);
+    // Perturb every *environmental* record: steal deltas, WS joins,
+    // admission verdicts are timing artifacts (§16.4) — certification
+    // must not compare them.
+    let mut touched = 0;
+    for d in &mut bundle.decisions {
+        if !d.kind.invariant() {
+            d.b ^= 0xdead;
+            touched += 1;
+        }
+    }
+    assert!(touched > 0, "workload must produce environmental records");
+    let report = run_replay(&bundle, 1, None).expect("replay must run");
+    assert!(
+        report.certified_ok(),
+        "environmental perturbation must not refuse certification: {}",
+        report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+    );
+}
+
+#[test]
+fn tampered_result_digest_refuses_certification() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut bundle = captured_bundle(2);
+    bundle.requests[1].digest ^= 1;
+    let report = run_replay(&bundle, 1, None).expect("replay must run");
+    assert!(!report.certified_ok(), "wrong digest must not certify");
+    let d = report.divergence.expect("divergence must be reported");
+    assert_eq!(d.req, 1);
+    assert!(d.expected.contains("digest"), "{}", d.expected);
+}
+
+/// The chaos build compiles the fault-injection hooks into every
+/// checkpoint the capture recorder instruments; disarmed, they must not
+/// cost a single decision record or result bit.
+#[cfg(feature = "chaos")]
+#[test]
+fn capture_replay_certifies_with_chaos_hooks_compiled_in() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(!malleable_lu::faultplan::fired(), "no fault may be armed");
+    let bundle = captured_bundle(3);
+    let report = run_replay(&bundle, 2, None).expect("replay must run");
+    assert!(
+        report.certified_ok(),
+        "chaos-instrumented build diverged: {}",
+        report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+    );
+    assert_eq!(report.certified, 5);
+}

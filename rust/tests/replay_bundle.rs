@@ -1,0 +1,242 @@
+//! Golden-bundle compatibility pin for the `.mrb` replay format
+//! (DESIGN.md §16.3).
+//!
+//! `fixtures/golden_v1.mrb` is a committed v1 bundle whose byte image
+//! this suite pins against [`bundle::encode`] — the same discipline the
+//! proto pin tests apply to the wire protocol. If either direction of
+//! the codec drifts, these tests fail; the fix is never to regenerate
+//! the fixture in place but to **bump [`bundle::VERSION`]** and keep
+//! [`bundle::decode_v1`] reading the old image. The fixture covers all
+//! three payload shapes (f64 factor, f32 factor with per-request block
+//! overrides, mixed-precision solve with an rhs), the cancelled/failed
+//! flag bits, a client id, and one decision record of every
+//! [`DecisionKind`].
+
+use malleable_lu::pool::StealPolicy;
+use malleable_lu::replay::{bundle, Bundle, BundleCfg, Decision, DecisionKind, ReqRecord};
+
+const GOLDEN: &[u8] = include_bytes!("fixtures/golden_v1.mrb");
+
+fn f64le(vals: &[f64]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn f32le(vals: &[f32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// The in-memory image of the committed fixture. Field-for-field, this
+/// is the v1 format contract; the byte pin below keeps it honest.
+fn golden_bundle() -> Bundle {
+    Bundle {
+        cfg: BundleCfg {
+            workers: 2,
+            bo: 8,
+            bi: 4,
+            mc: 16,
+            kc: 8,
+            nc: 12,
+            steal: StealPolicy::Auto,
+        },
+        requests: vec![
+            ReqRecord {
+                id: 0,
+                kind: bundle::REQ_LU,
+                prec: 0,
+                priority: 0,
+                cancelled: false,
+                failed: false,
+                m: 3,
+                n: 3,
+                bo: 0,
+                bi: 0,
+                deadline_ms: 0,
+                client: bundle::NO_CLIENT,
+                cols_done: 3,
+                digest: 0x0123_4567_89ab_cdef,
+                data: f64le(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]),
+                rhs: vec![],
+            },
+            ReqRecord {
+                id: 1,
+                kind: bundle::REQ_SOLVE,
+                prec: 2,
+                priority: 1,
+                cancelled: true,
+                failed: false,
+                m: 2,
+                n: 2,
+                bo: 0,
+                bi: 0,
+                deadline_ms: 250,
+                client: 7,
+                cols_done: 0,
+                digest: 0,
+                data: f64le(&[4.0, 1.0, 1.0, 3.0]),
+                rhs: f64le(&[1.0, 2.0]),
+            },
+            ReqRecord {
+                id: 2,
+                kind: bundle::REQ_QR,
+                prec: 1,
+                priority: 0,
+                cancelled: false,
+                failed: true,
+                m: 4,
+                n: 2,
+                bo: 8,
+                bi: 4,
+                deadline_ms: 0,
+                client: bundle::NO_CLIENT,
+                cols_done: 1,
+                digest: 0xfeed_face_00c0_ffee,
+                data: f32le(&[0.5, -1.5, 2.25, -3.0, 4.0, 0.125, -0.75, 8.0]),
+                rhs: vec![],
+            },
+        ],
+        decisions: vec![
+            Decision {
+                ordinal: 0,
+                kind: DecisionKind::Submit,
+                req: 0,
+                a: (3 << 32) | 3,
+                b: 0,
+            },
+            Decision {
+                ordinal: 1,
+                kind: DecisionKind::Admission,
+                req: 0,
+                a: 7,
+                b: (3 << 8) | (3 << 32),
+            },
+            Decision {
+                ordinal: 2,
+                kind: DecisionKind::LeaseGrant,
+                req: 0,
+                a: 0,
+                b: 1.5f64.to_bits(),
+            },
+            Decision {
+                ordinal: 3,
+                kind: DecisionKind::Checkpoint,
+                req: 0,
+                a: 1,
+                b: 0.75f64.to_bits(),
+            },
+            Decision {
+                ordinal: 4,
+                kind: DecisionKind::StealDelta,
+                req: 0,
+                a: 1,
+                b: (2 << 32) | 8,
+            },
+            Decision {
+                ordinal: 5,
+                kind: DecisionKind::WsJoin,
+                req: 0,
+                a: 5,
+                b: 0,
+            },
+            Decision {
+                ordinal: 6,
+                kind: DecisionKind::EtTrigger,
+                req: 1,
+                a: 0,
+                b: 1,
+            },
+            Decision {
+                ordinal: 7,
+                kind: DecisionKind::LeaseRevoke,
+                req: 0,
+                a: 3,
+                b: 0,
+            },
+        ],
+    }
+}
+
+#[test]
+fn golden_byte_image_is_pinned() {
+    let bytes = bundle::encode(&golden_bundle());
+    assert_eq!(
+        bytes,
+        GOLDEN,
+        "encoder output drifted from the committed v1 fixture — if the \
+         format changed on purpose, bump bundle::VERSION and keep \
+         decode_v1 reading this image"
+    );
+    // The layout constants are part of the same contract.
+    let payloads = 72 + (32 + 16) + 32;
+    assert_eq!(
+        GOLDEN.len(),
+        bundle::PREFIX_LEN + 3 * bundle::REQ_FIXED + payloads + 8 * bundle::DEC_LEN
+    );
+    assert_eq!(&GOLDEN[0..4], &bundle::MAGIC);
+    assert_eq!(GOLDEN[4], bundle::VERSION);
+}
+
+#[test]
+fn golden_roundtrips_through_both_decoders() {
+    let want = golden_bundle();
+    let via_dispatch = bundle::decode(GOLDEN).expect("golden must decode");
+    assert_eq!(via_dispatch, want);
+    // decode_v1 is a public, permanent entry point: future versions must
+    // keep it able to read this exact image.
+    let via_v1 = bundle::decode_v1(GOLDEN).expect("v1 decoder must keep reading v1");
+    assert_eq!(via_v1, want);
+    assert_eq!(bundle::encode(&via_v1), GOLDEN, "re-encode must be byte-identical");
+}
+
+#[test]
+fn golden_fields_decode_to_the_documented_semantics() {
+    let b = bundle::decode(GOLDEN).expect("golden must decode");
+    assert_eq!(b.cfg.steal, StealPolicy::Auto);
+    assert!(!b.requests[0].cancelled && !b.requests[0].failed);
+    assert!(b.requests[1].cancelled && !b.requests[1].failed);
+    assert_eq!(b.requests[1].deadline_ms, 250);
+    assert_eq!(b.requests[1].client, 7);
+    assert!(!b.requests[2].cancelled && b.requests[2].failed);
+    assert_eq!((b.requests[2].bo, b.requests[2].bi), (8, 4));
+    assert_eq!(bundle::parse_kind(b.requests[2].kind), Some(malleable_lu::factor::FactorKind::Qr));
+    assert_eq!(bundle::parse_kind(b.requests[1].kind), None, "solve is not a factor kind");
+    // Every decision kind appears exactly once, in tag order.
+    let tags: Vec<u8> = b.decisions.iter().map(|d| d.kind.tag()).collect();
+    assert_eq!(tags, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    // The invariant/environmental split the replayer certifies on.
+    let inv: Vec<u8> = b
+        .decisions
+        .iter()
+        .filter(|d| d.kind.invariant())
+        .map(|d| d.kind.tag())
+        .collect();
+    assert_eq!(inv, vec![1, 3, 4, 8]);
+}
+
+#[test]
+fn unknown_version_is_rejected_not_guessed() {
+    let mut bumped = GOLDEN.to_vec();
+    bumped[4] = 2;
+    let e = bundle::decode(&bumped).expect_err("version 2 must be rejected");
+    assert!(e.0.contains("version 2"), "{e}");
+    // And decode_v1 refuses to be fed the wrong version rather than
+    // misparsing it.
+    assert!(bundle::decode_v1(&bumped).is_err());
+}
+
+#[test]
+fn truncated_golden_is_rejected() {
+    for cut in [GOLDEN.len() - 1, GOLDEN.len() - bundle::DEC_LEN - 1, 20, 4] {
+        assert!(bundle::decode(&GOLDEN[..cut]).is_err(), "cut at {cut} must fail");
+    }
+}
+
+/// Regenerate the committed fixture from [`golden_bundle`]. Kept
+/// `#[ignore]`d: run it (and commit the result) only as part of a
+/// deliberate, version-bumped format change —
+/// `cargo test --test replay_bundle -- --ignored regenerate`.
+#[test]
+#[ignore = "writes tests/fixtures/golden_v1.mrb; run only on a deliberate format change"]
+fn regenerate_golden_fixture() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_v1.mrb");
+    std::fs::write(path, bundle::encode(&golden_bundle())).expect("write fixture");
+}
