@@ -1,31 +1,39 @@
-//! Factorization-family throughput: LU, Cholesky, and QR driven through
-//! the *same* generic WS+ET look-ahead driver, measured per kind **and
-//! per precision** (`f32` + `f64` lanes) and emitted as machine-readable
-//! `BENCH_factor.json` so the trajectory is tracked PR over PR (the
-//! factorization-family counterpart of `bench_lu_variants`).
+//! Factorization-family throughput: LU, Cholesky, and QR measured per
+//! kind, per precision (`f32` + `f64` lanes), **and per driver family**
+//! — the WS+ET look-ahead driver against the tile-DAG dataflow runtime
+//! (DESIGN.md §17), head-to-head on the same pool, kernels, and block
+//! sizes — emitted as machine-readable `BENCH_factor.json` so the
+//! trajectory is tracked PR over PR.
 //!
 //! Absolute numbers on the CI container are 1-core numbers; what this
-//! harness guards is (a) all three kinds complete through one driver in
-//! both precisions, (b) their relative throughput stays in the right
-//! ballpark (Cholesky does half the flops of LU, QR twice), and (c) the
-//! JSON artifact keeps flowing for the perf-smoke trend, now with a
-//! `prec` field on every record.
+//! harness guards is (a) all three kinds complete through both driver
+//! families in both precisions, (b) their relative throughput stays in
+//! the right ballpark (Cholesky does half the flops of LU, QR twice),
+//! and (c) the JSON artifact keeps flowing for the perf-smoke trend,
+//! with `prec` and `driver` fields on every record.
+//!
+//! `--driver lookahead|dag|both` (default `both`) selects the lanes —
+//! the CI `dag` smoke lane runs `--quick --driver dag` for one cheap
+//! DAG point per kind.
 
 use malleable_lu::blis::BlisParams;
 use malleable_lu::cli::Args;
-use malleable_lu::factor::{factorize_lookahead, FactorKind, LaOpts};
+use malleable_lu::factor::{factorize_lookahead, DriverFamily, FactorCtl, FactorKind, LaOpts};
 use malleable_lu::matrix::{naive, Mat};
 use malleable_lu::pool::Pool;
 use malleable_lu::scalar::Scalar;
+use malleable_lu::tilert::factorize_dag;
 use malleable_lu::util::json::Value;
 use malleable_lu::util::{gflops, timed};
 
-/// Bench one `(kind, n)` cell in precision `S`; returns the JSON record.
+/// Bench one `(driver, kind, n)` cell in precision `S`; returns the
+/// JSON record.
 #[allow(clippy::too_many_arguments)]
 fn bench_cell<S: Scalar>(
     pool: &Pool,
     params: &BlisParams,
     opts: &LaOpts,
+    driver: DriverFamily,
     kind: FactorKind,
     n: usize,
     bo: usize,
@@ -40,10 +48,31 @@ fn bench_cell<S: Scalar>(
     let mut last = None;
     for _ in 0..reps {
         let mut f = a0.clone();
-        let (secs, out) =
-            timed(|| factorize_lookahead(kind, pool, params, &mut f, bo, bi, opts, None));
+        let (secs, out) = match driver {
+            DriverFamily::Lookahead => {
+                timed(|| factorize_lookahead(kind, pool, params, &mut f, bo, bi, opts, None))
+            }
+            DriverFamily::Dag => {
+                timed(|| factorize_dag(kind, pool, params, &mut f, bo, bi, &FactorCtl::default()))
+            }
+        };
         assert!(!out.cancelled);
-        assert_eq!(out.cols_done, n, "{} {} n={n}", kind.name(), S::NAME);
+        assert!(
+            out.error.is_none(),
+            "{} {} {}: {:?}",
+            driver.name(),
+            kind.name(),
+            S::NAME,
+            out.error
+        );
+        assert_eq!(
+            out.cols_done,
+            n,
+            "{} {} {} n={n}",
+            driver.name(),
+            kind.name(),
+            S::NAME
+        );
         best = best.min(secs);
         last = Some((f, out));
     }
@@ -58,17 +87,20 @@ fn bench_cell<S: Scalar>(
     let tol = 64.0 * n as f64 * S::EPSILON.to_f64();
     assert!(
         r < tol,
-        "{} {} n={n}: residual {r} above {tol}",
+        "{} {} {} n={n}: residual {r} above {tol}",
+        driver.name(),
         kind.name(),
         S::NAME
     );
     let g = gflops(kind.flops(n, n), best);
     println!(
-        "{:<5} {:<4} n={n:<5} {best:.4}s  {g:.2} GFLOPS",
+        "{:<9} {:<5} {:<4} n={n:<5} {best:.4}s  {g:.2} GFLOPS",
+        driver.name(),
         kind.name(),
         S::NAME
     );
     Value::obj([
+        ("driver", Value::Str(driver.name().into())),
         ("kind", Value::Str(kind.name().into())),
         ("prec", Value::Str(S::NAME.into())),
         ("n", Value::Num(n as f64)),
@@ -81,6 +113,17 @@ fn main() {
     let args = Args::from_env();
     let quick = args.has("quick");
     let out_path = args.get_str("out", "BENCH_factor.json");
+    let driver_sel = args.get_str("driver", "both");
+    let drivers: Vec<DriverFamily> = match driver_sel.as_str() {
+        "both" => vec![DriverFamily::Lookahead, DriverFamily::Dag],
+        s => match DriverFamily::parse(s) {
+            Some(d) => vec![d],
+            None => {
+                eprintln!("unknown --driver {s:?} (expected lookahead|dag|both)");
+                std::process::exit(2);
+            }
+        },
+    };
     let sizes: Vec<usize> = if quick { vec![96] } else { vec![256, 384] };
     let reps = if quick { 1 } else { 3 };
     let threads = std::thread::available_parallelism()
@@ -97,14 +140,16 @@ fn main() {
     };
 
     let mut records = Vec::new();
-    for &n in &sizes {
-        for &kind in FactorKind::all() {
-            records.push(bench_cell::<f64>(
-                &pool, &params, &opts, kind, n, bo, bi, reps,
-            ));
-            records.push(bench_cell::<f32>(
-                &pool, &params, &opts, kind, n, bo, bi, reps,
-            ));
+    for &driver in &drivers {
+        for &n in &sizes {
+            for &kind in FactorKind::all() {
+                records.push(bench_cell::<f64>(
+                    &pool, &params, &opts, driver, kind, n, bo, bi, reps,
+                ));
+                records.push(bench_cell::<f32>(
+                    &pool, &params, &opts, driver, kind, n, bo, bi, reps,
+                ));
+            }
         }
     }
 

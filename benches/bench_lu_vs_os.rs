@@ -1,47 +1,81 @@
-//! Fig. 17 — LU_ET (static look-ahead + WS + ET) vs LU_OS (task runtime).
+//! Fig. 17 — the WS+ET look-ahead driver vs the task-parallel runtime.
 //!
-//! Real-mode run of both coordinators plus the simulated comparison at
-//! paper scale. Reported per size: wall time, GFLOPS, and the block-size
-//! sensitivity the paper highlights (ET adapts, OS does not).
+//! The in-repo showdown the paper stages against OmpSs: the malleable
+//! look-ahead driver ([`malleable_lu::factor::factorize_lookahead`] with
+//! WS + ET enabled) against the tile-DAG dataflow runtime
+//! ([`malleable_lu::tilert::factorize_dag`], DESIGN.md §17) on the same
+//! pool, kernels, and block sizes. Real-mode numbers per size, plus the
+//! simulated comparison at paper scale. Reported: wall time, GFLOPS, and
+//! the block-size sensitivity the paper highlights (the look-ahead
+//! driver adapts its panel width under ET; the DAG runtime does not).
 
 use malleable_lu::blis::BlisParams;
-use malleable_lu::lu::{factorize, residual, LuConfig, Variant};
+use malleable_lu::factor::{factorize_lookahead, FactorCtl, FactorKind, LaOpts};
+use malleable_lu::lu::residual;
 use malleable_lu::matrix::Matrix;
+use malleable_lu::pool::Pool;
 use malleable_lu::sim::{simulate, HwModel, SimVariant};
+use malleable_lu::tilert::factorize_dag;
 use malleable_lu::util::{gflops, lu_flops, timed};
 
-fn run(n: usize, v: Variant, bo: usize) -> (f64, f64) {
+/// One WS+ET look-ahead run: returns (seconds, gflops).
+fn run_lookahead(pool: &Pool, n: usize, bo: usize) -> (f64, f64) {
     let a0 = Matrix::random(n, n, 3);
-    let cfg = LuConfig {
-        variant: v,
-        bo,
-        bi: 32,
-        threads: 2,
-        params: BlisParams::default(),
+    let params = BlisParams::default();
+    let opts = LaOpts {
+        malleable: true,
+        early_term: true,
         ..Default::default()
     };
     let mut f = a0.clone();
-    let (secs, out) = timed(|| factorize(&mut f, &cfg, None));
+    let (secs, out) = timed(|| {
+        factorize_lookahead(FactorKind::Lu, pool, &params, &mut f, bo, 32, &opts, None)
+    });
     let r = residual(&a0, &f, &out.ipiv);
-    assert!(r < 1e-11, "{}: residual {r}", v.name());
+    assert!(r < 1e-11, "lookahead: residual {r}");
+    (secs, gflops(lu_flops(n, n), secs))
+}
+
+/// One tile-DAG run on the same pool: returns (seconds, gflops).
+fn run_dag(pool: &Pool, n: usize, bo: usize) -> (f64, f64) {
+    let a0 = Matrix::random(n, n, 3);
+    let params = BlisParams::default();
+    let mut f = a0.clone();
+    let (secs, out) = timed(|| {
+        factorize_dag(
+            FactorKind::Lu,
+            pool,
+            &params,
+            &mut f,
+            bo,
+            32,
+            &FactorCtl::default(),
+        )
+    });
+    assert!(out.error.is_none(), "dag: {:?}", out.error);
+    let r = residual(&a0, &f, &out.ipiv);
+    assert!(r < 1e-11, "dag: residual {r}");
     (secs, gflops(lu_flops(n, n), secs))
 }
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let ns: &[usize] = if quick { &[256] } else { &[384, 768] };
+    let pool = Pool::new(2);
 
-    println!("# Fig17 real mode (t=2, 1-core host)");
-    println!("n,bo,ET_secs,ET_gflops,OS_secs,OS_gflops");
+    println!("# Fig17 real mode (t=2, 1-core host): lookahead(WS+ET) vs tile-DAG");
+    println!("n,bo,LA_secs,LA_gflops,DAG_secs,DAG_gflops");
     for &n in ns {
         for bo in [64, 128] {
-            let (et_s, et_g) = run(n, Variant::EarlyTerm, bo);
-            let (os_s, os_g) = run(n, Variant::OmpSs, bo);
-            println!("{n},{bo},{et_s:.3},{et_g:.2},{os_s:.3},{os_g:.2}");
+            let (la_s, la_g) = run_lookahead(&pool, n, bo);
+            let (dag_s, dag_g) = run_dag(&pool, n, bo);
+            println!("{n},{bo},{la_s:.3},{la_g:.2},{dag_s:.3},{dag_g:.2}");
         }
     }
 
-    // Paper-scale comparison on the simulated testbed.
+    // Paper-scale comparison on the simulated testbed (the sim keeps the
+    // paper's labels: Et = the WS+ET coordinator, Os = the task-parallel
+    // runtime it was benchmarked against).
     let hw = HwModel::default();
     println!("# Fig17 simulated 6-core testbed (fixed blocks: ET 192, OS 256)");
     println!("n,ET192_gflops,OS256_gflops");

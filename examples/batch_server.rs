@@ -1,12 +1,13 @@
 //! Batch server demo: submit a mixed bag of factorization requests —
-//! different sizes, priorities, a deadline, and a cancellation — to one
-//! [`malleable_lu::serve::LuServer`] over a shared malleable pool, then
-//! render the multi-problem trace.
+//! different sizes, priorities, driver families, a deadline, and a
+//! cancellation — to one [`malleable_lu::serve::LuServer`] over a shared
+//! malleable pool, then render the multi-problem trace.
 //!
 //! ```bash
 //! cargo run --release --example batch_server
 //! ```
 
+use malleable_lu::factor::DriverFamily;
 use malleable_lu::matrix::{naive, Matrix};
 use malleable_lu::serve::{LuRequest, LuServer, ServeConfig};
 use malleable_lu::trace;
@@ -22,7 +23,11 @@ fn main() {
     let server = LuServer::new(cfg);
     let rec = trace::start();
 
-    // Three ordinary requests of mixed sizes and priorities.
+    // Three ordinary requests of mixed sizes and priorities, alternating
+    // driver families: even indices take the WS+ET look-ahead driver,
+    // odd ones the tile-DAG runtime (DESIGN.md §17) — floaters donated
+    // to a DAG request attach as extra DAG executors instead of crew
+    // members, and both families produce identical bits.
     let sizes = [256usize, 160, 320];
     let originals: Vec<Matrix> = sizes
         .iter()
@@ -32,7 +37,18 @@ fn main() {
     let handles: Vec<_> = originals
         .iter()
         .enumerate()
-        .map(|(i, a)| server.submit(LuRequest::new(a.clone()).with_priority(i as u8)))
+        .map(|(i, a)| {
+            let family = if i % 2 == 0 {
+                DriverFamily::Lookahead
+            } else {
+                DriverFamily::Dag
+            };
+            server.submit(
+                LuRequest::new(a.clone())
+                    .with_priority(i as u8)
+                    .with_driver(family),
+            )
+        })
         .collect();
 
     // A request with an impossible deadline: ET cancels it at a panel
@@ -44,11 +60,12 @@ fn main() {
     let superseded = server.submit(LuRequest::new(Matrix::random(384, 384, 100)));
     superseded.cancel();
 
-    for (h, a0) in handles.into_iter().zip(&originals) {
+    for (i, (h, a0)) in handles.into_iter().zip(&originals).enumerate() {
         let res = h.wait();
         let r = naive::lu_residual(a0, &res.a, &res.ipiv);
+        let family = if i % 2 == 0 { "lookahead" } else { "dag" };
         println!(
-            "req{} n={}: done in {:.3}s, residual {r:.3e}",
+            "req{} n={} [{family}]: done in {:.3}s, residual {r:.3e}",
             res.id,
             a0.rows(),
             res.secs

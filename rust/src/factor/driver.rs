@@ -49,7 +49,7 @@ use std::sync::{Arc, Mutex};
 /// returns its offset `j * rows + i`. Both drivers run this before
 /// touching the matrix so a poisoned input yields a typed
 /// [`FactorError::NonFinite`] instead of NaN-filled factors.
-fn first_non_finite<S: Scalar>(a: &MatMut<S>) -> Option<usize> {
+pub(crate) fn first_non_finite<S: Scalar>(a: &MatMut<S>) -> Option<usize> {
     let (m, n) = (a.rows(), a.cols());
     for j in 0..n {
         for i in 0..m {
@@ -69,7 +69,7 @@ fn first_non_finite<S: Scalar>(a: &MatMut<S>) -> Option<usize> {
 /// zero) and QR does the same for a zero `R` diagonal (rank deficiency);
 /// a Cholesky breakdown or a non-finite diagonal ends the run after this
 /// panel's commit.
-fn panel_health<S: Scalar>(
+pub(crate) fn panel_health<S: Scalar>(
     kind: FactorKind,
     a: &MatMut<S>,
     f: usize,

@@ -39,6 +39,11 @@ pub use error::FactorError;
 pub use lu::LuFactor;
 pub use qr::QrFactor;
 
+// The driver-family selector lives next to the DAG driver it names;
+// re-exported here because it dispatches between this module's drivers
+// and [`crate::tilert`]'s.
+pub use crate::tilert::factor::DriverFamily;
+
 use crate::blis::BlisParams;
 use crate::matrix::{Mat, MatMut};
 use crate::pool::{Crew, EntryPolicy, Pool};

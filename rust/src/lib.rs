@@ -52,7 +52,14 @@
 //!   certification, and sweep counterfactual steal policies through the
 //!   [`sim`] cost model (DESIGN.md §16).
 //! - [`taskrt`] — an OmpSs-like dependency-driven task runtime used by the
-//!   `LU_OS` baseline.
+//!   `LU_OS` baseline (superseded by [`tilert`] for new code).
+//! - [`tilert`] — the **tile-DAG dataflow runtime**: tile views over
+//!   [`matrix::Mat`], automatic dependency inference from per-task
+//!   `In`/`Out`/`InOut` access declarations, a deterministic ready-queue
+//!   scheduler on the [`pool`] substrate, and crew-malleable tiled
+//!   LU/Cholesky/QR ([`tilert::factorize_dag`]) — the third driver
+//!   family, selectable with `mlu --driver dag` and per serve request
+//!   (DESIGN.md §17).
 //! - [`trace`] — an Extrae-like execution tracer (ASCII Gantt + Chrome
 //!   JSON) used to regenerate the paper's trace figures.
 //! - [`sim`] — a discrete-event simulator of the paper's 6-core Xeon
@@ -81,5 +88,6 @@ pub mod serve;
 pub mod sim;
 pub mod solve;
 pub mod taskrt;
+pub mod tilert;
 pub mod trace;
 pub mod util;

@@ -2,8 +2,12 @@
 //!
 //! ```text
 //! mlu factorize --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
+//!               [--driver lookahead|dag]  # dag = tile-DAG dataflow
+//!                                         # runtime (DESIGN.md §17)
 //! mlu chol      --n 1024 --variant et [--bo 256 --bi 32 --threads 6 --check]
+//!               [--driver lookahead|dag]
 //! mlu qr        --n 1024 [--m 2048] --variant et [--bo --bi --threads --check]
+//!               [--driver lookahead|dag]
 //! mlu solve     --n 512 --prec f32|f64|mixed     # precision-selected solve:
 //!               # mixed = f32 factorization + f64 iterative refinement
 //!               # to full double-precision backward error (DESIGN.md §12)
@@ -87,6 +91,7 @@ fn main() {
 const HELP: &str = "mlu — malleable thread-level factorizations (see README.md)
 commands: factorize | chol | qr | solve | batch | serve | sclient | replay | trace | fig {14,15,16,17} | gepp | xla | info
 global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
+factor flags: --driver lookahead|dag selects the driver family (dag = tile-DAG dataflow runtime, DESIGN.md §17)
 solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)
 serve flags: --listen unix:<path>|tcp:<host:port> --workers N --max-pending Q --max-client C --max-dim D --grace-ms G
              --capture out.mrb (record every scheduling decision into a replay bundle, DESIGN.md §16)
@@ -160,11 +165,69 @@ fn lu_config(args: &Args) -> LuConfig {
     }
 }
 
+/// Parse `--driver lookahead|dag` (default `lookahead`): which driver
+/// family runs the factorization (DESIGN.md §17.6).
+fn parse_driver(args: &Args) -> factor::DriverFamily {
+    let s = args.get_str("driver", "lookahead");
+    factor::DriverFamily::parse(&s).unwrap_or_else(|| {
+        eprintln!("unknown --driver {s:?} (expected lookahead|dag)");
+        std::process::exit(2);
+    })
+}
+
+/// Run one factorization through the tile-DAG runtime (`--driver dag`)
+/// and print the bench line; shared by `factorize`/`chol`/`qr`.
+fn run_dag_kind(kind: FactorKind, args: &Args, a0: &Matrix) -> i32 {
+    let (m, n) = (a0.rows(), a0.cols());
+    let bo = args.get("bo", 256usize);
+    let bi = args.get("bi", 32usize);
+    let threads = args.get("threads", 6usize);
+    let params = resolve_params(args);
+    let pool = Pool::new(threads.saturating_sub(1));
+    let mut f = a0.clone();
+    let (secs, out) = timed(|| {
+        malleable_lu::tilert::factorize_dag(
+            kind,
+            &pool,
+            &params,
+            &mut f,
+            bo,
+            bi,
+            &factor::FactorCtl::default(),
+        )
+    });
+    if let Some(e) = &out.error {
+        eprintln!("dag {}: {e}", kind.name());
+        return 1;
+    }
+    println!(
+        "dag {} m={m} n={n} bo={bo} bi={bi} t={threads}: {secs:.3}s  {:.2} GFLOPS",
+        kind.name(),
+        gflops(kind.flops(m, n), secs)
+    );
+    if args.has("check") {
+        let r = match kind {
+            FactorKind::Lu => naive::lu_residual(a0, &f, &out.ipiv),
+            FactorKind::Chol => naive::chol_residual(a0, &f),
+            FactorKind::Qr => naive::qr_residual(a0, &f, &out.tau),
+        };
+        println!("  residual = {r:.3e}");
+        if r > 1e-10 {
+            eprintln!("RESIDUAL TOO LARGE");
+            return 1;
+        }
+    }
+    0
+}
+
 fn cmd_factorize(args: &Args) -> i32 {
     let n = args.get("n", 1024usize);
-    let cfg = lu_config(args);
     let seed = args.get("seed", 42u64);
     let a0 = Matrix::random(n, n, seed);
+    if parse_driver(args) == factor::DriverFamily::Dag {
+        return run_dag_kind(FactorKind::Lu, args, &a0);
+    }
+    let cfg = lu_config(args);
     let mut f = a0.clone();
     let (secs, out) = timed(|| lu::factorize(&mut f, &cfg, None));
     println!(
@@ -241,6 +304,9 @@ fn cmd_factor_kind(kind: FactorKind, args: &Args) -> i32 {
         FactorKind::Chol => Matrix::random_spd(n, seed),
         _ => Matrix::random(m, n, seed),
     };
+    if parse_driver(args) == factor::DriverFamily::Dag {
+        return run_dag_kind(kind, args, &a0);
+    }
     let mut f = a0.clone();
     let pool = Pool::new(threads.saturating_sub(1));
     let (secs, out) = timed(|| {

@@ -55,6 +55,14 @@ pub enum DecisionKind {
     /// The lease was withdrawn at request completion. `a` packs
     /// `cols_done | cancelled << 32 | poisoned << 33`, `b` is 0.
     LeaseRevoke = 8,
+    /// The tile-DAG runtime granted a ready task to an executor
+    /// (DESIGN.md §17.5). `a` is the task's submit sequence number,
+    /// `b` its priority. **Environmental**: with more than one executor
+    /// the grant interleaving is timing-shaped, and the DAG's
+    /// determinism argument makes the *result* independent of it — the
+    /// invariant records of a DAG-driven request are the same
+    /// submit/lease/checkpoint stream the crew drivers emit.
+    TaskGrant = 9,
 }
 
 impl DecisionKind {
@@ -74,6 +82,7 @@ impl DecisionKind {
             6 => Some(Self::WsJoin),
             7 => Some(Self::EtTrigger),
             8 => Some(Self::LeaseRevoke),
+            9 => Some(Self::TaskGrant),
             _ => None,
         }
     }
@@ -89,6 +98,7 @@ impl DecisionKind {
             Self::WsJoin => "ws-join",
             Self::EtTrigger => "et-trigger",
             Self::LeaseRevoke => "lease-revoke",
+            Self::TaskGrant => "task-grant",
         }
     }
 
@@ -167,6 +177,9 @@ impl Decision {
                 (self.a >> 32) & 1,
                 (self.a >> 33) & 1
             ),
+            DecisionKind::TaskGrant => {
+                format!("task {} priority {}", self.a, self.b)
+            }
         };
         format!(
             "#{} {} req{} [{}]: {}",
@@ -281,15 +294,17 @@ mod tests {
 
     #[test]
     fn kind_tags_roundtrip_and_split_is_stable() {
-        for tag in 1..=8u8 {
+        for tag in 1..=9u8 {
             let k = DecisionKind::from_tag(tag).unwrap();
             assert_eq!(k.tag(), tag);
         }
         assert!(DecisionKind::from_tag(0).is_none());
-        assert!(DecisionKind::from_tag(9).is_none());
+        assert!(DecisionKind::from_tag(10).is_none());
         // The invariant/environmental split is part of the v1 format
         // contract (DESIGN.md §16.4) — changing it is a version bump.
-        let inv: Vec<u8> = (1..=8)
+        // Task grants (tag 9) are environmental by the DAG determinism
+        // argument (DESIGN.md §17.5).
+        let inv: Vec<u8> = (1..=9)
             .filter(|&t| DecisionKind::from_tag(t).unwrap().invariant())
             .collect();
         assert_eq!(inv, vec![1, 3, 4, 8]);
@@ -297,7 +312,7 @@ mod tests {
 
     #[test]
     fn describe_names_every_kind() {
-        for tag in 1..=8u8 {
+        for tag in 1..=9u8 {
             let d = Decision {
                 ordinal: 7,
                 kind: DecisionKind::from_tag(tag).unwrap(),

@@ -222,6 +222,18 @@ fn replay_once(bundle: &Bundle, workers: Option<usize>) -> Result<ReplayRound, S
         cfg.workers = w.max(1);
     }
     let server = LuServer::new(cfg);
+    // Driver family per request: the `ReqRecord` wire format predates
+    // driver families, so the family code travels in bits 24–31 of the
+    // Submit decision's second operand instead (0 = look-ahead, which is
+    // what pre-§17 bundles carry there). Without this re-routing, a
+    // DAG-family capture would replay through the look-ahead driver and
+    // mis-certify on the first checkpoint.
+    let families: std::collections::HashMap<u64, u8> = bundle
+        .decisions
+        .iter()
+        .filter(|d| d.kind == capture::DecisionKind::Submit)
+        .map(|d| (d.req, ((d.b >> 24) & 0xff) as u8))
+        .collect();
     let mut handles = Vec::with_capacity(bundle.requests.len());
     for r in &bundle.requests {
         let (m, n) = (r.m as usize, r.n as usize);
@@ -246,12 +258,13 @@ fn replay_once(bundle: &Bundle, workers: Option<usize>) -> Result<ReplayRound, S
         } else {
             let kind = super::bundle::parse_kind(r.kind)
                 .unwrap_or(FactorKind::Lu);
+            let family = families.get(&r.id).copied().unwrap_or(0);
             if r.prec == 1 {
                 let a: Mat<f32> = mat_from_le(m, n, &r.data);
-                AnyHandle::F32(server.submit(factor_req(a, kind, r)))
+                AnyHandle::F32(server.submit(factor_req(a, kind, r, family)))
             } else {
                 let a: Matrix = mat_from_le(m, n, &r.data);
-                AnyHandle::F64(server.submit(factor_req(a, kind, r)))
+                AnyHandle::F64(server.submit(factor_req(a, kind, r, family)))
             }
         };
         handles.push(h);
@@ -268,8 +281,11 @@ fn replay_once(bundle: &Bundle, workers: Option<usize>) -> Result<ReplayRound, S
     })
 }
 
-fn factor_req<S: Scalar>(a: Mat<S>, kind: FactorKind, r: &ReqRecord) -> LuRequest<S> {
-    let mut req = LuRequest::new(a).with_kind(kind).with_priority(r.priority);
+fn factor_req<S: Scalar>(a: Mat<S>, kind: FactorKind, r: &ReqRecord, family: u8) -> LuRequest<S> {
+    let mut req = LuRequest::new(a)
+        .with_kind(kind)
+        .with_priority(r.priority)
+        .with_driver(crate::factor::DriverFamily::from_code(family));
     if r.bo != 0 && r.bi != 0 {
         req = req.with_blocks(r.bo as usize, r.bi as usize);
     }

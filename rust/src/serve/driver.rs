@@ -15,12 +15,13 @@
 
 use super::registry::Lease;
 use crate::blis::BlisParams;
-use crate::factor::{factorize_blocked, FactorCtl, FactorKind, FactorOutcome};
+use crate::factor::{factorize_blocked, DriverFamily, FactorCtl, FactorKind, FactorOutcome};
 use crate::matrix::MatMut;
 use crate::pool::Crew;
 use crate::replay::capture::{self, DecisionKind};
 use crate::scalar::Scalar;
 use crate::sim::HwModel;
+use crate::tilert;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
@@ -55,6 +56,11 @@ pub struct DriveCfg<'a> {
     /// the daemon ([`crate::serve::net`]); folds into the trace tag as
     /// `req{id}@c{client}:{kind}:{prec}`.
     pub client: Option<u64>,
+    /// Which driver family executes the request: the crew-malleable
+    /// blocked driver (default), or the tile-DAG runtime — in which
+    /// case the leader publishes its drain in the lease's
+    /// [`crate::tilert::DagSlot`] so floaters join as DAG executors.
+    pub driver: DriverFamily,
 }
 
 /// Factorize `a` on the calling thread, leading `crew`, in `a`'s own
@@ -108,7 +114,26 @@ pub fn drive<S: Scalar>(crew: &mut Crew, a: MatMut<S>, cfg: &DriveCfg) -> Factor
         tag: Some(&tag),
         on_checkpoint: Some(&checkpoint),
     };
-    let out = factorize_blocked(cfg.kind, crew, cfg.params, a, cfg.bo, cfg.bi, &ctl);
+    let out = match cfg.driver {
+        DriverFamily::Lookahead => {
+            factorize_blocked(cfg.kind, crew, cfg.params, a, cfg.bo, cfg.bi, &ctl)
+        }
+        // Tile-DAG family: the leader drives the drain and publishes it
+        // in the lease; floaters that pick this lease attach as DAG
+        // executors and retire at task boundaries when revoked. The
+        // checkpoint closure (cost refresh, capture records, deadline
+        // fold) is the same one the blocked path uses.
+        DriverFamily::Dag => tilert::factorize_dag_shared(
+            cfg.kind,
+            &cfg.lease.dag,
+            cfg.params,
+            a,
+            cfg.bo,
+            cfg.bi,
+            &ctl,
+            cfg.lease.id,
+        ),
+    };
     // A crew panic surfaces as `FactorError::Internal` and leaves the
     // crew poisoned; poison the lease too so the floater policy stops
     // routing helpers at a doomed request while it is wound down.
@@ -166,6 +191,7 @@ mod tests {
             cancel: &cancel,
             deadline: None,
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -200,6 +226,7 @@ mod tests {
             cancel: &cancel,
             deadline: None,
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(crate::faultplan::fired(), "plan must have fired");
@@ -233,6 +260,7 @@ mod tests {
             cancel: &cancel,
             deadline: None,
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let r = std::panic::catch_unwind(AssertUnwindSafe(|| drive(&mut crew, f.view_mut(), &cfg)));
         assert!(r.is_err(), "leader panic must unwind to the serve loop");
@@ -263,6 +291,7 @@ mod tests {
                 cancel: &cancel,
                 deadline: None,
                 client: None,
+                driver: DriverFamily::Lookahead,
             };
             let out = drive(&mut crew, f.view_mut(), &cfg);
             assert!(!out.cancelled, "{}", kind.name());
@@ -297,6 +326,7 @@ mod tests {
             cancel: &cancel,
             deadline: None,
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -333,6 +363,7 @@ mod tests {
             cancel: &cancel,
             deadline: None,
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(!out.cancelled);
@@ -340,6 +371,47 @@ mod tests {
         let (stolen, tiles) = crew.shared().steal_stats();
         assert_eq!(stolen, 0);
         assert!(tiles > 0, "hybrid scheduler must have run the update tiles");
+    }
+
+    #[test]
+    fn drive_dag_family_matches_blocked_bitwise() {
+        let hw = HwModel::default();
+        let params = BlisParams::tiny();
+        let a0 = Matrix::random(48, 48, 55);
+        let mut reference = a0.clone();
+        let mut crew = Crew::new();
+        let rout = factorize_blocked(
+            FactorKind::Lu,
+            &mut crew,
+            &params,
+            reference.view_mut(),
+            8,
+            4,
+            &FactorCtl::default(),
+        );
+        let mut f = a0.clone();
+        let lease = Arc::new(Lease::new(5, 0, crew.shared(), 1.0));
+        let cancel = AtomicBool::new(false);
+        let cfg = DriveCfg {
+            params: &params,
+            hw: &hw,
+            bo: 8,
+            bi: 4,
+            kind: FactorKind::Lu,
+            lease: &lease,
+            cancel: &cancel,
+            deadline: None,
+            client: None,
+            driver: DriverFamily::Dag,
+        };
+        let out = drive(&mut crew, f.view_mut(), &cfg);
+        assert!(!out.cancelled);
+        assert!(out.error.is_none(), "dag drive: {:?}", out.error);
+        assert_eq!(out.cols_done, 48);
+        assert_eq!(out.ipiv, rout.ipiv, "pivot sequences must agree");
+        assert_eq!(f.data(), reference.data(), "factors must agree bitwise");
+        assert_eq!(lease.remaining(), 0.0);
+        assert!(!lease.is_poisoned());
     }
 
     #[test]
@@ -360,6 +432,7 @@ mod tests {
             cancel: &cancel,
             deadline: Some(Instant::now()),
             client: None,
+            driver: DriverFamily::Lookahead,
         };
         let out = drive(&mut crew, f.view_mut(), &cfg);
         assert!(out.cancelled);

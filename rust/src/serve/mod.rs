@@ -73,7 +73,7 @@ pub mod registry;
 pub use registry::{CrewRegistry, Lease};
 
 use crate::blis::{BlisParams, PackArena};
-use crate::factor::{FactorError, FactorKind};
+use crate::factor::{DriverFamily, FactorError, FactorKind};
 use crate::matrix::{Mat, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
 use crate::replay::capture::{self, DecisionKind};
@@ -140,6 +140,12 @@ pub struct LuRequest<S: Scalar = f64> {
     /// per-request Gantt lanes name the connection, and used by
     /// admission accounting.
     pub client: Option<u64>,
+    /// Which driver family factorizes the request: the WS+ET look-ahead
+    /// driver (default) or the tile-DAG dataflow runtime
+    /// ([`crate::tilert`], DESIGN.md §17). Floaters donated to a
+    /// DAG-family request attach as extra DAG executors instead of crew
+    /// members.
+    pub driver: DriverFamily,
 }
 
 impl<S: Scalar> LuRequest<S> {
@@ -153,6 +159,7 @@ impl<S: Scalar> LuRequest<S> {
             bo: None,
             bi: None,
             client: None,
+            driver: DriverFamily::default(),
         }
     }
 
@@ -188,6 +195,13 @@ impl<S: Scalar> LuRequest<S> {
     /// unset).
     pub fn with_client(mut self, client: u64) -> Self {
         self.client = Some(client);
+        self
+    }
+
+    /// Select the driver family that factorizes this request
+    /// ([`DriverFamily::Lookahead`] by default).
+    pub fn with_driver(mut self, driver: DriverFamily) -> Self {
+        self.driver = driver;
         self
     }
 }
@@ -687,6 +701,9 @@ fn capture_submit_factor<S: Scalar>(id: u64, req: &LuRequest<S>) {
         u64::from(kind)
             | (u64::from(prec) << 8)
             | (u64::from(req.priority) << 16)
+            // Driver-family code in bits 24–31 (0 = look-ahead, so
+            // bundles captured before DESIGN.md §17 replay unchanged).
+            | (u64::from(req.driver.code()) << 24)
             | (bo << 32)
             | (bi << 48),
     );
@@ -768,11 +785,18 @@ fn serve_loop(state: &ServerState) {
             // Donate this worker until the picture changes: the crew
             // closes, a problem arrives or finishes, queued work appears,
             // or the server stops.
-            lease.shared.member_loop_while(state.cfg.entry, || {
+            let donate = || {
                 state.registry.epoch() == e0
                     && state.queued.load(Ordering::Acquire) == 0
                     && !state.stop.load(Ordering::Acquire)
-            });
+            };
+            // DAG-family requests publish their scheduler in the lease's
+            // DAG slot: attach as an extra deterministic executor there.
+            // Crew-family requests keep the slot closed, so the floater
+            // takes the member-loop path into the WS+ET kernels.
+            if lease.dag.attach(&donate).is_none() {
+                lease.shared.member_loop_while(state.cfg.entry, &donate);
+            }
             backoff.reset();
         } else if backoff.is_completed() {
             // Fully idle (no queue, no crews): sleep instead of burning
@@ -803,6 +827,7 @@ fn lead_factor<S: Scalar>(
         bo,
         bi,
         client,
+        driver,
     } = req;
     let bo = bo.unwrap_or(state.cfg.bo);
     let bi = bi.unwrap_or(state.cfg.bi);
@@ -867,6 +892,7 @@ fn lead_factor<S: Scalar>(
         cancel: &jstate.cancel,
         deadline,
         client,
+        driver,
     };
     let out = driver::drive(&mut crew, a.view_mut(), &dcfg);
     // Withdraw before disbanding: floaters leave at the epoch bump, and

@@ -40,6 +40,12 @@ pub struct Lease {
     /// donating workers to a dying problem wastes them — and is
     /// unregistered by its leader's cleanup path shortly after.
     poisoned: AtomicBool,
+    /// Attachment point for the tile-DAG driver family: when the
+    /// request runs on [`crate::tilert`] the leader publishes its DAG
+    /// drain here, and floaters enter it as donated executors instead
+    /// of enlisting in the crew ([`crate::tilert::DagSlot::attach`]).
+    /// Closed (attaches find nothing) for crew-family requests.
+    pub dag: crate::tilert::DagSlot,
 }
 
 impl Lease {
@@ -52,6 +58,7 @@ impl Lease {
             remaining: AtomicU64::new(remaining.to_bits()),
             steal_pressure: AtomicU64::new(0.0f64.to_bits()),
             poisoned: AtomicBool::new(false),
+            dag: crate::tilert::DagSlot::new(),
         }
     }
 

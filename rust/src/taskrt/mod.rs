@@ -196,13 +196,16 @@ pub struct RunStats {
 /// (detected as a stall) or if a task panics.
 pub fn run(graph: Graph, pool: &Pool) -> RunStats {
     let n = graph.tasks.len();
+    // An empty graph is a no-op: return zeroed stats without touching
+    // the pool at all (no queue, no worker submissions, no per-worker
+    // slots) so degenerate problem sizes cost nothing.
+    if n == 0 {
+        return RunStats::default();
+    }
     let stats = Arc::new(Mutex::new(RunStats {
         per_worker: vec![0; pool.workers() + 1],
         start_order: Vec::with_capacity(n),
     }));
-    if n == 0 {
-        return Arc::try_unwrap(stats).unwrap().into_inner().unwrap();
-    }
     let graph = Arc::new(graph);
     let sched = Arc::new(SchedState {
         queue: Mutex::new(ReadyQueue {
@@ -299,6 +302,17 @@ mod tests {
     fn empty_graph_runs() {
         let pool = Pool::new(1);
         let stats = run(GraphBuilder::new().build(), &pool);
+        assert!(stats.start_order.is_empty());
+    }
+
+    #[test]
+    fn empty_graph_is_a_pool_free_noop() {
+        // The zeroed-default stats (empty `per_worker`, not
+        // `vec![0; workers+1]`) prove the early return fired before any
+        // pool interaction — no queue was built, nothing was submitted.
+        let pool = Pool::new(2);
+        let stats = run(GraphBuilder::new().build(), &pool);
+        assert!(stats.per_worker.is_empty());
         assert!(stats.start_order.is_empty());
     }
 

@@ -1,0 +1,668 @@
+//! Tiled LU / Cholesky / QR on the tile-DAG runtime — the task-parallel
+//! side of the paper's WS+ET-vs-runtime comparison, instantiated through
+//! the same [`Factorization`] kernels as the blocked and look-ahead
+//! drivers (DESIGN.md §17.4).
+//!
+//! Per outer panel `k` (block column of width `b_o`) the factorization
+//! becomes:
+//!
+//! - `P[k]` — factorize the panel (priority 1: the critical path),
+//!   declaring `InOut` on the panel's tile column;
+//! - `U[k,j]` — apply the committed panel to trailing tile column `j`,
+//!   declaring `In` on the panel tiles and `InOut` on column `j`'s
+//!   tiles.
+//!
+//! The builder's last-writer tracking then infers exactly the classical
+//! tiled-LU dependences — `P[k] ← U[k-1,k]` and
+//! `U[k,j] ← {P[k], U[k-1,j]}` — that [`crate::taskrt::lu_os`] spells
+//! out by hand.
+//!
+//! **Bitwise agreement with the blocked driver.** Each task body runs
+//! the blocked driver's own kernels on a private sequential crew, and
+//! [`Factorization::apply`] is column-split invariant (every output
+//! element's reduction is sequential in `k` — the property the
+//! look-ahead `P`/`R` split and the `steal_agree` suite already pin
+//! down), so splitting one trailing update into per-tile-column tasks
+//! reorders nothing within any element's operation chain. LU's lazy
+//! left row swaps are deferred to a `k`-ordered epilogue — legal because
+//! no DAG task ever touches the already-final columns to their left —
+//! which performs the exact swap sequence of the blocked loop.
+//! Executor count, donations, and revocations therefore cannot change a
+//! bit of the result (`tests/tilert_agree.rs`).
+//!
+//! **Cancellation and checkpoints.** Panel tasks complete in `k` order
+//! (each `P[k]` transitively depends on `P[k-1]`), so committed columns
+//! advance exactly as in the blocked driver and the leader fires
+//! [`FactorCtl::on_checkpoint`] with the same monotone column counts.
+//! A cancel (or a fatal panel-health error) stops task granting at the
+//! next task boundary; unlike the blocked driver, already-committed
+//! panels may still owe trailing updates to columns right of the
+//! factored prefix — the prefix itself is identical.
+
+use super::{Access, DagBuilder, DagRunStats, DagSlot, TileGrid, NO_REQ};
+use crate::blis::BlisParams;
+use crate::factor::driver::{first_non_finite, panel_health};
+use crate::factor::{
+    CholFactor, FactorCtl, FactorError, FactorKind, Factorization, FactorOutcome, LuFactor,
+    QrFactor,
+};
+use crate::matrix::{Mat, MatMut};
+use crate::pool::{Crew, Pool};
+use crate::scalar::Scalar;
+use crate::trace::{span, Kind};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which driver family executes a factorization — the malleable
+/// WS+ET look-ahead family (with the blocked driver as its per-request
+/// serve face) or the tile-DAG dataflow runtime. The paper's two
+/// contenders, selectable per CLI run (`--driver`) and per serve
+/// request ([`crate::serve::LuRequest::with_driver`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash, Default)]
+pub enum DriverFamily {
+    /// Crew-based malleable drivers: the WS+ET look-ahead
+    /// ([`crate::factor::factorize_lookahead`]) standalone, the blocked
+    /// driver ([`crate::factor::factorize_blocked`]) per serve request.
+    #[default]
+    Lookahead,
+    /// The tile-DAG dataflow runtime ([`factorize_dag`]).
+    Dag,
+}
+
+impl DriverFamily {
+    /// Parse a family name: `lookahead`/`la`/`ws`/`blocked`, or
+    /// `dag`/`tile-dag`/`tilert`.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lookahead" | "la" | "ws" | "blocked" => DriverFamily::Lookahead,
+            "dag" | "tile-dag" | "tilert" => DriverFamily::Dag,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (bench records, trace tags).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverFamily::Lookahead => "lookahead",
+            DriverFamily::Dag => "dag",
+        }
+    }
+
+    /// Stable wire code (capture bundles pack it into the Submit
+    /// decision; 0 must remain `Lookahead` so pre-§17 bundles replay
+    /// unchanged).
+    pub fn code(&self) -> u8 {
+        match self {
+            DriverFamily::Lookahead => 0,
+            DriverFamily::Dag => 1,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; unknown codes fall back to
+    /// `Lookahead` (forward-compatible decode).
+    pub fn from_code(c: u8) -> Self {
+        match c {
+            1 => DriverFamily::Dag,
+            _ => DriverFamily::Lookahead,
+        }
+    }
+}
+
+/// Where a DAG factorization finds its executors.
+enum DagExec<'a> {
+    /// The calling thread plus every worker of the pool.
+    Pool(&'a Pool),
+    /// The calling thread, plus whatever donors [`DagSlot::attach`]
+    /// while the drain is in flight (the serve layer's WS path).
+    Slot(&'a DagSlot),
+}
+
+/// Per-run shared state: panel states handed from `P[k]` to `U[k,·]`
+/// and the epilogue, ordered panel progress, and the first
+/// health-check failure.
+struct DagProgress<St> {
+    states: Vec<Mutex<Option<Arc<St>>>>,
+    panels_done: AtomicUsize,
+    health: Mutex<Option<(FactorError, bool)>>,
+}
+
+/// Generic tile-DAG factorization driver: build the task graph, drain
+/// it, then run the `k`-ordered epilogue (LU's deferred left swaps +
+/// per-panel commits). Returns the accumulated kind output, committed
+/// column count, whether a cancel cut the run short, the first typed
+/// failure, and the drain statistics.
+#[allow(clippy::too_many_arguments)]
+fn dag_ctl<S: Scalar, F: Factorization<S>>(
+    fk: &F,
+    exec: DagExec<'_>,
+    params: &BlisParams,
+    a: MatMut<S>,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+    capture_req: u64,
+) -> (F::Acc, usize, bool, Option<FactorError>, DagRunStats) {
+    let (m, n) = (a.rows(), a.cols());
+    let kmax = m.min(n);
+    let bo = bo.max(1);
+    let mut acc = F::Acc::default();
+    if kmax == 0 {
+        // Mirror `taskrt::run`'s empty-graph contract: nothing to do,
+        // touch neither the pool nor the scheduler.
+        return (acc, 0, false, None, DagRunStats::default());
+    }
+    if let Some(off) = first_non_finite(&a) {
+        return (
+            acc,
+            0,
+            false,
+            Some(FactorError::NonFinite { first_offset: off }),
+            DagRunStats::default(),
+        );
+    }
+    let npanels = kmax.div_ceil(bo);
+    let grid = TileGrid::new(m, n, bo);
+    let progress: Arc<DagProgress<F::State>> = Arc::new(DagProgress {
+        states: (0..npanels).map(|_| Mutex::new(None)).collect(),
+        panels_done: AtomicUsize::new(0),
+        health: Mutex::new(None),
+    });
+    // Fatal-error fuse: a task that detects a run-ending condition trips
+    // it, and every executor polls it between tasks.
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut builder = DagBuilder::new();
+    for k in 0..npanels {
+        let kl = k * bo;
+        let bw = bo.min(kmax - kl);
+        let panel_access: Vec<Access> =
+            grid.col_tiles(k, k).into_iter().map(Access::InOut).collect();
+        {
+            let fk = fk.clone();
+            let params = *params;
+            let prog = Arc::clone(&progress);
+            let stop = Arc::clone(&stop);
+            let label = match ctl.tag {
+                None => format!("dag.panel[{kl}]"),
+                Some(tag) => format!("{tag}.panel[{kl}]"),
+            };
+            builder.submit(format!("P[{k}]"), 1, &panel_access, move |crew| {
+                let st = span(Kind::Panel, &label, || {
+                    fk.panel(crew, &params, a, kl, bw, bi, false, None)
+                });
+                debug_assert_eq!(st.k_done, bw);
+                if let Some((e, fatal)) = panel_health(fk.kind(), &a, kl, bw) {
+                    let mut h = prog.health.lock().unwrap_or_else(|e| e.into_inner());
+                    if h.is_none() {
+                        *h = Some((e, fatal));
+                    }
+                    drop(h);
+                    if fatal {
+                        stop.store(true, Ordering::Release);
+                    }
+                }
+                *prog.states[k].lock().unwrap_or_else(|e| e.into_inner()) =
+                    Some(Arc::new(st.state));
+                // Panel tasks are chained (P[k] <- U[k-1,k] <- P[k-1]),
+                // so this count advances strictly in k order.
+                prog.panels_done.store(k + 1, Ordering::Release);
+            });
+        }
+        let jt0 = (kl + bw) / bo;
+        for j in jt0..grid.tile_cols() {
+            let (jl, jw) = grid.col_span(j);
+            let j0 = jl.max(kl + bw);
+            let j1 = (jl + jw).min(n);
+            if j0 >= j1 {
+                continue;
+            }
+            let mut access: Vec<Access> =
+                grid.col_tiles(k, k).into_iter().map(Access::In).collect();
+            access.extend(grid.col_tiles(j, k).into_iter().map(Access::InOut));
+            let fk = fk.clone();
+            let params = *params;
+            let prog = Arc::clone(&progress);
+            let label = match ctl.tag {
+                None => format!("dag.update[{kl}:{j0}]"),
+                Some(tag) => format!("{tag}.update[{kl}:{j0}]"),
+            };
+            builder.submit(format!("U[{k},{j}]"), 0, &access, move |crew| {
+                let st = prog.states[k]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .clone()
+                    .expect("panel state ready by dependency");
+                span(Kind::Gemm, &label, || {
+                    fk.apply(crew, &params, a, kl, bw, &st, j0, j1);
+                });
+            });
+        }
+    }
+
+    let shared = builder.build().into_shared(Some(Arc::clone(&stop)), capture_req);
+
+    // The leader's lease doubles as the request-level checkpoint: it is
+    // evaluated between the leader's tasks (and every ~1ms while idle),
+    // folds the borrowed cancel flag into the shared stop fuse, and
+    // fires `on_checkpoint` for each newly completed panel, in order.
+    let cancelled_seen = AtomicBool::new(false);
+    let fired = Cell::new(0usize);
+    let fire_checkpoints = |upto: usize| {
+        while fired.get() < upto {
+            let p = fired.get() + 1;
+            fired.set(p);
+            if let Some(cb) = ctl.on_checkpoint {
+                cb(if p == npanels { kmax } else { p * bo });
+            }
+        }
+    };
+    let leader_lease = || {
+        if let Some(c) = ctl.cancel {
+            if c.load(Ordering::Acquire) && !stop.load(Ordering::Acquire) {
+                cancelled_seen.store(true, Ordering::Release);
+                stop.store(true, Ordering::Release);
+            }
+        }
+        fire_checkpoints(progress.panels_done.load(Ordering::Acquire));
+        true
+    };
+
+    match exec {
+        DagExec::Pool(pool) => {
+            let handles: Vec<_> = (0..pool.workers())
+                .map(|w| {
+                    let s = Arc::clone(&shared);
+                    pool.submit(w, move || {
+                        s.exec(|| true, false);
+                    })
+                })
+                .collect();
+            shared.exec(leader_lease, false);
+            for h in handles {
+                h.wait();
+            }
+        }
+        DagExec::Slot(slot) => {
+            slot.open(&shared);
+            shared.exec(leader_lease, false);
+            slot.close();
+        }
+    }
+    shared.quiesce();
+    let stats = shared.stats();
+
+    // A cancel may have landed after the leader's last lease poll.
+    if ctl
+        .cancel
+        .is_some_and(|c| c.load(Ordering::Acquire) && !shared.is_drained())
+    {
+        cancelled_seen.store(true, Ordering::Release);
+    }
+
+    // Epilogue, on the caller: deferred left-applies (LU's lazy row
+    // swaps) and commits, in k order — the exact sequence the blocked
+    // loop interleaves with its panels.
+    let p_done = progress.panels_done.load(Ordering::Acquire).min(npanels);
+    let mut crew = Crew::new();
+    for k in 0..p_done {
+        let kl = k * bo;
+        let bw = bo.min(kmax - kl);
+        let st = progress.states[k]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("committed panel state present");
+        fk.apply_left(&mut crew, params, a, kl, bw, &st);
+        fk.commit(&mut acc, &st, bw);
+    }
+    fire_checkpoints(p_done);
+    let cols_done = if p_done == npanels { kmax } else { p_done * bo };
+
+    let mut error = progress
+        .health
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .take()
+        .map(|(e, _)| e);
+    if let Some(msg) = &stats.panic {
+        if error.is_none() {
+            error = Some(FactorError::Internal(format!("dag task panicked: {msg}")));
+        }
+    }
+    let cancelled = cancelled_seen.load(Ordering::Acquire);
+    (acc, cols_done, cancelled, error, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn outcome_from<S: Scalar>(
+    kind: FactorKind,
+    exec: DagExec<'_>,
+    params: &BlisParams,
+    a: MatMut<S>,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+    capture_req: u64,
+) -> FactorOutcome<S> {
+    match kind {
+        FactorKind::Lu => {
+            let (ipiv, cols_done, cancelled, error, _) =
+                dag_ctl(&LuFactor, exec, params, a, bo, bi, ctl, capture_req);
+            FactorOutcome {
+                ipiv,
+                tau: Vec::new(),
+                cols_done,
+                cancelled,
+                la_stats: None,
+                error,
+            }
+        }
+        FactorKind::Chol => {
+            let (_, cols_done, cancelled, error, _) =
+                dag_ctl(&CholFactor, exec, params, a, bo, bi, ctl, capture_req);
+            FactorOutcome {
+                ipiv: Vec::new(),
+                tau: Vec::new(),
+                cols_done,
+                cancelled,
+                la_stats: None,
+                error,
+            }
+        }
+        FactorKind::Qr => {
+            let (tau, cols_done, cancelled, error, _) =
+                dag_ctl(&QrFactor, exec, params, a, bo, bi, ctl, capture_req);
+            FactorOutcome {
+                ipiv: Vec::new(),
+                tau,
+                cols_done,
+                cancelled,
+                la_stats: None,
+                error,
+            }
+        }
+    }
+}
+
+/// Factorize `a` in place on the tile-DAG runtime, dispatching on
+/// `kind`, with the calling thread plus every `pool` worker as
+/// executors. The task-parallel counterpart of
+/// [`crate::factor::factorize_lookahead`]; results are bitwise
+/// identical to the blocked driver for any executor count.
+pub fn factorize_dag<S: Scalar>(
+    kind: FactorKind,
+    pool: &Pool,
+    params: &BlisParams,
+    a: &mut Mat<S>,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+) -> FactorOutcome<S> {
+    outcome_from(
+        kind,
+        DagExec::Pool(pool),
+        params,
+        a.view_mut(),
+        bo,
+        bi,
+        ctl,
+        NO_REQ,
+    )
+}
+
+/// Factorize `a` on the tile-DAG runtime with the calling thread as
+/// leader, publishing the drain in `slot` so donated workers can
+/// [`DagSlot::attach`] mid-run and retire at task boundaries when their
+/// lease is revoked — the serve layer's per-request DAG driver.
+/// `capture_req` tags task-grant capture records with the serve
+/// request id ([`NO_REQ`] to suppress).
+#[allow(clippy::too_many_arguments)]
+pub fn factorize_dag_shared<S: Scalar>(
+    kind: FactorKind,
+    slot: &DagSlot,
+    params: &BlisParams,
+    a: MatMut<S>,
+    bo: usize,
+    bi: usize,
+    ctl: &FactorCtl,
+    capture_req: u64,
+) -> FactorOutcome<S> {
+    outcome_from(kind, DagExec::Slot(slot), params, a, bo, bi, ctl, capture_req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::factorize_blocked;
+    use crate::matrix::{naive, Matrix};
+
+    fn bits(a: &Matrix) -> Vec<u64> {
+        a.data().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn driver_family_parse_and_codes() {
+        assert_eq!(DriverFamily::parse("lookahead"), Some(DriverFamily::Lookahead));
+        assert_eq!(DriverFamily::parse("blocked"), Some(DriverFamily::Lookahead));
+        assert_eq!(DriverFamily::parse("DAG"), Some(DriverFamily::Dag));
+        assert_eq!(DriverFamily::parse("tilert"), Some(DriverFamily::Dag));
+        assert_eq!(DriverFamily::parse("ompss"), None);
+        for f in [DriverFamily::Lookahead, DriverFamily::Dag] {
+            assert_eq!(DriverFamily::from_code(f.code()), f);
+            assert_eq!(DriverFamily::parse(f.name()), Some(f));
+        }
+        assert_eq!(DriverFamily::from_code(7), DriverFamily::Lookahead);
+    }
+
+    #[test]
+    fn dag_lu_matches_blocked_bitwise_and_checkpoints_are_ordered() {
+        let n = 56;
+        let a0 = Matrix::random(n, n, 21);
+        let params = BlisParams::tiny();
+
+        let mut f1 = a0.clone();
+        let mut crew = Crew::new();
+        let out1 = factorize_blocked(
+            FactorKind::Lu,
+            &mut crew,
+            &params,
+            f1.view_mut(),
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+
+        let seen = Mutex::new(Vec::new());
+        let cb = |k: usize| seen.lock().unwrap().push(k);
+        let ctl = FactorCtl {
+            on_checkpoint: Some(&cb),
+            ..Default::default()
+        };
+        let pool = Pool::new(2);
+        let mut f2 = a0.clone();
+        let out2 = factorize_dag(FactorKind::Lu, &pool, &params, &mut f2, 16, 4, &ctl);
+        assert_eq!(out2.cols_done, n);
+        assert_eq!(out2.error, None);
+        assert_eq!(out1.ipiv, out2.ipiv);
+        assert_eq!(bits(&f1), bits(&f2));
+        assert_eq!(*seen.lock().unwrap(), vec![16, 32, 48, 56]);
+    }
+
+    #[test]
+    fn dag_handles_wide_and_tall_shapes() {
+        let params = BlisParams::tiny();
+        let pool = Pool::new(1);
+        for (m, n) in [(40usize, 72usize), (72, 40), (50, 50)] {
+            let a0 = Matrix::random(m, n, (m * 31 + n) as u64);
+            let mut f1 = a0.clone();
+            let mut crew = Crew::new();
+            let out1 = factorize_blocked(
+                FactorKind::Lu,
+                &mut crew,
+                &params,
+                f1.view_mut(),
+                16,
+                4,
+                &FactorCtl::default(),
+            );
+            let mut f2 = a0.clone();
+            let out2 = factorize_dag(
+                FactorKind::Lu,
+                &pool,
+                &params,
+                &mut f2,
+                16,
+                4,
+                &FactorCtl::default(),
+            );
+            assert_eq!(out1.ipiv, out2.ipiv, "{m}x{n}");
+            assert_eq!(bits(&f1), bits(&f2), "{m}x{n}");
+            assert_eq!(out2.cols_done, m.min(n));
+        }
+    }
+
+    #[test]
+    fn dag_chol_and_qr_reconstruct() {
+        let params = BlisParams::tiny();
+        let pool = Pool::new(2);
+        let n = 48;
+
+        let a0 = Matrix::random_spd(n, 5);
+        let mut f = a0.clone();
+        let out = factorize_dag(
+            FactorKind::Chol,
+            &pool,
+            &params,
+            &mut f,
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(out.cols_done, n);
+        assert_eq!(out.error, None);
+        let r = naive::chol_residual(&a0, &f);
+        assert!(r < 1e-12, "chol residual {r}");
+
+        let a0 = Matrix::random(n, n, 6);
+        let mut f = a0.clone();
+        let out = factorize_dag(
+            FactorKind::Qr,
+            &pool,
+            &params,
+            &mut f,
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(out.cols_done, n);
+        assert_eq!(out.tau.len(), n);
+        let r = naive::qr_residual(&a0, &f, &out.tau);
+        assert!(r < 1e-11, "qr residual {r}");
+    }
+
+    #[test]
+    fn dag_cancel_leaves_clean_prefix() {
+        let n = 64;
+        let params = BlisParams::tiny();
+        // Leader-only: the cancel lands deterministically between the
+        // leader's task grants (with extra executors the drain could
+        // finish before the leader's next lease poll observes it).
+        let pool = Pool::new(0);
+        let a0 = Matrix::random(n, n, 11);
+
+        let cancel = AtomicBool::new(false);
+        let cb = |k: usize| {
+            if k >= 32 {
+                cancel.store(true, Ordering::Release);
+            }
+        };
+        let ctl = FactorCtl {
+            cancel: Some(&cancel),
+            on_checkpoint: Some(&cb),
+            ..Default::default()
+        };
+        let mut f = a0.clone();
+        let out = factorize_dag(FactorKind::Lu, &pool, &params, &mut f, 16, 4, &ctl);
+        assert!(out.cancelled);
+        assert!(out.cols_done >= 32 && out.cols_done < n, "{}", out.cols_done);
+        assert_eq!(out.ipiv.len(), out.cols_done);
+
+        // Reference: a blocked run cancelled after the same committed
+        // column count. Both runs then committed the same panels and
+        // applied exactly those panels' left swaps, so the factored
+        // prefix (columns and pivots) must agree bit for bit.
+        let stop_at = out.cols_done;
+        let cancel2 = AtomicBool::new(false);
+        let cb2 = |k: usize| {
+            if k >= stop_at {
+                cancel2.store(true, Ordering::Release);
+            }
+        };
+        let ctl2 = FactorCtl {
+            cancel: Some(&cancel2),
+            on_checkpoint: Some(&cb2),
+            ..Default::default()
+        };
+        let mut g = a0.clone();
+        let mut crew = Crew::new();
+        let ref_out = factorize_blocked(
+            FactorKind::Lu,
+            &mut crew,
+            &params,
+            g.view_mut(),
+            16,
+            4,
+            &ctl2,
+        );
+        assert_eq!(ref_out.cols_done, stop_at);
+        assert_eq!(out.ipiv, ref_out.ipiv);
+        for j in 0..stop_at {
+            for i in 0..n {
+                assert_eq!(
+                    f.data()[j * n + i].to_bits(),
+                    g.data()[j * n + i].to_bits(),
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dag_empty_matrix_is_a_noop() {
+        let params = BlisParams::tiny();
+        let pool = Pool::new(0);
+        let mut a = Matrix::zeros(0, 0);
+        let out = factorize_dag(
+            FactorKind::Lu,
+            &pool,
+            &params,
+            &mut a,
+            16,
+            4,
+            &FactorCtl::default(),
+        );
+        assert_eq!(out.cols_done, 0);
+        assert!(!out.cancelled);
+        assert_eq!(out.error, None);
+    }
+
+    #[test]
+    fn dag_reports_nonfinite_input() {
+        let params = BlisParams::tiny();
+        let pool = Pool::new(0);
+        let mut a = Matrix::random(16, 16, 3);
+        a.data_mut()[5] = f64::NAN;
+        let out = factorize_dag(
+            FactorKind::Lu,
+            &pool,
+            &params,
+            &mut a,
+            8,
+            4,
+            &FactorCtl::default(),
+        );
+        assert!(matches!(out.error, Some(FactorError::NonFinite { .. })));
+        assert_eq!(out.cols_done, 0);
+    }
+}

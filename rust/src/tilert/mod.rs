@@ -1,0 +1,857 @@
+//! §tilert — a **tile-DAG dataflow runtime** (DESIGN.md §17), the repo's
+//! third driver family next to the blocked and WS+ET look-ahead drivers
+//! of [`crate::factor`].
+//!
+//! The paper's headline experiment pits its malleable thread-level WS+ET
+//! look-ahead against a task-parallel runtime-based LU (OmpSs). This
+//! module supplies the runtime side of that comparison as a *general*
+//! tile-DAG engine in the style of Buttari, Langou, Kurzak & Dongarra's
+//! tiled-algorithm/dataflow model:
+//!
+//! - [`TileGrid`] — a 2D block layout over a column-major [`MatMut`],
+//!   handing out [`Tile`] handles with `(i, j)` coordinates. Tiles are
+//!   *views*: no data is copied or re-laid-out.
+//! - [`Access`] — per-task access declarations ([`Access::In`],
+//!   [`Access::Out`], [`Access::InOut`]) from which [`DagBuilder`]
+//!   infers dependency edges automatically (last-writer RAW/WAW edges
+//!   plus a readers barrier for WAR), replacing
+//!   [`crate::taskrt::GraphBuilder`]'s manual edge lists.
+//! - [`DagShared`] — a ready-queue scheduler with deterministic
+//!   `(priority desc, submit-seq asc)` grant order, executing on the
+//!   existing [`Pool`]/crew substrate. Every executor owns a private
+//!   sequential [`Crew`] handed to task bodies, so each task's kernels
+//!   run the exact per-element operation chains of the blocked driver.
+//! - **Crew malleability** — executors can [`DagSlot::attach`] *while a
+//!   DAG is draining* (the serve layer's Worker Sharing), and every
+//!   executor re-checks its lease between tasks, retiring cleanly at a
+//!   task boundary when the lease is revoked (DESIGN.md §17.3).
+//!
+//! The factorization instantiation (tiled LU/Cholesky/QR through the
+//! [`crate::factor::Factorization`] trait) lives in [`factor`], and is
+//! reachable through `mlu factorize --driver dag` and per-request
+//! driver-family routing in [`crate::serve`].
+//!
+//! **Determinism.** A task runs exactly once, its body is sequential,
+//! and the dependency edges force every ordering that could affect a
+//! bit. Executor count and grant interleaving therefore cannot change
+//! the result — the same argument, one level up, as the crew-size
+//! invariance of the malleable BLAS (DESIGN.md §8). Task *grants* are
+//! still recorded by capture as an environmental decision kind
+//! ([`crate::replay::capture::DecisionKind::TaskGrant`]) so `mlu replay`
+//! can show the schedule without certifying against it.
+
+pub mod factor;
+
+pub use factor::{factorize_dag, factorize_dag_shared, DriverFamily};
+
+use crate::blis::PackArena;
+use crate::matrix::MatMut;
+use crate::pool::{Crew, Pool};
+use crate::replay::capture::{self, DecisionKind};
+use crate::scalar::Scalar;
+use std::collections::{BTreeSet, HashMap};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Handle to tile `(i, j)` of a [`TileGrid`]. A tile identifies a block
+/// of the underlying matrix for dependency tracking; it carries no data.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Tile {
+    /// Tile row (block-row index).
+    pub i: usize,
+    /// Tile column (block-column index).
+    pub j: usize,
+}
+
+/// A 2D block layout over an `m × n` matrix with square-ish tiles of
+/// side `ts` (edge tiles are smaller). Column-major panels map onto
+/// tile columns without copying: [`TileGrid::view`] is a plain
+/// [`MatMut::sub`].
+#[derive(Copy, Clone, Debug)]
+pub struct TileGrid {
+    m: usize,
+    n: usize,
+    ts: usize,
+}
+
+impl TileGrid {
+    /// Layout for an `m × n` matrix with tile side `ts` (clamped to 1).
+    pub fn new(m: usize, n: usize, ts: usize) -> Self {
+        Self { m, n, ts: ts.max(1) }
+    }
+
+    /// Tile side length.
+    pub fn tile_size(&self) -> usize {
+        self.ts
+    }
+
+    /// Number of tile rows (`⌈m / ts⌉`).
+    pub fn tile_rows(&self) -> usize {
+        self.m.div_ceil(self.ts)
+    }
+
+    /// Number of tile columns (`⌈n / ts⌉`).
+    pub fn tile_cols(&self) -> usize {
+        self.n.div_ceil(self.ts)
+    }
+
+    /// The handle for tile `(i, j)`; panics when out of range.
+    pub fn tile(&self, i: usize, j: usize) -> Tile {
+        assert!(i < self.tile_rows() && j < self.tile_cols(), "tile ({i},{j}) out of range");
+        Tile { i, j }
+    }
+
+    /// Element rows covered by tile row `i`, as `(start, len)`.
+    pub fn row_span(&self, i: usize) -> (usize, usize) {
+        let lo = i * self.ts;
+        (lo, self.ts.min(self.m - lo))
+    }
+
+    /// Element columns covered by tile column `j`, as `(start, len)`.
+    pub fn col_span(&self, j: usize) -> (usize, usize) {
+        let lo = j * self.ts;
+        (lo, self.ts.min(self.n - lo))
+    }
+
+    /// A mutable view of tile `t` of `a` — no copy, column-major stride
+    /// preserved ([`MatMut::sub`]).
+    pub fn view<S: Scalar>(&self, a: MatMut<S>, t: Tile) -> MatMut<S> {
+        let (i0, mh) = self.row_span(t.i);
+        let (j0, nw) = self.col_span(t.j);
+        a.sub(i0, j0, mh, nw)
+    }
+
+    /// Tile handles of one tile column `j`, rows `i0..` — the shape a
+    /// panel task declares (`InOut` on the panel's tile column).
+    pub fn col_tiles(&self, j: usize, i0: usize) -> Vec<Tile> {
+        (i0..self.tile_rows()).map(|i| self.tile(i, j)).collect()
+    }
+}
+
+/// How a task touches one tile. The builder turns these into edges:
+/// a read depends on the tile's last writer; a write additionally
+/// barriers behind every reader since that writer (WAR) and becomes the
+/// new last writer (WAW). `Out` and `InOut` infer the same edges — the
+/// distinction is documentation of intent (a pure `Out` task overwrites
+/// the tile without consuming it).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Access {
+    /// The task reads the tile.
+    In(Tile),
+    /// The task overwrites the tile without reading it.
+    Out(Tile),
+    /// The task reads and writes the tile.
+    InOut(Tile),
+}
+
+/// A task body: runs on exactly one executor, which lends the task its
+/// private sequential [`Crew`] for kernel calls.
+pub type TaskFn = Box<dyn FnOnce(&mut Crew) + Send + 'static>;
+
+struct TaskBuild {
+    name: String,
+    priority: i32,
+    run: TaskFn,
+    deps: Vec<usize>,
+}
+
+#[derive(Default)]
+struct TileTrack {
+    last_writer: Option<usize>,
+    readers: Vec<usize>,
+}
+
+/// Incremental DAG construction with automatic dependency inference
+/// from per-task [`Access`] declarations (DESIGN.md §17.1).
+///
+/// Tasks are submitted in program order; for each declared tile access
+/// the builder consults the tile's tracking state (last writer + readers
+/// since that write) and inserts exactly the RAW/WAW/WAR edges the
+/// access requires. Manual edge lists — the [`crate::taskrt`] interface
+/// — are not expressible here by design.
+#[derive(Default)]
+pub struct DagBuilder {
+    tasks: Vec<TaskBuild>,
+    tiles: HashMap<(usize, usize), TileTrack>,
+}
+
+impl DagBuilder {
+    /// An empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of tasks submitted so far.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether no tasks have been submitted.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Submit a task. `priority` breaks ready-queue ties (higher runs
+    /// first; submit order breaks priority ties), `accesses` declares
+    /// every tile the body touches, and the returned id is the task's
+    /// submit sequence number.
+    pub fn submit(
+        &mut self,
+        name: impl Into<String>,
+        priority: i32,
+        accesses: &[Access],
+        run: impl FnOnce(&mut Crew) + Send + 'static,
+    ) -> usize {
+        let id = self.tasks.len();
+        let mut deps = BTreeSet::new();
+        for &acc in accesses {
+            match acc {
+                Access::In(t) => {
+                    let tr = self.tiles.entry((t.i, t.j)).or_default();
+                    if let Some(w) = tr.last_writer {
+                        deps.insert(w);
+                    }
+                    if tr.readers.last() != Some(&id) {
+                        tr.readers.push(id);
+                    }
+                }
+                Access::Out(t) | Access::InOut(t) => {
+                    let tr = self.tiles.entry((t.i, t.j)).or_default();
+                    if let Some(w) = tr.last_writer {
+                        deps.insert(w);
+                    }
+                    for &r in &tr.readers {
+                        deps.insert(r);
+                    }
+                    tr.readers.clear();
+                    tr.last_writer = Some(id);
+                }
+            }
+        }
+        deps.remove(&id); // In + Out of the same tile in one task
+        self.tasks.push(TaskBuild {
+            name: name.into(),
+            priority,
+            run: Box::new(run),
+            deps: deps.into_iter().collect(),
+        });
+        id
+    }
+
+    /// Freeze the builder into an executable [`Dag`].
+    pub fn build(self) -> Dag {
+        let n = self.tasks.len();
+        let mut dependents = vec![Vec::new(); n];
+        let mut missing = Vec::with_capacity(n);
+        for (id, t) in self.tasks.iter().enumerate() {
+            missing.push(AtomicUsize::new(t.deps.len()));
+            for &d in &t.deps {
+                dependents[d].push(id);
+            }
+        }
+        let slots = self
+            .tasks
+            .into_iter()
+            .map(|t| TaskSlot {
+                name: t.name,
+                priority: t.priority,
+                run: Mutex::new(Some(t.run)),
+            })
+            .collect();
+        Dag {
+            tasks: slots,
+            dependents,
+            missing,
+        }
+    }
+}
+
+struct TaskSlot {
+    name: String,
+    priority: i32,
+    run: Mutex<Option<TaskFn>>,
+}
+
+/// A frozen task graph ready for execution (see [`Dag::into_shared`]).
+pub struct Dag {
+    tasks: Vec<TaskSlot>,
+    dependents: Vec<Vec<usize>>,
+    missing: Vec<AtomicUsize>,
+}
+
+impl Dag {
+    /// Number of tasks in the graph.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Dependency count of task `id` (diagnostics and tests).
+    pub fn dep_count(&self, id: usize) -> usize {
+        self.missing[id].load(Ordering::Relaxed)
+    }
+
+    /// Wrap the graph in its scheduler state, ready for executors.
+    /// `stop` is an optional external cancel flag every executor polls
+    /// between tasks (the factorization layer's fatal-error fuse);
+    /// `capture_req` tags task-grant capture records with a serve
+    /// request id ([`NO_REQ`] suppresses them).
+    pub fn into_shared(self, stop: Option<Arc<AtomicBool>>, capture_req: u64) -> Arc<DagShared> {
+        let n = self.tasks.len();
+        let mut queue = ReadyQueue::default();
+        for (id, t) in self.tasks.iter().enumerate() {
+            if self.missing[id].load(Ordering::Relaxed) == 0 {
+                queue.heap.push(Ready {
+                    priority: t.priority,
+                    seq: id,
+                });
+            }
+        }
+        Arc::new(DagShared {
+            dag: self,
+            queue: Mutex::new(queue),
+            cv: Condvar::new(),
+            remaining: AtomicUsize::new(n),
+            cancel: AtomicBool::new(false),
+            stop,
+            executors: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            retired: AtomicUsize::new(0),
+            tasks_run: AtomicUsize::new(0),
+            grant_order: Mutex::new(Vec::with_capacity(n)),
+            panic_msg: Mutex::new(None),
+            arena: Arc::new(PackArena::new()),
+            capture_req,
+        })
+    }
+}
+
+/// Sentinel for [`Dag::into_shared`]'s `capture_req`: the run is not a
+/// serve request; do not emit task-grant capture records.
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Ready-queue entry: max-heap on `(priority, -seq)` so ties pop in
+/// submit order — the deterministic grant order of DESIGN.md §17.2.
+#[derive(Copy, Clone, Eq, PartialEq)]
+struct Ready {
+    priority: i32,
+    seq: usize,
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+struct ReadyQueue {
+    heap: std::collections::BinaryHeap<Ready>,
+}
+
+/// Aggregate execution statistics of one DAG drain.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DagRunStats {
+    /// Tasks that actually ran (equals the graph size on a full drain).
+    pub tasks_run: usize,
+    /// Peak number of concurrently attached executors.
+    pub executors_peak: usize,
+    /// Executors that attached after the drain started (WS donations).
+    pub joined: usize,
+    /// Executors that left before the drain finished (lease revocations
+    /// honored at a task boundary).
+    pub retired: usize,
+    /// Whether the drain was cut short by a cancel/stop flag.
+    pub cancelled: bool,
+    /// Panic message of the first task body that panicked, if any.
+    pub panic: Option<String>,
+    /// Task ids in grant order (the schedule actually executed; with a
+    /// single executor this is exactly the deterministic
+    /// `(priority, seq)` order).
+    pub grant_order: Vec<usize>,
+}
+
+/// Scheduler state shared by every executor of one DAG drain.
+///
+/// Executors enter through [`DagShared::exec`] (or [`DagSlot::attach`])
+/// and leave at a task boundary when the drain completes, the DAG is
+/// cancelled, or their lease predicate goes false.
+pub struct DagShared {
+    dag: Dag,
+    queue: Mutex<ReadyQueue>,
+    cv: Condvar,
+    remaining: AtomicUsize,
+    cancel: AtomicBool,
+    stop: Option<Arc<AtomicBool>>,
+    executors: AtomicUsize,
+    peak: AtomicUsize,
+    joined: AtomicUsize,
+    retired: AtomicUsize,
+    tasks_run: AtomicUsize,
+    grant_order: Mutex<Vec<usize>>,
+    panic_msg: Mutex<Option<String>>,
+    arena: Arc<PackArena>,
+    capture_req: u64,
+}
+
+impl DagShared {
+    /// Ask every executor to stop granting new tasks; in-flight tasks
+    /// finish. Idempotent.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    /// Whether the drain was cancelled ([`DagShared::cancel`] or the
+    /// external stop flag).
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+            || self
+                .stop
+                .as_ref()
+                .is_some_and(|s| s.load(Ordering::Acquire))
+    }
+
+    /// Tasks not yet completed.
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::Acquire)
+    }
+
+    /// Whether every task has completed.
+    pub fn is_drained(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Currently attached executors.
+    pub fn executors(&self) -> usize {
+        self.executors.load(Ordering::Acquire)
+    }
+
+    /// Run tasks on the calling thread until the drain ends, the DAG is
+    /// cancelled, or `lease()` turns false (checked between tasks — the
+    /// malleability contract: a revoked executor retires cleanly at a
+    /// task boundary). Returns the number of tasks this executor ran.
+    ///
+    /// `donated` marks executors that joined after the drain started
+    /// (counted in [`DagRunStats::joined`]).
+    pub fn exec(self: &Arc<Self>, lease: impl Fn() -> bool, donated: bool) -> usize {
+        self.enter(donated);
+        self.exec_entered(&lease)
+    }
+
+    /// [`Self::exec`] for an executor already registered via
+    /// [`Self::enter`] (the [`DagSlot::attach`] path, which must
+    /// register under the slot lock to not race [`Self::quiesce`]).
+    fn exec_entered(self: &Arc<Self>, lease: &dyn Fn() -> bool) -> usize {
+        let mut crew = Crew::with_arena(Arc::clone(&self.arena));
+        let mut ran = 0usize;
+        let mut revoked = false;
+        loop {
+            if self.is_drained() || self.is_cancelled() {
+                break;
+            }
+            if !lease() {
+                revoked = true;
+                break;
+            }
+            let granted = {
+                let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+                match q.heap.pop() {
+                    Some(r) => {
+                        self.grant_order
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .push(r.seq);
+                        Some(r.seq)
+                    }
+                    None => {
+                        // Tasks are in flight on other executors; wait
+                        // for a release (bounded so lease revocations
+                        // and cancels are observed promptly).
+                        let _ = self
+                            .cv
+                            .wait_timeout(q, Duration::from_millis(1))
+                            .unwrap_or_else(|e| e.into_inner());
+                        None
+                    }
+                }
+            };
+            let Some(id) = granted else { continue };
+            if capture::active() && self.capture_req != NO_REQ {
+                capture::record(
+                    DecisionKind::TaskGrant,
+                    self.capture_req,
+                    id as u64,
+                    self.dag.tasks[id].priority as u32 as u64,
+                );
+            }
+            let body = self.dag.tasks[id]
+                .run
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take();
+            let Some(body) = body else { continue };
+            let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| body(&mut crew)));
+            match outcome {
+                Ok(()) => {
+                    ran += 1;
+                    self.tasks_run.fetch_add(1, Ordering::AcqRel);
+                    for &d in &self.dag.dependents[id] {
+                        if self.dag.missing[d].fetch_sub(1, Ordering::AcqRel) == 1 {
+                            let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+                            q.heap.push(Ready {
+                                priority: self.dag.tasks[d].priority,
+                                seq: d,
+                            });
+                            drop(q);
+                            self.cv.notify_all();
+                        }
+                    }
+                    if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        self.cv.notify_all();
+                    }
+                }
+                Err(e) => {
+                    let msg = crate::pool::panic_message(e.as_ref());
+                    let mut slot = self.panic_msg.lock().unwrap_or_else(|e| e.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(format!("task `{}` panicked: {msg}", self.dag.tasks[id].name));
+                    }
+                    drop(slot);
+                    self.cancel();
+                    break;
+                }
+            }
+        }
+        crew.disband();
+        if revoked && !(self.is_drained() || self.is_cancelled()) {
+            self.retired.fetch_add(1, Ordering::AcqRel);
+        }
+        self.leave();
+        ran
+    }
+
+    fn enter(&self, donated: bool) {
+        let now = self.executors.fetch_add(1, Ordering::AcqRel) + 1;
+        self.peak.fetch_max(now, Ordering::AcqRel);
+        if donated {
+            self.joined.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    fn leave(&self) {
+        self.executors.fetch_sub(1, Ordering::AcqRel);
+        self.cv.notify_all();
+    }
+
+    /// Block until no executor remains attached. The leader calls this
+    /// (after closing its [`DagSlot`]) before the borrowed matrix the
+    /// task bodies captured goes out of scope.
+    pub fn quiesce(&self) {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        while self.executors.load(Ordering::Acquire) > 0 {
+            let (qq, _) = self
+                .cv
+                .wait_timeout(q, Duration::from_millis(1))
+                .unwrap_or_else(|e| e.into_inner());
+            q = qq;
+        }
+    }
+
+    /// Statistics of the drain so far (final after [`Self::quiesce`]).
+    pub fn stats(&self) -> DagRunStats {
+        DagRunStats {
+            tasks_run: self.tasks_run.load(Ordering::Acquire),
+            executors_peak: self.peak.load(Ordering::Acquire),
+            joined: self.joined.load(Ordering::Acquire),
+            retired: self.retired.load(Ordering::Acquire),
+            cancelled: self.is_cancelled() && !self.is_drained(),
+            panic: self
+                .panic_msg
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone(),
+            grant_order: self
+                .grant_order
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone(),
+        }
+    }
+}
+
+/// A published attachment point for donated executors — the serve
+/// layer's Worker-Sharing hook into an in-flight DAG drain
+/// (DESIGN.md §17.3). The leader publishes its [`DagShared`] while the
+/// drain is running and closes the slot before returning; donors call
+/// [`DagSlot::attach`] and run tasks until their lease is revoked.
+#[derive(Default)]
+pub struct DagSlot {
+    inner: Mutex<Option<Arc<DagShared>>>,
+}
+
+impl DagSlot {
+    /// An empty (closed) slot.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish an in-flight drain. Called by the leader before it
+    /// starts executing.
+    pub fn open(&self, shared: &Arc<DagShared>) {
+        *self.inner.lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::clone(shared));
+    }
+
+    /// Close the slot; attaches beyond this point find nothing. The
+    /// executor count a subsequent [`DagShared::quiesce`] waits on is
+    /// exact: attachers increment it under the slot lock, so no executor
+    /// can slip in after `close` returns.
+    pub fn close(&self) {
+        *self.inner.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// Join the published drain as a donated executor, running tasks
+    /// until the drain ends or `lease()` turns false. Returns the
+    /// number of tasks run, or `None` when no drain is in flight.
+    pub fn attach(&self, lease: impl Fn() -> bool) -> Option<usize> {
+        let shared = {
+            let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            let s = g.as_ref()?;
+            // Register under the slot lock so `close` + `quiesce`
+            // cannot miss this executor.
+            s.enter(true);
+            Arc::clone(s)
+        };
+        Some(shared.exec_entered(&lease))
+    }
+}
+
+/// Drain `dag` using the calling thread plus every worker of `pool`,
+/// polling `cancel` between tasks. The standalone (CLI/bench) execution
+/// mode; the serve layer uses [`DagSlot`] + [`DagShared::exec`] instead.
+pub fn run_on_pool(
+    dag: Dag,
+    pool: &Pool,
+    cancel: Option<Arc<AtomicBool>>,
+    capture_req: u64,
+) -> DagRunStats {
+    if dag.is_empty() {
+        return DagRunStats::default();
+    }
+    let shared = dag.into_shared(cancel, capture_req);
+    let handles: Vec<_> = (0..pool.workers())
+        .map(|w| {
+            let s = Arc::clone(&shared);
+            pool.submit(w, move || {
+                s.exec(|| true, false);
+            })
+        })
+        .collect();
+    shared.exec(|| true, false);
+    for h in handles {
+        h.wait();
+    }
+    shared.quiesce();
+    shared.stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn t(i: usize, j: usize) -> Tile {
+        Tile { i, j }
+    }
+
+    #[test]
+    fn grid_spans_and_views_cover_the_matrix() {
+        let g = TileGrid::new(50, 80, 16);
+        assert_eq!(g.tile_rows(), 4);
+        assert_eq!(g.tile_cols(), 5);
+        assert_eq!(g.row_span(0), (0, 16));
+        assert_eq!(g.row_span(3), (48, 2));
+        assert_eq!(g.col_span(4), (64, 16));
+        let mut a = crate::matrix::Matrix::zeros(50, 80);
+        let v = g.view(a.view_mut(), g.tile(3, 4));
+        assert_eq!((v.rows(), v.cols()), (2, 16));
+        assert_eq!(g.col_tiles(2, 1).len(), 3);
+    }
+
+    /// RAW: a reader depends on the tile's last writer.
+    /// WAW: a writer depends on the previous writer.
+    /// WAR: a writer barriers behind readers since the last write.
+    #[test]
+    fn builder_infers_raw_waw_war_edges() {
+        let mut b = DagBuilder::new();
+        let w0 = b.submit("w0", 0, &[Access::Out(t(0, 0))], |_| {});
+        let r1 = b.submit("r1", 0, &[Access::In(t(0, 0))], |_| {});
+        let r2 = b.submit("r2", 0, &[Access::In(t(0, 0))], |_| {});
+        let w3 = b.submit("w3", 0, &[Access::InOut(t(0, 0))], |_| {});
+        let r4 = b.submit("r4", 0, &[Access::In(t(0, 0))], |_| {});
+        assert_eq!(b.tasks[w0].deps, Vec::<usize>::new());
+        assert_eq!(b.tasks[r1].deps, vec![w0]);
+        assert_eq!(b.tasks[r2].deps, vec![w0]);
+        // WAW on w0 plus WAR barriers on both readers.
+        assert_eq!(b.tasks[w3].deps, vec![w0, r1, r2]);
+        // The readers barrier reset: r4 sees only the new writer.
+        assert_eq!(b.tasks[r4].deps, vec![w3]);
+    }
+
+    #[test]
+    fn builder_ignores_self_dependencies() {
+        let mut b = DagBuilder::new();
+        let w = b.submit("rw", 0, &[Access::In(t(1, 1)), Access::Out(t(1, 1))], |_| {});
+        assert_eq!(b.tasks[w].deps, Vec::<usize>::new());
+        // And the next writer still barriers behind it.
+        let w2 = b.submit("w2", 0, &[Access::Out(t(1, 1))], |_| {});
+        assert_eq!(b.tasks[w2].deps, vec![w]);
+    }
+
+    #[test]
+    fn single_executor_grant_order_is_priority_then_seq() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut b = DagBuilder::new();
+        for (i, prio) in [(0usize, 0i32), (1, 5), (2, 5), (3, 1)] {
+            let o = Arc::clone(&order);
+            b.submit(format!("t{i}"), prio, &[], move |_| {
+                o.lock().unwrap().push(i);
+            });
+        }
+        let pool = Pool::new(0);
+        let stats = run_on_pool(b.build(), &pool, None, NO_REQ);
+        assert_eq!(stats.tasks_run, 4);
+        // Priority desc, then submit order.
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 3, 0]);
+        assert_eq!(stats.grant_order, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn dependencies_are_honored_across_executors() {
+        // A diamond over one tile column: w -> {r, r} -> w2, run with 3
+        // executors, many times to shake interleavings.
+        for _ in 0..20 {
+            let seen = Arc::new(AtomicUsize::new(0));
+            let mut b = DagBuilder::new();
+            {
+                let s = Arc::clone(&seen);
+                b.submit("w", 0, &[Access::Out(t(0, 0))], move |_| {
+                    s.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            for _ in 0..2 {
+                let s = Arc::clone(&seen);
+                b.submit("r", 0, &[Access::In(t(0, 0))], move |_| {
+                    assert!(s.load(Ordering::SeqCst) >= 1);
+                    s.fetch_add(10, Ordering::SeqCst);
+                });
+            }
+            let s = Arc::clone(&seen);
+            b.submit("w2", 0, &[Access::InOut(t(0, 0))], move |_| {
+                assert_eq!(s.load(Ordering::SeqCst), 21);
+            });
+            let pool = Pool::new(2);
+            let stats = run_on_pool(b.build(), &pool, None, NO_REQ);
+            assert_eq!(stats.tasks_run, 4);
+        }
+    }
+
+    #[test]
+    fn cancel_stops_granting_at_a_task_boundary() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let mut b = DagBuilder::new();
+        {
+            let s = Arc::clone(&stop);
+            let r = Arc::clone(&ran);
+            b.submit("first", 1, &[Access::Out(t(0, 0))], move |_| {
+                r.fetch_add(1, Ordering::SeqCst);
+                s.store(true, Ordering::Release);
+            });
+        }
+        for i in 0..4 {
+            let r = Arc::clone(&ran);
+            b.submit(format!("after{i}"), 0, &[Access::InOut(t(0, 0))], move |_| {
+                r.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let pool = Pool::new(0);
+        let stats = run_on_pool(b.build(), &pool, Some(Arc::clone(&stop)), NO_REQ);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert!(stats.cancelled);
+        assert_eq!(stats.tasks_run, 1);
+    }
+
+    #[test]
+    fn task_panic_is_contained_and_reported() {
+        let mut b = DagBuilder::new();
+        b.submit("boom", 0, &[Access::Out(t(0, 0))], |_| panic!("kaboom"));
+        b.submit("never", 0, &[Access::In(t(0, 0))], |_| {});
+        let pool = Pool::new(1);
+        let stats = run_on_pool(b.build(), &pool, None, NO_REQ);
+        assert_eq!(stats.tasks_run, 0);
+        let msg = stats.panic.expect("panic recorded");
+        assert!(msg.contains("boom") && msg.contains("kaboom"), "{msg}");
+    }
+
+    #[test]
+    fn donated_executor_attaches_and_lease_revocation_retires_it() {
+        // A long chain the leader drains slowly; a donor attaches
+        // mid-drain, then has its lease revoked and retires with tasks
+        // still outstanding.
+        let mut b = DagBuilder::new();
+        for i in 0..64 {
+            b.submit(format!("t{i}"), 0, &[Access::InOut(t(0, 0))], move |_| {
+                std::thread::sleep(Duration::from_micros(200));
+            });
+        }
+        let shared = b.build().into_shared(None, NO_REQ);
+        let slot = Arc::new(DagSlot::new());
+        slot.open(&shared);
+        let lease_ok = Arc::new(AtomicBool::new(true));
+        let donor = {
+            let slot = Arc::clone(&slot);
+            let lease = Arc::clone(&lease_ok);
+            std::thread::spawn(move || slot.attach(move || lease.load(Ordering::Acquire)))
+        };
+        // Leader drains; revoke the donor lease partway through.
+        let shared2 = Arc::clone(&shared);
+        let revoker = std::thread::spawn(move || {
+            while shared2.remaining() > 32 {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            lease_ok.store(false, Ordering::Release);
+        });
+        shared.exec(|| true, false);
+        slot.close();
+        shared.quiesce();
+        let attached = donor.join().expect("donor thread");
+        revoker.join().expect("revoker");
+        assert!(attached.is_some(), "donor must find the published drain");
+        let stats = shared.stats();
+        assert_eq!(stats.tasks_run, 64);
+        assert!(stats.joined >= 1, "donor counted: {stats:?}");
+        assert!(stats.executors_peak >= 2);
+    }
+
+    #[test]
+    fn attach_on_closed_slot_is_none() {
+        let slot = DagSlot::new();
+        assert_eq!(slot.attach(|| true), None);
+    }
+}

@@ -245,6 +245,84 @@ fn tampered_result_digest_refuses_certification() {
     assert!(d.expected.contains("digest"), "{}", d.expected);
 }
 
+/// A DAG-family workload (DESIGN.md §17.5) must capture, roundtrip, and
+/// certify like any other: the Submit decision carries the family code
+/// in bits 24–31 so the replayer re-routes each request to the driver
+/// family that produced it, TaskGrant records are present and
+/// environmental (grant timing is scheduling context, never certified),
+/// and certification holds across worker counts.
+#[test]
+fn dag_family_capture_replays_and_certifies() {
+    use malleable_lu::factor::DriverFamily;
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = serve_cfg(3);
+    let bcfg = BundleCfg::from_serve(&cfg);
+    assert!(capture::start(), "no capture may be active here");
+    let server = LuServer::new(cfg);
+    let h0 = server
+        .submit(LuRequest::new(Matrix::random(64, 64, 71)).with_driver(DriverFamily::Dag));
+    let h1 = server.submit(
+        LuRequest::new(Matrix::random_spd(48, 72))
+            .with_kind(FactorKind::Chol)
+            .with_priority(1)
+            .with_driver(DriverFamily::Dag),
+    );
+    let h2 = server.submit(LuRequest::new(Mat::<f32>::random(56, 56, 73)));
+    for (i, r) in [h0.wait(), h1.wait()].iter().enumerate() {
+        assert!(r.error.is_none() && !r.cancelled, "dag req {i}: {:?}", r.error);
+    }
+    let r2 = h2.wait();
+    assert!(r2.error.is_none() && !r2.cancelled, "{:?}", r2.error);
+    server.shutdown();
+    let (decisions, mut requests) = capture::stop().expect("capture was armed");
+    requests.sort_by_key(|r| r.id);
+    let bundle = Bundle {
+        cfg: bcfg,
+        requests,
+        decisions,
+    };
+    // TaskGrant records exist for the DAG requests and are environmental
+    // — a differently-paced replay machine grants in a different global
+    // interleaving, so certifying them would refuse valid replays.
+    assert!(!DecisionKind::TaskGrant.invariant());
+    let grants = |id: u64| {
+        bundle
+            .decisions
+            .iter()
+            .filter(|d| d.kind == DecisionKind::TaskGrant && d.req == id)
+            .count()
+    };
+    assert!(grants(0) > 0, "DAG request 0 recorded no task grants");
+    assert!(grants(1) > 0, "DAG request 1 recorded no task grants");
+    assert_eq!(grants(2), 0, "crew-family request must not record grants");
+    // The Submit decision carries each request's family code.
+    for (id, expect) in [(0u64, 1u8), (1, 1), (2, 0)] {
+        let d = bundle
+            .decisions
+            .iter()
+            .find(|d| d.kind == DecisionKind::Submit && d.req == id)
+            .expect("every request records a Submit");
+        assert_eq!(((d.b >> 24) & 0xff) as u8, expect, "family code of req {id}");
+    }
+    // The bundle (now containing tag-9 records) roundtrips bytewise.
+    let bytes = bundle::encode(&bundle);
+    let back = bundle::decode(&bytes).expect("own encoding must decode");
+    assert_eq!(back, bundle);
+    // And the replayer routes each request back through its family:
+    // certification would fail on the first checkpoint if a DAG capture
+    // replayed through the look-ahead driver with different column
+    // accounting — and must hold across worker counts.
+    for workers in [None, Some(5usize)] {
+        let report = run_replay(&bundle, 1, workers).expect("replay must run");
+        assert!(
+            report.certified_ok(),
+            "workers={workers:?}: {}",
+            report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+        );
+        assert_eq!(report.certified, 3, "workers={workers:?}");
+    }
+}
+
 /// The chaos build compiles the fault-injection hooks into every
 /// checkpoint the capture recorder instruments; disarmed, they must not
 /// cost a single decision record or result bit.

@@ -1,0 +1,297 @@
+//! The tile-DAG agreement harness (DESIGN.md §17): the dataflow runtime
+//! must produce **bitwise identical** factorizations to the blocked
+//! driver — for every kind × precision × executor count, while
+//! executors are donated and revoked mid-run, and when the serve layer
+//! routes requests at it with leases being granted and revoked under a
+//! live queue.
+//!
+//! The argument mirrors `steal_agree.rs`: DAG tasks run the blocked
+//! driver's own kernels, [`Factorization::apply`] is column-split
+//! invariant, panel tasks complete in `k` order, and LU's left row
+//! swaps replay in a `k`-ordered epilogue — so scheduling (executor
+//! count, donation timing, revocation timing) moves *ownership* of
+//! work, never its arithmetic. These tests prove it rather than assume
+//! it.
+
+use malleable_lu::blis::BlisParams;
+use malleable_lu::factor::{factorize_blocked, DriverFamily, FactorCtl, FactorKind};
+use malleable_lu::matrix::{Mat, Matrix};
+use malleable_lu::pool::{Crew, Pool};
+use malleable_lu::scalar::Scalar;
+use malleable_lu::serve::{LuRequest, LuServer, ServeConfig};
+use malleable_lu::tilert::{factorize_dag, factorize_dag_shared, DagSlot, NO_REQ};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Bitwise signature of one factorization run: every matrix element's
+/// bits, the pivots, and the tau bits.
+#[derive(PartialEq, Eq, Debug)]
+struct RunBits {
+    a: Vec<u64>,
+    ipiv: Vec<usize>,
+    tau: Vec<u64>,
+    cols_done: usize,
+}
+
+fn problem<S: Scalar>(kind: FactorKind, n: usize, seed: u64) -> Mat<S> {
+    match kind {
+        FactorKind::Chol => Mat::<S>::random_spd(n, seed),
+        _ => Mat::<S>::random(n, n, seed),
+    }
+}
+
+/// The lone-leader blocked run every DAG schedule must reproduce.
+fn run_blocked<S: Scalar>(kind: FactorKind, a0: &Mat<S>, bo: usize) -> RunBits {
+    let params = BlisParams::tiny();
+    let mut crew = Crew::new();
+    let mut f = a0.clone();
+    let out = factorize_blocked(
+        kind,
+        &mut crew,
+        &params,
+        f.view_mut(),
+        bo,
+        4,
+        &FactorCtl::default(),
+    );
+    assert!(out.error.is_none(), "blocked: {:?}", out.error);
+    RunBits {
+        a: f.data().iter().map(|x| x.to_bits_u64()).collect(),
+        ipiv: out.ipiv,
+        tau: out.tau.iter().map(|x| x.to_bits_u64()).collect(),
+        cols_done: out.cols_done,
+    }
+}
+
+/// One pool-backed DAG run: the calling thread plus `workers` pool
+/// executors drain the task graph.
+fn run_dag_pool<S: Scalar>(kind: FactorKind, a0: &Mat<S>, bo: usize, workers: usize) -> RunBits {
+    let params = BlisParams::tiny();
+    let pool = Pool::new(workers);
+    let mut f = a0.clone();
+    let out = factorize_dag(kind, &pool, &params, &mut f, bo, 4, &FactorCtl::default());
+    assert!(out.error.is_none(), "dag: {:?}", out.error);
+    RunBits {
+        a: f.data().iter().map(|x| x.to_bits_u64()).collect(),
+        ipiv: out.ipiv,
+        tau: out.tau.iter().map(|x| x.to_bits_u64()).collect(),
+        cols_done: out.cols_done,
+    }
+}
+
+/// An executor-roster event fired when the leader's checkpoint reaches
+/// `at_col` committed columns: donor `donor` starts attaching to the
+/// drain, or has its lease revoked (observed at the next task boundary).
+#[derive(Copy, Clone, Debug)]
+struct RosterEvent {
+    at_col: usize,
+    donor: usize,
+    join: bool,
+}
+
+/// One slot-backed DAG run with a malleable executor roster: `n_donors`
+/// donor threads attach to the published drain whenever their gate is
+/// open; the leader's checkpoint callback opens and closes gates per
+/// the event schedule, so donations and revocations land exactly at the
+/// column boundaries a serve-layer lease change would land, and
+/// revocations retire donors at task boundaries.
+fn run_dag_malleable<S: Scalar>(
+    kind: FactorKind,
+    a0: &Mat<S>,
+    bo: usize,
+    n_donors: usize,
+    events: &[RosterEvent],
+) -> RunBits {
+    let params = BlisParams::tiny();
+    let slot = Arc::new(DagSlot::new());
+    let active: Arc<Vec<AtomicBool>> =
+        Arc::new((0..n_donors).map(|_| AtomicBool::new(false)).collect());
+    let quit = Arc::new(AtomicBool::new(false));
+    let donors: Vec<_> = (0..n_donors)
+        .map(|i| {
+            let slot = Arc::clone(&slot);
+            let act = Arc::clone(&active);
+            let q = Arc::clone(&quit);
+            std::thread::spawn(move || {
+                while !q.load(Ordering::Acquire) {
+                    if act[i].load(Ordering::Acquire) {
+                        let act2 = Arc::clone(&act);
+                        let q2 = Arc::clone(&q);
+                        // Attach returns when the drain finishes, the
+                        // lease predicate turns false (revocation), or
+                        // no drain is published (None).
+                        let _ = slot.attach(move || {
+                            act2[i].load(Ordering::Acquire) && !q2.load(Ordering::Acquire)
+                        });
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        })
+        .collect();
+
+    // Everyone except the event-scheduled latecomers starts attached.
+    for i in 0..n_donors {
+        let latecomer = events.iter().any(|e| e.donor == i && e.join);
+        active[i].store(!latecomer, Ordering::Release);
+    }
+    let mut events_sorted = events.to_vec();
+    events_sorted.sort_by_key(|e| e.at_col);
+    let cursor = AtomicUsize::new(0);
+    let active2 = Arc::clone(&active);
+    let checkpoint = move |k: usize| {
+        let mut idx = cursor.load(Ordering::Relaxed);
+        while idx < events_sorted.len() && events_sorted[idx].at_col <= k {
+            let e = events_sorted[idx];
+            if e.donor < active2.len() {
+                active2[e.donor].store(e.join, Ordering::Release);
+            }
+            idx += 1;
+        }
+        cursor.store(idx, Ordering::Relaxed);
+    };
+    let ctl = FactorCtl {
+        cancel: None,
+        tag: None,
+        on_checkpoint: Some(&checkpoint),
+    };
+
+    let mut f = a0.clone();
+    let out = factorize_dag_shared(kind, &slot, &params, f.view_mut(), bo, 4, &ctl, NO_REQ);
+    assert!(out.error.is_none(), "dag shared: {:?}", out.error);
+
+    quit.store(true, Ordering::Release);
+    for t in donors {
+        t.join().unwrap();
+    }
+
+    RunBits {
+        a: f.data().iter().map(|x| x.to_bits_u64()).collect(),
+        ipiv: out.ipiv,
+        tau: out.tau.iter().map(|x| x.to_bits_u64()).collect(),
+        cols_done: out.cols_done,
+    }
+}
+
+/// The exhaustive acceptance sweep: all kinds × both precisions ×
+/// executor rosters 1–6 (leader + 0..=5 pool workers), each DAG run
+/// compared bitwise against the lone-leader blocked run.
+#[test]
+fn dag_bitwise_equals_blocked_all_kinds_precisions_crews() {
+    fn sweep<S: Scalar>() {
+        let n = 48;
+        let bo = 8;
+        for &kind in FactorKind::all() {
+            let a0 = problem::<S>(kind, n, 0xD1 + kind.name().len() as u64);
+            let baseline = run_blocked(kind, &a0, bo);
+            assert_eq!(baseline.cols_done, n);
+            for crew_size in 1..=6usize {
+                let dag = run_dag_pool(kind, &a0, bo, crew_size - 1);
+                assert_eq!(
+                    dag,
+                    baseline,
+                    "{}/{}: dag crew {crew_size} vs blocked lone leader",
+                    kind.name(),
+                    S::NAME
+                );
+            }
+        }
+    }
+    sweep::<f64>();
+    sweep::<f32>();
+}
+
+/// Mid-run malleability: donors join and leave the drain at column
+/// boundaries chosen by an event schedule — a genuine shrink (donor 0
+/// starts attached, is revoked at column 16) plus a genuine grow (the
+/// last donor attaches at column 24) — and the bits still match the
+/// fixed lone-leader blocked run, for every kind × both precisions.
+#[test]
+fn dag_grow_and_shrink_mid_run_agree_bitwise() {
+    fn sweep<S: Scalar>() {
+        let n = 48;
+        let bo = 8;
+        for &kind in FactorKind::all() {
+            let a0 = problem::<S>(kind, n, 0xB7 + kind.name().len() as u64);
+            let baseline = run_blocked(kind, &a0, bo);
+            let events = [
+                RosterEvent {
+                    at_col: 16,
+                    donor: 0,
+                    join: false,
+                },
+                RosterEvent {
+                    at_col: 24,
+                    donor: 2,
+                    join: true,
+                },
+            ];
+            let dag = run_dag_malleable(kind, &a0, bo, 3, &events);
+            assert_eq!(
+                dag,
+                baseline,
+                "{}/{}: malleable dag roster vs blocked",
+                kind.name(),
+                S::NAME
+            );
+        }
+    }
+    sweep::<f64>();
+    sweep::<f32>();
+}
+
+/// The serve-lease revocation scenario: more DAG-family requests than
+/// workers on one server, so floaters are donated to in-flight drains
+/// and then revoked (the registry epoch bumps on every register and
+/// unregister while the queue drains). Every result must still match
+/// its blocked reference bitwise, and a per-matrix pair of requests —
+/// one per driver family — must agree with *each other*.
+#[test]
+fn serve_dag_requests_survive_lease_revocation_bitwise() {
+    let cfg = ServeConfig {
+        workers: 3,
+        bo: 8,
+        bi: 4,
+        params: BlisParams::tiny(),
+        ..Default::default()
+    };
+    let server = LuServer::new(cfg);
+    let mats: Vec<Matrix> = (0..6).map(|i| Matrix::random(40, 40, 900 + i)).collect();
+    // Two requests per matrix, one per family, interleaved so DAG
+    // drains and crew kernels compete for the same floaters.
+    let handles: Vec<_> = mats
+        .iter()
+        .enumerate()
+        .flat_map(|(i, a)| {
+            [
+                server.submit(
+                    LuRequest::new(a.clone())
+                        .with_priority((i % 3) as u8)
+                        .with_driver(DriverFamily::Dag),
+                ),
+                server.submit(
+                    LuRequest::new(a.clone())
+                        .with_priority(((i + 1) % 3) as u8)
+                        .with_driver(DriverFamily::Lookahead),
+                ),
+            ]
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    server.shutdown();
+    for (i, a0) in mats.iter().enumerate() {
+        let dag = &results[2 * i];
+        let la = &results[2 * i + 1];
+        for (label, res) in [("dag", dag), ("lookahead", la)] {
+            assert!(!res.cancelled, "req {i} [{label}] cancelled");
+            assert!(res.error.is_none(), "req {i} [{label}]: {:?}", res.error);
+            assert_eq!(res.cols_done, 40, "req {i} [{label}]");
+        }
+        let reference = run_blocked(FactorKind::Lu, a0, 8);
+        for (label, res) in [("dag", dag), ("lookahead", la)] {
+            assert_eq!(res.ipiv, reference.ipiv, "req {i} [{label}] pivots");
+            let bits: Vec<u64> = res.a.data().iter().map(|x| x.to_bits_u64()).collect();
+            assert_eq!(bits, reference.a, "req {i} [{label}] factor bits");
+        }
+    }
+}
