@@ -1,0 +1,135 @@
+//! Interleaved small-problem throughput (DESIGN.md §18): a stream of
+//! tiny n×n LU factorizations through the SIMD-interleaved batch kernel
+//! (problem-major `SmallBundle`, one vector lane per problem) vs the
+//! same problems factorized one at a time with `lu_unblocked`.
+//!
+//! Both paths are charged end to end: the baseline pays a clone per
+//! problem, the interleaved path pays pack, factor, and per-slot
+//! unpack (pivots + lane matrix). The ratio is therefore the honest
+//! "problems per second" win a serve queue would see, not a kernel-only
+//! number. On AVX2+FMA the f32 bundle runs eight problems per
+//! instruction stream and the headline n=16 ratio must clear 5x.
+
+use malleable_lu::blis::micro::{active_kernel_name, simd_available};
+use malleable_lu::blis::SmallBundle;
+use malleable_lu::cli::Args;
+use malleable_lu::lu::lu_unblocked;
+use malleable_lu::matrix::Mat;
+use malleable_lu::scalar::Scalar;
+use malleable_lu::sim::HwModel;
+use malleable_lu::util::json::Value;
+use malleable_lu::util::stats::bench_seconds;
+use std::hint::black_box;
+
+/// One precision × one size: factor `count` problems both ways and
+/// return (per-problem µs one-at-a-time, per-problem µs interleaved).
+fn run_one<S: Scalar>(n: usize, count: usize, reps: usize) -> (f64, f64) {
+    let mats: Vec<Mat<S>> = (0..count)
+        .map(|i| Mat::<S>::random(n, n, 1 + i as u64))
+        .collect();
+    let w = SmallBundle::<S>::width();
+
+    let st_seq = bench_seconds(1, reps, || {
+        for a in &mats {
+            let mut f = a.clone();
+            let ipiv = lu_unblocked(f.view_mut());
+            black_box((f.data()[0], ipiv[0]));
+        }
+    });
+
+    let st_batch = bench_seconds(1, reps, || {
+        let mut base = 0;
+        while base < mats.len() {
+            let take = w.min(mats.len() - base);
+            let refs: Vec<&Mat<S>> = mats[base..base + take].iter().collect();
+            let mut bundle = SmallBundle::pack(&refs);
+            bundle.factor();
+            for slot in 0..take {
+                let f = bundle.lane_matrix(slot);
+                let ipiv = bundle.pivots(slot);
+                black_box((f.data()[0], ipiv[0]));
+            }
+            base += take;
+        }
+    });
+
+    let us = |s: f64| s / count as f64 * 1e6;
+    (us(st_seq.min), us(st_batch.min))
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let out_path = args.get_str("out", "BENCH_small.json");
+    let sizes: Vec<usize> = if quick { vec![16] } else { vec![8, 16, 32] };
+    let count = if quick { 256 } else { 2048 };
+    let reps = if quick { 2 } else { 5 };
+    let hw = HwModel::default();
+    let kernel = active_kernel_name();
+
+    println!(
+        "kernel {kernel} (simd_available {}), thresholds: f64 n<={} f32 n<={}",
+        simd_available(),
+        hw.small_threshold(SmallBundle::<f64>::width()),
+        hw.small_threshold(SmallBundle::<f32>::width()),
+    );
+
+    let mut records = Vec::new();
+    let mut ratio_f32_n16 = 0.0f64;
+    for &n in &sizes {
+        for prec in ["f64", "f32"] {
+            let (seq_us, batch_us) = if prec == "f64" {
+                run_one::<f64>(n, count, reps)
+            } else {
+                run_one::<f32>(n, count, reps)
+            };
+            let ratio = seq_us / batch_us;
+            if prec == "f32" && n == 16 {
+                ratio_f32_n16 = ratio;
+            }
+            println!(
+                "{prec} n={n:2}: one-at-a-time {seq_us:8.3}us/problem  \
+                 interleaved {batch_us:8.3}us/problem  ratio {ratio:5.2}x"
+            );
+            records.push(Value::obj([
+                ("prec", Value::Str(prec.into())),
+                ("n", Value::Num(n as f64)),
+                ("per_problem_us", Value::Num(seq_us)),
+                ("interleaved_us", Value::Num(batch_us)),
+                ("ratio", Value::Num(ratio)),
+            ]));
+        }
+    }
+
+    if out_path != "-" {
+        let doc = Value::obj([
+            ("bench", Value::Str("small".into())),
+            ("quick", Value::Bool(quick)),
+            ("count", Value::Num(count as f64)),
+            ("kernel", Value::Str(kernel.into())),
+            ("simd_available", Value::Bool(simd_available())),
+            (
+                "threshold_f64",
+                Value::Num(hw.small_threshold(SmallBundle::<f64>::width()) as f64),
+            ),
+            (
+                "threshold_f32",
+                Value::Num(hw.small_threshold(SmallBundle::<f32>::width()) as f64),
+            ),
+            ("records", Value::Arr(records)),
+        ]);
+        std::fs::write(&out_path, doc.dump()).expect("write bench json");
+        println!("wrote {out_path}");
+    }
+
+    // Acceptance floor (ISSUE: >=5x at n=16 on AVX2). Quick mode on a
+    // noisy shared runner records the ratio without asserting it; the
+    // portable kernel has no lane-level win to demand.
+    if !quick && simd_available() && kernel == "avx2+fma" {
+        assert!(
+            ratio_f32_n16 >= 5.0,
+            "f32 n=16 interleaved ratio {ratio_f32_n16:.2}x below the 5x floor"
+        );
+    }
+    println!("bench_small OK");
+}

@@ -116,7 +116,7 @@ pub fn active_kernel_name() -> &'static str {
 }
 
 #[inline]
-fn use_simd() -> bool {
+pub(crate) fn use_simd() -> bool {
     match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
         1 => false,
         2 => simd_available(),

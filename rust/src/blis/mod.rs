@@ -52,6 +52,7 @@ pub mod micro;
 pub mod pack;
 pub mod params;
 pub mod small;
+pub mod smallbatch;
 pub mod syrk;
 pub mod trsm;
 
@@ -60,5 +61,6 @@ pub use gemm::gemm;
 pub use laswp::laswp;
 pub use micro::{set_kernel, Kernel};
 pub use params::{BlisParams, CacheInfo, StealPolicy};
+pub use smallbatch::SmallBundle;
 pub use syrk::syrk_ln;
 pub use trsm::{trsm_llu, trsm_rltn};

@@ -57,6 +57,36 @@ pub fn ger_update<S: Scalar>(
     }
 }
 
+/// One column step of the unblocked right-looking LU with partial
+/// pivoting — the *shared contract* between the per-problem leaf
+/// ([`crate::lu::lu_unblocked`]) and the interleaved small-batch kernel
+/// ([`crate::blis::smallbatch`]). Both paths must perform exactly this
+/// sequence so they stay bitwise-identical per problem:
+///
+/// 1. pivot search over `a[k..m, k]` via [`iamax_col`] (ties resolve low,
+///    LAPACK IDAMAX),
+/// 2. full-width row swap `a[k, 0..n] <-> a[piv, 0..n]`,
+/// 3. if the pivot is nonzero: reciprocal scale `a[k+1..m, k] *= 1/akk`
+///    (a multiply by the rounded reciprocal, **not** a divide) followed by
+///    the rank-1 update `a[k+1..m, k+1..n] -= a[k+1..m, k] · a[k, k+1..n]`
+///    via [`ger_update`] (separate mul then sub, **not** fused),
+/// 4. an exactly-zero pivot skips step 3 LAPACK-style, leaving the zero
+///    on the diagonal.
+///
+/// Returns the pivot row (absolute index into the panel, `piv >= k`).
+/// Any future change to the leaf arithmetic must happen here so the two
+/// execution strategies cannot drift apart.
+pub fn lu_step_col<S: Scalar>(a: MatMut<S>, k: usize, m: usize, n: usize) -> usize {
+    let piv = iamax_col(a, k, k, m);
+    a.swap_rows(k, piv, 0, n);
+    let akk = a.at(k, k);
+    if akk != S::ZERO {
+        scal_col(a, k, k + 1, m, S::ONE / akk);
+        ger_update(a, k + 1, m, k + 1, n, k, k);
+    }
+    piv
+}
+
 /// Crew-parallel version of [`ger_update`] (columns split across the
 /// crew). Used when the panel team has more than one thread.
 pub fn ger_update_par<S: Scalar>(

@@ -1,0 +1,563 @@
+//! Interleaved SIMD batching for small LU problems (DESIGN.md §18).
+//!
+//! Production traffic at "millions of users" scale is dominated by tiny
+//! systems (n ≤ 64) where the blocked drivers, the packing arena and the
+//! per-request lease machinery are pure overhead. This module factors
+//! `SIMD_LANES` *independent* problems at once by laying them out
+//! **problem-major**: element `(i, j)` of problem `l` lives at
+//! `data[(j*m + i) * W + l]` with `W = S::SIMD_LANES` (4 for `f64`, 8 for
+//! `f32`), so one 256-bit vector holds the same matrix entry of `W`
+//! different problems and every scalar operation of the unblocked
+//! algorithm becomes a single vector operation with **zero shuffles**.
+//!
+//! Bitwise contract (the same one [`crate::blis::micro`] pins for GEMM):
+//! every lane replicates [`crate::blis::small::lu_step_col`] — the shared
+//! per-column contract of [`crate::lu::lu_unblocked`] — exactly, so a
+//! problem factored through a bundle is **bitwise identical** to the same
+//! problem factored one-at-a-time, on every kernel. Two subtleties make
+//! the vector kernels non-trivial:
+//!
+//! * `lu_step_col` *skips* the scale + rank-1 update when the pivot is
+//!   exactly zero, and `ger_update` skips columns whose `y_j` is exactly
+//!   zero. Computing `v - x·0.0` is **not** a bitwise no-op (`-0.0`
+//!   becomes `+0.0`), so the vector kernels blend the update under a
+//!   per-lane mask `(akk ≠ 0) ∧ (y_j ≠ 0)` built with unordered
+//!   compares (`_CMP_NEQ_UQ`, true for NaN — matching Rust's `!=`).
+//! * pivot search and row swaps stay scalar per lane: they are O(m) data
+//!   movement and compares with per-lane divergent control flow, and
+//!   vectorizing them buys nothing at these sizes.
+//!
+//! Dead lanes of a *ragged* bundle (`live < W`) are zero-padded at pack
+//! time, never read back, and may rot freely — no operation in the kernel
+//! mixes values across lanes.
+//!
+//! The serve layer's batch assembler ([`crate::serve`]) groups same-shape
+//! same-precision requests into [`SmallBundle`]s; [`lu_unblocked_batch`]
+//! is the standalone convenience that chunks a slice of matrices into
+//! full bundles plus one ragged tail.
+
+use crate::matrix::Mat;
+use crate::scalar::Scalar;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Portable interleaved kernel: factor `S::SIMD_LANES` problems laid out
+/// problem-major in `data` (see module docs), writing pivot rows to
+/// `ipiv[k * W + l]`. Each lane runs the exact
+/// [`crate::blis::small::lu_step_col`] scalar chain — pivot search with
+/// ties-low, full-width swap, reciprocal-multiply scale, mul-then-sub
+/// rank-1 update, zero-pivot skip — so portable and vector kernels are
+/// bitwise identical per lane.
+pub fn small_lu_portable<S: Scalar>(data: &mut [S], m: usize, n: usize, ipiv: &mut [usize]) {
+    let w = S::SIMD_LANES;
+    let kmax = m.min(n);
+    assert_eq!(data.len(), m * n * w);
+    assert_eq!(ipiv.len(), kmax * w);
+    let idx = |i: usize, j: usize, l: usize| (j * m + i) * w + l;
+    for k in 0..kmax {
+        for l in 0..w {
+            // Pivot search over column k, rows k..m (ties resolve low).
+            let mut piv = k;
+            let mut best = data[idx(k, k, l)].abs();
+            for i in k + 1..m {
+                let v = data[idx(i, k, l)].abs();
+                if v > best {
+                    best = v;
+                    piv = i;
+                }
+            }
+            ipiv[k * w + l] = piv;
+            if piv != k {
+                for j in 0..n {
+                    data.swap(idx(k, j, l), idx(piv, j, l));
+                }
+            }
+            let akk = data[idx(k, k, l)];
+            if akk != S::ZERO {
+                let r = S::ONE / akk;
+                for i in k + 1..m {
+                    let e = idx(i, k, l);
+                    data[e] = data[e] * r;
+                }
+                for j in k + 1..n {
+                    let yj = data[idx(k, j, l)];
+                    if yj == S::ZERO {
+                        continue;
+                    }
+                    for i in k + 1..m {
+                        let xi = data[idx(i, k, l)];
+                        let e = idx(i, j, l);
+                        data[e] = data[e] - xi * yj;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scalar per-lane pivot search + full-width row swap for one column
+/// step — shared by both AVX2 kernels (the search has per-lane divergent
+/// control flow, so it stays scalar; the arithmetic below it is where
+/// the vectors pay off).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn pivot_and_swap_lanes<S: Scalar>(
+    data: &mut [S],
+    m: usize,
+    n: usize,
+    w: usize,
+    k: usize,
+    ipiv: &mut [usize],
+) {
+    let idx = |i: usize, j: usize, l: usize| (j * m + i) * w + l;
+    for l in 0..w {
+        let mut piv = k;
+        let mut best = data[idx(k, k, l)].abs();
+        for i in k + 1..m {
+            let v = data[idx(i, k, l)].abs();
+            if v > best {
+                best = v;
+                piv = i;
+            }
+        }
+        ipiv[k * w + l] = piv;
+        if piv != k {
+            for j in 0..n {
+                data.swap(idx(k, j, l), idx(piv, j, l));
+            }
+        }
+    }
+}
+
+/// AVX2+FMA interleaved kernel for `f64` bundles (4 lanes). Bitwise
+/// identical to [`small_lu_portable`] per lane: the scale and rank-1
+/// update are blended under per-lane `(akk ≠ 0) ∧ (y_j ≠ 0)` masks
+/// (unordered ≠, true for NaN like Rust `!=`), so skipped lanes keep
+/// their exact bits (including `-0.0`).
+///
+/// # Safety
+/// Caller must have verified AVX2+FMA support
+/// ([`crate::blis::micro::simd_available`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn small_lu_avx2(data: &mut [f64], m: usize, n: usize, ipiv: &mut [usize]) {
+    const W: usize = 4;
+    let kmax = m.min(n);
+    assert_eq!(data.len(), m * n * W);
+    assert_eq!(ipiv.len(), kmax * W);
+    let p = data.as_mut_ptr();
+    for k in 0..kmax {
+        pivot_and_swap_lanes(data, m, n, W, k, ipiv);
+        let zero = _mm256_setzero_pd();
+        let akk = _mm256_loadu_pd(p.add((k * m + k) * W));
+        let nz = _mm256_cmp_pd::<_CMP_NEQ_UQ>(akk, zero);
+        if _mm256_movemask_pd(nz) == 0 {
+            continue; // every lane hit an exactly-zero pivot
+        }
+        // Reciprocal-multiply scale (lanes with akk == 0 blend back).
+        let recip = _mm256_div_pd(_mm256_set1_pd(1.0), akk);
+        for i in k + 1..m {
+            let q = p.add((k * m + i) * W);
+            let x = _mm256_loadu_pd(q);
+            let sc = _mm256_mul_pd(x, recip);
+            _mm256_storeu_pd(q, _mm256_blendv_pd(x, sc, nz));
+        }
+        // Rank-1 update: v - x·y, separate mul then sub (ger contract).
+        for j in k + 1..n {
+            let y = _mm256_loadu_pd(p.add((j * m + k) * W));
+            let mask = _mm256_and_pd(nz, _mm256_cmp_pd::<_CMP_NEQ_UQ>(y, zero));
+            if _mm256_movemask_pd(mask) == 0 {
+                continue;
+            }
+            for i in k + 1..m {
+                let x = _mm256_loadu_pd(p.add((k * m + i) * W));
+                let q = p.add((j * m + i) * W);
+                let v = _mm256_loadu_pd(q);
+                let upd = _mm256_sub_pd(v, _mm256_mul_pd(x, y));
+                _mm256_storeu_pd(q, _mm256_blendv_pd(v, upd, mask));
+            }
+        }
+    }
+}
+
+/// AVX2+FMA interleaved kernel for `f32` bundles (8 lanes) — same
+/// structure and masking discipline as [`small_lu_avx2`].
+///
+/// # Safety
+/// Caller must have verified AVX2+FMA support
+/// ([`crate::blis::micro::simd_available`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn small_lu_avx2_f32(data: &mut [f32], m: usize, n: usize, ipiv: &mut [usize]) {
+    const W: usize = 8;
+    let kmax = m.min(n);
+    assert_eq!(data.len(), m * n * W);
+    assert_eq!(ipiv.len(), kmax * W);
+    let p = data.as_mut_ptr();
+    for k in 0..kmax {
+        pivot_and_swap_lanes(data, m, n, W, k, ipiv);
+        let zero = _mm256_setzero_ps();
+        let akk = _mm256_loadu_ps(p.add((k * m + k) * W));
+        let nz = _mm256_cmp_ps::<_CMP_NEQ_UQ>(akk, zero);
+        if _mm256_movemask_ps(nz) == 0 {
+            continue;
+        }
+        let recip = _mm256_div_ps(_mm256_set1_ps(1.0), akk);
+        for i in k + 1..m {
+            let q = p.add((k * m + i) * W);
+            let x = _mm256_loadu_ps(q);
+            let sc = _mm256_mul_ps(x, recip);
+            _mm256_storeu_ps(q, _mm256_blendv_ps(x, sc, nz));
+        }
+        for j in k + 1..n {
+            let y = _mm256_loadu_ps(p.add((j * m + k) * W));
+            let mask = _mm256_and_ps(nz, _mm256_cmp_ps::<_CMP_NEQ_UQ>(y, zero));
+            if _mm256_movemask_ps(mask) == 0 {
+                continue;
+            }
+            for i in k + 1..m {
+                let x = _mm256_loadu_ps(p.add((k * m + i) * W));
+                let q = p.add((j * m + i) * W);
+                let v = _mm256_loadu_ps(q);
+                let upd = _mm256_sub_ps(v, _mm256_mul_ps(x, y));
+                _mm256_storeu_ps(q, _mm256_blendv_ps(v, upd, mask));
+            }
+        }
+    }
+}
+
+/// A SIMD-width bundle of same-shape small problems in problem-major
+/// layout, factored together by one pass of the interleaved kernel.
+///
+/// `live ≤ S::SIMD_LANES` problems occupy the low lanes; dead lanes of a
+/// ragged bundle are zero-padded at pack time and never read back.
+pub struct SmallBundle<S: Scalar> {
+    m: usize,
+    n: usize,
+    live: usize,
+    data: Vec<S>,
+    ipiv: Vec<usize>,
+    factored: bool,
+}
+
+impl<S: Scalar> SmallBundle<S> {
+    /// The bundle width for this scalar type (4 for `f64`, 8 for `f32`).
+    pub fn width() -> usize {
+        S::SIMD_LANES
+    }
+
+    /// Pack `1..=width()` same-shape matrices into a fresh bundle
+    /// (copies; the sources are untouched). Panics on an empty slice, on
+    /// more than `width()` problems, or on mixed shapes — the batch
+    /// assembler guarantees all three by construction.
+    pub fn pack(mats: &[&Mat<S>]) -> Self {
+        let w = Self::width();
+        assert!(
+            !mats.is_empty() && mats.len() <= w,
+            "SmallBundle::pack: {} problems, want 1..={w}",
+            mats.len()
+        );
+        let (m, n) = (mats[0].rows(), mats[0].cols());
+        for a in mats {
+            assert!(
+                a.rows() == m && a.cols() == n,
+                "SmallBundle::pack: mixed shapes ({m}x{n} vs {}x{})",
+                a.rows(),
+                a.cols()
+            );
+        }
+        let mut data = vec![S::ZERO; m * n * w];
+        for (l, a) in mats.iter().enumerate() {
+            // Mat is column-major, so copy column-by-column with stride w.
+            let src = a.data();
+            for (e, &v) in src.iter().enumerate() {
+                data[e * w + l] = v;
+            }
+        }
+        SmallBundle {
+            m,
+            n,
+            live: mats.len(),
+            data,
+            ipiv: vec![0; m.min(n) * w],
+            factored: false,
+        }
+    }
+
+    /// Number of live problems in the bundle.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Problem shape `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// Factor all lanes in place with the interleaved kernel, dispatching
+    /// AVX2+FMA vs portable exactly like [`crate::blis::micro`] (the
+    /// `MLU_KERNEL` env var and [`crate::blis::set_kernel`] override both
+    /// paths at once).
+    pub fn factor(&mut self) {
+        assert!(!self.factored, "SmallBundle::factor: already factored");
+        S::small_lu_kernel(
+            crate::blis::micro::use_simd(),
+            &mut self.data,
+            self.m,
+            self.n,
+            &mut self.ipiv,
+        );
+        self.factored = true;
+    }
+
+    /// Copy the packed LU factors of lane `slot` back out as a matrix.
+    pub fn lane_matrix(&self, slot: usize) -> Mat<S> {
+        assert!(slot < self.live, "SmallBundle: slot {slot} >= live {}", self.live);
+        let w = Self::width();
+        Mat::from_fn(self.m, self.n, |i, j| self.data[(j * self.m + i) * w + slot])
+    }
+
+    /// Pivot rows of lane `slot` (LAPACK convention, absolute indices).
+    pub fn pivots(&self, slot: usize) -> Vec<usize> {
+        assert!(self.factored, "SmallBundle::pivots: not factored");
+        assert!(slot < self.live, "SmallBundle: slot {slot} >= live {}", self.live);
+        let w = Self::width();
+        (0..self.m.min(self.n)).map(|k| self.ipiv[k * w + slot]).collect()
+    }
+
+    /// First column of lane `slot` whose diagonal entry is exactly zero
+    /// after factorization (LAPACK `info` semantics — the factors are
+    /// still valid, only a solve would divide by zero), or `None`.
+    pub fn zero_pivot_col(&self, slot: usize) -> Option<usize> {
+        assert!(self.factored, "SmallBundle::zero_pivot_col: not factored");
+        let w = Self::width();
+        (0..self.m.min(self.n)).find(|&k| self.data[(k * self.m + k) * w + slot] == S::ZERO)
+    }
+
+    /// Batched back-substitution: solve `A_l · x_l = rhs_l` for every
+    /// live lane against the factored bundle (square problems only).
+    /// Each lane replicates [`crate::matrix::naive::lu_solve`]'s exact
+    /// arithmetic — pivot swaps, forward substitution with unit `L`
+    /// (`s -= l·x`, separate mul then sub), back substitution dividing by
+    /// `U(i,i)` — so the answers are bitwise identical to solving each
+    /// problem one-at-a-time. The lane loop is innermost over a
+    /// problem-major buffer, so the compiler vectorizes the substitution
+    /// across problems.
+    pub fn solve(&self, rhs: &mut [Vec<S>]) {
+        assert!(self.factored, "SmallBundle::solve: not factored");
+        assert_eq!(self.m, self.n, "SmallBundle::solve: square only");
+        assert_eq!(rhs.len(), self.live, "SmallBundle::solve: one rhs per live lane");
+        let (n, w) = (self.n, Self::width());
+        let mut x = vec![S::ZERO; n * w];
+        for (l, b) in rhs.iter().enumerate() {
+            assert_eq!(b.len(), n, "SmallBundle::solve: rhs length");
+            for (i, &v) in b.iter().enumerate() {
+                x[i * w + l] = v;
+            }
+        }
+        // P·b — swaps are per-lane (pivots differ across problems).
+        for k in 0..n {
+            for l in 0..self.live {
+                let p = self.ipiv[k * w + l];
+                x.swap(k * w + l, p * w + l);
+            }
+        }
+        // Forward substitution with unit L, lanes innermost.
+        for i in 0..n {
+            for p in 0..i {
+                for l in 0..w {
+                    let lu = self.data[(p * n + i) * w + l];
+                    let xp = x[p * w + l];
+                    let e = i * w + l;
+                    x[e] = x[e] - lu * xp;
+                }
+            }
+        }
+        // Back substitution with U.
+        for i in (0..n).rev() {
+            for p in i + 1..n {
+                for l in 0..w {
+                    let lu = self.data[(p * n + i) * w + l];
+                    let xp = x[p * w + l];
+                    let e = i * w + l;
+                    x[e] = x[e] - lu * xp;
+                }
+            }
+            for l in 0..w {
+                let e = i * w + l;
+                x[e] = x[e] / self.data[(i * n + i) * w + l];
+            }
+        }
+        for (l, b) in rhs.iter_mut().enumerate() {
+            for (i, v) in b.iter_mut().enumerate() {
+                *v = x[i * w + l];
+            }
+        }
+    }
+}
+
+/// Factor a slice of same-shape small matrices in place through
+/// interleaved bundles: full `width()`-wide bundles plus one ragged tail.
+/// Returns per-problem pivot vectors in input order. Bitwise identical
+/// to calling [`crate::lu::lu_unblocked`] on each matrix.
+pub fn lu_unblocked_batch<S: Scalar>(mats: &mut [Mat<S>]) -> Vec<Vec<usize>> {
+    let w = SmallBundle::<S>::width();
+    let mut out = Vec::with_capacity(mats.len());
+    let mut base = 0;
+    while base < mats.len() {
+        let take = w.min(mats.len() - base);
+        let chunk = &mut mats[base..base + take];
+        let refs: Vec<&Mat<S>> = chunk.iter().collect();
+        let mut bundle = SmallBundle::pack(&refs);
+        bundle.factor();
+        for (slot, a) in chunk.iter_mut().enumerate() {
+            *a = bundle.lane_matrix(slot);
+            out.push(bundle.pivots(slot));
+        }
+        base += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::micro::KERNEL_TEST_LOCK;
+    use crate::blis::{set_kernel, Kernel};
+    use crate::lu::lu_unblocked;
+    use crate::matrix::naive;
+
+    fn ref_factor<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Vec<usize>) {
+        let mut f = a.clone();
+        let ipiv = lu_unblocked(f.view_mut());
+        (f, ipiv)
+    }
+
+    fn assert_bitwise_eq<S: Scalar>(a: &Mat<S>, b: &Mat<S>, what: &str) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits_u64(), y.to_bits_u64(), "{what}: bit mismatch");
+        }
+    }
+
+    fn agree_case<S: Scalar>(m: usize, n: usize, live: usize, seed: u64) {
+        let mats: Vec<Mat<S>> =
+            (0..live).map(|l| Mat::random(m, n, seed + l as u64)).collect();
+        let refs: Vec<&Mat<S>> = mats.iter().collect();
+        let mut bundle = SmallBundle::pack(&refs);
+        bundle.factor();
+        for (slot, a) in mats.iter().enumerate() {
+            let (f, ipiv) = ref_factor(a);
+            assert_eq!(bundle.pivots(slot), ipiv, "pivots {m}x{n} slot {slot}");
+            assert_bitwise_eq(&bundle.lane_matrix(slot), &f, "factors");
+        }
+    }
+
+    #[test]
+    fn bundle_agrees_bitwise_with_unblocked_f64() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for kern in [Kernel::Portable, Kernel::Auto] {
+            set_kernel(Some(kern));
+            for &n in &[1usize, 2, 3, 5, 8, 16, 24] {
+                for live in 1..=SmallBundle::<f64>::width() {
+                    agree_case::<f64>(n, n, live, 7 * n as u64 + live as u64);
+                }
+            }
+            agree_case::<f64>(12, 5, 3, 99); // tall
+            agree_case::<f64>(5, 12, 2, 98); // wide
+        }
+        set_kernel(None);
+    }
+
+    #[test]
+    fn bundle_agrees_bitwise_with_unblocked_f32() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for kern in [Kernel::Portable, Kernel::Auto] {
+            set_kernel(Some(kern));
+            for &n in &[1usize, 2, 7, 16, 31] {
+                for live in [1, 3, SmallBundle::<f32>::width()] {
+                    agree_case::<f32>(n, n, live, 13 * n as u64 + live as u64);
+                }
+            }
+        }
+        set_kernel(None);
+    }
+
+    #[test]
+    fn zero_pivot_lane_is_skipped_and_flagged() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for kern in [Kernel::Portable, Kernel::Auto] {
+            set_kernel(Some(kern));
+            // Lane 0: a singular matrix (zero column); lane 1: well-conditioned.
+            let mut s = Mat::<f64>::zeros(4, 4);
+            s[(0, 1)] = 1.0;
+            s[(1, 2)] = 2.0;
+            s[(2, 3)] = 3.0;
+            let good = Mat::<f64>::random_dd(4, 5);
+            let mut bundle = SmallBundle::pack(&[&s, &good]);
+            bundle.factor();
+            let (fs, ps) = ref_factor(&s);
+            assert_eq!(bundle.pivots(0), ps);
+            assert_bitwise_eq(&bundle.lane_matrix(0), &fs, "singular lane");
+            assert_eq!(bundle.zero_pivot_col(0), Some(0));
+            assert_eq!(bundle.zero_pivot_col(1), None);
+            let (fg, pg) = ref_factor(&good);
+            assert_eq!(bundle.pivots(1), pg);
+            assert_bitwise_eq(&bundle.lane_matrix(1), &fg, "good lane");
+        }
+        set_kernel(None);
+    }
+
+    #[test]
+    fn batch_chunks_full_and_ragged() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_kernel(None);
+        // 11 problems of n=9 → two full f64 bundles + ragged 3.
+        let mut mats: Vec<Mat<f64>> = (0..11).map(|i| Mat::random(9, 9, 400 + i)).collect();
+        let originals = mats.clone();
+        let pivots = lu_unblocked_batch(&mut mats);
+        for (i, a0) in originals.iter().enumerate() {
+            let (f, ipiv) = ref_factor(a0);
+            assert_eq!(pivots[i], ipiv, "problem {i}");
+            assert_bitwise_eq(&mats[i], &f, "problem factors");
+        }
+    }
+
+    #[test]
+    fn solve_matches_naive_bitwise() {
+        let _g = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_kernel(None);
+        let n = 12;
+        let mats: Vec<Mat<f64>> = (0..3).map(|i| Mat::random_dd(n, 800 + i)).collect();
+        let refs: Vec<&Mat<f64>> = mats.iter().collect();
+        let mut bundle = SmallBundle::pack(&refs);
+        bundle.factor();
+        let mut rhs: Vec<Vec<f64>> = (0..3)
+            .map(|l| (0..n).map(|i| (i as f64 + 1.0) * (l as f64 + 0.5)).collect())
+            .collect();
+        let expect: Vec<Vec<f64>> = mats
+            .iter()
+            .zip(&rhs)
+            .map(|(a, b)| {
+                let (f, ipiv) = ref_factor(a);
+                naive::lu_solve(&f, &ipiv, b)
+            })
+            .collect();
+        bundle.solve(&mut rhs);
+        for (l, (got, want)) in rhs.iter().zip(&expect).enumerate() {
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "solve lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed shapes")]
+    fn pack_rejects_mixed_shapes() {
+        let a = Mat::<f64>::zeros(4, 4);
+        let b = Mat::<f64>::zeros(5, 5);
+        let _ = SmallBundle::pack(&[&a, &b]);
+    }
+}

@@ -7,7 +7,7 @@
 //! update to the trailing columns. Returns pivots as row indices
 //! *relative to the panel* (LAPACK convention, `ipiv[k] >= k`).
 
-use crate::blis::small::{ger_update, iamax_col, scal_col};
+use crate::blis::small::lu_step_col;
 use crate::matrix::MatMut;
 use crate::scalar::Scalar;
 
@@ -15,19 +15,16 @@ use crate::scalar::Scalar;
 /// (pivot == 0) are tolerated LAPACK-style: the column is skipped and the
 /// zero stays on the diagonal. Generic over the sealed [`Scalar`] layer —
 /// the same leaf runs in both precisions.
+///
+/// Each column step goes through [`lu_step_col`], the single shared
+/// contract also honored (lane-wise) by the interleaved small-batch
+/// kernel, so the two execution strategies cannot drift apart.
 pub fn lu_unblocked<S: Scalar>(a: MatMut<S>) -> Vec<usize> {
     let (m, n) = (a.rows(), a.cols());
     let kmax = m.min(n);
     let mut ipiv = Vec::with_capacity(kmax);
     for k in 0..kmax {
-        let piv = iamax_col(a, k, k, m);
-        ipiv.push(piv);
-        a.swap_rows(k, piv, 0, n);
-        let akk = a.at(k, k);
-        if akk != S::ZERO {
-            scal_col(a, k, k + 1, m, S::ONE / akk);
-            ger_update(a, k + 1, m, k + 1, n, k, k);
-        }
+        ipiv.push(lu_step_col(a, k, m, n));
     }
     ipiv
 }

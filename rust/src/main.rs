@@ -13,9 +13,12 @@
 //!               # to full double-precision backward error (DESIGN.md §12)
 //! mlu batch     --sizes 256,192,320 --workers 4 [--kind lu|chol|qr|mix]
 //!               [--prec f32|f64] [--check --compare --trace t.json]
+//!               [--interleaved]   # route small LU requests through the
+//!                                 # SIMD-interleaved fast path (§18)
 //! mlu serve     --listen unix:/run/mlu.sock|tcp:host:port [--workers 4]
 //!               [--max-pending 64 --max-client 16 --max-dim 8192
-//!                --grace-ms 5000]   # network daemon; SIGTERM/SIGINT
+//!                --grace-ms 5000 --interleaved]
+//!                                   # network daemon; SIGTERM/SIGINT
 //!                                   # triggers a graceful drain (§14)
 //! mlu sclient   --connect unix:...|tcp:... --count 8 --n 96
 //!               [--kind lu|chol|qr|solve|mix --prec f32|f64|mix
@@ -93,8 +96,10 @@ commands: factorize | chol | qr | solve | batch | serve | sclient | replay | tra
 global flags: --params mc,kc,nc | --kernel auto|simd|portable | --steal off|auto|<fraction>
 factor flags: --driver lookahead|dag selects the driver family (dag = tile-DAG dataflow runtime, DESIGN.md §17)
 solve flags: --prec f32|f64|mixed (mixed = f32 factor + f64 refinement)
+batch flags: --interleaved routes small LU problems through the SIMD-interleaved fast path (DESIGN.md §18)
 serve flags: --listen unix:<path>|tcp:<host:port> --workers N --max-pending Q --max-client C --max-dim D --grace-ms G
              --capture out.mrb (record every scheduling decision into a replay bundle, DESIGN.md §16)
+             --interleaved (bundle small LU requests into SIMD-interleaved batches, DESIGN.md §18)
 sclient flags: --connect <addr> --count N --n SIZE --kind lu|chol|qr|solve|mix --prec f32|f64|mix --check
                --retry N --backoff MS (reconnect + resubmit on disconnects, overloaded/draining rejects, internal failures)
 replay: mlu replay bundle.mrb [--rounds N --workers W --sweep steal=off|auto|250,static_frac=0.9 --out BENCH_replay.json]
@@ -428,6 +433,7 @@ fn cmd_batch(args: &Args) -> i32 {
         bo: args.get("bo", 64),
         bi: args.get("bi", 16),
         params: resolve_params(args),
+        interleave: args.has("interleaved"),
         ..Default::default()
     };
     let prec_s = args.get_str("prec", "f64");
@@ -655,6 +661,7 @@ fn cmd_serve(args: &Args) -> i32 {
             bo: args.get("bo", 64),
             bi: args.get("bi", 16),
             params: resolve_params(args),
+            interleave: args.has("interleaved"),
             ..Default::default()
         },
         admission: AdmissionCfg {

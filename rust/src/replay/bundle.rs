@@ -136,6 +136,11 @@ pub struct BundleCfg {
     pub nc: u32,
     /// The steal policy the capture ran under.
     pub steal: StealPolicy,
+    /// Whether the interleaved small-problem fast path (DESIGN.md §18)
+    /// was enabled. Carried in header flags bit 0; pre-§18 bundles
+    /// wrote the byte as 0, so they decode to `false` and replay with
+    /// the fast path off — exactly how they were captured.
+    pub interleave: bool,
 }
 
 impl BundleCfg {
@@ -149,6 +154,7 @@ impl BundleCfg {
             kc: cfg.params.kc as u32,
             nc: cfg.params.nc as u32,
             steal: cfg.params.steal,
+            interleave: cfg.interleave,
         }
     }
 
@@ -165,6 +171,7 @@ impl BundleCfg {
                 nc: self.nc as usize,
                 steal: self.steal,
             },
+            interleave: self.interleave,
             ..Default::default()
         }
     }
@@ -330,7 +337,7 @@ pub fn encode(bundle: &Bundle) -> Vec<u8> {
     );
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
-    out.push(0); // flags
+    out.push(u8::from(bundle.cfg.interleave)); // flags: bit 0 = interleave
     put_u16(&mut out, 0); // reserved
     let c = &bundle.cfg;
     put_u32(&mut out, c.workers);
@@ -405,7 +412,7 @@ pub fn decode_v1(bytes: &[u8]) -> Result<Bundle, BundleError> {
     if ver != 1 {
         return err(format!("decode_v1 fed version {ver}"));
     }
-    c.u8()?; // flags
+    let hdr_flags = c.u8()?; // bit 0 = interleave; rest reserved
     c.u16()?; // reserved
     let workers = c.u32()?;
     let bo = c.u32()?;
@@ -509,6 +516,7 @@ pub fn decode_v1(bytes: &[u8]) -> Result<Bundle, BundleError> {
             kc,
             nc,
             steal,
+            interleave: hdr_flags & 1 != 0,
         },
         requests,
         decisions,
@@ -530,6 +538,7 @@ mod tests {
                 kc: 8,
                 nc: 18,
                 steal: StealPolicy::Fraction(500),
+                interleave: false,
             },
             requests: vec![ReqRecord {
                 id: 0,
@@ -580,6 +589,22 @@ mod tests {
             PREFIX_LEN + REQ_FIXED + 32 + 2 * DEC_LEN,
             "fixed sizes drifted from the layout constants"
         );
+    }
+
+    #[test]
+    fn interleave_flag_rides_header_bit_0() {
+        let mut b = sample();
+        b.cfg.interleave = true;
+        let bytes = encode(&b);
+        assert_eq!(bytes[5], 1, "flags byte carries the interleave bit");
+        assert_eq!(decode(&bytes).unwrap(), b);
+        // Pre-§18 bundles wrote flags = 0; they must decode to "off".
+        let off = encode(&sample());
+        assert_eq!(off[5], 0);
+        assert!(!decode(&off).unwrap().cfg.interleave);
+        // And the knob survives the serve-config round trip.
+        assert!(b.cfg.to_serve().interleave);
+        assert!(!sample().cfg.to_serve().interleave);
     }
 
     #[test]

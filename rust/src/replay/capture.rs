@@ -63,6 +63,16 @@ pub enum DecisionKind {
     /// invariant records of a DAG-driven request are the same
     /// submit/lease/checkpoint stream the crew drivers emit.
     TaskGrant = 9,
+    /// The batch assembler grouped a staged small request into a SIMD
+    /// bundle (DESIGN.md §18). `a` is the bundle anchor (the id of the
+    /// bundle's first member), `b` packs
+    /// `n | prec << 8 | live << 16 | slot << 24`. **Environmental**:
+    /// bundle composition is timing-shaped (which requests were staged
+    /// when the leader fired), and the interleaved kernel's bitwise
+    /// contract makes each member's result independent of its
+    /// bundle-mates — the invariant record of a bundled request is its
+    /// submit alone.
+    BundleForm = 10,
 }
 
 impl DecisionKind {
@@ -83,6 +93,7 @@ impl DecisionKind {
             7 => Some(Self::EtTrigger),
             8 => Some(Self::LeaseRevoke),
             9 => Some(Self::TaskGrant),
+            10 => Some(Self::BundleForm),
             _ => None,
         }
     }
@@ -99,6 +110,7 @@ impl DecisionKind {
             Self::EtTrigger => "et-trigger",
             Self::LeaseRevoke => "lease-revoke",
             Self::TaskGrant => "task-grant",
+            Self::BundleForm => "bundle-form",
         }
     }
 
@@ -180,6 +192,14 @@ impl Decision {
             DecisionKind::TaskGrant => {
                 format!("task {} priority {}", self.a, self.b)
             }
+            DecisionKind::BundleForm => format!(
+                "anchor {} n {} prec {} live {} slot {}",
+                self.a,
+                self.b & 0xff,
+                (self.b >> 8) & 0xff,
+                (self.b >> 16) & 0xff,
+                (self.b >> 24) & 0xff
+            ),
         };
         format!(
             "#{} {} req{} [{}]: {}",
@@ -294,17 +314,18 @@ mod tests {
 
     #[test]
     fn kind_tags_roundtrip_and_split_is_stable() {
-        for tag in 1..=9u8 {
+        for tag in 1..=10u8 {
             let k = DecisionKind::from_tag(tag).unwrap();
             assert_eq!(k.tag(), tag);
         }
         assert!(DecisionKind::from_tag(0).is_none());
-        assert!(DecisionKind::from_tag(10).is_none());
+        assert!(DecisionKind::from_tag(11).is_none());
         // The invariant/environmental split is part of the v1 format
         // contract (DESIGN.md §16.4) — changing it is a version bump.
         // Task grants (tag 9) are environmental by the DAG determinism
-        // argument (DESIGN.md §17.5).
-        let inv: Vec<u8> = (1..=9)
+        // argument (DESIGN.md §17.5); bundle formations (tag 10) by the
+        // interleaved kernel's bitwise contract (DESIGN.md §18).
+        let inv: Vec<u8> = (1..=10)
             .filter(|&t| DecisionKind::from_tag(t).unwrap().invariant())
             .collect();
         assert_eq!(inv, vec![1, 3, 4, 8]);
@@ -312,7 +333,7 @@ mod tests {
 
     #[test]
     fn describe_names_every_kind() {
-        for tag in 1..=9u8 {
+        for tag in 1..=10u8 {
             let d = Decision {
                 ordinal: 7,
                 kind: DecisionKind::from_tag(tag).unwrap(),

@@ -342,6 +342,7 @@ mod tests {
                 kc: 256,
                 nc: 4080,
                 steal,
+                interleave: false,
             },
             requests: vec![ReqRecord {
                 id: 0,

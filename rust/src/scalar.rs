@@ -122,6 +122,18 @@ pub trait Scalar:
         m_eff: usize,
         n_eff: usize,
     );
+
+    /// The type's registered interleaved small-batch LU kernel
+    /// (DESIGN.md §18): factor `SIMD_LANES` independent `m × n` problems
+    /// laid out problem-major in `data` (`data[(j*m + i) * SIMD_LANES + l]`
+    /// is element `(i, j)` of problem `l`), writing per-problem pivots to
+    /// `ipiv[k * SIMD_LANES + l]`. With `simd` set the caller has verified
+    /// AVX2+FMA support and the type's vector kernel runs; otherwise the
+    /// portable per-lane fallback runs. Both replicate
+    /// [`crate::blis::small::lu_step_col`] per lane and produce
+    /// bitwise-identical results, so the flag is a pure performance
+    /// choice.
+    fn small_lu_kernel(simd: bool, data: &mut [Self], m: usize, n: usize, ipiv: &mut [usize]);
 }
 
 impl Scalar for f64 {
@@ -191,6 +203,18 @@ impl Scalar for f64 {
         let _ = simd;
         crate::blis::micro::micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
     }
+
+    #[inline]
+    fn small_lu_kernel(simd: bool, data: &mut [Self], m: usize, n: usize, ipiv: &mut [usize]) {
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: `simd` implies AVX2+FMA per the dispatch contract.
+            unsafe { crate::blis::smallbatch::small_lu_avx2(data, m, n, ipiv) };
+            return;
+        }
+        let _ = simd;
+        crate::blis::smallbatch::small_lu_portable::<Self>(data, m, n, ipiv);
+    }
 }
 
 impl Scalar for f32 {
@@ -257,6 +281,18 @@ impl Scalar for f32 {
         }
         let _ = simd;
         crate::blis::micro::micro_kernel_portable(k, alpha, a_panel, b_panel, c, m_eff, n_eff);
+    }
+
+    #[inline]
+    fn small_lu_kernel(simd: bool, data: &mut [Self], m: usize, n: usize, ipiv: &mut [usize]) {
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: as in the f64 impl — `simd` implies AVX2+FMA.
+            unsafe { crate::blis::smallbatch::small_lu_avx2_f32(data, m, n, ipiv) };
+            return;
+        }
+        let _ = simd;
+        crate::blis::smallbatch::small_lu_portable::<Self>(data, m, n, ipiv);
     }
 }
 

@@ -33,6 +33,50 @@ pub fn remaining_cost(hw: &HwModel, m: usize, n: usize, k: usize, bo: usize, bi:
     FactorKind::Lu.remaining_cost(hw, m, n, k, bo, bi)
 }
 
+/// Execution strategy chosen for an admitted request — the
+/// admission/execution split (DESIGN.md §18): [`crate::serve::LuServer`]
+/// admits a request (id, capture record, typed handle) *before* deciding
+/// how it will run, then routes it by this enum. Adding a strategy means
+/// adding a variant here, not another ad-hoc branch in `submit`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Classic per-problem path: the request leads its own crew under a
+    /// revocable lease and runs a blocked (or tile-DAG) driver.
+    PerProblem,
+    /// Interleaved small-batch path: the request is staged into a
+    /// same-shape same-precision bundle and factored lane-parallel by
+    /// the register-resident kernel ([`crate::blis::smallbatch`]) — no
+    /// crew, no lease, no packing arena.
+    Interleaved,
+}
+
+/// Decide how an admitted factorization request executes. The
+/// interleaved path takes square LU requests no larger than the cost
+/// model's [`HwModel::small_threshold`] when the server's `interleave`
+/// knob is on; everything else — other kinds, rectangular shapes,
+/// explicit driver-family or deadline requirements — keeps the
+/// per-problem path. The threshold moves *placement only*: both
+/// strategies produce bitwise-identical factors per problem
+/// (`tests/smallbatch_agree.rs`).
+pub fn choose_strategy<S: Scalar>(
+    cfg: &crate::serve::ServeConfig,
+    req: &crate::serve::LuRequest<S>,
+) -> Strategy {
+    let n = req.a.cols();
+    let small = n >= 1 && n <= cfg.hw.small_threshold(S::SIMD_LANES);
+    if cfg.interleave
+        && req.kind == FactorKind::Lu
+        && req.a.rows() == n
+        && small
+        && req.driver == DriverFamily::Lookahead
+        && req.deadline.is_none()
+    {
+        Strategy::Interleaved
+    } else {
+        Strategy::PerProblem
+    }
+}
+
 /// Everything a leader needs to drive one request.
 pub struct DriveCfg<'a> {
     /// BLIS blocking parameters for every kernel of the request.
@@ -165,6 +209,44 @@ mod tests {
         // Front-loading (paper §3.1): the first half of the columns
         // carries well over half of the work.
         assert!(half < 0.4 * full, "half={half} full={full}");
+    }
+
+    #[test]
+    fn choose_strategy_routes_by_size_shape_and_knob() {
+        use crate::serve::{LuRequest, ServeConfig};
+        use std::time::Duration;
+        let on = ServeConfig {
+            interleave: true,
+            ..Default::default()
+        };
+        let off = ServeConfig::default();
+        let small = || LuRequest::new(Matrix::zeros(16, 16));
+        assert_eq!(choose_strategy(&on, &small()), Strategy::Interleaved);
+        // The knob gates the path entirely.
+        assert_eq!(choose_strategy(&off, &small()), Strategy::PerProblem);
+        // Above the threshold: per-problem.
+        let thr = on.hw.small_threshold(f64::SIMD_LANES);
+        let big = LuRequest::new(Matrix::zeros(thr + 1, thr + 1));
+        assert_eq!(choose_strategy(&on, &big), Strategy::PerProblem);
+        // At the threshold: interleaved (the bound is inclusive).
+        let edge = LuRequest::new(Matrix::zeros(thr, thr));
+        assert_eq!(choose_strategy(&on, &edge), Strategy::Interleaved);
+        // Non-LU kinds, rectangular shapes, explicit driver families,
+        // and deadlines all keep the per-problem path.
+        let chol = small().with_kind(FactorKind::Chol);
+        assert_eq!(choose_strategy(&on, &chol), Strategy::PerProblem);
+        let rect = LuRequest::new(Matrix::zeros(16, 8));
+        assert_eq!(choose_strategy(&on, &rect), Strategy::PerProblem);
+        let dag = small().with_driver(DriverFamily::Dag);
+        assert_eq!(choose_strategy(&on, &dag), Strategy::PerProblem);
+        let dl = small().with_deadline(Duration::from_secs(1));
+        assert_eq!(choose_strategy(&on, &dl), Strategy::PerProblem);
+        // f32 routes by its own (wider) lane count but the same bound.
+        let s32 = LuRequest::new(Mat::<f32>::zeros(16, 16));
+        assert_eq!(choose_strategy(&on, &s32), Strategy::Interleaved);
+        // Degenerate 0×0 requests stay per-problem.
+        let empty = LuRequest::new(Matrix::zeros(0, 0));
+        assert_eq!(choose_strategy(&on, &empty), Strategy::PerProblem);
     }
 
     #[test]

@@ -70,9 +70,10 @@ pub mod net;
 pub mod proto;
 pub mod registry;
 
+pub use driver::{choose_strategy, Strategy};
 pub use registry::{CrewRegistry, Lease};
 
-use crate::blis::{BlisParams, PackArena};
+use crate::blis::{BlisParams, PackArena, SmallBundle};
 use crate::factor::{DriverFamily, FactorError, FactorKind};
 use crate::matrix::{Mat, Matrix};
 use crate::pool::{Crew, EntryPolicy, Pool, TaskHandle};
@@ -82,7 +83,7 @@ use crate::scalar::Scalar;
 use crate::sim::HwModel;
 use crate::solve::{SolveCtl, SolvePrec};
 use crossbeam_utils::Backoff;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -103,6 +104,14 @@ pub struct ServeConfig {
     pub entry: EntryPolicy,
     /// Cost model used for remaining-work estimates.
     pub hw: HwModel,
+    /// Route small square LU requests through the interleaved
+    /// small-batch fast path (DESIGN.md §18): same-shape same-precision
+    /// requests no larger than [`HwModel::small_threshold`] are grouped
+    /// into SIMD-width bundles and factored lane-parallel by
+    /// [`crate::blis::smallbatch`] instead of leading a crew. Off by
+    /// default; the threshold moves placement only, never results
+    /// (`tests/smallbatch_agree.rs`).
+    pub interleave: bool,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +123,7 @@ impl Default for ServeConfig {
             params: BlisParams::default(),
             entry: EntryPolicy::JobBoundary,
             hw: HwModel::default(),
+            interleave: false,
         }
     }
 }
@@ -454,6 +464,52 @@ impl Ord for QueuedJob {
     }
 }
 
+/// How long a ragged (not yet full) bundle may wait for lanemates while
+/// per-problem work keeps the queue busy. Bounds small-request latency
+/// under mixed load; when the heap is empty a ragged bundle flushes
+/// immediately instead.
+const BUNDLE_LINGER: Duration = Duration::from_millis(2);
+
+/// Staging-bucket key for the interleaved strategy: bundles mix only
+/// same-shape same-precision problems (mixed-size queues are *never*
+/// bundled together — pinned in `tests/smallbatch_agree.rs`).
+#[derive(Copy, Clone, PartialEq, Eq, Hash)]
+struct SmallKey {
+    n: u32,
+    prec: u8,
+}
+
+/// Bundle width for a staging bucket's precision code.
+fn small_lanes(prec: u8) -> usize {
+    if prec == bundle::prec_code::<f32>() {
+        f32::SIMD_LANES
+    } else {
+        f64::SIMD_LANES
+    }
+}
+
+/// Typed payload of one staged small request (precision `S` matches the
+/// bucket's prec code).
+struct SmallReq<S: Scalar> {
+    id: u64,
+    a: Mat<S>,
+    submitted: Instant,
+    jstate: Arc<JobState<JobResult<S>>>,
+}
+
+/// One staged small request: the scheduling key lives in its bucket;
+/// the precision lives inside the type-erased payload (downcast by the
+/// bundle leader, which knows the bucket's prec code).
+struct StagedSmall {
+    id: u64,
+    submitted: Instant,
+    /// A `Box<SmallReq<S>>` for the bucket's precision.
+    payload: Box<dyn std::any::Any + Send>,
+    /// Fulfills the handle with a typed failure (panic recovery, like
+    /// [`QueuedJob::abort`]).
+    abort: Box<dyn FnOnce(FactorError) + Send>,
+}
+
 struct ServerState {
     queue: Mutex<BinaryHeap<QueuedJob>>,
     /// Mirror of `queue.len()` readable without the lock (floaters poll
@@ -468,6 +524,13 @@ struct ServerState {
     /// been served, later factorizations lease their packed buffers
     /// without allocating (DESIGN.md §9).
     arena: Arc<PackArena>,
+    /// Staging buckets of the interleaved strategy: small requests wait
+    /// here (keyed by shape + precision) until a SIMD-width bundle fills
+    /// or the queue idles (DESIGN.md §18).
+    small: Mutex<HashMap<SmallKey, VecDeque<StagedSmall>>>,
+    /// Mirror of the total staged count readable without the lock
+    /// (serve loops and floaters poll it like `queued`).
+    staged: AtomicUsize,
 }
 
 impl ServerState {
@@ -491,6 +554,65 @@ impl ServerState {
         q.push(job);
         self.queued.store(q.len(), Ordering::Release);
     }
+
+    /// Stage a small request into its bundle bucket. Holds the queue
+    /// lock for the stop-check, pairing with `shutdown()` exactly like
+    /// `push` (lock order: queue, then small — everywhere).
+    fn stage(&self, key: SmallKey, job: StagedSmall) {
+        let _q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(
+            !self.stop.load(Ordering::Acquire),
+            "LuServer::submit after shutdown"
+        );
+        let mut sm = self.small.lock().unwrap_or_else(|e| e.into_inner());
+        sm.entry(key).or_default().push_back(job);
+        self.staged.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Take the next bundle to execute: a full SIMD-width bundle from
+    /// any bucket, else — when the per-problem heap is idle or a bucket
+    /// head has lingered past [`BUNDLE_LINGER`] — the oldest ragged
+    /// bucket. Returns the bucket key plus up to `small_lanes(prec)`
+    /// members in FIFO order.
+    fn pop_bundle(&self) -> Option<(SmallKey, Vec<StagedSmall>)> {
+        if self.staged.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut sm = self.small.lock().unwrap_or_else(|e| e.into_inner());
+        let mut pick: Option<SmallKey> = None;
+        for (k, q) in sm.iter() {
+            if q.len() >= small_lanes(k.prec) {
+                pick = Some(*k);
+                break;
+            }
+        }
+        if pick.is_none() {
+            let idle = self.queued.load(Ordering::Acquire) == 0;
+            let mut oldest: Option<(SmallKey, Instant)> = None;
+            for (k, q) in sm.iter() {
+                if let Some(front) = q.front() {
+                    let due = idle || front.submitted.elapsed() >= BUNDLE_LINGER;
+                    let older = match oldest {
+                        None => true,
+                        Some((_, t)) => front.submitted < t,
+                    };
+                    if due && older {
+                        oldest = Some((*k, front.submitted));
+                    }
+                }
+            }
+            pick = oldest.map(|(k, _)| k);
+        }
+        let key = pick?;
+        let q = sm.get_mut(&key)?;
+        let take = small_lanes(key.prec).min(q.len());
+        let members: Vec<StagedSmall> = q.drain(..take).collect();
+        if q.is_empty() {
+            sm.remove(&key);
+        }
+        self.staged.fetch_sub(members.len(), Ordering::AcqRel);
+        Some((key, members))
+    }
 }
 
 /// The batched multi-problem factorization server (module docs above).
@@ -512,6 +634,8 @@ impl LuServer {
             stop: AtomicBool::new(false),
             cfg,
             arena: Arc::new(PackArena::new()),
+            small: Mutex::new(HashMap::new()),
+            staged: AtomicUsize::new(0),
         });
         let loops = pool.broadcast(|_w| {
             let st = Arc::clone(&state);
@@ -541,8 +665,19 @@ impl LuServer {
         self.state.arena.stats()
     }
 
+    /// Total small requests currently staged in interleave buckets
+    /// (0 unless [`ServeConfig::interleave`] is on; exposed for tests
+    /// and introspection).
+    pub fn staged_small(&self) -> usize {
+        self.state.staged.load(Ordering::Acquire)
+    }
+
     /// Enqueue a factorization request in either precision; returns
-    /// immediately with a typed handle.
+    /// immediately with a typed handle. Admission (id, capture record,
+    /// typed handle) happens first; the execution strategy
+    /// ([`Strategy`]) is chosen after and decides placement only — the
+    /// interleaved path stages the request into a bundle bucket, the
+    /// per-problem path pushes it on the priority heap.
     pub fn submit<S: Scalar>(&self, req: LuRequest<S>) -> JobHandle<JobResult<S>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if capture::active() {
@@ -550,6 +685,42 @@ impl LuServer {
         }
         let jstate = JobState::<JobResult<S>>::new();
         let now = Instant::now();
+        if choose_strategy(&self.state.cfg, &req) == Strategy::Interleaved {
+            let key = SmallKey {
+                n: req.a.cols() as u32,
+                prec: bundle::prec_code::<S>(),
+            };
+            let kind = req.kind;
+            let abort_state = Arc::clone(&jstate);
+            let job = StagedSmall {
+                id,
+                submitted: now,
+                payload: Box::new(SmallReq {
+                    id,
+                    a: req.a,
+                    submitted: now,
+                    jstate: Arc::clone(&jstate),
+                }),
+                abort: Box::new(move |err: FactorError| {
+                    complete(
+                        &abort_state,
+                        JobResult::<S> {
+                            id,
+                            kind,
+                            a: Mat::zeros(0, 0),
+                            ipiv: Vec::new(),
+                            tau: Vec::new(),
+                            cols_done: 0,
+                            cancelled: false,
+                            secs: 0.0,
+                            error: Some(err),
+                        },
+                    );
+                }),
+            };
+            self.state.stage(key, job);
+            return JobHandle { id, state: jstate };
+        }
         let priority = req.priority;
         let run_state = Arc::clone(&jstate);
         let abort_state = Arc::clone(&jstate);
@@ -754,6 +925,36 @@ fn deadline_ms(d: Option<Duration>) -> u32 {
 fn serve_loop(state: &ServerState) {
     let backoff = Backoff::new();
     loop {
+        // Interleaved strategy first: a full SIMD-width bundle runs
+        // ahead of per-problem work (it retires `width` requests in one
+        // kernel pass); ragged bundles flush when the heap idles or
+        // after a bounded linger (see `ServerState::pop_bundle`).
+        if let Some((key, mut members)) = state.pop_bundle() {
+            // Pull the abort closures out before the payloads move into
+            // the leader, mirroring the per-problem panic recovery.
+            let aborts: Vec<Box<dyn FnOnce(FactorError) + Send>> = members
+                .iter_mut()
+                .map(|m| {
+                    std::mem::replace(&mut m.abort, Box::new(|_| {}))
+                        as Box<dyn FnOnce(FactorError) + Send>
+                })
+                .collect();
+            let ids: Vec<u64> = members.iter().map(|m| m.id).collect();
+            let led = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                lead_small_bundle(key, members)
+            }));
+            if let Err(payload) = led {
+                let msg = crate::pool::panic_message(payload.as_ref());
+                eprintln!("serve: small bundle {ids:?} panicked ({msg}); reported as failed");
+                for abort in aborts {
+                    abort(FactorError::Internal(format!(
+                        "bundle leader panicked: {msg}"
+                    )));
+                }
+            }
+            backoff.reset();
+            continue;
+        }
         if let Some(job) = state.pop() {
             let QueuedJob {
                 id, run, abort, ..
@@ -772,7 +973,10 @@ fn serve_loop(state: &ServerState) {
             backoff.reset();
             continue;
         }
-        if state.stop.load(Ordering::Acquire) && state.queued.load(Ordering::Acquire) == 0 {
+        if state.stop.load(Ordering::Acquire)
+            && state.queued.load(Ordering::Acquire) == 0
+            && state.staged.load(Ordering::Acquire) == 0
+        {
             break;
         }
         let e0 = state.registry.epoch();
@@ -788,6 +992,7 @@ fn serve_loop(state: &ServerState) {
             let donate = || {
                 state.registry.epoch() == e0
                     && state.queued.load(Ordering::Acquire) == 0
+                    && state.staged.load(Ordering::Acquire) == 0
                     && !state.stop.load(Ordering::Acquire)
             };
             // DAG-family requests publish their scheduler in the lease's
@@ -932,6 +1137,121 @@ fn lead_factor<S: Scalar>(
         );
     }
     complete(&jstate, result);
+}
+
+/// Dispatch a popped bundle to the typed leader matching its bucket's
+/// precision code.
+fn lead_small_bundle(key: SmallKey, members: Vec<StagedSmall>) {
+    if key.prec == bundle::prec_code::<f32>() {
+        lead_small::<f32>(members);
+    } else {
+        lead_small::<f64>(members);
+    }
+}
+
+/// Lead one interleaved bundle (DESIGN.md §18): pack the members'
+/// matrices problem-major, run the register-resident kernel once, and
+/// fulfill every member's typed handle. No crew, no lease, no packing
+/// arena — the whole point of the fast path is skipping that machinery,
+/// so the registry never sees these requests and large requests keep
+/// their leases (and floaters) while bundles drain.
+///
+/// Capture (DESIGN.md §16): each member's `Submit` was already recorded
+/// at admission; bundle formation is recorded here as the environmental
+/// [`DecisionKind::BundleForm`] (composition is timing-shaped, never
+/// certified), and the per-member result digest closes the record. The
+/// invariant subsequence of a bundled request is therefore just
+/// `Submit` — deterministic however the bundles happen to form, because
+/// every composition factors each lane bitwise-identically.
+fn lead_small<S: Scalar>(members: Vec<StagedSmall>) {
+    let mut live: Vec<SmallReq<S>> = Vec::with_capacity(members.len());
+    for m in members {
+        let req = match m.payload.downcast::<SmallReq<S>>() {
+            Ok(r) => *r,
+            // Unreachable by construction (the bucket key fixes the
+            // precision); a panic routes every member through the serve
+            // loop's abort recovery rather than hanging a waiter.
+            Err(_) => panic!("small bundle: payload precision does not match bucket"),
+        };
+        // A member cancelled while staged costs nothing — complete it
+        // out of the bundle, like a queued per-problem cancel.
+        if req.jstate.cancel.load(Ordering::Acquire) {
+            let secs = req.submitted.elapsed().as_secs_f64();
+            let result = JobResult {
+                id: req.id,
+                kind: FactorKind::Lu,
+                a: req.a,
+                ipiv: Vec::new(),
+                tau: Vec::new(),
+                cols_done: 0,
+                cancelled: true,
+                secs,
+                error: None,
+            };
+            if capture::active() {
+                capture::record_result(req.id, factor_digest(&result), 0, true, false);
+            }
+            complete(&req.jstate, result);
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let n = live[0].a.cols();
+    if capture::active() {
+        // One environmental record per member: b packs
+        // n | prec << 8 | live << 16 | slot << 24; a names the bundle
+        // anchor (first member) so a trace can regroup compositions.
+        let anchor = live[0].id;
+        for (slot, req) in live.iter().enumerate() {
+            capture::record(
+                DecisionKind::BundleForm,
+                req.id,
+                anchor,
+                n as u64
+                    | (u64::from(bundle::prec_code::<S>()) << 8)
+                    | ((live.len() as u64) << 16)
+                    | ((slot as u64) << 24),
+            );
+        }
+    }
+    let refs: Vec<&Mat<S>> = live.iter().map(|r| &r.a).collect();
+    let mut bundle_mats = SmallBundle::pack(&refs);
+    bundle_mats.factor();
+    for (slot, req) in live.into_iter().enumerate() {
+        let a = bundle_mats.lane_matrix(slot);
+        let ipiv = bundle_mats.pivots(slot);
+        // LAPACK info semantics, mirroring the blocked driver's
+        // panel-health check: a zero pivot is recorded but the factors
+        // still commit whole.
+        let error = bundle_mats
+            .zero_pivot_col(slot)
+            .map(|col| FactorError::ExactlySingular { col });
+        let secs = req.submitted.elapsed().as_secs_f64();
+        let result = JobResult {
+            id: req.id,
+            kind: FactorKind::Lu,
+            a,
+            ipiv,
+            tau: Vec::new(),
+            cols_done: n,
+            cancelled: false,
+            secs,
+            error,
+        };
+        if capture::active() {
+            capture::record_result(
+                req.id,
+                factor_digest(&result),
+                n as u32,
+                false,
+                result.error.is_some(),
+            );
+        }
+        complete(&req.jstate, result);
+    }
 }
 
 /// Lead one solve request: register a crew lease priced at the chosen
@@ -1381,6 +1701,117 @@ mod tests {
         let res = h.wait();
         assert!(res.cancelled);
         assert!(!res.converged);
+        server.shutdown();
+    }
+
+    #[test]
+    fn interleaved_batch_matches_per_problem_reference_bitwise() {
+        let server = LuServer::new(ServeConfig {
+            interleave: true,
+            ..tiny_cfg(2)
+        });
+        let n = 12;
+        let originals: Vec<Matrix> = (0..9).map(|i| Matrix::random(n, n, 300 + i)).collect();
+        let reqs: Vec<LuRequest> = originals.iter().map(|a| LuRequest::new(a.clone())).collect();
+        let results = server.factorize_batch(reqs);
+        for (res, a0) in results.iter().zip(&originals) {
+            assert!(!res.cancelled, "req{}", res.id);
+            assert_eq!(res.cols_done, n);
+            assert!(res.error.is_none(), "req{}: {:?}", res.id, res.error);
+            let mut f = a0.clone();
+            let ipiv = crate::lu::lu_unblocked(f.view_mut());
+            assert_eq!(res.ipiv, ipiv, "req{} pivots", res.id);
+            assert_eq!(res.a.data(), f.data(), "req{} factors", res.id);
+        }
+        assert_eq!(server.staged_small(), 0);
+        // The fast path never touched the lease machinery or the arena.
+        assert!(server.registry().is_empty());
+        assert_eq!(server.arena_stats().allocations, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn interleaved_mixed_sizes_and_precisions_stay_separate() {
+        // Alternating shapes and precisions must land in separate
+        // buckets — a cross-shape bundle would panic in pack and come
+        // back as an Internal error, so clean bitwise results certify
+        // the grouping rule.
+        let server = LuServer::new(ServeConfig {
+            interleave: true,
+            ..tiny_cfg(3)
+        });
+        let mut h64 = Vec::new();
+        let mut ref64 = Vec::new();
+        let mut h32 = Vec::new();
+        let mut ref32 = Vec::new();
+        for i in 0..10u64 {
+            let n = if i % 2 == 0 { 8 } else { 13 };
+            let a = Matrix::random(n, n, 500 + i);
+            ref64.push(a.clone());
+            h64.push(server.submit(LuRequest::new(a)));
+            let a = Mat::<f32>::random(n, n, 900 + i);
+            ref32.push(a.clone());
+            h32.push(server.submit(LuRequest::new(a)));
+        }
+        for (h, a0) in h64.into_iter().zip(&ref64) {
+            let res = h.wait();
+            assert!(!res.cancelled && res.error.is_none());
+            let mut f = a0.clone();
+            let ipiv = crate::lu::lu_unblocked(f.view_mut());
+            assert_eq!(res.ipiv, ipiv);
+            assert_eq!(res.a.data(), f.data());
+        }
+        for (h, a0) in h32.into_iter().zip(&ref32) {
+            let res = h.wait();
+            assert!(!res.cancelled && res.error.is_none());
+            let mut f = a0.clone();
+            let ipiv = crate::lu::lu_unblocked(f.view_mut());
+            assert_eq!(res.ipiv, ipiv);
+            assert_eq!(res.a.data(), f.data());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn interleaved_singular_member_reports_exactly_singular() {
+        let server = LuServer::new(ServeConfig {
+            interleave: true,
+            ..tiny_cfg(1)
+        });
+        let zero = Matrix::zeros(6, 6);
+        let good = Matrix::random_dd(6, 44);
+        let hz = server.submit(LuRequest::new(zero));
+        let hg = server.submit(LuRequest::new(good.clone()));
+        let rz = hz.wait();
+        assert!(!rz.cancelled, "LAPACK info semantics: completes");
+        assert_eq!(rz.cols_done, 6);
+        assert!(
+            matches!(rz.error, Some(FactorError::ExactlySingular { col: 0 })),
+            "{:?}",
+            rz.error
+        );
+        let rg = hg.wait();
+        assert!(rg.error.is_none());
+        let r = naive::lu_residual(&good, &rg.a, &rg.ipiv);
+        assert!(r < 1e-12, "residual {r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn interleaved_cancel_while_staged_is_clean() {
+        let server = LuServer::new(ServeConfig {
+            interleave: true,
+            ..tiny_cfg(1)
+        });
+        let h = server.submit(LuRequest::new(Matrix::random(10, 10, 3)));
+        h.cancel();
+        let res = h.wait();
+        // Whether the cancel won the race to the bundle leader or not,
+        // the waiter gets a coherent result and the server keeps going.
+        assert!(res.cancelled || res.cols_done == 10);
+        let a0 = Matrix::random(10, 10, 4);
+        let ok = server.submit(LuRequest::new(a0.clone())).wait();
+        assert!(!ok.cancelled);
         server.shutdown();
     }
 

@@ -242,6 +242,49 @@ impl HwModel {
         steps
     }
 
+    /// Largest problem size `n` the interleaved small-batch fast path
+    /// (DESIGN.md §18) should handle for a bundle of `lanes` problems —
+    /// the serve layer's routing threshold between
+    /// `Strategy::Interleaved` and `Strategy::PerProblem`.
+    ///
+    /// Two bounds intersect:
+    ///
+    /// * **Capacity**: a bundle interleaves every element of `lanes`
+    ///   problems into one 256-bit vector, so its working set is
+    ///   `n² × 32` bytes regardless of precision (4 `f64` lanes and
+    ///   8 `f32` lanes both fill 32 bytes per element). Keeping the
+    ///   whole bundle within half of a 256 KiB per-core L2 (the other
+    ///   half for pivot traffic and the response path) caps `n` at
+    ///   `√(128 KiB / 32) = 64`.
+    /// * **Profitability**: the interleaved kernel amortizes one
+    ///   dispatch over `lanes` problems, so its per-problem cost is
+    ///   `≈ unblocked_time(n, n) / lanes + kernel_overhead / lanes`
+    ///   versus `unblocked_time(n, n)` one-at-a-time — a win at every
+    ///   `n` below the capacity bound (the scan below keeps the bound
+    ///   honest if the overhead constants are recalibrated).
+    ///
+    /// With the default model this returns 64 for any `lanes ≥ 2`,
+    /// matching the ROADMAP's "small systems (n ≤ 64)".
+    pub fn small_threshold(&self, lanes: usize) -> usize {
+        if lanes < 2 {
+            return 0; // no lanes to amortize over — nothing is "small"
+        }
+        let cap = 64; // √(128 KiB / 32 bytes-per-element-bundle)
+        let lanes_f = lanes as f64;
+        // Contiguous prefix of profitable sizes: routing must be a single
+        // threshold, so stop at the first n where bundling loses.
+        (1..=cap)
+            .take_while(|&n| {
+                let solo = self.unblocked_time(n, n);
+                // One dispatch and one pass of pack/unpack copies
+                // (priced as a second dispatch) amortize over the lanes.
+                let bundled = (solo + self.kernel_overhead) / lanes_f;
+                bundled < solo
+            })
+            .last()
+            .unwrap_or(0)
+    }
+
     /// Aggregate DGEMM peak of the machine (`t = cores`).
     pub fn machine_peak(&self) -> f64 {
         self.core_gemm_peak * self.cores as f64
@@ -385,6 +428,23 @@ mod tests {
         assert_eq!(same.core_gemm_peak, hw.core_gemm_peak);
         let same = hw.calibrate_from_gemm(m, n, k, t, hw.kernel_overhead / 2.0);
         assert_eq!(same.core_gemm_peak, hw.core_gemm_peak);
+    }
+
+    #[test]
+    fn small_threshold_matches_roadmap_bound() {
+        let hw = HwModel::default();
+        // The default model routes n ≤ 64 through the interleaved path
+        // for both bundle widths (ROADMAP: "small systems (n ≤ 64)").
+        assert_eq!(hw.small_threshold(4), 64);
+        assert_eq!(hw.small_threshold(8), 64);
+        // A single lane has nothing to amortize over.
+        assert_eq!(hw.small_threshold(1), 0);
+        assert_eq!(hw.small_threshold(0), 0);
+        // The capacity bound caps the threshold no matter how cheap
+        // dispatch gets.
+        let mut fast = hw;
+        fast.kernel_overhead = 0.0;
+        assert!(fast.small_threshold(8) <= 64);
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! request-level cancellation; the serve layer exposes the whole thing
 //! as a queue request kind (`LuServer::submit_solve`).
 
-use crate::blis::BlisParams;
+use crate::blis::{BlisParams, SmallBundle};
 use crate::factor::FactorError;
 use crate::lu::{lu_blocked_rl_ctl, BlockedCtl};
 use crate::matrix::{Mat, Matrix};
@@ -188,6 +188,49 @@ pub fn backward_error(a: &Matrix, x: &[f64], b: &[f64]) -> f64 {
         inf_norm_mat(a),
         inf_norm_vec(b),
     )
+}
+
+/// Solve many same-shape small square systems `A_l · x_l = b_l` through
+/// interleaved SIMD bundles (DESIGN.md §18): the matrices are packed
+/// problem-major into [`SmallBundle`]s (full-width plus one ragged
+/// tail), factored by the register-resident kernel, and
+/// back-substituted lane-parallel. `rhs` is overwritten with the
+/// solutions, bitwise identical to factoring each system with
+/// [`crate::lu::lu_unblocked`] and substituting with
+/// [`crate::matrix::naive::lu_solve`] one-at-a-time.
+///
+/// Returns one entry per problem: `None` for a clean solve, or
+/// `Some(ExactlySingular)` naming the first zero pivot column — that
+/// problem's `rhs` entry is then non-finite garbage (LAPACK `info`
+/// semantics: the factors are fine, the substitution divided by zero).
+///
+/// Panics if the shapes are mixed, a matrix is not square, or
+/// `rhs.len() != mats.len()` — callers group by shape first, as the
+/// serve-layer batch assembler does.
+pub fn lu_solve_batch<S: Scalar>(
+    mats: &[Mat<S>],
+    rhs: &mut [Vec<S>],
+) -> Vec<Option<FactorError>> {
+    assert_eq!(mats.len(), rhs.len(), "lu_solve_batch: one rhs per matrix");
+    let w = SmallBundle::<S>::width();
+    let mut out = Vec::with_capacity(mats.len());
+    let mut base = 0;
+    while base < mats.len() {
+        let take = w.min(mats.len() - base);
+        let refs: Vec<&Mat<S>> = mats[base..base + take].iter().collect();
+        let mut bundle = SmallBundle::pack(&refs);
+        bundle.factor();
+        for slot in 0..take {
+            out.push(
+                bundle
+                    .zero_pivot_col(slot)
+                    .map(|col| FactorError::ExactlySingular { col }),
+            );
+        }
+        bundle.solve(&mut rhs[base..base + take]);
+        base += take;
+    }
+    out
 }
 
 /// Factor `a` (a copy, in precision `S`) on `crew` and back/forward
@@ -404,6 +447,50 @@ mod tests {
             }
         }
         b
+    }
+
+    #[test]
+    fn batched_solve_is_bitwise_one_at_a_time() {
+        use crate::blis::micro::KERNEL_TEST_LOCK;
+        use crate::blis::{set_kernel, Kernel};
+        let _guard = KERNEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for kernel in [Kernel::Portable, Kernel::Auto] {
+            set_kernel(kernel);
+            // 7 problems of n=10: one full f64 bundle plus a ragged tail.
+            let n = 10;
+            let mats: Vec<Matrix> = (0..7).map(|i| Matrix::random(n, n, 800 + i)).collect();
+            let mut rhs: Vec<Vec<f64>> = (0..7)
+                .map(|i| (0..n).map(|j| (i * n + j) as f64 * 0.25 - 3.0).collect())
+                .collect();
+            let reference: Vec<Vec<f64>> = mats
+                .iter()
+                .zip(&rhs)
+                .map(|(a, b)| {
+                    let mut f = a.clone();
+                    let ipiv = crate::lu::lu_unblocked(f.view_mut());
+                    crate::matrix::naive::lu_solve(&f, &ipiv, b)
+                })
+                .collect();
+            let errs = lu_solve_batch(&mats, &mut rhs);
+            assert!(errs.iter().all(Option::is_none));
+            for (got, want) in rhs.iter().zip(&reference) {
+                let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "kernel {kernel:?}");
+            }
+            // A singular member is flagged and only that member's
+            // solution is garbage.
+            let mats = vec![Matrix::zeros(4, 4), Matrix::random_dd(4, 9)];
+            let mut rhs = vec![vec![1.0; 4], vec![1.0; 4]];
+            let errs = lu_solve_batch(&mats, &mut rhs);
+            assert!(matches!(
+                errs[0],
+                Some(FactorError::ExactlySingular { col: 0 })
+            ));
+            assert!(errs[1].is_none());
+            assert!(rhs[1].iter().all(|v| v.is_finite()));
+        }
+        set_kernel(Kernel::Auto);
     }
 
     #[test]

@@ -323,6 +323,110 @@ fn dag_family_capture_replays_and_certifies() {
     }
 }
 
+/// §18 fast path meets §16 capture: an interleave-on serve run records
+/// one environmental `BundleForm` per bundled member, keeps each
+/// bundled request's invariant stream to its Submit alone, carries the
+/// knob through the bundle header (flags bit 0), and replays certified
+/// — including on a different crew size, because a Submit-only
+/// invariant stream is independent of how the replay's assembler
+/// happens to compose bundles.
+#[test]
+fn interleaved_capture_replays_and_certifies() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = ServeConfig {
+        interleave: true,
+        ..serve_cfg(2)
+    };
+    let bcfg = BundleCfg::from_serve(&cfg);
+    assert!(bcfg.interleave, "from_serve must carry the knob");
+    assert!(capture::start(), "no capture may be active here");
+    let server = LuServer::new(cfg);
+    let sizes = [4usize, 9, 16, 12, 7, 16];
+    let mut handles = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        handles.push(server.submit(LuRequest::new(Matrix::random(n, n, 700 + i as u64))));
+    }
+    handles.push(server.submit(LuRequest::new(Mat::<f32>::random(10, 10, 800))));
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none() && !r.cancelled, "{:?}", r.error);
+    }
+    server.shutdown();
+    let (decisions, mut requests) = capture::stop().expect("capture was armed");
+    requests.sort_by_key(|r| r.id);
+    let bundle = Bundle {
+        cfg: bcfg,
+        requests,
+        decisions,
+    };
+
+    // Every request went through the assembler: one environmental
+    // BundleForm each, and an invariant stream of Submit alone (the
+    // fast path takes no lease, so no grant/checkpoint/revoke records).
+    let forms = bundle
+        .decisions
+        .iter()
+        .filter(|d| d.kind == DecisionKind::BundleForm)
+        .count();
+    assert_eq!(forms, 7, "one BundleForm per bundled member");
+    for r in &bundle.requests {
+        let inv: Vec<_> = bundle
+            .decisions
+            .iter()
+            .filter(|d| d.req == r.id && d.kind.invariant())
+            .collect();
+        assert_eq!(inv.len(), 1, "req {}: invariant stream must be Submit alone", r.id);
+        assert_eq!(inv[0].kind, DecisionKind::Submit);
+    }
+
+    // The knob rides header flags bit 0 through the wire format, so the
+    // replay server rebuilt from the decoded config routes the same way.
+    let bytes = bundle::encode(&bundle);
+    let back = bundle::decode(&bytes).expect("own encoding must decode");
+    assert_eq!(back, bundle);
+    assert!(back.cfg.interleave, "flags bit 0 lost in the roundtrip");
+    assert!(back.cfg.to_serve().interleave);
+
+    for workers in [None, Some(4usize)] {
+        let report = run_replay(&back, 2, workers).expect("replay must run");
+        assert!(
+            report.certified_ok(),
+            "workers={workers:?}: {}",
+            report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+        );
+        assert_eq!(report.certified, 7, "workers={workers:?}");
+    }
+}
+
+/// Pre-§18 bundles — and any capture taken with the knob off — replay
+/// exactly as before: the header flags byte decodes to `interleave:
+/// false`, the rebuilt serve config keeps the fast path off, no
+/// BundleForm records appear, and certification is untouched.
+#[test]
+fn pre_batch_bundles_replay_unchanged() {
+    let _g = CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let bundle = captured_bundle(2);
+    assert!(!bundle.cfg.interleave, "default capture keeps the fast path off");
+    assert!(
+        !bundle
+            .decisions
+            .iter()
+            .any(|d| d.kind == DecisionKind::BundleForm),
+        "no assembler records without the knob"
+    );
+    let bytes = bundle::encode(&bundle);
+    let back = bundle::decode(&bytes).expect("own encoding must decode");
+    assert!(!back.cfg.interleave, "flags bit 0 must decode to off");
+    assert!(!back.cfg.to_serve().interleave);
+    let report = run_replay(&back, 1, None).expect("replay must run");
+    assert!(
+        report.certified_ok(),
+        "{}",
+        report.divergence.as_ref().map(|d| d.to_string()).unwrap_or_default()
+    );
+    assert_eq!(report.certified, 5);
+}
+
 /// The chaos build compiles the fault-injection hooks into every
 /// checkpoint the capture recorder instruments; disarmed, they must not
 /// cost a single decision record or result bit.

@@ -37,6 +37,10 @@ fn golden_bundle() -> Bundle {
             kc: 8,
             nc: 12,
             steal: StealPolicy::Auto,
+            // The golden fixture predates the interleaved fast path, so
+            // its header flags byte is 0 — decoding must read that as
+            // "off" (the byte pin below keeps this honest).
+            interleave: false,
         },
         requests: vec![
             ReqRecord {

@@ -1,0 +1,315 @@
+//! Cross-path equivalence suite for the interleaved small-problem fast
+//! path (DESIGN.md §18) — the pin that lets the router move problems
+//! between the per-problem crew driver and the SIMD-interleaved batch
+//! kernel freely.
+//!
+//! The contract under test, in increasing strictness:
+//!
+//! 1. **Bitwise identity vs the unblocked leaf.** A problem factored in
+//!    any lane of any bundle (full or ragged, either precision, AVX2 or
+//!    portable kernel) produces *exactly* the bits `lu_unblocked` would:
+//!    pivot-for-pivot and element-for-element. This is what makes bundle
+//!    composition a pure placement decision.
+//! 2. **EPSILON-scaled residuals.** Batched factors are backward-stable
+//!    at each precision's own epsilon — the f32 path is not "f64 but
+//!    sloppier", it is correct at its own scale.
+//! 3. **Routing invariance.** Flipping the serve `interleave` knob (or
+//!    moving the threshold) changes *where* a small problem runs, never
+//!    *what* it computes.
+//!
+//! Random bundle compositions (sizes, ragged tails, mixed-size queues
+//! that must never be bundled together) are exercised through the
+//! `quickcheck_lite` property harness; failures reproduce via `QC_SEED`.
+
+use malleable_lu::blis::micro::{set_kernel, Kernel};
+use malleable_lu::blis::smallbatch::{lu_unblocked_batch, SmallBundle};
+use malleable_lu::lu::lu_unblocked;
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::scalar::Scalar;
+use malleable_lu::serve::{choose_strategy, LuRequest, LuServer, ServeConfig, Strategy};
+use malleable_lu::sim::HwModel;
+use malleable_lu::util::quickcheck_lite::{forall_res, Gen};
+use std::sync::Mutex;
+
+/// Serializes the tests in this binary: several flip the process-wide
+/// kernel registry or compare results *across* whole server runs, and
+/// a concurrent flip mid-run would turn a bitwise claim flaky.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn ref_lu<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Vec<usize>) {
+    let mut f = a.clone();
+    let ipiv = lu_unblocked(f.view_mut());
+    (f, ipiv)
+}
+
+fn bits<S: Scalar>(m: &Mat<S>) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits_u64()).collect()
+}
+
+/// Contract 1 for every size the router can choose, at full bundle
+/// width, under both the portable and the active-best kernel.
+fn sweep_full_width<S: Scalar>() {
+    let w = SmallBundle::<S>::width();
+    for kernel in [Kernel::Portable, Kernel::Auto] {
+        set_kernel(kernel);
+        for n in 1..=64usize {
+            let mats: Vec<Mat<S>> = (0..w)
+                .map(|l| Mat::random(n, n, (n * 131 + l) as u64))
+                .collect();
+            let mut batch = mats.clone();
+            let pivots = lu_unblocked_batch(&mut batch);
+            for ((got, piv), a0) in batch.iter().zip(&pivots).zip(&mats) {
+                let (f, ipiv) = ref_lu(a0);
+                assert_eq!(*piv, ipiv, "{} n={n} {kernel:?}: pivots", S::NAME);
+                assert_eq!(bits(got), bits(&f), "{} n={n} {kernel:?}: factors", S::NAME);
+            }
+        }
+    }
+    set_kernel(Kernel::Auto);
+}
+
+#[test]
+fn full_width_bundles_agree_bitwise_f64() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    sweep_full_width::<f64>();
+}
+
+#[test]
+fn full_width_bundles_agree_bitwise_f32() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    sweep_full_width::<f32>();
+}
+
+/// Contract 1 on ragged bundles: every live count below the SIMD width,
+/// with dead lanes that must never bleed into live results.
+fn sweep_ragged<S: Scalar>() {
+    let w = SmallBundle::<S>::width();
+    for n in [1usize, 3, 8, 17, 33, 64] {
+        for live in 1..=w {
+            let mats: Vec<Mat<S>> = (0..live)
+                .map(|l| Mat::random(n, n, (n * 977 + l) as u64))
+                .collect();
+            let refs: Vec<&Mat<S>> = mats.iter().collect();
+            let mut bundle = SmallBundle::pack(&refs);
+            bundle.factor();
+            for (slot, a0) in mats.iter().enumerate() {
+                let (f, ipiv) = ref_lu(a0);
+                assert_eq!(bundle.pivots(slot), ipiv, "{} n={n} live={live}", S::NAME);
+                assert_eq!(
+                    bits(&bundle.lane_matrix(slot)),
+                    bits(&f),
+                    "{} n={n} live={live} slot={slot}",
+                    S::NAME
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_bundles_agree_bitwise_f64() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    sweep_ragged::<f64>();
+}
+
+#[test]
+fn ragged_bundles_agree_bitwise_f32() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    sweep_ragged::<f32>();
+}
+
+/// Contract 2: backward error scales with the precision's own epsilon.
+fn residual_sweep<S: Scalar>() {
+    let w = SmallBundle::<S>::width();
+    let eps = S::EPSILON.to_f64();
+    for n in [8usize, 16, 32, 64] {
+        let mats: Vec<Mat<S>> = (0..w)
+            .map(|l| Mat::random(n, n, (n * 7 + l + 1) as u64))
+            .collect();
+        let mut batch = mats.clone();
+        let pivots = lu_unblocked_batch(&mut batch);
+        let bound = 64.0 * n as f64 * eps;
+        for ((f, piv), a0) in batch.iter().zip(&pivots).zip(&mats) {
+            let r = naive::lu_residual(a0, f, piv);
+            assert!(r < bound, "{} n={n}: residual {r} vs {bound}", S::NAME);
+            assert!(naive::growth_bounded(f), "{} n={n}", S::NAME);
+        }
+    }
+}
+
+#[test]
+fn residuals_scale_with_own_epsilon() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    residual_sweep::<f64>();
+    residual_sweep::<f32>();
+}
+
+/// Property: any bundle composition — random size, random problem count
+/// (spanning several full bundles plus a ragged tail) — is bitwise
+/// per-problem-exact, in both precisions.
+fn composition_property<S: Scalar>(cases: usize) {
+    let w = SmallBundle::<S>::width();
+    forall_res(
+        &format!("{} bundle composition ≡ per-problem", S::NAME),
+        cases,
+        |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let count = g.usize_in(1, 2 * w + 3);
+            g.label(format!("n={n} count={count}"));
+            let base = g.seed();
+            let mats: Vec<Mat<S>> = (0..count)
+                .map(|i| Mat::random(n, n, base ^ ((i as u64) << 8)))
+                .collect();
+            let mut batch = mats.clone();
+            let pivots = lu_unblocked_batch(&mut batch);
+            for (i, a0) in mats.iter().enumerate() {
+                let (f, ipiv) = ref_lu(a0);
+                if pivots[i] != ipiv {
+                    return Err(format!("problem {i}: pivots diverge"));
+                }
+                if bits(&batch[i]) != bits(&f) {
+                    return Err(format!("problem {i}: factor bits diverge"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_compositions_agree_bitwise() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    composition_property::<f64>(40);
+    composition_property::<f32>(40);
+}
+
+/// Property: a queue mixing sizes (and both precisions, via interleaved
+/// submissions) must group same-shape same-precision requests only —
+/// a cross-shape bundle would panic the leader and surface as an
+/// internal error, and a cross-composition rounding leak would break
+/// the bitwise check.
+#[test]
+fn mixed_size_queues_are_never_bundled_together() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    forall_res("mixed-size queue routes cleanly", 6, |g: &mut Gen| {
+        let count = g.usize_in(6, 12);
+        let sizes: Vec<usize> = (0..count).map(|_| g.usize_in(1, 64)).collect();
+        g.label(format!("sizes={sizes:?}"));
+        let base = g.seed();
+        let server = LuServer::new(ServeConfig {
+            interleave: true,
+            workers: 2,
+            ..Default::default()
+        });
+        let mats: Vec<Matrix> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| Matrix::random(n, n, base ^ ((i as u64) << 8)))
+            .collect();
+        let handles: Vec<_> = mats
+            .iter()
+            .map(|a| server.submit(LuRequest::new(a.clone())))
+            .collect();
+        for (h, a0) in handles.into_iter().zip(&mats) {
+            let res = h.wait();
+            if res.cancelled || res.error.is_some() {
+                return Err(format!(
+                    "req{}: cancelled={} error={:?}",
+                    res.id, res.cancelled, res.error
+                ));
+            }
+            let (f, ipiv) = ref_lu(a0);
+            if res.ipiv != ipiv || bits(&res.a) != bits(&f) {
+                return Err(format!("req{} (n={}): diverges", res.id, a0.rows()));
+            }
+        }
+        server.shutdown();
+        Ok(())
+    });
+}
+
+/// Contract 3: the serve `interleave` knob moves placement only. Sizes
+/// where both paths share the unblocked leaf arithmetic (single-panel
+/// small problems, and per-request `bi` overrides that force the
+/// fallback) must come back bitwise identical under either knob
+/// setting; a big per-problem request pins that the classic path is
+/// untouched.
+#[test]
+fn interleave_knob_moves_placement_only() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let run = |interleave: bool| {
+        let server = LuServer::new(ServeConfig {
+            interleave,
+            workers: 2,
+            ..Default::default()
+        });
+        let mut reqs = Vec::new();
+        for (i, n) in [6usize, 12, 16].into_iter().enumerate() {
+            reqs.push(LuRequest::new(Matrix::random(n, n, 40 + i as u64)));
+        }
+        // Above bi=16 the blocked panel would regroup the arithmetic, so
+        // force the unblocked fallback with a per-request block override
+        // — routing is still by size, only the off-path leaf changes.
+        reqs.push(LuRequest::new(Matrix::random(40, 40, 77)).with_blocks(64, 40));
+        // Far above the threshold: per-problem under both settings.
+        reqs.push(LuRequest::new(Matrix::random(100, 100, 99)));
+        let out = server.factorize_batch(reqs);
+        server.shutdown();
+        out
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.len(), off.len());
+    for (a, b) in on.iter().zip(&off) {
+        assert!(!a.cancelled && !b.cancelled);
+        assert_eq!(a.ipiv, b.ipiv, "n={}: pivots moved with the knob", a.a.rows());
+        assert_eq!(
+            bits(&a.a),
+            bits(&b.a),
+            "n={}: factor bits moved with the knob",
+            a.a.rows()
+        );
+    }
+    // Where the per-problem path uses genuinely different (blocked)
+    // arithmetic, both routes still deliver epsilon-scale backward
+    // error — the knob trades placement, never correctness.
+    let a0 = Matrix::random(40, 40, 123);
+    for interleave in [true, false] {
+        let server = LuServer::new(ServeConfig {
+            interleave,
+            workers: 2,
+            ..Default::default()
+        });
+        let res = server.submit(LuRequest::new(a0.clone())).wait();
+        server.shutdown();
+        assert!(!res.cancelled && res.error.is_none());
+        let r = naive::lu_residual(&a0, &res.a, &res.ipiv);
+        assert!(r < 1e-12, "interleave={interleave}: residual {r}");
+        assert!(naive::growth_bounded(&res.a));
+    }
+}
+
+/// The threshold itself only flips [`Strategy`] — and since both
+/// strategies are pinned bitwise-equal above, moving it can never
+/// change results. This nails the routing boundary the cost model
+/// derives (`HwModel::small_threshold`).
+#[test]
+fn threshold_is_a_pure_placement_boundary() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = ServeConfig {
+        interleave: true,
+        ..Default::default()
+    };
+    let thr = cfg.hw.small_threshold(<f64 as Scalar>::SIMD_LANES);
+    assert_eq!(thr, HwModel::default().small_threshold(4));
+    assert!(thr >= 16, "threshold {thr} too small to cover the suite");
+    for n in [1usize, thr / 2, thr, thr + 1, 2 * thr] {
+        let want = if n <= thr {
+            Strategy::Interleaved
+        } else {
+            Strategy::PerProblem
+        };
+        let req = LuRequest::new(Matrix::zeros(n, n));
+        assert_eq!(choose_strategy(&cfg, &req), want, "n={n}");
+    }
+}

@@ -1,0 +1,243 @@
+//! Serve-layer integration of the interleaved small-problem fast path
+//! (DESIGN.md §18): a daemon flood of small requests riding beside a
+//! large per-problem one must settle the admission ledger exactly
+//! (`admitted == delivered + reaped`), deliver bitwise per-problem
+//! results out of every bundle composition, and leave the crew
+//! machinery to the large request — the fast path takes no lease and no
+//! arena buffer, so the registry only ever names the big problem.
+//!
+//! The second test pins the capture story: bundled requests record the
+//! same result digests the per-problem path would, plus one
+//! environmental `BundleForm` record per member.
+
+use malleable_lu::factor::FactorKind;
+use malleable_lu::lu::lu_unblocked;
+use malleable_lu::matrix::{naive, Mat, Matrix};
+use malleable_lu::replay::capture::{self, DecisionKind};
+use malleable_lu::replay::factor_digest;
+use malleable_lu::scalar::Scalar;
+use malleable_lu::serve::client::{ServeClient, WireEvent};
+use malleable_lu::serve::net::{BindAddr, NetConfig, ServeDaemon};
+use malleable_lu::serve::proto;
+use malleable_lu::serve::{JobResult, LuRequest, LuServer, ServeConfig};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serializes the tests: capture is process-global, and a concurrent
+/// server's records (ids are dense from 0 in every server) would bleed
+/// into the digest assertions.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn net_cfg(workers: usize) -> NetConfig {
+    NetConfig {
+        serve: ServeConfig {
+            workers,
+            interleave: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// A collision-free Unix socket path for one test.
+fn unix_addr(tag: &str) -> BindAddr {
+    let p = std::env::temp_dir().join(format!("mlu-test-{tag}-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    BindAddr::Unix(p)
+}
+
+fn lu_req(a: proto::WireMat) -> proto::FactorReq {
+    proto::FactorReq {
+        kind: FactorKind::Lu,
+        priority: 0,
+        deadline_ms: 0,
+        bo: 0,
+        bi: 0,
+        a,
+    }
+}
+
+fn ref_lu<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Vec<usize>) {
+    let mut f = a.clone();
+    let ipiv = lu_unblocked(f.view_mut());
+    (f, ipiv)
+}
+
+fn bits<S: Scalar>(m: &Mat<S>) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits_u64()).collect()
+}
+
+#[test]
+fn daemon_flood_small_beside_large_settles_ledger() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let addr = unix_addr("smallbatch");
+    let daemon = ServeDaemon::bind(&addr, net_cfg(2)).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    // One big request up front: it takes the classic per-problem path
+    // and must hold a crew lease while the small flood drains beside it.
+    let big = Matrix::random(320, 320, 1);
+    let id_big = client
+        .submit_factor(&lu_req(proto::WireMat::F64(big.clone())))
+        .unwrap();
+
+    let sizes = [4usize, 8, 12, 16, 24, 32];
+    let mut smalls64: HashMap<u64, Matrix> = HashMap::new();
+    let mut smalls32: HashMap<u64, Mat<f32>> = HashMap::new();
+    for i in 0..24u64 {
+        let n = sizes[(i as usize) % sizes.len()];
+        let a = Matrix::random(n, n, 100 + i);
+        let id = client
+            .submit_factor(&lu_req(proto::WireMat::F64(a.clone())))
+            .unwrap();
+        smalls64.insert(id, a);
+    }
+    for i in 0..8u64 {
+        let a = Mat::<f32>::random(16, 16, 300 + i);
+        let id = client
+            .submit_factor(&lu_req(proto::WireMat::F32(a.clone())))
+            .unwrap();
+        smalls32.insert(id, a);
+    }
+
+    // The interleaved path never registers a lease, so any lease we
+    // observe belongs to the big request — seeing one while 32 small
+    // requests are in flight is the "bundles drain beside a leased
+    // crew" picture.
+    let t0 = Instant::now();
+    let mut saw_lease = false;
+    while t0.elapsed() < Duration::from_secs(30) {
+        if !daemon.registry().is_empty() {
+            saw_lease = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    assert!(saw_lease, "big request never appeared in the crew registry");
+
+    let mut seen = 0usize;
+    while seen < 33 {
+        match client.recv().unwrap() {
+            WireEvent::Factor { id, resp } => {
+                assert!(!resp.cancelled, "req{id} cancelled");
+                let ipiv: Vec<usize> = resp.ipiv.iter().map(|&p| p as usize).collect();
+                if id == id_big {
+                    let proto::WireMat::F64(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    assert!(naive::lu_residual(&big, f, &ipiv) < 1e-10);
+                } else if let Some(a0) = smalls64.get(&id) {
+                    let proto::WireMat::F64(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    let (rf, ripiv) = ref_lu(a0);
+                    assert_eq!(ipiv, ripiv, "req{id} pivots");
+                    assert_eq!(bits(f), bits(&rf), "req{id} factor bits");
+                } else if let Some(a0) = smalls32.get(&id) {
+                    let proto::WireMat::F32(f) = &resp.a else {
+                        panic!("precision flipped")
+                    };
+                    let (rf, ripiv) = ref_lu(a0);
+                    assert_eq!(ipiv, ripiv, "req{id} pivots");
+                    assert_eq!(bits(f), bits(&rf), "req{id} factor bits");
+                } else {
+                    panic!("unknown request id {id}");
+                }
+                seen += 1;
+            }
+            other => panic!("unexpected event: {other:?}"),
+        }
+    }
+
+    client.goodbye().unwrap();
+    daemon.drain(Duration::from_secs(60));
+    let s = daemon.stats();
+    assert_eq!(s.admission.admitted, 33);
+    assert_eq!(
+        s.admission.admitted,
+        s.delivered + s.reaped,
+        "ledger did not settle: {s:?}"
+    );
+    assert_eq!(s.delivered, 33);
+    assert_eq!(s.reaped, 0);
+    assert!(daemon.registry().is_empty(), "leaked crew leases");
+    let a = daemon.arena_stats();
+    assert_eq!(
+        a.free_buffers as u64, a.allocations,
+        "arena buffers not all returned"
+    );
+    daemon.shutdown();
+}
+
+#[test]
+fn bundled_digests_match_per_problem_references() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(capture::start(), "another capture is active in this process");
+    let server = LuServer::new(ServeConfig {
+        interleave: true,
+        workers: 2,
+        ..Default::default()
+    });
+    let n = 12;
+    let mats: Vec<Matrix> = (0..10).map(|i| Matrix::random(n, n, 600 + i)).collect();
+    let reqs: Vec<LuRequest> = mats.iter().map(|a| LuRequest::new(a.clone())).collect();
+    let results = server.factorize_batch(reqs);
+    server.shutdown();
+    let (decisions, records) = capture::stop().unwrap();
+
+    for (res, a0) in results.iter().zip(&mats) {
+        let (f, ipiv) = ref_lu(a0);
+        // The digest a per-problem execution of the same request would
+        // record (factor_digest hashes factors, pivots, tau, progress —
+        // not timing).
+        let reference = JobResult {
+            id: res.id,
+            kind: FactorKind::Lu,
+            a: f,
+            ipiv,
+            tau: vec![],
+            cols_done: n,
+            cancelled: false,
+            secs: 0.0,
+            error: None,
+        };
+        let want = factor_digest(&reference);
+        assert_eq!(
+            factor_digest(res),
+            want,
+            "req{}: bundled digest diverges from the per-problem path",
+            res.id
+        );
+        let rec = records
+            .iter()
+            .find(|r| r.id == res.id)
+            .expect("request missing from capture");
+        assert_eq!(rec.digest, want, "req{}: recorded digest", res.id);
+        assert_eq!(rec.cols_done, n as u32);
+        assert!(!rec.cancelled && !rec.failed);
+    }
+
+    // One environmental BundleForm per member, with a well-formed
+    // packed operand; the invariant record of a bundled request stays
+    // its Submit alone.
+    let forms: Vec<_> = decisions
+        .iter()
+        .filter(|d| d.kind == DecisionKind::BundleForm)
+        .collect();
+    assert_eq!(forms.len(), 10, "one BundleForm per bundled member");
+    for d in &forms {
+        assert!(!d.kind.invariant(), "bundle formation must be environmental");
+        assert_eq!(d.b & 0xff, n as u64, "packed n");
+        assert_eq!((d.b >> 8) & 0xff, 0, "packed prec (f64 = 0)");
+        let live = (d.b >> 16) & 0xff;
+        let slot = (d.b >> 24) & 0xff;
+        assert!((1..=4).contains(&live), "live {live}");
+        assert!(slot < live, "slot {slot} vs live {live}");
+    }
+    let n_submits = decisions
+        .iter()
+        .filter(|d| d.kind == DecisionKind::Submit)
+        .count();
+    assert_eq!(n_submits, 10);
+}
